@@ -1,0 +1,49 @@
+//! End-to-end training throughput — regenerates paper Table 2 (full
+//! fine-tuning comparison) and Table 4 / Fig. 14 (the ablation ladder),
+//! with the paper's verification methodology applied to every row.
+//!
+//! Run: `cargo bench --bench bench_throughput`
+//! Env: STEPS (default 12) — measured steps per configuration.
+
+use chronicals::harness;
+use chronicals::report;
+use chronicals::runtime::Runtime;
+use std::rc::Rc;
+
+fn main() {
+    let steps: u64 = std::env::var("STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12);
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => Rc::new(rt),
+        Err(e) => {
+            eprintln!("bench_throughput skipped: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    println!("bench_throughput: {steps} steps per config\n");
+
+    match harness::full_ft_comparison(&rt, steps) {
+        Ok(rows) => println!(
+            "{}",
+            report::throughput_table(
+                "Full fine-tuning (paper Table 2)",
+                &rows,
+                "Baseline (naive, verified)"
+            )
+        ),
+        Err(e) => eprintln!("full-ft comparison failed: {e:#}"),
+    }
+
+    match harness::ablation_ladder(&rt, steps) {
+        Ok(rows) => {
+            println!("{}", report::ablation_table(&rows));
+            println!(
+                "paper Table 4 reference: +flash 1.9x, +compile 2.85x, +liger 3.94x,\n\
+                 +packing 4.80x, +fused-optim 5.15x cumulative over the HF baseline."
+            );
+        }
+        Err(e) => eprintln!("ablation ladder failed: {e:#}"),
+    }
+}

@@ -1,0 +1,34 @@
+//! Ablation study (paper Table 4 / Fig. 14): measure the ladder
+//! baseline → +FlashAttention → +whole-graph-compile → +fused kernels/CCE
+//! → +sequence packing → +fused optimizer, each rung a real training run
+//! with verified gradient flow.
+//!
+//! Run: `cargo run --release --example ablation -- [steps]`
+
+use chronicals::harness;
+use chronicals::report;
+use chronicals::runtime::Runtime;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    let steps: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12);
+    let rt = Rc::new(Runtime::new("artifacts")?);
+    println!("running the 6-rung ablation ladder ({steps} steps each)...\n");
+    let rows = harness::ablation_ladder(&rt, steps)?;
+    println!("{}", report::ablation_table(&rows));
+
+    let base = rows.first().unwrap().tokens_per_sec;
+    let last = rows.last().unwrap().tokens_per_sec;
+    println!(
+        "total stack speedup: {:.2}x (paper: 3.51x over the verified baseline;\n\
+         the *shape* — every rung helps, compounding multiplicatively — is the\n\
+         reproduced claim; absolute ratios differ on the CPU substrate)",
+        last / base
+    );
+    anyhow::ensure!(last > base, "the full stack must beat the baseline");
+    println!("\nablation OK");
+    Ok(())
+}

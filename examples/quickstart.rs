@@ -1,0 +1,63 @@
+//! Quickstart: the minimal Chronicals workflow.
+//!
+//! 1. load the AOT artifacts (built once by `make artifacts`),
+//! 2. generate + tokenize + BFD-pack an instruction corpus,
+//! 3. initialize device-resident training state,
+//! 4. train for a handful of steps with verified gradient flow.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use chronicals::config::RunConfig;
+use chronicals::harness;
+use chronicals::runtime::Runtime;
+use chronicals::util::commas;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    // The runtime compiles each HLO-text artifact once and keeps all
+    // training state on the PJRT device between steps.
+    let rt = Rc::new(Runtime::new("artifacts")?);
+    println!(
+        "loaded {} executables (profile: {})",
+        rt.manifest.executables.len(),
+        rt.manifest.profile
+    );
+
+    // Full fine-tuning with the complete Chronicals stack: flash-structure
+    // attention, fused kernels, Cut Cross-Entropy, fused AdamW, BFD packing.
+    let cfg = RunConfig {
+        executable: "train_step_chronicals".into(),
+        steps: 20,
+        warmup_steps: 2,
+        lr: 3e-3,
+        packed: true,
+        corpus_examples: 512,
+        ..RunConfig::default()
+    };
+
+    println!("training {} for {} steps...", cfg.executable, cfg.steps);
+    let summary = harness::run_variant(&rt, &cfg)?;
+
+    println!("\n=== results ===");
+    println!(
+        "loss:        {:.4} -> {:.4}",
+        summary.first_loss, summary.last_loss
+    );
+    println!(
+        "throughput:  {} tokens/sec (real tokens)",
+        commas(summary.tokens_per_sec as u64)
+    );
+    println!(
+        "step time:   {:.1} ms ± {:.1}",
+        summary.mean_step_ms, summary.std_step_ms
+    );
+    println!(
+        "gradients:   [{:.3e}, {:.3e}]",
+        summary.verification.min_grad_norm, summary.verification.max_grad_norm
+    );
+    println!("status:      {}", summary.verification.status());
+    anyhow::ensure!(summary.verification.is_training, "run failed verification");
+    anyhow::ensure!(summary.last_loss < summary.first_loss, "loss did not improve");
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! The Unsloth-bug demonstration (paper §8 "Critical Finding", Fig. 10/22):
+//! a "fast mode" whose backward pass silently disappears reports much
+//! higher tokens/sec while the model learns nothing — detectable only by
+//! checking gradient norms, trainable fractions and loss movement.
+//!
+//! Run: `cargo run --release --example unsloth_bug -- [steps]`
+
+use chronicals::config::RunConfig;
+use chronicals::coordinator::Verifier;
+use chronicals::harness;
+use chronicals::runtime::Runtime;
+use chronicals::util::commas;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    let steps: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+    let rt = Rc::new(Runtime::new("artifacts")?);
+
+    println!("=== the benchmark that lies (paper Fig. 10) ===\n");
+    let mut results = Vec::new();
+    for (label, exe) in [
+        ("correct LoRA", "train_step_lora"),
+        ("'fast mode' LoRA", "train_step_lora_broken"),
+    ] {
+        let cfg = RunConfig {
+            executable: exe.into(),
+            steps,
+            warmup_steps: 1,
+            lr: 1e-3,
+            packed: true,
+            corpus_examples: 512,
+            ..RunConfig::default()
+        };
+        let s = harness::run_variant(&rt, &cfg)?;
+        println!(
+            "{label:<18} {:>9} tok/s | loss {:.4} -> {:.4} | grad_norm max {:.3e} | {}",
+            commas(s.tokens_per_sec as u64),
+            s.first_loss,
+            s.last_loss,
+            s.verification.max_grad_norm,
+            s.verification.status()
+        );
+        for f in &s.verification.failures {
+            println!("{:<18}   ⚠ {f}", "");
+        }
+        results.push(s);
+    }
+
+    let speedup = results[1].tokens_per_sec / results[0].tokens_per_sec;
+    println!(
+        "\nthe broken config 'wins' by {speedup:.2}x — the same shape as the\n\
+         paper's 46,000 vs 11,736 tok/s finding (3.9x) — while training NOTHING."
+    );
+    anyhow::ensure!(results[0].verification.is_training);
+    anyhow::ensure!(!results[1].verification.is_training);
+    anyhow::ensure!(speedup > 1.2, "broken mode should look faster");
+
+    // the 72%-trainable failure mode (Fig. 22), shown on synthetic numbers:
+    println!("\n=== partial-trainability check (the 72% case) ===");
+    let mut v = Verifier::default();
+    for i in 0..5 {
+        v.observe(5.0 - 0.05 * i as f32, 0.4);
+    }
+    let r = v.report(72, 100); // 72 of 100 expected params trainable
+    println!("verifier on a 72%-trainable run: {}", r.status());
+    for f in &r.failures {
+        println!("  ⚠ {f}");
+    }
+    anyhow::ensure!(!r.is_training);
+
+    println!("\nunsloth_bug OK — always verify gradient flow before quoting tokens/sec");
+    Ok(())
+}

@@ -1,0 +1,443 @@
+"""Chronicals AOT emitter: lower every benchmark variant to HLO text.
+
+Python runs ONCE (``make artifacts``); the Rust L3 coordinator loads the
+emitted ``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and
+never touches Python again.
+
+Interchange format is HLO **text**, not serialized protos: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+``manifest.json`` describes every executable: the exact positional input
+and output layout (the Rust calling convention), parameter names/shapes,
+batch geometry, and the model config echo. Keep it boring: the Rust side
+has a hand-rolled JSON parser.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _f32():
+    return _spec((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Variant table — every benchmark configuration in DESIGN.md §5.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    name: str
+    model: str  # MODEL_PRESETS key
+    batch: int
+    seq: int
+    step: M.StepConfig
+    emit_init: bool = False
+    emit_eval: bool = False
+
+
+def variant_table(profile: str) -> list[Variant]:
+    """profile: 'test' (tiny shapes, fast) or 'bench' (paper-shaped)."""
+    if profile == "test":
+        mp, b, s = "tiny", 2, 64
+        mp_e2e, b_e2e, s_e2e = "tiny", 2, 64
+    else:
+        mp, b, s = "small", 4, 256
+        mp_e2e, b_e2e, s_e2e = "e2e", 8, 256
+
+    SC = M.StepConfig
+    ladder = [
+        # Table 4 ablation ladder (packing + batch-size rows reuse these
+        # graphs with different data; see DESIGN.md §5/T4).
+        Variant("ablate_naive", mp, b, s, SC(
+            attention="naive", kernels="naive", loss="full",
+            optimizer="adamw_naive")),
+        Variant("ablate_flash", mp, b, s, SC(
+            attention="flash_scan", kernels="naive", loss="full",
+            optimizer="adamw_naive")),
+        Variant("ablate_compiled", mp, b, s, SC(
+            attention="flash_scan", kernels="jnp", loss="full",
+            optimizer="adamw_naive")),
+        Variant("ablate_liger", mp, b, s, SC(
+            attention="flash_scan", kernels="jnp", loss="cce_scan",
+            optimizer="adamw_naive")),
+        Variant("chronicals", mp, b, s, SC(
+            attention="flash_scan", kernels="jnp", loss="cce_scan",
+            optimizer="adamw"), emit_init=True, emit_eval=True),
+        # LoRA family (Table 3): one graph serves LoRA and LoRA+ — λ is the
+        # runtime ratio lr_b/lr.
+        Variant("lora", mp, b, s, SC(
+            attention="flash_scan", kernels="jnp", loss="cce_scan",
+            optimizer="adamw", family="lora"), emit_init=True, emit_eval=True),
+        Variant("lora_naive", mp, b, s, SC(
+            attention="naive", kernels="naive", loss="full",
+            optimizer="adamw_naive", family="lora")),
+        # The "Unsloth fast mode" bug (Fig. 10/22): detached loss.
+        Variant("lora_broken", mp, b, s, SC(
+            attention="flash_scan", kernels="jnp", loss="cce_scan",
+            optimizer="adamw", family="lora", broken=True)),
+        # Optimizer studies (§S10) on the chronicals graph.
+        Variant("opt_sf", mp, b, s, SC(
+            attention="flash_scan", kernels="jnp", loss="cce_scan",
+            optimizer="sf")),
+        Variant("opt_muon", mp, b, s, SC(
+            attention="flash_scan", kernels="jnp", loss="cce_scan",
+            optimizer="muon")),
+        Variant("opt_atan2", mp, b, s, SC(
+            attention="flash_scan", kernels="jnp", loss="cce_scan",
+            optimizer="atan2")),
+        # DoRA (§S9).
+        Variant("dora", mp, b, s, SC(
+            attention="flash_scan", kernels="jnp", loss="cce_scan",
+            optimizer="adamw", family="dora"), emit_init=True),
+        # Full-Pallas composition proof: every L1 kernel in one training
+        # step (tiny shapes — interpret-mode grids are loop-heavy).
+        Variant("chronicals_pallas", "tiny", 2, 64, SC(
+            attention="flash_pallas", kernels="pallas", loss="cce_pallas",
+            optimizer="adamw_pallas", cce_chunk=128, flash_block=32),
+            emit_init=True),
+        # End-to-end training demo scale.
+        Variant("e2e", mp_e2e, b_e2e, s_e2e, SC(
+            attention="flash_scan", kernels="jnp", loss="cce_scan",
+            optimizer="adamw"), emit_init=True, emit_eval=True),
+    ]
+    return ladder
+
+
+# ---------------------------------------------------------------------------
+# Kernel microbench executables (Table 5)
+# ---------------------------------------------------------------------------
+
+
+def kernel_microbenches(profile: str):
+    """(name, fn, arg_specs) for fused-vs-naive kernel pairs."""
+    if profile == "test":
+        t, d, f = 64, 64, 128
+        tv, h, v = 64, 64, 512
+        s_att, heads, hd = 64, 4, 16
+    else:
+        t, d, f = 2048, 896, 2432  # Qwen2.5-0.5B row shapes
+        tv, h, v = 512, 896, 16384  # CCE rows (vocab scaled; ratio kept ≫ d)
+        s_att, heads, hd = 256, 8, 64
+
+    i32 = jnp.int32
+    out = []
+
+    def rms_fused(x, g):
+        return (ref.rmsnorm(x, g),)
+
+    def rms_naive(x, g):
+        return (ref.rmsnorm_naive(x, g),)
+
+    out.append(("kernel_rmsnorm_fused", rms_fused, [_spec((t, d)), _spec((d,))]))
+    out.append(("kernel_rmsnorm_naive", rms_naive, [_spec((t, d)), _spec((d,))]))
+
+    def swiglu_fused(g, u):
+        return (ref.swiglu(g, u),)
+
+    def swiglu_naive(g, u):
+        return (ref.swiglu_naive(g, u),)
+
+    out.append(("kernel_swiglu_fused", swiglu_fused, [_spec((t, f)), _spec((t, f))]))
+    out.append(("kernel_swiglu_naive", swiglu_naive, [_spec((t, f)), _spec((t, f))]))
+
+    qspec = _spec((1, s_att, heads, hd))
+    kspec = _spec((1, s_att, heads // 2, hd))
+    pspec = _spec((1, s_att), i32)
+
+    def rope_fused(q, k, pos):
+        return ref.rope_qk(q, k, pos)
+
+    def rope_naive(q, k, pos):
+        return ref.rope_qk_naive(q, k, pos)
+
+    out.append(("kernel_rope_fused", rope_fused, [qspec, kspec, pspec]))
+    out.append(("kernel_rope_naive", rope_naive, [qspec, kspec, pspec]))
+
+    vspec = kspec
+    sspec = _spec((1, s_att), i32)
+
+    def attn_flash(q, k, v, seg):
+        return (ref.flash_attention_scan(q, k, v, seg, block_kv=min(64, s_att)),)
+
+    def attn_naive(q, k, v, seg):
+        return (ref.attention_naive(q, k, v, seg),)
+
+    out.append(("kernel_attention_flash", attn_flash, [qspec, kspec, vspec, sspec]))
+    out.append(("kernel_attention_naive", attn_naive, [qspec, kspec, vspec, sspec]))
+
+    hspec = _spec((tv, h))
+    wspec = _spec((v, h))
+    tgtspec = _spec((tv,), i32)
+
+    def ce_fused(hid, w, tgt):
+        loss, n = ref.cce_chunked(hid, w, tgt, chunk=min(1024, v))
+        return (loss, n)
+
+    def ce_naive(hid, w, tgt):
+        loss, n = ref.cross_entropy_full(hid, w, tgt)
+        return (loss, n)
+
+    out.append(("kernel_cross_entropy_fused", ce_fused, [hspec, wspec, tgtspec]))
+    out.append(("kernel_cross_entropy_naive", ce_naive, [hspec, wspec, tgtspec]))
+
+    # Fused linear+CE (Table 5 last row): grad of CCE directly from hidden.
+    def linear_ce_fused(hid, w, tgt):
+        def f(hid_):
+            loss, n = ref.cce_chunked(hid_, w, tgt, chunk=min(1024, v))
+            return loss / jnp.maximum(n, 1.0)
+
+        loss, grad = jax.value_and_grad(f)(hid)
+        return (loss, grad)
+
+    out.append(("kernel_linear_ce_fused", linear_ce_fused, [hspec, wspec, tgtspec]))
+
+    n_el = 1 << 20 if profile != "test" else 1 << 12
+    pspec2 = _spec((n_el,))
+
+    def adamw_fused(p, g, m, v_):
+        return ref.adamw_update(p, g, m, v_, 1e-3, 10.0)
+
+    def adamw_naive(p, g, m, v_):
+        return ref.adamw_update_naive(p, g, m, v_, 1e-3, 10.0)
+
+    out.append(("kernel_adamw_fused", adamw_fused, [pspec2] * 4))
+    out.append(("kernel_adamw_naive", adamw_naive, [pspec2] * 4))
+
+    # LoRA linear fused vs naive (Prop. 9)
+    mk, kk, nk, r = (256, 512, 512, 32) if profile != "test" else (64, 64, 64, 8)
+    lspecs = [_spec((mk, kk)), _spec((nk, kk)), _spec((r, kk)), _spec((nk, r))]
+
+    def lora_fused(x, w, a, b):
+        return (ref.lora_linear(x, w, a, b, 2.0 * r),)
+
+    def lora_naive(x, w, a, b):
+        return (ref.lora_linear_naive(x, w, a, b, 2.0 * r),)
+
+    out.append(("kernel_lora_linear_fused", lora_fused, lspecs))
+    out.append(("kernel_lora_linear_naive", lora_naive, lspecs))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Emission
+# ---------------------------------------------------------------------------
+
+
+def _input_entries(specs, roles):
+    return [
+        {
+            "name": name,
+            "shape": list(sds.shape),
+            "dtype": str(sds.dtype),
+            "role": role,
+        }
+        for (name, sds, role) in zip(
+            [r[0] for r in roles], [r[1] for r in roles], [r[2] for r in roles]
+        )
+    ]
+
+
+def emit_variant(var: Variant, outdir: str, manifest: dict, force: bool):
+    cfg = M.MODEL_PRESETS[var.model]
+    sc = var.step
+    tspecs, fspecs = M.param_specs(cfg, sc.family, sc.lora_rank)
+    b, s = var.batch, var.seq
+    i32 = jnp.int32
+
+    param_in = (
+        [(n, _spec(sh), "param") for n, sh in tspecs]
+        + [(n, _spec(sh), "frozen") for n, sh in fspecs]
+    )
+    state_in = param_in + [
+        (f"slot0.{n}", _spec(sh), "opt") for n, sh in tspecs
+    ] + [(f"slot1.{n}", _spec(sh), "opt") for n, sh in tspecs]
+    batch_in = [
+        ("tokens", _spec((b, s), i32), "batch"),
+        ("targets", _spec((b, s), i32), "batch"),
+        ("seg_ids", _spec((b, s), i32), "batch"),
+        ("pos_ids", _spec((b, s), i32), "batch"),
+    ]
+    scalar_in = [
+        ("step", _f32(), "scalar"),
+        ("lr", _f32(), "scalar"),
+        ("lr_b", _f32(), "scalar"),
+    ]
+
+    def emit(name, fn, roles, outputs, kind):
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        specs = [r[1] for r in roles]
+        if force or not os.path.exists(path):
+            lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  wrote {name}.hlo.txt ({len(text) // 1024} KiB)")
+        manifest["executables"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "kind": kind,
+                "model": var.model,
+                "variant": var.name,
+                "family": sc.family,
+                "batch": b,
+                "seq": s,
+                "n_trainable": len(tspecs),
+                "n_frozen": len(fspecs),
+                "n_slots": M.N_OPT_SLOTS,
+                "param_count": int(cfg.param_count(sc.family, sc.lora_rank)),
+                "trainable_param_count": int(
+                    sum(int(jnp.prod(jnp.asarray(sh))) for _, sh in tspecs)
+                ),
+                "step_config": {
+                    "attention": sc.attention,
+                    "kernels": sc.kernels,
+                    "loss": sc.loss,
+                    "optimizer": sc.optimizer,
+                    "broken": sc.broken,
+                    "lora_rank": sc.lora_rank,
+                    "lora_alpha": sc.lora_alpha,
+                },
+                "model_config": dataclasses.asdict(cfg),
+                "inputs": [
+                    {
+                        "name": n,
+                        "shape": list(sds.shape),
+                        "dtype": str(sds.dtype),
+                        "role": role,
+                    }
+                    for (n, sds, role) in roles
+                ],
+                "outputs": outputs,
+            }
+        )
+
+    step_fn, _, _ = M.make_train_step(cfg, sc)
+    train_outputs = (
+        [f"param.{n}" for n, _ in tspecs]
+        + [f"slot0.{n}" for n, _ in tspecs]
+        + [f"slot1.{n}" for n, _ in tspecs]
+        + ["loss", "grad_norm", "n_tokens"]
+    )
+    emit(
+        f"train_step_{var.name}",
+        step_fn,
+        state_in + batch_in + scalar_in,
+        train_outputs,
+        "train",
+    )
+
+    if var.emit_init:
+        init_fn = M.make_init_fn(cfg, sc)
+        init_outputs = (
+            [f"param.{n}" for n, _ in tspecs]
+            + [f"frozen.{n}" for n, _ in fspecs]
+            + [f"slot0.{n}" for n, _ in tspecs]
+            + [f"slot1.{n}" for n, _ in tspecs]
+        )
+        emit(
+            f"init_{var.name}",
+            init_fn,
+            [("seed", _spec((), i32), "scalar")],
+            init_outputs,
+            "init",
+        )
+
+    if var.emit_eval:
+        eval_fn = M.make_eval_fn(cfg, sc)
+        emit(
+            f"eval_{var.name}",
+            eval_fn,
+            param_in + batch_in,
+            ["loss", "n_tokens"],
+            "eval",
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--profile", default="bench", choices=["test", "bench"],
+        help="test = tiny shapes (CI), bench = paper-shaped",
+    )
+    ap.add_argument("--force", action="store_true", help="re-emit everything")
+    ap.add_argument("--only", default=None, help="emit just one variant name")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest: dict = {"profile": args.profile, "executables": []}
+
+    print(f"[aot] emitting profile={args.profile} -> {args.out}")
+    for var in variant_table(args.profile):
+        # --only restricts *re-emission* to one variant; the manifest always
+        # covers everything (missing files are still written).
+        force = args.force and (args.only in (None, var.name))
+        print(f"[aot] variant {var.name} (model={var.model}, B={var.batch}, S={var.seq})")
+        emit_variant(var, args.out, manifest, force)
+
+    print("[aot] kernel microbenches")
+    for name, fn, specs in kernel_microbenches(args.profile):
+        force = args.force and (args.only in (None, name))
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        if force or not os.path.exists(path):
+            lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  wrote {name}.hlo.txt ({len(text) // 1024} KiB)")
+        manifest["executables"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "kind": "kernel",
+                "inputs": [
+                    {
+                        "name": f"arg{i}",
+                        "shape": list(s.shape),
+                        "dtype": str(s.dtype),
+                        "role": "batch",
+                    }
+                    for i, s in enumerate(specs)
+                ],
+                "outputs": [],
+            }
+        )
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(manifest['executables'])} executables")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Chronicals L1 kernels: Pallas implementations + pure-jnp oracles (ref)."""
+from . import ref  # noqa: F401

@@ -1,0 +1,170 @@
+"""Cut Cross-Entropy Pallas kernel (paper Alg. 1/2/19, Thm. 2/3/4).
+
+Grid: (rows, vocab-chunks), chunk axis innermost. Each grid step computes
+one [1, C] logit chunk as h·W_chunkᵀ in VMEM and folds it into the online
+softmax carry (running max m, running sum d, target logit) that lives in
+output refs persisting across the chunk axis (same BlockSpec block for all
+chunk steps — the Pallas idiom for cross-step carries). The [T, V] logit
+tensor never exists: peak live memory is one C-column chunk, the paper's
+V/C reduction (37× for V=151936, C=4096).
+
+Chunk-size selection (paper Prop. 6, TPU form): C* = min(VMEM/(4·(H+1)), V)
+so the W chunk [C, H] plus the logit row [1, C] fit in VMEM.
+
+Backward: chunked jnp scan (recompute chunk logits from the cached lse,
+subtract the target indicator, accumulate grad_h and grad_W chunk-by-chunk)
+— identical chunking structure, never materializes [T, V] either.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+NEG_INF = -1e30
+
+
+def _cce_fwd_kernel(
+    h_ref, w_ref, t_ref, loss_ref, lse_ref, m_ref, d_ref, tl_ref, *, chunk, v, n_chunks
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref[...], NEG_INF)
+        d_ref[...] = jnp.zeros_like(d_ref[...])
+        tl_ref[...] = jnp.zeros_like(tl_ref[...])
+        loss_ref[...] = jnp.zeros_like(loss_ref[...])
+        lse_ref[...] = jnp.zeros_like(lse_ref[...])
+
+    h = h_ref[...].astype(jnp.float32)  # [1, H]
+    w = w_ref[...].astype(jnp.float32)  # [C, H]
+    z = (h @ w.T)[0]  # [C]
+    col = j * chunk + jnp.arange(chunk)
+    z = jnp.where(col < v, z, NEG_INF)
+
+    m = m_ref[0]
+    d = d_ref[0]
+    chunk_max = jnp.max(z)
+    m_new = jnp.maximum(m, chunk_max)
+    d_new = d * jnp.exp(m - m_new) + jnp.sum(jnp.exp(z - m_new))
+    m_ref[...] = jnp.full_like(m_ref[...], m_new)
+    d_ref[...] = jnp.full_like(d_ref[...], d_new)
+
+    tgt = t_ref[0]
+    in_chunk = (tgt >= j * chunk) & (tgt < (j + 1) * chunk)
+    local = jnp.clip(tgt - j * chunk, 0, chunk - 1)
+    z_t = jnp.where(in_chunk, z[local], tl_ref[0])
+    tl_ref[...] = jnp.full_like(tl_ref[...], z_t)
+
+    @pl.when(j == n_chunks - 1)
+    def _finish():
+        lse = jnp.log(d_ref[0]) + m_ref[0]
+        valid = t_ref[0] >= 0
+        lse_ref[...] = jnp.full_like(lse_ref[...], lse)
+        loss_ref[...] = jnp.full_like(
+            loss_ref[...], jnp.where(valid, lse - tl_ref[0], 0.0)
+        )
+
+
+def _cce_fwd(hidden, w_head, targets, chunk):
+    """hidden: [T, H], w_head: [V, H], targets: [T] (-1 = ignore).
+
+    Returns (per-row loss [T], per-row lse [T]).
+    """
+    t, h = hidden.shape
+    v = w_head.shape[0]
+    n_chunks = (v + chunk - 1) // chunk
+    pad = n_chunks * chunk - v
+    wp = jnp.pad(w_head, ((0, pad), (0, 0)))
+    tgt = jnp.where(targets >= 0, targets, 0)
+
+    loss, lse, _m, _d, _tl = pl.pallas_call(
+        partial(_cce_fwd_kernel, chunk=chunk, v=v, n_chunks=n_chunks),
+        grid=(t, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((chunk, h), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t,), jnp.float32),  # loss
+            jax.ShapeDtypeStruct((t,), jnp.float32),  # lse
+            jax.ShapeDtypeStruct((t,), jnp.float32),  # m carry
+            jax.ShapeDtypeStruct((t,), jnp.float32),  # d carry
+            jax.ShapeDtypeStruct((t,), jnp.float32),  # target-logit carry
+        ],
+        interpret=INTERPRET,
+    )(hidden, wp, tgt)
+    loss = jnp.where(targets >= 0, loss, 0.0)
+    return loss, lse
+
+
+def _cce_bwd_chunked(hidden, w_head, targets, lse, dloss, chunk):
+    """Chunked backward (paper Alg. 3): grad_z = softmax(z) - 1[target]."""
+    t, h = hidden.shape
+    v = w_head.shape[0]
+    n_chunks = (v + chunk - 1) // chunk
+    pad = n_chunks * chunk - v
+    wp = jnp.pad(w_head.astype(jnp.float32), ((0, pad), (0, 0))).reshape(
+        n_chunks, chunk, h
+    )
+    hf = hidden.astype(jnp.float32)
+    valid = (targets >= 0).astype(jnp.float32)
+    tgt = jnp.where(targets >= 0, targets, 0)
+    scale = (dloss * valid)[:, None]  # [T, 1]
+
+    def body(grad_h, blk):
+        w_j, j = blk
+        z = hf @ w_j.T  # [T, C]
+        col = j * chunk + jnp.arange(chunk)
+        probs = jnp.where(col[None, :] < v, jnp.exp(z - lse[:, None]), 0.0)
+        onehot = (tgt[:, None] == col[None, :]).astype(jnp.float32)
+        gz = (probs - onehot) * scale  # [T, C]
+        grad_h = grad_h + gz @ w_j
+        grad_w_j = gz.T @ hf  # [C, H]
+        return grad_h, grad_w_j
+
+    gh0 = jnp.zeros_like(hf)
+    grad_h, grad_w = jax.lax.scan(body, gh0, (wp, jnp.arange(n_chunks)))
+    grad_w = grad_w.reshape(n_chunks * chunk, h)[:v]
+    return grad_h.astype(hidden.dtype), grad_w.astype(w_head.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def cce_loss(
+    hidden: jax.Array, w_head: jax.Array, targets: jax.Array, chunk: int = 1024
+) -> tuple[jax.Array, jax.Array]:
+    """Cut Cross-Entropy: (sum loss, n_valid_tokens) without full logits."""
+    loss, _ = _cce_fwd(hidden, w_head, targets, chunk)
+    n = jnp.sum((targets >= 0).astype(jnp.float32))
+    return jnp.sum(loss), n
+
+
+def _vjp_fwd(hidden, w_head, targets, chunk):
+    loss, lse = _cce_fwd(hidden, w_head, targets, chunk)
+    n = jnp.sum((targets >= 0).astype(jnp.float32))
+    return (jnp.sum(loss), n), (hidden, w_head, targets, lse)
+
+
+def _vjp_bwd(chunk, res, cot):
+    dsum, _dn = cot
+    hidden, w_head, targets, lse = res
+    t = hidden.shape[0]
+    dloss = jnp.broadcast_to(dsum, (t,))
+    gh, gw = _cce_bwd_chunked(hidden, w_head, targets, lse, dloss, chunk)
+    return gh, gw, None
+
+
+cce_loss.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,96 @@
+"""Fused LoRA linear Pallas kernel (paper Def. 16, Alg. 10, Prop. 9).
+
+Grid: (m-blocks, n-blocks). Each step loads one X tile once and uses it for
+both the base GEMM X·Wᵀ and the adapter path (X·Aᵀ)·Bᵀ — the "shared input
+loads" of the LoRAFusion identity — accumulating into a single acc tile, so
+the [M, R] intermediate never reaches HBM.
+
+VMEM per step: BM·K (x) + BN·K (w) + R·K (a) + BN·R (b) + BM·BN (acc);
+with BM=BN=64, K tiled by 128, R≤64 this stays well under the VMEM budget.
+
+The VJP is the plain bilinear gradient (three small GEMMs), exact.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _lora_kernel(x_ref, w_ref, a_ref, b_ref, y_ref, *, scale):
+    x = x_ref[...].astype(jnp.float32)  # [BM, K]
+    w = w_ref[...].astype(jnp.float32)  # [BN, K]
+    a = a_ref[...].astype(jnp.float32)  # [R, K]
+    b = b_ref[...].astype(jnp.float32)  # [BN, R]
+    acc = x @ w.T  # base GEMM
+    h = x @ a.T  # adapter projection, stays in registers/VMEM
+    acc = acc + scale * (h @ b.T)
+    y_ref[...] = acc.astype(y_ref.dtype)
+
+
+def _lora_fwd(x, w, a, b, alpha, block_m, block_n):
+    m, k = x.shape
+    n = w.shape[0]
+    r = a.shape[0]
+    assert m % block_m == 0 and n % block_n == 0, (m, n, block_m, block_n)
+    scale = alpha / r
+    return pl.pallas_call(
+        partial(_lora_kernel, scale=scale),
+        grid=(m // block_m, n // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((r, k), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_n, r), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=INTERPRET,
+    )(x, w, a, b)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def lora_linear(
+    x: jax.Array,
+    w: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    alpha: float,
+    block_m: int = 64,
+    block_n: int = 64,
+) -> jax.Array:
+    """y = x@Wᵀ + (alpha/r)·(x@Aᵀ)@Bᵀ. x: [M,K], w: [N,K], a: [R,K], b: [N,R]."""
+    return _lora_fwd(x, w, a, b, alpha, block_m, block_n)
+
+
+def _vjp_fwd(x, w, a, b, alpha, block_m, block_n):
+    return _lora_fwd(x, w, a, b, alpha, block_m, block_n), (x, w, a, b)
+
+
+def _vjp_bwd(alpha, block_m, block_n, res, dy):
+    x, w, a, b = res
+    r = a.shape[0]
+    scale = alpha / r
+    dyf = dy.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    dx = dyf @ w.astype(jnp.float32) + scale * (dyf @ bf) @ af
+    dw = dyf.T @ xf
+    h = xf @ af.T  # [M, R]
+    db = scale * (dyf.T @ h)
+    da = scale * ((bf.T @ dyf.T) @ xf)
+    return (
+        dx.astype(x.dtype),
+        dw.astype(w.dtype),
+        da.astype(a.dtype),
+        db.astype(b.dtype),
+    )
+
+
+lora_linear.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,82 @@
+"""Block-wise quantization Pallas kernels (paper Def. 9, Alg. 15/23).
+
+int8 (8-bit optimizer states, §S11) and simulated FP8 E4M3 (DeepSeek-V3
+style, §S16) with one scale per block. One grid step per block: amax
+reduction, scale, round and clamp all happen in VMEM.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+INTERPRET = True
+
+
+def _int8_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = jnp.full_like(s_ref[...], scale)
+
+
+def int8_quantize_blockwise(x: jax.Array, block: int = 128):
+    """Returns (q int8 [n_blocks, block], scales f32 [n_blocks])."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    n_blocks = (n + block - 1) // block
+    padded = jnp.pad(flat, (0, n_blocks * block - n)).reshape(n_blocks, block)
+    return pl.pallas_call(
+        _int8_kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, block), jnp.int8),
+            jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(padded)
+
+
+def _fp8_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 448.0, 1.0)
+    q_ref[...] = ref.fp8_e4m3_quantize(x / scale)
+    s_ref[...] = jnp.full_like(s_ref[...], scale)
+
+
+def fp8_blockwise_e4m3(x: jax.Array, block: int = 128):
+    """Block-wise scaled simulated-E4M3 (paper Alg. 15).
+
+    Returns (q f32 [n_blocks, block] holding E4M3-representable values,
+    scales f32 [n_blocks]).
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    n_blocks = (n + block - 1) // block
+    padded = jnp.pad(flat, (0, n_blocks * block - n)).reshape(n_blocks, block)
+    return pl.pallas_call(
+        _fp8_kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, block), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(padded)

@@ -1,0 +1,621 @@
+"""Pure-jnp reference oracles for every Chronicals kernel.
+
+This module is the correctness contract for the whole stack:
+
+* every Pallas kernel in this package is tested (pytest + hypothesis)
+  against the function of the same name here;
+* the "naive" benchmark variants lower these *unfused / materializing*
+  implementations, reproducing the paper's baselines (full-logit
+  cross-entropy, score-materializing attention, per-op optimizer);
+* the "fused-structure" implementations (``*_chunked`` / ``*_flash``)
+  implement the paper's algorithms (online softmax, chunked CCE, tiled
+  attention) in plain jnp so XLA compiles them efficiently on any
+  backend — these power the fast end-to-end artifacts, while the Pallas
+  versions prove the kernel-level formulation.
+
+Everything here is dtype-polymorphic and shape-polymorphic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# RMSNorm (paper Def. 4, Prop. 3; Alg. 4/5)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """y = x / sqrt(mean(x^2) + eps) * gamma, reduced over the last axis."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    return (x.astype(jnp.float32) * rstd).astype(x.dtype) * gamma
+
+
+def rmsnorm_naive(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Unfused RMSNorm: each step separated by an optimization barrier so XLA
+    cannot fuse it — models the 5-kernel PyTorch sequence from §4."""
+    x2 = jax.lax.optimization_barrier(jnp.square(x.astype(jnp.float32)))
+    var = jax.lax.optimization_barrier(jnp.mean(x2, axis=-1, keepdims=True))
+    rstd = jax.lax.optimization_barrier(jax.lax.rsqrt(var + eps))
+    xn = jax.lax.optimization_barrier(x.astype(jnp.float32) * rstd)
+    return (xn * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_bwd(
+    x: jax.Array, gamma: jax.Array, dy: jax.Array, eps: float = 1e-6
+) -> tuple[jax.Array, jax.Array]:
+    """Analytic RMSNorm backward (paper Prop. 3).
+
+    dx_i = gamma_i * rstd * (dy_i - xbar_i * mean_j(dy_j gamma_j xbar_j))
+    dgamma = sum over rows of dy * xbar
+    """
+    xf = x.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    gf = gamma.astype(jnp.float32)
+    d = x.shape[-1]
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xbar = xf * rstd
+    c1 = jnp.sum(dyf * gf * xbar, axis=-1, keepdims=True) / d
+    dx = rstd * (gf * dyf - xbar * c1)
+    dgamma = jnp.sum((dyf * xbar).reshape(-1, d), axis=0)
+    return dx.astype(x.dtype), dgamma.astype(gamma.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU (paper Def. 3, Prop. 2; Alg. 6/7)
+# ---------------------------------------------------------------------------
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    """y = SiLU(gate) * up."""
+    gf = gate.astype(jnp.float32)
+    return (gf * jax.nn.sigmoid(gf) * up.astype(jnp.float32)).astype(gate.dtype)
+
+
+def swiglu_naive(gate: jax.Array, up: jax.Array) -> jax.Array:
+    """Unfused SwiGLU: sigmoid / mul / mul as three barrier-separated steps."""
+    gf = gate.astype(jnp.float32)
+    sig = jax.lax.optimization_barrier(jax.nn.sigmoid(gf))
+    silu = jax.lax.optimization_barrier(gf * sig)
+    return (silu * up.astype(jnp.float32)).astype(gate.dtype)
+
+
+def swiglu_bwd(
+    gate: jax.Array, up: jax.Array, dy: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Analytic SwiGLU backward (paper Alg. 7)."""
+    gf = gate.astype(jnp.float32)
+    uf = up.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    sig = jax.nn.sigmoid(gf)
+    silu = gf * sig
+    d_silu = sig * (1.0 + gf * (1.0 - sig))
+    dgate = dyf * uf * d_silu
+    dup = dyf * silu
+    return dgate.astype(gate.dtype), dup.astype(up.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (paper Def. 15/21, Alg. 8/14) — split-half ("rotate_half") convention
+# ---------------------------------------------------------------------------
+
+
+def rope_cos_sin(
+    positions: jax.Array, head_dim: int, base: float = 10000.0
+) -> tuple[jax.Array, jax.Array]:
+    """Precompute cos/sin tables for given integer positions.
+
+    Returns (cos, sin) of shape positions.shape + (head_dim/2,).
+    """
+    half = head_dim // 2
+    inv_freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    freqs = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs (x1, x2) = (x[..., :d/2], x[..., d/2:]).
+
+    x: [..., n_heads, head_dim]; cos/sin: broadcastable to [..., 1, head_dim/2].
+    """
+    half = x.shape[-1] // 2
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def rope_qk(
+    q: jax.Array, k: jax.Array, positions: jax.Array, base: float = 10000.0
+) -> tuple[jax.Array, jax.Array]:
+    """Fused-in-spirit QK-RoPE: one cos/sin table shared by Q and K.
+
+    q: [B, S, Hq, D], k: [B, S, Hkv, D], positions: [B, S] int32.
+    """
+    cos, sin = rope_cos_sin(positions, q.shape[-1], base)
+    cos = cos[..., None, :]  # [B, S, 1, D/2]
+    sin = sin[..., None, :]
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+
+
+def rope_qk_naive(
+    q: jax.Array, k: jax.Array, positions: jax.Array, base: float = 10000.0
+) -> tuple[jax.Array, jax.Array]:
+    """Separate-kernel RoPE: Q and K each recompute the cos/sin tables and are
+    separated by barriers (two launches + duplicated trig loads, §4)."""
+    cos_q, sin_q = rope_cos_sin(positions, q.shape[-1], base)
+    q_out = jax.lax.optimization_barrier(
+        apply_rope(q, cos_q[..., None, :], sin_q[..., None, :])
+    )
+    cos_k, sin_k = rope_cos_sin(positions, k.shape[-1], base)
+    k_out = jax.lax.optimization_barrier(
+        apply_rope(k, cos_k[..., None, :], sin_k[..., None, :])
+    )
+    return q_out, k_out
+
+
+# ---------------------------------------------------------------------------
+# Attention (paper Def. 1/2, Alg. 13) — with GQA + segment (packing) masks
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _segment_mask(seg_q: jax.Array, seg_kv: jax.Array) -> jax.Array:
+    """Block-diagonal causal mask for packed sequences.
+
+    seg id 0 is padding; tokens attend within their own segment only,
+    causally. Shapes [B, S] -> bool [B, 1, S, S].
+    """
+    same = seg_q[:, :, None] == seg_kv[:, None, :]
+    not_pad = (seg_q[:, :, None] != 0) & (seg_kv[:, None, :] != 0)
+    s = seg_q.shape[-1]
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    return (same & not_pad & causal)[:, None, :, :]
+
+
+def _expand_kv(k: jax.Array, n_q_heads: int) -> jax.Array:
+    """GQA: repeat each KV head for its query group. [B,S,Hkv,D]->[B,S,Hq,D]."""
+    n_kv = k.shape[2]
+    if n_kv == n_q_heads:
+        return k
+    return jnp.repeat(k, n_q_heads // n_kv, axis=2)
+
+
+def attention_naive(
+    q: jax.Array, k: jax.Array, v: jax.Array, seg_ids: jax.Array
+) -> jax.Array:
+    """Score-materializing attention: builds the full [B,H,S,S] matrix
+    (the paper's quadratic-memory baseline)."""
+    b, s, h, d = q.shape
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    qt = jnp.swapaxes(q, 1, 2).astype(jnp.float32)  # [B,H,S,D]
+    kt = jnp.swapaxes(k, 1, 2).astype(jnp.float32)
+    vt = jnp.swapaxes(v, 1, 2).astype(jnp.float32)
+    scores = jnp.einsum("bhsd,bhtd->bhst", qt, kt) / jnp.sqrt(
+        jnp.asarray(d, jnp.float32)
+    )
+    scores = jax.lax.optimization_barrier(scores)  # force materialization
+    mask = _segment_mask(seg_ids, seg_ids)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jax.lax.optimization_barrier(probs)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, vt)
+    out = jnp.where(
+        jnp.any(mask, axis=-1)[..., None], out, 0.0
+    )  # zero fully-masked (padding) rows
+    return jnp.swapaxes(out, 1, 2).astype(q.dtype)
+
+
+def attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, seg_ids: jax.Array
+) -> jax.Array:
+    """Mathematically identical attention without forced materialization —
+    the differentiable oracle for the flash variants."""
+    b, s, h, d = q.shape
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    qt = jnp.swapaxes(q, 1, 2).astype(jnp.float32)
+    kt = jnp.swapaxes(k, 1, 2).astype(jnp.float32)
+    vt = jnp.swapaxes(v, 1, 2).astype(jnp.float32)
+    scores = jnp.einsum("bhsd,bhtd->bhst", qt, kt) / jnp.sqrt(
+        jnp.asarray(d, jnp.float32)
+    )
+    mask = _segment_mask(seg_ids, seg_ids)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, vt)
+    out = jnp.where(jnp.any(mask, axis=-1)[..., None], out, 0.0)
+    return jnp.swapaxes(out, 1, 2).astype(q.dtype)
+
+
+def flash_attention_scan(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    seg_ids: jax.Array,
+    block_kv: int = 64,
+) -> jax.Array:
+    """FlashAttention forward structure in plain jnp (paper Alg. 13).
+
+    Tiles the KV axis with an online-softmax carry (m, l, acc) so the
+    [S, S] score matrix is never materialized; XLA compiles the scan body
+    once. This is the "fused-structure" implementation used by the fast
+    end-to-end artifacts; the Pallas version mirrors it tile-for-tile.
+    """
+    b, s, h, d = q.shape
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qt = jnp.swapaxes(q, 1, 2).astype(jnp.float32)  # [B,H,S,D]
+    kt = jnp.swapaxes(k, 1, 2).astype(jnp.float32)
+    vt = jnp.swapaxes(v, 1, 2).astype(jnp.float32)
+
+    n_blocks = (s + block_kv - 1) // block_kv
+    pad = n_blocks * block_kv - s
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        seg_kv = jnp.pad(seg_ids, ((0, 0), (0, pad)))
+    else:
+        seg_kv = seg_ids
+
+    kb = jnp.moveaxis(kt.reshape(b, h, n_blocks, block_kv, d), 2, 0)
+    vb = jnp.moveaxis(vt.reshape(b, h, n_blocks, block_kv, d), 2, 0)
+    segb = jnp.moveaxis(seg_kv.reshape(b, n_blocks, block_kv), 1, 0)
+    q_pos = jnp.arange(s)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        k_j, v_j, seg_j, j = blk
+        scores = jnp.einsum("bhsd,bhtd->bhst", qt, k_j) * scale
+        kv_pos = j * block_kv + jnp.arange(block_kv)
+        causal = q_pos[:, None] >= kv_pos[None, :]
+        same = (
+            (seg_ids[:, :, None] == seg_j[:, None, :])
+            & (seg_ids[:, :, None] != 0)
+            & (seg_j[:, None, :] != 0)
+        )
+        mask = (same & causal)[:, None, :, :]
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhst,bhtd->bhsd", p, v_j)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, s), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((b, h, s), dtype=jnp.float32)
+    acc0 = jnp.zeros((b, h, s, d), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kb, vb, segb, jnp.arange(n_blocks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.where((l > 0)[..., None], out, 0.0)
+    return jnp.swapaxes(out, 1, 2).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy (paper Def. 5/6/7, Thm. 2/3/4; Alg. 1/2/3/19)
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy_full(
+    hidden: jax.Array,
+    w_head: jax.Array,
+    targets: jax.Array,
+    z_loss: float = 0.0,
+    label_smoothing: float = 0.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-logit cross-entropy: materializes [T, V] (the paper's baseline).
+
+    hidden: [T, H]; w_head: [V, H]; targets: [T] int32, -1 = ignore.
+    Returns (summed loss over real tokens, n_real_tokens).
+    """
+    logits = hidden.astype(jnp.float32) @ w_head.astype(jnp.float32).T
+    logits = jax.lax.optimization_barrier(logits)  # force materialization
+    valid = targets >= 0
+    tgt = jnp.where(valid, targets, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt_logit = jnp.take_along_axis(logits, tgt[:, None], axis=-1)[:, 0]
+    loss = lse - tgt_logit
+    if label_smoothing > 0.0:
+        smooth = lse - jnp.mean(logits, axis=-1)
+        loss = (1.0 - label_smoothing) * loss + label_smoothing * smooth
+    if z_loss > 0.0:
+        loss = loss + z_loss * jnp.square(lse)
+    loss = jnp.where(valid, loss, 0.0)
+    return jnp.sum(loss), jnp.sum(valid.astype(jnp.float32))
+
+
+def cce_chunked(
+    hidden: jax.Array,
+    w_head: jax.Array,
+    targets: jax.Array,
+    chunk: int = 1024,
+    z_loss: float = 0.0,
+    label_smoothing: float = 0.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Cut Cross-Entropy: streams the vocabulary in chunks with an online
+    logsumexp so the [T, V] logit tensor is never materialized (Alg. 1).
+
+    Mathematically identical to :func:`cross_entropy_full`.
+    """
+    t, h = hidden.shape
+    v = w_head.shape[0]
+    n_chunks = (v + chunk - 1) // chunk
+    pad = n_chunks * chunk - v
+    wp = jnp.pad(w_head.astype(jnp.float32), ((0, pad), (0, 0)))
+    wc = wp.reshape(n_chunks, chunk, h)
+    hf = hidden.astype(jnp.float32)
+    valid = targets >= 0
+    tgt = jnp.where(valid, targets, 0)
+
+    def body(carry, blk):
+        m, d, tgt_logit, mean_acc = carry
+        w_j, j = blk
+        z = hf @ w_j.T  # [T, chunk] — only one chunk live at a time
+        col = j * chunk + jnp.arange(chunk)
+        in_vocab = col < v
+        z = jnp.where(in_vocab[None, :], z, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(z, axis=-1))
+        d = d * jnp.exp(m - m_new) + jnp.sum(jnp.exp(z - m_new[:, None]), axis=-1)
+        in_chunk = (tgt >= j * chunk) & (tgt < (j + 1) * chunk)
+        local = jnp.clip(tgt - j * chunk, 0, chunk - 1)
+        z_t = jnp.take_along_axis(z, local[:, None], axis=-1)[:, 0]
+        tgt_logit = jnp.where(in_chunk, z_t, tgt_logit)
+        mean_acc = mean_acc + jnp.sum(jnp.where(in_vocab[None, :], z, 0.0), axis=-1)
+        return (m_new, d, tgt_logit, mean_acc), None
+
+    m0 = jnp.full((t,), NEG_INF, dtype=jnp.float32)
+    d0 = jnp.zeros((t,), dtype=jnp.float32)
+    tl0 = jnp.zeros((t,), dtype=jnp.float32)
+    ma0 = jnp.zeros((t,), dtype=jnp.float32)
+    (m, d, tgt_logit, mean_acc), _ = jax.lax.scan(
+        body, (m0, d0, tl0, ma0), (wc, jnp.arange(n_chunks))
+    )
+    lse = jnp.log(d) + m
+    loss = lse - tgt_logit
+    if label_smoothing > 0.0:
+        smooth = lse - mean_acc / v
+        loss = (1.0 - label_smoothing) * loss + label_smoothing * smooth
+    if z_loss > 0.0:
+        loss = loss + z_loss * jnp.square(lse)
+    loss = jnp.where(valid, loss, 0.0)
+    return jnp.sum(loss), jnp.sum(valid.astype(jnp.float32))
+
+
+def online_logsumexp(x: jax.Array) -> jax.Array:
+    """Streaming logsumexp over the last axis (paper Def. 13 / Thm. 2) —
+    element-at-a-time online softmax used by correctness tests."""
+
+    def body(carry, xi):
+        m, d = carry
+        m_new = jnp.maximum(m, xi)
+        d = d * jnp.exp(m - m_new) + jnp.exp(xi - m_new)
+        return (m_new, d), None
+
+    m0 = jnp.full(x.shape[:-1], -jnp.inf, dtype=jnp.float32)
+    d0 = jnp.zeros(x.shape[:-1], dtype=jnp.float32)
+    (m, d), _ = jax.lax.scan(
+        body, (m0, d0), jnp.moveaxis(x.astype(jnp.float32), -1, 0)
+    )
+    return jnp.log(d) + m
+
+
+# ---------------------------------------------------------------------------
+# LoRA linear (paper Def. 10/16, Alg. 10)
+# ---------------------------------------------------------------------------
+
+
+def lora_linear(
+    x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array, alpha: float
+) -> jax.Array:
+    """Fused-in-spirit y = x@W^T + (alpha/r) * (x@A^T)@B^T.
+
+    x: [T, K]; w: [N, K]; a: [R, K]; b: [N, R].
+    """
+    r = a.shape[0]
+    scale = alpha / r
+    return x @ w.T + scale * ((x @ a.T) @ b.T)
+
+
+def lora_linear_naive(
+    x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array, alpha: float
+) -> jax.Array:
+    """Three separate GEMMs with materialized intermediates."""
+    r = a.shape[0]
+    scale = alpha / r
+    base = jax.lax.optimization_barrier(x @ w.T)
+    h = jax.lax.optimization_barrier(x @ a.T)
+    lora = jax.lax.optimization_barrier(h @ b.T)
+    return base + scale * lora
+
+
+# ---------------------------------------------------------------------------
+# AdamW (paper Def. 8, Alg. 18) and friends (§5, §S10)
+# ---------------------------------------------------------------------------
+
+
+def adamw_update(
+    p: jax.Array,
+    g: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    lr,
+    step,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    clip_coef=1.0,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One fused AdamW step. `step` is 1-based. Returns (p', m', v')."""
+    g = g * clip_coef
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    bc1 = 1.0 - beta1**step
+    bc2 = 1.0 - beta2**step
+    m_hat = m_new / bc1
+    v_hat = v_new / bc2
+    p_new = p * (1.0 - lr * weight_decay) - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return p_new, m_new, v_new
+
+
+def adamw_update_naive(
+    p, g, m, v, lr, step, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.01,
+    clip_coef=1.0,
+):
+    """Unfused AdamW: the six separate kernels from §S3.1, barrier-separated."""
+    g = jax.lax.optimization_barrier(g * clip_coef)
+    p = jax.lax.optimization_barrier(p * (1.0 - lr * weight_decay))
+    m_new = jax.lax.optimization_barrier(beta1 * m + (1.0 - beta1) * g)
+    v_new = jax.lax.optimization_barrier(beta2 * v + (1.0 - beta2) * g * g)
+    m_hat = jax.lax.optimization_barrier(m_new / (1.0 - beta1**step))
+    v_hat = jax.lax.optimization_barrier(v_new / (1.0 - beta2**step))
+    p_new = p - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return p_new, m_new, v_new
+
+
+def adam_atan2_update(
+    p, g, m, v, lr, step, beta1=0.9, beta2=0.999, weight_decay=0.01, clip_coef=1.0
+):
+    """Adam-atan2 (paper Def. 20): bounded, eps-free update."""
+    g = g * clip_coef
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    m_hat = m_new / (1.0 - beta1**step)
+    v_hat = v_new / (1.0 - beta2**step)
+    p_new = p * (1.0 - lr * weight_decay) - lr * jnp.arctan2(m_hat, jnp.sqrt(v_hat))
+    return p_new, m_new, v_new
+
+
+def newton_schulz(g: jax.Array, steps: int = 5) -> jax.Array:
+    """Newton–Schulz orthogonalization (paper Alg. 12 / Lemma 2).
+
+    Returns the (approximately) orthogonal polar factor, scaled by ||G||_F.
+    """
+    gf = g.astype(jnp.float32)
+    norm = jnp.linalg.norm(gf) + 1e-12
+    x = gf / norm
+    for _ in range(steps):
+        x = 1.5 * x - 0.5 * (x @ x.T) @ x
+    return x * norm
+
+
+def muon_update(p, g, mom, lr, beta=0.95, ns_steps=5, clip_coef=1.0):
+    """Muon (paper Def. 19): momentum + Newton–Schulz-orthogonalized update.
+
+    Only sensible for 2-D params; callers fall back to AdamW for vectors.
+    """
+    g = g * clip_coef
+    mom_new = beta * mom + g
+    upd = newton_schulz(mom_new, ns_steps) / (jnp.linalg.norm(mom_new) + 1e-12)
+    p_new = p - lr * upd * jnp.sqrt(jnp.asarray(p.size, jnp.float32))
+    return p_new, mom_new
+
+
+def schedule_free_update(
+    p, z, g, lr, step, weight_decay=0.01, clip_coef=1.0
+):
+    """Schedule-Free SGD-style update (paper Def. 18, §S10.1).
+
+    State: z (fast iterate). p is the averaged (slow) iterate:
+      z' = z - lr * (g + wd * p)
+      p' = (1 - c) * p + c * z',  c = 1/step
+    """
+    g = (g * clip_coef) + weight_decay * p
+    z_new = z - lr * g
+    c = 1.0 / step
+    p_new = (1.0 - c) * p + c * z_new
+    return p_new, z_new
+
+
+def global_grad_norm(grads) -> jax.Array:
+    """sqrt(sum of squared L2 norms) over a flat list of gradient arrays."""
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in grads)
+    return jnp.sqrt(sq)
+
+
+# ---------------------------------------------------------------------------
+# Quantization (paper Def. 9/22/23, Alg. 15/23; §S11, §S16)
+# ---------------------------------------------------------------------------
+
+
+def int8_quantize_blockwise(x: jax.Array, block: int = 128):
+    """Block-wise symmetric int8 quantization (paper Def. 9).
+
+    Returns (q int8 [n_blocks, block], scales f32 [n_blocks]) over the
+    flattened input, zero-padded to a block multiple.
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    n_blocks = (n + block - 1) // block
+    padded = jnp.pad(flat, (0, n_blocks * block - n)).reshape(n_blocks, block)
+    amax = jnp.max(jnp.abs(padded), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(padded / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize_blockwise(q: jax.Array, scale: jax.Array, n: int, shape):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
+    return flat.reshape(shape)
+
+
+def fp8_e4m3_quantize(x: jax.Array) -> jax.Array:
+    """Simulated E4M3 round-trip: clamp to ±448, round to 3 mantissa bits."""
+    return _fp8_sim(x, mant_bits=3, max_val=448.0, min_exp=-6)
+
+
+def fp8_e5m2_quantize(x: jax.Array) -> jax.Array:
+    """Simulated E5M2 round-trip: clamp to ±57344, round to 2 mantissa bits."""
+    return _fp8_sim(x, mant_bits=2, max_val=57344.0, min_exp=-14)
+
+
+def _fp8_sim(x: jax.Array, mant_bits: int, max_val: float, min_exp: int):
+    xf = x.astype(jnp.float32)
+    sign = jnp.sign(xf)
+    mag = jnp.minimum(jnp.abs(xf), max_val)
+    # exponent of the leading bit, clamped at the subnormal boundary
+    exp = jnp.floor(jnp.log2(jnp.maximum(mag, 2.0**min_exp)))
+    exp = jnp.maximum(exp, float(min_exp))
+    quantum = jnp.exp2(exp - mant_bits)
+    q = jnp.round(mag / quantum) * quantum
+    q = jnp.minimum(q, max_val)
+    return (sign * jnp.where(mag == 0, 0.0, q)).astype(x.dtype)
+
+
+def fp8_blockwise_e4m3(x: jax.Array, block: int = 128):
+    """Block-wise scaled E4M3 (paper Alg. 15): scale each block so its amax
+    maps to 448, quantize, return (q_sim f32 blocks, scales)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    n_blocks = (n + block - 1) // block
+    padded = jnp.pad(flat, (0, n_blocks * block - n)).reshape(n_blocks, block)
+    amax = jnp.max(jnp.abs(padded), axis=1)
+    scale = jnp.where(amax > 0, amax / 448.0, 1.0)
+    q = fp8_e4m3_quantize(padded / scale[:, None])
+    return q, scale
+
+
+def kahan_sum(xs: jax.Array) -> jax.Array:
+    """Kahan-compensated summation over axis 0 (paper Def. 14, §S2.4)."""
+
+    def body(carry, x):
+        s, c = carry
+        y = x - c
+        t = s + y
+        c = (t - s) - y
+        return (t, c), None
+
+    s0 = jnp.zeros(xs.shape[1:], dtype=xs.dtype)
+    (s, _), _ = jax.lax.scan(body, (s0, s0), xs)
+    return s

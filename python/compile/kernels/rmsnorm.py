@@ -1,0 +1,119 @@
+"""Fused RMSNorm Pallas kernel (paper Alg. 4/5, Prop. 3/7).
+
+One grid step per row: the row is staged into VMEM once, the variance
+reduction, rsqrt and scale all happen in registers/VMEM, and the output is
+written once — the Triton kernel's single-pass structure, re-expressed with
+``BlockSpec`` for the TPU memory hierarchy (VMEM tile = the Triton thread
+block). ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls (see DESIGN.md §Hardware-Adaptation).
+
+VMEM footprint per grid step: 2·d floats (row + gamma) + d outputs —
+for d=4096 that is 48 KiB, comfortably inside the ~16 MiB VMEM budget;
+block shapes would be padded to (8, 128) lanes on real TPU hardware.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+INTERPRET = True
+
+
+def _fwd_kernel(x_ref, g_ref, y_ref, rstd_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x)
+    rstd = jax.lax.rsqrt(var + eps)
+    y_ref[...] = (x * rstd * g_ref[...].astype(jnp.float32)).astype(y_ref.dtype)
+    rstd_ref[...] = jnp.full_like(rstd_ref[...], rstd)
+
+
+def _bwd_kernel(x_ref, g_ref, rstd_ref, dy_ref, dx_ref, dgamma_ref, *, d: int):
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    rstd = rstd_ref[0]
+    xbar = x * rstd
+    c1 = jnp.sum(dy * g * xbar) / d
+    dx_ref[...] = (rstd * (g * dy - xbar * c1)).astype(dx_ref.dtype)
+    # per-row dgamma partial; summed over rows by the caller
+    dgamma_ref[...] = (dy * xbar).astype(dgamma_ref.dtype)
+
+
+def _rmsnorm_fwd_2d(x, gamma, eps):
+    """x: [T, d] -> (y [T, d], rstd [T])."""
+    t, d = x.shape
+    y, rstd = pl.pallas_call(
+        partial(_fwd_kernel, eps=eps),
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), x.dtype),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(x, gamma)
+    return y, rstd
+
+
+def _rmsnorm_bwd_2d(x, gamma, rstd, dy):
+    t, d = x.shape
+    dx, dgamma_rows = pl.pallas_call(
+        partial(_bwd_kernel, d=d),
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), x.dtype),
+            jax.ShapeDtypeStruct((t, d), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(x, gamma, rstd, dy)
+    return dx, jnp.sum(dgamma_rows, axis=0).astype(gamma.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Fused RMSNorm over the last axis; any leading shape."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    y, _ = _rmsnorm_fwd_2d(x.reshape(-1, d), gamma, eps)
+    return y.reshape(*lead, d)
+
+
+def _vjp_fwd(x, gamma, eps):
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    y, rstd = _rmsnorm_fwd_2d(x2, gamma, eps)
+    return y.reshape(*lead, d), (x2, gamma, rstd, lead)
+
+
+def _vjp_bwd(eps, res, dy):
+    x2, gamma, rstd, lead = res
+    d = x2.shape[-1]
+    dx, dgamma = _rmsnorm_bwd_2d(x2, gamma, rstd, dy.reshape(-1, d))
+    return dx.reshape(*lead, d), dgamma
+
+
+rmsnorm.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,100 @@
+"""Fused QK-RoPE Pallas kernel (paper Alg. 8, Prop. 8).
+
+One kernel rotates both Q and K for a (batch·seq) position: the cos/sin
+values are computed once per position and shared across all query *and* KV
+heads — the Triton kernel's "shared trigonometric loads". The rotation is
+the split-half convention (rotate_half), matching `ref.apply_rope`.
+
+Backward = rotation by -θ (rotations are orthogonal), so the VJP reuses the
+same kernel with negated sin; zero extra code paths to validate.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _rope_kernel(q_ref, k_ref, cos_ref, sin_ref, qo_ref, ko_ref):
+    cos = cos_ref[...].astype(jnp.float32)  # [1, half]
+    sin = sin_ref[...].astype(jnp.float32)
+
+    def rotate(x):  # x: [1, H, D]
+        half = x.shape[-1] // 2
+        x1 = x[..., :half].astype(jnp.float32)
+        x2 = x[..., half:].astype(jnp.float32)
+        y1 = x1 * cos[:, None, :] - x2 * sin[:, None, :]
+        y2 = x2 * cos[:, None, :] + x1 * sin[:, None, :]
+        return jnp.concatenate([y1, y2], axis=-1)
+
+    qo_ref[...] = rotate(q_ref[...]).astype(qo_ref.dtype)
+    ko_ref[...] = rotate(k_ref[...]).astype(ko_ref.dtype)
+
+
+def _rope_qk_flat(q, k, cos, sin):
+    """q: [T, Hq, D], k: [T, Hkv, D], cos/sin: [T, D/2]."""
+    t, hq, d = q.shape
+    hkv = k.shape[1]
+    half = d // 2
+    return pl.pallas_call(
+        _rope_kernel,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((1, hq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, hkv, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, half), lambda i: (i, 0)),
+            pl.BlockSpec((1, half), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, hq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, hkv, d), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, hq, d), q.dtype),
+            jax.ShapeDtypeStruct((t, hkv, d), k.dtype),
+        ],
+        interpret=INTERPRET,
+    )(q, k, cos, sin)
+
+
+def _cos_sin(positions, d, base):
+    half = d // 2
+    inv_freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    freqs = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def rope_qk(q: jax.Array, k: jax.Array, positions: jax.Array, base: float = 10000.0):
+    """Fused QK rotary embedding.
+
+    q: [B, S, Hq, D]; k: [B, S, Hkv, D]; positions: [B, S] int32.
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    cos, sin = _cos_sin(positions.reshape(-1), d, base)
+    qo, ko = _rope_qk_flat(q.reshape(-1, hq, d), k.reshape(-1, hkv, d), cos, sin)
+    return qo.reshape(b, s, hq, d), ko.reshape(b, s, hkv, d)
+
+
+def _vjp_fwd(q, k, positions, base):
+    return rope_qk(q, k, positions, base), positions
+
+
+def _vjp_bwd(base, positions, cotangents):
+    dq_rot, dk_rot = cotangents
+    b, s, hq, d = dq_rot.shape
+    hkv = dk_rot.shape[2]
+    cos, sin = _cos_sin(positions.reshape(-1), d, base)
+    dq, dk = _rope_qk_flat(
+        dq_rot.reshape(-1, hq, d), dk_rot.reshape(-1, hkv, d), cos, -sin
+    )
+    return dq.reshape(b, s, hq, d), dk.reshape(b, s, hkv, d), None
+
+
+rope_qk.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,434 @@
+"""Chronicals L2: the JAX training graph (build-time only).
+
+A Qwen2.5-style decoder-only transformer (RMSNorm, GQA + RoPE, SwiGLU,
+untied LM head) with every optimization of the paper expressible as a
+*variant* of the same training-step graph:
+
+* attention: ``naive`` (score-materializing, barriered), ``flash_scan``
+  (online-softmax tiles in jnp — "fused structure"), ``flash_pallas``
+  (the L1 Pallas kernel);
+* elementwise kernels (RMSNorm / SwiGLU / RoPE): ``naive`` (barriered,
+  eager-style), ``jnp`` (fusable), ``pallas`` (L1 kernels);
+* loss: ``full`` (materializes [T, V] logits), ``cce_scan`` (Cut
+  Cross-Entropy, chunked online logsumexp), ``cce_pallas``;
+* optimizer: ``adamw_naive`` (six barrier-separated phases, §S3.1),
+  ``adamw`` (fused), ``adamw_pallas``, ``sf`` (Schedule-Free), ``muon``,
+  ``atan2`` (Adam-atan2);
+* parameterization: ``full``, ``lora`` (r, alpha; LoRA+ via a separate
+  runtime lr_b scalar so λ = lr_b/lr needs no recompile), ``dora``;
+* ``broken=True`` reproduces the paper's "Unsloth fast mode" bug: the
+  loss is computed on ``stop_gradient``-ed parameters, so XLA dead-code
+  eliminates the whole backward pass — throughput jumps and grad_norm
+  is exactly 0.0 (Fig. 10/22).
+
+The training step is a *single* XLA executable: params + optimizer state
++ batch + (step, lr, lr_b) → new params + new state + (loss, grad_norm,
+n_tokens). Python never runs at training time; the Rust L3 keeps all
+state device-resident and feeds batches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import rmsnorm as k_rmsnorm
+from .kernels import swiglu as k_swiglu
+from .kernels import rope as k_rope
+from .kernels import flash_attention as k_flash
+from .kernels import cce as k_cce
+from .kernels import adamw as k_adamw
+from .kernels import lora_linear as k_lora
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    rope_base: float = 10000.0
+    rms_eps: float = 1e-6
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self, family: str = "full", lora_rank: int = 32) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hkv = self.n_kv_heads * self.head_dim
+        per_layer = d * d + 2 * d * hkv + d * d + 3 * d * f + 2 * d
+        n = v * d * 2 + self.n_layers * per_layer + d
+        if family in ("lora", "dora"):
+            r = lora_rank
+            lora = self.n_layers * (2 * r * (d + d) + 2 * r * (d + hkv))
+            if family == "dora":
+                lora += self.n_layers * (2 * d + 2 * hkv)
+            n += lora
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    attention: str = "flash_scan"  # naive | ref | flash_scan | flash_pallas
+    kernels: str = "jnp"  # naive | jnp | pallas
+    loss: str = "cce_scan"  # full | cce_scan | cce_pallas
+    optimizer: str = "adamw"  # adamw_naive | adamw | adamw_pallas | sf | muon | atan2
+    family: str = "full"  # full | lora | dora
+    lora_rank: int = 32
+    lora_alpha: int = 64
+    broken: bool = False  # "Unsloth fast mode": detached loss, zero grads
+    cce_chunk: int = 1024
+    flash_block: int = 64
+    max_grad_norm: float = 1.0
+    weight_decay: float = 0.01
+    z_loss: float = 0.0
+    label_smoothing: float = 0.0
+
+
+# Named model sizes. "e2e" is the end-to-end demo scale (§Substitutions:
+# the paper's 494M Qwen2.5-0.5B is scaled to fit a CPU-PJRT substrate; all
+# shape *ratios* — GQA grouping, ff multiple, vocab≫d — are preserved).
+MODEL_PRESETS: dict[str, ModelConfig] = {
+    "tiny": ModelConfig(vocab=512, d_model=64, n_layers=2, n_heads=4,
+                        n_kv_heads=2, d_ff=128),
+    "small": ModelConfig(vocab=4096, d_model=256, n_layers=4, n_heads=8,
+                         n_kv_heads=4, d_ff=768),
+    "e2e": ModelConfig(vocab=8192, d_model=384, n_layers=6, n_heads=8,
+                       n_kv_heads=4, d_ff=1024),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def _layer_names(cfg: ModelConfig) -> list[str]:
+    return [f"layer_{i:02d}" for i in range(cfg.n_layers)]
+
+
+def param_specs(cfg: ModelConfig, family: str, lora_rank: int = 32):
+    """Ordered (name, shape) list. Trainable params come FIRST — this is the
+    calling convention the Rust runtime relies on."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    hkv = cfg.n_kv_heads * cfg.head_dim
+    base: list[tuple[str, tuple[int, ...]]] = [("embed", (v, d))]
+    for ln in _layer_names(cfg):
+        base += [
+            (f"{ln}.wq", (d, d)),
+            (f"{ln}.wk", (hkv, d)),
+            (f"{ln}.wv", (hkv, d)),
+            (f"{ln}.wo", (d, d)),
+            (f"{ln}.w_gate", (f, d)),
+            (f"{ln}.w_up", (f, d)),
+            (f"{ln}.w_down", (d, f)),
+            (f"{ln}.norm1", (d,)),
+            (f"{ln}.norm2", (d,)),
+        ]
+    base += [("norm_f", (d,)), ("head", (v, d))]
+
+    if family == "full":
+        return base, []  # (trainable, frozen)
+
+    r = lora_rank
+    lora: list[tuple[str, tuple[int, ...]]] = []
+    for ln in _layer_names(cfg):
+        lora += [
+            (f"{ln}.wq_a", (r, d)), (f"{ln}.wq_b", (d, r)),
+            (f"{ln}.wk_a", (r, d)), (f"{ln}.wk_b", (hkv, r)),
+            (f"{ln}.wv_a", (r, d)), (f"{ln}.wv_b", (hkv, r)),
+            (f"{ln}.wo_a", (r, d)), (f"{ln}.wo_b", (d, r)),
+        ]
+        if family == "dora":
+            lora += [
+                (f"{ln}.wq_m", (d,)), (f"{ln}.wk_m", (hkv,)),
+                (f"{ln}.wv_m", (hkv,)), (f"{ln}.wo_m", (d,)),
+            ]
+    return lora, base  # lora params trainable, base frozen
+
+
+def init_params(key: jax.Array, cfg: ModelConfig, family: str, lora_rank: int = 32):
+    """Initialize (trainable, frozen) flat lists of f32 arrays."""
+    trainable_specs, frozen_specs = param_specs(cfg, family, lora_rank)
+
+    def init_one(key, name, shape):
+        if name.endswith(("_b",)):  # LoRA B: zeros (paper §5)
+            return jnp.zeros(shape, jnp.float32)
+        if name.endswith(("norm1", "norm2", "norm_f", "_m")):
+            return jnp.ones(shape, jnp.float32)
+        if name.endswith("_a"):  # LoRA A: N(0, 1/r)
+            return jax.random.normal(key, shape) * (1.0 / shape[0]) ** 0.5
+        fan_in = shape[-1] if len(shape) > 1 else shape[0]
+        return jax.random.normal(key, shape) * (1.0 / fan_in) ** 0.5
+
+    def init_list(key, specs):
+        out = []
+        for name, shape in specs:
+            key, sub = jax.random.split(key)
+            out.append(init_one(sub, name, shape))
+        return key, out
+
+    key, trainable = init_list(key, trainable_specs)
+    key, frozen = init_list(key, frozen_specs)
+    # DoRA: magnitude starts at the column norm of the frozen base weight
+    if family == "dora":
+        fnames = [n for n, _ in frozen_specs]
+        tnames = [n for n, _ in trainable_specs]
+        fmap = dict(zip(fnames, frozen))
+        for i, name in enumerate(tnames):
+            if name.endswith("_m"):
+                base_w = fmap[name[: -len("_m")]]
+                trainable[i] = jnp.linalg.norm(base_w, axis=1)
+    return trainable, frozen
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _as_dict(cfg, family, lora_rank, trainable, frozen):
+    tspecs, fspecs = param_specs(cfg, family, lora_rank)
+    p = dict(zip([n for n, _ in tspecs], trainable))
+    p.update(zip([n for n, _ in fspecs], frozen))
+    return p
+
+
+def _linear(p, name, x, sc: StepConfig):
+    """Projection with optional LoRA/DoRA adapter. x: [..., K] -> [..., N]."""
+    w = p[name]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if sc.family == "full" or f"{name}_a" not in p:
+        # MLP projections carry no adapter (paper targets q,k,v,o).
+        return (x2 @ w.T).reshape(*lead, w.shape[0])
+    a, b = p[f"{name}_a"], p[f"{name}_b"]
+    if sc.family == "dora":
+        # W' = m ⊙ (W + (α/r)·BA) / ||W + (α/r)·BA||_col  (paper Def. 28)
+        m = p[f"{name}_m"]
+        scale = sc.lora_alpha / sc.lora_rank
+        w_comb = w + scale * (b @ a)
+        norm = jnp.linalg.norm(w_comb, axis=1, keepdims=True) + 1e-8
+        w_eff = w_comb / norm * m[:, None]
+        return (x2 @ w_eff.T).reshape(*lead, w.shape[0])
+    if sc.kernels == "pallas":
+        y = k_lora.lora_linear(
+            x2, w, a, b, float(sc.lora_alpha),
+            block_m=min(64, x2.shape[0]), block_n=min(64, w.shape[0]),
+        )
+    elif sc.kernels == "naive":
+        y = ref.lora_linear_naive(x2, w, a, b, float(sc.lora_alpha))
+    else:
+        y = ref.lora_linear(x2, w, a, b, float(sc.lora_alpha))
+    return y.reshape(*lead, w.shape[0])
+
+
+def _norm(x, gamma, sc: StepConfig, eps):
+    if sc.kernels == "pallas":
+        return k_rmsnorm.rmsnorm(x, gamma, eps)
+    if sc.kernels == "naive":
+        return ref.rmsnorm_naive(x, gamma, eps)
+    return ref.rmsnorm(x, gamma, eps)
+
+
+def _swiglu(g, u, sc: StepConfig):
+    if sc.kernels == "pallas":
+        return k_swiglu.swiglu(g, u)
+    if sc.kernels == "naive":
+        return ref.swiglu_naive(g, u)
+    return ref.swiglu(g, u)
+
+
+def _rope(q, k, pos, sc: StepConfig, base):
+    if sc.kernels == "pallas":
+        return k_rope.rope_qk(q, k, pos, base)
+    if sc.kernels == "naive":
+        return ref.rope_qk_naive(q, k, pos, base)
+    return ref.rope_qk(q, k, pos, base)
+
+
+def _attention(q, k, v, seg, sc: StepConfig):
+    if sc.attention == "naive":
+        return ref.attention_naive(q, k, v, seg)
+    if sc.attention == "ref":
+        return ref.attention(q, k, v, seg)
+    if sc.attention == "flash_pallas":
+        s = q.shape[1]
+        blk = min(sc.flash_block, s)
+        return k_flash.flash_attention(q, k, v, seg, blk, blk)
+    return ref.flash_attention_scan(q, k, v, seg, block_kv=min(sc.flash_block, q.shape[1]))
+
+
+def forward_hidden(p, cfg: ModelConfig, sc: StepConfig, tokens, seg_ids, pos_ids):
+    """tokens/seg_ids/pos_ids: [B, S] int32 → hidden states [B, S, D]."""
+    b, s = tokens.shape
+    h = jnp.take(p["embed"], tokens, axis=0)  # [B, S, D]
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    for ln in _layer_names(cfg):
+        x = _norm(h, p[f"{ln}.norm1"], sc, cfg.rms_eps)
+        q = _linear(p, f"{ln}.wq", x, sc).reshape(b, s, nh, hd)
+        k = _linear(p, f"{ln}.wk", x, sc).reshape(b, s, nkv, hd)
+        v = _linear(p, f"{ln}.wv", x, sc).reshape(b, s, nkv, hd)
+        q, k = _rope(q, k, pos_ids, sc, cfg.rope_base)
+        att = _attention(q, k, v, seg_ids, sc).reshape(b, s, nh * hd)
+        h = h + _linear(p, f"{ln}.wo", att, sc)
+        x = _norm(h, p[f"{ln}.norm2"], sc, cfg.rms_eps)
+        g = _linear(p, f"{ln}.w_gate", x, sc)
+        u = _linear(p, f"{ln}.w_up", x, sc)
+        mlp = _swiglu(g, u, sc)
+        # MLP down-projection never gets a LoRA adapter (paper targets q,k,v,o)
+        lead = mlp.shape[:-1]
+        h = h + (mlp.reshape(-1, cfg.d_ff) @ p[f"{ln}.w_down"].T).reshape(*lead, cfg.d_model)
+    return _norm(h, p["norm_f"], sc, cfg.rms_eps)
+
+
+def loss_fn(p, cfg: ModelConfig, sc: StepConfig, tokens, targets, seg_ids, pos_ids):
+    """Returns (sum loss, n_real_tokens)."""
+    hidden = forward_hidden(p, cfg, sc, tokens, seg_ids, pos_ids)
+    t = hidden.reshape(-1, cfg.d_model)
+    tgt = targets.reshape(-1)
+    chunk = min(sc.cce_chunk, cfg.vocab)
+    if sc.loss == "full":
+        return ref.cross_entropy_full(t, p["head"], tgt, sc.z_loss, sc.label_smoothing)
+    if sc.loss == "cce_pallas":
+        return k_cce.cce_loss(t, p["head"], tgt, chunk)
+    return ref.cce_chunked(t, p["head"], tgt, chunk, sc.z_loss, sc.label_smoothing)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers (in-graph)
+# ---------------------------------------------------------------------------
+
+N_OPT_SLOTS = 2  # uniform across optimizers; unused slots carry zeros
+
+
+def _apply_optimizer(sc: StepConfig, names, params, grads, s0, s1, step, lr, lr_b,
+                     clip_coef):
+    """Apply the configured optimizer to flat lists. Returns (p', s0', s1')."""
+    new_p, new_s0, new_s1 = [], [], []
+    for name, p, g, m, v in zip(names, params, grads, s0, s1):
+        # LoRA+ (paper Thm. 1): B matrices train with lr_b = λ·lr, and weight
+        # decay scales with the learning rate (Prop. 10) — both fall out of
+        # using the per-group lr in the shared update rule.
+        lr_g = lr_b if name.endswith("_b") else lr  # name is static
+        if sc.optimizer == "adamw_naive":
+            p2, m2, v2 = ref.adamw_update_naive(
+                p, g, m, v, lr_g, step, weight_decay=sc.weight_decay,
+                clip_coef=clip_coef)
+        elif sc.optimizer == "adamw_pallas":
+            p2, m2, v2 = k_adamw.adamw_update(
+                p, g, m, v, lr_g, step, weight_decay=sc.weight_decay,
+                clip_coef=clip_coef)
+        elif sc.optimizer == "sf":
+            p2, z2 = ref.schedule_free_update(
+                p, m, g, lr_g, step, weight_decay=sc.weight_decay,
+                clip_coef=clip_coef)
+            m2, v2 = z2, v
+        elif sc.optimizer == "muon" and p.ndim == 2:
+            p2, m2 = ref.muon_update(p, g, m, lr_g, clip_coef=clip_coef)
+            v2 = v
+        elif sc.optimizer == "atan2":
+            p2, m2, v2 = ref.adam_atan2_update(
+                p, g, m, v, lr_g, step, weight_decay=sc.weight_decay,
+                clip_coef=clip_coef)
+        else:  # fused adamw (also the muon fallback for 1-D params)
+            p2, m2, v2 = ref.adamw_update(
+                p, g, m, v, lr_g, step, weight_decay=sc.weight_decay,
+                clip_coef=clip_coef)
+        new_p.append(p2)
+        new_s0.append(m2)
+        new_s1.append(v2)
+    return new_p, new_s0, new_s1
+
+
+# ---------------------------------------------------------------------------
+# The train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, sc: StepConfig):
+    """Returns (fn, input_specs, output_names).
+
+    fn takes flat positional arrays in this exact order (the Rust calling
+    convention):
+        trainable..., frozen..., slot0..., slot1...,
+        tokens, targets, seg_ids, pos_ids, step, lr, lr_b
+    and returns:
+        trainable'..., slot0'..., slot1'..., loss_mean, grad_norm, n_tokens
+    """
+    tspecs, fspecs = param_specs(cfg, sc.family, sc.lora_rank)
+    tnames = [n for n, _ in tspecs]
+    n_t, n_f = len(tspecs), len(fspecs)
+
+    def fn(*args):
+        i = 0
+        trainable = list(args[i : i + n_t]); i += n_t
+        frozen = list(args[i : i + n_f]); i += n_f
+        s0 = list(args[i : i + n_t]); i += n_t
+        s1 = list(args[i : i + n_t]); i += n_t
+        tokens, targets, seg_ids, pos_ids, step, lr, lr_b = args[i : i + 7]
+
+        def scalar_loss(tr):
+            p = _as_dict(cfg, sc.family, sc.lora_rank, tr, frozen)
+            total, n = loss_fn(p, cfg, sc, tokens, targets, seg_ids, pos_ids)
+            return total / jnp.maximum(n, 1.0), n
+
+        if sc.broken:
+            # "Unsloth fast mode" (paper Fig. 10): gradients never flow —
+            # XLA dead-code-eliminates the entire backward pass.
+            loss, n = scalar_loss([jax.lax.stop_gradient(t) for t in trainable])
+            grads = [jnp.zeros_like(t) for t in trainable]
+        else:
+            (loss, n), grads = jax.value_and_grad(scalar_loss, has_aux=True)(
+                trainable
+            )
+
+        gnorm = ref.global_grad_norm(grads)
+        clip = jnp.minimum(1.0, sc.max_grad_norm / (gnorm + 1e-6))
+        new_t, new_s0, new_s1 = _apply_optimizer(
+            sc, tnames, trainable, grads, s0, s1, step, lr, lr_b, clip
+        )
+        return (*new_t, *new_s0, *new_s1, loss, gnorm, n)
+
+    return fn, (tspecs, fspecs), tnames
+
+
+def make_eval_fn(cfg: ModelConfig, sc: StepConfig):
+    """Forward-only mean loss: params..., batch -> (loss, n_tokens)."""
+    tspecs, fspecs = param_specs(cfg, sc.family, sc.lora_rank)
+    n_t, n_f = len(tspecs), len(fspecs)
+
+    def fn(*args):
+        trainable = list(args[:n_t])
+        frozen = list(args[n_t : n_t + n_f])
+        tokens, targets, seg_ids, pos_ids = args[n_t + n_f :]
+        p = _as_dict(cfg, sc.family, sc.lora_rank, trainable, frozen)
+        total, n = loss_fn(p, cfg, sc, tokens, targets, seg_ids, pos_ids)
+        return total / jnp.maximum(n, 1.0), n
+
+    return fn
+
+
+def make_init_fn(cfg: ModelConfig, sc: StepConfig):
+    """seed (i32 scalar) -> (trainable..., frozen..., slot0..., slot1...)."""
+    tspecs, _ = param_specs(cfg, sc.family, sc.lora_rank)
+
+    def fn(seed):
+        key = jax.random.PRNGKey(seed)
+        trainable, frozen = init_params(key, cfg, sc.family, sc.lora_rank)
+        zeros = [jnp.zeros_like(t) for t in trainable]
+        return (*trainable, *frozen, *zeros, *[jnp.zeros_like(t) for t in trainable])
+
+    return fn

@@ -1,0 +1,84 @@
+"""AOT emitter contract tests: variant table coverage + manifest helpers.
+
+These do not lower anything (fast); full lowering is exercised by
+`make artifacts` + the Rust integration suite.
+"""
+
+import jax.numpy as jnp
+
+import compile.aot as aot
+import compile.model as M
+
+
+def test_variant_table_covers_paper_experiments():
+    names = {v.name for v in aot.variant_table("test")}
+    # Table 4 ablation ladder
+    assert {"ablate_naive", "ablate_flash", "ablate_compiled", "ablate_liger",
+            "chronicals"} <= names
+    # Table 3 LoRA + the Fig. 10 broken mode
+    assert {"lora", "lora_naive", "lora_broken"} <= names
+    # §S10 optimizers + §S9 DoRA
+    assert {"opt_sf", "opt_muon", "opt_atan2", "dora"} <= names
+    # composition proof + e2e
+    assert {"chronicals_pallas", "e2e"} <= names
+
+
+def test_every_family_with_runtime_use_has_init():
+    variants = aot.variant_table("test")
+    families_with_init = {
+        (v.step.family, v.model) for v in variants if v.emit_init
+    }
+    for v in variants:
+        assert (v.step.family, v.model) in families_with_init, (
+            f"variant {v.name} (family={v.step.family}, model={v.model}) "
+            "has no init executable to initialize from"
+        )
+
+
+def test_broken_variant_is_lora_family():
+    broken = [v for v in aot.variant_table("test") if v.step.broken]
+    assert len(broken) == 1
+    assert broken[0].step.family == "lora"
+
+
+def test_bench_profile_uses_paper_shaped_models():
+    bench = aot.variant_table("bench")
+    e2e = next(v for v in bench if v.name == "e2e")
+    cfg = M.MODEL_PRESETS[e2e.model]
+    # vocab >> d_model: the CCE regime (paper Def. 12)
+    assert cfg.vocab >= 8 * cfg.d_model
+    # GQA grouping like Qwen (n_heads > n_kv_heads)
+    assert cfg.n_heads > cfg.n_kv_heads
+
+
+def test_kernel_microbenches_paired():
+    names = [n for n, _, _ in aot.kernel_microbenches("test")]
+    fused = {
+        n.rsplit("_", 1)[0] for n in names if n.endswith(("_fused", "_flash"))
+    }
+    naive = {n[: -len("_naive")] for n in names if n.endswith("_naive")}
+    # every naive baseline has a fused/flash counterpart
+    assert naive <= fused, naive - fused
+
+
+def test_hlo_text_emission_smoke():
+    """One real lowering through the HLO-text interchange path."""
+    import jax
+
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn, keep_unused=True).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4]" in text
+
+
+def test_model_presets_sane():
+    for name, cfg in M.MODEL_PRESETS.items():
+        assert cfg.d_model % cfg.n_heads == 0, name
+        assert cfg.n_heads % cfg.n_kv_heads == 0, name
+        assert cfg.head_dim % 2 == 0, name  # RoPE needs even head dim
+        assert cfg.param_count() > 0

@@ -1,0 +1,633 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is the
+core correctness signal of the build (see DESIGN.md §7).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.rmsnorm import rmsnorm as p_rmsnorm
+from compile.kernels.swiglu import swiglu as p_swiglu
+from compile.kernels.rope import rope_qk as p_rope_qk
+from compile.kernels.flash_attention import flash_attention as p_flash
+from compile.kernels.cce import cce_loss as p_cce
+from compile.kernels.lora_linear import lora_linear as p_lora
+from compile.kernels.adamw import adamw_update as p_adamw
+from compile.kernels.quantize import (
+    int8_quantize_blockwise as p_int8,
+    fp8_blockwise_e4m3 as p_fp8,
+)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(rng, *shape, scale=1.0, dtype=np.float32):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype) * scale)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 16),
+    d=st.sampled_from([8, 32, 64, 96]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmsnorm_fwd_matches_ref(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, rows, d)
+    g = rand(rng, d)
+    np.testing.assert_allclose(
+        p_rmsnorm(x, g), ref.rmsnorm(x, g), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 8),
+    d=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmsnorm_grads_match_autodiff_of_ref(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, rows, d)
+    g = rand(rng, d)
+
+    def loss_p(x_, g_):
+        return jnp.sum(jnp.sin(p_rmsnorm(x_, g_)))
+
+    def loss_r(x_, g_):
+        return jnp.sum(jnp.sin(ref.rmsnorm(x_, g_)))
+
+    dxp, dgp = jax.grad(loss_p, argnums=(0, 1))(x, g)
+    dxr, dgr = jax.grad(loss_r, argnums=(0, 1))(x, g)
+    np.testing.assert_allclose(dxp, dxr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(dgp, dgr, rtol=1e-4, atol=1e-4)
+
+
+def test_rmsnorm_leading_batch_dims():
+    rng = np.random.default_rng(0)
+    x = rand(rng, 2, 3, 4, 16)
+    g = rand(rng, 16)
+    np.testing.assert_allclose(
+        p_rmsnorm(x, g), ref.rmsnorm(x, g), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_rmsnorm_analytic_bwd_matches_autodiff():
+    rng = np.random.default_rng(1)
+    x = rand(rng, 5, 32)
+    g = rand(rng, 32)
+    dy = rand(rng, 5, 32)
+    dx_a, dg_a = ref.rmsnorm_bwd(x, g, dy)
+    f = lambda x_, g_: jnp.sum(ref.rmsnorm(x_, g_) * dy)
+    dx_n, dg_n = jax.grad(f, argnums=(0, 1))(x, g)
+    np.testing.assert_allclose(dx_a, dx_n, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(dg_a, dg_n, rtol=1e-4, atol=1e-4)
+
+
+def test_rmsnorm_naive_matches_fused():
+    rng = np.random.default_rng(2)
+    x = rand(rng, 7, 24)
+    g = rand(rng, 24)
+    np.testing.assert_allclose(
+        ref.rmsnorm_naive(x, g), ref.rmsnorm(x, g), rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 16),
+    d=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_swiglu_fwd_matches_ref(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    g = rand(rng, rows, d)
+    u = rand(rng, rows, d)
+    np.testing.assert_allclose(p_swiglu(g, u), ref.swiglu(g, u), rtol=1e-5, atol=1e-5)
+
+
+def test_swiglu_grads_match():
+    rng = np.random.default_rng(3)
+    g = rand(rng, 6, 16)
+    u = rand(rng, 6, 16)
+    f_p = lambda g_, u_: jnp.sum(jnp.square(p_swiglu(g_, u_)))
+    f_r = lambda g_, u_: jnp.sum(jnp.square(ref.swiglu(g_, u_)))
+    dp = jax.grad(f_p, argnums=(0, 1))(g, u)
+    dr = jax.grad(f_r, argnums=(0, 1))(g, u)
+    for a, b in zip(dp, dr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_swiglu_analytic_bwd_matches_autodiff():
+    rng = np.random.default_rng(4)
+    g = rand(rng, 5, 12)
+    u = rand(rng, 5, 12)
+    dy = rand(rng, 5, 12)
+    dg_a, du_a = ref.swiglu_bwd(g, u, dy)
+    f = lambda g_, u_: jnp.sum(ref.swiglu(g_, u_) * dy)
+    dg_n, du_n = jax.grad(f, argnums=(0, 1))(g, u)
+    np.testing.assert_allclose(dg_a, dg_n, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(du_a, du_n, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.sampled_from([4, 8, 16]),
+    hq=st.sampled_from([2, 4]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rope_matches_ref(s, hq, d, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, 2, s, hq, d)
+    k = rand(rng, 2, s, hq // 2, d)
+    pos = jnp.tile(jnp.arange(s, dtype=jnp.int32), (2, 1))
+    qo, ko = p_rope_qk(q, k, pos)
+    qr, kr = ref.rope_qk(q, k, pos)
+    np.testing.assert_allclose(qo, qr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ko, kr, rtol=1e-5, atol=1e-5)
+
+
+def test_rope_preserves_norm():
+    """Rotations are orthogonal: ||RoPE(x)|| == ||x|| (paper §4)."""
+    rng = np.random.default_rng(5)
+    q = rand(rng, 1, 8, 2, 16)
+    k = rand(rng, 1, 8, 1, 16)
+    pos = jnp.arange(8, dtype=jnp.int32)[None, :]
+    qo, _ = ref.rope_qk(q, k, pos)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(qo, axis=-1), jnp.linalg.norm(q, axis=-1), rtol=1e-5
+    )
+
+
+def test_rope_relative_position_property():
+    """(R_m q)·(R_n k) depends only on n-m (paper Lemma 1)."""
+    rng = np.random.default_rng(6)
+    q = rand(rng, 1, 1, 1, 16)
+    k = rand(rng, 1, 1, 1, 16)
+    scores = []
+    for m, n in [(0, 3), (5, 8), (10, 13)]:
+        qm, _ = ref.rope_qk(q, q, jnp.asarray([[m]], jnp.int32))
+        kn, _ = ref.rope_qk(k, k, jnp.asarray([[n]], jnp.int32))
+        scores.append(float(jnp.sum(qm * kn)))
+    np.testing.assert_allclose(scores[0], scores[1], rtol=1e-4)
+    np.testing.assert_allclose(scores[0], scores[2], rtol=1e-4)
+
+
+def test_rope_grads_flow():
+    rng = np.random.default_rng(7)
+    q = rand(rng, 1, 4, 2, 8)
+    k = rand(rng, 1, 4, 1, 8)
+    pos = jnp.arange(4, dtype=jnp.int32)[None, :]
+    f_p = lambda q_: jnp.sum(jnp.square(p_rope_qk(q_, k, pos)[0]))
+    f_r = lambda q_: jnp.sum(jnp.square(ref.rope_qk(q_, k, pos)[0]))
+    np.testing.assert_allclose(
+        jax.grad(f_p)(q), jax.grad(f_r)(q), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.sampled_from([8, 16, 32]),
+    h=st.sampled_from([2, 4]),
+    d=st.sampled_from([8, 16]),
+    gqa=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_pallas_matches_ref(s, h, d, gqa, seed):
+    rng = np.random.default_rng(seed)
+    hkv = h // 2 if gqa else h
+    q = rand(rng, 2, s, h, d)
+    k = rand(rng, 2, s, hkv, d)
+    v = rand(rng, 2, s, hkv, d)
+    seg = jnp.ones((2, s), jnp.int32)
+    out = p_flash(q, k, v, seg, min(8, s), min(8, s))
+    np.testing.assert_allclose(out, ref.attention(q, k, v, seg), rtol=1e-4, atol=1e-4)
+
+
+def test_flash_packed_segments_isolated():
+    """Packed segments must not attend across boundaries."""
+    rng = np.random.default_rng(8)
+    s = 16
+    q = rand(rng, 1, s, 2, 8)
+    k = rand(rng, 1, s, 2, 8)
+    v = rand(rng, 1, s, 2, 8)
+    seg = jnp.asarray([[1] * 8 + [2] * 8], jnp.int32)
+    out_packed = p_flash(q, k, v, seg, 4, 4)
+    # segment 2 alone, re-based positions
+    out_alone = p_flash(
+        q[:, 8:], k[:, 8:], v[:, 8:], jnp.ones((1, 8), jnp.int32), 4, 4
+    )
+    np.testing.assert_allclose(out_packed[:, 8:], out_alone, rtol=1e-4, atol=1e-4)
+
+
+def test_flash_padding_rows_zero():
+    rng = np.random.default_rng(9)
+    s = 8
+    q = rand(rng, 1, s, 1, 8)
+    k = rand(rng, 1, s, 1, 8)
+    v = rand(rng, 1, s, 1, 8)
+    seg = jnp.asarray([[1, 1, 1, 1, 0, 0, 0, 0]], jnp.int32)
+    out = p_flash(q, k, v, seg, 4, 4)
+    np.testing.assert_allclose(out[:, 4:], jnp.zeros_like(out[:, 4:]), atol=1e-6)
+
+
+def test_flash_scan_matches_naive():
+    rng = np.random.default_rng(10)
+    q = rand(rng, 2, 32, 4, 16)
+    k = rand(rng, 2, 32, 2, 16)
+    v = rand(rng, 2, 32, 2, 16)
+    seg = jnp.concatenate(
+        [jnp.ones((2, 20), jnp.int32), jnp.zeros((2, 12), jnp.int32)], axis=1
+    )
+    np.testing.assert_allclose(
+        ref.flash_attention_scan(q, k, v, seg, block_kv=8),
+        ref.attention_naive(q, k, v, seg),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_flash_grads_match_ref():
+    rng = np.random.default_rng(11)
+    q = rand(rng, 1, 16, 2, 8)
+    k = rand(rng, 1, 16, 2, 8)
+    v = rand(rng, 1, 16, 2, 8)
+    seg = jnp.ones((1, 16), jnp.int32)
+    f_p = lambda q_, k_, v_: jnp.sum(jnp.sin(p_flash(q_, k_, v_, seg, 8, 8)))
+    f_r = lambda q_, k_, v_: jnp.sum(jnp.sin(ref.attention(q_, k_, v_, seg)))
+    dp = jax.grad(f_p, argnums=(0, 1, 2))(q, k, v)
+    dr = jax.grad(f_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(dp, dr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Online softmax + CCE
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(2, 64),
+    scale=st.sampled_from([0.1, 1.0, 30.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_online_logsumexp_matches(n, scale, seed):
+    """Paper Thm. 2: online softmax == two-pass logsumexp, any magnitude."""
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 3, n, scale=scale)
+    np.testing.assert_allclose(
+        ref.online_logsumexp(x), jax.nn.logsumexp(x, axis=-1), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_online_logsumexp_extreme_values_stable():
+    x = jnp.asarray([[1e4, -1e4, 0.0, 1e4]], jnp.float32)
+    got = ref.online_logsumexp(x)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(got, jax.nn.logsumexp(x, axis=-1), rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 12),
+    v=st.sampled_from([16, 50, 130]),
+    chunk=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cce_chunked_matches_full(t, v, chunk, seed):
+    """Paper Thm. 3: CCE is mathematically identical to full CE."""
+    rng = np.random.default_rng(seed)
+    h = rand(rng, t, 16)
+    w = rand(rng, v, 16, scale=0.2)
+    tgt = jnp.asarray(rng.integers(-1, v, size=(t,)), jnp.int32)
+    l_c, n_c = ref.cce_chunked(h, w, tgt, chunk=chunk)
+    l_f, n_f = ref.cross_entropy_full(h, w, tgt)
+    np.testing.assert_allclose(l_c, l_f, rtol=1e-5, atol=1e-6)
+    assert n_c == n_f
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 8),
+    v=st.sampled_from([32, 100]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cce_pallas_matches_full(t, v, seed):
+    rng = np.random.default_rng(seed)
+    h = rand(rng, t, 16)
+    w = rand(rng, v, 16, scale=0.2)
+    tgt = jnp.asarray(rng.integers(0, v, size=(t,)), jnp.int32)
+    l_p, n_p = p_cce(h, w, tgt, 16)
+    l_f, n_f = ref.cross_entropy_full(h, w, tgt)
+    np.testing.assert_allclose(l_p, l_f, rtol=1e-5, atol=1e-6)
+    assert n_p == n_f
+
+
+def test_cce_pallas_grads_match_full():
+    rng = np.random.default_rng(12)
+    h = rand(rng, 6, 16)
+    w = rand(rng, 50, 16, scale=0.2)
+    tgt = jnp.asarray([0, 5, 49, -1, 7, 20], jnp.int32)
+    gh_p, gw_p = jax.grad(lambda h_, w_: p_cce(h_, w_, tgt, 16)[0], argnums=(0, 1))(h, w)
+    gh_f, gw_f = jax.grad(
+        lambda h_, w_: ref.cross_entropy_full(h_, w_, tgt)[0], argnums=(0, 1)
+    )(h, w)
+    np.testing.assert_allclose(gh_p, gh_f, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gw_p, gw_f, rtol=1e-4, atol=1e-5)
+
+
+def test_cce_gradient_is_softmax_minus_onehot():
+    """Paper Prop. 4 / Thm. 4, via the full-logit path."""
+    rng = np.random.default_rng(13)
+    z = rand(rng, 1, 10)
+    tgt = jnp.asarray([3], jnp.int32)
+    w = jnp.eye(10, dtype=jnp.float32)
+
+    def f(z_):
+        return ref.cross_entropy_full(z_, w, tgt)[0]
+
+    grad = jax.grad(f)(z)
+    expected = jax.nn.softmax(z, axis=-1) - jax.nn.one_hot(tgt, 10)
+    np.testing.assert_allclose(grad, expected, rtol=1e-5, atol=1e-6)
+
+
+def test_cce_ignore_index():
+    rng = np.random.default_rng(14)
+    h = rand(rng, 4, 8)
+    w = rand(rng, 20, 8)
+    tgt = jnp.asarray([-1, -1, -1, -1], jnp.int32)
+    loss, n = ref.cce_chunked(h, w, tgt, chunk=8)
+    assert float(loss) == 0.0 and float(n) == 0.0
+
+
+def test_cce_zloss_and_label_smoothing_match_full():
+    rng = np.random.default_rng(15)
+    h = rand(rng, 5, 8)
+    w = rand(rng, 30, 8)
+    tgt = jnp.asarray([0, 1, 2, 3, 29], jnp.int32)
+    l_c, _ = ref.cce_chunked(h, w, tgt, chunk=8, z_loss=1e-4, label_smoothing=0.1)
+    l_f, _ = ref.cross_entropy_full(h, w, tgt, z_loss=1e-4, label_smoothing=0.1)
+    np.testing.assert_allclose(l_c, l_f, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# LoRA linear
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([32, 64, 128]),
+    n=st.sampled_from([32, 64]),
+    k=st.sampled_from([16, 32]),
+    r=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lora_linear_matches_ref(m, n, k, r, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, k)
+    w = rand(rng, n, k)
+    a = rand(rng, r, k)
+    b = rand(rng, n, r)
+    out = p_lora(x, w, a, b, 2.0 * r, min(32, m), min(32, n))
+    np.testing.assert_allclose(
+        out, ref.lora_linear(x, w, a, b, 2.0 * r), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_lora_linear_grads_match():
+    rng = np.random.default_rng(16)
+    x = rand(rng, 64, 16)
+    w = rand(rng, 32, 16)
+    a = rand(rng, 8, 16)
+    b = rand(rng, 32, 8)
+    f_p = lambda x_, a_, b_: jnp.sum(jnp.square(p_lora(x_, w, a_, b_, 16.0, 32, 32)))
+    f_r = lambda x_, a_, b_: jnp.sum(jnp.square(ref.lora_linear(x_, w, a_, b_, 16.0)))
+    dp = jax.grad(f_p, argnums=(0, 1, 2))(x, a, b)
+    dr = jax.grad(f_r, argnums=(0, 1, 2))(x, a, b)
+    for g1, g2 in zip(dp, dr):
+        np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-4)
+
+
+def test_lora_b_zero_init_means_identity():
+    """With B=0, LoRA output equals the base projection (paper §5)."""
+    rng = np.random.default_rng(17)
+    x = rand(rng, 16, 8)
+    w = rand(rng, 12, 8)
+    a = rand(rng, 4, 8)
+    b = jnp.zeros((12, 4), jnp.float32)
+    np.testing.assert_allclose(
+        ref.lora_linear(x, w, a, b, 8.0), x @ w.T, rtol=1e-5, atol=1e-6
+    )
+
+
+def test_lora_gradient_asymmetry_at_init():
+    """Paper Eq. 52/53: at B=0, grad_B != 0 while grad_A == 0."""
+    rng = np.random.default_rng(18)
+    x = rand(rng, 16, 8)
+    w = rand(rng, 12, 8)
+    a = rand(rng, 4, 8)
+    b = jnp.zeros((12, 4), jnp.float32)
+
+    def loss(a_, b_):
+        return jnp.sum(jnp.square(ref.lora_linear(x, w, a_, b_, 8.0)))
+
+    da, db = jax.grad(loss, argnums=(0, 1))(a, b)
+    assert float(jnp.max(jnp.abs(da))) < 1e-6
+    assert float(jnp.max(jnp.abs(db))) > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 300),
+    step=st.integers(1, 100),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adamw_pallas_matches_ref(n, step, seed):
+    rng = np.random.default_rng(seed)
+    p = rand(rng, n)
+    g = rand(rng, n)
+    m = rand(rng, n, scale=0.1)
+    v = jnp.abs(rand(rng, n, scale=0.1))
+    outs_p = p_adamw(p, g, m, v, 1e-3, float(step))
+    outs_r = ref.adamw_update(p, g, m, v, 1e-3, float(step))
+    for a, b in zip(outs_p, outs_r):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+
+
+def test_adamw_naive_matches_fused():
+    rng = np.random.default_rng(19)
+    p = rand(rng, 64)
+    g = rand(rng, 64)
+    m = jnp.zeros(64)
+    v = jnp.zeros(64)
+    a = ref.adamw_update(p, g, m, v, 1e-3, 1.0)
+    b = ref.adamw_update_naive(p, g, m, v, 1e-3, 1.0)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(x, y, rtol=1e-6)
+
+
+def test_adamw_decoupled_weight_decay():
+    """Decay shrinks params even with zero gradient (paper Def. 8)."""
+    p = jnp.ones(4)
+    g = jnp.zeros(4)
+    m = jnp.zeros(4)
+    v = jnp.zeros(4)
+    p2, _, _ = ref.adamw_update(p, g, m, v, lr=0.1, step=1.0, weight_decay=0.5)
+    np.testing.assert_allclose(p2, jnp.full(4, 0.95), rtol=1e-6)
+
+
+def test_newton_schulz_orthogonalizes():
+    """Paper Lemma 2: X_k -> orthogonal polar factor."""
+    rng = np.random.default_rng(20)
+    g = rand(rng, 16, 16)
+    x = ref.newton_schulz(g, steps=12)
+    xn = x / (jnp.linalg.norm(g) + 1e-12)
+    gram = np.asarray(xn @ xn.T)
+    # Newton–Schulz converges toward orthogonality; off-diagonal mass shrinks
+    off = gram - np.diag(np.diag(gram))
+    assert np.abs(off).max() < 0.3
+    assert np.abs(np.diag(gram) - np.diag(gram).mean()).max() < 0.3
+
+
+def test_adam_atan2_bounded():
+    """Paper Prop. 18: update magnitude <= pi/2 * lr even with v ~ 0."""
+    p = jnp.zeros(4)
+    g = jnp.asarray([1e9, -1e9, 1e-9, 0.0], jnp.float32)
+    m = jnp.zeros(4)
+    v = jnp.zeros(4)
+    p2, _, _ = ref.adam_atan2_update(p, g, m, v, lr=1.0, step=1.0, weight_decay=0.0)
+    assert float(jnp.max(jnp.abs(p2))) <= np.pi / 2 + 1e-6
+
+
+def test_schedule_free_converges_on_quadratic():
+    """Paper Thm. 10 sanity: averaged iterate reaches the optimum."""
+    p = jnp.asarray(5.0)
+    z = jnp.asarray(5.0)
+    for t in range(1, 600):
+        g = 2.0 * z  # d/dz of z^2, gradient taken at the fast iterate
+        p, z = ref.schedule_free_update(p, z, g, lr=0.1, step=float(t), weight_decay=0.0)
+    # the averaged iterate converges at the O(1/T) Polyak rate (Thm. 10)
+    assert abs(float(p)) < 0.1
+    assert abs(float(z)) < 1e-6
+
+
+def test_global_grad_norm():
+    gs = [jnp.asarray([3.0]), jnp.asarray([4.0])]
+    np.testing.assert_allclose(ref.global_grad_norm(gs), 5.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Quantization + Kahan
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 500),
+    block=st.sampled_from([16, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_int8_roundtrip_error_bound(n, block, seed):
+    """Paper Eq. 18: |x - dq(q(x))| <= amax/127 per block (+ half-ulp)."""
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n)
+    q, scale = ref.int8_quantize_blockwise(x, block)
+    back = ref.int8_dequantize_blockwise(q, scale, n, (n,))
+    err = np.abs(np.asarray(back - x))
+    amax = float(jnp.max(jnp.abs(x)))
+    assert err.max() <= amax / 127.0 * 0.5 + 1e-7
+
+
+def test_int8_pallas_matches_ref():
+    rng = np.random.default_rng(21)
+    x = rand(rng, 300)
+    qp, sp = p_int8(x, 64)
+    qr, sr = ref.int8_quantize_blockwise(x, 64)
+    np.testing.assert_allclose(qp, qr)
+    np.testing.assert_allclose(sp, sr)
+
+
+def test_fp8_e4m3_range_and_grid():
+    """E4M3: max 448, values land on the 3-mantissa-bit grid (paper Def. 22)."""
+    x = jnp.asarray([500.0, -500.0, 448.0, 1.0, 1.06, 0.0], jnp.float32)
+    q = np.asarray(ref.fp8_e4m3_quantize(x))
+    assert q[0] == 448.0 and q[1] == -448.0 and q[2] == 448.0
+    assert q[3] == 1.0 and q[5] == 0.0
+    # 1.06 rounds to the nearest 1/8 step in [1, 2): 1.0 (0.06 < 1/16)
+    np.testing.assert_allclose(q[4], 1.0, atol=1e-7)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fp8_e4m3_relative_error_bound(seed):
+    """Relative error <= 2^-4 (half ulp at 3 mantissa bits) for normals."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(np.exp(rng.uniform(-3, 5, size=64)).astype(np.float32))
+    x = jnp.minimum(x, 448.0)
+    q = ref.fp8_e4m3_quantize(x)
+    rel = np.abs(np.asarray((q - x) / x))
+    assert rel.max() <= 2.0**-4 + 1e-6
+
+
+def test_fp8_e5m2_wider_range_coarser_grid():
+    x = jnp.asarray([57344.0, 60000.0, 1.1], jnp.float32)
+    q = np.asarray(ref.fp8_e5m2_quantize(x))
+    assert q[0] == 57344.0 and q[1] == 57344.0
+    # 2 mantissa bits: quarter steps in [1, 2)
+    assert q[2] in (1.0, 1.25)
+
+
+def test_fp8_blockwise_pallas_matches_ref():
+    rng = np.random.default_rng(22)
+    x = rand(rng, 200, scale=10.0)
+    qp, sp = p_fp8(x, 64)
+    qr, sr = ref.fp8_blockwise_e4m3(x, 64)
+    np.testing.assert_allclose(qp, qr)
+    np.testing.assert_allclose(sp, sr)
+
+
+def test_kahan_beats_naive_summation():
+    """Paper Prop. 5: Kahan error O(eps) vs naive O(n*eps)."""
+    n = 20000
+    rng = np.random.default_rng(23)
+    xs = (rng.uniform(0, 1, size=n) * 1e-4 + 1.0).astype(np.float32)
+    exact = np.sum(xs.astype(np.float64))
+    naive = np.float32(0.0)
+    for x in xs:
+        naive += x
+    kahan = float(ref.kahan_sum(jnp.asarray(xs)))
+    assert abs(kahan - exact) <= abs(float(naive) - exact)
+    assert abs(kahan - exact) / exact < 1e-6

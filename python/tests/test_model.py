@@ -1,0 +1,236 @@
+"""L2 correctness: variant equivalence, training behaviour, LoRA+ dynamics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import compile.model as M
+
+CFG = M.MODEL_PRESETS["tiny"]
+B, S = 2, 64
+
+
+def make_batch(seed=0, packed=False):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(1, CFG.vocab, size=(B, S)).astype(np.int32)
+    tgts = np.roll(toks, -1, axis=1).astype(np.int32)
+    tgts[:, -1] = -1
+    if packed:
+        seg = np.ones((B, S), np.int32)
+        seg[:, S // 2 :] = 2
+        pos = np.concatenate(
+            [np.arange(S // 2), np.arange(S - S // 2)]
+        ).astype(np.int32)
+        pos = np.tile(pos, (B, 1))
+        tgts[:, S // 2 - 1] = -1  # no target across the segment boundary
+    else:
+        seg = np.ones((B, S), np.int32)
+        pos = np.tile(np.arange(S, dtype=np.int32), (B, 1))
+    return map(jnp.asarray, (toks, tgts, seg, pos))
+
+
+def init_state(sc):
+    tr, fr = M.init_params(jax.random.PRNGKey(0), CFG, sc.family, sc.lora_rank)
+    return tr, fr, [jnp.zeros_like(t) for t in tr], [jnp.zeros_like(t) for t in tr]
+
+
+def run_steps(sc, n_steps=5, lr=1e-2, lr_b=None, seed=0, packed=False):
+    fn, _, _ = M.make_train_step(CFG, sc)
+    jfn = jax.jit(fn)
+    tr, fr, s0, s1 = init_state(sc)
+    toks, tgts, seg, pos = make_batch(seed, packed)
+    lr_b = lr if lr_b is None else lr_b
+    losses, gnorms = [], []
+    for step in range(1, n_steps + 1):
+        outs = jfn(*tr, *fr, *s0, *s1, toks, tgts, seg, pos, float(step), lr, lr_b)
+        n_t = len(tr)
+        tr = list(outs[:n_t])
+        s0 = list(outs[n_t : 2 * n_t])
+        s1 = list(outs[2 * n_t : 3 * n_t])
+        losses.append(float(outs[-3]))
+        gnorms.append(float(outs[-2]))
+    return losses, gnorms
+
+
+# ---------------------------------------------------------------------------
+# Variant equivalence: all lowerings compute the same loss
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "sc",
+    [
+        M.StepConfig(attention="naive", kernels="naive", loss="full"),
+        M.StepConfig(attention="ref", kernels="jnp", loss="full"),
+        M.StepConfig(attention="flash_scan", kernels="jnp", loss="cce_scan"),
+    ],
+    ids=["naive", "ref", "chronicals"],
+)
+def test_variant_losses_identical(sc):
+    """The paper's benchmark configurations are the SAME computation —
+    fused/naive/flash/cce must agree on the loss to float tolerance."""
+    tr, fr = M.init_params(jax.random.PRNGKey(1), CFG, "full")
+    toks, tgts, seg, pos = make_batch(3)
+    p = M._as_dict(CFG, "full", 32, tr, fr)
+    total, n = M.loss_fn(p, CFG, sc, toks, tgts, seg, pos)
+    base_sc = M.StepConfig(attention="naive", kernels="naive", loss="full")
+    total0, n0 = M.loss_fn(p, CFG, base_sc, toks, tgts, seg, pos)
+    np.testing.assert_allclose(float(total), float(total0), rtol=1e-4)
+    assert float(n) == float(n0)
+
+
+def test_pallas_variant_loss_matches_jnp():
+    sc_p = M.StepConfig(
+        attention="flash_pallas", kernels="pallas", loss="cce_pallas",
+        cce_chunk=128, flash_block=32,
+    )
+    sc_j = M.StepConfig(attention="flash_scan", kernels="jnp", loss="cce_scan")
+    tr, fr = M.init_params(jax.random.PRNGKey(2), CFG, "full")
+    p = M._as_dict(CFG, "full", 32, tr, fr)
+    toks, tgts, seg, pos = make_batch(4)
+    lp, _ = M.loss_fn(p, CFG, sc_p, toks, tgts, seg, pos)
+    lj, _ = M.loss_fn(p, CFG, sc_j, toks, tgts, seg, pos)
+    np.testing.assert_allclose(float(lp), float(lj), rtol=1e-4)
+
+
+def test_packed_batch_equals_unpacked_per_sequence_loss():
+    """Packing two sequences with segment masks must give the same total
+    loss as evaluating them separately (Fig. 18 correctness side)."""
+    sc = M.StepConfig(attention="flash_scan", kernels="jnp", loss="cce_scan")
+    tr, fr = M.init_params(jax.random.PRNGKey(5), CFG, "full")
+    p = M._as_dict(CFG, "full", 32, tr, fr)
+    rng = np.random.default_rng(7)
+    half = S // 2
+    seq_a = rng.integers(1, CFG.vocab, size=half).astype(np.int32)
+    seq_b = rng.integers(1, CFG.vocab, size=half).astype(np.int32)
+
+    # packed: [a | b] with segment ids + reset positions
+    toks_p = jnp.asarray(np.concatenate([seq_a, seq_b])[None, :])
+    tgt_a = np.roll(seq_a, -1); tgt_a[-1] = -1
+    tgt_b = np.roll(seq_b, -1); tgt_b[-1] = -1
+    tgts_p = jnp.asarray(np.concatenate([tgt_a, tgt_b])[None, :].astype(np.int32))
+    seg_p = jnp.asarray(np.concatenate([np.ones(half), np.full(half, 2)])[None, :].astype(np.int32))
+    pos_p = jnp.asarray(np.concatenate([np.arange(half), np.arange(half)])[None, :].astype(np.int32))
+    loss_packed, n_packed = M.loss_fn(p, CFG, sc, toks_p, tgts_p, seg_p, pos_p)
+
+    # separate: each sequence alone, padded to half
+    def single(seq, tgt):
+        toks = jnp.asarray(seq[None, :])
+        tg = jnp.asarray(tgt[None, :].astype(np.int32))
+        seg = jnp.ones((1, half), jnp.int32)
+        pos = jnp.arange(half, dtype=jnp.int32)[None, :]
+        return M.loss_fn(p, CFG, sc, toks, tg, seg, pos)
+
+    la, na = single(seq_a, tgt_a)
+    lb, nb = single(seq_b, tgt_b)
+    np.testing.assert_allclose(float(loss_packed), float(la) + float(lb), rtol=1e-4)
+    assert float(n_packed) == float(na) + float(nb)
+
+
+# ---------------------------------------------------------------------------
+# Training dynamics
+# ---------------------------------------------------------------------------
+
+
+def test_full_ft_trains():
+    losses, gnorms = run_steps(M.StepConfig(), n_steps=6)
+    assert losses[-1] < losses[0]
+    assert all(g > 1e-8 for g in gnorms)
+
+
+def test_lora_trains_and_base_frozen():
+    sc = M.StepConfig(family="lora")
+    fn, (tspecs, fspecs), _ = M.make_train_step(CFG, sc)
+    jfn = jax.jit(fn)
+    tr, fr, s0, s1 = init_state(sc)
+    fr_before = [np.asarray(f).copy() for f in fr]
+    toks, tgts, seg, pos = make_batch(0)
+    outs = jfn(*tr, *fr, *s0, *s1, toks, tgts, seg, pos, 1.0, 1e-3, 16e-3)
+    # frozen params are inputs only; they cannot change by construction,
+    # but check the executable's trainable outputs differ from inputs
+    n_t = len(tr)
+    changed = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(outs[:n_t], tr)
+    )
+    assert changed
+
+
+def test_broken_variant_grad_norm_zero_loss_constant():
+    """The Unsloth-bug reproduction (paper Fig. 10)."""
+    losses, gnorms = run_steps(M.StepConfig(family="lora", broken=True), n_steps=4)
+    assert all(g == 0.0 for g in gnorms)
+    assert abs(losses[0] - losses[-1]) < 1e-6
+
+
+def test_lora_plus_converges_faster_than_lora():
+    """Paper Fig. 17: lr_b = 16*lr reaches lower loss in equal steps."""
+    sc = M.StepConfig(family="lora")
+    losses_lora, _ = run_steps(sc, n_steps=10, lr=1e-3, lr_b=1e-3)
+    losses_plus, _ = run_steps(sc, n_steps=10, lr=1e-3, lr_b=16e-3)
+    assert losses_plus[-1] < losses_lora[-1]
+
+
+def test_grad_norm_verification_separates_variants():
+    """The paper's benchmarking methodology: healthy runs have gnorm>0."""
+    _, g_ok = run_steps(M.StepConfig(family="lora"), n_steps=2)
+    _, g_bad = run_steps(M.StepConfig(family="lora", broken=True), n_steps=2)
+    assert min(g_ok) > 1e-8 and max(g_bad) == 0.0
+
+
+@pytest.mark.parametrize("opt", ["adamw", "sf", "muon", "atan2"])
+def test_optimizers_reduce_loss(opt):
+    lr = 2e-3 if opt == "sf" else 1e-2
+    losses, _ = run_steps(M.StepConfig(optimizer=opt), n_steps=8, lr=lr)
+    assert losses[-1] < losses[0]
+
+
+def test_dora_trains():
+    losses, _ = run_steps(M.StepConfig(family="dora"), n_steps=6, lr=5e-3)
+    assert losses[-1] < losses[0]
+
+
+def test_packed_batch_trains():
+    losses, _ = run_steps(M.StepConfig(), n_steps=5, packed=True)
+    assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# Shapes / counting
+# ---------------------------------------------------------------------------
+
+
+def test_param_specs_trainable_first_convention():
+    tspecs, fspecs = M.param_specs(CFG, "lora")
+    assert all(n.endswith(("_a", "_b")) for n, _ in tspecs)
+    assert not any(n.endswith(("_a", "_b")) for n, _ in fspecs)
+
+
+def test_param_count_matches_specs():
+    for fam in ["full", "lora", "dora"]:
+        tspecs, fspecs = M.param_specs(CFG, fam)
+        total = sum(int(np.prod(s)) for _, s in tspecs + fspecs)
+        assert total == CFG.param_count(fam)
+
+
+def test_init_lora_b_zero_a_nonzero():
+    tr, fr = M.init_params(jax.random.PRNGKey(0), CFG, "lora")
+    tspecs, _ = M.param_specs(CFG, "lora")
+    for (name, _), arr in zip(tspecs, tr):
+        if name.endswith("_b"):
+            assert float(jnp.max(jnp.abs(arr))) == 0.0
+        if name.endswith("_a"):
+            assert float(jnp.max(jnp.abs(arr))) > 0.0
+
+
+def test_eval_fn_matches_train_loss():
+    sc = M.StepConfig()
+    eval_fn = jax.jit(M.make_eval_fn(CFG, sc))
+    step_fn, _, _ = M.make_train_step(CFG, sc)
+    jfn = jax.jit(step_fn)
+    tr, fr, s0, s1 = init_state(sc)
+    toks, tgts, seg, pos = make_batch(9)
+    loss_eval, _ = eval_fn(*tr, *fr, toks, tgts, seg, pos)
+    outs = jfn(*tr, *fr, *s0, *s1, toks, tgts, seg, pos, 1.0, 0.0, 0.0)
+    np.testing.assert_allclose(float(loss_eval), float(outs[-3]), rtol=1e-5)

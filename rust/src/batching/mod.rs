@@ -1,0 +1,301 @@
+//! Batch construction: padded (baseline) and BFD-packed (chronicals).
+//!
+//! A batch is four `[B, S]` i32 tensors: tokens, targets (-1 = masked),
+//! segment ids (0 = padding, 1..k = packed sequence index) and position ids
+//! (reset to 0 at each segment start — paper Alg. 17, so RoPE sees
+//! per-sequence positions).
+
+use crate::data::TokenizedExample;
+use crate::packing::{best_fit_decreasing, Packing};
+use crate::runtime::HostTensor;
+
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: HostTensor,
+    pub targets: HostTensor,
+    pub seg_ids: HostTensor,
+    pub pos_ids: HostTensor,
+    /// Non-padding token count (throughput accounting).
+    pub real_tokens: usize,
+    /// Supervised target count.
+    pub real_targets: usize,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Batch {
+    /// Fraction of [B, S] slots holding real tokens.
+    pub fn density(&self) -> f64 {
+        self.real_tokens as f64 / (self.batch * self.seq) as f64
+    }
+}
+
+/// Padded batching (the baseline): one example per row, truncated/padded to
+/// `seq`. Waste = 1 - mean(len)/seq (paper Eq. 85).
+pub fn padded_batches(examples: &[TokenizedExample], batch: usize, seq: usize) -> Vec<Batch> {
+    examples
+        .chunks(batch)
+        .filter(|c| c.len() == batch)
+        .map(|chunk| {
+            let mut b = BatchBuilder::new(batch, seq);
+            for (row, ex) in chunk.iter().enumerate() {
+                b.place(row, 0, ex, 1);
+            }
+            b.finish()
+        })
+        .collect()
+}
+
+/// BFD-packed batching: pack examples into `seq`-capacity bins, then group
+/// `batch` bins per batch. Rows carry multiple segments.
+pub fn packed_batches(examples: &[TokenizedExample], batch: usize, seq: usize) -> Vec<Batch> {
+    let lengths: Vec<usize> = examples.iter().map(|e| e.len()).collect();
+    let packing = best_fit_decreasing(&lengths, seq);
+    packing_to_batches(&packing, examples, batch, seq)
+}
+
+/// Convert an arbitrary packing into batches (used by the packing ablation
+/// to compare BFD/FFD/NF end-to-end).
+pub fn packing_to_batches(
+    packing: &Packing,
+    examples: &[TokenizedExample],
+    batch: usize,
+    seq: usize,
+) -> Vec<Batch> {
+    packing
+        .bins
+        .chunks(batch)
+        .filter(|c| c.len() == batch)
+        .map(|bins| {
+            let mut b = BatchBuilder::new(batch, seq);
+            for (row, bin) in bins.iter().enumerate() {
+                let mut offset = 0;
+                for (seg, &item) in bin.items.iter().enumerate() {
+                    let ex = &examples[item];
+                    b.place(row, offset, ex, (seg + 1) as i32);
+                    offset += ex.len();
+                }
+            }
+            b.finish()
+        })
+        .collect()
+}
+
+/// Token-budget batching (paper Def. 33, §S14.2): group whole sequences so
+/// each batch carries at most `token_budget` real tokens, packing each
+/// group with BFD into `seq`-capacity rows. Rows per batch therefore vary;
+/// the emitted tensors are still [B, S] with B = ceil(budget/seq) so one
+/// executable serves every batch (short groups pad the last rows).
+pub fn token_budget_batches(
+    examples: &[TokenizedExample],
+    token_budget: usize,
+    seq: usize,
+) -> Vec<Batch> {
+    assert!(token_budget >= seq, "budget must cover at least one row");
+    let rows_per_batch = token_budget.div_ceil(seq);
+    // 1) BFD-pack everything into seq-capacity bins (each bin = one row)
+    let lengths: Vec<usize> = examples.iter().map(|e| e.len().min(seq)).collect();
+    let packing = best_fit_decreasing(&lengths, seq);
+    // 2) group bins greedily under the token budget (bins ≤ rows_per_batch
+    //    follows because each bin holds ≤ seq tokens)
+    let mut batches = Vec::new();
+    let mut group: Vec<&crate::packing::Bin> = Vec::new();
+    let mut group_tokens = 0usize;
+    let flush = |group: &mut Vec<&crate::packing::Bin>, group_tokens: &mut usize,
+                     batches: &mut Vec<Batch>| {
+        if group.is_empty() {
+            return;
+        }
+        let mut b = BatchBuilder::new(rows_per_batch, seq);
+        for (row, bin) in group.iter().enumerate() {
+            let mut offset = 0;
+            for (seg, &item) in bin.items.iter().enumerate() {
+                let ex = &examples[item];
+                b.place(row, offset, ex, (seg + 1) as i32);
+                offset += ex.len().min(seq - offset);
+                if offset >= seq {
+                    break;
+                }
+            }
+        }
+        batches.push(b.finish());
+        group.clear();
+        *group_tokens = 0;
+    };
+    for bin in &packing.bins {
+        if (group_tokens + bin.used > token_budget || group.len() == rows_per_batch)
+            && !group.is_empty()
+        {
+            flush(&mut group, &mut group_tokens, &mut batches);
+        }
+        group.push(bin);
+        group_tokens += bin.used;
+    }
+    flush(&mut group, &mut group_tokens, &mut batches);
+    batches
+}
+
+struct BatchBuilder {
+    tokens: Vec<i32>,
+    targets: Vec<i32>,
+    seg_ids: Vec<i32>,
+    pos_ids: Vec<i32>,
+    batch: usize,
+    seq: usize,
+    real_tokens: usize,
+    real_targets: usize,
+}
+
+impl BatchBuilder {
+    fn new(batch: usize, seq: usize) -> Self {
+        BatchBuilder {
+            tokens: vec![0; batch * seq],
+            targets: vec![-1; batch * seq],
+            seg_ids: vec![0; batch * seq],
+            pos_ids: vec![0; batch * seq],
+            batch,
+            seq,
+            real_tokens: 0,
+            real_targets: 0,
+        }
+    }
+
+    fn place(&mut self, row: usize, offset: usize, ex: &TokenizedExample, seg: i32) {
+        let n = ex.len().min(self.seq - offset);
+        let base = row * self.seq + offset;
+        for i in 0..n {
+            self.tokens[base + i] = ex.tokens[i];
+            self.targets[base + i] = ex.targets[i];
+            self.seg_ids[base + i] = seg;
+            self.pos_ids[base + i] = i as i32; // reset per segment (Alg. 17)
+            if ex.targets[i] >= 0 {
+                self.real_targets += 1;
+            }
+        }
+        // a truncated final position must not predict a token we dropped
+        if n < ex.len() && n > 0 {
+            let last = base + n - 1;
+            if self.targets[last] >= 0 {
+                self.targets[last] = -1;
+                self.real_targets -= 1;
+            }
+        }
+        self.real_tokens += n;
+    }
+
+    fn finish(self) -> Batch {
+        let shape = vec![self.batch, self.seq];
+        Batch {
+            tokens: HostTensor::i32(self.tokens, shape.clone()),
+            targets: HostTensor::i32(self.targets, shape.clone()),
+            seg_ids: HostTensor::i32(self.seg_ids, shape.clone()),
+            pos_ids: HostTensor::i32(self.pos_ids, shape),
+            real_tokens: self.real_tokens,
+            real_targets: self.real_targets,
+            batch: self.batch,
+            seq: self.seq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ex(n: usize, base: i32) -> TokenizedExample {
+        let tokens: Vec<i32> = (0..n as i32).map(|i| base + i).collect();
+        let mut targets: Vec<i32> = tokens.iter().skip(1).copied().collect();
+        targets.push(-1);
+        TokenizedExample { tokens, targets }
+    }
+
+    #[test]
+    fn padded_layout() {
+        let exs = vec![ex(3, 10), ex(5, 20)];
+        let batches = padded_batches(&exs, 2, 8);
+        assert_eq!(batches.len(), 1);
+        let b = &batches[0];
+        assert_eq!(b.real_tokens, 8);
+        let toks = b.tokens.as_i32().unwrap();
+        assert_eq!(&toks[0..4], &[10, 11, 12, 0]); // padded after 3
+        let segs = b.seg_ids.as_i32().unwrap();
+        assert_eq!(&segs[0..4], &[1, 1, 1, 0]);
+        assert_eq!(b.density(), 0.5);
+    }
+
+    #[test]
+    fn packed_positions_reset_per_segment() {
+        let exs = vec![ex(4, 10), ex(4, 20)];
+        let batches = packed_batches(&exs, 1, 8);
+        assert_eq!(batches.len(), 1);
+        let b = &batches[0];
+        let pos = b.pos_ids.as_i32().unwrap();
+        assert_eq!(pos, &[0, 1, 2, 3, 0, 1, 2, 3]);
+        let segs = b.seg_ids.as_i32().unwrap();
+        assert_eq!(segs, &[1, 1, 1, 1, 2, 2, 2, 2]);
+        assert_eq!(b.density(), 1.0);
+    }
+
+    #[test]
+    fn packed_density_beats_padded() {
+        let exs: Vec<_> = (0..64).map(|i| ex(8 + (i % 24), 5)).collect();
+        let padded = padded_batches(&exs, 4, 64);
+        let packed = packed_batches(&exs, 4, 64);
+        let pd: f64 = padded.iter().map(|b| b.density()).sum::<f64>() / padded.len() as f64;
+        let kd: f64 = packed.iter().map(|b| b.density()).sum::<f64>() / packed.len() as f64;
+        assert!(kd > pd, "packed {kd} <= padded {pd}");
+        assert!(kd > 0.9);
+    }
+
+    #[test]
+    fn truncation_masks_dangling_target() {
+        let exs = vec![ex(10, 30)];
+        let batches = padded_batches(&exs, 1, 4);
+        let b = &batches[0];
+        let tg = b.targets.as_i32().unwrap();
+        assert_eq!(tg[3], -1); // truncated boundary must be masked
+    }
+
+    #[test]
+    fn incomplete_final_batch_dropped() {
+        let exs = vec![ex(4, 1), ex(4, 2), ex(4, 3)];
+        let batches = padded_batches(&exs, 2, 8);
+        assert_eq!(batches.len(), 1);
+    }
+
+    #[test]
+    fn token_budget_respected() {
+        let exs: Vec<_> = (0..32).map(|i| ex(4 + (i % 5), 10)).collect();
+        let batches = token_budget_batches(&exs, 32, 8);
+        for b in &batches {
+            assert!(b.real_tokens <= 32, "batch carries {}", b.real_tokens);
+            assert_eq!(b.batch, 4); // ceil(32/8)
+            assert_eq!(b.seq, 8);
+        }
+        // all real tokens preserved across batches
+        let total: usize = batches.iter().map(|b| b.real_tokens).sum();
+        let expect: usize = exs.iter().map(|e| e.len()).sum();
+        assert_eq!(total, expect);
+    }
+
+    #[test]
+    fn token_budget_uniform_utilization() {
+        // paper Prop. 23: utilization approaches 1 regardless of length mix
+        let exs: Vec<_> = (0..64).map(|i| ex(2 + (i % 13), 3)).collect();
+        let batches = token_budget_batches(&exs, 64, 16);
+        let non_final = &batches[..batches.len() - 1];
+        for b in non_final {
+            assert!(b.real_tokens >= 48, "under-full budget batch: {}", b.real_tokens);
+        }
+    }
+
+    #[test]
+    fn token_budget_segments_isolated() {
+        let exs = vec![ex(4, 10), ex(4, 50)];
+        let batches = token_budget_batches(&exs, 8, 8);
+        assert_eq!(batches.len(), 1);
+        let segs = batches[0].seg_ids.as_i32().unwrap();
+        // two segments on one row (BFD packs both into the 8-capacity bin)
+        assert_eq!(&segs[0..8], &[1, 1, 1, 1, 2, 2, 2, 2]);
+    }
+}

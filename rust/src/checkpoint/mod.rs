@@ -1,0 +1,221 @@
+//! Checkpointing: binary save/load of parameters with optional block-wise
+//! int8 or FP8-E4M3 compression (paper §S11: optimizer/checkpoint states
+//! tolerate 8-bit storage).
+//!
+//! Format (little-endian):
+//!   magic "CHKP1\0\0\0" | codec u32 | n_tensors u32
+//!   per tensor: ndim u32 | dims u32* | payload
+//!     codec 0 (f32): n*4 bytes raw
+//!     codec 1 (int8): block u32 | n_blocks u32 | scales f32* | data i8*
+//!     codec 2 (fp8-e4m3 sim): stored as f32 grid values after round-trip
+//!       (half the information, full width on disk — a fidelity study, not
+//!       a size win; int8 is the size win)
+
+use crate::quant::{fp8_decode, int8_dequantize, int8_quantize, Fp8Format, Int8Blocks};
+use crate::runtime::HostTensor;
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"CHKP1\0\0\0";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    F32 = 0,
+    Int8 = 1,
+    Fp8E4m3 = 2,
+}
+
+impl Codec {
+    fn from_u32(x: u32) -> Result<Codec> {
+        Ok(match x {
+            0 => Codec::F32,
+            1 => Codec::Int8,
+            2 => Codec::Fp8E4m3,
+            _ => bail!("unknown codec {x}"),
+        })
+    }
+}
+
+const INT8_BLOCK: usize = 128;
+
+pub fn save(path: impl AsRef<Path>, tensors: &[HostTensor], codec: Codec) -> Result<()> {
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(codec as u32).to_le_bytes())?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for t in tensors {
+        let data = t.as_f32().map_err(|_| anyhow!("only f32 tensors checkpoint"))?;
+        let shape = t.shape();
+        w.write_all(&(shape.len() as u32).to_le_bytes())?;
+        for &d in shape {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match codec {
+            Codec::F32 => {
+                for &x in data {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Codec::Int8 => {
+                let q = int8_quantize(data, INT8_BLOCK);
+                w.write_all(&(q.block as u32).to_le_bytes())?;
+                w.write_all(&(q.scales.len() as u32).to_le_bytes())?;
+                for &s in &q.scales {
+                    w.write_all(&s.to_le_bytes())?;
+                }
+                let bytes: Vec<u8> = q.data.iter().map(|&b| b as u8).collect();
+                w.write_all(&bytes)?;
+            }
+            Codec::Fp8E4m3 => {
+                let q = fp8_decode(data, Fp8Format::E4M3);
+                for &x in &q {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<HostTensor>> {
+    let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad checkpoint magic");
+    }
+    let codec = Codec::from_u32(read_u32(&mut r)?)?;
+    let n_tensors = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(n_tensors);
+    for _ in 0..n_tensors {
+        let ndim = read_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut r)? as usize);
+        }
+        let n: usize = shape.iter().product::<usize>().max(1);
+        let data = match codec {
+            Codec::F32 | Codec::Fp8E4m3 => read_f32s(&mut r, n)?,
+            Codec::Int8 => {
+                let block = read_u32(&mut r)? as usize;
+                let n_blocks = read_u32(&mut r)? as usize;
+                let scales = read_f32s(&mut r, n_blocks)?;
+                let mut bytes = vec![0u8; n_blocks * block];
+                r.read_exact(&mut bytes)?;
+                let q = Int8Blocks {
+                    data: bytes.into_iter().map(|b| b as i8).collect(),
+                    scales,
+                    block,
+                    n,
+                };
+                int8_dequantize(&q)
+            }
+        };
+        out.push(HostTensor::f32(data, shape));
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tensors() -> Vec<HostTensor> {
+        let mut rng = Rng::new(10);
+        vec![
+            HostTensor::f32((0..64).map(|_| rng.normal() as f32).collect(), vec![8, 8]),
+            HostTensor::f32((0..10).map(|_| rng.normal() as f32).collect(), vec![10]),
+            HostTensor::scalar_f32(3.25),
+        ]
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("chronicals_ckpt_tests");
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn f32_roundtrip_exact() {
+        let ts = tensors();
+        let p = tmp("f32.ckpt");
+        save(&p, &ts, Codec::F32).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(ts, back);
+    }
+
+    #[test]
+    fn int8_roundtrip_within_bound() {
+        let ts = tensors();
+        let p = tmp("int8.ckpt");
+        save(&p, &ts, Codec::Int8).unwrap();
+        let back = load(&p).unwrap();
+        for (a, b) in ts.iter().zip(&back) {
+            assert_eq!(a.shape(), b.shape());
+            let (xa, xb) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+            let amax = xa.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            for (u, v) in xa.iter().zip(xb) {
+                assert!((u - v).abs() <= amax / 127.0 * 0.5 + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn int8_file_smaller_than_f32() {
+        let mut rng = Rng::new(11);
+        let big = vec![HostTensor::f32(
+            (0..100_000).map(|_| rng.normal() as f32).collect(),
+            vec![100_000],
+        )];
+        let pf = tmp("big_f32.ckpt");
+        let pq = tmp("big_int8.ckpt");
+        save(&pf, &big, Codec::F32).unwrap();
+        save(&pq, &big, Codec::Int8).unwrap();
+        let sf = std::fs::metadata(&pf).unwrap().len();
+        let sq = std::fs::metadata(&pq).unwrap().len();
+        assert!(sf as f64 / sq as f64 > 3.5, "{sf} vs {sq}");
+    }
+
+    #[test]
+    fn fp8_roundtrip_on_grid() {
+        let ts = tensors();
+        let p = tmp("fp8.ckpt");
+        save(&p, &ts, Codec::Fp8E4m3).unwrap();
+        let back = load(&p).unwrap();
+        for (a, b) in ts.iter().zip(&back) {
+            for (u, v) in a.as_f32().unwrap().iter().zip(b.as_f32().unwrap()) {
+                if u.abs() >= 2.0f32.powi(-6) {
+                    // normal range: half-ulp relative bound (3 mantissa bits)
+                    assert!(((u - v) / u).abs() <= 0.0625 + 1e-6, "{u} vs {v}");
+                } else {
+                    // subnormal range: absolute bound of half the quantum
+                    assert!((u - v).abs() <= 2.0f32.powi(-10) + 1e-9, "{u} vs {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corrupted_magic_rejected() {
+        let p = tmp("bad.ckpt");
+        std::fs::write(&p, b"NOTACKPT________").unwrap();
+        assert!(load(&p).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Run configuration: TOML files + presets mirroring the paper's Table 7
+//! hyperparameters and every benchmark row.
+
+use crate::util::toml::TomlDoc;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    /// Train-step executable name (manifest key), e.g. "train_step_chronicals".
+    pub executable: String,
+    /// Matching init executable (empty = derive `init_<variant>`).
+    pub init_executable: String,
+    pub steps: u64,
+    pub warmup_steps: usize,
+    pub seed: u64,
+    /// Use BFD-packed batches (true) or padded batches (false).
+    pub packed: bool,
+    pub lr: f64,
+    /// LoRA+ ratio λ = η_B/η_A; 1.0 disables LoRA+.
+    pub lora_plus_ratio: f64,
+    pub lr_schedule: String, // "constant" | "warmup_cosine"
+    pub lr_warmup_steps: u64,
+    pub corpus_examples: usize,
+    pub max_seq: usize,
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            executable: "train_step_chronicals".into(),
+            init_executable: String::new(),
+            steps: 50,
+            warmup_steps: 3,
+            seed: 42,
+            packed: true,
+            lr: 2e-4,
+            lora_plus_ratio: 1.0,
+            lr_schedule: "constant".into(),
+            lr_warmup_steps: 0,
+            corpus_examples: 2048,
+            max_seq: 1024,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_file(path: impl AsRef<Path>) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<RunConfig> {
+        let doc = TomlDoc::parse(text)?;
+        let d = RunConfig::default();
+        Ok(RunConfig {
+            executable: doc.str_or("train.executable", &d.executable).to_string(),
+            init_executable: doc.str_or("train.init_executable", "").to_string(),
+            steps: doc.i64_or("train.steps", d.steps as i64) as u64,
+            warmup_steps: doc.i64_or("train.warmup_steps", d.warmup_steps as i64) as usize,
+            seed: doc.i64_or("train.seed", d.seed as i64) as u64,
+            packed: doc.bool_or("data.packed", d.packed),
+            lr: doc.f64_or("optim.lr", d.lr),
+            lora_plus_ratio: doc.f64_or("optim.lora_plus_ratio", d.lora_plus_ratio),
+            lr_schedule: doc.str_or("optim.lr_schedule", &d.lr_schedule).to_string(),
+            lr_warmup_steps: doc.i64_or("optim.lr_warmup_steps", 0) as u64,
+            corpus_examples: doc.i64_or("data.corpus_examples", d.corpus_examples as i64)
+                as usize,
+            max_seq: doc.i64_or("data.max_seq", d.max_seq as i64) as usize,
+            artifacts_dir: doc.str_or("artifacts_dir", &d.artifacts_dir).to_string(),
+        })
+    }
+
+    /// Derive the init executable name: explicit, or `init_<variant>` from
+    /// the train executable name.
+    pub fn init_name(&self) -> String {
+        if !self.init_executable.is_empty() {
+            return self.init_executable.clone();
+        }
+        self.executable
+            .strip_prefix("train_step_")
+            .map(|v| format!("init_{v}"))
+            .unwrap_or_else(|| "init_chronicals".into())
+    }
+
+    /// Paper Table 7 presets.
+    pub fn preset(name: &str) -> Option<RunConfig> {
+        let mut c = RunConfig::default();
+        match name {
+            "full_ft" => {
+                c.executable = "train_step_chronicals".into();
+                c.lr = 2e-5 * 10.0; // scaled for the small substrate model
+                c.lora_plus_ratio = 1.0;
+            }
+            "lora" => {
+                c.executable = "train_step_lora".into();
+                c.lr = 1e-4 * 10.0;
+                c.lora_plus_ratio = 1.0;
+            }
+            "lora_plus" => {
+                c.executable = "train_step_lora".into();
+                c.lr = 1e-4 * 10.0;
+                c.lora_plus_ratio = 16.0;
+            }
+            "e2e" => {
+                c.executable = "train_step_e2e".into();
+                c.steps = 300;
+                c.lr = 3e-4;
+                c.lr_schedule = "warmup_cosine".into();
+                c.lr_warmup_steps = 10;
+            }
+            _ => return None,
+        }
+        Some(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_parse_from_empty() {
+        let c = RunConfig::from_toml("").unwrap();
+        assert_eq!(c, RunConfig::default());
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let c = RunConfig::from_toml(
+            r#"
+artifacts_dir = "artifacts"
+[train]
+executable = "train_step_lora"
+steps = 25
+warmup_steps = 2
+seed = 7
+[data]
+packed = false
+corpus_examples = 512
+max_seq = 256
+[optim]
+lr = 1e-3
+lora_plus_ratio = 16.0
+lr_schedule = "warmup_cosine"
+lr_warmup_steps = 5
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.executable, "train_step_lora");
+        assert_eq!(c.steps, 25);
+        assert!(!c.packed);
+        assert_eq!(c.lora_plus_ratio, 16.0);
+        assert_eq!(c.init_name(), "init_lora");
+    }
+
+    #[test]
+    fn presets_exist() {
+        for p in ["full_ft", "lora", "lora_plus", "e2e"] {
+            assert!(RunConfig::preset(p).is_some(), "{p}");
+        }
+        assert!(RunConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn lora_plus_preset_has_ratio_16() {
+        let c = RunConfig::preset("lora_plus").unwrap();
+        assert_eq!(c.lora_plus_ratio, 16.0);
+    }
+}

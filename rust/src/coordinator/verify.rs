@@ -1,0 +1,147 @@
+//! Benchmark verification — the paper's §8 methodology and §4 contribution
+//! ("Discovery of a benchmarking bug in Unsloth").
+//!
+//! A throughput number is only admissible if the run actually trained:
+//! 1. gradient norms are non-zero (the 46k tok/s Unsloth figure had
+//!    grad_norm == 0.0 exactly — Fig. 10),
+//! 2. 100% of the expected parameters are trainable (Unsloth's broken
+//!    config trained 72%),
+//! 3. the loss moves (an unchanged loss means no learning signal).
+
+/// Rolling observation of a training run's health.
+#[derive(Debug, Default)]
+pub struct Verifier {
+    losses: Vec<f32>,
+    grad_norms: Vec<f32>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct VerificationReport {
+    pub steps_observed: usize,
+    pub zero_grad_steps: usize,
+    pub min_grad_norm: f32,
+    pub max_grad_norm: f32,
+    pub loss_changed: bool,
+    pub trainable_fraction: f64,
+    /// The verdict: throughput from this run is a valid training number.
+    pub is_training: bool,
+    pub failures: Vec<String>,
+}
+
+impl VerificationReport {
+    pub fn status(&self) -> &'static str {
+        if self.is_training {
+            "VERIFIED"
+        } else {
+            "BROKEN (not training)"
+        }
+    }
+}
+
+impl Verifier {
+    pub fn observe(&mut self, loss: f32, grad_norm: f32) {
+        self.losses.push(loss);
+        self.grad_norms.push(grad_norm);
+    }
+
+    pub fn report(&self, trainable_params: u64, expected_trainable: u64) -> VerificationReport {
+        let zero_grad_steps = self.grad_norms.iter().filter(|&&g| g == 0.0).count();
+        let min_g = self.grad_norms.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max_g = self.grad_norms.iter().cloned().fold(0.0f32, f32::max);
+        let loss_changed = match (self.losses.first(), self.losses.last()) {
+            (Some(a), Some(b)) if self.losses.len() >= 2 => (a - b).abs() > 1e-7,
+            _ => false,
+        };
+        let trainable_fraction = if expected_trainable == 0 {
+            1.0
+        } else {
+            trainable_params as f64 / expected_trainable as f64
+        };
+
+        let mut failures = Vec::new();
+        if zero_grad_steps > 0 {
+            failures.push(format!(
+                "gradient norm was exactly 0.0 on {zero_grad_steps}/{} steps — model is NOT training (the Unsloth-bug signature)",
+                self.grad_norms.len()
+            ));
+        }
+        if self.losses.len() >= 2 && !loss_changed {
+            failures.push("loss did not move over the run".to_string());
+        }
+        if trainable_fraction < 0.999 {
+            failures.push(format!(
+                "only {:.0}% of expected parameters are trainable",
+                trainable_fraction * 100.0
+            ));
+        }
+        VerificationReport {
+            steps_observed: self.losses.len(),
+            zero_grad_steps,
+            min_grad_norm: if min_g.is_finite() { min_g } else { 0.0 },
+            max_grad_norm: max_g,
+            loss_changed,
+            trainable_fraction,
+            is_training: failures.is_empty() && !self.losses.is_empty(),
+            failures,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_run_verifies() {
+        let mut v = Verifier::default();
+        for i in 0..10 {
+            v.observe(5.0 - i as f32 * 0.1, 0.5);
+        }
+        let r = v.report(100, 100);
+        assert!(r.is_training);
+        assert_eq!(r.status(), "VERIFIED");
+        assert!(r.failures.is_empty());
+    }
+
+    #[test]
+    fn zero_grad_norm_flagged() {
+        // the paper's Fig. 10 left panel: high throughput, grad_norm = 0
+        let mut v = Verifier::default();
+        for _ in 0..10 {
+            v.observe(6.745, 0.0);
+        }
+        let r = v.report(100, 100);
+        assert!(!r.is_training);
+        assert_eq!(r.zero_grad_steps, 10);
+        assert!(r.failures.iter().any(|f| f.contains("NOT training")));
+    }
+
+    #[test]
+    fn partial_trainable_flagged() {
+        // Unsloth's 72%-trainable configuration
+        let mut v = Verifier::default();
+        for i in 0..5 {
+            v.observe(5.0 - i as f32 * 0.1, 0.5);
+        }
+        let r = v.report(72, 100);
+        assert!(!r.is_training);
+        assert!(r.failures.iter().any(|f| f.contains("72%")));
+    }
+
+    #[test]
+    fn constant_loss_flagged() {
+        let mut v = Verifier::default();
+        for _ in 0..5 {
+            v.observe(3.0, 0.4);
+        }
+        let r = v.report(100, 100);
+        assert!(!r.is_training);
+        assert!(r.failures.iter().any(|f| f.contains("loss did not move")));
+    }
+
+    #[test]
+    fn empty_run_not_verified() {
+        let v = Verifier::default();
+        assert!(!v.report(1, 1).is_training);
+    }
+}

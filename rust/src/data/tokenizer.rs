@@ -1,0 +1,133 @@
+//! Word-level tokenizer with a frequency-built vocabulary.
+//!
+//! The paper uses Qwen's 151,936-token BPE vocabulary; the property every
+//! experiment depends on is only *vocab ≫ hidden dim* (the CCE memory
+//! ratio) and deterministic encode/decode, so a frequency-ranked word
+//! vocabulary with an <unk> fallback is the faithful offline substitute.
+//!
+//! Token ids: 0 = <pad>, 1 = <unk>, 2 = <bos>, 3 = <eos>, 4.. = words.
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const UNK: i32 = 1;
+pub const BOS: i32 = 2;
+pub const EOS: i32 = 3;
+const N_SPECIAL: usize = 4;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: HashMap<String, i32>,
+    words: Vec<String>,
+    max_vocab: usize,
+}
+
+impl Tokenizer {
+    /// Build a vocabulary from texts: rank words by frequency (ties broken
+    /// lexicographically for determinism), keep the top `max_vocab - 4`.
+    pub fn from_texts<I: IntoIterator<Item = String>>(texts: I, max_vocab: usize) -> Tokenizer {
+        assert!(max_vocab > N_SPECIAL, "vocab too small");
+        let mut freq: HashMap<String, u64> = HashMap::new();
+        for t in texts {
+            for w in t.split_whitespace() {
+                *freq.entry(w.to_lowercase()).or_default() += 1;
+            }
+        }
+        let mut ranked: Vec<(String, u64)> = freq.into_iter().collect();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        ranked.truncate(max_vocab - N_SPECIAL);
+
+        let mut vocab = HashMap::new();
+        let mut words = vec!["<pad>".into(), "<unk>".into(), "<bos>".into(), "<eos>".into()];
+        for (i, (w, _)) in ranked.into_iter().enumerate() {
+            vocab.insert(w.clone(), (N_SPECIAL + i) as i32);
+            words.push(w);
+        }
+        Tokenizer { vocab, words, max_vocab }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn max_vocab(&self) -> usize {
+        self.max_vocab
+    }
+
+    /// Encode text to ids with BOS/EOS framing.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = vec![BOS];
+        for w in text.split_whitespace() {
+            out.push(
+                self.vocab
+                    .get(&w.to_lowercase())
+                    .copied()
+                    .unwrap_or(UNK),
+            );
+        }
+        out.push(EOS);
+        out
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter_map(|&id| self.words.get(id as usize).map(String::as_str))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::from_texts(
+            ["the cat sat on the mat the cat".to_string()],
+            16,
+        )
+    }
+
+    #[test]
+    fn frequency_ranked_ids() {
+        let t = tok();
+        // "the" (3x) must get the lowest word id
+        let ids = t.encode("the");
+        assert_eq!(ids, vec![BOS, 4, EOS]);
+    }
+
+    #[test]
+    fn unknown_words_map_to_unk() {
+        let t = tok();
+        let ids = t.encode("zebra");
+        assert_eq!(ids, vec![BOS, UNK, EOS]);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = tok();
+        let ids = t.encode("the cat sat");
+        let text = t.decode(&ids);
+        assert_eq!(text, "<bos> the cat sat <eos>");
+    }
+
+    #[test]
+    fn vocab_capped() {
+        let texts = (0..100).map(|i| format!("word{i}"));
+        let t = Tokenizer::from_texts(texts, 10);
+        assert_eq!(t.vocab_size(), 10);
+    }
+
+    #[test]
+    fn case_insensitive() {
+        let t = tok();
+        assert_eq!(t.encode("THE Cat"), t.encode("the cat"));
+    }
+
+    #[test]
+    fn deterministic_ordering_on_ties() {
+        let a = Tokenizer::from_texts(["b a c".to_string()], 10);
+        let b = Tokenizer::from_texts(["c a b".to_string()], 10);
+        assert_eq!(a.encode("a b c"), b.encode("a b c"));
+    }
+}

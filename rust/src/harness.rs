@@ -1,0 +1,252 @@
+//! Shared benchmark harness: the workflows behind `chronicals bench`, the
+//! `benches/` binaries and the examples. Each function regenerates one of
+//! the paper's tables/figures from live measurements (DESIGN.md §5).
+
+use crate::batching::{packed_batches, padded_batches, Batch};
+use crate::config::RunConfig;
+use crate::coordinator::{bench_kernel, Trainer, TrainSummary};
+use crate::data::{tokenize_corpus, CorpusConfig, SyntheticCorpus, Tokenizer, TokenizedExample};
+use crate::optim::LrSchedule;
+use crate::report::{self, Row};
+use crate::runtime::{Runtime, TrainState};
+use anyhow::{anyhow, Result};
+use std::rc::Rc;
+
+/// Build the tokenized corpus once per (seed, size, vocab cap).
+pub fn build_corpus(
+    n_examples: usize,
+    seed: u64,
+    vocab_cap: usize,
+    max_seq: usize,
+) -> (Tokenizer, Vec<TokenizedExample>) {
+    let cfg = CorpusConfig { n_examples, seed, ..Default::default() };
+    let corpus = SyntheticCorpus::generate(&cfg);
+    let tok = Tokenizer::from_texts(
+        corpus.iter().map(|e| format!("{} {}", e.prompt, e.completion)),
+        vocab_cap,
+    );
+    let exs = tokenize_corpus(&corpus, &tok, max_seq);
+    (tok, exs)
+}
+
+/// Make batches for a given executable spec + packing choice.
+pub fn make_batches(
+    rt: &Runtime,
+    exe_name: &str,
+    examples: &[TokenizedExample],
+    packed: bool,
+) -> Result<Vec<Batch>> {
+    let spec = rt.manifest.get(exe_name)?;
+    let (b, s) = (spec.batch, spec.seq);
+    let batches = if packed {
+        packed_batches(examples, b, s)
+    } else {
+        padded_batches(examples, b, s)
+    };
+    if batches.is_empty() {
+        return Err(anyhow!(
+            "no complete batches for {exe_name} (B={b}, S={s}, {} examples)",
+            examples.len()
+        ));
+    }
+    Ok(batches)
+}
+
+/// Run one training configuration end to end, returning the summary row.
+pub fn run_variant(rt: &Rc<Runtime>, cfg: &RunConfig) -> Result<TrainSummary> {
+    let spec = rt.manifest.get(&cfg.executable)?.clone();
+    // vocab cap = the model's vocab so token ids stay in range
+    let vocab = spec.model_config.vocab.max(64);
+    let (_tok, exs) = build_corpus(cfg.corpus_examples, cfg.seed, vocab, cfg.max_seq);
+    let batches = make_batches(rt, &cfg.executable, &exs, cfg.packed)?;
+
+    let schedule = match cfg.lr_schedule.as_str() {
+        "warmup_cosine" => LrSchedule::warmup_cosine(
+            cfg.lr,
+            cfg.lr_warmup_steps,
+            cfg.steps,
+            cfg.lora_plus_ratio,
+        ),
+        _ => LrSchedule::constant(cfg.lr, cfg.lora_plus_ratio),
+    };
+
+    // init state: families without an init executable reuse the family's
+    // canonical init (same param set).
+    let init_name = resolve_init(rt, &cfg.executable, &cfg.init_name())?;
+    let state = TrainState::init(rt, &init_name, cfg.seed as i32)?;
+    let mut trainer = Trainer::new(rt.clone(), &cfg.executable, state, schedule, cfg.warmup_steps)?;
+    trainer.run(&batches, cfg.steps)
+}
+
+/// Find a usable init executable: the requested one, else the canonical
+/// init for the same family and model/batch geometry.
+pub fn resolve_init(rt: &Runtime, train_name: &str, preferred: &str) -> Result<String> {
+    if rt.manifest.get(preferred).is_ok() {
+        return Ok(preferred.to_string());
+    }
+    let train = rt.manifest.get(train_name)?;
+    for e in &rt.manifest.executables {
+        if e.kind == "init"
+            && e.family == train.family
+            && e.n_trainable == train.n_trainable
+            && e.n_frozen == train.n_frozen
+            // same tensor count is not enough — shapes must match too
+            && e.param_count == train.param_count
+        {
+            return Ok(e.name.clone());
+        }
+    }
+    Err(anyhow!("no init executable for {train_name}"))
+}
+
+/// Table 4 ablation ladder: run each rung, return report rows.
+pub fn ablation_ladder(rt: &Rc<Runtime>, steps: u64) -> Result<Vec<Row>> {
+    let rungs: &[(&str, &str, bool)] = &[
+        ("Baseline (eager, padded)", "train_step_ablate_naive", false),
+        ("+ FlashAttention", "train_step_ablate_flash", false),
+        ("+ whole-graph compile", "train_step_ablate_compiled", false),
+        ("+ fused kernels & CCE", "train_step_ablate_liger", false),
+        ("+ sequence packing", "train_step_ablate_liger", true),
+        ("+ fused optimizer", "train_step_chronicals", true),
+    ];
+    let mut rows = Vec::new();
+    for (label, exe, packed) in rungs {
+        let cfg = RunConfig {
+            executable: exe.to_string(),
+            steps,
+            packed: *packed,
+            warmup_steps: 2,
+            ..RunConfig::default()
+        };
+        let s = run_variant(rt, &cfg)?;
+        let spec = rt.manifest.get(exe)?;
+        rows.push(Row::from_summary(label, "full", spec.batch, &s));
+    }
+    Ok(rows)
+}
+
+/// Table 2: full fine-tuning, naive ("Unsloth-correct"-shaped baseline) vs
+/// chronicals, plus the broken "fast mode" row (Fig. 10).
+pub fn full_ft_comparison(rt: &Rc<Runtime>, steps: u64) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for (label, exe, packed) in [
+        ("Baseline (naive, verified)", "train_step_ablate_naive", false),
+        ("Chronicals (verified)", "train_step_chronicals", true),
+    ] {
+        let cfg = RunConfig {
+            executable: exe.to_string(),
+            steps,
+            packed,
+            warmup_steps: 2,
+            ..RunConfig::default()
+        };
+        let s = run_variant(rt, &cfg)?;
+        let spec = rt.manifest.get(exe)?;
+        rows.push(Row::from_summary(label, "full", spec.batch, &s));
+    }
+    Ok(rows)
+}
+
+/// Table 3: LoRA naive vs Chronicals LoRA vs LoRA+ (λ=16) vs broken mode.
+pub fn lora_comparison(rt: &Rc<Runtime>, steps: u64) -> Result<Vec<Row>> {
+    let runs: &[(&str, &str, bool, f64)] = &[
+        ("LoRA naive (Unsloth-shaped)", "train_step_lora_naive", false, 1.0),
+        ("Chronicals LoRA", "train_step_lora", true, 1.0),
+        ("Chronicals LoRA+ (λ=16)", "train_step_lora", true, 16.0),
+        ("'Fast mode' (BROKEN)", "train_step_lora_broken", true, 1.0),
+    ];
+    let mut rows = Vec::new();
+    for (label, exe, packed, ratio) in runs {
+        let cfg = RunConfig {
+            executable: exe.to_string(),
+            steps,
+            packed: *packed,
+            lora_plus_ratio: *ratio,
+            lr: 1e-3,
+            warmup_steps: 2,
+            ..RunConfig::default()
+        };
+        let s = run_variant(rt, &cfg)?;
+        let spec = rt.manifest.get(*exe)?;
+        rows.push(Row::from_summary(label, "lora", spec.batch, &s));
+    }
+    Ok(rows)
+}
+
+/// Table 5: fused-vs-naive kernel pairs.
+pub fn kernel_microbench(rt: &Runtime, reps: usize) -> Result<Vec<(String, f64, f64)>> {
+    let pairs = [
+        ("RMSNorm", "kernel_rmsnorm_fused", "kernel_rmsnorm_naive"),
+        ("SwiGLU", "kernel_swiglu_fused", "kernel_swiglu_naive"),
+        ("QK-RoPE", "kernel_rope_fused", "kernel_rope_naive"),
+        ("Attention", "kernel_attention_flash", "kernel_attention_naive"),
+        ("Cross-Entropy", "kernel_cross_entropy_fused", "kernel_cross_entropy_naive"),
+        ("AdamW", "kernel_adamw_fused", "kernel_adamw_naive"),
+        ("LoRA Linear", "kernel_lora_linear_fused", "kernel_lora_linear_naive"),
+    ];
+    let mut out = Vec::new();
+    for (label, fused, naive) in pairs {
+        let tf = bench_kernel(rt, fused, reps, 2)?;
+        let tn = bench_kernel(rt, naive, reps, 2)?;
+        out.push((label.to_string(), tf, tn));
+    }
+    Ok(out)
+}
+
+/// Fig. 18 packing analysis over the synthetic corpus.
+pub fn packing_report(capacity: usize, n_examples: usize) -> String {
+    use crate::packing::*;
+    let (_tok, exs) = build_corpus(n_examples, 42, 8192, capacity * 2);
+    let lengths: Vec<usize> = exs.iter().map(|e| e.len()).collect();
+    let algos: Vec<(&str, Packing)> = vec![
+        ("No packing (padded)", no_packing(&lengths, capacity)),
+        ("Next-Fit", next_fit(&lengths, capacity)),
+        ("First-Fit Decreasing", first_fit_decreasing(&lengths, capacity)),
+        ("Best-Fit Decreasing", best_fit_decreasing(&lengths, capacity)),
+    ];
+    let lb = Packing::opt_lower_bound(&lengths, capacity);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "## Packing (Fig. 18) — {} sequences, capacity {}, OPT ≥ {}\n",
+        lengths.len(),
+        capacity,
+        lb
+    ));
+    out.push_str(&format!(
+        "| {:<24} | {:>7} | {:>10} | {:>8} |\n|{}|\n",
+        "Algorithm", "Bins", "Efficiency", "vs OPT",
+        "-".repeat(60)
+    ));
+    for (name, p) in &algos {
+        out.push_str(&format!(
+            "| {:<24} | {:>7} | {:>9.1}% | {:>7.3}x |\n",
+            name,
+            p.n_bins(),
+            p.efficiency() * 100.0,
+            p.n_bins() as f64 / lb as f64
+        ));
+    }
+    out
+}
+
+/// Render the full `bench --summary` report.
+pub fn summary_report(rt: &Rc<Runtime>, steps: u64) -> Result<String> {
+    let mut out = String::new();
+    let full = full_ft_comparison(rt, steps)?;
+    out.push_str(&report::throughput_table(
+        "Full fine-tuning (paper Table 2)",
+        &full,
+        "Baseline (naive, verified)",
+    ));
+    out.push('\n');
+    let lora = lora_comparison(rt, steps)?;
+    out.push_str(&report::throughput_table(
+        "LoRA r=32 (paper Table 3)",
+        &lora,
+        "LoRA naive (Unsloth-shaped)",
+    ));
+    out.push('\n');
+    let ladder = ablation_ladder(rt, steps)?;
+    out.push_str(&report::ablation_table(&ladder));
+    Ok(out)
+}

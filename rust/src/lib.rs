@@ -1,0 +1,38 @@
+//! # Chronicals — high-performance LLM fine-tuning, reproduced
+//!
+//! Rust + JAX + Pallas three-layer reproduction of *"Chronicals: A
+//! High-Performance Framework for LLM Fine-Tuning with 3.51x Speedup over
+//! Unsloth"* (Nair, 2026).
+//!
+//! Layering (see `DESIGN.md`):
+//! * **L1** — Pallas kernels (`python/compile/kernels/`), build-time only.
+//! * **L2** — the JAX training graph (`python/compile/model.py`), AOT-lowered
+//!   to HLO text artifacts by `python/compile/aot.py`.
+//! * **L3** — this crate: the training coordinator. It owns the event loop,
+//!   data pipeline (synthetic instruction corpus → tokenize → BFD-pack →
+//!   batch), the PJRT runtime that executes the AOT artifacts, metrics
+//!   (throughput, MFU, memory model), benchmark verification (the paper's
+//!   gradient-norm methodology), checkpointing and the CLI.
+//!
+//! Python never runs on the training path: `make artifacts` is the only
+//! Python invocation; afterwards the `chronicals` binary is self-contained.
+
+pub mod batching;
+pub mod checkpoint;
+pub mod harness;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod manifest;
+pub mod metrics;
+pub mod optim;
+pub mod packing;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+/// Crate version (mirrors `Cargo.toml`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

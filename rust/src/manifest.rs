@@ -1,0 +1,315 @@
+//! The AOT artifact manifest: what `python/compile/aot.py` emitted, in a
+//! form the runtime and trainer can wire up blindly.
+//!
+//! The Rust↔HLO calling convention is positional; the manifest records the
+//! exact ordered input/output layout of every executable so the trainer
+//! never guesses (see `python/compile/aot.py`).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Element type of a tensor input (only what the artifacts use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => Err(anyhow!("unsupported dtype '{other}'")),
+        }
+    }
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// What an input slot is for — drives the trainer's wiring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Trainable parameter (updated by the step, fed back each step).
+    Param,
+    /// Frozen parameter (fed each step, never updated).
+    Frozen,
+    /// Optimizer state slot (updated by the step).
+    Opt,
+    /// Per-step batch tensor (tokens/targets/seg_ids/pos_ids).
+    Batch,
+    /// Per-step scalar (step counter, lr, lr_b, seed).
+    Scalar,
+}
+
+impl Role {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "param" => Role::Param,
+            "frozen" => Role::Frozen,
+            "opt" => Role::Opt,
+            "batch" => Role::Batch,
+            "scalar" => Role::Scalar,
+            other => return Err(anyhow!("unknown role '{other}'")),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub role: Role,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Step-config echo from the Python side (what the variant lowers).
+#[derive(Debug, Clone, Default)]
+pub struct StepConfigEcho {
+    pub attention: String,
+    pub kernels: String,
+    pub loss: String,
+    pub optimizer: String,
+    pub broken: bool,
+    pub lora_rank: usize,
+    pub lora_alpha: usize,
+}
+
+/// Model-config echo (for MFU / memory estimation).
+#[derive(Debug, Clone, Default)]
+pub struct ModelConfigEcho {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecutableSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String, // train | init | eval | kernel
+    pub variant: String,
+    pub family: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub n_trainable: usize,
+    pub n_frozen: usize,
+    pub n_slots: usize,
+    pub param_count: u64,
+    pub trainable_param_count: u64,
+    pub step_config: StepConfigEcho,
+    pub model_config: ModelConfigEcho,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+}
+
+impl ExecutableSpec {
+    /// Number of leading inputs that form the persistent training state
+    /// (params + frozen + opt slots), in order.
+    pub fn n_state_inputs(&self) -> usize {
+        self.n_trainable + self.n_frozen + self.n_slots * self.n_trainable
+    }
+
+    /// Number of leading outputs that refresh the state (new trainable
+    /// params + new opt slots). Frozen params are not re-emitted.
+    pub fn n_state_outputs(&self) -> usize {
+        self.n_trainable + self.n_slots * self.n_trainable
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub profile: String,
+    pub dir: PathBuf,
+    pub executables: Vec<ExecutableSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let profile = j
+            .field("profile")?
+            .as_str()
+            .unwrap_or("unknown")
+            .to_string();
+        let mut executables = Vec::new();
+        for e in j.field("executables")?.as_arr().unwrap_or(&[]) {
+            executables.push(parse_exec(e)?);
+        }
+        Ok(Manifest { profile, dir, executables })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ExecutableSpec> {
+        self.executables
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "executable '{name}' not in manifest (have: {})",
+                    self.executables
+                        .iter()
+                        .map(|e| e.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    pub fn hlo_path(&self, spec: &ExecutableSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+fn parse_exec(e: &Json) -> Result<ExecutableSpec> {
+    let get_usize = |k: &str| e.field(k).ok().and_then(|v| v.as_usize()).unwrap_or(0);
+    let get_str = |k: &str| {
+        e.field(k)
+            .ok()
+            .and_then(|v| v.as_str())
+            .unwrap_or("")
+            .to_string()
+    };
+    let mut inputs = Vec::new();
+    for i in e.field("inputs")?.as_arr().unwrap_or(&[]) {
+        let shape = i
+            .field("shape")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect();
+        inputs.push(TensorSpec {
+            name: i.field("name")?.as_str().unwrap_or("").to_string(),
+            shape,
+            dtype: DType::parse(i.field("dtype")?.as_str().unwrap_or("float32"))?,
+            role: Role::parse(i.field("role")?.as_str().unwrap_or("batch"))?,
+        });
+    }
+    let outputs = e
+        .field("outputs")
+        .ok()
+        .and_then(|v| v.as_arr())
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|v| v.as_str().map(str::to_string))
+        .collect();
+
+    let sc = e.field("step_config").ok();
+    let step_config = sc
+        .map(|s| StepConfigEcho {
+            attention: s.field("attention").ok().and_then(|v| v.as_str()).unwrap_or("").into(),
+            kernels: s.field("kernels").ok().and_then(|v| v.as_str()).unwrap_or("").into(),
+            loss: s.field("loss").ok().and_then(|v| v.as_str()).unwrap_or("").into(),
+            optimizer: s.field("optimizer").ok().and_then(|v| v.as_str()).unwrap_or("").into(),
+            broken: s.field("broken").ok().and_then(|v| v.as_bool()).unwrap_or(false),
+            lora_rank: s.field("lora_rank").ok().and_then(|v| v.as_usize()).unwrap_or(0),
+            lora_alpha: s.field("lora_alpha").ok().and_then(|v| v.as_usize()).unwrap_or(0),
+        })
+        .unwrap_or_default();
+
+    let mc = e.field("model_config").ok();
+    let model_config = mc
+        .map(|m| ModelConfigEcho {
+            vocab: m.field("vocab").ok().and_then(|v| v.as_usize()).unwrap_or(0),
+            d_model: m.field("d_model").ok().and_then(|v| v.as_usize()).unwrap_or(0),
+            n_layers: m.field("n_layers").ok().and_then(|v| v.as_usize()).unwrap_or(0),
+            n_heads: m.field("n_heads").ok().and_then(|v| v.as_usize()).unwrap_or(0),
+            n_kv_heads: m.field("n_kv_heads").ok().and_then(|v| v.as_usize()).unwrap_or(0),
+            d_ff: m.field("d_ff").ok().and_then(|v| v.as_usize()).unwrap_or(0),
+        })
+        .unwrap_or_default();
+
+    Ok(ExecutableSpec {
+        name: get_str("name"),
+        file: get_str("file"),
+        kind: get_str("kind"),
+        variant: get_str("variant"),
+        family: get_str("family"),
+        batch: get_usize("batch"),
+        seq: get_usize("seq"),
+        n_trainable: get_usize("n_trainable"),
+        n_frozen: get_usize("n_frozen"),
+        n_slots: get_usize("n_slots"),
+        param_count: get_usize("param_count") as u64,
+        trainable_param_count: get_usize("trainable_param_count") as u64,
+        step_config,
+        model_config,
+        inputs,
+        outputs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "profile": "test",
+      "executables": [
+        {"name": "train_step_x", "file": "train_step_x.hlo.txt", "kind": "train",
+         "variant": "x", "family": "full", "batch": 2, "seq": 64,
+         "n_trainable": 3, "n_frozen": 0, "n_slots": 2,
+         "param_count": 100, "trainable_param_count": 100,
+         "step_config": {"attention": "flash_scan", "kernels": "jnp",
+                          "loss": "cce_scan", "optimizer": "adamw",
+                          "broken": false, "lora_rank": 32, "lora_alpha": 64},
+         "model_config": {"vocab": 512, "d_model": 64, "n_layers": 2,
+                           "n_heads": 4, "n_kv_heads": 2, "d_ff": 128},
+         "inputs": [
+            {"name": "embed", "shape": [512, 64], "dtype": "float32", "role": "param"},
+            {"name": "tokens", "shape": [2, 64], "dtype": "int32", "role": "batch"},
+            {"name": "lr", "shape": [], "dtype": "float32", "role": "scalar"}
+         ],
+         "outputs": ["param.embed", "loss"]}
+      ]
+    }"#;
+
+    fn sample_manifest() -> Manifest {
+        let dir = std::env::temp_dir().join("chronicals_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let m = sample_manifest();
+        assert_eq!(m.profile, "test");
+        let e = m.get("train_step_x").unwrap();
+        assert_eq!(e.batch, 2);
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[0].role, Role::Param);
+        assert_eq!(e.inputs[1].dtype, DType::I32);
+        assert_eq!(e.inputs[2].shape.len(), 0);
+        assert_eq!(e.inputs[2].elements(), 1);
+        assert_eq!(e.n_state_inputs(), 3 + 0 + 6);
+        assert_eq!(e.n_state_outputs(), 3 + 6);
+    }
+
+    #[test]
+    fn unknown_executable_is_error() {
+        let m = sample_manifest();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert!(DType::parse("float32").is_ok());
+        assert!(DType::parse("bfloat16").is_err());
+    }
+}

@@ -1,0 +1,258 @@
+//! Analytic training-memory model (paper §1 "The Memory Bottleneck in
+//! Concrete Terms", §S8 gradient checkpointing, §S15 memory breakdown).
+//!
+//! The CPU substrate cannot reproduce A100 VRAM numbers, so this model
+//! regenerates the paper's memory tables (Table 10, the 84 GB LLaMA-7B
+//! claim, the 4.97 GB logit tensor) from first principles, and is unit-
+//! tested against every number the paper quotes.
+
+/// Bytes per element by precision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    Bf16,
+}
+
+impl Precision {
+    pub fn bytes(self) -> u64 {
+        match self {
+            Precision::F32 => 4,
+            Precision::Bf16 => 2,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    pub params: u64,
+    pub n_layers: u64,
+    pub d_model: u64,
+    pub n_heads: u64,
+    pub vocab: u64,
+    pub batch: u64,
+    pub seq: u64,
+    pub weight_prec: Precision,
+    pub grad_prec: Precision,
+    /// AdamW stores m and v in f32: 8 bytes/param (paper §2).
+    pub optimizer_bytes_per_param: u64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryBreakdown {
+    pub weights: u64,
+    pub gradients: u64,
+    pub optimizer: u64,
+    pub activations: u64,
+    pub attention_scores: u64,
+    pub logits: u64,
+    pub total: u64,
+}
+
+impl MemoryModel {
+    /// Full breakdown without checkpointing or memory-efficient loss.
+    pub fn naive(&self) -> MemoryBreakdown {
+        let weights = self.params * self.weight_prec.bytes();
+        let gradients = self.params * self.grad_prec.bytes();
+        let optimizer = self.params * self.optimizer_bytes_per_param;
+        let activations = self.activation_bytes(None);
+        let attention_scores = self.attention_score_bytes();
+        let logits = self.logit_bytes();
+        MemoryBreakdown {
+            weights,
+            gradients,
+            optimizer,
+            activations,
+            attention_scores,
+            logits,
+            total: weights + gradients + optimizer + activations + attention_scores + logits,
+        }
+    }
+
+    /// Breakdown with the Chronicals stack: FlashAttention (no score
+    /// matrix), Cut Cross-Entropy (V/C logit reduction) and optional
+    /// gradient checkpointing every k layers.
+    pub fn chronicals(&self, cce_chunk: u64, checkpoint_k: Option<u64>) -> MemoryBreakdown {
+        let weights = self.params * self.weight_prec.bytes();
+        let gradients = self.params * self.grad_prec.bytes();
+        let optimizer = self.params * self.optimizer_bytes_per_param;
+        let activations = self.activation_bytes(checkpoint_k);
+        let attention_scores = 0; // FlashAttention: O(N) carries only
+        let logits = self.logit_bytes() * cce_chunk / self.vocab.max(1);
+        MemoryBreakdown {
+            weights,
+            gradients,
+            optimizer,
+            activations,
+            attention_scores,
+            logits,
+            total: weights + gradients + optimizer + activations + attention_scores + logits,
+        }
+    }
+
+    /// Per-layer hidden-state activations: L·B·N·d·4 bytes (paper Def. 27);
+    /// with checkpointing every k layers: (L/k + k)·B·N·d·4 (paper Thm. 9).
+    pub fn activation_bytes(&self, checkpoint_k: Option<u64>) -> u64 {
+        let row = self.batch * self.seq * self.d_model * 4;
+        match checkpoint_k {
+            None => self.n_layers * row,
+            Some(k) => (self.n_layers / k.max(1) + k) * row,
+        }
+    }
+
+    /// Optimal checkpoint interval k* = sqrt(L) (paper Thm. 9).
+    pub fn optimal_checkpoint_k(&self) -> u64 {
+        (self.n_layers as f64).sqrt().round().max(1.0) as u64
+    }
+
+    /// Full [B, H, N, N] score matrix in f32 (paper Eq. 2/67).
+    pub fn attention_score_bytes(&self) -> u64 {
+        self.batch * self.n_heads * self.seq * self.seq * 4
+    }
+
+    /// Full [B, N, V] logit tensor in f32 (paper Def. 12).
+    pub fn logit_bytes(&self) -> u64 {
+        self.batch * self.seq * self.vocab * 4
+    }
+
+    /// Recompute overhead factor for checkpointing every k layers
+    /// (paper Prop. 15): 1 + 1/k of forward ≈ +fwd/(fwd+bwd)·(1/k).
+    pub fn checkpoint_compute_overhead(&self, k: u64) -> f64 {
+        1.0 + 1.0 / (3.0 * k.max(1) as f64) * (3.0 / 5.0) * 5.0 / 3.0
+    }
+}
+
+pub const GB: u64 = 1 << 30;
+pub const GB_DEC: f64 = 1e9;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper §1: LLaMA-7B full fine-tuning needs 84 GB = 14 + 14 + 56.
+    #[test]
+    fn llama7b_84gb_claim() {
+        let m = MemoryModel {
+            params: 7_000_000_000,
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            vocab: 32_000,
+            batch: 1,
+            seq: 2048,
+            weight_prec: Precision::Bf16,
+            grad_prec: Precision::Bf16,
+            optimizer_bytes_per_param: 8,
+        };
+        let b = m.naive();
+        assert_eq!(b.weights as f64 / GB_DEC, 14.0);
+        assert_eq!(b.gradients as f64 / GB_DEC, 14.0);
+        assert_eq!(b.optimizer as f64 / GB_DEC, 56.0);
+    }
+
+    /// Paper Def. 12: B=8, N=1024, V=151936 → 4.97 GB of logits.
+    #[test]
+    fn qwen_logit_tensor_497gb() {
+        let m = MemoryModel {
+            params: 494_000_000,
+            n_layers: 24,
+            d_model: 896,
+            n_heads: 14,
+            vocab: 151_936,
+            batch: 8,
+            seq: 1024,
+            weight_prec: Precision::Bf16,
+            grad_prec: Precision::Bf16,
+            optimizer_bytes_per_param: 8,
+        };
+        let gb = m.logit_bytes() as f64 / GB_DEC;
+        assert!((gb - 4.97).abs() < 0.03, "{gb}");
+    }
+
+    /// Paper Eq. 2: N=8192, 32 heads → 8.6 GB of attention scores.
+    #[test]
+    fn attention_scores_86gb() {
+        let m = MemoryModel {
+            params: 0,
+            n_layers: 1,
+            d_model: 4096,
+            n_heads: 32,
+            vocab: 1,
+            batch: 1,
+            seq: 8192,
+            weight_prec: Precision::Bf16,
+            grad_prec: Precision::Bf16,
+            optimizer_bytes_per_param: 8,
+        };
+        let gb = m.attention_score_bytes() as f64 / GB_DEC;
+        assert!((gb - 8.59).abs() < 0.05, "{gb}");
+    }
+
+    /// Paper Thm. 3: CCE reduction factor = V/C (37x for Qwen at C=4096).
+    #[test]
+    fn cce_37x_reduction() {
+        let m = MemoryModel {
+            params: 494_000_000,
+            n_layers: 24,
+            d_model: 896,
+            n_heads: 14,
+            vocab: 151_936,
+            batch: 8,
+            seq: 1024,
+            weight_prec: Precision::Bf16,
+            grad_prec: Precision::Bf16,
+            optimizer_bytes_per_param: 8,
+        };
+        let naive = m.naive().logits;
+        let cce = m.chronicals(4096, None).logits;
+        let ratio = naive as f64 / cce as f64;
+        assert!((ratio - 37.0).abs() < 0.2, "{ratio}");
+    }
+
+    /// Paper Thm. 9: optimal k* = sqrt(L); memory at k* = 2·sqrt(L)·BNd.
+    #[test]
+    fn checkpointing_sqrt_l() {
+        let m = MemoryModel {
+            params: 494_000_000,
+            n_layers: 24,
+            d_model: 896,
+            n_heads: 14,
+            vocab: 151_936,
+            batch: 8,
+            seq: 2048,
+            weight_prec: Precision::Bf16,
+            grad_prec: Precision::Bf16,
+            optimizer_bytes_per_param: 8,
+        };
+        let k = m.optimal_checkpoint_k();
+        assert_eq!(k, 5); // sqrt(24) ≈ 4.9
+        let full = m.activation_bytes(None);
+        let ckpt = m.activation_bytes(Some(k));
+        assert!(full as f64 / ckpt as f64 > 2.0);
+    }
+
+    /// Paper §S15 Table 10: optimizer states = 3.96 GB for 494M params.
+    #[test]
+    fn optimizer_state_396gb() {
+        let opt = 494_000_000u64 * 8;
+        assert!((opt as f64 / GB_DEC - 3.95).abs() < 0.05);
+    }
+
+    #[test]
+    fn chronicals_total_below_naive() {
+        let m = MemoryModel {
+            params: 494_000_000,
+            n_layers: 24,
+            d_model: 896,
+            n_heads: 14,
+            vocab: 151_936,
+            batch: 8,
+            seq: 2048,
+            weight_prec: Precision::Bf16,
+            grad_prec: Precision::Bf16,
+            optimizer_bytes_per_param: 8,
+        };
+        let naive = m.naive();
+        let chron = m.chronicals(4096, Some(m.optimal_checkpoint_k()));
+        assert!(chron.total * 2 < naive.total, "{chron:?} vs {naive:?}");
+    }
+}

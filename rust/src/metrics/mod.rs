@@ -1,0 +1,49 @@
+//! Metrics: throughput meters, MFU (paper Eq. 87), and the analytic
+//! memory model (paper §1, §S8, §S15) used for the paper-scale estimates
+//! that the CPU substrate cannot measure directly.
+
+pub mod memory;
+pub mod throughput;
+
+pub use memory::{MemoryBreakdown, MemoryModel, Precision};
+pub use throughput::ThroughputMeter;
+
+/// Model FLOPs Utilization (paper Eq. 87):
+/// `MFU = 6·N·tokens_per_sec / peak_flops`.
+pub fn mfu(param_count: u64, tokens_per_sec: f64, peak_flops: f64) -> f64 {
+    6.0 * param_count as f64 * tokens_per_sec / peak_flops
+}
+
+/// Training FLOPs for one step: 6·N·T (2 fwd + 4 bwd per param per token).
+pub fn step_flops(param_count: u64, tokens: u64) -> f64 {
+    6.0 * param_count as f64 * tokens as f64
+}
+
+/// A100 BF16 peak, the paper's reference device.
+pub const A100_PEAK_FLOPS: f64 = 312e12;
+
+/// Measured-at-runtime effective peak of this host (set per-run); used to
+/// scale the paper's MFU numbers onto the CPU substrate.
+pub fn mfu_paper_scale(param_count: u64, tokens_per_sec: f64) -> f64 {
+    mfu(param_count, tokens_per_sec, A100_PEAK_FLOPS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mfu_matches_paper_numbers() {
+        // paper §8: Chronicals 41,184 tok/s on 500M params => 39.6% MFU
+        let m = mfu(500_000_000, 41_184.0, A100_PEAK_FLOPS);
+        assert!((m - 0.396).abs() < 0.005, "{m}");
+        // Unsloth 11,736 tok/s => 11.3%
+        let u = mfu(500_000_000, 11_736.0, A100_PEAK_FLOPS);
+        assert!((u - 0.113).abs() < 0.005, "{u}");
+    }
+
+    #[test]
+    fn step_flops_formula() {
+        assert_eq!(step_flops(1_000, 10), 60_000.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Throughput metering with warmup exclusion — the paper's benchmark
+//! methodology (§8): warmup steps excluded, tokens/sec over *real*
+//! (non-padding) tokens, mean ± std over repeated windows.
+
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct ThroughputMeter {
+    warmup_steps: usize,
+    steps_seen: usize,
+    window_start: Option<Instant>,
+    tokens: u64,
+    real_tokens: u64,
+    /// per-step durations (seconds) after warmup
+    step_times: Vec<f64>,
+    last_step_start: Option<Instant>,
+}
+
+impl ThroughputMeter {
+    pub fn new(warmup_steps: usize) -> Self {
+        ThroughputMeter {
+            warmup_steps,
+            steps_seen: 0,
+            window_start: None,
+            tokens: 0,
+            real_tokens: 0,
+            step_times: Vec::new(),
+            last_step_start: None,
+        }
+    }
+
+    pub fn step_begin(&mut self) {
+        self.last_step_start = Some(Instant::now());
+    }
+
+    /// Record a finished step. `slot_tokens` = B·S, `real_tokens` excludes
+    /// padding (the honest numerator for packed-vs-padded comparisons).
+    pub fn step_end(&mut self, slot_tokens: u64, real_tokens: u64) {
+        let now = Instant::now();
+        self.steps_seen += 1;
+        if self.steps_seen <= self.warmup_steps {
+            return;
+        }
+        if let Some(t0) = self.last_step_start {
+            self.step_times.push(now.duration_since(t0).as_secs_f64());
+        }
+        if self.window_start.is_none() {
+            self.window_start = Some(now);
+        }
+        self.tokens += slot_tokens;
+        self.real_tokens += real_tokens;
+    }
+
+    pub fn measured_steps(&self) -> usize {
+        self.step_times.len()
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.step_times.iter().sum()
+    }
+
+    /// tokens/sec over real (non-padding) tokens — the headline metric.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let e = self.elapsed();
+        if e <= 0.0 {
+            0.0
+        } else {
+            self.real_tokens as f64 / e
+        }
+    }
+
+    /// tokens/sec counting padded slots too (what a naive bench reports).
+    pub fn slot_tokens_per_sec(&self) -> f64 {
+        let e = self.elapsed();
+        if e <= 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / e
+        }
+    }
+
+    pub fn mean_step_ms(&self) -> f64 {
+        if self.step_times.is_empty() {
+            0.0
+        } else {
+            self.elapsed() / self.step_times.len() as f64 * 1e3
+        }
+    }
+
+    pub fn std_step_ms(&self) -> f64 {
+        let n = self.step_times.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let mean = self.elapsed() / n as f64;
+        let var = self
+            .step_times
+            .iter()
+            .map(|t| (t - mean).powi(2))
+            .sum::<f64>()
+            / (n - 1) as f64;
+        var.sqrt() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_excluded() {
+        let mut m = ThroughputMeter::new(2);
+        for _ in 0..5 {
+            m.step_begin();
+            m.step_end(100, 80);
+        }
+        assert_eq!(m.measured_steps(), 3);
+        // only 3 post-warmup steps counted
+        assert_eq!(m.tokens, 300);
+        assert_eq!(m.real_tokens, 240);
+    }
+
+    #[test]
+    fn real_vs_slot_tokens() {
+        let mut m = ThroughputMeter::new(0);
+        m.step_begin();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        m.step_end(1000, 500);
+        assert!(m.tokens_per_sec() > 0.0);
+        assert!((m.slot_tokens_per_sec() / m.tokens_per_sec() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_steps_safe() {
+        let m = ThroughputMeter::new(0);
+        assert_eq!(m.tokens_per_sec(), 0.0);
+        assert_eq!(m.mean_step_ms(), 0.0);
+        assert_eq!(m.std_step_ms(), 0.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Host-side optimizer policy: learning-rate schedules and LoRA+ grouping.
+//!
+//! The optimizer math itself runs inside the AOT step executable (L2); the
+//! coordinator only decides *which scalars to feed* each step: `lr` for
+//! every parameter group and `lr_b = λ·lr` for LoRA B matrices (paper
+//! Thm. 1: λ ≈ 16). Changing λ therefore needs no recompilation.
+
+/// Warmup + cosine decay (paper Table 7: warmup_ratio 0.03).
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub base_lr: f64,
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+    pub min_lr_frac: f64,
+    /// LoRA+ ratio λ = η_B / η_A (1.0 = plain LoRA, 16.0 = LoRA+).
+    pub lora_plus_ratio: f64,
+}
+
+impl LrSchedule {
+    pub fn constant(lr: f64, lora_plus_ratio: f64) -> Self {
+        LrSchedule {
+            base_lr: lr,
+            warmup_steps: 0,
+            total_steps: u64::MAX,
+            min_lr_frac: 1.0,
+            lora_plus_ratio,
+        }
+    }
+
+    pub fn warmup_cosine(
+        lr: f64,
+        warmup_steps: u64,
+        total_steps: u64,
+        lora_plus_ratio: f64,
+    ) -> Self {
+        LrSchedule {
+            base_lr: lr,
+            warmup_steps,
+            total_steps,
+            min_lr_frac: 0.1,
+            lora_plus_ratio,
+        }
+    }
+
+    /// lr at a 1-based step.
+    pub fn lr(&self, step: u64) -> f64 {
+        if self.warmup_steps > 0 && step <= self.warmup_steps {
+            return self.base_lr * step as f64 / self.warmup_steps as f64;
+        }
+        if self.total_steps == u64::MAX {
+            return self.base_lr;
+        }
+        let t = (step - self.warmup_steps) as f64
+            / (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f64;
+        let t = t.clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+        self.base_lr * (self.min_lr_frac + (1.0 - self.min_lr_frac) * cos)
+    }
+
+    /// The (lr, lr_b) scalar pair fed to the step executable.
+    pub fn lr_pair(&self, step: u64) -> (f32, f32) {
+        let lr = self.lr(step);
+        (lr as f32, (lr * self.lora_plus_ratio) as f32)
+    }
+}
+
+/// LoRA+ parameter-group classification (paper Alg. 11): by our naming
+/// convention, `*_a` are A matrices, `*_b` are B matrices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamGroup {
+    LoraA,
+    LoraB,
+    Other,
+}
+
+pub fn classify_param(name: &str) -> ParamGroup {
+    if name.ends_with("_a") {
+        ParamGroup::LoraA
+    } else if name.ends_with("_b") {
+        ParamGroup::LoraB
+    } else {
+        ParamGroup::Other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::warmup_cosine(1e-3, 10, 100, 16.0);
+        assert!((s.lr(1) - 1e-4).abs() < 1e-12);
+        assert!((s.lr(5) - 5e-4).abs() < 1e-12);
+        assert!((s.lr(10) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_decays_to_min() {
+        let s = LrSchedule::warmup_cosine(1e-3, 0, 100, 16.0);
+        assert!(s.lr(100) < s.lr(50));
+        assert!((s.lr(100) - 1e-4).abs() < 1e-6); // min_lr_frac = 0.1
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(2e-5, 1.0);
+        assert_eq!(s.lr(1), s.lr(10_000));
+    }
+
+    #[test]
+    fn lora_plus_ratio_applied() {
+        let s = LrSchedule::constant(1e-4, 16.0);
+        let (lr, lr_b) = s.lr_pair(5);
+        assert!((lr_b / lr - 16.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn classification() {
+        assert_eq!(classify_param("layer_00.wq_a"), ParamGroup::LoraA);
+        assert_eq!(classify_param("layer_00.wq_b"), ParamGroup::LoraB);
+        assert_eq!(classify_param("embed"), ParamGroup::Other);
+        assert_eq!(classify_param("layer_01.norm1"), ParamGroup::Other);
+    }
+}

@@ -1,0 +1,198 @@
+//! Software FP8: E4M3 / E5M2 encode-decode (paper Def. 22/23, §S16) and the
+//! DeepSeek-V3-style delayed scaler with an amax history window (Alg. 27).
+//!
+//! Hardware FP8 tensor cores are simulated (§Substitutions): the numerics —
+//! range, mantissa grid, SNR, scale-factor dynamics — are exactly the
+//! paper's; only the throughput benefit is out of scope on CPU.
+
+/// FP8 format parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fp8Format {
+    /// 4 exponent bits, 3 mantissa bits, max 448 (paper Def. 22).
+    E4M3,
+    /// 5 exponent bits, 2 mantissa bits, max 57344 (paper Def. 23).
+    E5M2,
+}
+
+impl Fp8Format {
+    pub fn max_val(self) -> f32 {
+        match self {
+            Fp8Format::E4M3 => 448.0,
+            Fp8Format::E5M2 => 57344.0,
+        }
+    }
+    pub fn mant_bits(self) -> i32 {
+        match self {
+            Fp8Format::E4M3 => 3,
+            Fp8Format::E5M2 => 2,
+        }
+    }
+    pub fn min_exp(self) -> i32 {
+        match self {
+            Fp8Format::E4M3 => -6,
+            Fp8Format::E5M2 => -14,
+        }
+    }
+    /// Quantization SNR ≈ 6.02·b + 1.76 dB (paper Thm. 11).
+    pub fn snr_db(self) -> f64 {
+        6.02 * self.mant_bits() as f64 + 1.76
+    }
+}
+
+/// Round one f32 to the nearest representable FP8 value (round-to-nearest,
+/// saturating at ±max).
+pub fn fp8_encode(x: f32, fmt: Fp8Format) -> f32 {
+    if x == 0.0 || x.is_nan() {
+        return if x.is_nan() { f32::NAN } else { 0.0 };
+    }
+    let sign = x.signum();
+    let mag = x.abs().min(fmt.max_val());
+    let exp = mag.log2().floor().max(fmt.min_exp() as f32);
+    let quantum = (exp - fmt.mant_bits() as f32).exp2();
+    let q = (mag / quantum).round() * quantum;
+    sign * q.min(fmt.max_val())
+}
+
+/// Encode a slice (the "dequantized view": values on the FP8 grid).
+pub fn fp8_decode(xs: &[f32], fmt: Fp8Format) -> Vec<f32> {
+    xs.iter().map(|&x| fp8_encode(x, fmt)).collect()
+}
+
+/// Delayed scaling with an amax history window (paper Alg. 27, Prop. 25):
+/// scale = max(history)/fmt.max — never underestimates within the window,
+/// and damps single-outlier oscillation by 1/len.
+#[derive(Debug, Clone)]
+pub struct DelayedScaler {
+    history: Vec<f32>,
+    idx: usize,
+    len: usize,
+    fmt: Fp8Format,
+}
+
+impl DelayedScaler {
+    pub fn new(window: usize, fmt: Fp8Format) -> Self {
+        assert!(window > 0);
+        DelayedScaler { history: vec![0.0; window], idx: 0, len: 0, fmt }
+    }
+
+    /// Record the tensor's amax, return the scale to use *this* step.
+    pub fn update(&mut self, amax: f32) -> f32 {
+        self.history[self.idx] = amax;
+        self.idx = (self.idx + 1) % self.history.len();
+        self.len = (self.len + 1).min(self.history.len());
+        self.scale()
+    }
+
+    pub fn scale(&self) -> f32 {
+        let m = self.history[..self.len.max(1)]
+            .iter()
+            .fold(0.0f32, |a, &b| a.max(b));
+        if m > 0.0 {
+            m / self.fmt.max_val()
+        } else {
+            1.0
+        }
+    }
+
+    /// Quantize a tensor with the current delayed scale.
+    pub fn quantize(&mut self, xs: &[f32]) -> (Vec<f32>, f32) {
+        let amax = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        let scale = self.update(amax);
+        let q = xs.iter().map(|&x| fp8_encode(x / scale, self.fmt)).collect();
+        (q, scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn e4m3_saturates_at_448() {
+        assert_eq!(fp8_encode(500.0, Fp8Format::E4M3), 448.0);
+        assert_eq!(fp8_encode(-1e9, Fp8Format::E4M3), -448.0);
+    }
+
+    #[test]
+    fn e5m2_saturates_at_57344() {
+        assert_eq!(fp8_encode(60000.0, Fp8Format::E5M2), 57344.0);
+    }
+
+    #[test]
+    fn mantissa_grid_e4m3() {
+        // in [1, 2): steps of 1/8
+        assert_eq!(fp8_encode(1.0, Fp8Format::E4M3), 1.0);
+        assert_eq!(fp8_encode(1.0624, Fp8Format::E4M3), 1.0);
+        assert_eq!(fp8_encode(1.07, Fp8Format::E4M3), 1.125);
+    }
+
+    #[test]
+    fn relative_error_bound() {
+        // half-ulp: 2^-(mant_bits+1) for normal values
+        let mut rng = Rng::new(6);
+        for fmt in [Fp8Format::E4M3, Fp8Format::E5M2] {
+            let bound = 0.5f32.powi(fmt.mant_bits() + 1) + 1e-6;
+            for _ in 0..1000 {
+                let x = (rng.normal() as f32).abs().max(0.02) * 10.0;
+                let q = fp8_encode(x, fmt);
+                if x <= fmt.max_val() {
+                    assert!(((q - x) / x).abs() <= bound, "{x} -> {q} ({fmt:?})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn snr_formula() {
+        assert!((Fp8Format::E4M3.snr_db() - 19.82).abs() < 0.01);
+        assert!((Fp8Format::E5M2.snr_db() - 13.8).abs() < 0.01);
+    }
+
+    #[test]
+    fn zero_and_nan() {
+        assert_eq!(fp8_encode(0.0, Fp8Format::E4M3), 0.0);
+        assert!(fp8_encode(f32::NAN, Fp8Format::E4M3).is_nan());
+    }
+
+    #[test]
+    fn delayed_scaler_damps_outliers() {
+        // paper §S16.2: one outlier must not swing the scale back down
+        // after it leaves; max-over-window holds it.
+        let mut s = DelayedScaler::new(32, Fp8Format::E4M3);
+        for _ in 0..10 {
+            s.update(1.0);
+        }
+        let before = s.scale();
+        s.update(100.0); // outlier
+        let spike = s.scale();
+        for _ in 0..5 {
+            s.update(1.0);
+        }
+        let after = s.scale();
+        assert!(spike > before);
+        assert_eq!(after, spike); // still inside the 32-window
+    }
+
+    #[test]
+    fn delayed_scaler_never_underestimates_in_window() {
+        let mut s = DelayedScaler::new(4, Fp8Format::E4M3);
+        s.update(2.0);
+        s.update(8.0);
+        // quantizing values up to the window amax cannot overflow
+        let (q, scale) = s.quantize(&[8.0, -8.0, 1.0]);
+        assert!(scale >= 8.0 / 448.0);
+        for v in q {
+            assert!(v.abs() <= 448.0);
+        }
+    }
+
+    #[test]
+    fn window_expires_old_amax() {
+        let mut s = DelayedScaler::new(2, Fp8Format::E4M3);
+        s.update(100.0);
+        s.update(1.0);
+        s.update(1.0); // 100 has rolled out of the 2-window
+        assert!((s.scale() - 1.0 / 448.0).abs() < 1e-9);
+    }
+}

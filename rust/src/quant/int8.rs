@@ -1,0 +1,117 @@
+//! Block-wise symmetric int8 quantization (paper Def. 9, Alg. 23).
+//!
+//! One f32 scale per `block` values: q = round(x/scale · 127) with
+//! scale = amax/127, giving |err| ≤ amax/(2·127) per element (half ulp of
+//! the paper's Eq. 18 bound). 8-bit optimizer states use exactly this.
+
+/// Quantized blocks: `data.len() == n_blocks * block`, zero-padded.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Int8Blocks {
+    pub data: Vec<i8>,
+    pub scales: Vec<f32>,
+    pub block: usize,
+    pub n: usize, // original element count
+}
+
+pub fn int8_quantize(x: &[f32], block: usize) -> Int8Blocks {
+    assert!(block > 0);
+    let n = x.len();
+    let n_blocks = n.div_ceil(block).max(1);
+    let mut data = vec![0i8; n_blocks * block];
+    let mut scales = vec![1.0f32; n_blocks];
+    for b in 0..n_blocks {
+        let lo = b * block;
+        let hi = ((b + 1) * block).min(n);
+        let amax = x[lo..hi].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+        scales[b] = scale;
+        for i in lo..hi {
+            data[i] = (x[i] / scale).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    Int8Blocks { data, scales, block, n }
+}
+
+pub fn int8_dequantize(q: &Int8Blocks) -> Vec<f32> {
+    let mut out = Vec::with_capacity(q.n);
+    for (i, &v) in q.data.iter().take(q.n).enumerate() {
+        let scale = q.scales[i / q.block];
+        out.push(v as f32 * scale);
+    }
+    out
+}
+
+/// Max absolute round-trip error permitted by the format for this input
+/// (per-block amax/254 — half a quantization step, paper Eq. 18).
+pub fn int8_error_bound(x: &[f32], block: usize) -> f32 {
+    let n_blocks = x.len().div_ceil(block).max(1);
+    let mut worst = 0.0f32;
+    for b in 0..n_blocks {
+        let lo = b * block;
+        let hi = ((b + 1) * block).min(x.len());
+        let amax = x[lo..hi].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        worst = worst.max(amax / 127.0 * 0.5);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_within_bound() {
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+        let q = int8_quantize(&x, 128);
+        let back = int8_dequantize(&q);
+        let bound = int8_error_bound(&x, 128) + 1e-7;
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+        }
+    }
+
+    #[test]
+    fn blockwise_beats_global_on_mixed_scales() {
+        // paper §S11.1: embedding-layer ~1e-3 values next to output-layer
+        // ~1e-1 values destroy a global scale.
+        let mut x = vec![0.001f32; 128];
+        x.extend(vec![0.1f32; 128]);
+        let block = int8_quantize(&x, 128);
+        let global = int8_quantize(&x, 256);
+        let err = |q: &Int8Blocks| {
+            int8_dequantize(q)
+                .iter()
+                .zip(&x)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max)
+        };
+        assert!(err(&block) < err(&global));
+    }
+
+    #[test]
+    fn memory_savings_4x() {
+        // paper Prop. 20: int8 + 1 scale per block ≈ 1/4 the f32 bytes
+        let n = 100_000;
+        let block = 2048;
+        let q_bytes = n + (n / block) * 4;
+        let f_bytes = n * 4;
+        assert!((f_bytes as f64 / q_bytes as f64) > 3.9);
+    }
+
+    #[test]
+    fn zero_block_is_exact() {
+        let x = vec![0.0f32; 64];
+        let q = int8_quantize(&x, 32);
+        assert_eq!(int8_dequantize(&q), x);
+    }
+
+    #[test]
+    fn uneven_tail_block() {
+        let x: Vec<f32> = (0..100).map(|i| i as f32 / 100.0).collect();
+        let q = int8_quantize(&x, 64);
+        assert_eq!(q.scales.len(), 2);
+        assert_eq!(int8_dequantize(&q).len(), 100);
+    }
+}

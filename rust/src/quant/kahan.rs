@@ -1,0 +1,101 @@
+//! Kahan-compensated summation (paper Def. 14, Alg. 28, §S2.4/§S17.2).
+//!
+//! Error O(ε) independent of n, vs O(n·ε) for the naive loop — the paper
+//! uses this for BF16 gradient accumulation; here it guards f32 checkpoint
+//! statistics and is benchmarked in `benches/bench_quant.rs`.
+
+/// Single-pass Kahan sum.
+pub fn kahan_sum(xs: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    let mut c = 0.0f32;
+    for &x in xs {
+        let y = x - c;
+        let t = s + y;
+        c = (t - s) - y;
+        s = t;
+    }
+    s
+}
+
+/// Naive left-to-right sum (the O(n·ε) baseline).
+pub fn naive_sum(xs: &[f32]) -> f32 {
+    xs.iter().sum()
+}
+
+/// Streaming Kahan accumulator for gradient-style accumulation across
+/// micro-batches (one compensation per element, paper Alg. 28).
+#[derive(Debug, Clone)]
+pub struct KahanAccumulator {
+    pub sum: Vec<f32>,
+    comp: Vec<f32>,
+}
+
+impl KahanAccumulator {
+    pub fn new(n: usize) -> Self {
+        KahanAccumulator { sum: vec![0.0; n], comp: vec![0.0; n] }
+    }
+
+    pub fn add(&mut self, xs: &[f32]) {
+        assert_eq!(xs.len(), self.sum.len());
+        for i in 0..xs.len() {
+            let y = xs[i] - self.comp[i];
+            let t = self.sum[i] + y;
+            self.comp[i] = (t - self.sum[i]) - y;
+            self.sum[i] = t;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kahan_beats_naive_on_adversarial_input() {
+        // many tiny values after a large one: naive loses the low bits
+        let mut xs = vec![1e8f32];
+        xs.extend(std::iter::repeat(1.0f32).take(10_000));
+        let exact = 1e8f64 + 10_000.0;
+        let k = kahan_sum(&xs) as f64;
+        let n = naive_sum(&xs) as f64;
+        assert!((k - exact).abs() <= (n - exact).abs());
+        assert!((k - exact).abs() / exact < 1e-7, "kahan err {}", (k - exact).abs());
+    }
+
+    #[test]
+    fn kahan_error_independent_of_n() {
+        let mut rng = Rng::new(8);
+        for n in [1_000usize, 100_000] {
+            let xs: Vec<f32> = (0..n).map(|_| 1.0 + rng.f64() as f32 * 1e-4).collect();
+            let exact: f64 = xs.iter().map(|&x| x as f64).sum();
+            let k = kahan_sum(&xs) as f64;
+            assert!(
+                (k - exact).abs() / exact < 1e-6,
+                "n={n} err={}",
+                (k - exact).abs() / exact
+            );
+        }
+    }
+
+    #[test]
+    fn accumulator_matches_scalar_kahan() {
+        let mut rng = Rng::new(9);
+        let micro: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..64).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut acc = KahanAccumulator::new(64);
+        for m in &micro {
+            acc.add(m);
+        }
+        for i in 0..64 {
+            let col: Vec<f32> = micro.iter().map(|m| m[i]).collect();
+            assert!((acc.sum[i] - kahan_sum(&col)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn empty_sum_is_zero() {
+        assert_eq!(kahan_sum(&[]), 0.0);
+    }
+}

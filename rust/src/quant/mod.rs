@@ -1,0 +1,22 @@
+//! Quantization codecs (paper Def. 9/22/23, §S11/§S16) + Kahan summation
+//! (§S2.4) — the Rust-side implementations used for checkpoint compression
+//! and the error-bound benches. Mirrors `python/compile/kernels/quantize.py`.
+
+pub mod fp8;
+pub mod int8;
+pub mod kahan;
+
+pub use fp8::{fp8_decode, fp8_encode, DelayedScaler, Fp8Format};
+pub use int8::{int8_dequantize, int8_quantize, Int8Blocks};
+pub use kahan::{kahan_sum, naive_sum};
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn module_reexports() {
+        // compile-time check that the public surface exists
+        let _ = super::fp8_encode;
+        let _ = super::int8_quantize;
+        let _ = super::kahan_sum;
+    }
+}

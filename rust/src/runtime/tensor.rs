@@ -1,0 +1,134 @@
+//! Host-side tensors: the tiny bridge type between the data pipeline and
+//! XLA literals. Only f32 and i32 exist in the artifacts.
+
+use anyhow::{anyhow, bail, Result};
+use xla::Literal;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32 { data, shape }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32 { data, shape }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::F32 { data: vec![x], shape: vec![] }
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        HostTensor::I32 { data: vec![x], shape: vec![] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Convert to an XLA literal with the given target shape (must have the
+    /// same element count; scalars use an empty shape).
+    pub fn to_literal(&self, shape: &[usize]) -> Result<Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => {
+                if shape.is_empty() {
+                    return Ok(Literal::scalar(data[0]));
+                }
+                Literal::vec1(data.as_slice())
+            }
+            HostTensor::I32 { data, .. } => {
+                if shape.is_empty() {
+                    return Ok(Literal::scalar(data[0]));
+                }
+                Literal::vec1(data.as_slice())
+            }
+        };
+        lit.reshape(&dims)
+            .map_err(|e| anyhow!("reshape to {shape:?}: {e:?}"))
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 {
+                data: lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+                shape: dims,
+            }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 {
+                data: lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+                shape: dims,
+            }),
+            other => bail!("unsupported element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let lit = t.to_literal(&[2, 2]).unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::i32(vec![7, -3, 0], vec![3]);
+        let lit = t.to_literal(&[3]).unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let t = HostTensor::scalar_f32(2.5);
+        let lit = t.to_literal(&[]).unwrap();
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        let t = HostTensor::scalar_f32(1.0);
+        assert!(t.as_i32().is_err());
+        assert!(t.as_f32().is_ok());
+    }
+}

@@ -1,0 +1,33 @@
+//! Self-contained substrates: JSON, a TOML subset, and a deterministic PRNG.
+//!
+//! The build environment is fully offline with a minimal crate set, so the
+//! serde/toml/rand stack is hand-rolled here (and unit-tested) instead of
+//! pulled from crates.io.
+
+pub mod json;
+pub mod rng;
+pub mod toml;
+
+/// Format a token count like `41,184`.
+pub fn commas(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn commas_formats() {
+        assert_eq!(super::commas(0), "0");
+        assert_eq!(super::commas(999), "999");
+        assert_eq!(super::commas(41184), "41,184");
+        assert_eq!(super::commas(1234567), "1,234,567");
+    }
+}

@@ -1,0 +1,278 @@
+//! End-to-end integration over the real AOT artifacts: runtime loads every
+//! executable, training steps reduce loss, the grad-norm verifier separates
+//! healthy from broken configs, eval matches, checkpoints round-trip.
+//!
+//! Requires `make artifacts`. Tests return early (skip) when the artifacts
+//! directory is missing so `cargo test` stays green on a fresh clone.
+
+use chronicals::batching::packed_batches;
+use chronicals::checkpoint;
+use chronicals::config::RunConfig;
+use chronicals::coordinator::Trainer;
+use chronicals::harness;
+use chronicals::optim::LrSchedule;
+use chronicals::runtime::{HostTensor, Runtime, TrainState};
+use std::rc::Rc;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    Runtime::new("artifacts").ok().map(Rc::new)
+}
+
+#[test]
+fn manifest_lists_all_variants() {
+    let Some(rt) = runtime() else { return };
+    for name in [
+        "train_step_ablate_naive",
+        "train_step_ablate_flash",
+        "train_step_ablate_compiled",
+        "train_step_ablate_liger",
+        "train_step_chronicals",
+        "train_step_lora",
+        "train_step_lora_broken",
+        "train_step_opt_sf",
+        "train_step_opt_muon",
+        "train_step_opt_atan2",
+        "train_step_dora",
+        "train_step_chronicals_pallas",
+        "train_step_e2e",
+        "init_chronicals",
+        "init_lora",
+        "eval_chronicals",
+    ] {
+        assert!(rt.manifest.get(name).is_ok(), "missing {name}");
+    }
+}
+
+#[test]
+fn full_ft_loss_decreases_over_10_steps() {
+    let Some(rt) = runtime() else { return };
+    let cfg = RunConfig {
+        executable: "train_step_chronicals".into(),
+        steps: 10,
+        warmup_steps: 0,
+        lr: 5e-3,
+        packed: true,
+        corpus_examples: 256,
+        ..RunConfig::default()
+    };
+    let s = harness::run_variant(&rt, &cfg).unwrap();
+    assert!(s.last_loss.is_finite());
+    assert!(
+        s.last_loss < s.first_loss,
+        "loss {} -> {}",
+        s.first_loss,
+        s.last_loss
+    );
+    assert!(s.verification.is_training, "{:?}", s.verification.failures);
+}
+
+#[test]
+fn lora_plus_beats_lora_at_equal_steps() {
+    // paper Fig. 17 at integration level
+    let Some(rt) = runtime() else { return };
+    let run = |ratio: f64| {
+        let cfg = RunConfig {
+            executable: "train_step_lora".into(),
+            steps: 12,
+            warmup_steps: 0,
+            lr: 1e-3,
+            lora_plus_ratio: ratio,
+            packed: true,
+            corpus_examples: 256,
+            ..RunConfig::default()
+        };
+        harness::run_variant(&rt, &cfg).unwrap().last_loss
+    };
+    let lora = run(1.0);
+    let lora_plus = run(16.0);
+    assert!(
+        lora_plus < lora,
+        "LoRA+ {lora_plus} should beat LoRA {lora}"
+    );
+}
+
+#[test]
+fn broken_variant_flagged_by_verifier() {
+    let Some(rt) = runtime() else { return };
+    let cfg = RunConfig {
+        executable: "train_step_lora_broken".into(),
+        steps: 5,
+        warmup_steps: 0,
+        packed: true,
+        corpus_examples: 128,
+        ..RunConfig::default()
+    };
+    let s = harness::run_variant(&rt, &cfg).unwrap();
+    assert!(!s.verification.is_training);
+    assert_eq!(s.verification.zero_grad_steps, 5);
+}
+
+#[test]
+fn variant_losses_agree_on_first_step() {
+    // naive / flash / compiled / liger / chronicals are the same math:
+    // identical init + identical batch => near-identical first-step loss.
+    let Some(rt) = runtime() else { return };
+    let mut losses = Vec::new();
+    for exe in [
+        "train_step_ablate_naive",
+        "train_step_ablate_flash",
+        "train_step_ablate_compiled",
+        "train_step_ablate_liger",
+        "train_step_chronicals",
+    ] {
+        let cfg = RunConfig {
+            executable: exe.into(),
+            steps: 1,
+            warmup_steps: 0,
+            packed: false,
+            corpus_examples: 128,
+            seed: 7,
+            ..RunConfig::default()
+        };
+        let s = harness::run_variant(&rt, &cfg).unwrap();
+        losses.push(s.first_loss);
+    }
+    for w in losses.windows(2) {
+        assert!(
+            (w[0] - w[1]).abs() / w[0].abs() < 2e-3,
+            "variant losses diverge: {losses:?}"
+        );
+    }
+}
+
+#[test]
+fn pallas_composition_variant_trains() {
+    // every L1 Pallas kernel composed into one executable
+    let Some(rt) = runtime() else { return };
+    let cfg = RunConfig {
+        executable: "train_step_chronicals_pallas".into(),
+        steps: 3,
+        warmup_steps: 0,
+        lr: 5e-3,
+        packed: true,
+        corpus_examples: 64,
+        ..RunConfig::default()
+    };
+    let s = harness::run_variant(&rt, &cfg).unwrap();
+    assert!(s.last_loss.is_finite());
+    assert!(s.verification.min_grad_norm > 0.0);
+}
+
+#[test]
+fn optimizer_variants_train() {
+    let Some(rt) = runtime() else { return };
+    for exe in [
+        "train_step_opt_sf",
+        "train_step_opt_muon",
+        "train_step_opt_atan2",
+        "train_step_dora",
+    ] {
+        // per-optimizer lr: muon's orthogonalized update has unit scale per
+        // element (×√n), so it needs a far smaller lr than AdamW here
+        let lr = match exe {
+            e if e.ends_with("sf") => 2e-3,
+            e if e.ends_with("muon") => 2e-4,
+            _ => 5e-3,
+        };
+        let cfg = RunConfig {
+            executable: exe.into(),
+            steps: 6,
+            warmup_steps: 0,
+            lr,
+            packed: true,
+            corpus_examples: 128,
+            ..RunConfig::default()
+        };
+        let s = harness::run_variant(&rt, &cfg).unwrap();
+        assert!(s.last_loss.is_finite(), "{exe}");
+        assert!(
+            s.last_loss < s.first_loss,
+            "{exe}: {} -> {}",
+            s.first_loss,
+            s.last_loss
+        );
+    }
+}
+
+#[test]
+fn eval_matches_between_steps() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.get("train_step_chronicals").unwrap().clone();
+    let vocab = spec.model_config.vocab;
+    let (_tok, exs) = harness::build_corpus(128, 3, vocab, 512);
+    let batches = packed_batches(&exs, spec.batch, spec.seq);
+    let init = harness::resolve_init(&rt, "train_step_chronicals", "init_chronicals").unwrap();
+    let state = TrainState::init(&rt, &init, 3).unwrap();
+    let mut trainer = Trainer::new(
+        rt.clone(),
+        "train_step_chronicals",
+        state,
+        LrSchedule::constant(1e-3, 1.0),
+        0,
+    )
+    .unwrap();
+    let eval0 = trainer.eval("eval_chronicals", &batches[0]).unwrap();
+    let rec = trainer.step(&batches[0]).unwrap();
+    // eval (pre-step params) must equal the training loss on the same batch
+    assert!(
+        (eval0 - rec.loss).abs() / rec.loss.abs() < 1e-4,
+        "eval {eval0} vs step loss {}",
+        rec.loss
+    );
+    // after one step, eval on the same batch must improve
+    let eval1 = trainer.eval("eval_chronicals", &batches[0]).unwrap();
+    assert!(eval1 < eval0);
+}
+
+#[test]
+fn checkpoint_roundtrip_from_device_state() {
+    let Some(rt) = runtime() else { return };
+    let init = harness::resolve_init(&rt, "train_step_chronicals", "init_chronicals").unwrap();
+    let state = TrainState::init(&rt, &init, 11).unwrap();
+    let params = state.params_to_host().unwrap();
+    let tensors: Vec<HostTensor> = params
+        .iter()
+        .map(|l| HostTensor::from_literal(l).unwrap())
+        .collect();
+    let path = std::env::temp_dir().join("chronicals_integration.ckpt");
+    checkpoint::save(&path, &tensors, checkpoint::Codec::F32).unwrap();
+    let back = checkpoint::load(&path).unwrap();
+    assert_eq!(tensors.len(), back.len());
+    for (a, b) in tensors.iter().zip(&back) {
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn packed_throughput_beats_padded() {
+    // the Fig. 18 / Table 4 "+packing" effect measured end to end:
+    // same executable, packed batches carry more real tokens per step.
+    let Some(rt) = runtime() else { return };
+    let run = |packed: bool| {
+        let cfg = RunConfig {
+            executable: "train_step_chronicals".into(),
+            steps: 8,
+            warmup_steps: 2,
+            packed,
+            corpus_examples: 512,
+            ..RunConfig::default()
+        };
+        harness::run_variant(&rt, &cfg).unwrap().tokens_per_sec
+    };
+    let padded = run(false);
+    let packed = run(true);
+    assert!(
+        packed > padded,
+        "packed {packed} should beat padded {padded} tok/s"
+    );
+}
+
+#[test]
+fn kernel_microbenches_execute() {
+    let Some(rt) = runtime() else { return };
+    let rows = harness::kernel_microbench(&rt, 3).unwrap();
+    assert_eq!(rows.len(), 7);
+    for (name, fused, naive) in rows {
+        assert!(fused > 0.0 && naive > 0.0, "{name}");
+    }
+}

@@ -1,0 +1,123 @@
+//! Property tests for the packing substrate (hand-rolled generator — the
+//! offline crate set has no proptest): BFD/FFD/NF invariants and the
+//! paper's Thm. 8 bound across randomized instances.
+
+use chronicals::packing::*;
+use chronicals::util::rng::Rng;
+
+/// Randomized instance generator: mixtures of uniform, log-normal and
+/// adversarial near-capacity lengths.
+fn random_instance(rng: &mut Rng, case: usize) -> (Vec<usize>, usize) {
+    let capacity = [64usize, 128, 512, 2048][case % 4];
+    let n = rng.range(1, 400);
+    let lengths: Vec<usize> = (0..n)
+        .map(|_| match case % 3 {
+            0 => rng.range(1, capacity + capacity / 4), // some oversized
+            1 => (rng.lognormal(4.0, 1.0) as usize).clamp(1, capacity),
+            _ => {
+                // adversarial: just over half capacity (pairs can't share)
+                if rng.f64() < 0.5 {
+                    capacity / 2 + rng.range(1, capacity / 4 + 1)
+                } else {
+                    rng.range(1, capacity / 3 + 1)
+                }
+            }
+        })
+        .collect();
+    (lengths, capacity)
+}
+
+#[test]
+fn prop_bfd_invariants_hold() {
+    let mut rng = Rng::new(0xBFD);
+    for case in 0..300 {
+        let (lengths, capacity) = random_instance(&mut rng, case);
+        let p = best_fit_decreasing(&lengths, capacity);
+        validate(&p, &lengths).unwrap_or_else(|e| panic!("case {case}: {e}"));
+    }
+}
+
+#[test]
+fn prop_ffd_and_nf_invariants_hold() {
+    let mut rng = Rng::new(0xFFD);
+    for case in 0..200 {
+        let (lengths, capacity) = random_instance(&mut rng, case);
+        validate(&first_fit_decreasing(&lengths, capacity), &lengths).unwrap();
+        validate(&next_fit(&lengths, capacity), &lengths).unwrap();
+        validate(&no_packing(&lengths, capacity), &lengths).unwrap();
+    }
+}
+
+#[test]
+fn prop_bfd_within_theorem_bound() {
+    // Thm. 8: BFD(I) <= 11/9 * OPT(I) + 6/9, with OPT >= ceil(sum/C).
+    // (The bound vs the lower bound is implied by the bound vs OPT.)
+    let mut rng = Rng::new(0x119);
+    for case in 0..300 {
+        let (lengths, capacity) = random_instance(&mut rng, case);
+        let fit: Vec<usize> = lengths
+            .iter()
+            .copied()
+            .filter(|&l| l <= capacity)
+            .collect();
+        if fit.is_empty() {
+            continue;
+        }
+        let p = best_fit_decreasing(&fit, capacity);
+        // true OPT is NP-hard; use the stronger of the two lower bounds:
+        // capacity bound and the count of items > C/2 (each needs a bin)
+        let lb_cap = Packing::opt_lower_bound(&fit, capacity);
+        let lb_large = fit.iter().filter(|&&l| l * 2 > capacity).count();
+        let lb = lb_cap.max(lb_large);
+        assert!(
+            p.n_bins() as f64 <= 11.0 / 9.0 * lb as f64 + 6.0 / 9.0 + 1e-9
+                // BFD can exceed the *lower bound* by more than the OPT
+                // bound only when the lower bound is loose; allow the
+                // classical absolute slack of 1 bin for tiny instances.
+                || p.n_bins() <= lb + 1,
+            "case {case}: bins={} lb={lb}",
+            p.n_bins()
+        );
+    }
+}
+
+#[test]
+fn prop_bfd_never_worse_than_ffd_plus_margin() {
+    // BFD and FFD have the same worst-case ratio; empirically BFD ≤ FFD+1
+    // on these distributions.
+    let mut rng = Rng::new(0xABCD);
+    for case in 0..200 {
+        let (lengths, capacity) = random_instance(&mut rng, case);
+        let bfd = best_fit_decreasing(&lengths, capacity).n_bins();
+        let ffd = first_fit_decreasing(&lengths, capacity).n_bins();
+        assert!(bfd <= ffd + 1, "case {case}: bfd={bfd} ffd={ffd}");
+    }
+}
+
+#[test]
+fn prop_sorted_descending_within_bins_total_preserved() {
+    let mut rng = Rng::new(0x5157);
+    for case in 0..200 {
+        let (lengths, capacity) = random_instance(&mut rng, case);
+        let p = best_fit_decreasing(&lengths, capacity);
+        let packed_total: usize = p.total_packed();
+        let expect: usize = lengths.iter().filter(|&&l| l <= capacity).sum();
+        assert_eq!(packed_total, expect, "case {case}");
+    }
+}
+
+#[test]
+fn prop_efficiency_monotone_bfd_ge_nf() {
+    let mut rng = Rng::new(0xEFF);
+    for case in 0..200 {
+        let (lengths, capacity) = random_instance(&mut rng, case);
+        let bfd = best_fit_decreasing(&lengths, capacity);
+        let nf = next_fit(&lengths, capacity);
+        assert!(
+            bfd.efficiency() >= nf.efficiency() - 1e-9,
+            "case {case}: bfd={} nf={}",
+            bfd.efficiency(),
+            nf.efficiency()
+        );
+    }
+}

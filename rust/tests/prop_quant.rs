@@ -1,0 +1,115 @@
+//! Property tests for the quantization codecs and Kahan summation:
+//! randomized round-trip error bounds (paper Eq. 18, Def. 22, Prop. 5).
+
+use chronicals::quant::*;
+use chronicals::util::rng::Rng;
+
+fn random_tensor(rng: &mut Rng, case: usize) -> Vec<f32> {
+    let n = rng.range(1, 3000);
+    (0..n)
+        .map(|_| match case % 4 {
+            0 => rng.normal() as f32,
+            1 => (rng.normal() * 1e-3) as f32,
+            2 => (rng.normal() * 100.0) as f32,
+            _ => {
+                // mixed scales inside one tensor (the §S11.1 failure mode)
+                if rng.f64() < 0.5 {
+                    (rng.normal() * 1e-3) as f32
+                } else {
+                    (rng.normal() * 10.0) as f32
+                }
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_int8_roundtrip_bound() {
+    let mut rng = Rng::new(0x18);
+    for case in 0..200 {
+        let x = random_tensor(&mut rng, case);
+        for block in [16usize, 128, 2048] {
+            let q = int8_quantize(&x, block);
+            let back = int8_dequantize(&q);
+            assert_eq!(back.len(), x.len());
+            // per-block bound: amax_block / 127 / 2 (+ float slack)
+            let n_blocks = x.len().div_ceil(block);
+            for b in 0..n_blocks {
+                let lo = b * block;
+                let hi = ((b + 1) * block).min(x.len());
+                let amax = x[lo..hi].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let bound = amax / 127.0 * 0.5 + amax * 1e-6 + 1e-9;
+                for i in lo..hi {
+                    assert!(
+                        (x[i] - back[i]).abs() <= bound,
+                        "case {case} block {block}: {} vs {}",
+                        x[i],
+                        back[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fp8_grid_idempotent() {
+    // encoding an already-encoded value must be exact (grid fixpoint)
+    let mut rng = Rng::new(0xF8);
+    for case in 0..200 {
+        let x = random_tensor(&mut rng, case);
+        for fmt in [Fp8Format::E4M3, Fp8Format::E5M2] {
+            let q1 = fp8_decode(&x, fmt);
+            let q2 = fp8_decode(&q1, fmt);
+            assert_eq!(q1, q2, "case {case} {fmt:?} not idempotent");
+        }
+    }
+}
+
+#[test]
+fn prop_fp8_monotone_and_bounded() {
+    let mut rng = Rng::new(0xF9);
+    for _ in 0..2000 {
+        let a = (rng.normal() * 50.0) as f32;
+        let b = (rng.normal() * 50.0) as f32;
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        let ql = fp8_encode(lo, Fp8Format::E4M3);
+        let qh = fp8_encode(hi, Fp8Format::E4M3);
+        assert!(ql <= qh, "monotonicity broken: {lo}->{ql}, {hi}->{qh}");
+        assert!(ql.abs() <= 448.0 && qh.abs() <= 448.0);
+    }
+}
+
+#[test]
+fn prop_kahan_at_least_as_accurate_as_naive() {
+    let mut rng = Rng::new(0x4A);
+    for case in 0..100 {
+        let mut x = random_tensor(&mut rng, case);
+        // adversarial ordering: biggest first to maximize naive cancellation
+        x.sort_by(|a, b| b.abs().partial_cmp(&a.abs()).unwrap());
+        let exact: f64 = x.iter().map(|&v| v as f64).sum();
+        let k = kahan_sum(&x) as f64;
+        let n = naive_sum(&x) as f64;
+        assert!(
+            (k - exact).abs() <= (n - exact).abs() + exact.abs() * 1e-7 + 1e-6,
+            "case {case}: kahan {} vs naive {} (exact {exact})",
+            k,
+            n
+        );
+    }
+}
+
+#[test]
+fn prop_delayed_scaler_quantize_never_overflows() {
+    let mut rng = Rng::new(0xD5);
+    for _ in 0..50 {
+        let mut s = DelayedScaler::new(32, Fp8Format::E4M3);
+        for _ in 0..40 {
+            let x: Vec<f32> = (0..64).map(|_| (rng.normal() * 30.0) as f32).collect();
+            let (q, _scale) = s.quantize(&x);
+            for v in q {
+                assert!(v.is_finite() && v.abs() <= 448.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Runtime smoke: exploded tuple outputs + init state round trip.
+//! (Requires `make artifacts`; skipped silently when absent.)
+
+#[test]
+fn init_outputs_are_exploded_and_readable() {
+    let rt = match chronicals::runtime::Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(_) => return, // artifacts not built
+    };
+    if rt.manifest.get("init_lora").is_err() {
+        return;
+    }
+    let spec = rt.manifest.get("init_lora").unwrap().clone();
+    let exe = rt.compile("init_lora").unwrap();
+    let outs = rt
+        .execute_literals(&exe, &[xla::Literal::scalar(42i32)], spec.outputs.len())
+        .unwrap();
+    assert_eq!(outs.len(), spec.outputs.len());
+    // every output must be individually readable
+    let lit = outs[0].to_literal().unwrap();
+    assert!(lit.size_bytes() > 0);
+    // LoRA B params must be zero-initialized (paper §5)
+    for (name, out) in spec.outputs.iter().zip(&outs) {
+        if name.ends_with("_b") {
+            let l = out.to_literal().unwrap();
+            let v = l.to_vec::<f32>().unwrap();
+            assert!(v.iter().all(|&x| x == 0.0), "{name} not zero-init");
+        }
+    }
+}
