@@ -1,0 +1,408 @@
+//! Scalar math primitives for the CPU reference backend.
+//!
+//! Every function is a plain sequential loop over `f32` slices: no SIMD, no
+//! threading, no reassociation — so a given (inputs, seed) pair produces
+//! bitwise-identical results on every run, which is the property the
+//! determinism gate in `rust/tests/integration.rs` relies on. The backward
+//! formulas mirror `python/compile/kernels/ref.py` and were validated
+//! against central finite differences (see DESIGN.md §4.1).
+//!
+//! Convention: forward outputs are *assigned*, backward outputs are
+//! *accumulated* (`+=`) into caller-zeroed buffers, so residual branches
+//! combine naturally.
+
+pub const RMS_EPS: f32 = 1e-6;
+pub const ROPE_BASE: f32 = 10000.0;
+
+/// `out[t, n] = Σ_k x[t, k] · w[n, k]` — `y = x @ W.T` with `W: [n_out, k_in]`.
+pub fn linear_fwd(x: &[f32], w: &[f32], t: usize, k_in: usize, n_out: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), t * k_in);
+    debug_assert_eq!(w.len(), n_out * k_in);
+    debug_assert_eq!(out.len(), t * n_out);
+    for ti in 0..t {
+        let xr = &x[ti * k_in..(ti + 1) * k_in];
+        let or = &mut out[ti * n_out..(ti + 1) * n_out];
+        for (n, o) in or.iter_mut().enumerate() {
+            let wr = &w[n * k_in..(n + 1) * k_in];
+            let mut acc = 0.0f32;
+            for k in 0..k_in {
+                acc += xr[k] * wr[k];
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// `dx[t, k] += Σ_n dy[t, n] · w[n, k]` — input gradient of `linear_fwd`.
+pub fn linear_bwd_x(dy: &[f32], w: &[f32], t: usize, k_in: usize, n_out: usize, dx: &mut [f32]) {
+    debug_assert_eq!(dy.len(), t * n_out);
+    debug_assert_eq!(w.len(), n_out * k_in);
+    debug_assert_eq!(dx.len(), t * k_in);
+    for ti in 0..t {
+        let dyr = &dy[ti * n_out..(ti + 1) * n_out];
+        let dxr = &mut dx[ti * k_in..(ti + 1) * k_in];
+        for (n, &dyv) in dyr.iter().enumerate() {
+            if dyv == 0.0 {
+                continue;
+            }
+            let wr = &w[n * k_in..(n + 1) * k_in];
+            for k in 0..k_in {
+                dxr[k] += dyv * wr[k];
+            }
+        }
+    }
+}
+
+/// `dw[n, k] += Σ_t dy[t, n] · x[t, k]` — weight gradient of `linear_fwd`.
+pub fn linear_bwd_w(dy: &[f32], x: &[f32], t: usize, k_in: usize, n_out: usize, dw: &mut [f32]) {
+    debug_assert_eq!(dy.len(), t * n_out);
+    debug_assert_eq!(x.len(), t * k_in);
+    debug_assert_eq!(dw.len(), n_out * k_in);
+    for ti in 0..t {
+        let dyr = &dy[ti * n_out..(ti + 1) * n_out];
+        let xr = &x[ti * k_in..(ti + 1) * k_in];
+        for (n, &dyv) in dyr.iter().enumerate() {
+            if dyv == 0.0 {
+                continue;
+            }
+            let dwr = &mut dw[n * k_in..(n + 1) * k_in];
+            for k in 0..k_in {
+                dwr[k] += dyv * xr[k];
+            }
+        }
+    }
+}
+
+/// RMSNorm forward over rows: `y = x · rstd · γ`, `rstd = 1/√(mean(x²)+ε)`.
+/// Also emits the per-row `rstd` for the backward pass.
+pub fn rmsnorm_fwd(x: &[f32], gamma: &[f32], t: usize, d: usize, y: &mut [f32], rstd: &mut [f32]) {
+    debug_assert_eq!(x.len(), t * d);
+    debug_assert_eq!(gamma.len(), d);
+    for ti in 0..t {
+        let xr = &x[ti * d..(ti + 1) * d];
+        let mut ss = 0.0f32;
+        for &v in xr {
+            ss += v * v;
+        }
+        let r = 1.0 / (ss / d as f32 + RMS_EPS).sqrt();
+        rstd[ti] = r;
+        let yr = &mut y[ti * d..(ti + 1) * d];
+        for i in 0..d {
+            yr[i] = xr[i] * r * gamma[i];
+        }
+    }
+}
+
+/// RMSNorm backward (paper Prop. 3):
+/// `dx_i = rstd·(γ_i·dy_i − x̄_i·mean_j(dy_j γ_j x̄_j))`, `dγ = Σ_rows dy·x̄`.
+#[allow(clippy::too_many_arguments)]
+pub fn rmsnorm_bwd(
+    x: &[f32],
+    gamma: &[f32],
+    rstd: &[f32],
+    dy: &[f32],
+    t: usize,
+    d: usize,
+    dx: &mut [f32],
+    dgamma: &mut [f32],
+) {
+    for ti in 0..t {
+        let xr = &x[ti * d..(ti + 1) * d];
+        let dyr = &dy[ti * d..(ti + 1) * d];
+        let r = rstd[ti];
+        let mut c1 = 0.0f32;
+        for i in 0..d {
+            c1 += dyr[i] * gamma[i] * xr[i] * r;
+        }
+        c1 /= d as f32;
+        let dxr = &mut dx[ti * d..(ti + 1) * d];
+        for i in 0..d {
+            let xbar = xr[i] * r;
+            dxr[i] += r * (gamma[i] * dyr[i] - xbar * c1);
+            dgamma[i] += dyr[i] * xbar;
+        }
+    }
+}
+
+/// Apply RoPE in place (rotate-half convention, paper Alg. 8). `sign = 1.0`
+/// rotates forward; `sign = -1.0` is the exact inverse rotation, i.e. the
+/// backward pass (rotations are orthogonal).
+pub fn rope_apply(x: &mut [f32], pos: &[i32], t: usize, n_heads: usize, hd: usize, sign: f32) {
+    debug_assert_eq!(x.len(), t * n_heads * hd);
+    let half = hd / 2;
+    for ti in 0..t {
+        let p = pos[ti] as f32;
+        for h in 0..n_heads {
+            let base = ti * n_heads * hd + h * hd;
+            for j in 0..half {
+                let inv_freq = ROPE_BASE.powf(-(j as f32) / half as f32);
+                let theta = p * inv_freq;
+                let (c, s) = (theta.cos(), theta.sin() * sign);
+                let x1 = x[base + j];
+                let x2 = x[base + half + j];
+                x[base + j] = x1 * c - x2 * s;
+                x[base + half + j] = x2 * c + x1 * s;
+            }
+        }
+    }
+}
+
+/// SwiGLU forward: `y = SiLU(gate) · up`, elementwise.
+pub fn swiglu_fwd(gate: &[f32], up: &[f32], y: &mut [f32]) {
+    for i in 0..y.len() {
+        let g = gate[i];
+        let sig = 1.0 / (1.0 + (-g).exp());
+        y[i] = g * sig * up[i];
+    }
+}
+
+/// SwiGLU backward (paper Alg. 7), accumulated into `dgate`/`dup`.
+pub fn swiglu_bwd(gate: &[f32], up: &[f32], dy: &[f32], dgate: &mut [f32], dup: &mut [f32]) {
+    for i in 0..dy.len() {
+        let g = gate[i];
+        let sig = 1.0 / (1.0 + (-g).exp());
+        let silu = g * sig;
+        dgate[i] += dy[i] * up[i] * sig * (1.0 + g * (1.0 - sig));
+        dup[i] += dy[i] * silu;
+    }
+}
+
+/// Softmax cross-entropy over `[t, v]` logits with `-1`-masked targets.
+///
+/// Fills `probs` with the row softmax (all rows — the backward needs it) and
+/// returns `(summed loss over valid rows, n_valid)`. The mean reduction is
+/// the caller's job so the `1/n_valid` scaling stays in one place.
+pub fn softmax_xent(
+    logits: &[f32],
+    targets: &[i32],
+    t: usize,
+    v: usize,
+    probs: &mut [f32],
+) -> (f32, usize) {
+    let mut loss_sum = 0.0f32;
+    let mut n_valid = 0usize;
+    for ti in 0..t {
+        let zr = &logits[ti * v..(ti + 1) * v];
+        let mut m = f32::NEG_INFINITY;
+        for &z in zr {
+            m = m.max(z);
+        }
+        let mut denom = 0.0f32;
+        let pr = &mut probs[ti * v..(ti + 1) * v];
+        for i in 0..v {
+            let e = (zr[i] - m).exp();
+            pr[i] = e;
+            denom += e;
+        }
+        for p in pr.iter_mut() {
+            *p /= denom;
+        }
+        let tgt = targets[ti];
+        if tgt >= 0 {
+            n_valid += 1;
+            let lse = denom.ln() + m;
+            loss_sum += lse - zr[tgt as usize];
+        }
+    }
+    (loss_sum, n_valid)
+}
+
+/// One AdamW step (paper Def. 8): `β1=0.9, β2=0.999, ε=1e-8`, decoupled
+/// weight decay. `step` is 1-based (bias correction).
+#[allow(clippy::too_many_arguments)]
+pub fn adamw_update(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lr: f32,
+    step: f32,
+    weight_decay: f32,
+) {
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    let bc1 = 1.0 - B1.powf(step);
+    let bc2 = 1.0 - B2.powf(step);
+    for i in 0..p.len() {
+        m[i] = B1 * m[i] + (1.0 - B1) * g[i];
+        v[i] = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
+        let m_hat = m[i] / bc1;
+        let v_hat = v[i] / bc2;
+        p[i] = p[i] * (1.0 - lr * weight_decay) - lr * m_hat / (v_hat.sqrt() + EPS);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f32, b: f32, tol: f32) {
+        assert!((a - b).abs() <= tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn linear_fwd_matches_hand_matmul() {
+        // x = [[1, 2], [3, 4]], W = [[1, 0], [0, 1], [1, 1]] -> y = x @ W.T
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let w = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let mut y = [0.0f32; 6];
+        linear_fwd(&x, &w, 2, 2, 3, &mut y);
+        assert_eq!(y, [1.0, 2.0, 3.0, 3.0, 4.0, 7.0]);
+    }
+
+    #[test]
+    fn linear_bwd_shapes_and_values() {
+        // numerical check of d(sum y)/dx and /dw: dy = ones
+        let x = [0.5, -1.0, 2.0, 0.25];
+        let w = [0.3, 0.7, -0.2, 0.4, 0.1, -0.6];
+        let dy = [1.0f32; 6];
+        let mut dx = [0.0f32; 4];
+        let mut dw = [0.0f32; 6];
+        linear_bwd_x(&dy, &w, 2, 2, 3, &mut dx);
+        linear_bwd_w(&dy, &x, 2, 2, 3, &mut dw);
+        // dx[t,k] = sum_n w[n,k]; column sums of W = (0.2, 0.5)
+        assert_close(dx[0], 0.2, 1e-6);
+        assert_close(dx[1], 0.5, 1e-6);
+        // dw[n,k] = sum_t x[t,k]; column sums of x = (2.5, -0.75)
+        assert_close(dw[0], 2.5, 1e-6);
+        assert_close(dw[1], -0.75, 1e-6);
+        assert_close(dw[4], 2.5, 1e-6);
+    }
+
+    #[test]
+    fn rmsnorm_unit_gamma_normalizes() {
+        let x = [3.0, 4.0]; // rms = sqrt(12.5)
+        let gamma = [1.0, 1.0];
+        let mut y = [0.0f32; 2];
+        let mut rstd = [0.0f32; 1];
+        rmsnorm_fwd(&x, &gamma, 1, 2, &mut y, &mut rstd);
+        let rms = (12.5f32 + RMS_EPS).sqrt();
+        assert_close(y[0], 3.0 / rms, 1e-6);
+        assert_close(y[1], 4.0 / rms, 1e-6);
+    }
+
+    #[test]
+    fn rmsnorm_bwd_matches_finite_difference() {
+        let x = [0.5, -1.2, 0.8];
+        let gamma = [1.1, 0.9, 1.3];
+        let dy = [0.7, -0.3, 0.2];
+        let mut y = [0.0f32; 3];
+        let mut rstd = [0.0f32; 1];
+        rmsnorm_fwd(&x, &gamma, 1, 3, &mut y, &mut rstd);
+        let mut dx = [0.0f32; 3];
+        let mut dg = [0.0f32; 3];
+        rmsnorm_bwd(&x, &gamma, &rstd, &dy, 1, 3, &mut dx, &mut dg);
+        // L = dy . y; perturb x[i] and compare
+        let eps = 1e-3f32;
+        for i in 0..3 {
+            let mut xp = x;
+            xp[i] += eps;
+            let mut yp = [0.0f32; 3];
+            let mut rp = [0.0f32; 1];
+            rmsnorm_fwd(&xp, &gamma, 1, 3, &mut yp, &mut rp);
+            let mut xm = x;
+            xm[i] -= eps;
+            let mut ym = [0.0f32; 3];
+            rmsnorm_fwd(&xm, &gamma, 1, 3, &mut ym, &mut rp);
+            let lp: f32 = (0..3).map(|j| dy[j] * yp[j]).sum();
+            let lm: f32 = (0..3).map(|j| dy[j] * ym[j]).sum();
+            assert_close(dx[i], (lp - lm) / (2.0 * eps), 2e-3);
+        }
+    }
+
+    #[test]
+    fn rope_roundtrips() {
+        let orig: Vec<f32> = (0..8).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let mut x = orig.clone();
+        let pos = [5i32, 11];
+        rope_apply(&mut x, &pos, 2, 1, 4, 1.0);
+        assert!(x.iter().zip(&orig).any(|(a, b)| (a - b).abs() > 1e-4));
+        rope_apply(&mut x, &pos, 2, 1, 4, -1.0);
+        for (a, b) in x.iter().zip(&orig) {
+            assert_close(*a, *b, 1e-5);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut x = vec![0.9f32, -0.4, 1.7, 0.2];
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        rope_apply(&mut x, &[7], 1, 1, 4, 1.0);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert_close(n0, n1, 1e-5);
+    }
+
+    #[test]
+    fn rope_position_zero_is_identity() {
+        let orig = vec![0.3f32, 1.4, -0.8, 0.05];
+        let mut x = orig.clone();
+        rope_apply(&mut x, &[0], 1, 1, 4, 1.0);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn swiglu_bwd_matches_finite_difference() {
+        let gate = [0.4f32, -1.1];
+        let up = [1.5f32, 0.3];
+        let dy = [1.0f32, 1.0];
+        let mut dgate = [0.0f32; 2];
+        let mut dup = [0.0f32; 2];
+        swiglu_bwd(&gate, &up, &dy, &mut dgate, &mut dup);
+        let eps = 1e-3f32;
+        for i in 0..2 {
+            let (mut gp, mut gm) = (gate, gate);
+            gp[i] += eps;
+            gm[i] -= eps;
+            let (mut yp, mut ym) = ([0.0f32; 2], [0.0f32; 2]);
+            swiglu_fwd(&gp, &up, &mut yp);
+            swiglu_fwd(&gm, &up, &mut ym);
+            assert_close(dgate[i], (yp[i] - ym[i]) / (2.0 * eps), 2e-3);
+        }
+    }
+
+    #[test]
+    fn xent_uniform_logits_is_log_v() {
+        let logits = [0.0f32; 8]; // 2 rows x 4 vocab
+        let targets = [2i32, -1];
+        let mut probs = [0.0f32; 8];
+        let (loss, n) = softmax_xent(&logits, &targets, 2, 4, &mut probs);
+        assert_eq!(n, 1);
+        assert_close(loss, (4.0f32).ln(), 1e-6);
+        for &p in &probs[..4] {
+            assert_close(p, 0.25, 1e-6);
+        }
+    }
+
+    #[test]
+    fn xent_all_masked_is_zero() {
+        let logits = [1.0f32, 2.0, 3.0, 4.0];
+        let targets = [-1i32];
+        let mut probs = [0.0f32; 4];
+        let (loss, n) = softmax_xent(&logits, &targets, 1, 4, &mut probs);
+        assert_eq!(n, 0);
+        assert_eq!(loss, 0.0);
+    }
+
+    #[test]
+    fn adamw_first_step_is_signed_lr() {
+        // with zero slots, step 1: m_hat = g, v_hat = g^2 => update ≈ lr·sign(g)
+        let mut p = [1.0f32, 1.0];
+        let g = [0.5f32, -0.25];
+        let mut m = [0.0f32; 2];
+        let mut v = [0.0f32; 2];
+        adamw_update(&mut p, &g, &mut m, &mut v, 0.01, 1.0, 0.0);
+        assert_close(p[0], 1.0 - 0.01, 1e-4);
+        assert_close(p[1], 1.0 + 0.01, 1e-4);
+    }
+
+    #[test]
+    fn adamw_weight_decay_shrinks_params() {
+        let mut p = [2.0f32];
+        let g = [0.0f32];
+        let mut m = [0.0f32];
+        let mut v = [0.0f32];
+        adamw_update(&mut p, &g, &mut m, &mut v, 0.1, 1.0, 0.01);
+        assert_close(p[0], 2.0 * (1.0 - 0.1 * 0.01), 1e-6);
+    }
+}

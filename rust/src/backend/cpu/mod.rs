@@ -1,0 +1,449 @@
+//! The pure-Rust CPU reference backend (DESIGN.md §4.1).
+//!
+//! Always available, dependency-free, and bitwise deterministic: this is
+//! the backend `cargo test` and CI drive end to end. It synthesizes its own
+//! manifest (no `artifacts/` directory) describing a tiny-transformer
+//! substrate whose train step mirrors the reference semantics in
+//! `python/compile/kernels/ref.py`, and registers the same executable
+//! names the PJRT artifact set uses, so every harness workflow —
+//! `run_variant`, the ablation ladder, the Unsloth-bug verify demo — runs
+//! unchanged against it.
+
+pub mod math;
+pub mod model;
+
+pub use model::{CpuState, LoraCfg, ModelDims};
+
+use super::{Backend, DeviceBatch, DeviceState, StepOutputs};
+use crate::batching::Batch;
+use crate::manifest::{
+    DType, ExecutableSpec, Manifest, ModelConfigEcho, Role, StepConfigEcho, TensorSpec,
+};
+use crate::runtime::HostTensor;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// Reference batch geometry: small enough that a full train step is
+/// sub-millisecond, large enough that BFD packing has real work to do.
+pub const REF_BATCH: usize = 4;
+pub const REF_SEQ: usize = 64;
+/// LoRA adapter geometry for the reference `lora` family.
+pub const REF_LORA_RANK: usize = 4;
+pub const REF_LORA_ALPHA: usize = 8;
+
+/// The reference substrate model (vocab ≫ is not needed here; the CCE
+/// memory experiments live on the PJRT side).
+fn reference_dims() -> ModelDims {
+    ModelDims { vocab: 64, d_model: 32, n_layers: 2, n_heads: 4, n_kv_heads: 2, d_ff: 64 }
+}
+
+pub struct CpuBackend {
+    manifest: Manifest,
+}
+
+impl Default for CpuBackend {
+    fn default() -> Self {
+        CpuBackend::new()
+    }
+}
+
+/// One registered executable family member.
+struct VariantDef {
+    name: &'static str,
+    kind: &'static str, // train | init | eval
+    family: &'static str,
+    kernels: &'static str,
+    broken: bool,
+}
+
+const VARIANTS: &[VariantDef] = &[
+    // full fine-tuning family: the ablation ladder rungs are semantic
+    // aliases on this backend (the reference math is already "fused").
+    VariantDef { name: "init_chronicals", kind: "init", family: "full", kernels: "reference", broken: false },
+    VariantDef { name: "eval_chronicals", kind: "eval", family: "full", kernels: "reference", broken: false },
+    VariantDef { name: "train_step_chronicals", kind: "train", family: "full", kernels: "reference", broken: false },
+    VariantDef { name: "train_step_ablate_naive", kind: "train", family: "full", kernels: "reference_naive", broken: false },
+    VariantDef { name: "train_step_ablate_flash", kind: "train", family: "full", kernels: "reference_flash", broken: false },
+    VariantDef { name: "train_step_ablate_compiled", kind: "train", family: "full", kernels: "reference_compiled", broken: false },
+    VariantDef { name: "train_step_ablate_liger", kind: "train", family: "full", kernels: "reference_liger", broken: false },
+    // LoRA family, including the intentionally-broken zero-gradient config
+    // (the paper's §8 "fast mode" failure).
+    VariantDef { name: "init_lora", kind: "init", family: "lora", kernels: "reference", broken: false },
+    VariantDef { name: "eval_lora", kind: "eval", family: "lora", kernels: "reference", broken: false },
+    VariantDef { name: "train_step_lora", kind: "train", family: "lora", kernels: "reference", broken: false },
+    VariantDef { name: "train_step_lora_naive", kind: "train", family: "lora", kernels: "reference_naive", broken: false },
+    VariantDef { name: "train_step_lora_broken", kind: "train", family: "lora", kernels: "reference", broken: true },
+];
+
+fn lora_cfg() -> LoraCfg {
+    LoraCfg { rank: REF_LORA_RANK, alpha: REF_LORA_ALPHA as f32 }
+}
+
+fn family_lora(family: &str) -> Option<LoraCfg> {
+    if family == "lora" {
+        Some(lora_cfg())
+    } else {
+        None
+    }
+}
+
+impl CpuBackend {
+    pub fn new() -> CpuBackend {
+        CpuBackend { manifest: synth_manifest(reference_dims(), REF_BATCH, REF_SEQ) }
+    }
+
+    /// A backend with custom batch geometry (tests exercising other B/S).
+    pub fn with_geometry(batch: usize, seq: usize) -> CpuBackend {
+        CpuBackend { manifest: synth_manifest(reference_dims(), batch, seq) }
+    }
+
+    fn spec(&self, name: &str) -> Result<&ExecutableSpec> {
+        self.manifest.get(name)
+    }
+}
+
+/// Build the synthesized manifest for the reference substrate.
+fn synth_manifest(dims: ModelDims, batch: usize, seq: usize) -> Manifest {
+    let executables = VARIANTS
+        .iter()
+        .map(|v| {
+            let lora = family_lora(v.family);
+            let (layout, n_trainable) = model::param_layout(&dims, lora.as_ref());
+            let param_count: u64 = layout
+                .iter()
+                .map(|(_, s)| s.iter().product::<usize>() as u64)
+                .sum();
+            let trainable_param_count: u64 = layout[..n_trainable]
+                .iter()
+                .map(|(_, s)| s.iter().product::<usize>() as u64)
+                .sum();
+            let variant = v
+                .name
+                .strip_prefix("train_step_")
+                .or_else(|| v.name.strip_prefix("init_"))
+                .or_else(|| v.name.strip_prefix("eval_"))
+                .unwrap_or(v.name);
+            let mut inputs = Vec::new();
+            for batch_name in ["tokens", "targets", "seg_ids", "pos_ids"] {
+                inputs.push(TensorSpec {
+                    name: batch_name.into(),
+                    shape: vec![batch, seq],
+                    dtype: DType::I32,
+                    role: Role::Batch,
+                });
+            }
+            for scalar in ["step", "lr", "lr_b"] {
+                inputs.push(TensorSpec {
+                    name: scalar.into(),
+                    shape: vec![],
+                    dtype: DType::F32,
+                    role: Role::Scalar,
+                });
+            }
+            ExecutableSpec {
+                name: v.name.into(),
+                file: String::new(), // nothing on disk: the step is native code
+                kind: v.kind.into(),
+                variant: variant.into(),
+                family: v.family.into(),
+                batch,
+                seq,
+                n_trainable,
+                n_frozen: layout.len() - n_trainable,
+                n_slots: 2, // AdamW m, v
+                param_count,
+                trainable_param_count,
+                step_config: StepConfigEcho {
+                    attention: "segment_masked_causal".into(),
+                    kernels: v.kernels.into(),
+                    loss: "masked_cross_entropy".into(),
+                    optimizer: "adamw".into(),
+                    broken: v.broken,
+                    lora_rank: lora.map(|l| l.rank).unwrap_or(0),
+                    lora_alpha: lora.map(|l| l.alpha as usize).unwrap_or(0),
+                },
+                model_config: ModelConfigEcho {
+                    vocab: dims.vocab,
+                    d_model: dims.d_model,
+                    n_layers: dims.n_layers,
+                    n_heads: dims.n_heads,
+                    n_kv_heads: dims.n_kv_heads,
+                    d_ff: dims.d_ff,
+                },
+                inputs,
+                outputs: vec!["loss".into(), "grad_norm".into(), "n_tokens".into()],
+            }
+        })
+        .collect();
+    Manifest { profile: "cpu-reference".into(), dir: PathBuf::new(), executables }
+}
+
+fn as_cpu_state(state: &DeviceState) -> Result<&CpuState> {
+    match state {
+        DeviceState::Cpu(s) => Ok(s),
+        #[cfg(feature = "pjrt")]
+        _ => bail!("state was created by a different backend than 'cpu'"),
+    }
+}
+
+fn as_cpu_state_mut(state: &mut DeviceState) -> Result<&mut CpuState> {
+    match state {
+        DeviceState::Cpu(s) => Ok(s),
+        #[cfg(feature = "pjrt")]
+        _ => bail!("state was created by a different backend than 'cpu'"),
+    }
+}
+
+/// The reference step is shape-polymorphic, but the PJRT executables are
+/// not; enforce the manifest geometry on both backends so behavior never
+/// diverges by backend.
+fn check_geometry(spec: &ExecutableSpec, b: &Batch) -> Result<()> {
+    if b.batch != spec.batch || b.seq != spec.seq {
+        bail!(
+            "batch geometry [{}, {}] does not match executable '{}' [{}, {}]",
+            b.batch,
+            b.seq,
+            spec.name,
+            spec.batch,
+            spec.seq
+        );
+    }
+    Ok(())
+}
+
+fn batch_view(b: &Batch) -> Result<model::BatchView<'_>> {
+    Ok(model::BatchView {
+        tokens: b.tokens.as_i32()?,
+        targets: b.targets.as_i32()?,
+        seg: b.seg_ids.as_i32()?,
+        pos: b.pos_ids.as_i32()?,
+        bsz: b.batch,
+        seq: b.seq,
+    })
+}
+
+impl Backend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn init_state(&self, init_name: &str, seed: i32) -> Result<DeviceState> {
+        let spec = self.spec(init_name)?;
+        if spec.kind != "init" {
+            bail!("'{init_name}' is not an init executable (kind = {})", spec.kind);
+        }
+        let dims = ModelDims {
+            vocab: spec.model_config.vocab,
+            d_model: spec.model_config.d_model,
+            n_layers: spec.model_config.n_layers,
+            n_heads: spec.model_config.n_heads,
+            n_kv_heads: spec.model_config.n_kv_heads,
+            d_ff: spec.model_config.d_ff,
+        };
+        let lora = family_lora(&spec.family);
+        Ok(DeviceState::Cpu(model::init_state(dims, lora, seed)))
+    }
+
+    fn upload_batch(&self, train_name: &str, batch: &Batch) -> Result<DeviceBatch> {
+        // "upload" on the host backend is a defensive copy; validate dtype
+        // and geometry now so errors point at the right call site — and so
+        // CPU is exactly as strict as PJRT's compiled shapes.
+        let spec = self.spec(train_name)?;
+        check_geometry(spec, batch)?;
+        batch_view(batch)?;
+        Ok(DeviceBatch::Cpu(batch.clone()))
+    }
+
+    fn train_step(
+        &self,
+        train_name: &str,
+        state: &mut DeviceState,
+        batch: &DeviceBatch,
+        step: u64,
+        lr: f32,
+        lr_b: f32,
+    ) -> Result<StepOutputs> {
+        let spec = self.spec(train_name)?;
+        if spec.kind != "train" {
+            bail!("'{train_name}' is not a train executable (kind = {})", spec.kind);
+        }
+        let broken = spec.step_config.broken;
+        let expect_lora = family_lora(&spec.family);
+        let s = as_cpu_state_mut(state)?;
+        if s.lora != expect_lora {
+            bail!(
+                "state family mismatch: executable '{train_name}' expects lora={:?}, state has {:?}",
+                expect_lora,
+                s.lora
+            );
+        }
+        let b = match batch {
+            DeviceBatch::Cpu(b) => b,
+            #[cfg(feature = "pjrt")]
+            _ => bail!("batch was uploaded to a different backend"),
+        };
+        // re-check geometry: DeviceBatch::Cpu is a public variant, so a
+        // batch may not have come through upload_batch
+        check_geometry(spec, b)?;
+        let view = batch_view(b)?;
+        let out = model::train_step(s, &view, broken, step, lr, lr_b)?;
+        Ok(StepOutputs { loss: out.loss, grad_norm: out.grad_norm, n_tokens: out.n_tokens })
+    }
+
+    fn eval_loss(&self, eval_name: &str, state: &DeviceState, batch: &Batch) -> Result<f32> {
+        let spec = self.spec(eval_name)?;
+        if spec.kind != "eval" && spec.kind != "train" {
+            bail!("'{eval_name}' cannot evaluate (kind = {})", spec.kind);
+        }
+        check_geometry(spec, batch)?;
+        let expect_lora = family_lora(&spec.family);
+        let s = as_cpu_state(state)?;
+        if s.lora != expect_lora {
+            bail!(
+                "state family mismatch: executable '{eval_name}' expects lora={:?}, state has {:?}",
+                expect_lora,
+                s.lora
+            );
+        }
+        let view = batch_view(batch)?;
+        model::eval_loss(s, &view)
+    }
+
+    fn state_params(&self, state: &DeviceState) -> Result<Vec<HostTensor>> {
+        Ok(as_cpu_state(state)?.params.clone())
+    }
+
+    fn load_params(&self, state: &mut DeviceState, params: &[HostTensor]) -> Result<()> {
+        let s = as_cpu_state_mut(state)?;
+        if params.len() != s.params.len() {
+            bail!(
+                "checkpoint has {} tensors, state expects {}",
+                params.len(),
+                s.params.len()
+            );
+        }
+        for (i, (cur, new)) in s.params.iter().zip(params).enumerate() {
+            if cur.shape() != new.shape() {
+                bail!(
+                    "tensor {} ('{}') shape mismatch: checkpoint {:?} vs state {:?}",
+                    i,
+                    s.names[i],
+                    new.shape(),
+                    cur.shape()
+                );
+            }
+            new.as_f32()?; // checkpoints are f32-only
+        }
+        for (cur, new) in s.params.iter_mut().zip(params) {
+            *cur = new.clone();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_covers_reference_families() {
+        let be = CpuBackend::new();
+        for name in [
+            "train_step_chronicals",
+            "train_step_lora",
+            "train_step_lora_broken",
+            "init_chronicals",
+            "init_lora",
+            "eval_chronicals",
+        ] {
+            assert!(be.manifest().get(name).is_ok(), "missing {name}");
+        }
+        assert_eq!(be.manifest().profile, "cpu-reference");
+    }
+
+    #[test]
+    fn lora_spec_has_fewer_trainable_params() {
+        let be = CpuBackend::new();
+        let full = be.manifest().get("train_step_chronicals").unwrap();
+        let lora = be.manifest().get("train_step_lora").unwrap();
+        assert_eq!(full.param_count, full.trainable_param_count);
+        assert!(lora.trainable_param_count < lora.param_count);
+        assert!(lora.param_count > full.param_count); // base + adapters
+        assert_eq!(lora.n_slots, 2);
+    }
+
+    #[test]
+    fn init_rejects_train_executable() {
+        let be = CpuBackend::new();
+        assert!(be.init_state("train_step_chronicals", 1).is_err());
+        assert!(be.init_state("init_chronicals", 1).is_ok());
+    }
+
+    #[test]
+    fn init_is_seed_deterministic() {
+        let be = CpuBackend::new();
+        let a = be.init_state("init_chronicals", 9).unwrap();
+        let b = be.init_state("init_chronicals", 9).unwrap();
+        let (pa, pb) = (be.state_params(&a).unwrap(), be.state_params(&b).unwrap());
+        assert_eq!(pa, pb);
+        let c = be.init_state("init_chronicals", 10).unwrap();
+        assert_ne!(pa, be.state_params(&c).unwrap());
+    }
+
+    fn spec_geometry_batch(be: &CpuBackend, exe: &str) -> Batch {
+        let spec = be.manifest().get(exe).unwrap();
+        let exs: Vec<crate::data::TokenizedExample> = (0..spec.batch as i32)
+            .map(|i| crate::data::TokenizedExample {
+                tokens: vec![4 + i, 5 + i, 6 + i],
+                targets: vec![5 + i, 6 + i, -1],
+            })
+            .collect();
+        crate::batching::padded_batches(&exs, spec.batch, spec.seq).remove(0)
+    }
+
+    #[test]
+    fn state_family_mismatch_rejected() {
+        let be = CpuBackend::new();
+        let mut full_state = be.init_state("init_chronicals", 1).unwrap();
+        let batch = spec_geometry_batch(&be, "train_step_lora");
+        let ub = be.upload_batch("train_step_lora", &batch).unwrap();
+        assert!(be
+            .train_step("train_step_lora", &mut full_state, &ub, 1, 1e-3, 1e-3)
+            .is_err());
+        // eval is exactly as strict as the train path
+        assert!(be.eval_loss("eval_lora", &full_state, &batch).is_err());
+    }
+
+    #[test]
+    fn wrong_geometry_batch_rejected() {
+        let be = CpuBackend::new();
+        let exs = vec![crate::data::TokenizedExample {
+            tokens: vec![4, 5, 6, 7],
+            targets: vec![5, 6, 7, -1],
+        }];
+        // spec geometry is 4x64; a 1x8 batch must be refused at staging,
+        // exactly like PJRT's compiled shapes would refuse it at execute
+        let batch = crate::batching::padded_batches(&exs, 1, 8).remove(0);
+        let err = be
+            .upload_batch("train_step_chronicals", &batch)
+            .map(|_| ())
+            .unwrap_err();
+        assert!(err.to_string().contains("geometry"), "{err}");
+        let state = be.init_state("init_chronicals", 1).unwrap();
+        assert!(be.eval_loss("eval_chronicals", &state, &batch).is_err());
+    }
+
+    #[test]
+    fn load_params_validates_shapes() {
+        let be = CpuBackend::new();
+        let mut state = be.init_state("init_chronicals", 1).unwrap();
+        let mut params = be.state_params(&state).unwrap();
+        assert!(be.load_params(&mut state, &params).is_ok());
+        params.pop();
+        assert!(be.load_params(&mut state, &params).is_err());
+    }
+}

@@ -1,0 +1,969 @@
+//! The tiny-transformer reference train step, in pure Rust.
+//!
+//! Architecture (mirroring `python/compile/model.py` and the reference
+//! semantics in `python/compile/kernels/ref.py`):
+//!
+//! ```text
+//! embed → N × [ RMSNorm → QKV(+LoRA) → RoPE → segment-masked causal
+//!               attention (GQA) → Wo → +residual → RMSNorm → SwiGLU MLP
+//!               → +residual ] → RMSNorm → head → masked cross-entropy
+//! ```
+//!
+//! with a hand-derived backward pass and a fused AdamW update carrying the
+//! LoRA+ dual learning rate (`lr_b` for `*_b` adapter matrices, paper
+//! Thm. 1). The backward formulas were derived against central finite
+//! differences in both full-FT and LoRA modes (worst relative error ~5e-6;
+//! DESIGN.md §4.1), and the composed backward is guarded in-repo by the
+//! `whole_model_gradient_matches_directional_derivative` test below.
+//!
+//! Everything is sequential `f32`: two runs with identical state and batch
+//! produce bitwise-identical losses, gradients and parameter updates.
+
+use super::math::{
+    adamw_update, linear_bwd_w, linear_bwd_x, linear_fwd, rmsnorm_bwd, rmsnorm_fwd, rope_apply,
+    softmax_xent, swiglu_bwd, swiglu_fwd,
+};
+use crate::optim::{classify_param, ParamGroup};
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+pub const WEIGHT_DECAY: f32 = 0.01;
+
+/// Model geometry for the reference backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+}
+
+impl ModelDims {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// KV projection width (GQA: `n_kv_heads · head_dim`).
+    pub fn d_kv(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+}
+
+/// LoRA adapter geometry (rank-`r` adapters on Wq and Wv, paper Def. 10).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoraCfg {
+    pub rank: usize,
+    pub alpha: f32,
+}
+
+impl LoraCfg {
+    pub fn scale(&self) -> f32 {
+        self.alpha / self.rank as f32
+    }
+}
+
+/// The CPU backend's training state: host parameters + AdamW slots.
+///
+/// `params` follows the Backend state-layout convention — trainable tensors
+/// first, then frozen — so checkpoints and `state_params()` line up with the
+/// PJRT backend (DESIGN.md §3).
+#[derive(Debug, Clone)]
+pub struct CpuState {
+    pub dims: ModelDims,
+    pub lora: Option<LoraCfg>,
+    /// Tensor names, parallel to `params` (trainable then frozen).
+    pub names: Vec<String>,
+    pub params: Vec<HostTensor>,
+    pub n_trainable: usize,
+    /// AdamW first/second-moment slots, parallel to the trainable prefix.
+    pub slot_m: Vec<Vec<f32>>,
+    pub slot_v: Vec<Vec<f32>>,
+}
+
+/// One batch, viewed as flat `[B·S]` slices.
+pub struct BatchView<'a> {
+    pub tokens: &'a [i32],
+    pub targets: &'a [i32],
+    pub seg: &'a [i32],
+    pub pos: &'a [i32],
+    pub bsz: usize,
+    pub seq: usize,
+}
+
+impl BatchView<'_> {
+    fn t(&self) -> usize {
+        self.bsz * self.seq
+    }
+}
+
+/// Parameter layout for a variant: `(name, shape)` in state order
+/// (trainable first, then frozen) plus the trainable count.
+pub fn param_layout(dims: &ModelDims, lora: Option<&LoraCfg>) -> (Vec<(String, Vec<usize>)>, usize) {
+    let (v, d, f) = (dims.vocab, dims.d_model, dims.d_ff);
+    let dkv = dims.d_kv();
+    let mut base: Vec<(String, Vec<usize>)> = vec![("embed".into(), vec![v, d])];
+    for l in 0..dims.n_layers {
+        let p = format!("layer_{l:02}.");
+        base.push((format!("{p}norm1"), vec![d]));
+        base.push((format!("{p}wq"), vec![d, d]));
+        base.push((format!("{p}wk"), vec![dkv, d]));
+        base.push((format!("{p}wv"), vec![dkv, d]));
+        base.push((format!("{p}wo"), vec![d, d]));
+        base.push((format!("{p}norm2"), vec![d]));
+        base.push((format!("{p}w_gate"), vec![f, d]));
+        base.push((format!("{p}w_up"), vec![f, d]));
+        base.push((format!("{p}w_down"), vec![d, f]));
+    }
+    base.push(("norm_f".into(), vec![d]));
+    base.push(("w_head".into(), vec![v, d]));
+
+    match lora {
+        None => {
+            let n = base.len();
+            (base, n)
+        }
+        Some(lc) => {
+            let r = lc.rank;
+            let mut adapters: Vec<(String, Vec<usize>)> = Vec::new();
+            for l in 0..dims.n_layers {
+                let p = format!("layer_{l:02}.");
+                adapters.push((format!("{p}wq_a"), vec![r, d]));
+                adapters.push((format!("{p}wq_b"), vec![d, r]));
+                adapters.push((format!("{p}wv_a"), vec![r, d]));
+                adapters.push((format!("{p}wv_b"), vec![dkv, r]));
+            }
+            let n = adapters.len();
+            adapters.extend(base);
+            (adapters, n)
+        }
+    }
+}
+
+/// Deterministic parameter init: norms = 1, LoRA B = 0 (paper §5), LoRA A and
+/// projections small normals. Draw order is the state order, so a seed fully
+/// determines every tensor.
+pub fn init_state(dims: ModelDims, lora: Option<LoraCfg>, seed: i32) -> CpuState {
+    let (layout, n_trainable) = param_layout(&dims, lora.as_ref());
+    let mut rng = Rng::new(seed as u32 as u64);
+    let mut names = Vec::with_capacity(layout.len());
+    let mut params = Vec::with_capacity(layout.len());
+    for (name, shape) in layout {
+        let n: usize = shape.iter().product();
+        let short = name.rsplit('.').next().unwrap_or(&name);
+        let data: Vec<f32> = if short.starts_with("norm") {
+            vec![1.0; n]
+        } else if short.ends_with("_b") {
+            vec![0.0; n]
+        } else {
+            let scale = if short.ends_with("_a") {
+                0.1
+            } else if short == "embed" || short == "w_head" {
+                0.05
+            } else {
+                0.08
+            };
+            (0..n).map(|_| rng.normal() as f32 * scale).collect()
+        };
+        names.push(name);
+        params.push(HostTensor::f32(data, shape));
+    }
+    let slot_m: Vec<Vec<f32>> = params[..n_trainable]
+        .iter()
+        .map(|t| vec![0.0; t.elements()])
+        .collect();
+    let slot_v = slot_m.clone();
+    CpuState { dims, lora, names, params, n_trainable, slot_m, slot_v }
+}
+
+/// Name → index lookup over the state's parameter list.
+struct ParamIdx<'a> {
+    params: &'a [HostTensor],
+    idx: HashMap<&'a str, usize>,
+}
+
+impl<'a> ParamIdx<'a> {
+    fn new(names: &'a [String], params: &'a [HostTensor]) -> ParamIdx<'a> {
+        let idx = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.as_str(), i))
+            .collect();
+        ParamIdx { params, idx }
+    }
+
+    fn id(&self, name: &str) -> Result<usize> {
+        self.idx
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("state has no parameter '{name}' — variant/state mismatch"))
+    }
+
+    fn get(&self, name: &str) -> Result<&'a [f32]> {
+        self.params[self.id(name)?].as_f32()
+    }
+}
+
+/// Per-layer forward activations kept for the backward pass.
+struct LayerCache {
+    x_in: Vec<f32>,
+    h1: Vec<f32>,
+    rstd1: Vec<f32>,
+    q: Vec<f32>, // post-RoPE
+    k: Vec<f32>, // post-RoPE
+    v: Vec<f32>,
+    hq_a: Option<Vec<f32>>, // h1 @ A_q.T
+    hv_a: Option<Vec<f32>>, // h1 @ A_v.T
+    probs: Vec<f32>,        // [B, Hq, S, S] attention weights
+    att: Vec<f32>,          // concatenated head outputs (pre-Wo)
+    x_mid: Vec<f32>,
+    h2: Vec<f32>,
+    rstd2: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    y: Vec<f32>,
+}
+
+struct FinalCache {
+    x_f: Vec<f32>,
+    hf: Vec<f32>,
+    rstd_f: Vec<f32>,
+    probs: Vec<f32>, // softmax over vocab, [T, V]
+    n_valid: usize,
+}
+
+/// Forward pass; fills `caches` when provided (training) and returns the
+/// summed loss + valid-target count.
+fn forward(
+    state: &CpuState,
+    bv: &BatchView,
+    caches: Option<(&mut Vec<LayerCache>, &mut Option<FinalCache>)>,
+) -> Result<(f32, usize)> {
+    let dims = &state.dims;
+    let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
+    let (hq, hkv, hd) = (dims.n_heads, dims.n_kv_heads, dims.head_dim());
+    let dkv = dims.d_kv();
+    let t = bv.t();
+    let p = ParamIdx::new(&state.names, &state.params);
+
+    for (i, &tok) in bv.tokens.iter().enumerate() {
+        if tok < 0 || tok as usize >= v {
+            bail!("token id {tok} at position {i} out of vocab range 0..{v}");
+        }
+    }
+    for (i, &tgt) in bv.targets.iter().enumerate() {
+        if tgt >= v as i32 {
+            bail!("target id {tgt} at position {i} out of vocab range");
+        }
+    }
+
+    let embed = p.get("embed")?;
+    let mut x = vec![0.0f32; t * d];
+    for ti in 0..t {
+        let tok = bv.tokens[ti] as usize;
+        x[ti * d..(ti + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+    }
+
+    let mut caches = caches;
+
+    for l in 0..dims.n_layers {
+        let pre = format!("layer_{l:02}.");
+        let x_in = x;
+
+        let mut h1 = vec![0.0f32; t * d];
+        let mut rstd1 = vec![0.0f32; t];
+        rmsnorm_fwd(&x_in, p.get(&format!("{pre}norm1"))?, t, d, &mut h1, &mut rstd1);
+
+        let mut q = vec![0.0f32; t * d];
+        linear_fwd(&h1, p.get(&format!("{pre}wq"))?, t, d, d, &mut q);
+        let mut k = vec![0.0f32; t * dkv];
+        linear_fwd(&h1, p.get(&format!("{pre}wk"))?, t, d, dkv, &mut k);
+        let mut vv = vec![0.0f32; t * dkv];
+        linear_fwd(&h1, p.get(&format!("{pre}wv"))?, t, d, dkv, &mut vv);
+
+        let (mut hq_a, mut hv_a) = (None, None);
+        if let Some(lc) = &state.lora {
+            let r = lc.rank;
+            let s = lc.scale();
+            let mut ha = vec![0.0f32; t * r];
+            linear_fwd(&h1, p.get(&format!("{pre}wq_a"))?, t, d, r, &mut ha);
+            let mut dq = vec![0.0f32; t * d];
+            linear_fwd(&ha, p.get(&format!("{pre}wq_b"))?, t, r, d, &mut dq);
+            for i in 0..t * d {
+                q[i] += s * dq[i];
+            }
+            hq_a = Some(ha);
+
+            let mut ha = vec![0.0f32; t * r];
+            linear_fwd(&h1, p.get(&format!("{pre}wv_a"))?, t, d, r, &mut ha);
+            let mut dv = vec![0.0f32; t * dkv];
+            linear_fwd(&ha, p.get(&format!("{pre}wv_b"))?, t, r, dkv, &mut dv);
+            for i in 0..t * dkv {
+                vv[i] += s * dv[i];
+            }
+            hv_a = Some(ha);
+        }
+
+        rope_apply(&mut q, bv.pos, t, hq, hd, 1.0);
+        rope_apply(&mut k, bv.pos, t, hkv, hd, 1.0);
+
+        let mut att = vec![0.0f32; t * d];
+        let mut probs = vec![0.0f32; bv.bsz * hq * bv.seq * bv.seq];
+        attention_fwd(&q, &k, &vv, bv, hq, hkv, hd, &mut att, &mut probs);
+
+        let mut ao = vec![0.0f32; t * d];
+        linear_fwd(&att, p.get(&format!("{pre}wo"))?, t, d, d, &mut ao);
+        let mut x_mid = x_in.clone();
+        for i in 0..t * d {
+            x_mid[i] += ao[i];
+        }
+
+        let mut h2 = vec![0.0f32; t * d];
+        let mut rstd2 = vec![0.0f32; t];
+        rmsnorm_fwd(&x_mid, p.get(&format!("{pre}norm2"))?, t, d, &mut h2, &mut rstd2);
+        let mut gate = vec![0.0f32; t * f];
+        linear_fwd(&h2, p.get(&format!("{pre}w_gate"))?, t, d, f, &mut gate);
+        let mut up = vec![0.0f32; t * f];
+        linear_fwd(&h2, p.get(&format!("{pre}w_up"))?, t, d, f, &mut up);
+        let mut y = vec![0.0f32; t * f];
+        swiglu_fwd(&gate, &up, &mut y);
+        let mut mlp = vec![0.0f32; t * d];
+        linear_fwd(&y, p.get(&format!("{pre}w_down"))?, t, f, d, &mut mlp);
+
+        let mut x_out = x_mid.clone();
+        for i in 0..t * d {
+            x_out[i] += mlp[i];
+        }
+
+        if let Some((lcs, _)) = caches.as_mut() {
+            lcs.push(LayerCache {
+                x_in,
+                h1,
+                rstd1,
+                q,
+                k,
+                v: vv,
+                hq_a,
+                hv_a,
+                probs,
+                att,
+                x_mid,
+                h2,
+                rstd2,
+                gate,
+                up,
+                y,
+            });
+        }
+        x = x_out;
+    }
+
+    let x_f = x;
+    let mut hf = vec![0.0f32; t * d];
+    let mut rstd_f = vec![0.0f32; t];
+    rmsnorm_fwd(&x_f, p.get("norm_f")?, t, d, &mut hf, &mut rstd_f);
+    let mut logits = vec![0.0f32; t * v];
+    linear_fwd(&hf, p.get("w_head")?, t, d, v, &mut logits);
+    let mut probs = vec![0.0f32; t * v];
+    let (loss_sum, n_valid) = softmax_xent(&logits, bv.targets, t, v, &mut probs);
+
+    if let Some((_, fc)) = caches.as_mut() {
+        **fc = Some(FinalCache { x_f, hf, rstd_f, probs, n_valid });
+    }
+    Ok((loss_sum, n_valid))
+}
+
+/// Segment-masked causal attention forward (paper Def. 1/2 with the packing
+/// mask of Alg. 17): tokens attend causally within their own non-zero
+/// segment; padding rows (seg 0) emit zeros.
+#[allow(clippy::too_many_arguments)]
+fn attention_fwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    bv: &BatchView,
+    n_heads: usize,
+    n_kv: usize,
+    hd: usize,
+    out: &mut [f32],
+    probs: &mut [f32],
+) {
+    let s = bv.seq;
+    let group = n_heads / n_kv;
+    let dq = n_heads * hd;
+    let dkv = n_kv * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut scores = vec![0.0f32; s];
+    for b in 0..bv.bsz {
+        for h in 0..n_heads {
+            let kh = h / group;
+            for i in 0..s {
+                let ti = b * s + i;
+                let seg_i = bv.seg[ti];
+                if seg_i == 0 {
+                    continue; // padding: probs row stays zero, out stays zero
+                }
+                let qr = &q[ti * dq + h * hd..ti * dq + (h + 1) * hd];
+                let mut m = f32::NEG_INFINITY;
+                for j in 0..=i {
+                    let tj = b * s + j;
+                    if bv.seg[tj] != seg_i {
+                        continue;
+                    }
+                    let kr = &k[tj * dkv + kh * hd..tj * dkv + (kh + 1) * hd];
+                    let mut dot = 0.0f32;
+                    for x in 0..hd {
+                        dot += qr[x] * kr[x];
+                    }
+                    scores[j] = dot * scale;
+                    m = m.max(scores[j]);
+                }
+                let mut denom = 0.0f32;
+                let prow = &mut probs[((b * n_heads + h) * s + i) * s..((b * n_heads + h) * s + i + 1) * s];
+                for j in 0..=i {
+                    let tj = b * s + j;
+                    if bv.seg[tj] != seg_i {
+                        continue;
+                    }
+                    let e = (scores[j] - m).exp();
+                    prow[j] = e;
+                    denom += e;
+                }
+                let or = &mut out[ti * dq + h * hd..ti * dq + (h + 1) * hd];
+                for j in 0..=i {
+                    let tj = b * s + j;
+                    if bv.seg[tj] != seg_i {
+                        continue;
+                    }
+                    prow[j] /= denom;
+                    let vr = &v[tj * dkv + kh * hd..tj * dkv + (kh + 1) * hd];
+                    for x in 0..hd {
+                        or[x] += prow[j] * vr[x];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Attention backward: accumulates `dq`, `dk`, `dv` from `dout` and the
+/// cached attention weights. GQA gradients sum over each KV head's group.
+#[allow(clippy::too_many_arguments)]
+fn attention_bwd(
+    dout: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &[f32],
+    bv: &BatchView,
+    n_heads: usize,
+    n_kv: usize,
+    hd: usize,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    let s = bv.seq;
+    let group = n_heads / n_kv;
+    let dq_w = n_heads * hd;
+    let dkv_w = n_kv * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut dp = vec![0.0f32; s];
+    for b in 0..bv.bsz {
+        for h in 0..n_heads {
+            let kh = h / group;
+            for i in 0..s {
+                let ti = b * s + i;
+                if bv.seg[ti] == 0 {
+                    continue;
+                }
+                let prow = &probs[((b * n_heads + h) * s + i) * s..((b * n_heads + h) * s + i + 1) * s];
+                let dor = &dout[ti * dq_w + h * hd..ti * dq_w + (h + 1) * hd];
+                // dv_j += p_ij · dout_i ; dp_ij = dout_i · v_j
+                let mut dsum = 0.0f32;
+                for j in 0..=i {
+                    if prow[j] == 0.0 {
+                        dp[j] = 0.0;
+                        continue;
+                    }
+                    let tj = b * s + j;
+                    let vr = &v[tj * dkv_w + kh * hd..tj * dkv_w + (kh + 1) * hd];
+                    let dvr = &mut dv[tj * dkv_w + kh * hd..tj * dkv_w + (kh + 1) * hd];
+                    let mut acc = 0.0f32;
+                    for x in 0..hd {
+                        dvr[x] += prow[j] * dor[x];
+                        acc += dor[x] * vr[x];
+                    }
+                    dp[j] = acc;
+                    dsum += prow[j] * acc;
+                }
+                // ds_ij = p_ij (dp_ij − Σ_k p_ik dp_ik); chain into q and k
+                let qr = &q[ti * dq_w + h * hd..ti * dq_w + (h + 1) * hd];
+                let dqr = &mut dq[ti * dq_w + h * hd..ti * dq_w + (h + 1) * hd];
+                for j in 0..=i {
+                    if prow[j] == 0.0 {
+                        continue;
+                    }
+                    let ds = prow[j] * (dp[j] - dsum) * scale;
+                    let tj = b * s + j;
+                    let kr = &k[tj * dkv_w + kh * hd..tj * dkv_w + (kh + 1) * hd];
+                    let dkr = &mut dk[tj * dkv_w + kh * hd..tj * dkv_w + (kh + 1) * hd];
+                    for x in 0..hd {
+                        dqr[x] += ds * kr[x];
+                        dkr[x] += ds * qr[x];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Full backward pass. Returns per-parameter gradients aligned with
+/// `state.params` (frozen entries included; callers use the trainable
+/// prefix).
+fn backward(
+    state: &CpuState,
+    bv: &BatchView,
+    layer_caches: &[LayerCache],
+    fc: &FinalCache,
+) -> Result<Vec<Vec<f32>>> {
+    let dims = &state.dims;
+    let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
+    let (hq, hkv, hd) = (dims.n_heads, dims.n_kv_heads, dims.head_dim());
+    let dkv = dims.d_kv();
+    let t = bv.t();
+    let p = ParamIdx::new(&state.names, &state.params);
+    let mut grads: Vec<Vec<f32>> = state.params.iter().map(|t| vec![0.0; t.elements()]).collect();
+    // frozen parameters (indices >= n_trainable, i.e. the LoRA base) never
+    // feed grad_norm or AdamW, so their weight-gradient accumulation is
+    // skipped outright — the dx chain through them is still computed
+    let nt = state.n_trainable;
+    let n_valid = fc.n_valid.max(1) as f32;
+
+    // d(mean loss)/d logits = (softmax − onehot)/n_valid on valid rows
+    let mut dlogits = vec![0.0f32; t * v];
+    for ti in 0..t {
+        let tgt = bv.targets[ti];
+        if tgt < 0 {
+            continue;
+        }
+        let pr = &fc.probs[ti * v..(ti + 1) * v];
+        let dr = &mut dlogits[ti * v..(ti + 1) * v];
+        for i in 0..v {
+            dr[i] = pr[i] / n_valid;
+        }
+        dr[tgt as usize] -= 1.0 / n_valid;
+    }
+
+    let i_head = p.id("w_head")?;
+    if i_head < nt {
+        linear_bwd_w(&dlogits, &fc.hf, t, d, v, &mut grads[i_head]);
+    }
+    let mut dhf = vec![0.0f32; t * d];
+    linear_bwd_x(&dlogits, p.get("w_head")?, t, d, v, &mut dhf);
+
+    let mut dx = vec![0.0f32; t * d];
+    let i_nf = p.id("norm_f")?;
+    rmsnorm_bwd(&fc.x_f, p.get("norm_f")?, &fc.rstd_f, &dhf, t, d, &mut dx, &mut grads[i_nf]);
+
+    for l in (0..dims.n_layers).rev() {
+        let pre = format!("layer_{l:02}.");
+        let c = &layer_caches[l];
+
+        // x_out = x_mid + y @ w_down.T
+        let i_down = p.id(&format!("{pre}w_down"))?;
+        if i_down < nt {
+            linear_bwd_w(&dx, &c.y, t, f, d, &mut grads[i_down]);
+        }
+        let mut dy = vec![0.0f32; t * f];
+        linear_bwd_x(&dx, p.get(&format!("{pre}w_down"))?, t, f, d, &mut dy);
+
+        let mut dgate = vec![0.0f32; t * f];
+        let mut dup = vec![0.0f32; t * f];
+        swiglu_bwd(&c.gate, &c.up, &dy, &mut dgate, &mut dup);
+
+        let i_gate = p.id(&format!("{pre}w_gate"))?;
+        let i_up = p.id(&format!("{pre}w_up"))?;
+        if i_gate < nt {
+            linear_bwd_w(&dgate, &c.h2, t, d, f, &mut grads[i_gate]);
+        }
+        if i_up < nt {
+            linear_bwd_w(&dup, &c.h2, t, d, f, &mut grads[i_up]);
+        }
+        let mut dh2 = vec![0.0f32; t * d];
+        linear_bwd_x(&dgate, p.get(&format!("{pre}w_gate"))?, t, d, f, &mut dh2);
+        linear_bwd_x(&dup, p.get(&format!("{pre}w_up"))?, t, d, f, &mut dh2);
+
+        let i_n2 = p.id(&format!("{pre}norm2"))?;
+        let mut dx_mid = dx; // residual: gradient flows straight through...
+        rmsnorm_bwd(
+            &c.x_mid,
+            p.get(&format!("{pre}norm2"))?,
+            &c.rstd2,
+            &dh2,
+            t,
+            d,
+            &mut dx_mid, // ...and accumulates the norm branch
+            &mut grads[i_n2],
+        );
+
+        // x_mid = x_in + att @ wo.T
+        let i_wo = p.id(&format!("{pre}wo"))?;
+        if i_wo < nt {
+            linear_bwd_w(&dx_mid, &c.att, t, d, d, &mut grads[i_wo]);
+        }
+        let mut datt = vec![0.0f32; t * d];
+        linear_bwd_x(&dx_mid, p.get(&format!("{pre}wo"))?, t, d, d, &mut datt);
+
+        let mut dq = vec![0.0f32; t * d];
+        let mut dk = vec![0.0f32; t * dkv];
+        let mut dv = vec![0.0f32; t * dkv];
+        attention_bwd(&datt, &c.q, &c.k, &c.v, &c.probs, bv, hq, hkv, hd, &mut dq, &mut dk, &mut dv);
+        rope_apply(&mut dq, bv.pos, t, hq, hd, -1.0);
+        rope_apply(&mut dk, bv.pos, t, hkv, hd, -1.0);
+
+        let i_wq = p.id(&format!("{pre}wq"))?;
+        let i_wk = p.id(&format!("{pre}wk"))?;
+        let i_wv = p.id(&format!("{pre}wv"))?;
+        if i_wq < nt {
+            linear_bwd_w(&dq, &c.h1, t, d, d, &mut grads[i_wq]);
+        }
+        if i_wk < nt {
+            linear_bwd_w(&dk, &c.h1, t, d, dkv, &mut grads[i_wk]);
+        }
+        if i_wv < nt {
+            linear_bwd_w(&dv, &c.h1, t, d, dkv, &mut grads[i_wv]);
+        }
+        let mut dh1 = vec![0.0f32; t * d];
+        linear_bwd_x(&dq, p.get(&format!("{pre}wq"))?, t, d, d, &mut dh1);
+        linear_bwd_x(&dk, p.get(&format!("{pre}wk"))?, t, d, dkv, &mut dh1);
+        linear_bwd_x(&dv, p.get(&format!("{pre}wv"))?, t, d, dkv, &mut dh1);
+
+        if let Some(lc) = &state.lora {
+            let (r, s) = (lc.rank, lc.scale());
+            let hq_a = c.hq_a.as_ref().expect("lora cache");
+            let hv_a = c.hv_a.as_ref().expect("lora cache");
+            // q += s · (h1 @ A.T) @ B.T
+            let mut dq_s = dq.clone();
+            for g in dq_s.iter_mut() {
+                *g *= s;
+            }
+            let i_qb = p.id(&format!("{pre}wq_b"))?;
+            let i_qa = p.id(&format!("{pre}wq_a"))?;
+            linear_bwd_w(&dq_s, hq_a, t, r, d, &mut grads[i_qb]);
+            let mut dhq_a = vec![0.0f32; t * r];
+            linear_bwd_x(&dq_s, p.get(&format!("{pre}wq_b"))?, t, r, d, &mut dhq_a);
+            linear_bwd_w(&dhq_a, &c.h1, t, d, r, &mut grads[i_qa]);
+            linear_bwd_x(&dhq_a, p.get(&format!("{pre}wq_a"))?, t, d, r, &mut dh1);
+
+            let mut dv_s = dv.clone();
+            for g in dv_s.iter_mut() {
+                *g *= s;
+            }
+            let i_vb = p.id(&format!("{pre}wv_b"))?;
+            let i_va = p.id(&format!("{pre}wv_a"))?;
+            linear_bwd_w(&dv_s, hv_a, t, r, dkv, &mut grads[i_vb]);
+            let mut dhv_a = vec![0.0f32; t * r];
+            linear_bwd_x(&dv_s, p.get(&format!("{pre}wv_b"))?, t, r, dkv, &mut dhv_a);
+            linear_bwd_w(&dhv_a, &c.h1, t, d, r, &mut grads[i_va]);
+            linear_bwd_x(&dhv_a, p.get(&format!("{pre}wv_a"))?, t, d, r, &mut dh1);
+        }
+
+        let i_n1 = p.id(&format!("{pre}norm1"))?;
+        let mut dx_in = dx_mid; // residual passthrough
+        rmsnorm_bwd(
+            &c.x_in,
+            p.get(&format!("{pre}norm1"))?,
+            &c.rstd1,
+            &dh1,
+            t,
+            d,
+            &mut dx_in,
+            &mut grads[i_n1],
+        );
+        dx = dx_in;
+    }
+
+    let i_embed = p.id("embed")?;
+    if i_embed < nt {
+        for ti in 0..t {
+            let tok = bv.tokens[ti] as usize;
+            let ge = &mut grads[i_embed][tok * d..(tok + 1) * d];
+            for i in 0..d {
+                ge[i] += dx[ti * d + i];
+            }
+        }
+    }
+    Ok(grads)
+}
+
+/// Metrics returned by one reference train step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOut {
+    /// Mean loss over valid targets.
+    pub loss: f32,
+    /// Global L2 norm over the *trainable* gradients (the §8 verification
+    /// signal; exactly 0.0 in broken mode — the Unsloth-bug signature).
+    pub grad_norm: f32,
+    /// Number of supervised (non-masked) targets in the batch.
+    pub n_tokens: f32,
+}
+
+/// Forward-only mean loss (the eval path — identical math to the train-step
+/// forward, so eval-vs-train-loss equivalence holds exactly).
+pub fn eval_loss(state: &CpuState, bv: &BatchView) -> Result<f32> {
+    let (loss_sum, n_valid) = forward(state, bv, None)?;
+    Ok(loss_sum / n_valid.max(1) as f32)
+}
+
+/// One full train step: forward, backward, grad-norm, AdamW with the LoRA+
+/// dual LR (`lr_b` for `*_b` params). `broken` reproduces the paper's §8
+/// failure mode: the loss is computed but every gradient is discarded, so
+/// grad_norm is exactly 0.0 and the parameters never move.
+pub fn train_step(
+    state: &mut CpuState,
+    bv: &BatchView,
+    broken: bool,
+    step: u64,
+    lr: f32,
+    lr_b: f32,
+) -> Result<StepOut> {
+    let mut layer_caches: Vec<LayerCache> = Vec::with_capacity(state.dims.n_layers);
+    let mut final_cache: Option<FinalCache> = None;
+    let (loss_sum, n_valid) = forward(state, bv, Some((&mut layer_caches, &mut final_cache)))?;
+    let loss = loss_sum / n_valid.max(1) as f32;
+
+    if broken {
+        return Ok(StepOut { loss, grad_norm: 0.0, n_tokens: n_valid as f32 });
+    }
+
+    let fc = final_cache.ok_or_else(|| anyhow!("forward did not fill caches"))?;
+    let grads = backward(state, bv, &layer_caches, &fc)?;
+
+    let mut sq = 0.0f32;
+    for g in &grads[..state.n_trainable] {
+        for &x in g {
+            sq += x * x;
+        }
+    }
+    let grad_norm = sq.sqrt();
+
+    for i in 0..state.n_trainable {
+        let lr_p = match classify_param(&state.names[i]) {
+            ParamGroup::LoraB => lr_b,
+            _ => lr,
+        };
+        let param = state.params[i].as_f32_mut()?;
+        adamw_update(
+            param,
+            &grads[i],
+            &mut state.slot_m[i],
+            &mut state.slot_v[i],
+            lr_p,
+            step as f32,
+            WEIGHT_DECAY,
+        );
+    }
+    Ok(StepOut { loss, grad_norm, n_tokens: n_valid as f32 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims { vocab: 16, d_model: 8, n_layers: 2, n_heads: 2, n_kv_heads: 1, d_ff: 12 }
+    }
+
+    /// A packed two-row batch: row 0 holds two segments, row 1 one segment
+    /// plus padding; some targets masked.
+    fn batch() -> (Vec<i32>, Vec<i32>, Vec<i32>, Vec<i32>, usize, usize) {
+        let (bsz, s) = (2usize, 10usize);
+        let mut tokens = vec![0i32; bsz * s];
+        let mut targets = vec![-1i32; bsz * s];
+        let mut seg = vec![0i32; bsz * s];
+        let mut pos = vec![0i32; bsz * s];
+        let mut rng = Rng::new(99);
+        let rows: [&[usize]; 2] = [&[5, 4], &[6]];
+        for (b, lens) in rows.iter().enumerate() {
+            let mut off = 0usize;
+            for (si, &len) in lens.iter().enumerate() {
+                for i in 0..len {
+                    let t = b * s + off + i;
+                    tokens[t] = rng.range(4, 16) as i32;
+                    seg[t] = (si + 1) as i32;
+                    pos[t] = i as i32;
+                    if i > 0 {
+                        targets[t - 1] = tokens[t];
+                    }
+                }
+                off += len;
+            }
+        }
+        (tokens, targets, seg, pos, bsz, s)
+    }
+
+    fn bv(t: &(Vec<i32>, Vec<i32>, Vec<i32>, Vec<i32>, usize, usize)) -> BatchView<'_> {
+        BatchView { tokens: &t.0, targets: &t.1, seg: &t.2, pos: &t.3, bsz: t.4, seq: t.5 }
+    }
+
+    #[test]
+    fn initial_loss_near_log_vocab() {
+        let state = init_state(dims(), None, 7);
+        let b = batch();
+        let loss = eval_loss(&state, &bv(&b)).unwrap();
+        let lv = (16.0f32).ln();
+        assert!((loss - lv).abs() < 0.5, "loss {loss} vs ln V {lv}");
+    }
+
+    #[test]
+    fn full_ft_loss_decreases_and_grads_flow() {
+        let mut state = init_state(dims(), None, 7);
+        let b = batch();
+        let mut losses = Vec::new();
+        for step in 1..=12u64 {
+            let out = train_step(&mut state, &bv(&b), false, step, 5e-3, 5e-3).unwrap();
+            assert!(out.loss.is_finite());
+            assert!(out.grad_norm > 0.0, "step {step} grad_norm zero");
+            losses.push(out.loss);
+        }
+        assert!(
+            losses[11] < losses[0],
+            "loss did not decrease: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn lora_trains_only_adapters() {
+        let lora = LoraCfg { rank: 2, alpha: 4.0 };
+        let mut state = init_state(dims(), Some(lora), 7);
+        let frozen_before: Vec<Vec<f32>> = state.params[state.n_trainable..]
+            .iter()
+            .map(|t| t.as_f32().unwrap().to_vec())
+            .collect();
+        let b = batch();
+        let mut losses = Vec::new();
+        for step in 1..=12u64 {
+            let out = train_step(&mut state, &bv(&b), false, step, 5e-3, 5e-3).unwrap();
+            assert!(out.grad_norm > 0.0);
+            losses.push(out.loss);
+        }
+        assert!(losses[11] < losses[0], "{losses:?}");
+        for (t, before) in state.params[state.n_trainable..].iter().zip(&frozen_before) {
+            assert_eq!(t.as_f32().unwrap(), &before[..], "frozen param moved");
+        }
+    }
+
+    #[test]
+    fn broken_mode_has_zero_grad_and_frozen_loss() {
+        let mut state = init_state(dims(), None, 7);
+        let b = batch();
+        let mut losses = Vec::new();
+        for step in 1..=5u64 {
+            let out = train_step(&mut state, &bv(&b), true, step, 5e-3, 5e-3).unwrap();
+            assert_eq!(out.grad_norm, 0.0);
+            losses.push(out.loss);
+        }
+        assert!(losses.windows(2).all(|w| w[0] == w[1]), "{losses:?}");
+    }
+
+    #[test]
+    fn train_step_is_bitwise_deterministic() {
+        let b = batch();
+        let run = || {
+            let mut state = init_state(dims(), None, 42);
+            let mut bits = Vec::new();
+            for step in 1..=6u64 {
+                let out = train_step(&mut state, &bv(&b), false, step, 3e-3, 3e-3).unwrap();
+                bits.push((out.loss.to_bits(), out.grad_norm.to_bits()));
+            }
+            bits
+        };
+        assert_eq!(run(), run());
+    }
+
+    /// Whole-model gradient check: the central finite difference of the
+    /// mean loss along the *normalized analytic gradient* direction must
+    /// equal ‖∇L‖ (since dL/dε at θ+ε·∇L/‖∇L‖ is exactly ‖∇L‖). This
+    /// exercises every backward component composed — attention, RoPE,
+    /// SwiGLU, CCE, LoRA chain, embeddings — so a dropped scale factor
+    /// anywhere shows up as a relative error far above the tolerance.
+    #[test]
+    fn whole_model_gradient_matches_directional_derivative() {
+        for lora in [None, Some(LoraCfg { rank: 2, alpha: 4.0 })] {
+            let state = init_state(dims(), lora, 5);
+            let b = batch();
+            let view = bv(&b);
+            let mut lcs = Vec::new();
+            let mut fc = None;
+            forward(&state, &view, Some((&mut lcs, &mut fc))).unwrap();
+            let grads = backward(&state, &view, &lcs, &fc.unwrap()).unwrap();
+            let norm: f32 = grads[..state.n_trainable]
+                .iter()
+                .flat_map(|g| g.iter())
+                .map(|&x| x * x)
+                .sum::<f32>()
+                .sqrt();
+            assert!(norm > 0.0, "lora={lora:?}: zero gradient at init");
+
+            let eps = 1e-2f32;
+            let perturbed = |sign: f32| {
+                let mut s2 = state.clone();
+                for i in 0..s2.n_trainable {
+                    let p = s2.params[i].as_f32_mut().unwrap();
+                    for (pv, gv) in p.iter_mut().zip(&grads[i]) {
+                        *pv += sign * eps * gv / norm;
+                    }
+                }
+                eval_loss(&s2, &view).unwrap()
+            };
+            let fd = (perturbed(1.0) - perturbed(-1.0)) / (2.0 * eps);
+            let rel = (fd - norm).abs() / norm;
+            assert!(
+                rel < 0.05,
+                "lora={lora:?}: directional derivative {fd} vs ‖∇L‖ {norm} (rel err {rel})"
+            );
+        }
+    }
+
+    #[test]
+    fn padding_rows_get_no_gradient() {
+        // embeddings of tokens that never appear must have zero grad; the
+        // pad token (0) appears only in padding slots, whose dlogits are
+        // masked, so its row receives gradient only via attention — which
+        // the segment mask forbids.
+        let state = init_state(dims(), None, 7);
+        let b = batch();
+        let view = bv(&b);
+        let mut lcs = Vec::new();
+        let mut fc = None;
+        forward(&state, &view, Some((&mut lcs, &mut fc))).unwrap();
+        let grads = backward(&state, &view, &lcs, &fc.unwrap()).unwrap();
+        let d = state.dims.d_model;
+        let ge = &grads[0][0..d]; // embed row of the pad token
+        assert!(ge.iter().all(|&g| g == 0.0), "pad embedding got gradient: {ge:?}");
+    }
+
+    #[test]
+    fn eval_matches_train_loss_before_update() {
+        let mut state = init_state(dims(), None, 3);
+        let b = batch();
+        let e = eval_loss(&state, &bv(&b)).unwrap();
+        let out = train_step(&mut state, &bv(&b), false, 1, 1e-3, 1e-3).unwrap();
+        assert_eq!(e.to_bits(), out.loss.to_bits());
+    }
+
+    #[test]
+    fn out_of_vocab_token_rejected() {
+        let state = init_state(dims(), None, 7);
+        let tokens = vec![99i32];
+        let targets = vec![-1i32];
+        let seg = vec![1i32];
+        let pos = vec![0i32];
+        let view = BatchView { tokens: &tokens, targets: &targets, seg: &seg, pos: &pos, bsz: 1, seq: 1 };
+        assert!(eval_loss(&state, &view).is_err());
+    }
+}

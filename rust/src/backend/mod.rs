@@ -1,0 +1,134 @@
+//! Pluggable execution backends (DESIGN.md §3).
+//!
+//! A [`Backend`] owns everything device-specific about training: how state
+//! is initialized and held, how batches reach the device, and how one train
+//! step executes. The coordinator ([`crate::coordinator::Trainer`]), the
+//! harness and the CLI drive this trait only — they never name a concrete
+//! runtime — so the same step loop, metering, verification and
+//! checkpointing serve every backend.
+//!
+//! Two implementations exist:
+//! * [`cpu::CpuBackend`] (always available, the default): a deterministic
+//!   pure-Rust reference of the tiny-transformer train step. No artifacts,
+//!   no native deps — this is what CI and `cargo test` exercise.
+//! * `pjrt::PjrtBackend` (behind the `pjrt` feature): executes the AOT HLO
+//!   artifacts from `python/compile/aot.py` through PJRT.
+//!
+//! ## State layout contract
+//!
+//! `DeviceState` holds parameters in manifest order — trainable tensors
+//! first, then frozen — plus optimizer slots. `state_params` /
+//! `load_params` exchange exactly the `trainable + frozen` prefix as host
+//! tensors in that order; this is the checkpoint interchange format shared
+//! by all backends.
+//!
+//! ## Step contract
+//!
+//! `train_step` consumes `(state, uploaded batch, 1-based step, lr, lr_b)`
+//! and returns the three scalar metrics `(loss, grad_norm, n_tokens)`:
+//! mean loss over supervised targets, the global L2 norm of the trainable
+//! gradients (0.0 ⇔ not training — the §8 verification signal) and the
+//! supervised-target count. State advances in place; nothing else escapes
+//! the device.
+
+pub mod cpu;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use crate::batching::Batch;
+use crate::manifest::Manifest;
+use crate::runtime::HostTensor;
+use anyhow::{bail, Result};
+
+/// The three scalar metrics every train step reports.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOutputs {
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub n_tokens: f32,
+}
+
+/// Backend-resident training state (params + optimizer slots).
+pub enum DeviceState {
+    Cpu(cpu::CpuState),
+    #[cfg(feature = "pjrt")]
+    Pjrt(crate::runtime::TrainState),
+}
+
+/// A batch staged for a backend (uploaded once, reusable across steps).
+pub enum DeviceBatch {
+    Cpu(Batch),
+    #[cfg(feature = "pjrt")]
+    Pjrt(crate::runtime::UploadedBatch),
+}
+
+impl DeviceBatch {
+    /// Non-padding token count (the honest throughput numerator).
+    pub fn real_tokens(&self) -> usize {
+        match self {
+            DeviceBatch::Cpu(b) => b.real_tokens,
+            #[cfg(feature = "pjrt")]
+            DeviceBatch::Pjrt(u) => u.real_tokens,
+        }
+    }
+
+    /// Total `B·S` slots (what a padding-blind bench would count).
+    pub fn slot_tokens(&self) -> usize {
+        match self {
+            DeviceBatch::Cpu(b) => b.batch * b.seq,
+            #[cfg(feature = "pjrt")]
+            DeviceBatch::Pjrt(u) => u.slot_tokens,
+        }
+    }
+}
+
+/// A training execution backend. See the module docs for the state and
+/// step contracts; all methods take `&self` so a backend can be shared
+/// behind `Rc<dyn Backend>`.
+pub trait Backend {
+    /// Short human name ("cpu", "pjrt") for logs and error messages.
+    fn name(&self) -> &'static str;
+
+    /// The executable manifest this backend serves (synthesized for the CPU
+    /// reference, loaded from `artifacts/manifest.json` for PJRT).
+    fn manifest(&self) -> &Manifest;
+
+    /// Build fresh training state by running the named init executable.
+    fn init_state(&self, init_name: &str, seed: i32) -> Result<DeviceState>;
+
+    /// Stage a batch for repeated execution against `train_name`.
+    fn upload_batch(&self, train_name: &str, batch: &Batch) -> Result<DeviceBatch>;
+
+    /// Run one train step; `step` is 1-based, `lr_b` is the LoRA+ B-matrix
+    /// learning rate (equal to `lr` when LoRA+ is off).
+    fn train_step(
+        &self,
+        train_name: &str,
+        state: &mut DeviceState,
+        batch: &DeviceBatch,
+        step: u64,
+        lr: f32,
+        lr_b: f32,
+    ) -> Result<StepOutputs>;
+
+    /// Forward-only mean loss with the named eval executable.
+    fn eval_loss(&self, eval_name: &str, state: &DeviceState, batch: &Batch) -> Result<f32>;
+
+    /// Read the `trainable + frozen` parameters to host, in state order
+    /// (the checkpoint interchange format).
+    fn state_params(&self, state: &DeviceState) -> Result<Vec<HostTensor>>;
+
+    /// Restore parameters from host tensors (state order, shapes must
+    /// match). Optimizer slots are left untouched.
+    fn load_params(&self, state: &mut DeviceState, params: &[HostTensor]) -> Result<()>;
+
+    /// Time one kernel microbench executable (Table 5). Only meaningful on
+    /// backends with compiled kernel artifacts.
+    fn bench_kernel(&self, name: &str, reps: usize, warmup: usize) -> Result<f64> {
+        let _ = (reps, warmup);
+        bail!(
+            "kernel microbench '{name}' is not supported on the {} backend",
+            self.name()
+        )
+    }
+}

@@ -1,0 +1,241 @@
+//! The PJRT execution backend: drives the AOT HLO artifacts emitted by
+//! `python/compile/aot.py` through the [`crate::runtime::pjrt::Runtime`].
+//!
+//! Feature-gated behind `pjrt`. With the vendored host-only xla stub this
+//! module type-checks but `PjrtBackend::new` fails at runtime (the stub's
+//! `PjRtClient::cpu()` errors); vendor real xla-rs bindings to execute
+//! (DESIGN.md §4.2).
+
+use super::{Backend, DeviceBatch, DeviceState, StepOutputs};
+use crate::batching::Batch;
+use crate::manifest::{DType, Manifest};
+use crate::runtime::{HostTensor, OutBuf, Runtime, TrainState, UploadedBatch};
+use anyhow::{anyhow, bail, Result};
+use xla::Literal;
+
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<PjrtBackend> {
+        Ok(PjrtBackend { rt: Runtime::new(artifacts_dir)? })
+    }
+
+    /// Direct runtime access for PJRT-only workflows (microbench harnesses,
+    /// artifact inspection).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    fn as_pjrt_state<'a>(&self, state: &'a DeviceState) -> Result<&'a TrainState> {
+        match state {
+            DeviceState::Pjrt(s) => Ok(s),
+            _ => bail!("state was created by a different backend than 'pjrt'"),
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.rt.manifest
+    }
+
+    fn init_state(&self, init_name: &str, seed: i32) -> Result<DeviceState> {
+        Ok(DeviceState::Pjrt(TrainState::init(&self.rt, init_name, seed)?))
+    }
+
+    fn upload_batch(&self, train_name: &str, batch: &Batch) -> Result<DeviceBatch> {
+        self.rt.manifest.get(train_name)?;
+        Ok(DeviceBatch::Pjrt(self.rt.upload_train_batch(batch)?))
+    }
+
+    fn train_step(
+        &self,
+        train_name: &str,
+        state: &mut DeviceState,
+        batch: &DeviceBatch,
+        step: u64,
+        lr: f32,
+        lr_b: f32,
+    ) -> Result<StepOutputs> {
+        // borrow, don't clone: this runs every step and the spec is only read
+        let spec = self.rt.manifest.get(train_name)?;
+        if spec.kind != "train" {
+            bail!("'{train_name}' is not a train executable (kind = {})", spec.kind);
+        }
+        let st = match state {
+            DeviceState::Pjrt(s) => s,
+            _ => bail!("state was created by a different backend than 'pjrt'"),
+        };
+        let ub: &UploadedBatch = match batch {
+            DeviceBatch::Pjrt(u) => u,
+            _ => bail!("batch was uploaded to a different backend"),
+        };
+        if st.buffers.len() != spec.n_state_inputs() {
+            bail!(
+                "state has {} buffers, executable expects {}",
+                st.buffers.len(),
+                spec.n_state_inputs()
+            );
+        }
+        let exe = self.rt.compile(train_name)?;
+
+        // Per step only three f32 scalars (step, lr, lr_b) cross the host
+        // boundary in, and three (loss, grad_norm, n_tokens) come back out.
+        let scalar_lits = [
+            Literal::scalar(step as f32),
+            Literal::scalar(lr),
+            Literal::scalar(lr_b),
+        ];
+        let mut scalar_bufs = Vec::with_capacity(3);
+        for lit in &scalar_lits {
+            scalar_bufs.push(
+                self.rt
+                    .client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow!("scalar upload: {e:?}"))?,
+            );
+        }
+
+        let mut args: Vec<&xla::PjRtBuffer> = st.input_refs();
+        args.extend(ub.bufs.iter());
+        args.extend(scalar_bufs.iter());
+
+        let n_outputs = spec.outputs.len();
+        let mut outs = self.rt.execute_buffers(&exe, &args, n_outputs)?;
+
+        // last three outputs: loss, grad_norm, n_tokens
+        let n_tokens_out = outs.pop().ok_or_else(|| anyhow!("missing n_tokens"))?;
+        let gnorm_out = outs.pop().ok_or_else(|| anyhow!("missing grad_norm"))?;
+        let loss_out = outs.pop().ok_or_else(|| anyhow!("missing loss"))?;
+        let loss = loss_out.scalar_f32()?;
+        let grad_norm = gnorm_out.scalar_f32()?;
+        let n_tokens = n_tokens_out.scalar_f32()?;
+
+        debug_assert_eq!(outs.len(), spec.n_state_outputs());
+        st.apply_step_outputs(&self.rt, outs)?;
+
+        Ok(StepOutputs { loss, grad_norm, n_tokens })
+    }
+
+    fn eval_loss(&self, eval_name: &str, state: &DeviceState, batch: &Batch) -> Result<f32> {
+        let spec = self.rt.manifest.get(eval_name)?;
+        let exe = self.rt.compile(eval_name)?;
+        let st = self.as_pjrt_state(state)?;
+        let n_params = spec.n_trainable + spec.n_frozen;
+        let mut args: Vec<&xla::PjRtBuffer> = st.buffers[..n_params].iter().collect();
+        let batch_lits = [
+            batch.tokens.to_literal(&[batch.batch, batch.seq])?,
+            batch.targets.to_literal(&[batch.batch, batch.seq])?,
+            batch.seg_ids.to_literal(&[batch.batch, batch.seq])?,
+            batch.pos_ids.to_literal(&[batch.batch, batch.seq])?,
+        ];
+        let mut bufs = Vec::new();
+        for lit in &batch_lits {
+            bufs.push(
+                self.rt
+                    .client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow!("eval upload: {e:?}"))?,
+            );
+        }
+        args.extend(bufs.iter());
+        let outs = self.rt.execute_buffers(&exe, &args, spec.outputs.len())?;
+        outs[0].scalar_f32()
+    }
+
+    fn state_params(&self, state: &DeviceState) -> Result<Vec<HostTensor>> {
+        self.as_pjrt_state(state)?
+            .params_to_host()?
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect()
+    }
+
+    fn load_params(&self, state: &mut DeviceState, params: &[HostTensor]) -> Result<()> {
+        let st = match state {
+            DeviceState::Pjrt(s) => s,
+            _ => bail!("state was created by a different backend than 'pjrt'"),
+        };
+        let n = st.n_trainable + st.n_frozen;
+        if params.len() != n {
+            bail!("checkpoint has {} tensors, state expects {n}", params.len());
+        }
+        // two-phase: upload every tensor first, then swap, so a failure
+        // partway through never leaves half-restored device state behind
+        let mut staged = Vec::with_capacity(n);
+        for (i, t) in params.iter().enumerate() {
+            let lit = t.to_literal(t.shape())?;
+            let b = self
+                .rt
+                .client
+                .buffer_from_host_literal(None, &lit)
+                .map_err(|e| anyhow!("uploading checkpoint tensor {i}: {e:?}"))?;
+            let _ = b.to_literal_sync(); // force the async copy before `lit` drops
+            staged.push(b);
+        }
+        for (i, b) in staged.into_iter().enumerate() {
+            st.buffers[i] = b;
+        }
+        Ok(())
+    }
+
+    /// One-shot kernel microbench: run a kernel executable with synthetic
+    /// inputs, returning mean wall time per execution (Table 5).
+    fn bench_kernel(&self, name: &str, reps: usize, warmup: usize) -> Result<f64> {
+        let spec = self.rt.manifest.get(name)?;
+        let exe = self.rt.compile(name)?;
+        let mut rng = crate::util::rng::Rng::new(0xC0FFEE);
+        let mut lits = Vec::new();
+        for inp in &spec.inputs {
+            let n = inp.elements();
+            let lit = match inp.dtype {
+                DType::F32 => {
+                    let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+                    HostTensor::f32(v, inp.shape.clone()).to_literal(&inp.shape)?
+                }
+                DType::I32 => {
+                    let v: Vec<i32> = (0..n).map(|_| rng.range(0, 16) as i32).collect();
+                    HostTensor::i32(v, inp.shape.clone()).to_literal(&inp.shape)?
+                }
+            };
+            lits.push(lit);
+        }
+        let mut bufs = Vec::new();
+        for lit in &lits {
+            bufs.push(
+                self.rt
+                    .client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow!("bench upload: {e:?}"))?,
+            );
+        }
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        // outputs unknown for kernels (manifest lists []); execute and count
+        let first = exe
+            .execute_b(&refs)
+            .map_err(|e| anyhow!("bench execute: {e:?}"))?;
+        let n_out = first[0].len().max(1);
+        for _ in 0..warmup {
+            force(&self.rt.execute_buffers(&exe, &refs, n_out)?)?;
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            force(&self.rt.execute_buffers(&exe, &refs, n_out)?)?;
+        }
+        Ok(t0.elapsed().as_secs_f64() / reps as f64)
+    }
+}
+
+/// Force async execution to completion by reading one output back.
+fn force(outs: &[OutBuf]) -> Result<()> {
+    if let Some(o) = outs.first() {
+        let _ = o.to_literal()?;
+    }
+    Ok(())
+}

@@ -2,35 +2,26 @@
 //! paper's benchmarking methodology, §8 "Critical Finding"), loss tracking
 //! and throughput accounting.
 //!
-//! The hot path is: (state buffers on device) + (batch literals) →
-//! `execute_b` → new state buffers + three scalar metrics. Python never
-//! runs; parameters never round-trip through the host.
+//! The coordinator is backend-agnostic: it drives the
+//! [`crate::backend::Backend`] trait, so the same step loop, metering,
+//! verifier and checkpoint flow serve the pure-Rust CPU reference backend
+//! and the PJRT artifact runtime alike (DESIGN.md §3). Per step, exactly
+//! three scalars (step, lr, lr_b) go in and three (loss, grad_norm,
+//! n_tokens) come out; state advances inside the backend.
 
 pub mod verify;
 
+use crate::backend::{Backend, DeviceBatch, DeviceState};
 use crate::batching::Batch;
+use crate::checkpoint::{self, Codec};
 use crate::manifest::ExecutableSpec;
 use crate::metrics::ThroughputMeter;
 use crate::optim::LrSchedule;
-use crate::runtime::{OutBuf, Runtime, TrainState};
-use anyhow::{anyhow, bail, Result};
+use crate::runtime::HostTensor;
+use anyhow::{bail, Result};
+use std::path::Path;
 use std::rc::Rc;
 pub use verify::{VerificationReport, Verifier};
-use xla::{Literal, PjRtLoadedExecutable};
-
-/// A batch whose four tensors already live on the device.
-///
-/// The source literals are kept alive alongside the buffers:
-/// `BufferFromHostLiteral` is asynchronous, and the transfer may still be
-/// reading host memory after the call returns (see the warning in the
-/// vendored `xla_rs.cc::execute`). Dropping the literal early is a
-/// use-after-free that manifests as a fatal size-check inside PJRT.
-pub struct UploadedBatch {
-    _lits: Vec<Literal>,
-    bufs: Vec<xla::PjRtBuffer>,
-    real_tokens: usize,
-    slot_tokens: usize,
-}
 
 /// Per-step record (loss curve, grad norms — Fig. 17/19 inputs).
 #[derive(Debug, Clone, Copy)]
@@ -59,10 +50,10 @@ pub struct TrainSummary {
 }
 
 pub struct Trainer {
-    rt: Rc<Runtime>,
-    exe: Rc<PjRtLoadedExecutable>,
+    backend: Rc<dyn Backend>,
+    exe_name: String,
     spec: ExecutableSpec,
-    pub state: TrainState,
+    pub state: DeviceState,
     schedule: LrSchedule,
     pub records: Vec<StepRecord>,
     meter: ThroughputMeter,
@@ -72,30 +63,21 @@ pub struct Trainer {
 
 impl Trainer {
     /// Build a trainer for a train-step executable; state must come from the
-    /// matching `init_*` executable (or a checkpoint).
+    /// matching `init_*` executable (or a checkpoint) on the same backend.
     pub fn new(
-        rt: Rc<Runtime>,
+        backend: Rc<dyn Backend>,
         train_exe_name: &str,
-        state: TrainState,
+        state: DeviceState,
         schedule: LrSchedule,
         warmup_steps: usize,
     ) -> Result<Trainer> {
-        let spec = rt.manifest.get(train_exe_name)?.clone();
+        let spec = backend.manifest().get(train_exe_name)?.clone();
         if spec.kind != "train" {
             bail!("'{train_exe_name}' is not a train executable");
         }
-        let expected_state = spec.n_state_inputs();
-        if state.buffers.len() != expected_state {
-            bail!(
-                "state has {} buffers, executable expects {}",
-                state.buffers.len(),
-                expected_state
-            );
-        }
-        let exe = rt.compile(train_exe_name)?;
         Ok(Trainer {
-            rt,
-            exe,
+            backend,
+            exe_name: train_exe_name.to_string(),
             spec,
             state,
             schedule,
@@ -110,104 +92,57 @@ impl Trainer {
         &self.spec
     }
 
-    /// Upload a batch's four tensors to the device once; reusable across
-    /// steps (§Perf L3: the data is identical every epoch — re-uploading it
-    /// per step was the top host-side cost in the profile).
-    pub fn upload_batch(&self, batch: &Batch) -> Result<UploadedBatch> {
-        let lits = vec![
-            batch.tokens.to_literal(&[batch.batch, batch.seq])?,
-            batch.targets.to_literal(&[batch.batch, batch.seq])?,
-            batch.seg_ids.to_literal(&[batch.batch, batch.seq])?,
-            batch.pos_ids.to_literal(&[batch.batch, batch.seq])?,
-        ];
-        let mut bufs = Vec::with_capacity(4);
-        for lit in &lits {
-            bufs.push(
-                self.rt
-                    .client
-                    .buffer_from_host_literal(None, lit)
-                    .map_err(|e| anyhow!("batch upload: {e:?}"))?,
-            );
-        }
-        Ok(UploadedBatch {
-            _lits: lits, // keep host memory alive past the async transfer
-            bufs,
-            real_tokens: batch.real_tokens,
-            slot_tokens: batch.batch * batch.seq,
-        })
+    pub fn backend(&self) -> &Rc<dyn Backend> {
+        &self.backend
     }
 
-    /// Run one training step on a batch (uploads the batch first; use
-    /// `upload_batch` + `step_uploaded` to amortize uploads across epochs).
+    /// Stage a batch on the backend once; reusable across steps (§Perf L3:
+    /// the data is identical every epoch — re-uploading it per step was the
+    /// top host-side cost in the PJRT profile).
+    pub fn upload_batch(&self, batch: &Batch) -> Result<DeviceBatch> {
+        self.backend.upload_batch(&self.exe_name, batch)
+    }
+
+    /// Run one training step on a batch (stages the batch first; use
+    /// `upload_batch` + `step_uploaded` to amortize staging across epochs).
     pub fn step(&mut self, batch: &Batch) -> Result<StepRecord> {
         let ub = self.upload_batch(batch)?;
         self.step_uploaded(&ub)
     }
 
-    /// One training step on a pre-uploaded batch: the hot path. Per step
-    /// only three f32 scalars (step, lr, lr_b) cross the host boundary in,
-    /// and three (loss, grad_norm, n_tokens) come back out.
-    pub fn step_uploaded(&mut self, ub: &UploadedBatch) -> Result<StepRecord> {
+    /// One training step on a pre-staged batch: the hot path.
+    pub fn step_uploaded(&mut self, ub: &DeviceBatch) -> Result<StepRecord> {
         self.step += 1;
         let (lr, lr_b) = self.schedule.lr_pair(self.step);
-        let scalar_lits = [
-            Literal::scalar(self.step as f32),
-            Literal::scalar(lr),
-            Literal::scalar(lr_b),
-        ];
-        let mut scalar_bufs = Vec::with_capacity(3);
-        for lit in &scalar_lits {
-            scalar_bufs.push(
-                self.rt
-                    .client
-                    .buffer_from_host_literal(None, lit)
-                    .map_err(|e| anyhow!("scalar upload: {e:?}"))?,
-            );
-        }
-
-        let mut args: Vec<&xla::PjRtBuffer> = self.state.input_refs();
-        args.extend(ub.bufs.iter());
-        args.extend(scalar_bufs.iter());
-
-        let n_outputs = self.spec.outputs.len();
         self.meter.step_begin();
-        let mut outs = self.rt.execute_buffers(&self.exe, &args, n_outputs)?;
-
-        // last three outputs: loss, grad_norm, n_tokens
-        let n_tokens_out = outs.pop().ok_or_else(|| anyhow!("missing n_tokens"))?;
-        let gnorm_out = outs.pop().ok_or_else(|| anyhow!("missing grad_norm"))?;
-        let loss_out = outs.pop().ok_or_else(|| anyhow!("missing loss"))?;
-        let loss = loss_out.scalar_f32()?;
-        let grad_norm = gnorm_out.scalar_f32()?;
-        let n_tokens = n_tokens_out.scalar_f32()?;
+        let out = self
+            .backend
+            .train_step(&self.exe_name, &mut self.state, ub, self.step, lr, lr_b)?;
         self.meter
-            .step_end(ub.slot_tokens as u64, ub.real_tokens as u64);
-
-        debug_assert_eq!(outs.len(), self.spec.n_state_outputs());
-        self.state.apply_step_outputs(&self.rt, outs)?;
+            .step_end(ub.slot_tokens() as u64, ub.real_tokens() as u64);
 
         let rec = StepRecord {
             step: self.step,
-            loss,
-            grad_norm,
-            n_tokens,
+            loss: out.loss,
+            grad_norm: out.grad_norm,
+            n_tokens: out.n_tokens,
             wall_ms: self.meter.mean_step_ms(),
         };
-        self.verifier.observe(loss, grad_norm);
+        self.verifier.observe(out.loss, out.grad_norm);
         self.records.push(rec);
         Ok(rec)
     }
 
     /// Drive a full run over batches (cycling if needed) for `steps` steps.
-    /// Batches are uploaded to the device once and reused every epoch.
+    /// Batches are staged on the backend once and reused every epoch.
     pub fn run(&mut self, batches: &[Batch], steps: u64) -> Result<TrainSummary> {
         if batches.is_empty() {
             bail!("no batches");
         }
-        // §Perf L3: amortize batch uploads — upload at most `steps` distinct
-        // batches once, then cycle over device-resident buffers.
+        // §Perf L3: amortize batch staging — stage at most `steps` distinct
+        // batches once, then cycle over backend-resident buffers.
         let n_used = (batches.len() as u64).min(steps) as usize;
-        let uploaded: Vec<UploadedBatch> = batches[..n_used]
+        let uploaded: Vec<DeviceBatch> = batches[..n_used]
             .iter()
             .map(|b| self.upload_batch(b))
             .collect::<Result<_>>()?;
@@ -218,7 +153,7 @@ impl Trainer {
         Ok(self.summary())
     }
 
-    /// `run` without upload caching — the pre-optimization baseline, kept
+    /// `run` without staging reuse — the pre-optimization baseline, kept
     /// for the §Perf before/after comparison (`bench_throughput --uncached`).
     pub fn run_uncached(&mut self, batches: &[Batch], steps: u64) -> Result<TrainSummary> {
         if batches.is_empty() {
@@ -254,88 +189,81 @@ impl Trainer {
         }
     }
 
-    /// Evaluate mean loss with a forward-only executable.
+    /// Evaluate mean loss with a forward-only executable on current params.
     pub fn eval(&self, eval_exe_name: &str, batch: &Batch) -> Result<f32> {
-        let spec = self.rt.manifest.get(eval_exe_name)?.clone();
-        let exe = self.rt.compile(eval_exe_name)?;
-        let n_params = spec.n_trainable + spec.n_frozen;
-        let mut args: Vec<&xla::PjRtBuffer> =
-            self.state.buffers[..n_params].iter().collect();
-        let batch_lits = [
-            batch.tokens.to_literal(&[batch.batch, batch.seq])?,
-            batch.targets.to_literal(&[batch.batch, batch.seq])?,
-            batch.seg_ids.to_literal(&[batch.batch, batch.seq])?,
-            batch.pos_ids.to_literal(&[batch.batch, batch.seq])?,
-        ];
-        let mut bufs = Vec::new();
-        for lit in &batch_lits {
-            bufs.push(
-                self.rt
-                    .client
-                    .buffer_from_host_literal(None, lit)
-                    .map_err(|e| anyhow!("eval upload: {e:?}"))?,
-            );
-        }
-        args.extend(bufs.iter());
-        let outs = self.rt.execute_buffers(&exe, &args, spec.outputs.len())?;
-        outs[0].scalar_f32()
+        self.backend.eval_loss(eval_exe_name, &self.state, batch)
+    }
+
+    /// Pull every parameter (trainable + frozen) to host tensors, in the
+    /// state order shared by all backends (the checkpoint format).
+    pub fn params_to_host(&self) -> Result<Vec<HostTensor>> {
+        self.backend.state_params(&self.state)
+    }
+
+    /// Restore parameters from host tensors (see `Backend::load_params`).
+    pub fn load_params(&mut self, params: &[HostTensor]) -> Result<()> {
+        self.backend.load_params(&mut self.state, params)
+    }
+
+    /// Save current parameters to a checkpoint file.
+    pub fn save_checkpoint(&self, path: impl AsRef<Path>, codec: Codec) -> Result<()> {
+        checkpoint::save(path, &self.params_to_host()?, codec)
+    }
+
+    /// Restore parameters from a checkpoint file (optimizer slots keep
+    /// their current values; restart momentum by re-initializing state).
+    pub fn load_checkpoint(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let tensors = checkpoint::load(path)?;
+        self.load_params(&tensors)
     }
 }
 
-/// One-shot: run a kernel microbench executable with synthetic inputs,
-/// returning mean wall time per execution (used by `benches/`).
-pub fn bench_kernel(
-    rt: &Runtime,
-    name: &str,
-    reps: usize,
-    warmup: usize,
-) -> Result<f64> {
-    let spec = rt.manifest.get(name)?.clone();
-    let exe = rt.compile(name)?;
-    let mut rng = crate::util::rng::Rng::new(0xC0FFEE);
-    let mut lits = Vec::new();
-    for inp in &spec.inputs {
-        let n = inp.elements();
-        let lit = match inp.dtype {
-            crate::manifest::DType::F32 => {
-                let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
-                crate::runtime::HostTensor::f32(v, inp.shape.clone()).to_literal(&inp.shape)?
-            }
-            crate::manifest::DType::I32 => {
-                let v: Vec<i32> = (0..n).map(|_| rng.range(0, 16) as i32).collect();
-                crate::runtime::HostTensor::i32(v, inp.shape.clone()).to_literal(&inp.shape)?
-            }
-        };
-        lits.push(lit);
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cpu::CpuBackend;
+    use crate::harness;
+
+    fn cpu_trainer(exe: &str, init: &str, seed: i32) -> Trainer {
+        let backend: Rc<dyn Backend> = Rc::new(CpuBackend::new());
+        let state = backend.init_state(init, seed).unwrap();
+        Trainer::new(backend, exe, state, LrSchedule::constant(5e-3, 1.0), 0).unwrap()
     }
-    let mut bufs = Vec::new();
-    for lit in &lits {
-        bufs.push(
-            rt.client
-                .buffer_from_host_literal(None, lit)
-                .map_err(|e| anyhow!("bench upload: {e:?}"))?,
+
+    #[test]
+    fn rejects_non_train_executable() {
+        let backend: Rc<dyn Backend> = Rc::new(CpuBackend::new());
+        let state = backend.init_state("init_chronicals", 1).unwrap();
+        let r = Trainer::new(
+            backend,
+            "eval_chronicals",
+            state,
+            LrSchedule::constant(1e-3, 1.0),
+            0,
         );
+        assert!(r.is_err());
     }
-    let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
-    // outputs unknown for kernels (manifest lists []); execute and count
-    let first = exe
-        .execute_b(&refs)
-        .map_err(|e| anyhow!("bench execute: {e:?}"))?;
-    let n_out = first[0].len().max(1);
-    for _ in 0..warmup {
-        force(&rt.execute_buffers(&exe, &refs, n_out)?)?;
-    }
-    let t0 = std::time::Instant::now();
-    for _ in 0..reps {
-        force(&rt.execute_buffers(&exe, &refs, n_out)?)?;
-    }
-    Ok(t0.elapsed().as_secs_f64() / reps as f64)
-}
 
-/// Force async execution to completion by reading one output back.
-fn force(outs: &[OutBuf]) -> Result<()> {
-    if let Some(o) = outs.first() {
-        let _ = o.to_literal()?;
+    #[test]
+    fn step_records_accumulate() {
+        let mut t = cpu_trainer("train_step_chronicals", "init_chronicals", 5);
+        let (_tok, exs) = harness::build_corpus(64, 5, t.spec().model_config.vocab, 48);
+        let batches =
+            crate::batching::packed_batches(&exs, t.spec().batch, t.spec().seq);
+        let r1 = t.step(&batches[0]).unwrap();
+        let r2 = t.step(&batches[0]).unwrap();
+        assert_eq!(r1.step, 1);
+        assert_eq!(r2.step, 2);
+        assert_eq!(t.records.len(), 2);
+        assert!(r2.loss < r1.loss, "{} -> {}", r1.loss, r2.loss);
     }
-    Ok(())
+
+    #[test]
+    fn summary_before_any_step_is_nan_loss() {
+        let t = cpu_trainer("train_step_chronicals", "init_chronicals", 5);
+        let s = t.summary();
+        assert_eq!(s.steps, 0);
+        assert!(s.first_loss.is_nan());
+        assert!(!s.verification.is_training);
+    }
 }

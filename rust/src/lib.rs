@@ -10,19 +10,25 @@
 //!   to HLO text artifacts by `python/compile/aot.py`.
 //! * **L3** — this crate: the training coordinator. It owns the event loop,
 //!   data pipeline (synthetic instruction corpus → tokenize → BFD-pack →
-//!   batch), the PJRT runtime that executes the AOT artifacts, metrics
+//!   batch), the pluggable execution backends (`backend::Backend`), metrics
 //!   (throughput, MFU, memory model), benchmark verification (the paper's
 //!   gradient-norm methodology), checkpointing and the CLI.
 //!
-//! Python never runs on the training path: `make artifacts` is the only
-//! Python invocation; afterwards the `chronicals` binary is self-contained.
+//! Execution is backend-pluggable (DESIGN.md §3): the default
+//! `backend::cpu::CpuBackend` is a deterministic pure-Rust reference of the
+//! full train step, so `cargo test` drives the whole pipeline hermetically —
+//! no Python, no artifacts, no native deps. The `pjrt` feature adds the
+//! PJRT runtime that executes the AOT artifacts; there, Python never runs
+//! on the training path: `make artifacts` is the only Python invocation and
+//! afterwards the `chronicals` binary is self-contained.
 
+pub mod backend;
 pub mod batching;
 pub mod checkpoint;
-pub mod harness;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod harness;
 pub mod manifest;
 pub mod metrics;
 pub mod optim;

@@ -7,14 +7,19 @@
 //!   inspect  — manifest / analytic memory model (Table 10, §S15)
 //!   verify   — the Unsloth-bug demonstration (Fig. 10/22)
 //!
+//! Every subcommand takes `--backend cpu|pjrt` (default `cpu`: the
+//! hermetic pure-Rust reference backend; `pjrt` executes AOT artifacts and
+//! needs a `--features pjrt` build plus `make artifacts`).
+//!
 //! Arg parsing is hand-rolled (offline build: no clap).
 
 use anyhow::{anyhow, bail, Result};
+use chronicals::backend::cpu::CpuBackend;
+use chronicals::backend::Backend;
 use chronicals::config::RunConfig;
 use chronicals::harness;
 use chronicals::metrics::{MemoryModel, Precision};
 use chronicals::report;
-use chronicals::runtime::Runtime;
 use chronicals::util::commas;
 use std::rc::Rc;
 
@@ -102,20 +107,52 @@ USAGE: chronicals <command> [--flags]
 COMMANDS
   train    --preset <full_ft|lora|lora_plus|e2e> | --config <file.toml>
            [--executable NAME] [--steps N] [--packed true|false]
-           [--lr X] [--lora-plus-ratio X] [--artifacts DIR]
+           [--lr X] [--lora-plus-ratio X] [--backend cpu|pjrt]
+           [--artifacts DIR]
   bench    --summary | --ablation | --kernels | --lora | --full
-           [--steps N] [--reps N] [--artifacts DIR]
+           [--steps N] [--reps N] [--backend cpu|pjrt] [--artifacts DIR]
   pack     [--capacity N] [--examples N]
-  inspect  --manifest | --memory [--artifacts DIR]
-  verify   [--steps N] [--artifacts DIR]   (the Unsloth-bug demo)
+  inspect  --manifest | --memory [--backend cpu|pjrt] [--artifacts DIR]
+  verify   [--steps N] [--backend cpu|pjrt] [--artifacts DIR]
+           (the Unsloth-bug demo)
+
+BACKENDS
+  cpu   (default) pure-Rust deterministic reference — no artifacts needed
+  pjrt  AOT HLO artifacts via PJRT — requires a `--features pjrt` build,
+        vendored xla-rs bindings and `make artifacts`
 ",
         chronicals::version()
     );
 }
 
-fn load_runtime(args: &Args) -> Result<Rc<Runtime>> {
-    let dir = args.get("artifacts").unwrap_or("artifacts");
-    Ok(Rc::new(Runtime::new(dir)?))
+#[cfg(feature = "pjrt")]
+fn load_pjrt(artifacts: &str) -> Result<Rc<dyn Backend>> {
+    Ok(Rc::new(chronicals::backend::pjrt::PjrtBackend::new(
+        artifacts,
+    )?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn load_pjrt(_artifacts: &str) -> Result<Rc<dyn Backend>> {
+    bail!(
+        "this binary was built without PJRT support; rebuild with \
+         `cargo build --features pjrt` and vendored xla-rs (DESIGN.md §4.2)"
+    )
+}
+
+fn load_backend_named(name: &str, artifacts: &str) -> Result<Rc<dyn Backend>> {
+    match name {
+        "cpu" => Ok(Rc::new(CpuBackend::new())),
+        "pjrt" => load_pjrt(artifacts),
+        other => bail!("unknown backend '{other}' (expected cpu | pjrt)"),
+    }
+}
+
+fn load_backend(args: &Args) -> Result<Rc<dyn Backend>> {
+    load_backend_named(
+        args.get("backend").unwrap_or("cpu"),
+        args.get("artifacts").unwrap_or("artifacts"),
+    )
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -145,13 +182,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.artifacts_dir = d.to_string();
     }
 
-    let rt = Rc::new(Runtime::new(&cfg.artifacts_dir)?);
+    let backend = load_backend_named(args.get("backend").unwrap_or("cpu"), &cfg.artifacts_dir)?;
     println!(
-        "training {} for {} steps (packed={}, lr={}, λ={})",
-        cfg.executable, cfg.steps, cfg.packed, cfg.lr, cfg.lora_plus_ratio
+        "training {} on the {} backend for {} steps (packed={}, lr={}, λ={})",
+        cfg.executable,
+        backend.name(),
+        cfg.steps,
+        cfg.packed,
+        cfg.lr,
+        cfg.lora_plus_ratio
     );
     let t0 = std::time::Instant::now();
-    let s = harness::run_variant(&rt, &cfg)?;
+    let s = harness::run_variant(&backend, &cfg)?;
     println!(
         "done in {:.1}s: loss {:.4} -> {:.4} | {} tok/s | {:.1} ms/step ±{:.1} | {}",
         t0.elapsed().as_secs_f64(),
@@ -169,16 +211,16 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
-    let rt = load_runtime(args)?;
+    let backend = load_backend(args)?;
     let steps = args.u64_or("steps", 12);
     let reps = args.u64_or("reps", 20) as usize;
     let mut any = false;
     if args.has("summary") {
-        println!("{}", harness::summary_report(&rt, steps)?);
+        println!("{}", harness::summary_report(&backend, steps)?);
         any = true;
     }
     if args.has("full") {
-        let rows = harness::full_ft_comparison(&rt, steps)?;
+        let rows = harness::full_ft_comparison(&backend, steps)?;
         println!(
             "{}",
             report::throughput_table(
@@ -190,7 +232,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         any = true;
     }
     if args.has("lora") {
-        let rows = harness::lora_comparison(&rt, steps)?;
+        let rows = harness::lora_comparison(&backend, steps)?;
         println!(
             "{}",
             report::throughput_table(
@@ -202,12 +244,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
         any = true;
     }
     if args.has("ablation") {
-        let rows = harness::ablation_ladder(&rt, steps)?;
+        let rows = harness::ablation_ladder(&backend, steps)?;
         println!("{}", report::ablation_table(&rows));
         any = true;
     }
     if args.has("kernels") {
-        let rows = harness::kernel_microbench(&rt, reps)?;
+        let rows = harness::kernel_microbench(backend.as_ref(), reps)?;
         println!("{}", report::kernel_table(&rows));
         any = true;
     }
@@ -226,13 +268,15 @@ fn cmd_pack(args: &Args) -> Result<()> {
 
 fn cmd_inspect(args: &Args) -> Result<()> {
     if args.has("manifest") {
-        let rt = load_runtime(args)?;
+        let backend = load_backend(args)?;
+        let manifest = backend.manifest();
         println!(
-            "manifest: profile={} executables={}",
-            rt.manifest.profile,
-            rt.manifest.executables.len()
+            "manifest: backend={} profile={} executables={}",
+            backend.name(),
+            manifest.profile,
+            manifest.executables.len()
         );
-        for e in &rt.manifest.executables {
+        for e in &manifest.executables {
             println!(
                 "  {:<34} kind={:<6} B={} S={} params={} trainable={}",
                 e.name,
@@ -278,7 +322,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 }
 
 fn cmd_verify(args: &Args) -> Result<()> {
-    let rt = load_runtime(args)?;
+    let backend = load_backend(args)?;
     let steps = args.u64_or("steps", 8);
     println!("reproducing the paper's Unsloth-bug finding (Fig. 10/22)\n");
     let runs = [
@@ -294,7 +338,7 @@ fn cmd_verify(args: &Args) -> Result<()> {
             warmup_steps: 1,
             ..RunConfig::default()
         };
-        let s = harness::run_variant(&rt, &cfg)?;
+        let s = harness::run_variant(&backend, &cfg)?;
         println!(
             "{label}: {} tok/s | loss {:.4} -> {:.4} | grad_norm in [{:.2e}, {:.2e}] | {}",
             commas(s.tokens_per_sec as u64),

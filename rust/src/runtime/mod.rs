@@ -1,300 +1,17 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
-//! the training hot path with device-resident state.
+//! Runtime substrate: host tensors (always available) and the PJRT
+//! execution runtime (behind the off-by-default `pjrt` feature).
 //!
-//! Key properties:
-//! * **HLO text interchange** — `HloModuleProto::from_text_file` reassigns
-//!   instruction ids, sidestepping the 64-bit-id protos jax ≥ 0.5 emits
-//!   that xla_extension 0.5.1 rejects.
-//! * **Compile cache** — each executable is compiled exactly once per
-//!   process and shared (`Rc`).
-//! * **Device residency** — training state (params + optimizer slots) lives
-//!   in `PjRtBuffer`s between steps; only the batch (a few KiB of i32) and
-//!   three scalar metrics cross the host boundary per step.
+//! The data pipeline, checkpointing and the CPU reference backend only need
+//! [`HostTensor`]; everything XLA-shaped — literals, device buffers,
+//! compiled executables — lives in [`pjrt`] so the default build is
+//! hermetic (DESIGN.md §4.2).
 
 pub mod tensor;
 
-use crate::manifest::{ExecutableSpec, Manifest, Role};
-use anyhow::{anyhow, bail, Result};
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::rc::Rc;
 pub use tensor::HostTensor;
-use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
-pub struct Runtime {
-    pub client: PjRtClient,
-    pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
-}
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-impl Runtime {
-    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
-    }
-
-    /// Compile (or fetch from cache) an executable by manifest name.
-    pub fn compile(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(name) {
-            return Ok(exe.clone());
-        }
-        let spec = self.manifest.get(name)?;
-        let path = self.manifest.hlo_path(spec);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("loading HLO text {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?,
-        );
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Upload a host tensor to the device.
-    pub fn upload(&self, t: &HostTensor) -> Result<PjRtBuffer> {
-        match t {
-            HostTensor::F32 { data, shape } => self
-                .client
-                .buffer_from_host_buffer(data, shape, None)
-                .map_err(|e| anyhow!("upload f32: {e:?}")),
-            HostTensor::I32 { data, shape } => self
-                .client
-                .buffer_from_host_buffer(data, shape, None)
-                .map_err(|e| anyhow!("upload i32: {e:?}")),
-        }
-    }
-
-    /// Execute with device buffers; returns the flat list of output buffers.
-    ///
-    /// jax lowers with `return_tuple=True`; PJRT may hand the root tuple
-    /// back either pre-exploded (one buffer per leaf) or as a single tuple
-    /// buffer. Both are handled; the exploded form keeps state on device.
-    pub fn execute_buffers(
-        &self,
-        exe: &PjRtLoadedExecutable,
-        args: &[&PjRtBuffer],
-        n_outputs: usize,
-    ) -> Result<Vec<OutBuf>> {
-        let res = exe
-            .execute_b(args)
-            .map_err(|e| anyhow!("execute_b: {e:?}"))?;
-        self.collect_outputs(res, n_outputs)
-    }
-
-    /// Execute with host literals (used by init / one-shot paths).
-    pub fn execute_literals(
-        &self,
-        exe: &PjRtLoadedExecutable,
-        args: &[Literal],
-        n_outputs: usize,
-    ) -> Result<Vec<OutBuf>> {
-        let res = exe
-            .execute::<Literal>(args)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        self.collect_outputs(res, n_outputs)
-    }
-
-    fn collect_outputs(
-        &self,
-        mut res: Vec<Vec<PjRtBuffer>>,
-        n_outputs: usize,
-    ) -> Result<Vec<OutBuf>> {
-        if res.is_empty() || res[0].is_empty() {
-            bail!("executable produced no outputs");
-        }
-        let bufs = std::mem::take(&mut res[0]);
-        if bufs.len() == n_outputs {
-            return Ok(bufs.into_iter().map(OutBuf::Device).collect());
-        }
-        if bufs.len() == 1 && n_outputs > 1 {
-            // single tuple buffer: pull to host once, decompose
-            let lit = bufs[0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("tuple readback: {e:?}"))?;
-            let parts = lit
-                .to_tuple()
-                .map_err(|e| anyhow!("tuple decompose: {e:?}"))?;
-            if parts.len() != n_outputs {
-                bail!("expected {n_outputs} outputs, tuple has {}", parts.len());
-            }
-            return Ok(parts.into_iter().map(OutBuf::Host).collect());
-        }
-        bail!("expected {n_outputs} outputs, got {} buffers", bufs.len())
-    }
-
-    /// Build the per-step batch + scalar literals for a train executable,
-    /// in the exact manifest input order following the state inputs.
-    pub fn batch_literals(
-        spec: &ExecutableSpec,
-        tensors: &HashMap<&str, HostTensor>,
-    ) -> Result<Vec<Literal>> {
-        let mut out = Vec::new();
-        for inp in &spec.inputs {
-            match inp.role {
-                Role::Param | Role::Frozen | Role::Opt => continue,
-                Role::Batch | Role::Scalar => {
-                    let t = tensors.get(inp.name.as_str()).ok_or_else(|| {
-                        anyhow!("missing batch tensor '{}'", inp.name)
-                    })?;
-                    if t.elements() != inp.elements() {
-                        bail!(
-                            "batch tensor '{}' has {} elements, expected {}",
-                            inp.name,
-                            t.elements(),
-                            inp.elements()
-                        );
-                    }
-                    out.push(t.to_literal(&inp.shape)?);
-                }
-            }
-        }
-        Ok(out)
-    }
-}
-
-/// Output of an execution: either still on device or already a host literal
-/// (when PJRT returned a fused tuple).
-pub enum OutBuf {
-    Device(PjRtBuffer),
-    Host(Literal),
-}
-
-impl OutBuf {
-    pub fn to_literal(&self) -> Result<Literal> {
-        match self {
-            OutBuf::Device(b) => b
-                .to_literal_sync()
-                .map_err(|e| anyhow!("readback: {e:?}")),
-            OutBuf::Host(l) => Ok(clone_literal(l)),
-        }
-    }
-
-    pub fn scalar_f32(&self) -> Result<f32> {
-        let lit = self.to_literal()?;
-        lit.get_first_element::<f32>()
-            .map_err(|e| anyhow!("scalar readback: {e:?}"))
-    }
-}
-
-/// The xla crate's Literal lacks Clone; round-trip through raw bytes.
-pub fn clone_literal(l: &Literal) -> Literal {
-    let shape = l.array_shape().expect("array literal");
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    match shape.ty() {
-        xla::ElementType::F32 => {
-            let v = l.to_vec::<f32>().expect("f32 literal");
-            Literal::vec1(&v).reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>()).unwrap()
-        }
-        xla::ElementType::S32 => {
-            let v = l.to_vec::<i32>().expect("i32 literal");
-            Literal::vec1(&v).reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>()).unwrap()
-        }
-        other => panic!("unsupported literal type {other:?}"),
-    }
-}
-
-/// Persistent, device-resident training state for one executable family.
-pub struct TrainState {
-    /// params (trainable then frozen) then slot0 then slot1 — manifest order.
-    pub buffers: Vec<PjRtBuffer>,
-    pub n_trainable: usize,
-    pub n_frozen: usize,
-    pub n_slots: usize,
-}
-
-impl TrainState {
-    /// Initialize by running the family's `init_<variant>` executable.
-    pub fn init(rt: &Runtime, init_name: &str, seed: i32) -> Result<TrainState> {
-        let spec = rt.manifest.get(init_name)?.clone();
-        let exe = rt.compile(init_name)?;
-        let n_out = spec.outputs.len();
-        let outs = rt.execute_literals(&exe, &[Literal::scalar(seed)], n_out)?;
-        let mut buffers = Vec::with_capacity(n_out);
-        for o in outs {
-            buffers.push(match o {
-                OutBuf::Device(b) => b,
-                OutBuf::Host(l) => {
-                    // BufferFromHostLiteral is async: force the transfer to
-                    // finish before `l` drops (dormant path; see UploadedBatch)
-                    let b = rt
-                        .client
-                        .buffer_from_host_literal(None, &l)
-                        .map_err(|e| anyhow!("re-upload init output: {e:?}"))?;
-                    let _ = b.to_literal_sync();
-                    b
-                }
-            });
-        }
-        Ok(TrainState {
-            buffers,
-            n_trainable: spec.n_trainable,
-            n_frozen: spec.n_frozen,
-            n_slots: spec.n_slots,
-        })
-    }
-
-    /// Apply a train step's outputs: replace trainable params + opt slots.
-    pub fn apply_step_outputs(&mut self, rt: &Runtime, outs: Vec<OutBuf>) -> Result<()> {
-        let nt = self.n_trainable;
-        for (i, o) in outs.into_iter().enumerate() {
-            let buf = match o {
-                OutBuf::Device(b) => b,
-                OutBuf::Host(l) => {
-                    let b = rt
-                        .client
-                        .buffer_from_host_literal(None, &l)
-                        .map_err(|e| anyhow!("re-upload step output: {e:?}"))?;
-                    let _ = b.to_literal_sync(); // sync before `l` drops
-                    b
-                }
-            };
-            let dst = if i < nt {
-                i // trainable params are the first nt state entries
-            } else {
-                // slots follow the frozen params in the state layout
-                nt + self.n_frozen + (i - nt)
-            };
-            self.buffers[dst] = buf;
-        }
-        Ok(())
-    }
-
-    /// Borrow all state buffers in input order.
-    pub fn input_refs(&self) -> Vec<&PjRtBuffer> {
-        self.buffers.iter().collect()
-    }
-
-    /// Pull every parameter (trainable + frozen) to host literals.
-    pub fn params_to_host(&self) -> Result<Vec<Literal>> {
-        self.buffers[..self.n_trainable + self.n_frozen]
-            .iter()
-            .map(|b| b.to_literal_sync().map_err(|e| anyhow!("readback: {e:?}")))
-            .collect()
-    }
-}
-
-/// Convenience: make `(name -> HostTensor)` maps for a training batch.
-pub fn batch_map<'a>(
-    tokens: &'a HostTensor,
-    targets: &'a HostTensor,
-    seg_ids: &'a HostTensor,
-    pos_ids: &'a HostTensor,
-    step: f32,
-    lr: f32,
-    lr_b: f32,
-) -> (HashMap<&'a str, HostTensor>, [f32; 3]) {
-    let mut m: HashMap<&str, HostTensor> = HashMap::new();
-    m.insert("tokens", tokens.clone());
-    m.insert("targets", targets.clone());
-    m.insert("seg_ids", seg_ids.clone());
-    m.insert("pos_ids", pos_ids.clone());
-    m.insert("step", HostTensor::scalar_f32(step));
-    m.insert("lr", HostTensor::scalar_f32(lr));
-    m.insert("lr_b", HostTensor::scalar_f32(lr_b));
-    (m, [step, lr, lr_b])
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{clone_literal, OutBuf, Runtime, TrainState, UploadedBatch};

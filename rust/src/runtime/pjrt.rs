@@ -1,0 +1,363 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the training hot path with device-resident state.
+//!
+//! Key properties:
+//! * **HLO text interchange** — `HloModuleProto::from_text_file` reassigns
+//!   instruction ids, sidestepping the 64-bit-id protos jax ≥ 0.5 emits
+//!   that xla_extension 0.5.1 rejects.
+//! * **Compile cache** — each executable is compiled exactly once per
+//!   process and shared (`Rc`).
+//! * **Device residency** — training state (params + optimizer slots) lives
+//!   in `PjRtBuffer`s between steps; only the batch (a few KiB of i32) and
+//!   three scalar metrics cross the host boundary per step.
+//!
+//! This module is `pjrt`-feature-gated; the trait-level entry point is
+//! `crate::backend::pjrt::PjrtBackend`.
+
+use crate::batching::Batch;
+use crate::manifest::{ExecutableSpec, Manifest, Role};
+use crate::runtime::HostTensor;
+use anyhow::{anyhow, bail, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch from cache) an executable by manifest name.
+    pub fn compile(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.get(name)?;
+        let path = self.manifest.hlo_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("loading HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn upload(&self, t: &HostTensor) -> Result<PjRtBuffer> {
+        match t {
+            HostTensor::F32 { data, shape } => self
+                .client
+                .buffer_from_host_buffer(data, shape, None)
+                .map_err(|e| anyhow!("upload f32: {e:?}")),
+            HostTensor::I32 { data, shape } => self
+                .client
+                .buffer_from_host_buffer(data, shape, None)
+                .map_err(|e| anyhow!("upload i32: {e:?}")),
+        }
+    }
+
+    /// Upload a batch's four tensors once; reusable across steps (§Perf L3:
+    /// the data is identical every epoch — re-uploading it per step was the
+    /// top host-side cost in the profile).
+    pub fn upload_train_batch(&self, batch: &Batch) -> Result<UploadedBatch> {
+        let lits = vec![
+            batch.tokens.to_literal(&[batch.batch, batch.seq])?,
+            batch.targets.to_literal(&[batch.batch, batch.seq])?,
+            batch.seg_ids.to_literal(&[batch.batch, batch.seq])?,
+            batch.pos_ids.to_literal(&[batch.batch, batch.seq])?,
+        ];
+        let mut bufs = Vec::with_capacity(4);
+        for lit in &lits {
+            bufs.push(
+                self.client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow!("batch upload: {e:?}"))?,
+            );
+        }
+        Ok(UploadedBatch {
+            _lits: lits, // keep host memory alive past the async transfer
+            bufs,
+            real_tokens: batch.real_tokens,
+            slot_tokens: batch.batch * batch.seq,
+        })
+    }
+
+    /// Execute with device buffers; returns the flat list of output buffers.
+    ///
+    /// jax lowers with `return_tuple=True`; PJRT may hand the root tuple
+    /// back either pre-exploded (one buffer per leaf) or as a single tuple
+    /// buffer. Both are handled; the exploded form keeps state on device.
+    pub fn execute_buffers(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        args: &[&PjRtBuffer],
+        n_outputs: usize,
+    ) -> Result<Vec<OutBuf>> {
+        let res = exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute_b: {e:?}"))?;
+        self.collect_outputs(res, n_outputs)
+    }
+
+    /// Execute with host literals (used by init / one-shot paths).
+    pub fn execute_literals(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        args: &[Literal],
+        n_outputs: usize,
+    ) -> Result<Vec<OutBuf>> {
+        let res = exe
+            .execute::<Literal>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        self.collect_outputs(res, n_outputs)
+    }
+
+    fn collect_outputs(
+        &self,
+        mut res: Vec<Vec<PjRtBuffer>>,
+        n_outputs: usize,
+    ) -> Result<Vec<OutBuf>> {
+        if res.is_empty() || res[0].is_empty() {
+            bail!("executable produced no outputs");
+        }
+        let bufs = std::mem::take(&mut res[0]);
+        if bufs.len() == n_outputs {
+            return Ok(bufs.into_iter().map(OutBuf::Device).collect());
+        }
+        if bufs.len() == 1 && n_outputs > 1 {
+            // single tuple buffer: pull to host once, decompose
+            let lit = bufs[0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("tuple readback: {e:?}"))?;
+            let parts = lit
+                .to_tuple()
+                .map_err(|e| anyhow!("tuple decompose: {e:?}"))?;
+            if parts.len() != n_outputs {
+                bail!("expected {n_outputs} outputs, tuple has {}", parts.len());
+            }
+            return Ok(parts.into_iter().map(OutBuf::Host).collect());
+        }
+        bail!("expected {n_outputs} outputs, got {} buffers", bufs.len())
+    }
+
+    /// Build the per-step batch + scalar literals for a train executable,
+    /// in the exact manifest input order following the state inputs.
+    pub fn batch_literals(
+        spec: &ExecutableSpec,
+        tensors: &HashMap<&str, HostTensor>,
+    ) -> Result<Vec<Literal>> {
+        let mut out = Vec::new();
+        for inp in &spec.inputs {
+            match inp.role {
+                Role::Param | Role::Frozen | Role::Opt => continue,
+                Role::Batch | Role::Scalar => {
+                    let t = tensors.get(inp.name.as_str()).ok_or_else(|| {
+                        anyhow!("missing batch tensor '{}'", inp.name)
+                    })?;
+                    if t.elements() != inp.elements() {
+                        bail!(
+                            "batch tensor '{}' has {} elements, expected {}",
+                            inp.name,
+                            t.elements(),
+                            inp.elements()
+                        );
+                    }
+                    out.push(t.to_literal(&inp.shape)?);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// A batch whose four tensors already live on the device.
+///
+/// The source literals are kept alive alongside the buffers:
+/// `BufferFromHostLiteral` is asynchronous, and the transfer may still be
+/// reading host memory after the call returns (see the warning in the
+/// vendored `xla_rs.cc::execute`). Dropping the literal early is a
+/// use-after-free that manifests as a fatal size-check inside PJRT.
+pub struct UploadedBatch {
+    _lits: Vec<Literal>,
+    pub(crate) bufs: Vec<PjRtBuffer>,
+    pub real_tokens: usize,
+    pub slot_tokens: usize,
+}
+
+/// Output of an execution: either still on device or already a host literal
+/// (when PJRT returned a fused tuple).
+pub enum OutBuf {
+    Device(PjRtBuffer),
+    Host(Literal),
+}
+
+impl OutBuf {
+    pub fn to_literal(&self) -> Result<Literal> {
+        match self {
+            OutBuf::Device(b) => b
+                .to_literal_sync()
+                .map_err(|e| anyhow!("readback: {e:?}")),
+            OutBuf::Host(l) => clone_literal(l),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let lit = self.to_literal()?;
+        lit.get_first_element::<f32>()
+            .map_err(|e| anyhow!("scalar readback: {e:?}"))
+    }
+}
+
+/// The xla crate's Literal lacks Clone; round-trip through raw bytes.
+/// Errors (rather than panicking) on tuple literals and element types the
+/// artifacts never produce.
+pub fn clone_literal(l: &Literal) -> Result<Literal> {
+    let shape = l
+        .array_shape()
+        .map_err(|e| anyhow!("clone_literal: not an array literal: {e:?}"))?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let v = l.to_vec::<f32>().map_err(|e| anyhow!("clone f32: {e:?}"))?;
+            Literal::vec1(&v)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("clone reshape: {e:?}"))
+        }
+        xla::ElementType::S32 => {
+            let v = l.to_vec::<i32>().map_err(|e| anyhow!("clone i32: {e:?}"))?;
+            Literal::vec1(&v)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("clone reshape: {e:?}"))
+        }
+        other => bail!("clone_literal: unsupported element type {other:?} (artifacts are f32/i32 only)"),
+    }
+}
+
+/// Persistent, device-resident training state for one executable family.
+pub struct TrainState {
+    /// params (trainable then frozen) then slot0 then slot1 — manifest order.
+    pub buffers: Vec<PjRtBuffer>,
+    pub n_trainable: usize,
+    pub n_frozen: usize,
+    pub n_slots: usize,
+}
+
+impl TrainState {
+    /// Initialize by running the family's `init_<variant>` executable.
+    pub fn init(rt: &Runtime, init_name: &str, seed: i32) -> Result<TrainState> {
+        let spec = rt.manifest.get(init_name)?.clone();
+        let exe = rt.compile(init_name)?;
+        let n_out = spec.outputs.len();
+        let outs = rt.execute_literals(&exe, &[Literal::scalar(seed)], n_out)?;
+        let mut buffers = Vec::with_capacity(n_out);
+        for o in outs {
+            buffers.push(match o {
+                OutBuf::Device(b) => b,
+                OutBuf::Host(l) => {
+                    // BufferFromHostLiteral is async: force the transfer to
+                    // finish before `l` drops (dormant path; see UploadedBatch)
+                    let b = rt
+                        .client
+                        .buffer_from_host_literal(None, &l)
+                        .map_err(|e| anyhow!("re-upload init output: {e:?}"))?;
+                    let _ = b.to_literal_sync();
+                    b
+                }
+            });
+        }
+        Ok(TrainState {
+            buffers,
+            n_trainable: spec.n_trainable,
+            n_frozen: spec.n_frozen,
+            n_slots: spec.n_slots,
+        })
+    }
+
+    /// Apply a train step's outputs: replace trainable params + opt slots.
+    pub fn apply_step_outputs(&mut self, rt: &Runtime, outs: Vec<OutBuf>) -> Result<()> {
+        let nt = self.n_trainable;
+        for (i, o) in outs.into_iter().enumerate() {
+            let buf = match o {
+                OutBuf::Device(b) => b,
+                OutBuf::Host(l) => {
+                    let b = rt
+                        .client
+                        .buffer_from_host_literal(None, &l)
+                        .map_err(|e| anyhow!("re-upload step output: {e:?}"))?;
+                    let _ = b.to_literal_sync(); // sync before `l` drops
+                    b
+                }
+            };
+            let dst = if i < nt {
+                i // trainable params are the first nt state entries
+            } else {
+                // slots follow the frozen params in the state layout
+                nt + self.n_frozen + (i - nt)
+            };
+            self.buffers[dst] = buf;
+        }
+        Ok(())
+    }
+
+    /// Borrow all state buffers in input order.
+    pub fn input_refs(&self) -> Vec<&PjRtBuffer> {
+        self.buffers.iter().collect()
+    }
+
+    /// Pull every parameter (trainable + frozen) to host literals.
+    pub fn params_to_host(&self) -> Result<Vec<Literal>> {
+        self.buffers[..self.n_trainable + self.n_frozen]
+            .iter()
+            .map(|b| b.to_literal_sync().map_err(|e| anyhow!("readback: {e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clone_literal_roundtrips_f32_and_i32() {
+        let f = Literal::vec1(&[1.0f32, -2.5, 3.25]).reshape(&[3]).unwrap();
+        let c = clone_literal(&f).unwrap();
+        assert_eq!(c.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.25]);
+
+        let i = Literal::vec1(&[7i32, -1]).reshape(&[2]).unwrap();
+        let c = clone_literal(&i).unwrap();
+        assert_eq!(c.to_vec::<i32>().unwrap(), vec![7, -1]);
+    }
+
+    #[test]
+    fn clone_literal_rejects_unsupported_element_type() {
+        let d = Literal::vec1(&[1.0f64, 2.0]);
+        let err = clone_literal(&d).unwrap_err();
+        assert!(err.to_string().contains("unsupported element type"), "{err}");
+    }
+
+    #[test]
+    fn outbuf_host_to_literal_propagates_clone_errors() {
+        let ok = OutBuf::Host(Literal::vec1(&[4.0f32]));
+        assert!(ok.to_literal().is_ok());
+        assert!((ok.scalar_f32().unwrap() - 4.0).abs() < 1e-6);
+
+        let bad = OutBuf::Host(Literal::vec1(&[4.0f64]));
+        assert!(bad.to_literal().is_err());
+        assert!(bad.scalar_f32().is_err());
+    }
+}

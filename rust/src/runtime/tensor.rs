@@ -1,8 +1,10 @@
 //! Host-side tensors: the tiny bridge type between the data pipeline and
-//! XLA literals. Only f32 and i32 exist in the artifacts.
+//! the execution backends. Only f32 and i32 exist anywhere in the system.
+//!
+//! The XLA literal conversions are `pjrt`-feature-gated; the default build
+//! (CPU reference backend) uses the plain slice accessors.
 
-use anyhow::{anyhow, bail, Result};
-use xla::Literal;
+use anyhow::{bail, Result};
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum HostTensor {
@@ -49,6 +51,14 @@ impl HostTensor {
         }
     }
 
+    /// Mutable f32 view (the CPU backend's in-place parameter updates).
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             HostTensor::I32 { data, .. } => Ok(data),
@@ -58,20 +68,22 @@ impl HostTensor {
 
     /// Convert to an XLA literal with the given target shape (must have the
     /// same element count; scalars use an empty shape).
-    pub fn to_literal(&self, shape: &[usize]) -> Result<Literal> {
+    #[cfg(feature = "pjrt")]
+    pub fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        use anyhow::anyhow;
         let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
         let lit = match self {
             HostTensor::F32 { data, .. } => {
                 if shape.is_empty() {
-                    return Ok(Literal::scalar(data[0]));
+                    return Ok(xla::Literal::scalar(data[0]));
                 }
-                Literal::vec1(data.as_slice())
+                xla::Literal::vec1(data.as_slice())
             }
             HostTensor::I32 { data, .. } => {
                 if shape.is_empty() {
-                    return Ok(Literal::scalar(data[0]));
+                    return Ok(xla::Literal::scalar(data[0]));
                 }
-                Literal::vec1(data.as_slice())
+                xla::Literal::vec1(data.as_slice())
             }
         };
         lit.reshape(&dims)
@@ -79,7 +91,9 @@ impl HostTensor {
     }
 
     /// Read a literal back into a host tensor.
-    pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
+    #[cfg(feature = "pjrt")]
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        use anyhow::anyhow;
         let shape = lit
             .array_shape()
             .map_err(|e| anyhow!("literal shape: {e:?}"))?;
@@ -103,32 +117,60 @@ mod tests {
     use super::*;
 
     #[test]
-    fn literal_roundtrip_f32() {
-        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
-        let lit = t.to_literal(&[2, 2]).unwrap();
-        let back = HostTensor::from_literal(&lit).unwrap();
-        assert_eq!(t, back);
-    }
-
-    #[test]
-    fn literal_roundtrip_i32() {
-        let t = HostTensor::i32(vec![7, -3, 0], vec![3]);
-        let lit = t.to_literal(&[3]).unwrap();
-        let back = HostTensor::from_literal(&lit).unwrap();
-        assert_eq!(t, back);
-    }
-
-    #[test]
-    fn scalar_literal() {
-        let t = HostTensor::scalar_f32(2.5);
-        let lit = t.to_literal(&[]).unwrap();
-        assert_eq!(lit.get_first_element::<f32>().unwrap(), 2.5);
-    }
-
-    #[test]
     fn type_mismatch_errors() {
         let t = HostTensor::scalar_f32(1.0);
         assert!(t.as_i32().is_err());
         assert!(t.as_f32().is_ok());
+    }
+
+    #[test]
+    fn mutable_access_updates_in_place() {
+        let mut t = HostTensor::f32(vec![1.0, 2.0], vec![2]);
+        t.as_f32_mut().unwrap()[1] = 5.0;
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 5.0]);
+        let mut i = HostTensor::scalar_i32(3);
+        assert!(i.as_f32_mut().is_err());
+    }
+
+    #[test]
+    fn shape_and_elements() {
+        let t = HostTensor::i32(vec![1, 2, 3, 4, 5, 6], vec![2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.elements(), 6);
+        assert_eq!(HostTensor::scalar_f32(0.5).elements(), 1);
+    }
+
+    #[cfg(feature = "pjrt")]
+    mod literal {
+        use super::*;
+
+        #[test]
+        fn literal_roundtrip_f32() {
+            let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+            let lit = t.to_literal(&[2, 2]).unwrap();
+            let back = HostTensor::from_literal(&lit).unwrap();
+            assert_eq!(t, back);
+        }
+
+        #[test]
+        fn literal_roundtrip_i32() {
+            let t = HostTensor::i32(vec![7, -3, 0], vec![3]);
+            let lit = t.to_literal(&[3]).unwrap();
+            let back = HostTensor::from_literal(&lit).unwrap();
+            assert_eq!(t, back);
+        }
+
+        #[test]
+        fn scalar_literal() {
+            let t = HostTensor::scalar_f32(2.5);
+            let lit = t.to_literal(&[]).unwrap();
+            assert_eq!(lit.get_first_element::<f32>().unwrap(), 2.5);
+        }
+
+        #[test]
+        fn from_literal_rejects_f64() {
+            let lit = xla::Literal::vec1(&[1.0f64]);
+            assert!(HostTensor::from_literal(&lit).is_err());
+        }
     }
 }

@@ -1,61 +1,65 @@
-//! End-to-end integration over the real AOT artifacts: runtime loads every
-//! executable, training steps reduce loss, the grad-norm verifier separates
-//! healthy from broken configs, eval matches, checkpoints round-trip.
+//! End-to-end integration over the full train loop: corpus → tokenize →
+//! BFD-pack → batch → step → verify → checkpoint.
 //!
-//! Requires `make artifacts`. Tests return early (skip) when the artifacts
-//! directory is missing so `cargo test` stays green on a fresh clone.
+//! The CPU-backend tests run unconditionally — no artifacts, no network, no
+//! native deps — so a missing `artifacts/` directory can never turn this
+//! suite vacuously green. The PJRT variants (bottom module) are additionally
+//! exercised when the crate is built with `--features pjrt` against real
+//! artifacts; they skip *loudly* when artifacts are absent.
 
-use chronicals::batching::packed_batches;
+use chronicals::backend::cpu::CpuBackend;
+use chronicals::backend::Backend;
 use chronicals::checkpoint;
 use chronicals::config::RunConfig;
 use chronicals::coordinator::Trainer;
 use chronicals::harness;
 use chronicals::optim::LrSchedule;
-use chronicals::runtime::{HostTensor, Runtime, TrainState};
 use std::rc::Rc;
 
-fn runtime() -> Option<Rc<Runtime>> {
-    Runtime::new("artifacts").ok().map(Rc::new)
+fn cpu() -> Rc<dyn Backend> {
+    Rc::new(CpuBackend::new())
 }
 
-#[test]
-fn manifest_lists_all_variants() {
-    let Some(rt) = runtime() else { return };
-    for name in [
-        "train_step_ablate_naive",
-        "train_step_ablate_flash",
-        "train_step_ablate_compiled",
-        "train_step_ablate_liger",
-        "train_step_chronicals",
-        "train_step_lora",
-        "train_step_lora_broken",
-        "train_step_opt_sf",
-        "train_step_opt_muon",
-        "train_step_opt_atan2",
-        "train_step_dora",
-        "train_step_chronicals_pallas",
-        "train_step_e2e",
-        "init_chronicals",
-        "init_lora",
-        "eval_chronicals",
-    ] {
-        assert!(rt.manifest.get(name).is_ok(), "missing {name}");
+/// A config sized so every example fits a 64-token packing bin and a 12-step
+/// run takes well under a second.
+fn cpu_cfg(exe: &str) -> RunConfig {
+    RunConfig {
+        executable: exe.into(),
+        steps: 12,
+        warmup_steps: 0,
+        lr: 5e-3,
+        packed: true,
+        corpus_examples: 192,
+        max_seq: 48,
+        ..RunConfig::default()
     }
 }
 
 #[test]
-fn full_ft_loss_decreases_over_10_steps() {
-    let Some(rt) = runtime() else { return };
-    let cfg = RunConfig {
-        executable: "train_step_chronicals".into(),
-        steps: 10,
-        warmup_steps: 0,
-        lr: 5e-3,
-        packed: true,
-        corpus_examples: 256,
-        ..RunConfig::default()
-    };
-    let s = harness::run_variant(&rt, &cfg).unwrap();
+fn cpu_manifest_lists_reference_variants() {
+    let be = cpu();
+    for name in [
+        "train_step_chronicals",
+        "train_step_ablate_naive",
+        "train_step_ablate_flash",
+        "train_step_ablate_compiled",
+        "train_step_ablate_liger",
+        "train_step_lora",
+        "train_step_lora_naive",
+        "train_step_lora_broken",
+        "init_chronicals",
+        "init_lora",
+        "eval_chronicals",
+    ] {
+        assert!(be.manifest().get(name).is_ok(), "missing {name}");
+    }
+}
+
+#[test]
+fn full_ft_loss_decreases_over_12_steps() {
+    let be = cpu();
+    let s = harness::run_variant(&be, &cpu_cfg("train_step_chronicals")).unwrap();
+    assert_eq!(s.steps, 12);
     assert!(s.last_loss.is_finite());
     assert!(
         s.last_loss < s.first_loss,
@@ -64,130 +68,80 @@ fn full_ft_loss_decreases_over_10_steps() {
         s.last_loss
     );
     assert!(s.verification.is_training, "{:?}", s.verification.failures);
+    assert!(s.verification.min_grad_norm > 0.0);
+    assert_eq!(s.param_count, s.trainable_param_count); // full FT trains all
 }
 
 #[test]
-fn lora_plus_beats_lora_at_equal_steps() {
-    // paper Fig. 17 at integration level
-    let Some(rt) = runtime() else { return };
+fn lora_trains_and_lora_plus_ratio_changes_the_run() {
+    let be = cpu();
     let run = |ratio: f64| {
         let cfg = RunConfig {
-            executable: "train_step_lora".into(),
-            steps: 12,
-            warmup_steps: 0,
-            lr: 1e-3,
+            lr: 2e-3,
             lora_plus_ratio: ratio,
-            packed: true,
-            corpus_examples: 256,
-            ..RunConfig::default()
+            ..cpu_cfg("train_step_lora")
         };
-        harness::run_variant(&rt, &cfg).unwrap().last_loss
+        harness::run_variant(&be, &cfg).unwrap()
     };
     let lora = run(1.0);
     let lora_plus = run(16.0);
+    assert!(lora.verification.is_training, "{:?}", lora.verification.failures);
+    assert!(lora_plus.verification.is_training);
+    assert!(lora.last_loss < lora.first_loss);
+    assert!(lora_plus.last_loss < lora_plus.first_loss);
+    // λ=16 must actually reach the B-matrix update path: identical inits and
+    // batches, different λ ⇒ different trajectories
+    assert_ne!(lora.last_loss.to_bits(), lora_plus.last_loss.to_bits());
+    // adapters only: trainable is a strict subset of the params
+    assert!(lora.trainable_param_count < lora.param_count);
+}
+
+#[test]
+fn broken_config_flagged_by_verifier() {
+    let be = cpu();
+    let cfg = RunConfig { steps: 10, ..cpu_cfg("train_step_lora_broken") };
+    let s = harness::run_variant(&be, &cfg).unwrap();
+    assert!(!s.verification.is_training);
+    assert_eq!(s.verification.zero_grad_steps, 10);
+    assert_eq!(s.verification.max_grad_norm, 0.0);
+    assert!(!s.verification.loss_changed, "broken config must not learn");
     assert!(
-        lora_plus < lora,
-        "LoRA+ {lora_plus} should beat LoRA {lora}"
+        s.verification
+            .failures
+            .iter()
+            .any(|f| f.contains("NOT training")),
+        "{:?}",
+        s.verification.failures
     );
 }
 
 #[test]
-fn broken_variant_flagged_by_verifier() {
-    let Some(rt) = runtime() else { return };
-    let cfg = RunConfig {
-        executable: "train_step_lora_broken".into(),
-        steps: 5,
-        warmup_steps: 0,
-        packed: true,
-        corpus_examples: 128,
-        ..RunConfig::default()
-    };
-    let s = harness::run_variant(&rt, &cfg).unwrap();
-    assert!(!s.verification.is_training);
-    assert_eq!(s.verification.zero_grad_steps, 5);
-}
-
-#[test]
-fn variant_losses_agree_on_first_step() {
-    // naive / flash / compiled / liger / chronicals are the same math:
-    // identical init + identical batch => near-identical first-step loss.
-    let Some(rt) = runtime() else { return };
+fn ablation_aliases_share_the_reference_math() {
+    // identical seed + batches ⇒ identical first-step loss across the
+    // full-family variants (they are semantic aliases on this backend)
+    let be = cpu();
     let mut losses = Vec::new();
     for exe in [
         "train_step_ablate_naive",
         "train_step_ablate_flash",
-        "train_step_ablate_compiled",
-        "train_step_ablate_liger",
         "train_step_chronicals",
     ] {
-        let cfg = RunConfig {
-            executable: exe.into(),
-            steps: 1,
-            warmup_steps: 0,
-            packed: false,
-            corpus_examples: 128,
-            seed: 7,
-            ..RunConfig::default()
-        };
-        let s = harness::run_variant(&rt, &cfg).unwrap();
-        losses.push(s.first_loss);
+        let cfg = RunConfig { steps: 1, seed: 7, ..cpu_cfg(exe) };
+        losses.push(harness::run_variant(&be, &cfg).unwrap().first_loss);
     }
-    for w in losses.windows(2) {
-        assert!(
-            (w[0] - w[1]).abs() / w[0].abs() < 2e-3,
-            "variant losses diverge: {losses:?}"
-        );
-    }
+    assert_eq!(losses[0].to_bits(), losses[1].to_bits());
+    assert_eq!(losses[1].to_bits(), losses[2].to_bits());
 }
 
 #[test]
-fn pallas_composition_variant_trains() {
-    // every L1 Pallas kernel composed into one executable
-    let Some(rt) = runtime() else { return };
-    let cfg = RunConfig {
-        executable: "train_step_chronicals_pallas".into(),
-        steps: 3,
-        warmup_steps: 0,
-        lr: 5e-3,
-        packed: true,
-        corpus_examples: 64,
-        ..RunConfig::default()
-    };
-    let s = harness::run_variant(&rt, &cfg).unwrap();
-    assert!(s.last_loss.is_finite());
-    assert!(s.verification.min_grad_norm > 0.0);
-}
-
-#[test]
-fn optimizer_variants_train() {
-    let Some(rt) = runtime() else { return };
-    for exe in [
-        "train_step_opt_sf",
-        "train_step_opt_muon",
-        "train_step_opt_atan2",
-        "train_step_dora",
-    ] {
-        // per-optimizer lr: muon's orthogonalized update has unit scale per
-        // element (×√n), so it needs a far smaller lr than AdamW here
-        let lr = match exe {
-            e if e.ends_with("sf") => 2e-3,
-            e if e.ends_with("muon") => 2e-4,
-            _ => 5e-3,
-        };
-        let cfg = RunConfig {
-            executable: exe.into(),
-            steps: 6,
-            warmup_steps: 0,
-            lr,
-            packed: true,
-            corpus_examples: 128,
-            ..RunConfig::default()
-        };
-        let s = harness::run_variant(&rt, &cfg).unwrap();
-        assert!(s.last_loss.is_finite(), "{exe}");
+fn padded_and_packed_paths_both_train() {
+    let be = cpu();
+    for packed in [false, true] {
+        let cfg = RunConfig { packed, ..cpu_cfg("train_step_chronicals") };
+        let s = harness::run_variant(&be, &cfg).unwrap();
         assert!(
             s.last_loss < s.first_loss,
-            "{exe}: {} -> {}",
+            "packed={packed}: {} -> {}",
             s.first_loss,
             s.last_loss
         );
@@ -195,84 +149,264 @@ fn optimizer_variants_train() {
 }
 
 #[test]
-fn eval_matches_between_steps() {
-    let Some(rt) = runtime() else { return };
-    let spec = rt.manifest.get("train_step_chronicals").unwrap().clone();
-    let vocab = spec.model_config.vocab;
-    let (_tok, exs) = harness::build_corpus(128, 3, vocab, 512);
-    let batches = packed_batches(&exs, spec.batch, spec.seq);
-    let init = harness::resolve_init(&rt, "train_step_chronicals", "init_chronicals").unwrap();
-    let state = TrainState::init(&rt, &init, 3).unwrap();
+fn packed_batches_carry_more_real_tokens() {
+    // the Fig. 18 / Table 4 "+packing" effect at the batch level: same
+    // corpus, same [B, S] geometry, higher density packed
+    let be = cpu();
+    let spec = be.manifest().get("train_step_chronicals").unwrap().clone();
+    // 24-token examples in 64-token rows: padded wastes ≥ 60%, BFD packs ≥ 2
+    // segments per row, so the gap is structural, not distribution luck
+    let (_tok, exs) = harness::build_corpus(192, 42, spec.model_config.vocab, 24);
+    let padded = harness::make_batches(be.manifest(), "train_step_chronicals", &exs, false).unwrap();
+    let packed = harness::make_batches(be.manifest(), "train_step_chronicals", &exs, true).unwrap();
+    let pd: f64 = padded.iter().map(|b| b.density()).sum::<f64>() / padded.len() as f64;
+    let kd: f64 = packed.iter().map(|b| b.density()).sum::<f64>() / packed.len() as f64;
+    assert!(kd > pd, "packed density {kd} <= padded {pd}");
+}
+
+#[test]
+fn eval_matches_train_loss_and_improves_after_step() {
+    let be = cpu();
+    let spec = be.manifest().get("train_step_chronicals").unwrap().clone();
+    let (_tok, exs) = harness::build_corpus(96, 3, spec.model_config.vocab, 48);
+    let batches = harness::make_batches(be.manifest(), "train_step_chronicals", &exs, true).unwrap();
+    let state = be.init_state("init_chronicals", 3).unwrap();
     let mut trainer = Trainer::new(
-        rt.clone(),
+        be.clone(),
         "train_step_chronicals",
         state,
-        LrSchedule::constant(1e-3, 1.0),
+        LrSchedule::constant(5e-3, 1.0),
         0,
     )
     .unwrap();
     let eval0 = trainer.eval("eval_chronicals", &batches[0]).unwrap();
     let rec = trainer.step(&batches[0]).unwrap();
-    // eval (pre-step params) must equal the training loss on the same batch
-    assert!(
-        (eval0 - rec.loss).abs() / rec.loss.abs() < 1e-4,
-        "eval {eval0} vs step loss {}",
-        rec.loss
-    );
+    // eval (pre-step params) is the same math as the training loss: exact
+    assert_eq!(eval0.to_bits(), rec.loss.to_bits());
     // after one step, eval on the same batch must improve
     let eval1 = trainer.eval("eval_chronicals", &batches[0]).unwrap();
-    assert!(eval1 < eval0);
+    assert!(eval1 < eval0, "{eval1} vs {eval0}");
 }
 
 #[test]
-fn checkpoint_roundtrip_from_device_state() {
-    let Some(rt) = runtime() else { return };
-    let init = harness::resolve_init(&rt, "train_step_chronicals", "init_chronicals").unwrap();
-    let state = TrainState::init(&rt, &init, 11).unwrap();
-    let params = state.params_to_host().unwrap();
-    let tensors: Vec<HostTensor> = params
-        .iter()
-        .map(|l| HostTensor::from_literal(l).unwrap())
-        .collect();
-    let path = std::env::temp_dir().join("chronicals_integration.ckpt");
-    checkpoint::save(&path, &tensors, checkpoint::Codec::F32).unwrap();
-    let back = checkpoint::load(&path).unwrap();
-    assert_eq!(tensors.len(), back.len());
-    for (a, b) in tensors.iter().zip(&back) {
-        assert_eq!(a, b);
+fn staged_batch_is_reusable_across_steps() {
+    let be = cpu();
+    let spec = be.manifest().get("train_step_chronicals").unwrap().clone();
+    let (_tok, exs) = harness::build_corpus(96, 1, spec.model_config.vocab, 48);
+    let batches = harness::make_batches(be.manifest(), "train_step_chronicals", &exs, true).unwrap();
+    let state = be.init_state("init_chronicals", 1).unwrap();
+    let mut trainer = Trainer::new(
+        be.clone(),
+        "train_step_chronicals",
+        state,
+        LrSchedule::constant(5e-3, 1.0),
+        0,
+    )
+    .unwrap();
+    let ub = trainer.upload_batch(&batches[0]).unwrap();
+    let r1 = trainer.step_uploaded(&ub).unwrap();
+    assert!(r1.loss.is_finite() && r1.grad_norm > 0.0);
+    let r2 = trainer.step_uploaded(&ub).unwrap();
+    assert!(r2.loss < r1.loss, "{} -> {}", r1.loss, r2.loss);
+    // un-staged single step agrees with the staged path
+    let r3 = trainer.step(&batches[0]).unwrap();
+    assert!(r3.loss < r2.loss);
+}
+
+#[test]
+fn checkpoint_roundtrip_restores_exact_params_and_loss() {
+    let be = cpu();
+    let spec = be.manifest().get("train_step_chronicals").unwrap().clone();
+    let (_tok, exs) = harness::build_corpus(96, 11, spec.model_config.vocab, 48);
+    let batches = harness::make_batches(be.manifest(), "train_step_chronicals", &exs, true).unwrap();
+
+    // train 10 steps, checkpoint
+    let state = be.init_state("init_chronicals", 11).unwrap();
+    let mut trainer = Trainer::new(
+        be.clone(),
+        "train_step_chronicals",
+        state,
+        LrSchedule::constant(5e-3, 1.0),
+        0,
+    )
+    .unwrap();
+    for _ in 0..10 {
+        trainer.step(&batches[0]).unwrap();
     }
-}
+    let path = std::env::temp_dir().join("chronicals_cpu_integration.ckpt");
+    trainer.save_checkpoint(&path, checkpoint::Codec::F32).unwrap();
+    let eval_trained = trainer.eval("eval_chronicals", &batches[0]).unwrap();
+    let params_trained = trainer.params_to_host().unwrap();
 
-#[test]
-fn packed_throughput_beats_padded() {
-    // the Fig. 18 / Table 4 "+packing" effect measured end to end:
-    // same executable, packed batches carry more real tokens per step.
-    let Some(rt) = runtime() else { return };
-    let run = |packed: bool| {
-        let cfg = RunConfig {
-            executable: "train_step_chronicals".into(),
-            steps: 8,
-            warmup_steps: 2,
-            packed,
-            corpus_examples: 512,
-            ..RunConfig::default()
-        };
-        harness::run_variant(&rt, &cfg).unwrap().tokens_per_sec
-    };
-    let padded = run(false);
-    let packed = run(true);
-    assert!(
-        packed > padded,
-        "packed {packed} should beat padded {padded} tok/s"
+    // restore into a *different* init (other seed): must become identical
+    let state2 = be.init_state("init_chronicals", 999).unwrap();
+    let mut restored = Trainer::new(
+        be.clone(),
+        "train_step_chronicals",
+        state2,
+        LrSchedule::constant(5e-3, 1.0),
+        0,
+    )
+    .unwrap();
+    assert_ne!(
+        restored.eval("eval_chronicals", &batches[0]).unwrap().to_bits(),
+        eval_trained.to_bits(),
+        "different seeds should not coincide"
+    );
+    restored.load_checkpoint(&path).unwrap();
+    assert_eq!(restored.params_to_host().unwrap(), params_trained);
+    assert_eq!(
+        restored.eval("eval_chronicals", &batches[0]).unwrap().to_bits(),
+        eval_trained.to_bits()
     );
 }
 
 #[test]
-fn kernel_microbenches_execute() {
-    let Some(rt) = runtime() else { return };
-    let rows = harness::kernel_microbench(&rt, 3).unwrap();
-    assert_eq!(rows.len(), 7);
-    for (name, fused, naive) in rows {
-        assert!(fused > 0.0 && naive > 0.0, "{name}");
+fn same_seed_runs_are_bitwise_identical() {
+    // the determinism gate for future perf comparisons: the full
+    // corpus→pack→train pipeline, run twice, must emit identical
+    // StepRecord streams (loss, grad_norm, n_tokens — bit for bit)
+    let run = || {
+        let be = cpu();
+        let spec = be.manifest().get("train_step_chronicals").unwrap().clone();
+        let (_tok, exs) = harness::build_corpus(192, 42, spec.model_config.vocab, 48);
+        let batches =
+            harness::make_batches(be.manifest(), "train_step_chronicals", &exs, true).unwrap();
+        let state = be.init_state("init_chronicals", 42).unwrap();
+        let mut trainer = Trainer::new(
+            be.clone(),
+            "train_step_chronicals",
+            state,
+            LrSchedule::warmup_cosine(5e-3, 2, 12, 1.0),
+            0,
+        )
+        .unwrap();
+        trainer.run(&batches, 12).unwrap();
+        trainer
+            .records
+            .iter()
+            .map(|r| (r.step, r.loss.to_bits(), r.grad_norm.to_bits(), r.n_tokens.to_bits()))
+            .collect::<Vec<_>>()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.len(), 12);
+    assert_eq!(a, b, "two same-seed runs diverged");
+}
+
+#[test]
+fn verifier_separates_healthy_from_broken_at_equal_config() {
+    // the paper's Fig. 10 contrast, end to end on one backend: identical
+    // data and lr, only the broken flag differs
+    let be = cpu();
+    let healthy = harness::run_variant(&be, &cpu_cfg("train_step_lora")).unwrap();
+    let broken = harness::run_variant(&be, &cpu_cfg("train_step_lora_broken")).unwrap();
+    assert!(healthy.verification.is_training);
+    assert!(!broken.verification.is_training);
+    assert!(healthy.verification.min_grad_norm > 0.0);
+    assert_eq!(broken.verification.max_grad_norm, 0.0);
+    assert_eq!(healthy.first_loss.to_bits(), broken.first_loss.to_bits());
+}
+
+/// PJRT integration (requires `--features pjrt`, vendored xla-rs and `make
+/// artifacts`). Skips loudly — never silently — when artifacts are missing.
+#[cfg(feature = "pjrt")]
+mod pjrt_integration {
+    use super::*;
+    use chronicals::backend::pjrt::PjrtBackend;
+
+    fn pjrt() -> Option<Rc<dyn Backend>> {
+        match PjrtBackend::new("artifacts") {
+            Ok(be) => Some(Rc::new(be)),
+            Err(e) => {
+                eprintln!("SKIPPED pjrt integration (artifacts/runtime unavailable): {e:#}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn manifest_lists_all_variants() {
+        let Some(be) = pjrt() else { return };
+        for name in [
+            "train_step_ablate_naive",
+            "train_step_ablate_flash",
+            "train_step_ablate_compiled",
+            "train_step_ablate_liger",
+            "train_step_chronicals",
+            "train_step_lora",
+            "train_step_lora_broken",
+            "train_step_opt_sf",
+            "train_step_opt_muon",
+            "train_step_opt_atan2",
+            "train_step_dora",
+            "train_step_chronicals_pallas",
+            "train_step_e2e",
+            "init_chronicals",
+            "init_lora",
+            "eval_chronicals",
+        ] {
+            assert!(be.manifest().get(name).is_ok(), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn full_ft_loss_decreases_over_10_steps() {
+        let Some(be) = pjrt() else { return };
+        let cfg = RunConfig {
+            executable: "train_step_chronicals".into(),
+            steps: 10,
+            warmup_steps: 0,
+            lr: 5e-3,
+            packed: true,
+            corpus_examples: 256,
+            ..RunConfig::default()
+        };
+        let s = harness::run_variant(&be, &cfg).unwrap();
+        assert!(s.last_loss.is_finite());
+        assert!(s.last_loss < s.first_loss, "loss {} -> {}", s.first_loss, s.last_loss);
+        assert!(s.verification.is_training, "{:?}", s.verification.failures);
+    }
+
+    #[test]
+    fn broken_variant_flagged_by_verifier() {
+        let Some(be) = pjrt() else { return };
+        let cfg = RunConfig {
+            executable: "train_step_lora_broken".into(),
+            steps: 5,
+            warmup_steps: 0,
+            packed: true,
+            corpus_examples: 128,
+            ..RunConfig::default()
+        };
+        let s = harness::run_variant(&be, &cfg).unwrap();
+        assert!(!s.verification.is_training);
+        assert_eq!(s.verification.zero_grad_steps, 5);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_from_device_state() {
+        let Some(be) = pjrt() else { return };
+        let init = harness::resolve_init(be.manifest(), "train_step_chronicals", "init_chronicals")
+            .unwrap();
+        let state = be.init_state(&init, 11).unwrap();
+        let tensors = be.state_params(&state).unwrap();
+        let path = std::env::temp_dir().join("chronicals_pjrt_integration.ckpt");
+        checkpoint::save(&path, &tensors, checkpoint::Codec::F32).unwrap();
+        let back = checkpoint::load(&path).unwrap();
+        assert_eq!(tensors.len(), back.len());
+        for (a, b) in tensors.iter().zip(&back) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn kernel_microbenches_execute() {
+        let Some(be) = pjrt() else { return };
+        let rows = harness::kernel_microbench(be.as_ref(), 3).unwrap();
+        assert_eq!(rows.len(), 7);
+        for (name, fused, naive) in rows {
+            assert!(fused > 0.0 && naive > 0.0, "{name}");
+        }
     }
 }

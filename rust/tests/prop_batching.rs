@@ -1,0 +1,190 @@
+//! Property tests for batch construction invariants (paper Alg. 17,
+//! Def. 33): randomized example sets through `packing_to_batches` and
+//! `token_budget_batches` must always produce structurally sound [B, S]
+//! tensors. Exercises the truncation path (`rust/src/batching/mod.rs`,
+//! `token_budget_batches` flush) with examples longer than `seq`.
+
+use chronicals::batching::{packing_to_batches, token_budget_batches, Batch};
+use chronicals::data::TokenizedExample;
+use chronicals::packing::{best_fit_decreasing, first_fit_decreasing, next_fit, Packing};
+use chronicals::util::rng::Rng;
+
+/// Random examples with the data pipeline's conventions: tokens ≥ 4 (ids
+/// 0–3 are specials), next-token targets with a masked prompt prefix, and
+/// the final position always masked.
+fn gen_examples(rng: &mut Rng, n: usize, max_len: usize) -> Vec<TokenizedExample> {
+    (0..n)
+        .map(|_| {
+            let len = rng.range(1, max_len + 1);
+            let tokens: Vec<i32> = (0..len).map(|_| rng.range(4, 64) as i32).collect();
+            let mask_prefix = rng.range(0, len); // prompt-style masking
+            let mut targets = vec![-1i32; len];
+            for i in 0..len.saturating_sub(1) {
+                if i >= mask_prefix {
+                    targets[i] = tokens[i + 1];
+                }
+            }
+            TokenizedExample { tokens, targets }
+        })
+        .collect()
+}
+
+/// Check every structural invariant of one emitted batch.
+fn check_batch(b: &Batch, seq: usize) {
+    assert_eq!(b.seq, seq);
+    let n = b.batch * b.seq;
+    let tokens = b.tokens.as_i32().unwrap();
+    let targets = b.targets.as_i32().unwrap();
+    let segs = b.seg_ids.as_i32().unwrap();
+    let pos = b.pos_ids.as_i32().unwrap();
+    assert_eq!(tokens.len(), n);
+    assert_eq!(targets.len(), n);
+    assert_eq!(segs.len(), n);
+    assert_eq!(pos.len(), n);
+    assert_eq!(b.tokens.shape(), &[b.batch, b.seq]);
+
+    let mut real_tokens = 0usize;
+    let mut real_targets = 0usize;
+    for row in 0..b.batch {
+        let r = row * seq;
+        let mut prev_seg = 0i32;
+        let mut padding_started = false;
+        let mut row_tokens = 0usize;
+        for i in 0..seq {
+            let s = segs[r + i];
+            assert!(s >= 0, "negative segment id");
+            if s == 0 {
+                // 0 = padding; once padding starts it runs to the row end
+                padding_started = true;
+                assert_eq!(tokens[r + i], 0, "padding slot carries a token");
+                assert_eq!(targets[r + i], -1, "padding slot carries a target");
+                continue;
+            }
+            assert!(!padding_started, "segment {s} after padding in row {row}");
+            row_tokens += 1;
+            if s == prev_seg {
+                // inside a segment: positions increment by exactly 1
+                assert_eq!(pos[r + i], pos[r + i - 1] + 1, "pos not contiguous");
+            } else {
+                // new segment: ids are 1, 2, ... in order; pos resets to 0
+                assert_eq!(s, prev_seg + 1, "segment ids not monotone in row {row}");
+                assert_eq!(pos[r + i], 0, "pos not reset at segment start");
+            }
+            // a segment's final position must never predict across the
+            // boundary: the builder masks truncated boundaries, the data
+            // pipeline masks natural ends
+            let seg_ends = i + 1 == seq || segs[r + i + 1] != s;
+            if seg_ends {
+                assert_eq!(
+                    targets[r + i],
+                    -1,
+                    "segment-final position supervised in row {row} at {i}"
+                );
+            }
+            prev_seg = s;
+        }
+        assert!(row_tokens <= seq);
+        real_tokens += row_tokens;
+    }
+    for &t in targets {
+        if t >= 0 {
+            real_targets += 1;
+        }
+    }
+    assert_eq!(b.real_tokens, real_tokens, "real_tokens accounting");
+    assert_eq!(b.real_targets, real_targets, "real_targets accounting");
+}
+
+#[test]
+fn packing_to_batches_invariants_hold_for_all_algorithms() {
+    let mut rng = Rng::new(0xBA7C4);
+    for round in 0..40 {
+        let seq = [8, 16, 32][rng.range(0, 3)];
+        let batch = rng.range(1, 5);
+        let n_examples = rng.range(2, 60);
+        // lengths ≤ seq so no example is oversized for the packer
+        let exs = gen_examples(&mut rng, n_examples, seq);
+        let lengths: Vec<usize> = exs.iter().map(|e| e.len()).collect();
+        let packings: Vec<Packing> = vec![
+            best_fit_decreasing(&lengths, seq),
+            first_fit_decreasing(&lengths, seq),
+            next_fit(&lengths, seq),
+        ];
+        for p in &packings {
+            let batches = packing_to_batches(p, &exs, batch, seq);
+            let total_available: usize = lengths.iter().sum();
+            let mut total_emitted = 0usize;
+            for b in &batches {
+                assert_eq!(b.batch, batch, "round {round}");
+                check_batch(b, seq);
+                total_emitted += b.real_tokens;
+            }
+            // incomplete trailing batches are dropped, never padded up
+            assert!(total_emitted <= total_available, "round {round}");
+        }
+    }
+}
+
+#[test]
+fn token_budget_batches_invariants_and_conservation() {
+    let mut rng = Rng::new(0x70B0D);
+    for round in 0..40 {
+        let seq = [8, 16, 32][rng.range(0, 3)];
+        let budget = seq * rng.range(2, 6);
+        let n_examples = rng.range(2, 60);
+        // up to 2·seq: exercises the truncation path for oversized examples
+        let exs = gen_examples(&mut rng, n_examples, seq * 2);
+        let batches = token_budget_batches(&exs, budget, seq);
+        let rows_per_batch = budget.div_ceil(seq);
+        let mut total = 0usize;
+        for b in &batches {
+            assert_eq!(b.batch, rows_per_batch, "round {round}");
+            check_batch(b, seq);
+            assert!(
+                b.real_tokens <= budget,
+                "round {round}: batch carries {} > budget {budget}",
+                b.real_tokens
+            );
+            total += b.real_tokens;
+        }
+        // every example contributes exactly min(len, seq) tokens: nothing
+        // is dropped, truncation only clips at the row capacity
+        let expected: usize = exs.iter().map(|e| e.len().min(seq)).sum();
+        assert_eq!(total, expected, "round {round}: token conservation");
+    }
+}
+
+#[test]
+fn token_budget_truncated_example_masks_boundary() {
+    // one example twice the row capacity: the final kept position must be
+    // masked (it would otherwise predict a clipped-off token)
+    let tokens: Vec<i32> = (4..20).collect(); // len 16
+    let mut targets: Vec<i32> = tokens[1..].to_vec();
+    targets.push(-1);
+    let exs = vec![TokenizedExample { tokens, targets }];
+    let batches = token_budget_batches(&exs, 8, 8);
+    assert_eq!(batches.len(), 1);
+    let b = &batches[0];
+    assert_eq!(b.real_tokens, 8);
+    let tg = b.targets.as_i32().unwrap();
+    assert_eq!(tg[7], -1, "truncated boundary must be masked");
+    check_batch(b, 8);
+}
+
+#[test]
+fn single_token_examples_pack_cleanly() {
+    // degenerate lengths stress the seg/pos bookkeeping: every segment is
+    // one token long, so every position is both a start (pos 0) and an end
+    // (target -1)
+    let exs: Vec<TokenizedExample> = (0..12)
+        .map(|i| TokenizedExample { tokens: vec![4 + i], targets: vec![-1] })
+        .collect();
+    let lengths = vec![1usize; 12];
+    let p = best_fit_decreasing(&lengths, 4);
+    let batches = packing_to_batches(&p, &exs, 1, 4);
+    assert!(!batches.is_empty());
+    for b in &batches {
+        check_batch(b, 4);
+        assert_eq!(b.real_targets, 0);
+    }
+}

@@ -1,13 +1,27 @@
 //! Runtime smoke: exploded tuple outputs + init state round trip.
-//! (Requires `make artifacts`; skipped silently when absent.)
+//!
+//! PJRT-only (`--features pjrt`); skips loudly when artifacts are absent —
+//! the hermetic equivalents of these checks live in `integration.rs`
+//! against the CPU backend.
+#![cfg(feature = "pjrt")]
+
+use chronicals::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::new("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIPPED runtime smoke (artifacts/runtime unavailable): {e:#}");
+            None
+        }
+    }
+}
 
 #[test]
 fn init_outputs_are_exploded_and_readable() {
-    let rt = match chronicals::runtime::Runtime::new("artifacts") {
-        Ok(rt) => rt,
-        Err(_) => return, // artifacts not built
-    };
+    let Some(rt) = runtime() else { return };
     if rt.manifest.get("init_lora").is_err() {
+        eprintln!("SKIPPED: manifest has no init_lora");
         return;
     }
     let spec = rt.manifest.get("init_lora").unwrap().clone();

@@ -1,0 +1,173 @@
+//! Offline workalike of the `anyhow` API subset used by the chronicals
+//! workspace: [`Error`], [`Result`], [`anyhow!`], [`bail!`] and the
+//! [`Context`] extension trait.
+//!
+//! Semantics mirror the real crate where it matters here:
+//! * `Error` is cheap to build from a message or from any
+//!   `std::error::Error` (whose source chain is captured);
+//! * `Display` shows the outermost message, `{:#}` (alternate) shows the
+//!   whole chain joined with `": "`, `Debug` shows the chain with a
+//!   `Caused by:` trailer — so `error: {e:#}` CLI output reads the same;
+//! * like the real crate, `Error` intentionally does **not** implement
+//!   `std::error::Error`, which is what makes the blanket
+//!   `From<E: std::error::Error>` impl coherent.
+
+use std::fmt;
+
+/// An error chain: outermost message first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (used by [`Context`]).
+    pub fn wrap<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages in the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to fallible results.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (inline captures work) or
+/// any printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Error::from(io_err()).wrap("reading config");
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing thing");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 41;
+        let e = anyhow!("value was {x}");
+        assert_eq!(e.to_string(), "value was 41");
+        let e = anyhow!("value was {}", x + 1);
+        assert_eq!(e.to_string(), "value was 42");
+
+        fn fails() -> Result<()> {
+            bail!("nope: {}", 7)
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "nope: 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<f64> {
+            Ok(s.parse::<f64>()?)
+        }
+        assert!(parse("1.5").is_ok());
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn context_on_results() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening").unwrap_err();
+        assert_eq!(format!("{e:#}"), "opening: missing thing");
+
+        let r2: Result<()> = Err(anyhow!("inner"));
+        let e2 = r2.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(format!("{e2:#}"), "outer 1: inner");
+        assert_eq!(e2.chain().count(), 2);
+    }
+}

@@ -1,0 +1,308 @@
+//! Host-only stub of the xla-rs API surface used by the `chronicals` crate.
+//!
+//! `Literal` is implemented for real (an in-memory host tensor), so code and
+//! tests that only move data between host representations work unchanged.
+//! Everything that would need libxla_extension — the PJRT client, buffers,
+//! compiled executables — is represented by uninhabited-in-practice types
+//! whose constructors return [`Error`]; `PjRtClient::cpu()` is the single
+//! gate, so a `Runtime` can never be constructed on the stub and downstream
+//! device paths are unreachable.
+//!
+//! To run real AOT artifacts, replace the `xla` path dependency in
+//! `rust/Cargo.toml` with a vendored xla-rs checkout exposing this surface.
+
+use std::fmt;
+
+/// Error type mirroring xla-rs: carries a message, shows up via `{:?}`.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err(what: &str) -> Error {
+    Error(format!(
+        "{what}: this build links the host-only xla stub; vendor real xla-rs \
+         bindings to execute PJRT artifacts (see DESIGN.md §4.2)"
+    ))
+}
+
+/// Element types the chronicals artifacts use (plus F64 so error paths in
+/// `clone_literal` are constructible in tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    F64,
+    Pred,
+}
+
+/// Scalar types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn write(data: Vec<Self>, dims: Vec<i64>) -> Literal;
+    fn read(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+#[derive(Debug, Clone)]
+enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    F64(Vec<f64>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host tensor: the one piece of xla-rs this stub implements for real.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+macro_rules! native {
+    ($t:ty, $variant:ident, $ty:expr) => {
+        impl NativeType for $t {
+            const TY: ElementType = $ty;
+            fn write(data: Vec<Self>, dims: Vec<i64>) -> Literal {
+                Literal { payload: Payload::$variant(data), dims }
+            }
+            fn read(lit: &Literal) -> Result<Vec<Self>> {
+                match &lit.payload {
+                    Payload::$variant(v) => Ok(v.clone()),
+                    other => Err(Error(format!(
+                        "literal is {:?}, not {:?}",
+                        payload_ty(other),
+                        $ty
+                    ))),
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32, ElementType::F32);
+native!(i32, I32, ElementType::S32);
+native!(f64, F64, ElementType::F64);
+
+fn payload_ty(p: &Payload) -> ElementType {
+    match p {
+        Payload::F32(_) => ElementType::F32,
+        Payload::I32(_) => ElementType::S32,
+        Payload::F64(_) => ElementType::F64,
+        Payload::Tuple(_) => ElementType::Pred, // tuples have no array type
+    }
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(t: T) -> Literal {
+        T::write(vec![t], vec![])
+    }
+
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::write(data.to_vec(), vec![data.len() as i64])
+    }
+
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { payload: Payload::Tuple(elems), dims: vec![] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if n != have {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({n} elements) from {have} elements"
+            )));
+        }
+        let mut out = self.clone();
+        out.dims = dims.to_vec();
+        Ok(out)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::read(self)
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::read(self)?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".into()))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match &self.payload {
+            Payload::Tuple(_) => Err(Error("tuple literal has no array shape".into())),
+            p => Ok(ArrayShape { ty: payload_ty(p), dims: self.dims.clone() }),
+        }
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.payload {
+            Payload::Tuple(elems) => Ok(elems),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len() * 4,
+            Payload::I32(v) => v.len() * 4,
+            Payload::F64(v) => v.len() * 8,
+            Payload::Tuple(elems) => elems.iter().map(Literal::size_bytes).sum(),
+        }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::F64(v) => v.len(),
+            Payload::Tuple(elems) => elems.len(),
+        }
+    }
+}
+
+/// Shape of an array literal: element type + dimensions.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (stub: holds nothing; loading errors out).
+pub struct HloModuleProto {
+    _p: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(stub_err("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation handle (stub).
+pub struct XlaComputation {
+    _p: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _p: () }
+    }
+}
+
+/// Device-resident buffer (stub: unconstructible in practice).
+pub struct PjRtBuffer {
+    _p: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable (stub: unconstructible in practice).
+pub struct PjRtLoadedExecutable {
+    _p: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client. `cpu()` is the single construction gate: it always errors on
+/// the stub, so no downstream device path can be reached.
+pub struct PjRtClient {
+    _p: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(stub_err("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(stub_err("PjRtClient::buffer_from_host_buffer"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(stub_err("PjRtClient::buffer_from_host_literal"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 7);
+        let t = Literal::tuple(vec![s, Literal::scalar(1.5f32)]);
+        assert!(t.array_shape().is_err());
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+    }
+
+    #[test]
+    fn device_paths_gated() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
