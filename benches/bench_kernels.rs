@@ -1,30 +1,42 @@
 //! Kernel microbenchmarks — regenerates paper Table 5 (fused vs naive
 //! timings for RMSNorm / SwiGLU / QK-RoPE / Attention / Cross-Entropy /
-//! AdamW / LoRA-linear) on the compiled AOT kernel artifacts.
+//! AdamW / LoRA-linear) through the `Backend` trait.
 //!
 //! Plain-main bench (offline build: no criterion): mean over `REPS`
-//! executions after warmup, on the PJRT CPU device.
+//! executions after warmup. Backend comes from `BACKEND` (default
+//! `cpu-fast`, whose `bench_kernel` times its fused/tiled kernels against
+//! the reference backend's scalar implementations on identical inputs;
+//! `pjrt` times compiled kernel artifacts when available).
 //!
-//! Run: `cargo bench --bench bench_kernels` (or `make bench`).
+//! Writes the per-kernel means into the repo-root `BENCH_cpu.json`
+//! (section `"kernels"`) so the perf trajectory is machine-readable.
+//!
+//! Run: `cargo bench --bench bench_kernels`
+//! Env: REPS (default 30), BACKEND (default cpu-fast), CHRONICALS_THREADS.
 
-use chronicals::harness;
+use chronicals::backend::{create_backend, Backend};
 use chronicals::report;
-use chronicals::runtime::Runtime;
+use chronicals::util::json::{Json, Obj};
 
 fn main() {
     let reps: usize = std::env::var("REPS")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(30);
-    let rt = match Runtime::new("artifacts") {
-        Ok(rt) => rt,
+    let backend_name = std::env::var("BACKEND").unwrap_or_else(|_| "cpu-fast".into());
+    let be = match create_backend(&backend_name, "artifacts", 0) {
+        Ok(be) => be,
         Err(e) => {
-            eprintln!("bench_kernels skipped: {e:#} (run `make artifacts`)");
+            eprintln!("bench_kernels skipped: {e:#}");
             return;
         }
     };
-    println!("bench_kernels: {reps} reps per kernel (profile: {})", rt.manifest.profile);
-    match harness::kernel_microbench(&rt, reps) {
+    println!(
+        "bench_kernels: {reps} reps per kernel (backend: {}, profile: {})",
+        be.name(),
+        be.manifest().profile
+    );
+    match chronicals::harness::kernel_microbench(be.as_ref(), reps) {
         Ok(rows) => {
             println!("{}", report::kernel_table(&rows));
             println!(
@@ -33,6 +45,23 @@ fn main() {
                  form wins wherever the naive form is barrier-split or materializes\n\
                  intermediates; exact ratios are substrate-dependent."
             );
+            let mut kernels = Obj::default();
+            for (name, fused, naive) in &rows {
+                let mut entry = Obj::default();
+                entry.insert("fused_ms", Json::Num(fused * 1e3));
+                entry.insert("naive_ms", Json::Num(naive * 1e3));
+                entry.insert("speedup", Json::Num(naive / fused));
+                kernels.insert(name.clone(), Json::Obj(entry));
+            }
+            let mut section = Obj::default();
+            section.insert("backend", Json::Str(be.name().to_string()));
+            section.insert("reps", Json::Num(reps as f64));
+            section.insert("per_kernel", Json::Obj(kernels));
+            let path = report::bench_json_path();
+            match report::update_bench_json(&path, "kernels", Json::Obj(section)) {
+                Ok(()) => println!("wrote kernel means to {}", path.display()),
+                Err(e) => eprintln!("could not update {}: {e:#}", path.display()),
+            }
         }
         Err(e) => eprintln!("bench_kernels failed: {e:#}"),
     }

@@ -1,42 +1,110 @@
-//! End-to-end training throughput — regenerates paper Table 2 (full
-//! fine-tuning comparison) and Table 4 / Fig. 14 (the ablation ladder),
-//! with the paper's verification methodology applied to every row.
+//! End-to-end training throughput through the `Backend` trait: the
+//! reference `CpuBackend` vs the threaded fused-kernel `FastCpuBackend`
+//! on an identical corpus, packing, schedule and seed — the repo-local
+//! analogue of paper Table 2, with the paper's verification methodology
+//! applied to every row (a tokens/sec figure only counts if gradients
+//! flowed and the loss moved).
+//!
+//! Also regenerates the ablation ladder (Table 4 shape) on the fast
+//! backend, and writes the headline numbers to the repo-root
+//! `BENCH_cpu.json` (section `"throughput"`).
 //!
 //! Run: `cargo bench --bench bench_throughput`
-//! Env: STEPS (default 12) — measured steps per configuration.
+//! Env: STEPS (default 12) — measured steps per configuration;
+//!      CHRONICALS_THREADS — worker threads for the fast backend.
 
+use chronicals::backend::cpu::CpuBackend;
+use chronicals::backend::cpu_fast::FastCpuBackend;
+use chronicals::backend::Backend;
+use chronicals::config::RunConfig;
+use chronicals::coordinator::TrainSummary;
 use chronicals::harness;
-use chronicals::report;
-use chronicals::runtime::Runtime;
+use chronicals::report::{self, Row};
+use chronicals::util::json::{Json, Obj};
 use std::rc::Rc;
+
+/// Bench geometry: larger than the 4×64 reference substrate so tiling,
+/// threading and the no-materialization paths have real work to do.
+const BATCH: usize = 4;
+const SEQ: usize = 128;
+
+fn bench_cfg(exe: &str, steps: u64) -> RunConfig {
+    RunConfig {
+        executable: exe.into(),
+        steps,
+        warmup_steps: 2,
+        lr: 5e-3,
+        packed: true,
+        corpus_examples: 384,
+        max_seq: 96,
+        ..RunConfig::default()
+    }
+}
+
+fn run(backend: &Rc<dyn Backend>, exe: &str, steps: u64) -> Option<TrainSummary> {
+    match harness::run_variant(backend, &bench_cfg(exe, steps)) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("{exe} on {} failed: {e:#}", backend.name());
+            None
+        }
+    }
+}
 
 fn main() {
     let steps: u64 = std::env::var("STEPS")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(12);
-    let rt = match Runtime::new("artifacts") {
-        Ok(rt) => Rc::new(rt),
-        Err(e) => {
-            eprintln!("bench_throughput skipped: {e:#} (run `make artifacts`)");
-            return;
-        }
-    };
-    println!("bench_throughput: {steps} steps per config\n");
+    let fast = FastCpuBackend::with_geometry(BATCH, SEQ);
+    let threads = fast.threads();
+    let reference: Rc<dyn Backend> = Rc::new(CpuBackend::with_geometry(BATCH, SEQ));
+    let fast: Rc<dyn Backend> = Rc::new(fast);
+    println!(
+        "bench_throughput: {steps} steps per config, B={BATCH} S={SEQ}, \
+         cpu-fast threads={threads}\n"
+    );
 
-    match harness::full_ft_comparison(&rt, steps) {
-        Ok(rows) => println!(
+    let mut section = Obj::default();
+    let mut cfg_obj = Obj::default();
+    cfg_obj.insert("batch", Json::Num(BATCH as f64));
+    cfg_obj.insert("seq", Json::Num(SEQ as f64));
+    cfg_obj.insert("steps", Json::Num(steps as f64));
+    cfg_obj.insert("threads", Json::Num(threads as f64));
+    section.insert("config", Json::Obj(cfg_obj));
+
+    for (mode, exe) in [("full_ft", "train_step_chronicals"), ("lora", "train_step_lora")] {
+        let (Some(r), Some(f)) = (run(&reference, exe, steps), run(&fast, exe, steps)) else {
+            continue;
+        };
+        let rows = vec![
+            Row::from_summary("CpuBackend (reference)", mode, BATCH, &r),
+            Row::from_summary("FastCpuBackend (fused)", mode, BATCH, &f),
+        ];
+        println!(
             "{}",
             report::throughput_table(
-                "Full fine-tuning (paper Table 2)",
+                &format!("{mode}: reference vs fast CPU backend"),
                 &rows,
-                "Baseline (naive, verified)"
+                "CpuBackend (reference)"
             )
-        ),
-        Err(e) => eprintln!("full-ft comparison failed: {e:#}"),
+        );
+        let speedup = if r.tokens_per_sec > 0.0 { f.tokens_per_sec / r.tokens_per_sec } else { 0.0 };
+        println!("{mode} speedup: {speedup:.2}x (target ≥ 2x)\n");
+        let mut entry = Obj::default();
+        entry.insert("cpu_tokens_per_sec", Json::Num(r.tokens_per_sec));
+        entry.insert("cpu_fast_tokens_per_sec", Json::Num(f.tokens_per_sec));
+        entry.insert("cpu_mean_step_ms", Json::Num(r.mean_step_ms));
+        entry.insert("cpu_fast_mean_step_ms", Json::Num(f.mean_step_ms));
+        entry.insert("speedup", Json::Num(speedup));
+        entry.insert(
+            "verified",
+            Json::Bool(r.verification.is_training && f.verification.is_training),
+        );
+        section.insert(mode, Json::Obj(entry));
     }
 
-    match harness::ablation_ladder(&rt, steps) {
+    match harness::ablation_ladder(&fast, steps) {
         Ok(rows) => {
             println!("{}", report::ablation_table(&rows));
             println!(
@@ -45,5 +113,11 @@ fn main() {
             );
         }
         Err(e) => eprintln!("ablation ladder failed: {e:#}"),
+    }
+
+    let path = report::bench_json_path();
+    match report::update_bench_json(&path, "throughput", Json::Obj(section)) {
+        Ok(()) => println!("wrote throughput numbers to {}", path.display()),
+        Err(e) => eprintln!("could not update {}: {e:#}", path.display()),
     }
 }

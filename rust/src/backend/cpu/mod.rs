@@ -33,7 +33,7 @@ pub const REF_LORA_ALPHA: usize = 8;
 
 /// The reference substrate model (vocab ≫ is not needed here; the CCE
 /// memory experiments live on the PJRT side).
-fn reference_dims() -> ModelDims {
+pub(crate) fn reference_dims() -> ModelDims {
     ModelDims { vocab: 64, d_model: 32, n_layers: 2, n_heads: 4, n_kv_heads: 2, d_ff: 64 }
 }
 
@@ -79,7 +79,7 @@ fn lora_cfg() -> LoraCfg {
     LoraCfg { rank: REF_LORA_RANK, alpha: REF_LORA_ALPHA as f32 }
 }
 
-fn family_lora(family: &str) -> Option<LoraCfg> {
+pub(crate) fn family_lora(family: &str) -> Option<LoraCfg> {
     if family == "lora" {
         Some(lora_cfg())
     } else {
@@ -89,12 +89,14 @@ fn family_lora(family: &str) -> Option<LoraCfg> {
 
 impl CpuBackend {
     pub fn new() -> CpuBackend {
-        CpuBackend { manifest: synth_manifest(reference_dims(), REF_BATCH, REF_SEQ) }
+        CpuBackend {
+            manifest: synth_manifest(reference_dims(), REF_BATCH, REF_SEQ, "cpu-reference"),
+        }
     }
 
     /// A backend with custom batch geometry (tests exercising other B/S).
     pub fn with_geometry(batch: usize, seq: usize) -> CpuBackend {
-        CpuBackend { manifest: synth_manifest(reference_dims(), batch, seq) }
+        CpuBackend { manifest: synth_manifest(reference_dims(), batch, seq, "cpu-reference") }
     }
 
     fn spec(&self, name: &str) -> Result<&ExecutableSpec> {
@@ -102,8 +104,16 @@ impl CpuBackend {
     }
 }
 
-/// Build the synthesized manifest for the reference substrate.
-fn synth_manifest(dims: ModelDims, batch: usize, seq: usize) -> Manifest {
+/// Build the synthesized manifest for a CPU substrate backend. Shared with
+/// the fast backend (`super::cpu_fast`): both register the same executable
+/// families over the same batch geometry, so every harness workflow runs
+/// on either and cross-backend parity tests line up by executable name.
+pub(crate) fn synth_manifest(
+    dims: ModelDims,
+    batch: usize,
+    seq: usize,
+    profile: &str,
+) -> Manifest {
     let executables = VARIANTS
         .iter()
         .map(|v| {
@@ -175,10 +185,10 @@ fn synth_manifest(dims: ModelDims, batch: usize, seq: usize) -> Manifest {
             }
         })
         .collect();
-    Manifest { profile: "cpu-reference".into(), dir: PathBuf::new(), executables }
+    Manifest { profile: profile.into(), dir: PathBuf::new(), executables }
 }
 
-fn as_cpu_state(state: &DeviceState) -> Result<&CpuState> {
+pub(crate) fn as_cpu_state(state: &DeviceState) -> Result<&CpuState> {
     match state {
         DeviceState::Cpu(s) => Ok(s),
         #[cfg(feature = "pjrt")]
@@ -186,7 +196,7 @@ fn as_cpu_state(state: &DeviceState) -> Result<&CpuState> {
     }
 }
 
-fn as_cpu_state_mut(state: &mut DeviceState) -> Result<&mut CpuState> {
+pub(crate) fn as_cpu_state_mut(state: &mut DeviceState) -> Result<&mut CpuState> {
     match state {
         DeviceState::Cpu(s) => Ok(s),
         #[cfg(feature = "pjrt")]
@@ -197,7 +207,7 @@ fn as_cpu_state_mut(state: &mut DeviceState) -> Result<&mut CpuState> {
 /// The reference step is shape-polymorphic, but the PJRT executables are
 /// not; enforce the manifest geometry on both backends so behavior never
 /// diverges by backend.
-fn check_geometry(spec: &ExecutableSpec, b: &Batch) -> Result<()> {
+pub(crate) fn check_geometry(spec: &ExecutableSpec, b: &Batch) -> Result<()> {
     if b.batch != spec.batch || b.seq != spec.seq {
         bail!(
             "batch geometry [{}, {}] does not match executable '{}' [{}, {}]",
@@ -211,7 +221,36 @@ fn check_geometry(spec: &ExecutableSpec, b: &Batch) -> Result<()> {
     Ok(())
 }
 
-fn batch_view(b: &Batch) -> Result<model::BatchView<'_>> {
+/// Restore checkpoint tensors into a CPU-family state. Shared by both CPU
+/// backends — they use the same `CpuState` layout, so validation must stay
+/// identical (a fix applied here reaches both).
+pub(crate) fn load_cpu_params(s: &mut CpuState, params: &[HostTensor]) -> Result<()> {
+    if params.len() != s.params.len() {
+        bail!(
+            "checkpoint has {} tensors, state expects {}",
+            params.len(),
+            s.params.len()
+        );
+    }
+    for (i, (cur, new)) in s.params.iter().zip(params).enumerate() {
+        if cur.shape() != new.shape() {
+            bail!(
+                "tensor {} ('{}') shape mismatch: checkpoint {:?} vs state {:?}",
+                i,
+                s.names[i],
+                new.shape(),
+                cur.shape()
+            );
+        }
+        new.as_f32()?; // checkpoints are f32-only
+    }
+    for (cur, new) in s.params.iter_mut().zip(params) {
+        *cur = new.clone();
+    }
+    Ok(())
+}
+
+pub(crate) fn batch_view(b: &Batch) -> Result<model::BatchView<'_>> {
     Ok(model::BatchView {
         tokens: b.tokens.as_i32()?,
         targets: b.targets.as_i32()?,
@@ -318,30 +357,7 @@ impl Backend for CpuBackend {
     }
 
     fn load_params(&self, state: &mut DeviceState, params: &[HostTensor]) -> Result<()> {
-        let s = as_cpu_state_mut(state)?;
-        if params.len() != s.params.len() {
-            bail!(
-                "checkpoint has {} tensors, state expects {}",
-                params.len(),
-                s.params.len()
-            );
-        }
-        for (i, (cur, new)) in s.params.iter().zip(params).enumerate() {
-            if cur.shape() != new.shape() {
-                bail!(
-                    "tensor {} ('{}') shape mismatch: checkpoint {:?} vs state {:?}",
-                    i,
-                    s.names[i],
-                    new.shape(),
-                    cur.shape()
-                );
-            }
-            new.as_f32()?; // checkpoints are f32-only
-        }
-        for (cur, new) in s.params.iter_mut().zip(params) {
-            *cur = new.clone();
-        }
-        Ok(())
+        load_cpu_params(as_cpu_state_mut(state)?, params)
     }
 }
 

@@ -179,14 +179,15 @@ pub fn init_state(dims: ModelDims, lora: Option<LoraCfg>, seed: i32) -> CpuState
     CpuState { dims, lora, names, params, n_trainable, slot_m, slot_v }
 }
 
-/// Name → index lookup over the state's parameter list.
-struct ParamIdx<'a> {
+/// Name → index lookup over the state's parameter list. Shared with the
+/// fast backend, which walks the same state layout.
+pub(crate) struct ParamIdx<'a> {
     params: &'a [HostTensor],
     idx: HashMap<&'a str, usize>,
 }
 
 impl<'a> ParamIdx<'a> {
-    fn new(names: &'a [String], params: &'a [HostTensor]) -> ParamIdx<'a> {
+    pub(crate) fn new(names: &'a [String], params: &'a [HostTensor]) -> ParamIdx<'a> {
         let idx = names
             .iter()
             .enumerate()
@@ -195,20 +196,20 @@ impl<'a> ParamIdx<'a> {
         ParamIdx { params, idx }
     }
 
-    fn id(&self, name: &str) -> Result<usize> {
+    pub(crate) fn id(&self, name: &str) -> Result<usize> {
         self.idx
             .get(name)
             .copied()
             .ok_or_else(|| anyhow!("state has no parameter '{name}' — variant/state mismatch"))
     }
 
-    fn get(&self, name: &str) -> Result<&'a [f32]> {
+    pub(crate) fn get(&self, name: &str) -> Result<&'a [f32]> {
         self.params[self.id(name)?].as_f32()
     }
 }
 
 /// Per-layer forward activations kept for the backward pass.
-struct LayerCache {
+pub(crate) struct LayerCache {
     x_in: Vec<f32>,
     h1: Vec<f32>,
     rstd1: Vec<f32>,
@@ -227,7 +228,7 @@ struct LayerCache {
     y: Vec<f32>,
 }
 
-struct FinalCache {
+pub(crate) struct FinalCache {
     x_f: Vec<f32>,
     hf: Vec<f32>,
     rstd_f: Vec<f32>,
@@ -236,8 +237,9 @@ struct FinalCache {
 }
 
 /// Forward pass; fills `caches` when provided (training) and returns the
-/// summed loss + valid-target count.
-fn forward(
+/// summed loss + valid-target count. Crate-visible so the fast backend's
+/// unit tests can compare per-parameter gradients against this oracle.
+pub(crate) fn forward(
     state: &CpuState,
     bv: &BatchView,
     caches: Option<(&mut Vec<LayerCache>, &mut Option<FinalCache>)>,
@@ -378,9 +380,10 @@ fn forward(
 
 /// Segment-masked causal attention forward (paper Def. 1/2 with the packing
 /// mask of Alg. 17): tokens attend causally within their own non-zero
-/// segment; padding rows (seg 0) emit zeros.
+/// segment; padding rows (seg 0) emit zeros. Crate-visible: the fast
+/// backend's kernel microbench times this as the naive attention baseline.
 #[allow(clippy::too_many_arguments)]
-fn attention_fwd(
+pub(crate) fn attention_fwd(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -451,8 +454,9 @@ fn attention_fwd(
 
 /// Attention backward: accumulates `dq`, `dk`, `dv` from `dout` and the
 /// cached attention weights. GQA gradients sum over each KV head's group.
+/// Crate-visible as the oracle for the fast backend's recompute backward.
 #[allow(clippy::too_many_arguments)]
-fn attention_bwd(
+pub(crate) fn attention_bwd(
     dout: &[f32],
     q: &[f32],
     k: &[f32],
@@ -523,8 +527,8 @@ fn attention_bwd(
 
 /// Full backward pass. Returns per-parameter gradients aligned with
 /// `state.params` (frozen entries included; callers use the trainable
-/// prefix).
-fn backward(
+/// prefix). Crate-visible as the gradient oracle for fast-backend tests.
+pub(crate) fn backward(
     state: &CpuState,
     bv: &BatchView,
     layer_caches: &[LayerCache],

@@ -1,0 +1,408 @@
+//! Flash-attention-style tiled attention with online softmax.
+//!
+//! The reference backend materializes the `[B, Hq, S, S]` attention
+//! probability tensor and keeps it alive for backward. This module never
+//! builds it (the paper's O(N²d²M⁻¹) IO argument):
+//!
+//! * **Forward** streams KV tiles per query row, maintaining the running
+//!   maximum `m`, running denominator `l` and running output accumulator —
+//!   textbook online softmax. It emits the attention output plus one
+//!   logsumexp scalar per `(batch, head, row)` (`lse = m + ln l`,
+//!   `O(B·Hq·S)` — linear in S, not quadratic).
+//! * **Backward** recomputes each probability on the fly from the cached
+//!   post-RoPE Q/K and the stored `lse`: `p_ij = exp(q_i·k_j·scale −
+//!   lse_i)`, using the identity `Σ_j p_ij dp_ij = dout_i · out_i` so no
+//!   per-row probability vector is needed either.
+//!
+//! Segment masking matches the reference exactly: tokens attend causally
+//! within their own non-zero segment; padding rows (seg 0) produce zero
+//! output and receive zero gradient.
+//!
+//! Threading is per batch row (disjoint `chunks_mut` of out/lse/dq/dk/dv),
+//! so bits are invariant to the thread count.
+
+use super::kernels::{axpy, dot4, rows_per_tile};
+use super::scratch;
+
+/// KV tile width for the forward streaming pass. Fixed (not derived from
+/// the thread count) so results do not depend on parallelism.
+pub const KV_TILE: usize = 64;
+
+/// Online-softmax attention forward.
+///
+/// `q: [T, n_heads·hd]`, `k`/`v`: `[T, n_kv·hd]`, `seg: [T]` with 0 =
+/// padding. Writes `out: [T, n_heads·hd]` (assigned) and
+/// `lse: [bsz, n_heads, s]` (logsumexp per query row; `-inf` on padding
+/// rows).
+#[allow(clippy::too_many_arguments)]
+pub fn flash_attention_fwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    seg: &[i32],
+    bsz: usize,
+    s: usize,
+    n_heads: usize,
+    n_kv: usize,
+    hd: usize,
+    out: &mut [f32],
+    lse: &mut [f32],
+    threads: usize,
+) {
+    let group = n_heads / n_kv;
+    let dqw = n_heads * hd;
+    let dkvw = n_kv * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    debug_assert_eq!(q.len(), bsz * s * dqw);
+    debug_assert_eq!(k.len(), bsz * s * dkvw);
+    debug_assert_eq!(out.len(), bsz * s * dqw);
+    debug_assert_eq!(lse.len(), bsz * n_heads * s);
+
+    let body = |b0: usize, out_c: &mut [f32], lse_c: &mut [f32]| {
+        let n_b = lse_c.len() / (n_heads * s);
+        let mut sc = scratch::alloc_f32(KV_TILE);
+        let mut acc = scratch::alloc_f32(hd);
+        for lb in 0..n_b {
+            let b = b0 + lb;
+            for h in 0..n_heads {
+                let kh = h / group;
+                for i in 0..s {
+                    let ti = b * s + i;
+                    let seg_i = seg[ti];
+                    let lse_slot = &mut lse_c[(lb * n_heads + h) * s + i];
+                    if seg_i == 0 {
+                        // padding row: zero output explicitly so reused
+                        // (dirty) buffers cannot leak stale activations
+                        *lse_slot = f32::NEG_INFINITY;
+                        let or = &mut out_c
+                            [(lb * s + i) * dqw + h * hd..(lb * s + i) * dqw + (h + 1) * hd];
+                        or.fill(0.0);
+                        continue;
+                    }
+                    let qr = &q[ti * dqw + h * hd..ti * dqw + (h + 1) * hd];
+                    let mut m = f32::NEG_INFINITY;
+                    let mut l = 0.0f32;
+                    for a in acc.iter_mut() {
+                        *a = 0.0;
+                    }
+                    let mut j0 = 0usize;
+                    while j0 <= i {
+                        let j1 = (j0 + KV_TILE).min(i + 1);
+                        let mut tm = f32::NEG_INFINITY;
+                        for (jj, j) in (j0..j1).enumerate() {
+                            let tj = b * s + j;
+                            if seg[tj] != seg_i {
+                                sc[jj] = f32::NEG_INFINITY;
+                                continue;
+                            }
+                            let kr = &k[tj * dkvw + kh * hd..tj * dkvw + (kh + 1) * hd];
+                            let sv = dot4(qr, kr) * scale;
+                            sc[jj] = sv;
+                            tm = tm.max(sv);
+                        }
+                        if tm > f32::NEG_INFINITY {
+                            let m_new = m.max(tm);
+                            if m > f32::NEG_INFINITY {
+                                // correct previous statistics (exp(0) = 1
+                                // exactly, so the no-op case is bit-exact)
+                                let alpha = (m - m_new).exp();
+                                l *= alpha;
+                                for a in acc.iter_mut() {
+                                    *a *= alpha;
+                                }
+                            }
+                            for (jj, j) in (j0..j1).enumerate() {
+                                if sc[jj] == f32::NEG_INFINITY {
+                                    continue;
+                                }
+                                let e = (sc[jj] - m_new).exp();
+                                l += e;
+                                let tj = b * s + j;
+                                let vr = &v[tj * dkvw + kh * hd..tj * dkvw + (kh + 1) * hd];
+                                axpy(e, vr, &mut acc);
+                            }
+                            m = m_new;
+                        }
+                        j0 = j1;
+                    }
+                    let or = &mut out_c[(lb * s + i) * dqw + h * hd..(lb * s + i) * dqw + (h + 1) * hd];
+                    for (o, &a) in or.iter_mut().zip(acc.iter()) {
+                        *o = a / l;
+                    }
+                    *lse_slot = m + l.ln();
+                }
+            }
+        }
+    };
+
+    let bp = rows_per_tile(bsz, threads);
+    if threads <= 1 || bsz <= 1 {
+        body(0, out, lse);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let body = &body;
+        let iter = out
+            .chunks_mut(bp * s * dqw)
+            .zip(lse.chunks_mut(bp * n_heads * s))
+            .enumerate();
+        for (idx, (out_c, lse_c)) in iter {
+            scope.spawn(move || body(idx * bp, out_c, lse_c));
+        }
+    });
+}
+
+/// Flash attention backward: recomputes probabilities tile-free from Q/K
+/// and the forward's `lse`, accumulating `dq`/`dk`/`dv`.
+///
+/// Uses `D_i = dout_i · out_i` (the softmax-Jacobian row sum), so the only
+/// state carried from forward is `out` and `lse`.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_attention_bwd(
+    dout: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    out: &[f32],
+    lse: &[f32],
+    seg: &[i32],
+    bsz: usize,
+    s: usize,
+    n_heads: usize,
+    n_kv: usize,
+    hd: usize,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+    threads: usize,
+) {
+    let group = n_heads / n_kv;
+    let dqw = n_heads * hd;
+    let dkvw = n_kv * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    debug_assert_eq!(lse.len(), bsz * n_heads * s);
+
+    let body = |b0: usize, dq_c: &mut [f32], dk_c: &mut [f32], dv_c: &mut [f32]| {
+        let n_b = dq_c.len() / (s * dqw);
+        for lb in 0..n_b {
+            let b = b0 + lb;
+            for h in 0..n_heads {
+                let kh = h / group;
+                for i in 0..s {
+                    let ti = b * s + i;
+                    let seg_i = seg[ti];
+                    if seg_i == 0 {
+                        continue;
+                    }
+                    let lse_i = lse[(b * n_heads + h) * s + i];
+                    let dor = &dout[ti * dqw + h * hd..ti * dqw + (h + 1) * hd];
+                    let or = &out[ti * dqw + h * hd..ti * dqw + (h + 1) * hd];
+                    let qr = &q[ti * dqw + h * hd..ti * dqw + (h + 1) * hd];
+                    let d_i = dot4(dor, or);
+                    for j in 0..=i {
+                        let tj = b * s + j;
+                        if seg[tj] != seg_i {
+                            continue;
+                        }
+                        let kr = &k[tj * dkvw + kh * hd..tj * dkvw + (kh + 1) * hd];
+                        let vr = &v[tj * dkvw + kh * hd..tj * dkvw + (kh + 1) * hd];
+                        let s_ij = dot4(qr, kr) * scale;
+                        let p = (s_ij - lse_i).exp();
+                        let dp = dot4(dor, vr);
+                        let ds = p * (dp - d_i) * scale;
+                        let lrow = lb * s + j;
+                        axpy(p, dor, &mut dv_c[lrow * dkvw + kh * hd..lrow * dkvw + (kh + 1) * hd]);
+                        axpy(ds, qr, &mut dk_c[lrow * dkvw + kh * hd..lrow * dkvw + (kh + 1) * hd]);
+                        let lqrow = lb * s + i;
+                        axpy(ds, kr, &mut dq_c[lqrow * dqw + h * hd..lqrow * dqw + (h + 1) * hd]);
+                    }
+                }
+            }
+        }
+    };
+
+    let bp = rows_per_tile(bsz, threads);
+    if threads <= 1 || bsz <= 1 {
+        body(0, dq, dk, dv);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let body = &body;
+        let iter = dq
+            .chunks_mut(bp * s * dqw)
+            .zip(dk.chunks_mut(bp * s * dkvw))
+            .zip(dv.chunks_mut(bp * s * dkvw))
+            .enumerate();
+        for (idx, ((dq_c, dk_c), dv_c)) in iter {
+            scope.spawn(move || body(idx * bp, dq_c, dk_c, dv_c));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cpu::model::{self, BatchView};
+    use crate::util::rng::Rng;
+
+    /// Packed-batch fixture: row 0 has two segments, row 1 one + padding.
+    struct Fixture {
+        bsz: usize,
+        s: usize,
+        n_heads: usize,
+        n_kv: usize,
+        hd: usize,
+        seg: Vec<i32>,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        dout: Vec<f32>,
+    }
+
+    fn fixture(seed: u64) -> Fixture {
+        let (bsz, s, n_heads, n_kv, hd) = (2usize, 10usize, 4usize, 2usize, 4usize);
+        let mut seg = vec![0i32; bsz * s];
+        for i in 0..5 {
+            seg[i] = 1;
+        }
+        for i in 5..9 {
+            seg[i] = 2;
+        }
+        for i in 0..6 {
+            seg[s + i] = 1;
+        }
+        let mut rng = Rng::new(seed);
+        let mut rand = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal() as f32).collect() };
+        let t = bsz * s;
+        Fixture {
+            bsz,
+            s,
+            n_heads,
+            n_kv,
+            hd,
+            seg,
+            q: rand(t * n_heads * hd),
+            k: rand(t * n_kv * hd),
+            v: rand(t * n_kv * hd),
+            dout: rand(t * n_heads * hd),
+        }
+    }
+
+    fn view_for<'a>(f: &'a Fixture, tokens: &'a [i32], pos: &'a [i32]) -> BatchView<'a> {
+        BatchView { tokens, targets: tokens, seg: &f.seg, pos, bsz: f.bsz, seq: f.s }
+    }
+
+    #[test]
+    fn forward_matches_materialized_reference() {
+        let f = fixture(17);
+        let t = f.bsz * f.s;
+        let tokens = vec![0i32; t];
+        let pos = vec![0i32; t];
+        let bv = view_for(&f, &tokens, &pos);
+        let mut want = vec![0.0f32; t * f.n_heads * f.hd];
+        let mut probs = vec![0.0f32; f.bsz * f.n_heads * f.s * f.s];
+        model::attention_fwd(&f.q, &f.k, &f.v, &bv, f.n_heads, f.n_kv, f.hd, &mut want, &mut probs);
+        for threads in [1usize, 2, 4] {
+            let mut out = vec![0.0f32; t * f.n_heads * f.hd];
+            let mut lse = vec![0.0f32; f.bsz * f.n_heads * f.s];
+            flash_attention_fwd(
+                &f.q, &f.k, &f.v, &f.seg, f.bsz, f.s, f.n_heads, f.n_kv, f.hd, &mut out, &mut lse,
+                threads,
+            );
+            for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-5, "threads={threads} out[{i}]: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_matches_materialized_reference() {
+        let f = fixture(18);
+        let t = f.bsz * f.s;
+        let tokens = vec![0i32; t];
+        let pos = vec![0i32; t];
+        let bv = view_for(&f, &tokens, &pos);
+        let dqw = f.n_heads * f.hd;
+        let dkvw = f.n_kv * f.hd;
+        let mut att = vec![0.0f32; t * dqw];
+        let mut probs = vec![0.0f32; f.bsz * f.n_heads * f.s * f.s];
+        model::attention_fwd(&f.q, &f.k, &f.v, &bv, f.n_heads, f.n_kv, f.hd, &mut att, &mut probs);
+        let (mut dq_r, mut dk_r, mut dv_r) =
+            (vec![0.0f32; t * dqw], vec![0.0f32; t * dkvw], vec![0.0f32; t * dkvw]);
+        model::attention_bwd(
+            &f.dout, &f.q, &f.k, &f.v, &probs, &bv, f.n_heads, f.n_kv, f.hd, &mut dq_r, &mut dk_r,
+            &mut dv_r,
+        );
+
+        let mut out = vec![0.0f32; t * dqw];
+        let mut lse = vec![0.0f32; f.bsz * f.n_heads * f.s];
+        flash_attention_fwd(
+            &f.q, &f.k, &f.v, &f.seg, f.bsz, f.s, f.n_heads, f.n_kv, f.hd, &mut out, &mut lse, 2,
+        );
+        for threads in [1usize, 3] {
+            let (mut dq, mut dk, mut dv) =
+                (vec![0.0f32; t * dqw], vec![0.0f32; t * dkvw], vec![0.0f32; t * dkvw]);
+            flash_attention_bwd(
+                &f.dout, &f.q, &f.k, &f.v, &out, &lse, &f.seg, f.bsz, f.s, f.n_heads, f.n_kv, f.hd,
+                &mut dq, &mut dk, &mut dv, threads,
+            );
+            for (name, got, want) in [("dq", &dq, &dq_r), ("dk", &dk, &dk_r), ("dv", &dv, &dv_r)] {
+                for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+                    assert!((a - b).abs() < 1e-4, "threads={threads} {name}[{i}]: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padding_rows_emit_zero_output_and_grad() {
+        let f = fixture(19);
+        let t = f.bsz * f.s;
+        let dqw = f.n_heads * f.hd;
+        let dkvw = f.n_kv * f.hd;
+        let mut out = vec![0.0f32; t * dqw];
+        let mut lse = vec![0.0f32; f.bsz * f.n_heads * f.s];
+        flash_attention_fwd(
+            &f.q, &f.k, &f.v, &f.seg, f.bsz, f.s, f.n_heads, f.n_kv, f.hd, &mut out, &mut lse, 1,
+        );
+        // rows 9 (row 0 tail) and 16.. (row 1 tail) are padding
+        for ti in [9usize, 16, 17, 18, 19] {
+            assert!(out[ti * dqw..(ti + 1) * dqw].iter().all(|&x| x == 0.0), "out row {ti}");
+        }
+        let (mut dq, mut dk, mut dv) =
+            (vec![0.0f32; t * dqw], vec![0.0f32; t * dkvw], vec![0.0f32; t * dkvw]);
+        flash_attention_bwd(
+            &f.dout, &f.q, &f.k, &f.v, &out, &lse, &f.seg, f.bsz, f.s, f.n_heads, f.n_kv, f.hd,
+            &mut dq, &mut dk, &mut dv, 1,
+        );
+        for ti in [9usize, 16, 17, 18, 19] {
+            assert!(dq[ti * dqw..(ti + 1) * dqw].iter().all(|&x| x == 0.0), "dq row {ti}");
+            assert!(dk[ti * dkvw..(ti + 1) * dkvw].iter().all(|&x| x == 0.0), "dk row {ti}");
+        }
+    }
+
+    #[test]
+    fn long_row_exercises_multiple_kv_tiles() {
+        // one segment longer than KV_TILE forces the online rescale path
+        let (bsz, s, n_heads, n_kv, hd) = (1usize, KV_TILE + 33, 2usize, 1usize, 4usize);
+        let t = bsz * s;
+        let seg = vec![1i32; t];
+        let mut rng = Rng::new(23);
+        let mut rand = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal() as f32 * 2.0).collect() };
+        let q = rand(t * n_heads * hd);
+        let k = rand(t * n_kv * hd);
+        let v = rand(t * n_kv * hd);
+        let tokens = vec![0i32; t];
+        let pos = vec![0i32; t];
+        let bv = BatchView { tokens: &tokens, targets: &tokens, seg: &seg, pos: &pos, bsz, seq: s };
+        let mut want = vec![0.0f32; t * n_heads * hd];
+        let mut probs = vec![0.0f32; n_heads * s * s];
+        model::attention_fwd(&q, &k, &v, &bv, n_heads, n_kv, hd, &mut want, &mut probs);
+        let mut out = vec![0.0f32; t * n_heads * hd];
+        let mut lse = vec![0.0f32; n_heads * s];
+        flash_attention_fwd(&q, &k, &v, &seg, bsz, s, n_heads, n_kv, hd, &mut out, &mut lse, 1);
+        for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-4, "out[{i}]: {a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,415 @@
+//! Cut Cross-Entropy: loss and unembedding gradients without the `[T, V]`
+//! logits/probability buffer (paper Thm. 3, the 5 GB → 135 MB result).
+//!
+//! * **Forward** computes, per token row, a streaming logsumexp over vocab
+//!   tiles: logits for one `V_TILE`-wide tile are recomputed from
+//!   `hf @ W_head.T`, folded into the running `(max, denom)` pair, and
+//!   discarded. Only the per-row `lse` scalar (`[T]`) survives; the loss is
+//!   `lse − z_target` summed over supervised rows.
+//! * **Backward** fuses the `(softmax − onehot)/n_valid` term into the
+//!   gradient tile loops, recomputing `d = (exp(z − lse) − onehot)/n_valid`
+//!   on the fly from the forward's `lse`. It runs as two partial-free
+//!   passes: the dW pass parallelizes over vocab-row tiles (each worker
+//!   owns its `dW_head` rows outright), the dhf pass over token rows (each
+//!   worker owns its `dhf` rows and walks the vocab tiles in ascending
+//!   order). The only transient is one `V_TILE` logit strip per worker —
+//!   never `[T, V]`, and never a per-tile `[T, d]` partial either (a
+//!   single-reduction variant would hold `V/V_TILE` of those, which
+//!   *exceeds* `[T, V]` once `d_model ≥ V_TILE`). The price is recomputing
+//!   the logit tile once per pass; that is the paper's CCE trade — flops
+//!   for memory traffic.
+//!
+//! Thread-count invariance: the tile width is a fixed constant and every
+//! output row (of `dW_head` and of `dhf`) is accumulated by exactly one
+//! worker in the same ascending order regardless of the partition — so the
+//! bits never depend on how work was assigned to workers.
+
+use super::kernels::{axpy, dot4, rows_per_tile};
+use super::scratch;
+
+/// Vocab tile width. Fixed (not thread-derived) so results are independent
+/// of parallelism.
+pub const V_TILE: usize = 64;
+
+/// Streaming-logsumexp loss forward.
+///
+/// `hf: [T, d]` (final normed hidden states), `w_head: [V, d]`,
+/// `targets: [T]` with `-1` = masked. Fills `lse: [T]` (0.0 on masked
+/// rows) and returns `(summed loss over valid rows, n_valid)` — the same
+/// contract as the reference `softmax_xent`, minus the `[T, V]` buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn cce_loss_fwd(
+    hf: &[f32],
+    w_head: &[f32],
+    targets: &[i32],
+    t: usize,
+    d: usize,
+    v: usize,
+    lse: &mut [f32],
+    threads: usize,
+) -> (f32, usize) {
+    debug_assert_eq!(hf.len(), t * d);
+    debug_assert_eq!(w_head.len(), v * d);
+    debug_assert_eq!(lse.len(), t);
+    let mut rowloss = scratch::alloc_f32(t);
+
+    let body = |r0: usize, lse_c: &mut [f32], rl_c: &mut [f32]| {
+        let mut z = scratch::alloc_f32(V_TILE);
+        for r in 0..lse_c.len() {
+            let ti = r0 + r;
+            let tgt = targets[ti];
+            if tgt < 0 {
+                lse_c[r] = 0.0;
+                rl_c[r] = 0.0;
+                continue;
+            }
+            let hr = &hf[ti * d..(ti + 1) * d];
+            let mut m = f32::NEG_INFINITY;
+            let mut l = 0.0f32;
+            let mut z_tgt = 0.0f32;
+            let mut v0 = 0usize;
+            while v0 < v {
+                let v1 = (v0 + V_TILE).min(v);
+                let mut tm = f32::NEG_INFINITY;
+                for (jj, n) in (v0..v1).enumerate() {
+                    let zv = dot4(hr, &w_head[n * d..(n + 1) * d]);
+                    z[jj] = zv;
+                    tm = tm.max(zv);
+                }
+                let m_new = m.max(tm);
+                if m > f32::NEG_INFINITY {
+                    l *= (m - m_new).exp(); // exp(0) = 1 exactly when unchanged
+                }
+                for &zv in z[..v1 - v0].iter() {
+                    l += (zv - m_new).exp();
+                }
+                m = m_new;
+                let tu = tgt as usize;
+                if tu >= v0 && tu < v1 {
+                    z_tgt = z[tu - v0];
+                }
+                v0 = v1;
+            }
+            lse_c[r] = m + l.ln();
+            rl_c[r] = lse_c[r] - z_tgt;
+        }
+    };
+
+    let rp = rows_per_tile(t, threads);
+    if threads <= 1 || t <= 1 {
+        body(0, lse, &mut rowloss);
+    } else {
+        std::thread::scope(|sc| {
+            let body = &body;
+            for (idx, (lse_c, rl_c)) in lse.chunks_mut(rp).zip(rowloss.chunks_mut(rp)).enumerate() {
+                sc.spawn(move || body(idx * rp, lse_c, rl_c));
+            }
+        });
+    }
+
+    // fixed-order reduction: bits independent of the row partition
+    let mut loss_sum = 0.0f32;
+    let mut n_valid = 0usize;
+    for ti in 0..t {
+        if targets[ti] >= 0 {
+            loss_sum += rowloss[ti];
+            n_valid += 1;
+        }
+    }
+    (loss_sum, n_valid)
+}
+
+/// Fused CCE backward.
+///
+/// Accumulates `dhf += d @ W_head` (always) and, when the unembedding is
+/// trainable, `dw_head += d ⊗ hf`, where `d = (softmax − onehot)/n_valid`
+/// is recomputed tile-by-tile from `lse` — no `[T, V]` buffer and no
+/// `[T, d]` partials exist (see the module docs for the two-pass scheme).
+#[allow(clippy::too_many_arguments)]
+pub fn cce_bwd_fused(
+    hf: &[f32],
+    w_head: &[f32],
+    targets: &[i32],
+    lse: &[f32],
+    t: usize,
+    d: usize,
+    v: usize,
+    n_valid: usize,
+    mut dw_head: Option<&mut [f32]>,
+    dhf: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(dhf.len(), t * d);
+    if let Some(dw) = dw_head.as_deref() {
+        debug_assert_eq!(dw.len(), v * d);
+    }
+    let nv = n_valid.max(1) as f32;
+
+    // dW pass: workers own disjoint vocab-row blocks of dw_head outright.
+    if let Some(dw) = dw_head.as_deref_mut() {
+        let n_tiles = v.div_ceil(V_TILE);
+        let tp = rows_per_tile(n_tiles, threads); // vocab tiles per worker
+        if threads <= 1 || n_tiles <= 1 {
+            dw_pass(hf, w_head, targets, lse, t, d, v, nv, 0, dw);
+        } else {
+            std::thread::scope(|sc| {
+                for (idx, dw_c) in dw.chunks_mut(tp * V_TILE * d).enumerate() {
+                    sc.spawn(move || {
+                        dw_pass(hf, w_head, targets, lse, t, d, v, nv, idx * tp * V_TILE, dw_c)
+                    });
+                }
+            });
+        }
+    }
+
+    // dhf pass: workers own disjoint token-row blocks of dhf, each walking
+    // the vocab tiles in ascending order (thread-count-invariant bits).
+    let rp = rows_per_tile(t, threads);
+    if threads <= 1 || t <= 1 {
+        dhf_pass(hf, w_head, targets, lse, d, v, nv, 0, dhf);
+    } else {
+        std::thread::scope(|sc| {
+            for (idx, dhf_c) in dhf.chunks_mut(rp * d).enumerate() {
+                sc.spawn(move || dhf_pass(hf, w_head, targets, lse, d, v, nv, idx * rp, dhf_c));
+            }
+        });
+    }
+}
+
+/// dW worker: accumulate `dw_c = dW_head[v0 .. v0 + rows]` (a contiguous
+/// block of vocab rows starting at global row `v0`) over all tokens, one
+/// recomputed logit strip at a time.
+#[allow(clippy::too_many_arguments)]
+fn dw_pass(
+    hf: &[f32],
+    w_head: &[f32],
+    targets: &[i32],
+    lse: &[f32],
+    t: usize,
+    d: usize,
+    v: usize,
+    nv: f32,
+    v0: usize,
+    dw_c: &mut [f32],
+) {
+    let v_end = (v0 + dw_c.len() / d).min(v);
+    let mut z = scratch::alloc_f32(V_TILE);
+    let mut t0 = v0;
+    while t0 < v_end {
+        let t1 = (t0 + V_TILE).min(v_end);
+        for ti in 0..t {
+            let tgt = targets[ti];
+            if tgt < 0 {
+                continue;
+            }
+            let hr = &hf[ti * d..(ti + 1) * d];
+            for (jj, n) in (t0..t1).enumerate() {
+                z[jj] = dot4(hr, &w_head[n * d..(n + 1) * d]);
+            }
+            let lse_i = lse[ti];
+            for (jj, n) in (t0..t1).enumerate() {
+                let mut dl = (z[jj] - lse_i).exp() / nv;
+                if n == tgt as usize {
+                    dl -= 1.0 / nv;
+                }
+                if dl == 0.0 {
+                    continue;
+                }
+                let off = (n - v0) * d;
+                axpy(dl, hr, &mut dw_c[off..off + d]);
+            }
+        }
+        t0 = t1;
+    }
+}
+
+/// dhf worker: accumulate `dhf_c = dhf[r0 .. r0 + rows]` (a contiguous
+/// block of token rows), walking all vocab tiles in ascending order per
+/// row so the summation order never depends on the thread count.
+#[allow(clippy::too_many_arguments)]
+fn dhf_pass(
+    hf: &[f32],
+    w_head: &[f32],
+    targets: &[i32],
+    lse: &[f32],
+    d: usize,
+    v: usize,
+    nv: f32,
+    r0: usize,
+    dhf_c: &mut [f32],
+) {
+    let rows = dhf_c.len() / d;
+    let mut z = scratch::alloc_f32(V_TILE);
+    for r in 0..rows {
+        let ti = r0 + r;
+        let tgt = targets[ti];
+        if tgt < 0 {
+            continue;
+        }
+        let hr = &hf[ti * d..(ti + 1) * d];
+        let lse_i = lse[ti];
+        let dr = &mut dhf_c[r * d..(r + 1) * d];
+        let mut v0 = 0usize;
+        while v0 < v {
+            let v1 = (v0 + V_TILE).min(v);
+            for (jj, n) in (v0..v1).enumerate() {
+                z[jj] = dot4(hr, &w_head[n * d..(n + 1) * d]);
+            }
+            for (jj, n) in (v0..v1).enumerate() {
+                let mut dl = (z[jj] - lse_i).exp() / nv;
+                if n == tgt as usize {
+                    dl -= 1.0 / nv;
+                }
+                if dl == 0.0 {
+                    continue;
+                }
+                axpy(dl, &w_head[n * d..(n + 1) * d], dr);
+            }
+            v0 = v1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cpu::math;
+    use crate::util::rng::Rng;
+
+    struct Fixture {
+        t: usize,
+        d: usize,
+        v: usize,
+        hf: Vec<f32>,
+        w: Vec<f32>,
+        targets: Vec<i32>,
+    }
+
+    /// v deliberately not a multiple of V_TILE to cover the ragged tail.
+    fn fixture(seed: u64, v: usize) -> Fixture {
+        let (t, d) = (11usize, 6usize);
+        let mut rng = Rng::new(seed);
+        let hf: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..v * d).map(|_| rng.normal() as f32 * 0.3).collect();
+        let targets: Vec<i32> = (0..t)
+            .map(|i| if i % 4 == 3 { -1 } else { rng.range(0, v) as i32 })
+            .collect();
+        Fixture { t, d, v, hf, w, targets }
+    }
+
+    fn reference(f: &Fixture) -> (f32, usize, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (t, d, v) = (f.t, f.d, f.v);
+        let mut logits = vec![0.0f32; t * v];
+        math::linear_fwd(&f.hf, &f.w, t, d, v, &mut logits);
+        let mut probs = vec![0.0f32; t * v];
+        let (loss, n_valid) = math::softmax_xent(&logits, &f.targets, t, v, &mut probs);
+        let nv = n_valid.max(1) as f32;
+        let mut dlogits = vec![0.0f32; t * v];
+        for ti in 0..t {
+            let tgt = f.targets[ti];
+            if tgt < 0 {
+                continue;
+            }
+            for i in 0..v {
+                dlogits[ti * v + i] = probs[ti * v + i] / nv;
+            }
+            dlogits[ti * v + tgt as usize] -= 1.0 / nv;
+        }
+        let mut dw = vec![0.0f32; v * d];
+        let mut dhf = vec![0.0f32; t * d];
+        math::linear_bwd_w(&dlogits, &f.hf, t, d, v, &mut dw);
+        math::linear_bwd_x(&dlogits, &f.w, t, d, v, &mut dhf);
+        (loss, n_valid, probs, dw, dhf)
+    }
+
+    #[test]
+    fn tiled_logsumexp_matches_materialized_softmax() {
+        for v in [V_TILE / 2, V_TILE, V_TILE + 17, 3 * V_TILE + 5] {
+            let f = fixture(31, v);
+            let (loss_ref, nv_ref, _, _, _) = reference(&f);
+            for threads in [1usize, 2, 4] {
+                let mut lse = vec![0.0f32; f.t];
+                let (loss, nv) = cce_loss_fwd(&f.hf, &f.w, &f.targets, f.t, f.d, f.v, &mut lse, threads);
+                assert_eq!(nv, nv_ref);
+                assert!(
+                    (loss - loss_ref).abs() < 1e-4 * (1.0 + loss_ref.abs()),
+                    "v={v} threads={threads}: {loss} vs {loss_ref}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lse_matches_direct_computation() {
+        let f = fixture(32, V_TILE + 9);
+        let mut logits = vec![0.0f32; f.t * f.v];
+        math::linear_fwd(&f.hf, &f.w, f.t, f.d, f.v, &mut logits);
+        let mut lse = vec![0.0f32; f.t];
+        cce_loss_fwd(&f.hf, &f.w, &f.targets, f.t, f.d, f.v, &mut lse, 2);
+        for ti in 0..f.t {
+            if f.targets[ti] < 0 {
+                continue;
+            }
+            let row = &logits[ti * f.v..(ti + 1) * f.v];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let want = row.iter().map(|z| (z - m).exp()).sum::<f32>().ln() + m;
+            assert!((lse[ti] - want).abs() < 1e-4, "row {ti}: {} vs {want}", lse[ti]);
+        }
+    }
+
+    #[test]
+    fn fused_backward_matches_reference_grads() {
+        let f = fixture(33, 2 * V_TILE + 13);
+        let (_, n_valid, _, dw_ref, dhf_ref) = reference(&f);
+        let mut lse = vec![0.0f32; f.t];
+        cce_loss_fwd(&f.hf, &f.w, &f.targets, f.t, f.d, f.v, &mut lse, 1);
+        for threads in [1usize, 3] {
+            let mut dw = vec![0.0f32; f.v * f.d];
+            let mut dhf = vec![0.0f32; f.t * f.d];
+            cce_bwd_fused(
+                &f.hf, &f.w, &f.targets, &lse, f.t, f.d, f.v, n_valid,
+                Some(&mut dw), &mut dhf, threads,
+            );
+            for (i, (a, b)) in dw.iter().zip(&dw_ref).enumerate() {
+                assert!((a - b).abs() < 1e-5, "threads={threads} dw[{i}]: {a} vs {b}");
+            }
+            for (i, (a, b)) in dhf.iter().zip(&dhf_ref).enumerate() {
+                assert!((a - b).abs() < 1e-5, "threads={threads} dhf[{i}]: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn frozen_head_skips_weight_grad_but_fills_dhf() {
+        let f = fixture(34, V_TILE + 3);
+        let (_, n_valid, _, _, dhf_ref) = reference(&f);
+        let mut lse = vec![0.0f32; f.t];
+        cce_loss_fwd(&f.hf, &f.w, &f.targets, f.t, f.d, f.v, &mut lse, 2);
+        let mut dhf = vec![0.0f32; f.t * f.d];
+        cce_bwd_fused(&f.hf, &f.w, &f.targets, &lse, f.t, f.d, f.v, n_valid, None, &mut dhf, 2);
+        for (i, (a, b)) in dhf.iter().zip(&dhf_ref).enumerate() {
+            assert!((a - b).abs() < 1e-5, "dhf[{i}]: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn bits_invariant_to_thread_count() {
+        let f = fixture(35, 3 * V_TILE);
+        let run = |threads: usize| -> (u32, Vec<u32>, Vec<u32>) {
+            let mut lse = vec![0.0f32; f.t];
+            let (loss, nv) = cce_loss_fwd(&f.hf, &f.w, &f.targets, f.t, f.d, f.v, &mut lse, threads);
+            let mut dw = vec![0.0f32; f.v * f.d];
+            let mut dhf = vec![0.0f32; f.t * f.d];
+            cce_bwd_fused(&f.hf, &f.w, &f.targets, &lse, f.t, f.d, f.v, nv, Some(&mut dw), &mut dhf, threads);
+            (
+                loss.to_bits(),
+                dw.iter().map(|x| x.to_bits()).collect(),
+                dhf.iter().map(|x| x.to_bits()).collect(),
+            )
+        };
+        let a = run(1);
+        for threads in [2usize, 4, 7] {
+            assert_eq!(run(threads), a, "threads={threads} changed bits");
+        }
+    }
+}

@@ -1,0 +1,804 @@
+//! Cache-blocked, multithreaded kernels for the fast CPU backend.
+//!
+//! Design rules (DESIGN.md §4.3):
+//!
+//! * **Row-tile parallelism.** Every kernel partitions its *output* rows
+//!   into at most `threads` contiguous tiles and hands each tile to one
+//!   scoped thread (`std::thread::scope` — no pool, no new dependencies).
+//!   Tiles are disjoint `chunks_mut` slices, so there is no locking and no
+//!   write contention.
+//! * **Thread-count-invariant bits.** Each output element is produced by
+//!   exactly one thread running the same sequential inner loop regardless
+//!   of how rows were partitioned, and every cross-tile reduction in the
+//!   backend is performed on the main thread in fixed tile order. The
+//!   result: `threads = 1` and `threads = N` produce bitwise-identical
+//!   steps (asserted in `rust/tests/parity.rs`), and `threads = 1` never
+//!   spawns at all.
+//! * **Fused epilogues.** RMSNorm feeds its projection(s) while the
+//!   normalized row is still cache-hot (`fused_rmsnorm_qkv`,
+//!   `fused_rmsnorm_swiglu`), matmuls carry their residual add
+//!   (`matmul_residual`), and SwiGLU is applied as the gate/up epilogue —
+//!   the paper's read-activations-once rule.
+//! * **ILP dot products.** The inner dot uses four independent
+//!   accumulators (`dot4`) so the f32 add chain pipelines; this changes
+//!   summation order vs. the reference (tolerance-based parity, not
+//!   bitwise — DESIGN.md §4.3 tolerance policy).
+
+/// Rows per tile so that at most `threads` tiles cover `rows`.
+pub(crate) fn rows_per_tile(rows: usize, threads: usize) -> usize {
+    let th = threads.max(1).min(rows.max(1));
+    rows.div_ceil(th)
+}
+
+/// Dot product with four independent accumulators (ILP), deterministic for
+/// a given slice length.
+#[inline]
+pub fn dot4(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for (x, y) in ca.by_ref().zip(cb.by_ref()) {
+        s0 += x[0] * y[0];
+        s1 += x[1] * y[1];
+        s2 += x[2] * y[2];
+        s3 += x[3] * y[3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+/// `y += alpha · x`, elementwise.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `out[t, n] = Σ_k x[t, k] · w[n, k]` — `y = x @ W.T`, threaded over row
+/// tiles of the output.
+pub fn matmul(x: &[f32], w: &[f32], t: usize, k_in: usize, n_out: usize, out: &mut [f32], threads: usize) {
+    debug_assert_eq!(x.len(), t * k_in);
+    debug_assert_eq!(w.len(), n_out * k_in);
+    debug_assert_eq!(out.len(), t * n_out);
+    let body = |r0: usize, out_c: &mut [f32]| {
+        let rows = out_c.len() / n_out;
+        for r in 0..rows {
+            let xr = &x[(r0 + r) * k_in..(r0 + r + 1) * k_in];
+            let or = &mut out_c[r * n_out..(r + 1) * n_out];
+            for (n, o) in or.iter_mut().enumerate() {
+                *o = dot4(xr, &w[n * k_in..(n + 1) * k_in]);
+            }
+        }
+    };
+    let rp = rows_per_tile(t, threads);
+    if threads <= 1 || t <= 1 {
+        body(0, out);
+        return;
+    }
+    std::thread::scope(|sc| {
+        let body = &body;
+        for (idx, out_c) in out.chunks_mut(rp * n_out).enumerate() {
+            sc.spawn(move || body(idx * rp, out_c));
+        }
+    });
+}
+
+/// `out[t, n] = res[t, n] + Σ_k x[t, k] · w[n, k]` — matmul with the
+/// residual add fused into the epilogue (one pass over the output).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_residual(
+    x: &[f32],
+    w: &[f32],
+    res: &[f32],
+    t: usize,
+    k_in: usize,
+    n_out: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(x.len(), t * k_in);
+    debug_assert_eq!(res.len(), t * n_out);
+    debug_assert_eq!(out.len(), t * n_out);
+    let body = |r0: usize, out_c: &mut [f32]| {
+        let rows = out_c.len() / n_out;
+        for r in 0..rows {
+            let ti = r0 + r;
+            let xr = &x[ti * k_in..(ti + 1) * k_in];
+            let rr = &res[ti * n_out..(ti + 1) * n_out];
+            let or = &mut out_c[r * n_out..(r + 1) * n_out];
+            for n in 0..n_out {
+                or[n] = rr[n] + dot4(xr, &w[n * k_in..(n + 1) * k_in]);
+            }
+        }
+    };
+    let rp = rows_per_tile(t, threads);
+    if threads <= 1 || t <= 1 {
+        body(0, out);
+        return;
+    }
+    std::thread::scope(|sc| {
+        let body = &body;
+        for (idx, out_c) in out.chunks_mut(rp * n_out).enumerate() {
+            sc.spawn(move || body(idx * rp, out_c));
+        }
+    });
+}
+
+/// `dx[t, k] += Σ_n dy[t, n] · w[n, k]` — input gradient, threaded over dx
+/// row tiles (accumulates, like the reference convention).
+pub fn matmul_bwd_x(dy: &[f32], w: &[f32], t: usize, k_in: usize, n_out: usize, dx: &mut [f32], threads: usize) {
+    debug_assert_eq!(dy.len(), t * n_out);
+    debug_assert_eq!(dx.len(), t * k_in);
+    let body = |r0: usize, dx_c: &mut [f32]| {
+        let rows = dx_c.len() / k_in;
+        for r in 0..rows {
+            let ti = r0 + r;
+            let dyr = &dy[ti * n_out..(ti + 1) * n_out];
+            let dxr = &mut dx_c[r * k_in..(r + 1) * k_in];
+            for (n, &dyv) in dyr.iter().enumerate() {
+                if dyv == 0.0 {
+                    continue;
+                }
+                axpy(dyv, &w[n * k_in..(n + 1) * k_in], dxr);
+            }
+        }
+    };
+    let rp = rows_per_tile(t, threads);
+    if threads <= 1 || t <= 1 {
+        body(0, dx);
+        return;
+    }
+    std::thread::scope(|sc| {
+        let body = &body;
+        for (idx, dx_c) in dx.chunks_mut(rp * k_in).enumerate() {
+            sc.spawn(move || body(idx * rp, dx_c));
+        }
+    });
+}
+
+/// `dw[n, k] += Σ_t dy[t, n] · x[t, k]` — weight gradient, threaded over
+/// output-neuron tiles (each thread owns a contiguous block of dw rows and
+/// scans all tokens sequentially, so bits are thread-count invariant).
+pub fn matmul_bwd_w(dy: &[f32], x: &[f32], t: usize, k_in: usize, n_out: usize, dw: &mut [f32], threads: usize) {
+    debug_assert_eq!(dy.len(), t * n_out);
+    debug_assert_eq!(x.len(), t * k_in);
+    debug_assert_eq!(dw.len(), n_out * k_in);
+    let body = |n0: usize, dw_c: &mut [f32]| {
+        let n_rows = dw_c.len() / k_in;
+        for ti in 0..t {
+            let xr = &x[ti * k_in..(ti + 1) * k_in];
+            let dyr = &dy[ti * n_out..(ti + 1) * n_out];
+            for n in 0..n_rows {
+                let dyv = dyr[n0 + n];
+                if dyv == 0.0 {
+                    continue;
+                }
+                axpy(dyv, xr, &mut dw_c[n * k_in..(n + 1) * k_in]);
+            }
+        }
+    };
+    let np = rows_per_tile(n_out, threads);
+    if threads <= 1 || n_out <= 1 {
+        body(0, dw);
+        return;
+    }
+    std::thread::scope(|sc| {
+        let body = &body;
+        for (idx, dw_c) in dw.chunks_mut(np * k_in).enumerate() {
+            sc.spawn(move || body(idx * np, dw_c));
+        }
+    });
+}
+
+/// RMSNorm forward, threaded over rows (same per-row math as the
+/// reference: `rstd` sum stays sequential within a row).
+pub fn rmsnorm(x: &[f32], gamma: &[f32], t: usize, d: usize, y: &mut [f32], rstd: &mut [f32], threads: usize) {
+    use crate::backend::cpu::math::RMS_EPS;
+    debug_assert_eq!(x.len(), t * d);
+    debug_assert_eq!(gamma.len(), d);
+    let body = |r0: usize, y_c: &mut [f32], rstd_c: &mut [f32]| {
+        let rows = rstd_c.len();
+        for r in 0..rows {
+            let xr = &x[(r0 + r) * d..(r0 + r + 1) * d];
+            let mut ss = 0.0f32;
+            for &v in xr {
+                ss += v * v;
+            }
+            let rs = 1.0 / (ss / d as f32 + RMS_EPS).sqrt();
+            rstd_c[r] = rs;
+            let yr = &mut y_c[r * d..(r + 1) * d];
+            for i in 0..d {
+                yr[i] = xr[i] * rs * gamma[i];
+            }
+        }
+    };
+    let rp = rows_per_tile(t, threads);
+    if threads <= 1 || t <= 1 {
+        body(0, y, rstd);
+        return;
+    }
+    std::thread::scope(|sc| {
+        let body = &body;
+        for (idx, (y_c, rstd_c)) in y.chunks_mut(rp * d).zip(rstd.chunks_mut(rp)).enumerate() {
+            sc.spawn(move || body(idx * rp, y_c, rstd_c));
+        }
+    });
+}
+
+/// Fused RMSNorm → Q/K/V projections: each row tile normalizes its rows
+/// into `h1` and immediately computes the three projections while the
+/// normalized row is cache-hot. LoRA deltas are applied separately by the
+/// caller (they need `h1 @ A.T` cached anyway).
+#[allow(clippy::too_many_arguments)]
+pub fn fused_rmsnorm_qkv(
+    x: &[f32],
+    gamma: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    t: usize,
+    d: usize,
+    dkv: usize,
+    h1: &mut [f32],
+    rstd: &mut [f32],
+    q: &mut [f32],
+    k: &mut [f32],
+    v: &mut [f32],
+    threads: usize,
+) {
+    use crate::backend::cpu::math::RMS_EPS;
+    debug_assert_eq!(x.len(), t * d);
+    debug_assert_eq!(wq.len(), d * d);
+    debug_assert_eq!(wk.len(), dkv * d);
+    debug_assert_eq!(wv.len(), dkv * d);
+    let body = |r0: usize, h1_c: &mut [f32], rstd_c: &mut [f32], q_c: &mut [f32], k_c: &mut [f32], v_c: &mut [f32]| {
+        let rows = rstd_c.len();
+        for r in 0..rows {
+            let xr = &x[(r0 + r) * d..(r0 + r + 1) * d];
+            let mut ss = 0.0f32;
+            for &xv in xr {
+                ss += xv * xv;
+            }
+            let rs = 1.0 / (ss / d as f32 + RMS_EPS).sqrt();
+            rstd_c[r] = rs;
+            let hr = &mut h1_c[r * d..(r + 1) * d];
+            for i in 0..d {
+                hr[i] = xr[i] * rs * gamma[i];
+            }
+            let hr = &h1_c[r * d..(r + 1) * d];
+            let qr = &mut q_c[r * d..(r + 1) * d];
+            for (n, o) in qr.iter_mut().enumerate() {
+                *o = dot4(hr, &wq[n * d..(n + 1) * d]);
+            }
+            let kr = &mut k_c[r * dkv..(r + 1) * dkv];
+            for (n, o) in kr.iter_mut().enumerate() {
+                *o = dot4(hr, &wk[n * d..(n + 1) * d]);
+            }
+            let vr = &mut v_c[r * dkv..(r + 1) * dkv];
+            for (n, o) in vr.iter_mut().enumerate() {
+                *o = dot4(hr, &wv[n * d..(n + 1) * d]);
+            }
+        }
+    };
+    let rp = rows_per_tile(t, threads);
+    if threads <= 1 || t <= 1 {
+        body(0, h1, rstd, q, k, v);
+        return;
+    }
+    std::thread::scope(|sc| {
+        let body = &body;
+        let iter = h1
+            .chunks_mut(rp * d)
+            .zip(rstd.chunks_mut(rp))
+            .zip(q.chunks_mut(rp * d))
+            .zip(k.chunks_mut(rp * dkv))
+            .zip(v.chunks_mut(rp * dkv))
+            .enumerate();
+        for (idx, ((((h1_c, rstd_c), q_c), k_c), v_c)) in iter {
+            sc.spawn(move || body(idx * rp, h1_c, rstd_c, q_c, k_c, v_c));
+        }
+    });
+}
+
+/// Fused RMSNorm → gate/up projections → SwiGLU epilogue: one pass per row
+/// tile produces `h2`, `gate`, `up` and `y = SiLU(gate)·up`.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_rmsnorm_swiglu(
+    x: &[f32],
+    gamma: &[f32],
+    w_gate: &[f32],
+    w_up: &[f32],
+    t: usize,
+    d: usize,
+    f: usize,
+    h2: &mut [f32],
+    rstd: &mut [f32],
+    gate: &mut [f32],
+    up: &mut [f32],
+    y: &mut [f32],
+    threads: usize,
+) {
+    use crate::backend::cpu::math::RMS_EPS;
+    debug_assert_eq!(x.len(), t * d);
+    debug_assert_eq!(w_gate.len(), f * d);
+    debug_assert_eq!(w_up.len(), f * d);
+    let body = |r0: usize, h2_c: &mut [f32], rstd_c: &mut [f32], gate_c: &mut [f32], up_c: &mut [f32], y_c: &mut [f32]| {
+        let rows = rstd_c.len();
+        for r in 0..rows {
+            let xr = &x[(r0 + r) * d..(r0 + r + 1) * d];
+            let mut ss = 0.0f32;
+            for &xv in xr {
+                ss += xv * xv;
+            }
+            let rs = 1.0 / (ss / d as f32 + RMS_EPS).sqrt();
+            rstd_c[r] = rs;
+            let hr = &mut h2_c[r * d..(r + 1) * d];
+            for i in 0..d {
+                hr[i] = xr[i] * rs * gamma[i];
+            }
+            let hr = &h2_c[r * d..(r + 1) * d];
+            let gr = &mut gate_c[r * f..(r + 1) * f];
+            let ur = &mut up_c[r * f..(r + 1) * f];
+            let yr = &mut y_c[r * f..(r + 1) * f];
+            for n in 0..f {
+                let g = dot4(hr, &w_gate[n * d..(n + 1) * d]);
+                let u = dot4(hr, &w_up[n * d..(n + 1) * d]);
+                gr[n] = g;
+                ur[n] = u;
+                let sig = 1.0 / (1.0 + (-g).exp());
+                yr[n] = g * sig * u;
+            }
+        }
+    };
+    let rp = rows_per_tile(t, threads);
+    if threads <= 1 || t <= 1 {
+        body(0, h2, rstd, gate, up, y);
+        return;
+    }
+    std::thread::scope(|sc| {
+        let body = &body;
+        let iter = h2
+            .chunks_mut(rp * d)
+            .zip(rstd.chunks_mut(rp))
+            .zip(gate.chunks_mut(rp * f))
+            .zip(up.chunks_mut(rp * f))
+            .zip(y.chunks_mut(rp * f))
+            .enumerate();
+        for (idx, ((((h2_c, rstd_c), gate_c), up_c), y_c)) in iter {
+            sc.spawn(move || body(idx * rp, h2_c, rstd_c, gate_c, up_c, y_c));
+        }
+    });
+}
+
+/// RMSNorm backward: `dx` rows threaded; `dgamma` accumulated in a
+/// sequential second pass so its bits never depend on the row partition.
+#[allow(clippy::too_many_arguments)]
+pub fn rmsnorm_bwd(
+    x: &[f32],
+    gamma: &[f32],
+    rstd: &[f32],
+    dy: &[f32],
+    t: usize,
+    d: usize,
+    dx: &mut [f32],
+    dgamma: &mut [f32],
+    threads: usize,
+) {
+    let body = |r0: usize, dx_c: &mut [f32]| {
+        let rows = dx_c.len() / d;
+        for r in 0..rows {
+            let ti = r0 + r;
+            let xr = &x[ti * d..(ti + 1) * d];
+            let dyr = &dy[ti * d..(ti + 1) * d];
+            let rs = rstd[ti];
+            let mut c1 = 0.0f32;
+            for i in 0..d {
+                c1 += dyr[i] * gamma[i] * xr[i] * rs;
+            }
+            c1 /= d as f32;
+            let dxr = &mut dx_c[r * d..(r + 1) * d];
+            for i in 0..d {
+                let xbar = xr[i] * rs;
+                dxr[i] += rs * (gamma[i] * dyr[i] - xbar * c1);
+            }
+        }
+    };
+    let rp = rows_per_tile(t, threads);
+    if threads <= 1 || t <= 1 {
+        body(0, dx);
+    } else {
+        std::thread::scope(|sc| {
+            let body = &body;
+            for (idx, dx_c) in dx.chunks_mut(rp * d).enumerate() {
+                sc.spawn(move || body(idx * rp, dx_c));
+            }
+        });
+    }
+    // dgamma: tiny [d] reduction over all rows, fixed row order.
+    for ti in 0..t {
+        let xr = &x[ti * d..(ti + 1) * d];
+        let dyr = &dy[ti * d..(ti + 1) * d];
+        let rs = rstd[ti];
+        for i in 0..d {
+            dgamma[i] += dyr[i] * xr[i] * rs;
+        }
+    }
+}
+
+/// SwiGLU backward, threaded over element tiles (pure elementwise).
+pub fn swiglu_bwd(gate: &[f32], up: &[f32], dy: &[f32], dgate: &mut [f32], dup: &mut [f32], threads: usize) {
+    let n = dy.len();
+    let body = |e0: usize, dgate_c: &mut [f32], dup_c: &mut [f32]| {
+        for (j, (dg, du)) in dgate_c.iter_mut().zip(dup_c.iter_mut()).enumerate() {
+            let i = e0 + j;
+            let g = gate[i];
+            let sig = 1.0 / (1.0 + (-g).exp());
+            let silu = g * sig;
+            *dg += dy[i] * up[i] * sig * (1.0 + g * (1.0 - sig));
+            *du += dy[i] * silu;
+        }
+    };
+    let ep = rows_per_tile(n, threads);
+    if threads <= 1 || n <= 1 {
+        body(0, dgate, dup);
+        return;
+    }
+    std::thread::scope(|sc| {
+        let body = &body;
+        for (idx, (dgate_c, dup_c)) in dgate.chunks_mut(ep).zip(dup.chunks_mut(ep)).enumerate() {
+            sc.spawn(move || body(idx * ep, dgate_c, dup_c));
+        }
+    });
+}
+
+/// RoPE (rotate-half), threaded over token rows. Same per-element math as
+/// the reference `rope_apply` (bitwise-identical results), but the angle —
+/// which depends only on `(pos, j)` — is computed once per `(row, j)` and
+/// reused across all heads instead of recomputing `powf`/`cos`/`sin`
+/// `n_heads` times.
+pub fn rope(x: &mut [f32], pos: &[i32], t: usize, n_heads: usize, hd: usize, sign: f32, threads: usize) {
+    use crate::backend::cpu::math::ROPE_BASE;
+    debug_assert_eq!(x.len(), t * n_heads * hd);
+    let row = n_heads * hd;
+    let half = hd / 2;
+    let body = |r0: usize, x_c: &mut [f32]| {
+        let rows = x_c.len() / row;
+        for r in 0..rows {
+            let p = pos[r0 + r] as f32;
+            for j in 0..half {
+                let inv_freq = ROPE_BASE.powf(-(j as f32) / half as f32);
+                let theta = p * inv_freq;
+                let (c, s) = (theta.cos(), theta.sin() * sign);
+                for h in 0..n_heads {
+                    let base = r * row + h * hd;
+                    let x1 = x_c[base + j];
+                    let x2 = x_c[base + half + j];
+                    x_c[base + j] = x1 * c - x2 * s;
+                    x_c[base + half + j] = x2 * c + x1 * s;
+                }
+            }
+        }
+    };
+    let rp = rows_per_tile(t, threads);
+    if threads <= 1 || t <= 1 {
+        body(0, x);
+        return;
+    }
+    std::thread::scope(|sc| {
+        let body = &body;
+        for (idx, x_c) in x.chunks_mut(rp * row).enumerate() {
+            sc.spawn(move || body(idx * rp, x_c));
+        }
+    });
+}
+
+/// AdamW, threaded over element tiles. Elementwise and therefore bitwise
+/// identical to the sequential reference update for every element.
+#[allow(clippy::too_many_arguments)]
+pub fn adamw(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lr: f32,
+    step: f32,
+    weight_decay: f32,
+    threads: usize,
+) {
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    let bc1 = 1.0 - B1.powf(step);
+    let bc2 = 1.0 - B2.powf(step);
+    let n = p.len();
+    let body = |e0: usize, p_c: &mut [f32], m_c: &mut [f32], v_c: &mut [f32]| {
+        for (j, pv) in p_c.iter_mut().enumerate() {
+            let gi = g[e0 + j];
+            m_c[j] = B1 * m_c[j] + (1.0 - B1) * gi;
+            v_c[j] = B2 * v_c[j] + (1.0 - B2) * gi * gi;
+            let m_hat = m_c[j] / bc1;
+            let v_hat = v_c[j] / bc2;
+            *pv = *pv * (1.0 - lr * weight_decay) - lr * m_hat / (v_hat.sqrt() + EPS);
+        }
+    };
+    let ep = rows_per_tile(n, threads);
+    if threads <= 1 || n <= 1 {
+        body(0, p, m, v);
+        return;
+    }
+    std::thread::scope(|sc| {
+        let body = &body;
+        let iter = p.chunks_mut(ep).zip(m.chunks_mut(ep)).zip(v.chunks_mut(ep)).enumerate();
+        for (idx, ((p_c, m_c), v_c)) in iter {
+            sc.spawn(move || body(idx * ep, p_c, m_c, v_c));
+        }
+    });
+}
+
+/// Fused LoRA linear: `ha = x @ A.T`, then `out += scale · ha @ B.T`, with
+/// the intermediate row kept cache-hot (and cached in `ha` for backward).
+#[allow(clippy::too_many_arguments)]
+pub fn lora_linear(
+    x: &[f32],
+    a: &[f32],
+    b: &[f32],
+    t: usize,
+    d: usize,
+    r: usize,
+    n_out: usize,
+    scale: f32,
+    ha: &mut [f32],
+    out: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(x.len(), t * d);
+    debug_assert_eq!(a.len(), r * d);
+    debug_assert_eq!(b.len(), n_out * r);
+    debug_assert_eq!(ha.len(), t * r);
+    debug_assert_eq!(out.len(), t * n_out);
+    let body = |r0: usize, ha_c: &mut [f32], out_c: &mut [f32]| {
+        let rows = ha_c.len() / r;
+        for rr in 0..rows {
+            let xr = &x[(r0 + rr) * d..(r0 + rr + 1) * d];
+            let har = &mut ha_c[rr * r..(rr + 1) * r];
+            for (n, o) in har.iter_mut().enumerate() {
+                *o = dot4(xr, &a[n * d..(n + 1) * d]);
+            }
+            let har = &ha_c[rr * r..(rr + 1) * r];
+            let or = &mut out_c[rr * n_out..(rr + 1) * n_out];
+            for (n, o) in or.iter_mut().enumerate() {
+                *o += scale * dot4(har, &b[n * r..(n + 1) * r]);
+            }
+        }
+    };
+    let rp = rows_per_tile(t, threads);
+    if threads <= 1 || t <= 1 {
+        body(0, ha, out);
+        return;
+    }
+    std::thread::scope(|sc| {
+        let body = &body;
+        for (idx, (ha_c, out_c)) in ha.chunks_mut(rp * r).zip(out.chunks_mut(rp * n_out)).enumerate() {
+            sc.spawn(move || body(idx * rp, ha_c, out_c));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cpu::math;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * 0.5).collect()
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                "{what}[{i}]: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot4_matches_sequential() {
+        let mut rng = Rng::new(1);
+        for n in [0usize, 1, 3, 4, 7, 8, 33] {
+            let a = randv(&mut rng, n);
+            let b = randv(&mut rng, n);
+            let seq: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot4(&a, &b) - seq).abs() < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_reference_any_thread_count() {
+        let mut rng = Rng::new(2);
+        let (t, k, n) = (13, 9, 11);
+        let x = randv(&mut rng, t * k);
+        let w = randv(&mut rng, n * k);
+        let mut want = vec![0.0f32; t * n];
+        math::linear_fwd(&x, &w, t, k, n, &mut want);
+        let mut bits1: Option<Vec<u32>> = None;
+        for threads in [1usize, 2, 5] {
+            let mut got = vec![0.0f32; t * n];
+            matmul(&x, &w, t, k, n, &mut got, threads);
+            assert_close(&got, &want, 1e-5, "matmul");
+            let bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            match &bits1 {
+                None => bits1 = Some(bits),
+                Some(b1) => assert_eq!(&bits, b1, "threads={threads} changed bits"),
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_residual_adds_res() {
+        let mut rng = Rng::new(3);
+        let (t, k, n) = (5, 4, 6);
+        let x = randv(&mut rng, t * k);
+        let w = randv(&mut rng, n * k);
+        let res = randv(&mut rng, t * n);
+        let mut want = vec![0.0f32; t * n];
+        math::linear_fwd(&x, &w, t, k, n, &mut want);
+        for i in 0..t * n {
+            want[i] += res[i];
+        }
+        let mut got = vec![0.0f32; t * n];
+        matmul_residual(&x, &w, &res, t, k, n, &mut got, 3);
+        assert_close(&got, &want, 1e-5, "matmul_residual");
+    }
+
+    #[test]
+    fn matmul_bwd_matches_reference() {
+        let mut rng = Rng::new(4);
+        let (t, k, n) = (10, 6, 7);
+        let x = randv(&mut rng, t * k);
+        let w = randv(&mut rng, n * k);
+        let dy = randv(&mut rng, t * n);
+        let (mut dx_ref, mut dw_ref) = (vec![0.0f32; t * k], vec![0.0f32; n * k]);
+        math::linear_bwd_x(&dy, &w, t, k, n, &mut dx_ref);
+        math::linear_bwd_w(&dy, &x, t, k, n, &mut dw_ref);
+        for threads in [1usize, 3] {
+            let (mut dx, mut dw) = (vec![0.0f32; t * k], vec![0.0f32; n * k]);
+            matmul_bwd_x(&dy, &w, t, k, n, &mut dx, threads);
+            matmul_bwd_w(&dy, &x, t, k, n, &mut dw, threads);
+            assert_close(&dx, &dx_ref, 1e-5, "dx");
+            assert_close(&dw, &dw_ref, 1e-5, "dw");
+        }
+    }
+
+    #[test]
+    fn fused_rmsnorm_qkv_matches_unfused() {
+        let mut rng = Rng::new(5);
+        let (t, d, dkv) = (9, 8, 4);
+        let x = randv(&mut rng, t * d);
+        let gamma = randv(&mut rng, d);
+        let wq = randv(&mut rng, d * d);
+        let wk = randv(&mut rng, dkv * d);
+        let wv = randv(&mut rng, dkv * d);
+        let (mut h_ref, mut rstd_ref) = (vec![0.0f32; t * d], vec![0.0f32; t]);
+        math::rmsnorm_fwd(&x, &gamma, t, d, &mut h_ref, &mut rstd_ref);
+        let mut q_ref = vec![0.0f32; t * d];
+        let mut k_ref = vec![0.0f32; t * dkv];
+        let mut v_ref = vec![0.0f32; t * dkv];
+        math::linear_fwd(&h_ref, &wq, t, d, d, &mut q_ref);
+        math::linear_fwd(&h_ref, &wk, t, d, dkv, &mut k_ref);
+        math::linear_fwd(&h_ref, &wv, t, d, dkv, &mut v_ref);
+        for threads in [1usize, 4] {
+            let (mut h1, mut rstd) = (vec![0.0f32; t * d], vec![0.0f32; t]);
+            let mut q = vec![0.0f32; t * d];
+            let mut k = vec![0.0f32; t * dkv];
+            let mut v = vec![0.0f32; t * dkv];
+            fused_rmsnorm_qkv(&x, &gamma, &wq, &wk, &wv, t, d, dkv, &mut h1, &mut rstd, &mut q, &mut k, &mut v, threads);
+            assert_close(&h1, &h_ref, 1e-5, "h1");
+            assert_close(&q, &q_ref, 1e-5, "q");
+            assert_close(&k, &k_ref, 1e-5, "k");
+            assert_close(&v, &v_ref, 1e-5, "v");
+        }
+    }
+
+    #[test]
+    fn fused_rmsnorm_swiglu_matches_unfused() {
+        let mut rng = Rng::new(6);
+        let (t, d, f) = (7, 6, 10);
+        let x = randv(&mut rng, t * d);
+        let gamma = randv(&mut rng, d);
+        let wg = randv(&mut rng, f * d);
+        let wu = randv(&mut rng, f * d);
+        let (mut h_ref, mut rstd_ref) = (vec![0.0f32; t * d], vec![0.0f32; t]);
+        math::rmsnorm_fwd(&x, &gamma, t, d, &mut h_ref, &mut rstd_ref);
+        let mut g_ref = vec![0.0f32; t * f];
+        let mut u_ref = vec![0.0f32; t * f];
+        math::linear_fwd(&h_ref, &wg, t, d, f, &mut g_ref);
+        math::linear_fwd(&h_ref, &wu, t, d, f, &mut u_ref);
+        let mut y_ref = vec![0.0f32; t * f];
+        math::swiglu_fwd(&g_ref, &u_ref, &mut y_ref);
+        let (mut h2, mut rstd) = (vec![0.0f32; t * d], vec![0.0f32; t]);
+        let (mut gate, mut up, mut y) =
+            (vec![0.0f32; t * f], vec![0.0f32; t * f], vec![0.0f32; t * f]);
+        fused_rmsnorm_swiglu(&x, &gamma, &wg, &wu, t, d, f, &mut h2, &mut rstd, &mut gate, &mut up, &mut y, 2);
+        assert_close(&y, &y_ref, 1e-5, "y");
+        assert_close(&gate, &g_ref, 1e-5, "gate");
+        assert_close(&up, &u_ref, 1e-5, "up");
+    }
+
+    #[test]
+    fn rmsnorm_bwd_matches_reference() {
+        let mut rng = Rng::new(7);
+        let (t, d) = (6, 5);
+        let x = randv(&mut rng, t * d);
+        let gamma = randv(&mut rng, d);
+        let dy = randv(&mut rng, t * d);
+        let (mut y, mut rstd) = (vec![0.0f32; t * d], vec![0.0f32; t]);
+        math::rmsnorm_fwd(&x, &gamma, t, d, &mut y, &mut rstd);
+        let (mut dx_ref, mut dg_ref) = (vec![0.0f32; t * d], vec![0.0f32; d]);
+        math::rmsnorm_bwd(&x, &gamma, &rstd, &dy, t, d, &mut dx_ref, &mut dg_ref);
+        let (mut dx, mut dg) = (vec![0.0f32; t * d], vec![0.0f32; d]);
+        rmsnorm_bwd(&x, &gamma, &rstd, &dy, t, d, &mut dx, &mut dg, 3);
+        assert_close(&dx, &dx_ref, 1e-5, "dx");
+        assert_close(&dg, &dg_ref, 1e-5, "dgamma");
+    }
+
+    #[test]
+    fn rope_and_adamw_match_reference_bits() {
+        let mut rng = Rng::new(8);
+        let (t, heads, hd) = (6, 2, 4);
+        let pos: Vec<i32> = (0..t as i32).collect();
+        let orig = randv(&mut rng, t * heads * hd);
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        math::rope_apply(&mut a, &pos, t, heads, hd, 1.0);
+        rope(&mut b, &pos, t, heads, hd, 1.0, 3);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+
+        let n = 23;
+        let g = randv(&mut rng, n);
+        let mut p1 = randv(&mut rng, n);
+        let mut p2 = p1.clone();
+        let (mut m1, mut v1) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let (mut m2, mut v2) = (vec![0.0f32; n], vec![0.0f32; n]);
+        math::adamw_update(&mut p1, &g, &mut m1, &mut v1, 1e-3, 1.0, 0.01);
+        adamw(&mut p2, &g, &mut m2, &mut v2, 1e-3, 1.0, 0.01, 4);
+        assert_eq!(
+            p1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            p2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn lora_linear_matches_two_step_reference() {
+        let mut rng = Rng::new(9);
+        let (t, d, r, n) = (8, 6, 2, 5);
+        let x = randv(&mut rng, t * d);
+        let a = randv(&mut rng, r * d);
+        let b = randv(&mut rng, n * r);
+        let scale = 1.7f32;
+        let mut ha_ref = vec![0.0f32; t * r];
+        math::linear_fwd(&x, &a, t, d, r, &mut ha_ref);
+        let mut delta = vec![0.0f32; t * n];
+        math::linear_fwd(&ha_ref, &b, t, r, n, &mut delta);
+        let base = randv(&mut rng, t * n);
+        let mut want = base.clone();
+        for i in 0..t * n {
+            want[i] += scale * delta[i];
+        }
+        let mut ha = vec![0.0f32; t * r];
+        let mut out = base.clone();
+        lora_linear(&x, &a, &b, t, d, r, n, scale, &mut ha, &mut out, 2);
+        assert_close(&ha, &ha_ref, 1e-5, "ha");
+        assert_close(&out, &want, 1e-5, "out");
+    }
+}

@@ -1,0 +1,461 @@
+//! The fast CPU backend (DESIGN.md §4.3): same contract and state layout
+//! as the reference backend, built for throughput.
+//!
+//! `FastCpuBackend` registers the same executable families over the same
+//! synthesized manifest as [`super::cpu::CpuBackend`] (profile
+//! `"cpu-fast"`), shares `CpuState` — so checkpoints, init and the family
+//! guards are identical — and swaps the execution for:
+//!
+//! * cache-blocked, multithreaded matmuls (`kernels.rs`),
+//! * flash-style tiled attention with online softmax (`attention.rs`),
+//! * streaming Cut Cross-Entropy (`cce.rs`),
+//! * fused RMSNorm→linear and SwiGLU epilogues.
+//!
+//! Thread count comes from [`crate::config::resolve_threads`]:
+//! `CHRONICALS_THREADS` env > configured value > `available_parallelism`.
+//! `threads = 1` runs fully single-threaded (no scoped threads are ever
+//! spawned). The reference backend stays the bitwise-deterministic oracle;
+//! this backend is validated against it by the parity suite
+//! (`rust/tests/parity.rs`) under the tolerance policy of DESIGN.md §4.3.
+
+pub mod attention;
+pub mod cce;
+pub mod kernels;
+pub mod model;
+pub mod scratch;
+
+use super::cpu::{
+    self, as_cpu_state, as_cpu_state_mut, batch_view, check_geometry, family_lora, reference_dims,
+    REF_BATCH, REF_SEQ,
+};
+use super::{Backend, DeviceBatch, DeviceState, StepOutputs};
+use crate::backend::cpu::model::ModelDims;
+use crate::batching::Batch;
+use crate::manifest::{ExecutableSpec, Manifest};
+use crate::runtime::HostTensor;
+use anyhow::{bail, Result};
+
+pub struct FastCpuBackend {
+    manifest: Manifest,
+    threads: usize,
+}
+
+impl Default for FastCpuBackend {
+    fn default() -> Self {
+        FastCpuBackend::new()
+    }
+}
+
+impl FastCpuBackend {
+    /// Reference geometry, thread count resolved from env/auto.
+    pub fn new() -> FastCpuBackend {
+        FastCpuBackend::with_threads(0)
+    }
+
+    /// `threads = 0` means resolve (env override, then autodetect).
+    pub fn with_threads(threads: usize) -> FastCpuBackend {
+        FastCpuBackend::custom(reference_dims(), REF_BATCH, REF_SEQ, threads)
+    }
+
+    /// Custom batch geometry at reference model dims (benches, tests).
+    pub fn with_geometry(batch: usize, seq: usize) -> FastCpuBackend {
+        FastCpuBackend::custom(reference_dims(), batch, seq, 0)
+    }
+
+    /// Fully custom substrate (model dims, geometry, threads).
+    pub fn custom(dims: ModelDims, batch: usize, seq: usize, threads: usize) -> FastCpuBackend {
+        FastCpuBackend {
+            manifest: cpu::synth_manifest(dims, batch, seq, "cpu-fast"),
+            threads: crate::config::resolve_threads(threads),
+        }
+    }
+
+    /// The resolved worker-thread count this backend runs with.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn spec(&self, name: &str) -> Result<&ExecutableSpec> {
+        self.manifest.get(name)
+    }
+}
+
+impl Backend for FastCpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu-fast"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn init_state(&self, init_name: &str, seed: i32) -> Result<DeviceState> {
+        let spec = self.spec(init_name)?;
+        if spec.kind != "init" {
+            bail!("'{init_name}' is not an init executable (kind = {})", spec.kind);
+        }
+        let dims = ModelDims {
+            vocab: spec.model_config.vocab,
+            d_model: spec.model_config.d_model,
+            n_layers: spec.model_config.n_layers,
+            n_heads: spec.model_config.n_heads,
+            n_kv_heads: spec.model_config.n_kv_heads,
+            d_ff: spec.model_config.d_ff,
+        };
+        let lora = family_lora(&spec.family);
+        // identical init to the reference backend: same seed ⇒ same params,
+        // which is what makes cross-backend parity runs line up exactly
+        Ok(DeviceState::Cpu(cpu::model::init_state(dims, lora, seed)))
+    }
+
+    fn upload_batch(&self, train_name: &str, batch: &Batch) -> Result<DeviceBatch> {
+        let spec = self.spec(train_name)?;
+        check_geometry(spec, batch)?;
+        batch_view(batch)?;
+        Ok(DeviceBatch::Cpu(batch.clone()))
+    }
+
+    fn train_step(
+        &self,
+        train_name: &str,
+        state: &mut DeviceState,
+        batch: &DeviceBatch,
+        step: u64,
+        lr: f32,
+        lr_b: f32,
+    ) -> Result<StepOutputs> {
+        let spec = self.spec(train_name)?;
+        if spec.kind != "train" {
+            bail!("'{train_name}' is not a train executable (kind = {})", spec.kind);
+        }
+        let broken = spec.step_config.broken;
+        let expect_lora = family_lora(&spec.family);
+        let s = as_cpu_state_mut(state)?;
+        if s.lora != expect_lora {
+            bail!(
+                "state family mismatch: executable '{train_name}' expects lora={:?}, state has {:?}",
+                expect_lora,
+                s.lora
+            );
+        }
+        let b = match batch {
+            DeviceBatch::Cpu(b) => b,
+            #[cfg(feature = "pjrt")]
+            _ => bail!("batch was uploaded to a different backend"),
+        };
+        check_geometry(spec, b)?;
+        let view = batch_view(b)?;
+        let out = model::train_step(s, &view, broken, step, lr, lr_b, self.threads)?;
+        Ok(StepOutputs { loss: out.loss, grad_norm: out.grad_norm, n_tokens: out.n_tokens })
+    }
+
+    fn eval_loss(&self, eval_name: &str, state: &DeviceState, batch: &Batch) -> Result<f32> {
+        let spec = self.spec(eval_name)?;
+        if spec.kind != "eval" && spec.kind != "train" {
+            bail!("'{eval_name}' cannot evaluate (kind = {})", spec.kind);
+        }
+        check_geometry(spec, batch)?;
+        let expect_lora = family_lora(&spec.family);
+        let s = as_cpu_state(state)?;
+        if s.lora != expect_lora {
+            bail!(
+                "state family mismatch: executable '{eval_name}' expects lora={:?}, state has {:?}",
+                expect_lora,
+                s.lora
+            );
+        }
+        let view = batch_view(batch)?;
+        model::eval_loss(s, &view, self.threads)
+    }
+
+    fn state_params(&self, state: &DeviceState) -> Result<Vec<HostTensor>> {
+        Ok(as_cpu_state(state)?.params.clone())
+    }
+
+    fn load_params(&self, state: &mut DeviceState, params: &[HostTensor]) -> Result<()> {
+        cpu::load_cpu_params(as_cpu_state_mut(state)?, params)
+    }
+
+    /// Table-5-style kernel microbench: `*_fused`/`*_flash` names time this
+    /// backend's kernels, `*_naive` names time the reference scalar
+    /// implementations — on identical deterministic inputs at a bench
+    /// geometry large enough for tiling and threading to matter.
+    fn bench_kernel(&self, name: &str, reps: usize, warmup: usize) -> Result<f64> {
+        bench::run(name, reps, warmup, self.threads)
+    }
+}
+
+/// Kernel microbench implementations (fused-vs-naive pairs, paper Table 5).
+mod bench {
+    use super::super::cpu::math;
+    use super::super::cpu::model as refmodel;
+    use super::{attention, cce, kernels};
+    use crate::backend::cpu::model::BatchView;
+    use crate::util::rng::Rng;
+    use anyhow::{bail, Result};
+    use std::hint::black_box;
+    use std::time::Instant;
+
+    // bench substrate: big enough that a [B, Hq, S, S] / [T, V] buffer is
+    // meaningfully larger than the tiled working set
+    const B: usize = 4;
+    const S: usize = 128;
+    const T: usize = B * S;
+    const D: usize = 64;
+    const HEADS: usize = 8;
+    const KV_HEADS: usize = 4;
+    const HD: usize = D / HEADS;
+    const DKV: usize = KV_HEADS * HD;
+    const F: usize = 128;
+    const V: usize = 512;
+    const R: usize = 8;
+
+    fn randv(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    /// One packed-style segment layout: each row is a single full segment.
+    fn seg_pos() -> (Vec<i32>, Vec<i32>) {
+        let mut seg = vec![0i32; T];
+        let mut pos = vec![0i32; T];
+        for b in 0..B {
+            for i in 0..S {
+                seg[b * S + i] = 1;
+                pos[b * S + i] = i as i32;
+            }
+        }
+        (seg, pos)
+    }
+
+    fn time(reps: usize, warmup: usize, mut f: impl FnMut()) -> f64 {
+        for _ in 0..warmup {
+            f();
+        }
+        let t0 = Instant::now();
+        for _ in 0..reps.max(1) {
+            f();
+        }
+        t0.elapsed().as_secs_f64() / reps.max(1) as f64
+    }
+
+    pub fn run(name: &str, reps: usize, warmup: usize, threads: usize) -> Result<f64> {
+        let mut rng = Rng::new(0xC0FFEE);
+        let secs = match name {
+            "kernel_rmsnorm_fused" | "kernel_rmsnorm_naive" => {
+                let x = randv(&mut rng, T * D, 0.5);
+                let gamma = randv(&mut rng, D, 0.2);
+                let wq = randv(&mut rng, D * D, 0.1);
+                let wk = randv(&mut rng, DKV * D, 0.1);
+                let wv = randv(&mut rng, DKV * D, 0.1);
+                let (mut h, mut rstd) = (vec![0.0f32; T * D], vec![0.0f32; T]);
+                let mut q = vec![0.0f32; T * D];
+                let mut k = vec![0.0f32; T * DKV];
+                let mut v = vec![0.0f32; T * DKV];
+                if name.ends_with("fused") {
+                    time(reps, warmup, || {
+                        kernels::fused_rmsnorm_qkv(
+                            &x, &gamma, &wq, &wk, &wv, T, D, DKV, &mut h, &mut rstd, &mut q,
+                            &mut k, &mut v, threads,
+                        );
+                        black_box(&q);
+                    })
+                } else {
+                    time(reps, warmup, || {
+                        math::rmsnorm_fwd(&x, &gamma, T, D, &mut h, &mut rstd);
+                        math::linear_fwd(&h, &wq, T, D, D, &mut q);
+                        math::linear_fwd(&h, &wk, T, D, DKV, &mut k);
+                        math::linear_fwd(&h, &wv, T, D, DKV, &mut v);
+                        black_box(&q);
+                    })
+                }
+            }
+            "kernel_swiglu_fused" | "kernel_swiglu_naive" => {
+                let x = randv(&mut rng, T * D, 0.5);
+                let gamma = randv(&mut rng, D, 0.2);
+                let wg = randv(&mut rng, F * D, 0.1);
+                let wu = randv(&mut rng, F * D, 0.1);
+                let (mut h, mut rstd) = (vec![0.0f32; T * D], vec![0.0f32; T]);
+                let mut gate = vec![0.0f32; T * F];
+                let mut up = vec![0.0f32; T * F];
+                let mut y = vec![0.0f32; T * F];
+                if name.ends_with("fused") {
+                    time(reps, warmup, || {
+                        kernels::fused_rmsnorm_swiglu(
+                            &x, &gamma, &wg, &wu, T, D, F, &mut h, &mut rstd, &mut gate, &mut up,
+                            &mut y, threads,
+                        );
+                        black_box(&y);
+                    })
+                } else {
+                    time(reps, warmup, || {
+                        math::rmsnorm_fwd(&x, &gamma, T, D, &mut h, &mut rstd);
+                        math::linear_fwd(&h, &wg, T, D, F, &mut gate);
+                        math::linear_fwd(&h, &wu, T, D, F, &mut up);
+                        math::swiglu_fwd(&gate, &up, &mut y);
+                        black_box(&y);
+                    })
+                }
+            }
+            "kernel_rope_fused" | "kernel_rope_naive" => {
+                let mut x = randv(&mut rng, T * HEADS * HD, 0.5);
+                let (_, pos) = seg_pos();
+                if name.ends_with("fused") {
+                    time(reps, warmup, || {
+                        kernels::rope(&mut x, &pos, T, HEADS, HD, 1.0, threads);
+                        black_box(&x);
+                    })
+                } else {
+                    time(reps, warmup, || {
+                        math::rope_apply(&mut x, &pos, T, HEADS, HD, 1.0);
+                        black_box(&x);
+                    })
+                }
+            }
+            "kernel_attention_flash" | "kernel_attention_naive" => {
+                let q = randv(&mut rng, T * HEADS * HD, 0.3);
+                let k = randv(&mut rng, T * DKV, 0.3);
+                let v = randv(&mut rng, T * DKV, 0.3);
+                let (seg, pos) = seg_pos();
+                let tokens = vec![0i32; T];
+                let mut out = vec![0.0f32; T * HEADS * HD];
+                if name.ends_with("flash") {
+                    let mut lse = vec![0.0f32; B * HEADS * S];
+                    time(reps, warmup, || {
+                        attention::flash_attention_fwd(
+                            &q, &k, &v, &seg, B, S, HEADS, KV_HEADS, HD, &mut out, &mut lse,
+                            threads,
+                        );
+                        black_box(&out);
+                    })
+                } else {
+                    let mut probs = vec![0.0f32; B * HEADS * S * S];
+                    let bv = BatchView {
+                        tokens: &tokens,
+                        targets: &tokens,
+                        seg: &seg,
+                        pos: &pos,
+                        bsz: B,
+                        seq: S,
+                    };
+                    time(reps, warmup, || {
+                        refmodel::attention_fwd(
+                            &q, &k, &v, &bv, HEADS, KV_HEADS, HD, &mut out, &mut probs,
+                        );
+                        black_box(&out);
+                    })
+                }
+            }
+            "kernel_cross_entropy_fused" | "kernel_cross_entropy_naive" => {
+                let hf = randv(&mut rng, T * D, 0.5);
+                let w = randv(&mut rng, V * D, 0.05);
+                let targets: Vec<i32> = (0..T).map(|i| (i % V) as i32).collect();
+                if name.ends_with("fused") {
+                    let mut lse = vec![0.0f32; T];
+                    time(reps, warmup, || {
+                        let out = cce::cce_loss_fwd(&hf, &w, &targets, T, D, V, &mut lse, threads);
+                        black_box(out);
+                    })
+                } else {
+                    let mut logits = vec![0.0f32; T * V];
+                    let mut probs = vec![0.0f32; T * V];
+                    time(reps, warmup, || {
+                        math::linear_fwd(&hf, &w, T, D, V, &mut logits);
+                        let out = math::softmax_xent(&logits, &targets, T, V, &mut probs);
+                        black_box(out);
+                    })
+                }
+            }
+            "kernel_adamw_fused" | "kernel_adamw_naive" => {
+                let n = V * D;
+                let g = randv(&mut rng, n, 0.01);
+                let mut pbuf = randv(&mut rng, n, 0.1);
+                let mut m = vec![0.0f32; n];
+                let mut v = vec![0.0f32; n];
+                if name.ends_with("fused") {
+                    time(reps, warmup, || {
+                        kernels::adamw(&mut pbuf, &g, &mut m, &mut v, 1e-4, 2.0, 0.01, threads);
+                        black_box(&pbuf);
+                    })
+                } else {
+                    time(reps, warmup, || {
+                        math::adamw_update(&mut pbuf, &g, &mut m, &mut v, 1e-4, 2.0, 0.01);
+                        black_box(&pbuf);
+                    })
+                }
+            }
+            "kernel_lora_linear_fused" | "kernel_lora_linear_naive" => {
+                let x = randv(&mut rng, T * D, 0.5);
+                let a = randv(&mut rng, R * D, 0.1);
+                let b = randv(&mut rng, D * R, 0.1);
+                let mut ha = vec![0.0f32; T * R];
+                let mut out = vec![0.0f32; T * D];
+                if name.ends_with("fused") {
+                    time(reps, warmup, || {
+                        kernels::lora_linear(&x, &a, &b, T, D, R, D, 0.5, &mut ha, &mut out, threads);
+                        black_box(&out);
+                    })
+                } else {
+                    let mut delta = vec![0.0f32; T * D];
+                    time(reps, warmup, || {
+                        math::linear_fwd(&x, &a, T, D, R, &mut ha);
+                        math::linear_fwd(&ha, &b, T, R, D, &mut delta);
+                        for (o, &dl) in out.iter_mut().zip(delta.iter()) {
+                            *o += 0.5 * dl;
+                        }
+                        black_box(&out);
+                    })
+                }
+            }
+            other => bail!("unknown kernel microbench '{other}' on the cpu-fast backend"),
+        };
+        Ok(secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_mirrors_reference_families_under_fast_profile() {
+        let be = FastCpuBackend::with_threads(2);
+        for name in [
+            "train_step_chronicals",
+            "train_step_lora",
+            "train_step_lora_broken",
+            "init_chronicals",
+            "init_lora",
+            "eval_chronicals",
+        ] {
+            assert!(be.manifest().get(name).is_ok(), "missing {name}");
+        }
+        assert_eq!(be.manifest().profile, "cpu-fast");
+        assert_eq!(be.name(), "cpu-fast");
+        assert_eq!(be.threads(), 2);
+    }
+
+    #[test]
+    fn init_matches_reference_backend_bitwise() {
+        let fast = FastCpuBackend::with_threads(1);
+        let reference = cpu::CpuBackend::new();
+        let a = fast.init_state("init_chronicals", 9).unwrap();
+        let b = reference.init_state("init_chronicals", 9).unwrap();
+        assert_eq!(fast.state_params(&a).unwrap(), reference.state_params(&b).unwrap());
+    }
+
+    #[test]
+    fn bench_kernel_pairs_run() {
+        let be = FastCpuBackend::with_threads(1);
+        for name in ["kernel_rmsnorm_fused", "kernel_rmsnorm_naive"] {
+            let secs = be.bench_kernel(name, 1, 0).unwrap();
+            assert!(secs > 0.0, "{name}: {secs}");
+        }
+        assert!(be.bench_kernel("kernel_nope", 1, 0).is_err());
+    }
+
+    #[test]
+    fn threads_zero_resolves_to_at_least_one() {
+        let be = FastCpuBackend::new();
+        assert!(be.threads() >= 1);
+    }
+}

@@ -1,0 +1,618 @@
+//! The fast CPU train step: the reference architecture executed through
+//! the fused/tiled/threaded kernels of this module's siblings.
+//!
+//! Same state layout, same parameter names, same batch semantics as
+//! `backend::cpu::model` — the two backends share `CpuState`, so
+//! checkpoints and init are interchangeable and parity tests line up
+//! parameter-for-parameter. What differs is execution:
+//!
+//! * attention never materializes `[B, Hq, S, S]` (online softmax forward,
+//!   recompute backward — `attention.rs`);
+//! * the loss never materializes `[T, V]` (streaming CCE — `cce.rs`);
+//! * RMSNorm feeds its projections fused, matmuls carry residual adds, and
+//!   every row-parallel kernel runs on `threads` scoped threads.
+//!
+//! Numerics: reassociation (tiled dots, online softmax) legitimately
+//! changes low-order bits vs. the sequential reference, so cross-backend
+//! parity is tolerance-based (loss |Δ| ≤ 1e-4, grad-norm rel ≤ 1e-3 —
+//! `rust/tests/parity.rs`), while the fast backend itself is bitwise
+//! deterministic run-to-run *and* across thread counts (every cross-tile
+//! reduction happens in fixed tile order).
+
+use super::attention::{flash_attention_bwd, flash_attention_fwd};
+use super::cce::{cce_bwd_fused, cce_loss_fwd};
+use super::kernels as k;
+use super::scratch;
+use crate::backend::cpu::model::{BatchView, CpuState, ParamIdx, StepOut, WEIGHT_DECAY};
+use crate::optim::{classify_param, ParamGroup};
+use anyhow::{anyhow, bail, Result};
+
+/// Per-layer forward activations kept for the backward pass. Identical to
+/// the reference cache except `probs: [B, Hq, S, S]` is replaced by
+/// `lse: [B, Hq, S]` (linear in S).
+struct LayerCache {
+    x_in: Vec<f32>,
+    h1: Vec<f32>,
+    rstd1: Vec<f32>,
+    q: Vec<f32>, // post-RoPE
+    kk: Vec<f32>, // post-RoPE
+    v: Vec<f32>,
+    hq_a: Option<Vec<f32>>,
+    hv_a: Option<Vec<f32>>,
+    att: Vec<f32>, // attention output (pre-Wo); doubles as the bwd `out`
+    lse: Vec<f32>, // [B, Hq, S] logsumexp per query row
+    x_mid: Vec<f32>,
+    h2: Vec<f32>,
+    rstd2: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    y: Vec<f32>,
+}
+
+struct FinalCache {
+    x_f: Vec<f32>,
+    hf: Vec<f32>,
+    rstd_f: Vec<f32>,
+    lse: Vec<f32>, // [T] streaming logsumexp (replaces [T, V] probs)
+    n_valid: usize,
+}
+
+/// Forward pass; fills `caches` when training. Returns summed loss +
+/// valid-target count (mean reduction is the caller's, like the reference).
+fn forward(
+    state: &CpuState,
+    bv: &BatchView,
+    caches: Option<(&mut Vec<LayerCache>, &mut Option<FinalCache>)>,
+    threads: usize,
+) -> Result<(f32, usize)> {
+    let dims = &state.dims;
+    let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
+    let (hq, hkv, hd) = (dims.n_heads, dims.n_kv_heads, dims.head_dim());
+    let dkv = dims.d_kv();
+    let t = bv.bsz * bv.seq;
+    let p = ParamIdx::new(&state.names, &state.params);
+
+    for (i, &tok) in bv.tokens.iter().enumerate() {
+        if tok < 0 || tok as usize >= v {
+            bail!("token id {tok} at position {i} out of vocab range 0..{v}");
+        }
+    }
+    for (i, &tgt) in bv.targets.iter().enumerate() {
+        if tgt >= v as i32 {
+            bail!("target id {tgt} at position {i} out of vocab range");
+        }
+    }
+
+    let embed = p.get("embed")?;
+    let mut x = scratch::alloc_f32(t * d);
+    for ti in 0..t {
+        let tok = bv.tokens[ti] as usize;
+        x[ti * d..(ti + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+    }
+
+    let mut caches = caches;
+
+    for l in 0..dims.n_layers {
+        let pre = format!("layer_{l:02}.");
+        let x_in = x;
+
+        let mut h1 = scratch::alloc_f32(t * d);
+        let mut rstd1 = scratch::alloc_f32(t);
+        let mut q = scratch::alloc_f32(t * d);
+        let mut kk = scratch::alloc_f32(t * dkv);
+        let mut vv = scratch::alloc_f32(t * dkv);
+        k::fused_rmsnorm_qkv(
+            &x_in,
+            p.get(&format!("{pre}norm1"))?,
+            p.get(&format!("{pre}wq"))?,
+            p.get(&format!("{pre}wk"))?,
+            p.get(&format!("{pre}wv"))?,
+            t,
+            d,
+            dkv,
+            &mut h1,
+            &mut rstd1,
+            &mut q,
+            &mut kk,
+            &mut vv,
+            threads,
+        );
+
+        let (mut hq_a, mut hv_a) = (None, None);
+        if let Some(lc) = &state.lora {
+            let r = lc.rank;
+            let s = lc.scale();
+            let mut ha = scratch::alloc_f32(t * r);
+            k::lora_linear(
+                &h1,
+                p.get(&format!("{pre}wq_a"))?,
+                p.get(&format!("{pre}wq_b"))?,
+                t,
+                d,
+                r,
+                d,
+                s,
+                &mut ha,
+                &mut q,
+                threads,
+            );
+            hq_a = Some(ha);
+            let mut ha = scratch::alloc_f32(t * r);
+            k::lora_linear(
+                &h1,
+                p.get(&format!("{pre}wv_a"))?,
+                p.get(&format!("{pre}wv_b"))?,
+                t,
+                d,
+                r,
+                dkv,
+                s,
+                &mut ha,
+                &mut vv,
+                threads,
+            );
+            hv_a = Some(ha);
+        }
+
+        k::rope(&mut q, bv.pos, t, hq, hd, 1.0, threads);
+        k::rope(&mut kk, bv.pos, t, hkv, hd, 1.0, threads);
+
+        let mut att = scratch::alloc_f32(t * d);
+        let mut lse = scratch::alloc_f32(bv.bsz * hq * bv.seq);
+        flash_attention_fwd(
+            &q, &kk, &vv, bv.seg, bv.bsz, bv.seq, hq, hkv, hd, &mut att, &mut lse, threads,
+        );
+
+        let mut x_mid = scratch::alloc_f32(t * d);
+        k::matmul_residual(&att, p.get(&format!("{pre}wo"))?, &x_in, t, d, d, &mut x_mid, threads);
+
+        let mut h2 = scratch::alloc_f32(t * d);
+        let mut rstd2 = scratch::alloc_f32(t);
+        let mut gate = scratch::alloc_f32(t * f);
+        let mut up = scratch::alloc_f32(t * f);
+        let mut y = scratch::alloc_f32(t * f);
+        k::fused_rmsnorm_swiglu(
+            &x_mid,
+            p.get(&format!("{pre}norm2"))?,
+            p.get(&format!("{pre}w_gate"))?,
+            p.get(&format!("{pre}w_up"))?,
+            t,
+            d,
+            f,
+            &mut h2,
+            &mut rstd2,
+            &mut gate,
+            &mut up,
+            &mut y,
+            threads,
+        );
+
+        let mut x_out = scratch::alloc_f32(t * d);
+        k::matmul_residual(&y, p.get(&format!("{pre}w_down"))?, &x_mid, t, f, d, &mut x_out, threads);
+
+        if let Some((lcs, _)) = caches.as_mut() {
+            lcs.push(LayerCache {
+                x_in,
+                h1,
+                rstd1,
+                q,
+                kk,
+                v: vv,
+                hq_a,
+                hv_a,
+                att,
+                lse,
+                x_mid,
+                h2,
+                rstd2,
+                gate,
+                up,
+                y,
+            });
+        }
+        x = x_out;
+    }
+
+    let x_f = x;
+    let mut hf = scratch::alloc_f32(t * d);
+    let mut rstd_f = scratch::alloc_f32(t);
+    k::rmsnorm(&x_f, p.get("norm_f")?, t, d, &mut hf, &mut rstd_f, threads);
+    let mut lse = scratch::alloc_f32(t);
+    let (loss_sum, n_valid) =
+        cce_loss_fwd(&hf, p.get("w_head")?, bv.targets, t, d, v, &mut lse, threads);
+
+    if let Some((_, fc)) = caches.as_mut() {
+        **fc = Some(FinalCache { x_f, hf, rstd_f, lse, n_valid });
+    }
+    Ok((loss_sum, n_valid))
+}
+
+/// Full backward pass; gradients aligned with `state.params` (frozen
+/// entries stay zero except where the dx chain needs them — same contract
+/// as the reference backward).
+fn backward(
+    state: &CpuState,
+    bv: &BatchView,
+    layer_caches: &[LayerCache],
+    fc: &FinalCache,
+    threads: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let dims = &state.dims;
+    let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
+    let (hq, hkv, hd) = (dims.n_heads, dims.n_kv_heads, dims.head_dim());
+    let dkv = dims.d_kv();
+    let t = bv.bsz * bv.seq;
+    let p = ParamIdx::new(&state.names, &state.params);
+    let mut grads: Vec<Vec<f32>> =
+        state.params.iter().map(|tn| scratch::alloc_f32(tn.elements())).collect();
+    let nt = state.n_trainable;
+
+    // CCE backward: dW_head and dhf in one fused tile loop, no [T, V]
+    let i_head = p.id("w_head")?;
+    let mut dhf = scratch::alloc_f32(t * d);
+    {
+        let dw_head = if i_head < nt { Some(grads[i_head].as_mut_slice()) } else { None };
+        cce_bwd_fused(
+            &fc.hf,
+            p.get("w_head")?,
+            bv.targets,
+            &fc.lse,
+            t,
+            d,
+            v,
+            fc.n_valid,
+            dw_head,
+            &mut dhf,
+            threads,
+        );
+    }
+
+    let mut dx = scratch::alloc_f32(t * d);
+    let i_nf = p.id("norm_f")?;
+    k::rmsnorm_bwd(&fc.x_f, p.get("norm_f")?, &fc.rstd_f, &dhf, t, d, &mut dx, &mut grads[i_nf], threads);
+
+    for l in (0..dims.n_layers).rev() {
+        let pre = format!("layer_{l:02}.");
+        let c = &layer_caches[l];
+
+        // x_out = x_mid + y @ w_down.T
+        let i_down = p.id(&format!("{pre}w_down"))?;
+        if i_down < nt {
+            k::matmul_bwd_w(&dx, &c.y, t, f, d, &mut grads[i_down], threads);
+        }
+        let mut dy = scratch::alloc_f32(t * f);
+        k::matmul_bwd_x(&dx, p.get(&format!("{pre}w_down"))?, t, f, d, &mut dy, threads);
+
+        let mut dgate = scratch::alloc_f32(t * f);
+        let mut dup = scratch::alloc_f32(t * f);
+        k::swiglu_bwd(&c.gate, &c.up, &dy, &mut dgate, &mut dup, threads);
+
+        let i_gate = p.id(&format!("{pre}w_gate"))?;
+        let i_up = p.id(&format!("{pre}w_up"))?;
+        if i_gate < nt {
+            k::matmul_bwd_w(&dgate, &c.h2, t, d, f, &mut grads[i_gate], threads);
+        }
+        if i_up < nt {
+            k::matmul_bwd_w(&dup, &c.h2, t, d, f, &mut grads[i_up], threads);
+        }
+        let mut dh2 = scratch::alloc_f32(t * d);
+        k::matmul_bwd_x(&dgate, p.get(&format!("{pre}w_gate"))?, t, d, f, &mut dh2, threads);
+        k::matmul_bwd_x(&dup, p.get(&format!("{pre}w_up"))?, t, d, f, &mut dh2, threads);
+
+        let i_n2 = p.id(&format!("{pre}norm2"))?;
+        let mut dx_mid = dx; // residual passthrough...
+        k::rmsnorm_bwd(
+            &c.x_mid,
+            p.get(&format!("{pre}norm2"))?,
+            &c.rstd2,
+            &dh2,
+            t,
+            d,
+            &mut dx_mid, // ...plus the norm branch accumulated
+            &mut grads[i_n2],
+            threads,
+        );
+
+        // x_mid = x_in + att @ wo.T
+        let i_wo = p.id(&format!("{pre}wo"))?;
+        if i_wo < nt {
+            k::matmul_bwd_w(&dx_mid, &c.att, t, d, d, &mut grads[i_wo], threads);
+        }
+        let mut datt = scratch::alloc_f32(t * d);
+        k::matmul_bwd_x(&dx_mid, p.get(&format!("{pre}wo"))?, t, d, d, &mut datt, threads);
+
+        let mut dq = scratch::alloc_f32(t * d);
+        let mut dk = scratch::alloc_f32(t * dkv);
+        let mut dv = scratch::alloc_f32(t * dkv);
+        flash_attention_bwd(
+            &datt, &c.q, &c.kk, &c.v, &c.att, &c.lse, bv.seg, bv.bsz, bv.seq, hq, hkv, hd,
+            &mut dq, &mut dk, &mut dv, threads,
+        );
+        k::rope(&mut dq, bv.pos, t, hq, hd, -1.0, threads);
+        k::rope(&mut dk, bv.pos, t, hkv, hd, -1.0, threads);
+
+        let i_wq = p.id(&format!("{pre}wq"))?;
+        let i_wk = p.id(&format!("{pre}wk"))?;
+        let i_wv = p.id(&format!("{pre}wv"))?;
+        if i_wq < nt {
+            k::matmul_bwd_w(&dq, &c.h1, t, d, d, &mut grads[i_wq], threads);
+        }
+        if i_wk < nt {
+            k::matmul_bwd_w(&dk, &c.h1, t, d, dkv, &mut grads[i_wk], threads);
+        }
+        if i_wv < nt {
+            k::matmul_bwd_w(&dv, &c.h1, t, d, dkv, &mut grads[i_wv], threads);
+        }
+        let mut dh1 = scratch::alloc_f32(t * d);
+        k::matmul_bwd_x(&dq, p.get(&format!("{pre}wq"))?, t, d, d, &mut dh1, threads);
+        k::matmul_bwd_x(&dk, p.get(&format!("{pre}wk"))?, t, d, dkv, &mut dh1, threads);
+        k::matmul_bwd_x(&dv, p.get(&format!("{pre}wv"))?, t, d, dkv, &mut dh1, threads);
+
+        if let Some(lc) = &state.lora {
+            let (r, s) = (lc.rank, lc.scale());
+            let hq_a = c.hq_a.as_ref().expect("lora cache");
+            let hv_a = c.hv_a.as_ref().expect("lora cache");
+            let mut dq_s = scratch::alloc_f32(t * d);
+            for (o, &g) in dq_s.iter_mut().zip(dq.iter()) {
+                *o = s * g;
+            }
+            let i_qb = p.id(&format!("{pre}wq_b"))?;
+            let i_qa = p.id(&format!("{pre}wq_a"))?;
+            k::matmul_bwd_w(&dq_s, hq_a, t, r, d, &mut grads[i_qb], threads);
+            let mut dhq_a = scratch::alloc_f32(t * r);
+            k::matmul_bwd_x(&dq_s, p.get(&format!("{pre}wq_b"))?, t, r, d, &mut dhq_a, threads);
+            k::matmul_bwd_w(&dhq_a, &c.h1, t, d, r, &mut grads[i_qa], threads);
+            k::matmul_bwd_x(&dhq_a, p.get(&format!("{pre}wq_a"))?, t, d, r, &mut dh1, threads);
+
+            let mut dv_s = scratch::alloc_f32(t * dkv);
+            for (o, &g) in dv_s.iter_mut().zip(dv.iter()) {
+                *o = s * g;
+            }
+            let i_vb = p.id(&format!("{pre}wv_b"))?;
+            let i_va = p.id(&format!("{pre}wv_a"))?;
+            k::matmul_bwd_w(&dv_s, hv_a, t, r, dkv, &mut grads[i_vb], threads);
+            let mut dhv_a = scratch::alloc_f32(t * r);
+            k::matmul_bwd_x(&dv_s, p.get(&format!("{pre}wv_b"))?, t, r, dkv, &mut dhv_a, threads);
+            k::matmul_bwd_w(&dhv_a, &c.h1, t, d, r, &mut grads[i_va], threads);
+            k::matmul_bwd_x(&dhv_a, p.get(&format!("{pre}wv_a"))?, t, d, r, &mut dh1, threads);
+        }
+
+        let i_n1 = p.id(&format!("{pre}norm1"))?;
+        let mut dx_in = dx_mid; // residual passthrough
+        k::rmsnorm_bwd(
+            &c.x_in,
+            p.get(&format!("{pre}norm1"))?,
+            &c.rstd1,
+            &dh1,
+            t,
+            d,
+            &mut dx_in,
+            &mut grads[i_n1],
+            threads,
+        );
+        dx = dx_in;
+    }
+
+    let i_embed = p.id("embed")?;
+    if i_embed < nt {
+        for ti in 0..t {
+            let tok = bv.tokens[ti] as usize;
+            let ge = &mut grads[i_embed][tok * d..(tok + 1) * d];
+            for i in 0..d {
+                ge[i] += dx[ti * d + i];
+            }
+        }
+    }
+    Ok(grads)
+}
+
+/// Forward-only mean loss (the eval path).
+pub fn eval_loss(state: &CpuState, bv: &BatchView, threads: usize) -> Result<f32> {
+    let (loss_sum, n_valid) = forward(state, bv, None, threads)?;
+    Ok(loss_sum / n_valid.max(1) as f32)
+}
+
+/// One full fast train step: forward, backward, grad-norm, AdamW with the
+/// LoRA+ dual LR. Mirrors the reference `train_step` contract exactly,
+/// including the `broken` zero-gradient mode.
+pub fn train_step(
+    state: &mut CpuState,
+    bv: &BatchView,
+    broken: bool,
+    step: u64,
+    lr: f32,
+    lr_b: f32,
+    threads: usize,
+) -> Result<StepOut> {
+    let mut layer_caches: Vec<LayerCache> = Vec::with_capacity(state.dims.n_layers);
+    let mut final_cache: Option<FinalCache> = None;
+    let (loss_sum, n_valid) =
+        forward(state, bv, Some((&mut layer_caches, &mut final_cache)), threads)?;
+    let loss = loss_sum / n_valid.max(1) as f32;
+
+    if broken {
+        return Ok(StepOut { loss, grad_norm: 0.0, n_tokens: n_valid as f32 });
+    }
+
+    let fc = final_cache.ok_or_else(|| anyhow!("forward did not fill caches"))?;
+    let grads = backward(state, bv, &layer_caches, &fc, threads)?;
+
+    // fixed parameter order: grad-norm bits never depend on threads
+    let mut sq = 0.0f32;
+    for g in &grads[..state.n_trainable] {
+        for &x in g {
+            sq += x * x;
+        }
+    }
+    let grad_norm = sq.sqrt();
+
+    for i in 0..state.n_trainable {
+        let lr_p = match classify_param(&state.names[i]) {
+            ParamGroup::LoraB => lr_b,
+            _ => lr,
+        };
+        let param = state.params[i].as_f32_mut()?;
+        k::adamw(
+            param,
+            &grads[i],
+            &mut state.slot_m[i],
+            &mut state.slot_v[i],
+            lr_p,
+            step as f32,
+            WEIGHT_DECAY,
+            threads,
+        );
+    }
+    Ok(StepOut { loss, grad_norm, n_tokens: n_valid as f32 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cpu::model as refmodel;
+    use crate::backend::cpu::model::{init_state, LoraCfg, ModelDims};
+    use crate::util::rng::Rng;
+
+    fn dims() -> ModelDims {
+        ModelDims { vocab: 16, d_model: 8, n_layers: 2, n_heads: 2, n_kv_heads: 1, d_ff: 12 }
+    }
+
+    /// Same packed fixture as the reference model tests.
+    fn batch() -> (Vec<i32>, Vec<i32>, Vec<i32>, Vec<i32>, usize, usize) {
+        let (bsz, s) = (2usize, 10usize);
+        let mut tokens = vec![0i32; bsz * s];
+        let mut targets = vec![-1i32; bsz * s];
+        let mut seg = vec![0i32; bsz * s];
+        let mut pos = vec![0i32; bsz * s];
+        let mut rng = Rng::new(99);
+        let rows: [&[usize]; 2] = [&[5, 4], &[6]];
+        for (b, lens) in rows.iter().enumerate() {
+            let mut off = 0usize;
+            for (si, &len) in lens.iter().enumerate() {
+                for i in 0..len {
+                    let t = b * s + off + i;
+                    tokens[t] = rng.range(4, 16) as i32;
+                    seg[t] = (si + 1) as i32;
+                    pos[t] = i as i32;
+                    if i > 0 {
+                        targets[t - 1] = tokens[t];
+                    }
+                }
+                off += len;
+            }
+        }
+        (tokens, targets, seg, pos, bsz, s)
+    }
+
+    fn bv(t: &(Vec<i32>, Vec<i32>, Vec<i32>, Vec<i32>, usize, usize)) -> BatchView<'_> {
+        BatchView { tokens: &t.0, targets: &t.1, seg: &t.2, pos: &t.3, bsz: t.4, seq: t.5 }
+    }
+
+    /// Per-parameter gradient parity against the reference backward — the
+    /// strictest cross-implementation check (satellite requirement).
+    #[test]
+    fn per_parameter_gradients_match_reference() {
+        for lora in [None, Some(LoraCfg { rank: 2, alpha: 4.0 })] {
+            let state = init_state(dims(), lora, 5);
+            let b = batch();
+            let view = bv(&b);
+
+            let mut ref_lcs = Vec::new();
+            let mut ref_fc = None;
+            let (ref_loss, _) =
+                refmodel::forward(&state, &view, Some((&mut ref_lcs, &mut ref_fc))).unwrap();
+            let ref_grads =
+                refmodel::backward(&state, &view, &ref_lcs, &ref_fc.unwrap()).unwrap();
+
+            let mut lcs = Vec::new();
+            let mut fc = None;
+            let (loss, _) = forward(&state, &view, Some((&mut lcs, &mut fc)), 2).unwrap();
+            let grads = backward(&state, &view, &lcs, &fc.unwrap(), 2).unwrap();
+
+            assert!(
+                (loss - ref_loss).abs() < 1e-4 * (1.0 + ref_loss.abs()),
+                "lora={lora:?} loss {loss} vs {ref_loss}"
+            );
+            assert_eq!(grads.len(), ref_grads.len());
+            for (gi, (g, rg)) in grads.iter().zip(&ref_grads).enumerate() {
+                for (ei, (a, b)) in g.iter().zip(rg).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                        "lora={lora:?} param {gi} ('{}') [{ei}]: {a} vs {b}",
+                        state.names[gi]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn loss_decreases_and_matches_reference_trajectory() {
+        let b = batch();
+        let mut fast = init_state(dims(), None, 7);
+        let mut reference = init_state(dims(), None, 7);
+        for step in 1..=8u64 {
+            let fo = train_step(&mut fast, &bv(&b), false, step, 5e-3, 5e-3, 3).unwrap();
+            let ro = refmodel::train_step(&mut reference, &bv(&b), false, step, 5e-3, 5e-3).unwrap();
+            assert!(fo.grad_norm > 0.0);
+            assert!(
+                (fo.loss - ro.loss).abs() < 1e-4 * (1.0 + ro.loss.abs()),
+                "step {step}: {} vs {}",
+                fo.loss,
+                ro.loss
+            );
+            let rel = (fo.grad_norm - ro.grad_norm).abs() / ro.grad_norm.max(1e-12);
+            assert!(rel < 1e-3, "step {step}: grad_norm {} vs {}", fo.grad_norm, ro.grad_norm);
+        }
+    }
+
+    #[test]
+    fn step_bits_invariant_to_thread_count() {
+        let b = batch();
+        let run = |threads: usize| {
+            let mut state = init_state(dims(), Some(LoraCfg { rank: 2, alpha: 4.0 }), 42);
+            let mut bits = Vec::new();
+            for step in 1..=4u64 {
+                let out =
+                    train_step(&mut state, &bv(&b), false, step, 3e-3, 6e-3, threads).unwrap();
+                bits.push((out.loss.to_bits(), out.grad_norm.to_bits()));
+            }
+            bits
+        };
+        let one = run(1);
+        assert_eq!(one, run(1), "threads=1 not run-to-run deterministic");
+        assert_eq!(one, run(2), "threads=2 changed bits");
+        assert_eq!(one, run(5), "threads=5 changed bits");
+    }
+
+    #[test]
+    fn broken_mode_has_zero_grad() {
+        let mut state = init_state(dims(), None, 7);
+        let b = batch();
+        let o1 = train_step(&mut state, &bv(&b), true, 1, 5e-3, 5e-3, 2).unwrap();
+        let o2 = train_step(&mut state, &bv(&b), true, 2, 5e-3, 5e-3, 2).unwrap();
+        assert_eq!(o1.grad_norm, 0.0);
+        assert_eq!(o1.loss.to_bits(), o2.loss.to_bits(), "params moved in broken mode");
+    }
+
+    #[test]
+    fn eval_matches_train_loss_before_update() {
+        let mut state = init_state(dims(), None, 3);
+        let b = batch();
+        let e = eval_loss(&state, &bv(&b), 2).unwrap();
+        let out = train_step(&mut state, &bv(&b), false, 1, 1e-3, 1e-3, 2).unwrap();
+        assert_eq!(e.to_bits(), out.loss.to_bits());
+    }
+
+    #[test]
+    fn out_of_vocab_token_rejected() {
+        let state = init_state(dims(), None, 7);
+        let tokens = vec![99i32];
+        let targets = vec![-1i32];
+        let seg = vec![1i32];
+        let pos = vec![0i32];
+        let view =
+            BatchView { tokens: &tokens, targets: &targets, seg: &seg, pos: &pos, bsz: 1, seq: 1 };
+        assert!(eval_loss(&state, &view, 1).is_err());
+    }
+}

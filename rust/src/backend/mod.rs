@@ -7,10 +7,15 @@
 //! runtime — so the same step loop, metering, verification and
 //! checkpointing serve every backend.
 //!
-//! Two implementations exist:
+//! Three implementations exist:
 //! * [`cpu::CpuBackend`] (always available, the default): a deterministic
 //!   pure-Rust reference of the tiny-transformer train step. No artifacts,
-//!   no native deps — this is what CI and `cargo test` exercise.
+//!   no native deps — this is what CI and `cargo test` exercise. It is the
+//!   bitwise-deterministic correctness oracle.
+//! * [`cpu_fast::FastCpuBackend`] (always available, `--backend cpu-fast`):
+//!   the same contract executed through cache-blocked multithreaded
+//!   matmuls, online-softmax flash attention and streaming Cut
+//!   Cross-Entropy — validated against the reference by the parity suite.
 //! * `pjrt::PjrtBackend` (behind the `pjrt` feature): executes the AOT HLO
 //!   artifacts from `python/compile/aot.py` through PJRT.
 //!
@@ -32,6 +37,7 @@
 //! the device.
 
 pub mod cpu;
+pub mod cpu_fast;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
@@ -39,6 +45,36 @@ use crate::batching::Batch;
 use crate::manifest::Manifest;
 use crate::runtime::HostTensor;
 use anyhow::{bail, Result};
+use std::rc::Rc;
+
+/// Backend registry: construct a backend by CLI/config name.
+///
+/// `threads` is the worker-thread request for the fast backend (0 =
+/// resolve via `CHRONICALS_THREADS`, then `available_parallelism`);
+/// `artifacts_dir` is only read by the PJRT backend. Shared by the CLI,
+/// the benches and the tests so every entrypoint accepts the same names.
+pub fn create_backend(name: &str, artifacts_dir: &str, threads: usize) -> Result<Rc<dyn Backend>> {
+    match name {
+        "cpu" => Ok(Rc::new(cpu::CpuBackend::new())),
+        "cpu-fast" | "cpu_fast" => Ok(Rc::new(cpu_fast::FastCpuBackend::with_threads(threads))),
+        "pjrt" => {
+            #[cfg(feature = "pjrt")]
+            {
+                let _ = threads;
+                Ok(Rc::new(pjrt::PjrtBackend::new(artifacts_dir)?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                let _ = (artifacts_dir, threads);
+                bail!(
+                    "this binary was built without PJRT support; rebuild with \
+                     `cargo build --features pjrt` and vendored xla-rs (DESIGN.md §4.2)"
+                )
+            }
+        }
+        other => bail!("unknown backend '{other}' (expected cpu | cpu-fast | pjrt)"),
+    }
+}
 
 /// The three scalar metrics every train step reports.
 #[derive(Debug, Clone, Copy)]

@@ -24,6 +24,12 @@ pub struct RunConfig {
     pub corpus_examples: usize,
     pub max_seq: usize,
     pub artifacts_dir: String,
+    /// Execution backend: "cpu" (reference oracle), "cpu-fast" (threaded
+    /// fused kernels) or "pjrt" (AOT artifacts, `--features pjrt`).
+    pub backend: String,
+    /// Worker threads for the fast backend; 0 = autodetect
+    /// (`available_parallelism`). Overridden by `CHRONICALS_THREADS`.
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -42,8 +48,33 @@ impl Default for RunConfig {
             corpus_examples: 2048,
             max_seq: 1024,
             artifacts_dir: "artifacts".into(),
+            backend: "cpu".into(),
+            threads: 0,
         }
     }
+}
+
+/// `CHRONICALS_THREADS`, when set to a positive integer. The environment
+/// overrides both config files and `--threads` flags.
+pub fn env_threads() -> Option<usize> {
+    env_threads_from(std::env::var("CHRONICALS_THREADS").ok().as_deref())
+}
+
+/// Testable core of [`env_threads`] (no process-global env access).
+pub fn env_threads_from(raw: Option<&str>) -> Option<usize> {
+    raw.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n > 0)
+}
+
+/// Resolve a worker-thread count: an explicit positive value wins, else the
+/// `CHRONICALS_THREADS` env override, else `available_parallelism`.
+pub fn resolve_threads(explicit: usize) -> usize {
+    if explicit > 0 {
+        return explicit;
+    }
+    if let Some(n) = env_threads() {
+        return n;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 impl RunConfig {
@@ -71,7 +102,16 @@ impl RunConfig {
                 as usize,
             max_seq: doc.i64_or("data.max_seq", d.max_seq as i64) as usize,
             artifacts_dir: doc.str_or("artifacts_dir", &d.artifacts_dir).to_string(),
+            backend: doc.str_or("backend.name", &d.backend).to_string(),
+            threads: doc.i64_or("backend.threads", d.threads as i64).max(0) as usize,
         })
+    }
+
+    /// Effective worker-thread request for this run: the
+    /// `CHRONICALS_THREADS` env override beats the configured value
+    /// (0 = let the backend autodetect).
+    pub fn effective_threads(&self) -> usize {
+        env_threads().unwrap_or(self.threads)
     }
 
     /// Derive the init executable name: explicit, or `init_<variant>` from
@@ -169,5 +209,39 @@ lr_warmup_steps = 5
     fn lora_plus_preset_has_ratio_16() {
         let c = RunConfig::preset("lora_plus").unwrap();
         assert_eq!(c.lora_plus_ratio, 16.0);
+    }
+
+    #[test]
+    fn backend_section_parses() {
+        let c = RunConfig::from_toml(
+            r#"
+[backend]
+name = "cpu-fast"
+threads = 3
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.backend, "cpu-fast");
+        assert_eq!(c.threads, 3);
+        // defaults: reference backend, autodetected threads
+        let d = RunConfig::from_toml("").unwrap();
+        assert_eq!(d.backend, "cpu");
+        assert_eq!(d.threads, 0);
+    }
+
+    #[test]
+    fn env_threads_parsing() {
+        assert_eq!(env_threads_from(None), None);
+        assert_eq!(env_threads_from(Some("")), None);
+        assert_eq!(env_threads_from(Some("zero")), None);
+        assert_eq!(env_threads_from(Some("0")), None, "0 means unset, not zero workers");
+        assert_eq!(env_threads_from(Some("4")), Some(4));
+        assert_eq!(env_threads_from(Some(" 2 ")), Some(2));
+    }
+
+    #[test]
+    fn resolve_threads_explicit_wins_and_auto_is_positive() {
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
     }
 }

@@ -178,8 +178,10 @@ pub fn lora_comparison(backend: &Rc<dyn Backend>, steps: u64) -> Result<Vec<Row>
     Ok(rows)
 }
 
-/// Table 5: fused-vs-naive kernel pairs (PJRT-only: the CPU reference has
-/// no compiled kernel artifacts and reports a clean error).
+/// Table 5: fused-vs-naive kernel pairs. Supported on `cpu-fast` (its
+/// fused/tiled kernels vs the reference scalar implementations on
+/// identical inputs) and on PJRT (compiled kernel artifacts). The CPU
+/// reference backend has no fused variants and reports a clean error.
 pub fn kernel_microbench(backend: &dyn Backend, reps: usize) -> Result<Vec<(String, f64, f64)>> {
     let pairs = [
         ("RMSNorm", "kernel_rmsnorm_fused", "kernel_rmsnorm_naive"),
@@ -285,5 +287,15 @@ mod tests {
         let be = CpuBackend::new();
         let err = kernel_microbench(&be, 1).unwrap_err();
         assert!(err.to_string().contains("not supported"), "{err}");
+    }
+
+    #[test]
+    fn kernel_microbench_runs_on_cpu_fast() {
+        let be = crate::backend::cpu_fast::FastCpuBackend::with_threads(1);
+        let rows = kernel_microbench(&be, 1).unwrap();
+        assert_eq!(rows.len(), 7, "all Table-5 kernel pairs must time");
+        for (name, fused, naive) in rows {
+            assert!(fused > 0.0 && naive > 0.0, "{name}: {fused} vs {naive}");
+        }
     }
 }

@@ -17,10 +17,13 @@
 //! Execution is backend-pluggable (DESIGN.md §3): the default
 //! `backend::cpu::CpuBackend` is a deterministic pure-Rust reference of the
 //! full train step, so `cargo test` drives the whole pipeline hermetically —
-//! no Python, no artifacts, no native deps. The `pjrt` feature adds the
-//! PJRT runtime that executes the AOT artifacts; there, Python never runs
-//! on the training path: `make artifacts` is the only Python invocation and
-//! afterwards the `chronicals` binary is self-contained.
+//! no Python, no artifacts, no native deps. `backend::cpu_fast` is the
+//! throughput CPU path (threaded fused kernels, online-softmax flash
+//! attention, streaming Cut Cross-Entropy — DESIGN.md §4.3), validated
+//! against the reference by `rust/tests/parity.rs`. The `pjrt` feature
+//! adds the PJRT runtime that executes the AOT artifacts; there, Python
+//! never runs on the training path: `make artifacts` is the only Python
+//! invocation and afterwards the `chronicals` binary is self-contained.
 
 pub mod backend;
 pub mod batching;

@@ -7,16 +7,17 @@
 //!   inspect  — manifest / analytic memory model (Table 10, §S15)
 //!   verify   — the Unsloth-bug demonstration (Fig. 10/22)
 //!
-//! Every subcommand takes `--backend cpu|pjrt` (default `cpu`: the
-//! hermetic pure-Rust reference backend; `pjrt` executes AOT artifacts and
-//! needs a `--features pjrt` build plus `make artifacts`).
+//! Every subcommand takes `--backend cpu|cpu-fast|pjrt` (default `cpu`:
+//! the hermetic pure-Rust reference backend; `cpu-fast` is the threaded
+//! fused-kernel backend, `--threads N` / `CHRONICALS_THREADS` control its
+//! parallelism; `pjrt` executes AOT artifacts and needs a `--features
+//! pjrt` build plus `make artifacts`).
 //!
 //! Arg parsing is hand-rolled (offline build: no clap).
 
 use anyhow::{anyhow, bail, Result};
-use chronicals::backend::cpu::CpuBackend;
-use chronicals::backend::Backend;
-use chronicals::config::RunConfig;
+use chronicals::backend::{create_backend, Backend};
+use chronicals::config::{self, RunConfig};
 use chronicals::harness;
 use chronicals::metrics::{MemoryModel, Precision};
 use chronicals::report;
@@ -107,51 +108,53 @@ USAGE: chronicals <command> [--flags]
 COMMANDS
   train    --preset <full_ft|lora|lora_plus|e2e> | --config <file.toml>
            [--executable NAME] [--steps N] [--packed true|false]
-           [--lr X] [--lora-plus-ratio X] [--backend cpu|pjrt]
-           [--artifacts DIR]
+           [--lr X] [--lora-plus-ratio X] [--backend cpu|cpu-fast|pjrt]
+           [--threads N] [--artifacts DIR]
   bench    --summary | --ablation | --kernels | --lora | --full
-           [--steps N] [--reps N] [--backend cpu|pjrt] [--artifacts DIR]
+           [--steps N] [--reps N] [--backend cpu|cpu-fast|pjrt]
+           [--threads N] [--artifacts DIR]
   pack     [--capacity N] [--examples N]
-  inspect  --manifest | --memory [--backend cpu|pjrt] [--artifacts DIR]
-  verify   [--steps N] [--backend cpu|pjrt] [--artifacts DIR]
+  inspect  --manifest | --memory [--backend ...] [--artifacts DIR]
+  verify   [--steps N] [--backend ...] [--artifacts DIR]
            (the Unsloth-bug demo)
 
 BACKENDS
-  cpu   (default) pure-Rust deterministic reference — no artifacts needed
-  pjrt  AOT HLO artifacts via PJRT — requires a `--features pjrt` build,
-        vendored xla-rs bindings and `make artifacts`
+  cpu       (default) pure-Rust deterministic reference — the correctness
+            oracle; no artifacts needed
+  cpu-fast  threaded fused-kernel backend (flash attention + cut
+            cross-entropy); --threads N or CHRONICALS_THREADS=N pins the
+            worker count (default: all cores)
+  pjrt      AOT HLO artifacts via PJRT — requires a `--features pjrt`
+            build, vendored xla-rs bindings and `make artifacts`
 ",
         chronicals::version()
     );
 }
 
-#[cfg(feature = "pjrt")]
-fn load_pjrt(artifacts: &str) -> Result<Rc<dyn Backend>> {
-    Ok(Rc::new(chronicals::backend::pjrt::PjrtBackend::new(
-        artifacts,
-    )?))
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn load_pjrt(_artifacts: &str) -> Result<Rc<dyn Backend>> {
-    bail!(
-        "this binary was built without PJRT support; rebuild with \
-         `cargo build --features pjrt` and vendored xla-rs (DESIGN.md §4.2)"
-    )
-}
-
-fn load_backend_named(name: &str, artifacts: &str) -> Result<Rc<dyn Backend>> {
-    match name {
-        "cpu" => Ok(Rc::new(CpuBackend::new())),
-        "pjrt" => load_pjrt(artifacts),
-        other => bail!("unknown backend '{other}' (expected cpu | pjrt)"),
+/// Worker-thread request: `CHRONICALS_THREADS` env > `--threads` flag
+/// > config value > 0 (backend autodetects). A malformed `--threads`
+/// value is an error, not a silent fallback.
+fn thread_request(args: &Args, cfg_threads: usize) -> Result<usize> {
+    if let Some(n) = config::env_threads() {
+        return Ok(n);
     }
+    if let Some(v) = args.get("threads") {
+        let n: usize = v
+            .parse()
+            .map_err(|_| anyhow!("invalid --threads '{v}' (expected a non-negative integer)"))?;
+        if n > 0 {
+            return Ok(n);
+        }
+        // 0 = explicit autodetect request
+    }
+    Ok(cfg_threads)
 }
 
 fn load_backend(args: &Args) -> Result<Rc<dyn Backend>> {
-    load_backend_named(
+    create_backend(
         args.get("backend").unwrap_or("cpu"),
         args.get("artifacts").unwrap_or("artifacts"),
+        thread_request(args, 0)?,
     )
 }
 
@@ -181,8 +184,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(d) = args.get("artifacts") {
         cfg.artifacts_dir = d.to_string();
     }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.to_string();
+    }
+    // one parser for --threads everywhere (env > flag > config file)
+    cfg.threads = thread_request(args, cfg.threads)?;
 
-    let backend = load_backend_named(args.get("backend").unwrap_or("cpu"), &cfg.artifacts_dir)?;
+    let backend = create_backend(&cfg.backend, &cfg.artifacts_dir, cfg.effective_threads())?;
     println!(
         "training {} on the {} backend for {} steps (packed={}, lr={}, λ={})",
         cfg.executable,

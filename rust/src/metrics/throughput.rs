@@ -1,6 +1,11 @@
 //! Throughput metering with warmup exclusion — the paper's benchmark
 //! methodology (§8): warmup steps excluded, tokens/sec over *real*
 //! (non-padding) tokens, mean ± std over repeated windows.
+//!
+//! The clock seam: `step_begin`/`step_end` read `Instant` for live runs,
+//! while [`ThroughputMeter::record_step`] injects an explicit duration —
+//! that is what the tests use (no `thread::sleep`, no wall-clock flake)
+//! and what replay tooling can feed from recorded traces.
 
 use std::time::Instant;
 
@@ -8,7 +13,6 @@ use std::time::Instant;
 pub struct ThroughputMeter {
     warmup_steps: usize,
     steps_seen: usize,
-    window_start: Option<Instant>,
     tokens: u64,
     real_tokens: u64,
     /// per-step durations (seconds) after warmup
@@ -21,7 +25,6 @@ impl ThroughputMeter {
         ThroughputMeter {
             warmup_steps,
             steps_seen: 0,
-            window_start: None,
             tokens: 0,
             real_tokens: 0,
             step_times: Vec::new(),
@@ -33,19 +36,31 @@ impl ThroughputMeter {
         self.last_step_start = Some(Instant::now());
     }
 
-    /// Record a finished step. `slot_tokens` = B·S, `real_tokens` excludes
-    /// padding (the honest numerator for packed-vs-padded comparisons).
+    /// Record a finished step using the live clock started by
+    /// `step_begin`. `slot_tokens` = B·S, `real_tokens` excludes padding
+    /// (the honest numerator for packed-vs-padded comparisons).
     pub fn step_end(&mut self, slot_tokens: u64, real_tokens: u64) {
-        let now = Instant::now();
+        let dur = self
+            .last_step_start
+            .take()
+            .map(|t0| t0.elapsed().as_secs_f64());
+        self.note_step(dur, slot_tokens, real_tokens);
+    }
+
+    /// Record a finished step with an explicit duration — the
+    /// deterministic injection point (tests, recorded traces). Identical
+    /// warmup/token accounting to `step_end`.
+    pub fn record_step(&mut self, seconds: f64, slot_tokens: u64, real_tokens: u64) {
+        self.note_step(Some(seconds), slot_tokens, real_tokens);
+    }
+
+    fn note_step(&mut self, duration_secs: Option<f64>, slot_tokens: u64, real_tokens: u64) {
         self.steps_seen += 1;
         if self.steps_seen <= self.warmup_steps {
             return;
         }
-        if let Some(t0) = self.last_step_start {
-            self.step_times.push(now.duration_since(t0).as_secs_f64());
-        }
-        if self.window_start.is_none() {
-            self.window_start = Some(now);
+        if let Some(d) = duration_secs {
+            self.step_times.push(d);
         }
         self.tokens += slot_tokens;
         self.real_tokens += real_tokens;
@@ -111,8 +126,7 @@ mod tests {
     fn warmup_excluded() {
         let mut m = ThroughputMeter::new(2);
         for _ in 0..5 {
-            m.step_begin();
-            m.step_end(100, 80);
+            m.record_step(0.001, 100, 80);
         }
         assert_eq!(m.measured_steps(), 3);
         // only 3 post-warmup steps counted
@@ -121,13 +135,43 @@ mod tests {
     }
 
     #[test]
-    fn real_vs_slot_tokens() {
+    fn real_vs_slot_tokens_deterministic() {
+        // injected duration: exact arithmetic, no sleeping, no flake
+        let mut m = ThroughputMeter::new(0);
+        m.record_step(0.005, 1000, 500);
+        assert_eq!(m.tokens_per_sec(), 500.0 / 0.005);
+        assert_eq!(m.slot_tokens_per_sec(), 1000.0 / 0.005);
+        assert!((m.slot_tokens_per_sec() / m.tokens_per_sec() - 2.0).abs() < 1e-12);
+        assert_eq!(m.mean_step_ms(), 5.0);
+    }
+
+    #[test]
+    fn std_over_recorded_windows() {
+        let mut m = ThroughputMeter::new(0);
+        m.record_step(0.004, 100, 100);
+        m.record_step(0.006, 100, 100);
+        assert_eq!(m.measured_steps(), 2);
+        assert!((m.mean_step_ms() - 5.0).abs() < 1e-9);
+        // sample std of {4ms, 6ms} = sqrt(2) ms
+        assert!((m.std_step_ms() - 2.0f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn live_clock_path_still_works() {
         let mut m = ThroughputMeter::new(0);
         m.step_begin();
-        std::thread::sleep(std::time::Duration::from_millis(5));
-        m.step_end(1000, 500);
-        assert!(m.tokens_per_sec() > 0.0);
-        assert!((m.slot_tokens_per_sec() / m.tokens_per_sec() - 2.0).abs() < 1e-9);
+        m.step_end(10, 10);
+        assert_eq!(m.measured_steps(), 1);
+        assert!(m.elapsed() >= 0.0);
+    }
+
+    #[test]
+    fn step_end_without_begin_counts_tokens_only() {
+        let mut m = ThroughputMeter::new(0);
+        m.step_end(10, 5);
+        assert_eq!(m.measured_steps(), 0);
+        assert_eq!(m.tokens, 10);
+        assert_eq!(m.tokens_per_sec(), 0.0);
     }
 
     #[test]

@@ -134,9 +134,57 @@ pub fn memory_table(label: &str, b: &crate::metrics::MemoryBreakdown) -> String 
     )
 }
 
+/// Repo-root location of the machine-readable CPU bench report that the
+/// bench binaries merge their sections into — the single home for this
+/// repo-layout assumption.
+pub fn bench_json_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("the chronicals crate lives inside the workspace root")
+        .join("BENCH_cpu.json")
+}
+
+/// Merge one section into a machine-readable bench JSON file (e.g. the
+/// repo-root `BENCH_cpu.json` the bench binaries maintain): parse the
+/// existing file when present and valid, replace `section`, write back
+/// pretty-printed. Each bench binary owns one section, so running them in
+/// any order converges to a complete report.
+pub fn update_bench_json(
+    path: &std::path::Path,
+    section: &str,
+    value: crate::util::json::Json,
+) -> anyhow::Result<()> {
+    use crate::util::json::{Json, Obj};
+    // A missing file starts a fresh report; an *unparseable* existing file
+    // is an error — silently restarting would discard the other benches'
+    // measured sections.
+    let mut obj = match std::fs::read_to_string(path) {
+        Err(_) => Obj::default(),
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Obj(o)) => o,
+            Ok(_) => anyhow::bail!(
+                "{} exists but is not a JSON object; refusing to overwrite it",
+                path.display()
+            ),
+            Err(e) => anyhow::bail!(
+                "{} exists but failed to parse ({e}); fix or delete it before re-running",
+                path.display()
+            ),
+        },
+    };
+    if let Some(slot) = obj.entries.iter_mut().find(|(k, _)| k == section) {
+        slot.1 = value;
+    } else {
+        obj.insert(section, value);
+    }
+    std::fs::write(path, Json::Obj(obj).to_string_pretty())?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::json::Json;
 
     fn row(label: &str, tps: f64) -> Row {
         Row {
@@ -169,5 +217,26 @@ mod tests {
     fn kernel_table_speedup() {
         let t = kernel_table(&[("RMSNorm".into(), 0.001, 0.007)]);
         assert!(t.contains("7.00x"), "{t}");
+    }
+
+    #[test]
+    fn bench_json_merges_and_replaces_sections() {
+        let path = std::env::temp_dir().join("chronicals_bench_json_test.json");
+        let _ = std::fs::remove_file(&path);
+        let mut o = crate::util::json::Obj::default();
+        o.insert("cpu_tokens_per_sec", Json::Num(1000.0));
+        update_bench_json(&path, "throughput", Json::Obj(o)).unwrap();
+        update_bench_json(&path, "kernels", Json::Num(2.0)).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let obj = j.as_obj().unwrap();
+        assert!(obj.get("throughput").is_some());
+        assert_eq!(obj.get("kernels").unwrap().as_f64(), Some(2.0));
+        update_bench_json(&path, "kernels", Json::Num(3.0)).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.as_obj().unwrap().get("kernels").unwrap().as_f64(), Some(3.0));
+        // a corrupt existing report must be an error, not a silent restart
+        std::fs::write(&path, "{ truncated").unwrap();
+        assert!(update_bench_json(&path, "kernels", Json::Num(4.0)).is_err());
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,45 @@
+//! The no-materialization assertion for the fast CPU backend, in its own
+//! test binary: `scratch::peak_elems()` is a process-global counter, so
+//! isolating this file guarantees no other concurrently running test can
+//! allocate through the fast path between `reset_peak` and the assertion
+//! (integration-test files each get their own process).
+
+use chronicals::backend::cpu::ModelDims;
+use chronicals::backend::cpu_fast::{scratch, FastCpuBackend};
+use chronicals::backend::Backend;
+use chronicals::harness;
+
+/// Run a full fast train step on a geometry where `[B, Hq, S, S]` and
+/// `[T, V]` are large, and check the peak single f32 allocation recorded
+/// by the fast backend's scratch accounting stays at the O(T·d_ff)
+/// activation scale — far below either forbidden buffer.
+#[test]
+fn fast_path_never_materializes_probs_or_logits() {
+    let dims =
+        ModelDims { vocab: 256, d_model: 32, n_layers: 2, n_heads: 4, n_kv_heads: 2, d_ff: 64 };
+    let (batch, seq) = (4usize, 128usize);
+    let t = batch * seq;
+    let bhss = batch * dims.n_heads * seq * seq; // 262144: the attention tensor
+    let tv = t * dims.vocab; // 131072: the logits tensor
+    let activation_ceiling = t * dims.d_ff.max(dims.d_model); // 32768: largest legit buffer
+
+    let fast = FastCpuBackend::custom(dims, batch, seq, 2);
+    let exe = "train_step_chronicals";
+    let spec = fast.manifest().get(exe).unwrap().clone();
+    let (_tok, exs) = harness::build_corpus(384, 5, spec.model_config.vocab, 96);
+    let batches = harness::make_batches(fast.manifest(), exe, &exs, true).unwrap();
+    let mut state = fast.init_state("init_chronicals", 5).unwrap();
+    let ub = fast.upload_batch(exe, &batches[0]).unwrap();
+
+    scratch::reset_peak();
+    let out = fast.train_step(exe, &mut state, &ub, 1, 1e-3, 1e-3).unwrap();
+    assert!(out.grad_norm > 0.0, "step must actually train");
+    let peak = scratch::peak_elems();
+    assert!(peak > 0, "scratch accounting saw no allocations");
+    assert!(
+        peak <= activation_ceiling,
+        "peak single allocation {peak} exceeds the activation ceiling {activation_ceiling}"
+    );
+    assert!(peak < bhss / 4, "peak {peak} is within 4x of the [B,Hq,S,S] tensor ({bhss})");
+    assert!(peak < tv / 2, "peak {peak} is within 2x of the [T,V] tensor ({tv})");
+}

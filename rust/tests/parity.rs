@@ -1,0 +1,266 @@
+//! Cross-backend parity suite: `FastCpuBackend` (tiled/threaded fused
+//! kernels) against `CpuBackend` (the bitwise-deterministic reference
+//! oracle) through the public `Backend` API only.
+//!
+//! Tolerance policy (DESIGN.md §4.3): reassociation in the fast kernels
+//! legitimately changes low-order bits, so parity is loss |Δ| ≤ 1e-4 and
+//! grad-norm relative Δ ≤ 1e-3 per step over several steps — while the
+//! fast backend itself must be bitwise deterministic run-to-run and across
+//! thread counts.
+//!
+//! Also here: the online-softmax/tiled-logsumexp unit check against the
+//! materialized reference. The allocation-accounting test that proves the
+//! fast path never materializes `[B, Hq, S, S]` or `[T, V]` lives in its
+//! own integration-test file (`no_materialization.rs`) because it reads a
+//! process-global peak counter — an own test binary means no races with
+//! concurrently running tests that also allocate through the fast path.
+
+use chronicals::backend::cpu::math;
+use chronicals::backend::cpu::CpuBackend;
+use chronicals::backend::cpu_fast::{cce, FastCpuBackend};
+use chronicals::backend::{Backend, DeviceBatch, DeviceState};
+use chronicals::batching::Batch;
+use chronicals::harness;
+use chronicals::util::rng::Rng;
+use std::rc::Rc;
+
+const LOSS_TOL: f32 = 1e-4;
+const GRAD_NORM_REL_TOL: f32 = 1e-3;
+
+/// Same corpus/batches for an executable on a backend's manifest.
+fn batches_for(be: &dyn Backend, exe: &str, seed: u64) -> Vec<Batch> {
+    let spec = be.manifest().get(exe).unwrap().clone();
+    let (_tok, exs) = harness::build_corpus(192, seed, spec.model_config.vocab, 48);
+    harness::make_batches(be.manifest(), exe, &exs, true).unwrap()
+}
+
+/// Drive `steps` steps of `exe` on one backend, returning per-step
+/// (loss, grad_norm) plus the final parameters.
+fn drive(
+    be: &dyn Backend,
+    exe: &str,
+    init: &str,
+    seed: i32,
+    steps: u64,
+    lr: f32,
+    lr_b: f32,
+) -> (Vec<(f32, f32)>, Vec<chronicals::runtime::HostTensor>) {
+    let batches = batches_for(be, exe, seed as u64);
+    let mut state = be.init_state(init, seed).unwrap();
+    let ub = be.upload_batch(exe, &batches[0]).unwrap();
+    let mut out = Vec::new();
+    for step in 1..=steps {
+        let o = be.train_step(exe, &mut state, &ub, step, lr, lr_b).unwrap();
+        out.push((o.loss, o.grad_norm));
+    }
+    let params = be.state_params(&state).unwrap();
+    (out, params)
+}
+
+fn assert_parity(reference: &[(f32, f32)], fast: &[(f32, f32)], what: &str) {
+    assert_eq!(reference.len(), fast.len());
+    for (i, ((rl, rg), (fl, fg))) in reference.iter().zip(fast).enumerate() {
+        assert!(rl.is_finite() && fl.is_finite(), "{what} step {i}: non-finite loss");
+        assert!(
+            (rl - fl).abs() <= LOSS_TOL * (1.0 + rl.abs()),
+            "{what} step {i}: loss {fl} vs reference {rl}"
+        );
+        assert!(*rg > 0.0, "{what} step {i}: reference grad_norm zero");
+        let rel = (rg - fg).abs() / rg.max(1e-12);
+        assert!(
+            rel <= GRAD_NORM_REL_TOL,
+            "{what} step {i}: grad_norm {fg} vs reference {rg} (rel {rel})"
+        );
+    }
+}
+
+#[test]
+fn full_ft_parity_over_several_steps() {
+    let reference = CpuBackend::new();
+    let fast = FastCpuBackend::with_threads(3);
+    let exe = "train_step_chronicals";
+    let (r, rp) = drive(&reference, exe, "init_chronicals", 42, 6, 5e-3, 5e-3);
+    let (f, fp) = drive(&fast, exe, "init_chronicals", 42, 6, 5e-3, 5e-3);
+    assert_parity(&r, &f, "full_ft");
+    // Per-parameter agreement after 6 AdamW steps. The bound is loose on
+    // purpose: AdamW's sign-like first step means an element whose true
+    // gradient is ~0 can flip sign between backends and drift by ~lr per
+    // step — legitimate float divergence, not a bug. Layout mix-ups and
+    // missing scale factors still blow far past this.
+    assert_eq!(rp.len(), fp.len());
+    for (ti, (a, b)) in rp.iter().zip(&fp).enumerate() {
+        assert_eq!(a.shape(), b.shape(), "param {ti} shape");
+        for (ei, (x, y)) in a.as_f32().unwrap().iter().zip(b.as_f32().unwrap()).enumerate() {
+            assert!((x - y).abs() < 0.05, "param {ti}[{ei}]: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn lora_and_lora_plus_parity() {
+    let reference = CpuBackend::new();
+    let fast = FastCpuBackend::with_threads(2);
+    for (label, lr_b_mul) in [("lora", 1.0f32), ("lora_plus(λ=16)", 16.0f32)] {
+        let lr = 2e-3f32;
+        let (r, _) = drive(&reference, "train_step_lora", "init_lora", 7, 6, lr, lr * lr_b_mul);
+        let (f, _) = drive(&fast, "train_step_lora", "init_lora", 7, 6, lr, lr * lr_b_mul);
+        assert_parity(&r, &f, label);
+    }
+}
+
+#[test]
+fn broken_mode_parity_zero_grad() {
+    let reference = CpuBackend::new();
+    let fast = FastCpuBackend::with_threads(2);
+    let (r, _) = drive(&reference, "train_step_lora_broken", "init_lora", 3, 3, 1e-3, 1e-3);
+    let (f, _) = drive(&fast, "train_step_lora_broken", "init_lora", 3, 3, 1e-3, 1e-3);
+    for ((rl, rg), (fl, fg)) in r.iter().zip(&f) {
+        assert_eq!(*rg, 0.0);
+        assert_eq!(*fg, 0.0);
+        assert!((rl - fl).abs() <= LOSS_TOL * (1.0 + rl.abs()), "{fl} vs {rl}");
+    }
+}
+
+/// `threads = 1` must be fully single-threaded and run-to-run
+/// deterministic; by construction the fast backend's bits are also
+/// invariant to the thread count — assert both.
+#[test]
+fn threads_one_is_deterministic_and_thread_count_invariant() {
+    let run = |threads: usize| {
+        let fast = FastCpuBackend::with_threads(threads);
+        let (steps, _) = drive(&fast, "train_step_chronicals", "init_chronicals", 11, 5, 5e-3, 5e-3);
+        steps
+            .iter()
+            .map(|(l, g)| (l.to_bits(), g.to_bits()))
+            .collect::<Vec<_>>()
+    };
+    let once = run(1);
+    let again = run(1);
+    assert_eq!(once, again, "threads=1 runs diverged");
+    assert_eq!(once, run(4), "thread count changed the bits");
+}
+
+/// Online-softmax unit test: the tiled streaming logsumexp must match the
+/// materialized softmax/logsumexp on random logits, including vocab sizes
+/// that are not a multiple of the tile.
+#[test]
+fn tiled_logsumexp_matches_materialized_reference() {
+    let (t, d) = (13usize, 8usize);
+    for v in [32usize, 64, 77, 200] {
+        let mut rng = Rng::new(v as u64);
+        let hf: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32 * 1.5).collect();
+        let w: Vec<f32> = (0..v * d).map(|_| rng.normal() as f32 * 0.4).collect();
+        let targets: Vec<i32> =
+            (0..t).map(|i| if i % 5 == 4 { -1 } else { rng.range(0, v) as i32 }).collect();
+
+        // materialized reference: full [t, v] logits + softmax buffer
+        let mut logits = vec![0.0f32; t * v];
+        math::linear_fwd(&hf, &w, t, d, v, &mut logits);
+        let mut probs = vec![0.0f32; t * v];
+        let (want_loss, want_nv) = math::softmax_xent(&logits, &targets, t, v, &mut probs);
+
+        let mut lse = vec![0.0f32; t];
+        let (loss, nv) = cce::cce_loss_fwd(&hf, &w, &targets, t, d, v, &mut lse, 2);
+        assert_eq!(nv, want_nv, "v={v}");
+        assert!(
+            (loss - want_loss).abs() < 1e-4 * (1.0 + want_loss.abs()),
+            "v={v}: {loss} vs {want_loss}"
+        );
+        // per-row logsumexp against the direct computation
+        for ti in 0..t {
+            if targets[ti] < 0 {
+                continue;
+            }
+            let row = &logits[ti * v..(ti + 1) * v];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let direct = row.iter().map(|z| (z - m).exp()).sum::<f32>().ln() + m;
+            assert!((lse[ti] - direct).abs() < 1e-4, "v={v} row {ti}");
+        }
+    }
+}
+
+/// Checkpoints are interchangeable: the two CPU backends share the state
+/// layout, so params trained on the fast backend restore into the
+/// reference backend and evaluate identically (same forward oracle).
+#[test]
+fn fast_checkpoint_restores_into_reference_backend() {
+    let fast = FastCpuBackend::with_threads(2);
+    let reference = CpuBackend::new();
+    let exe = "train_step_chronicals";
+    let batches = batches_for(&fast, exe, 21);
+    let mut state = fast.init_state("init_chronicals", 21).unwrap();
+    let ub = fast.upload_batch(exe, &batches[0]).unwrap();
+    for step in 1..=4u64 {
+        fast.train_step(exe, &mut state, &ub, step, 5e-3, 5e-3).unwrap();
+    }
+    let params = fast.state_params(&state).unwrap();
+    let fast_eval = fast.eval_loss("eval_chronicals", &state, &batches[0]).unwrap();
+
+    let mut ref_state = reference.init_state("init_chronicals", 999).unwrap();
+    reference.load_params(&mut ref_state, &params).unwrap();
+    let ref_eval = reference.eval_loss("eval_chronicals", &ref_state, &batches[0]).unwrap();
+    assert!(
+        (fast_eval - ref_eval).abs() < 1e-4 * (1.0 + ref_eval.abs()),
+        "{fast_eval} vs {ref_eval}"
+    );
+}
+
+/// The fast backend is as strict as the reference about geometry and
+/// family mismatches (same guards, same error surface).
+#[test]
+fn fast_backend_rejects_mismatches_like_reference() {
+    let fast = FastCpuBackend::with_threads(1);
+    // wrong geometry refused at staging
+    let exs = vec![chronicals::data::TokenizedExample {
+        tokens: vec![4, 5, 6, 7],
+        targets: vec![5, 6, 7, -1],
+    }];
+    let small = chronicals::batching::padded_batches(&exs, 1, 8).remove(0);
+    assert!(fast.upload_batch("train_step_chronicals", &small).is_err());
+    // family mismatch refused at step time
+    let mut full_state = fast.init_state("init_chronicals", 1).unwrap();
+    let batches = batches_for(&fast, "train_step_lora", 1);
+    let ub = fast.upload_batch("train_step_lora", &batches[0]).unwrap();
+    assert!(fast.train_step("train_step_lora", &mut full_state, &ub, 1, 1e-3, 1e-3).is_err());
+}
+
+/// The harness end-to-end path works on the fast backend through the same
+/// `run_variant` workflow the CLI uses (trainer, verifier, metering).
+#[test]
+fn run_variant_trains_on_fast_backend() {
+    let be: Rc<dyn Backend> = Rc::new(FastCpuBackend::with_threads(2));
+    let cfg = chronicals::config::RunConfig {
+        executable: "train_step_chronicals".into(),
+        steps: 10,
+        warmup_steps: 0,
+        lr: 5e-3,
+        packed: true,
+        corpus_examples: 192,
+        max_seq: 48,
+        ..chronicals::config::RunConfig::default()
+    };
+    let s = harness::run_variant(&be, &cfg).unwrap();
+    assert!(s.verification.is_training, "{:?}", s.verification.failures);
+    assert!(s.last_loss < s.first_loss, "{} -> {}", s.first_loss, s.last_loss);
+}
+
+/// DeviceState/DeviceBatch created by one CPU backend are accepted by the
+/// other (shared representation) — documented contract, pinned here.
+#[test]
+fn cpu_device_handles_are_shared_representation() {
+    let fast = FastCpuBackend::with_threads(1);
+    let reference = CpuBackend::new();
+    let state = fast.init_state("init_chronicals", 2).unwrap();
+    match &state {
+        DeviceState::Cpu(_) => {}
+        #[allow(unreachable_patterns)]
+        _ => panic!("fast backend must produce DeviceState::Cpu"),
+    }
+    let batches = batches_for(&reference, "train_step_chronicals", 2);
+    let ub = reference.upload_batch("train_step_chronicals", &batches[0]).unwrap();
+    match &ub {
+        DeviceBatch::Cpu(_) => {}
+        #[allow(unreachable_patterns)]
+        _ => panic!("reference backend must produce DeviceBatch::Cpu"),
+    }
+}
