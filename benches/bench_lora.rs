@@ -1,28 +1,35 @@
 //! LoRA training benchmarks — regenerates paper Table 3 (LoRA r=32:
 //! Unsloth-shaped naive baseline vs Chronicals LoRA vs LoRA+ λ=16) and the
-//! Fig. 10 broken-"fast-mode" row, each with gradient-flow verification.
+//! Fig. 10 broken-"fast-mode" row, each with gradient-flow verification,
+//! through the Backend trait + typed Session tasks (no artifacts needed on
+//! the CPU backends).
 //!
-//! Run: `cargo bench --bench bench_lora`   Env: STEPS (default 12).
+//! Writes the per-row tokens/sec into the repo-root `BENCH_cpu.json`
+//! (section `"lora"`).
+//!
+//! Run: `cargo bench --bench bench_lora`
+//! Env: STEPS (default 12), BACKEND (default cpu-fast), CHRONICALS_THREADS.
 
+use chronicals::backend::{create_backend, Backend};
 use chronicals::harness;
 use chronicals::report;
-use chronicals::runtime::Runtime;
-use std::rc::Rc;
+use chronicals::util::json::{Json, Obj};
 
 fn main() {
     let steps: u64 = std::env::var("STEPS")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(12);
-    let rt = match Runtime::new("artifacts") {
-        Ok(rt) => Rc::new(rt),
+    let backend_name = std::env::var("BACKEND").unwrap_or_else(|_| "cpu-fast".into());
+    let be = match create_backend(&backend_name, "artifacts", 0) {
+        Ok(be) => be,
         Err(e) => {
-            eprintln!("bench_lora skipped: {e:#} (run `make artifacts`)");
+            eprintln!("bench_lora skipped: {e:#}");
             return;
         }
     };
-    println!("bench_lora: {steps} steps per config\n");
-    match harness::lora_comparison(&rt, steps) {
+    println!("bench_lora: {steps} steps per config (backend: {})\n", be.name());
+    match harness::lora_comparison(&be, steps) {
         Ok(rows) => {
             println!(
                 "{}",
@@ -37,6 +44,32 @@ fn main() {
                  11,699 tok/s (4.10x). The broken row reproduces Fig. 10: highest\n\
                  tok/s, grad_norm exactly 0 — excluded by verification."
             );
+            let baseline = rows
+                .iter()
+                .find(|r| r.label == "LoRA naive (Unsloth-shaped)")
+                .map(|r| r.tokens_per_sec)
+                .unwrap_or(0.0);
+            let mut per_row = Obj::default();
+            for r in &rows {
+                let mut entry = Obj::default();
+                entry.insert("tokens_per_sec", Json::Num(r.tokens_per_sec));
+                entry.insert("mean_step_ms", Json::Num(r.mean_step_ms));
+                entry.insert(
+                    "speedup_vs_naive",
+                    Json::Num(if baseline > 0.0 { r.tokens_per_sec / baseline } else { 0.0 }),
+                );
+                entry.insert("status", Json::Str(r.status.clone()));
+                per_row.insert(r.label.clone(), Json::Obj(entry));
+            }
+            let mut section = Obj::default();
+            section.insert("backend", Json::Str(be.name().to_string()));
+            section.insert("steps", Json::Num(steps as f64));
+            section.insert("rows", Json::Obj(per_row));
+            let path = report::bench_json_path();
+            match report::update_bench_json(&path, "lora", Json::Obj(section)) {
+                Ok(()) => println!("wrote LoRA rows to {}", path.display()),
+                Err(e) => eprintln!("could not update {}: {e:#}", path.display()),
+            }
         }
         Err(e) => eprintln!("bench_lora failed: {e:#}"),
     }

@@ -1,11 +1,17 @@
 //! Packing benchmarks — regenerates paper Fig. 18 (packing efficiency) and
 //! Prop. 14 (padding-waste reduction), and times the BFD implementation
-//! itself (the §S4.2 "under 2 seconds for Alpaca-52k" claim).
+//! itself (the §S4.2 "under 2 seconds for Alpaca-52k" claim). Pure host
+//! code: no backend or artifacts needed.
+//!
+//! Writes the headline numbers into the repo-root `BENCH_cpu.json`
+//! (section `"packing"`).
 //!
 //! Run: `cargo bench --bench bench_packing`
 
 use chronicals::harness;
 use chronicals::packing::*;
+use chronicals::report;
+use chronicals::util::json::{Json, Obj};
 use chronicals::util::rng::Rng;
 use std::time::Instant;
 
@@ -22,16 +28,16 @@ fn main() {
         .collect();
     let t0 = Instant::now();
     let p = best_fit_decreasing(&lengths, 2048);
-    let dt = t0.elapsed();
+    let bfd_ms = t0.elapsed().as_secs_f64() * 1e3;
     println!(
-        "BFD over 52,000 sequences: {:.1} ms -> {} bins, {:.1}% efficiency",
-        dt.as_secs_f64() * 1e3,
+        "BFD over 52,000 sequences: {bfd_ms:.1} ms -> {} bins, {:.1}% efficiency",
         p.n_bins(),
         p.efficiency() * 100.0
     );
     println!("(paper §S4.2: 'completes in under 2 seconds on a single CPU core')");
 
     // algorithm scaling comparison
+    let mut algo_ms = Obj::default();
     println!("\n| n       | BFD ms | FFD ms | NF ms |");
     println!("|---------|--------|--------|-------|");
     for n in [1_000usize, 10_000, 52_000] {
@@ -41,12 +47,27 @@ fn main() {
             let _ = f(ls, 2048);
             t.elapsed().as_secs_f64() * 1e3
         };
-        println!(
-            "| {:<7} | {:>6.1} | {:>6.1} | {:>5.1} |",
-            n,
+        let (b, f, nf) = (
             time(&best_fit_decreasing),
             time(&first_fit_decreasing),
-            time(&next_fit)
+            time(&next_fit),
         );
+        println!("| {n:<7} | {b:>6.1} | {f:>6.1} | {nf:>5.1} |");
+        let mut row = Obj::default();
+        row.insert("bfd_ms", Json::Num(b));
+        row.insert("ffd_ms", Json::Num(f));
+        row.insert("next_fit_ms", Json::Num(nf));
+        algo_ms.insert(format!("n_{n}"), Json::Obj(row));
+    }
+
+    let mut section = Obj::default();
+    section.insert("alpaca_52k_bfd_ms", Json::Num(bfd_ms));
+    section.insert("alpaca_52k_bins", Json::Num(p.n_bins() as f64));
+    section.insert("alpaca_52k_efficiency", Json::Num(p.efficiency()));
+    section.insert("scaling", Json::Obj(algo_ms));
+    let path = report::bench_json_path();
+    match report::update_bench_json(&path, "packing", Json::Obj(section)) {
+        Ok(()) => println!("\nwrote packing numbers to {}", path.display()),
+        Err(e) => eprintln!("could not update {}: {e:#}", path.display()),
     }
 }

@@ -1,10 +1,15 @@
 //! Quantization + summation benchmarks — regenerates the paper's §S11/§S16
 //! error tables (int8 Eq. 18, FP8 Prop. 12/Thm. 11) and the §S2.4 Kahan
-//! accuracy/cost trade-off.
+//! accuracy/cost trade-off. Pure host code: no backend or artifacts needed.
+//!
+//! Writes the headline numbers into the repo-root `BENCH_cpu.json`
+//! (section `"quant"`).
 //!
 //! Run: `cargo bench --bench bench_quant`
 
 use chronicals::quant::*;
+use chronicals::report;
+use chronicals::util::json::{Json, Obj};
 use chronicals::util::rng::Rng;
 use std::time::Instant;
 
@@ -12,8 +17,10 @@ fn main() {
     let mut rng = Rng::new(88);
     let n = 1 << 20;
     let x: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.1) as f32).collect();
+    let mut section = Obj::default();
 
     // int8 block-wise: error + throughput at the paper's block sizes
+    let mut int8 = Obj::default();
     println!("| int8 block | max err     | bound α/127 | quantize MB/s |");
     println!("|------------|-------------|-------------|---------------|");
     for block in [64usize, 128, 2048] {
@@ -27,17 +34,24 @@ fn main() {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let mb_s = (n * 4) as f64 / dt / 1e6;
         println!(
             "| {:<10} | {:<11.3e} | {:<11.3e} | {:<13.0} |",
             block,
             err,
             amax / 127.0,
-            (n * 4) as f64 / dt / 1e6
+            mb_s
         );
+        let mut row = Obj::default();
+        row.insert("max_err", Json::Num(err as f64));
+        row.insert("quantize_mb_per_s", Json::Num(mb_s));
+        int8.insert(format!("block_{block}"), Json::Obj(row));
     }
+    section.insert("int8", Json::Obj(int8));
 
     // FP8 formats: measured SNR vs the Thm. 11 formula (the formula is the
     // uniform-quantization lower bound; measured SNR exceeds it)
+    let mut fp8 = Obj::default();
     println!("\n| format | measured SNR dB | formula dB | max rel err |");
     println!("|--------|-----------------|------------|-------------|");
     for fmt in [Fp8Format::E4M3, Fp8Format::E5M2] {
@@ -64,7 +78,13 @@ fn main() {
             fmt.snr_db(),
             rel
         );
+        let mut row = Obj::default();
+        row.insert("snr_db", Json::Num(snr));
+        row.insert("formula_db", Json::Num(fmt.snr_db()));
+        row.insert("max_rel_err", Json::Num(rel as f64));
+        fp8.insert(format!("{fmt:?}"), Json::Obj(row));
     }
+    section.insert("fp8", Json::Obj(fp8));
 
     // Kahan vs naive: accuracy and cost on gradient-accumulation-shaped data
     let adversarial: Vec<f32> = std::iter::once(1e8f32)
@@ -87,6 +107,12 @@ fn main() {
         t_k / t_n.max(1e-9),
         ((ns as f64 - exact).abs() / (ks as f64 - exact).abs().max(1e-12)).max(1.0)
     );
+    let mut kahan = Obj::default();
+    kahan.insert("kahan_err", Json::Num((ks as f64 - exact).abs()));
+    kahan.insert("naive_err", Json::Num((ns as f64 - exact).abs()));
+    kahan.insert("kahan_ms", Json::Num(t_k * 1e3));
+    kahan.insert("naive_ms", Json::Num(t_n * 1e3));
+    section.insert("kahan", Json::Obj(kahan));
 
     // delayed-scaler stability (paper §S16.2/Prop. 25): with noisy per-step
     // amax, immediate scaling jitters every step (oscillating quantization
@@ -114,4 +140,14 @@ fn main() {
          FP8 loss spikes 73%)",
         (1.0 - jd as f64 / ji as f64) * 100.0
     );
+    let mut scaler = Obj::default();
+    scaler.insert("immediate_jitter", Json::Num(ji as f64));
+    scaler.insert("delayed_jitter", Json::Num(jd as f64));
+    section.insert("delayed_scaling", Json::Obj(scaler));
+
+    let path = report::bench_json_path();
+    match report::update_bench_json(&path, "quant", Json::Obj(section)) {
+        Ok(()) => println!("\nwrote quant numbers to {}", path.display()),
+        Err(e) => eprintln!("could not update {}: {e:#}", path.display()),
+    }
 }

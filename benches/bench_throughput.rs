@@ -16,10 +16,10 @@
 use chronicals::backend::cpu::CpuBackend;
 use chronicals::backend::cpu_fast::FastCpuBackend;
 use chronicals::backend::Backend;
-use chronicals::config::RunConfig;
 use chronicals::coordinator::TrainSummary;
 use chronicals::harness;
 use chronicals::report::{self, Row};
+use chronicals::session::{DataSource, PackingStrategy, SessionBuilder, Task};
 use chronicals::util::json::{Json, Obj};
 use std::rc::Rc;
 
@@ -28,24 +28,21 @@ use std::rc::Rc;
 const BATCH: usize = 4;
 const SEQ: usize = 128;
 
-fn bench_cfg(exe: &str, steps: u64) -> RunConfig {
-    RunConfig {
-        executable: exe.into(),
-        steps,
-        warmup_steps: 2,
-        lr: 5e-3,
-        packed: true,
-        corpus_examples: 384,
-        max_seq: 96,
-        ..RunConfig::default()
-    }
-}
-
-fn run(backend: &Rc<dyn Backend>, exe: &str, steps: u64) -> Option<TrainSummary> {
-    match harness::run_variant(backend, &bench_cfg(exe, steps)) {
-        Ok(s) => Some(s),
+fn run(backend: &Rc<dyn Backend>, task: Task, steps: u64) -> Option<TrainSummary> {
+    let result = SessionBuilder::new()
+        .task(task.clone())
+        .steps(steps)
+        .meter_warmup(2)
+        .lr(5e-3)
+        .packing(PackingStrategy::Bfd)
+        .data(DataSource::synthetic(384, 42, 96))
+        .on_backend(backend.clone())
+        .build()
+        .and_then(|mut session| session.run());
+    match result {
+        Ok(r) => Some(r.summary),
         Err(e) => {
-            eprintln!("{exe} on {} failed: {e:#}", backend.name());
+            eprintln!("{task} on {} failed: {e:#}", backend.name());
             None
         }
     }
@@ -73,8 +70,9 @@ fn main() {
     cfg_obj.insert("threads", Json::Num(threads as f64));
     section.insert("config", Json::Obj(cfg_obj));
 
-    for (mode, exe) in [("full_ft", "train_step_chronicals"), ("lora", "train_step_lora")] {
-        let (Some(r), Some(f)) = (run(&reference, exe, steps), run(&fast, exe, steps)) else {
+    for (mode, task) in [("full_ft", Task::FullFinetune), ("lora", Task::lora())] {
+        let (Some(r), Some(f)) =
+            (run(&reference, task.clone(), steps), run(&fast, task, steps)) else {
             continue;
         };
         let rows = vec![

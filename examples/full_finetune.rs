@@ -1,22 +1,18 @@
 //! End-to-end full fine-tuning driver (the DESIGN.md §5 "E2E validation"
-//! experiment): train the `e2e`-scale transformer on the synthetic
-//! instruction corpus for a few hundred steps, logging the loss curve,
-//! throughput and verification status, then checkpoint the weights.
+//! experiment): train the reference-substrate transformer on the synthetic
+//! instruction corpus for a few hundred steps on the fast CPU backend,
+//! logging the loss curve, throughput and verification status, then
+//! checkpoint the weights (f32 + int8).
 //!
 //! Run: `cargo run --release --example full_finetune -- [steps] [out.csv]`
 //! Defaults: 300 steps, loss curve written to e2e_loss_curve.csv.
-//! Recorded in EXPERIMENTS.md §E2E.
 
-use chronicals::batching::packed_batches;
-use chronicals::checkpoint;
-use chronicals::coordinator::Trainer;
-use chronicals::harness;
+use chronicals::backend::Backend;
+use chronicals::checkpoint::{self, Codec};
 use chronicals::metrics::mfu_paper_scale;
-use chronicals::optim::LrSchedule;
-use chronicals::runtime::{HostTensor, Runtime, TrainState};
+use chronicals::session::{BackendSpec, DataSource, Schedule, SessionBuilder, Task};
 use chronicals::util::commas;
 use std::io::Write;
-use std::rc::Rc;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -26,40 +22,38 @@ fn main() -> anyhow::Result<()> {
         .cloned()
         .unwrap_or_else(|| "e2e_loss_curve.csv".to_string());
 
-    let rt = Rc::new(Runtime::new("artifacts")?);
-    let exe = "train_step_e2e";
-    let spec = rt.manifest.get(exe)?.clone();
+    let mut session = SessionBuilder::new()
+        .task(Task::FullFinetune)
+        .steps(steps)
+        .lr(2e-3)
+        .schedule(Schedule::WarmupCosine { warmup: steps / 20 })
+        .meter_warmup(3)
+        .seed(42)
+        .data(DataSource::synthetic(4096, 42, 1024))
+        .backend(BackendSpec::CpuFast { threads: 0 })
+        .build()?;
+
+    let spec = session.resolved().spec.clone();
     println!(
-        "e2e model: {} params ({} layers, d={}, vocab={}), batch {}x{}",
+        "model: {} params ({} layers, d={}, vocab={}), batch {}x{} on {}",
         commas(spec.param_count),
         spec.model_config.n_layers,
         spec.model_config.d_model,
         spec.model_config.vocab,
         spec.batch,
-        spec.seq
+        spec.seq,
+        session.backend().name()
     );
 
-    // corpus: enough examples that batches don't repeat too often
-    let (_tok, exs) = harness::build_corpus(4096, 42, spec.model_config.vocab, 1024);
-    let batches = packed_batches(&exs, spec.batch, spec.seq);
-    println!(
-        "corpus: {} examples -> {} packed batches (density {:.1}%)",
-        exs.len(),
-        batches.len(),
-        batches.iter().map(|b| b.density()).sum::<f64>() / batches.len() as f64 * 100.0
-    );
-
-    let init = harness::resolve_init(&rt, exe, "init_e2e")?;
-    let state = TrainState::init(&rt, &init, 42)?;
-    let schedule = LrSchedule::warmup_cosine(3e-4 * 2.0, steps / 20, steps, 1.0);
-    let mut trainer = Trainer::new(rt.clone(), exe, state, schedule, 3)?;
-
-    println!("training for {steps} steps...");
+    println!("training for {steps} steps (progress prints at the end — run() is one call)...");
     let t0 = std::time::Instant::now();
+    let report = session.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let s = &report.summary;
+
     let mut csv = String::from("step,loss,grad_norm,ms\n");
-    for i in 0..steps {
-        let b = &batches[(i % batches.len() as u64) as usize];
-        let rec = trainer.step(b)?;
+    println!("loss curve (sampled every 20 steps):");
+    for rec in session.records() {
         csv.push_str(&format!(
             "{},{:.6},{:.6},{:.2}\n",
             rec.step, rec.loss, rec.grad_norm, rec.wall_ms
@@ -71,13 +65,10 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
-    let wall = t0.elapsed().as_secs_f64();
-    let s = trainer.summary();
-
     std::fs::File::create(&csv_path)?.write_all(csv.as_bytes())?;
     println!("\nloss curve written to {csv_path}");
 
-    println!("\n=== e2e summary ===");
+    println!("\n=== summary ===");
     println!("wall time:   {wall:.1}s for {steps} steps");
     println!("loss:        {:.4} -> {:.4}", s.first_loss, s.last_loss);
     println!(
@@ -86,26 +77,28 @@ fn main() -> anyhow::Result<()> {
         commas(s.slot_tokens_per_sec as u64)
     );
     println!(
+        "data:        {} examples -> {} batches planned, {} staged{}",
+        report.examples,
+        report.batches_planned,
+        report.batches_staged,
+        if report.tail_padded { " (tail padded)" } else { "" }
+    );
+    println!(
         "MFU*:        {:.2}% (A100-peak-referenced comparator)",
         mfu_paper_scale(s.param_count, s.tokens_per_sec) * 100.0
     );
     println!("verification: {}", s.verification.status());
 
     // checkpoint the trained parameters (f32 + int8 for the size comparison)
-    let params = trainer.state.params_to_host()?;
-    let tensors: Vec<HostTensor> = params
-        .iter()
-        .map(HostTensor::from_literal)
-        .collect::<Result<_, _>>()?;
-    checkpoint::save("e2e_final.ckpt", &tensors, checkpoint::Codec::F32)?;
-    checkpoint::save("e2e_final_int8.ckpt", &tensors, checkpoint::Codec::Int8)?;
+    session.save_checkpoint("e2e_final.ckpt", Codec::F32)?;
+    session.save_checkpoint("e2e_final_int8.ckpt", checkpoint::Codec::Int8)?;
     let f32_sz = std::fs::metadata("e2e_final.ckpt")?.len();
     let int8_sz = std::fs::metadata("e2e_final_int8.ckpt")?.len();
     println!(
-        "checkpoints: f32 {} MiB, int8 {} MiB ({:.2}x smaller)",
-        f32_sz >> 20,
-        int8_sz >> 20,
-        f32_sz as f64 / int8_sz as f64
+        "checkpoints: f32 {} KiB, int8 {} KiB ({:.2}x smaller)",
+        f32_sz >> 10,
+        int8_sz >> 10,
+        f32_sz as f64 / int8_sz.max(1) as f64
     );
 
     anyhow::ensure!(s.verification.is_training);

@@ -1,40 +1,32 @@
 //! LoRA+ convergence study (paper Fig. 17 + §5): identical runs at
 //! λ = η_B/η_A ∈ {1, 4, 16, 32}, same seed and data order, comparing the
-//! loss trajectory. The paper's claim: λ=16 reaches a given loss ~1.6x
-//! faster than λ=1; λ=32 shows no further gain.
+//! loss trajectory. The paper's claim: λ=16 reaches a given loss faster
+//! than λ=1; λ=32 shows no further gain.
 //!
 //! Run: `cargo run --release --example lora_plus -- [steps]`
 
-use chronicals::batching::packed_batches;
-use chronicals::coordinator::Trainer;
-use chronicals::harness;
-use chronicals::optim::LrSchedule;
-use chronicals::runtime::{Runtime, TrainState};
-use std::rc::Rc;
+use chronicals::session::{DataSource, SessionBuilder, Task};
 
 fn main() -> anyhow::Result<()> {
     let steps: u64 = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(40);
-    let rt = Rc::new(Runtime::new("artifacts")?);
-    let exe = "train_step_lora";
-    let spec = rt.manifest.get(exe)?.clone();
-    let (_tok, exs) = harness::build_corpus(1024, 7, spec.model_config.vocab, 1024);
-    let batches = packed_batches(&exs, spec.batch, spec.seq);
 
     let ratios = [1.0, 4.0, 16.0, 32.0];
     let mut curves: Vec<Vec<f32>> = Vec::new();
     for &ratio in &ratios {
-        let init = harness::resolve_init(&rt, exe, "init_lora")?;
-        let state = TrainState::init(&rt, &init, 7)?;
-        let schedule = LrSchedule::constant(1e-3, ratio);
-        let mut trainer = Trainer::new(rt.clone(), exe, state, schedule, 0)?;
-        let mut curve = Vec::new();
-        for i in 0..steps {
-            let b = &batches[(i % batches.len() as u64) as usize];
-            curve.push(trainer.step(b)?.loss);
-        }
+        // same seed and data source every run: only λ differs
+        let mut session = SessionBuilder::new()
+            .task(Task::lora_plus(ratio))
+            .steps(steps)
+            .lr(1e-3)
+            .seed(7)
+            .meter_warmup(0)
+            .data(DataSource::synthetic(1024, 7, 1024))
+            .build()?;
+        session.run()?;
+        let curve: Vec<f32> = session.records().iter().map(|r| r.loss).collect();
         println!(
             "λ = {:>4}: loss {:.4} -> {:.4}",
             ratio,
@@ -48,9 +40,13 @@ fn main() -> anyhow::Result<()> {
     let target = *curves[0].last().unwrap();
     println!("\nsteps to reach the λ=1 final loss ({target:.4}):");
     for (r, c) in ratios.iter().zip(&curves) {
-        let hit = c.iter().position(|&l| l <= target);
-        match hit {
-            Some(s) => println!("  λ = {:>4}: {} steps ({:.2}x faster)", r, s + 1, steps as f64 / (s + 1) as f64),
+        match c.iter().position(|&l| l <= target) {
+            Some(s) => println!(
+                "  λ = {:>4}: {} steps ({:.2}x faster)",
+                r,
+                s + 1,
+                steps as f64 / (s + 1) as f64
+            ),
             None => println!("  λ = {:>4}: not reached in {steps} steps", r),
         }
     }

@@ -1,63 +1,58 @@
-//! Quickstart: the minimal Chronicals workflow.
+//! Quickstart: the minimal Chronicals workflow through the typed Session
+//! API.
 //!
-//! 1. load the AOT artifacts (built once by `make artifacts`),
-//! 2. generate + tokenize + BFD-pack an instruction corpus,
-//! 3. initialize device-resident training state,
-//! 4. train for a handful of steps with verified gradient flow.
+//! 1. describe the run with the builder (task, packing, data, schedule),
+//! 2. `build()` — validates the spec and resolves it against the backend
+//!    manifest (bad combinations fail here with a real error message),
+//! 3. `run()` — corpus → tokenize → BFD-pack → lazy batch stream →
+//!    verified train steps.
+//!
+//! Runs on the hermetic CPU reference backend: no artifacts, no Python.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use chronicals::config::RunConfig;
-use chronicals::harness;
-use chronicals::runtime::Runtime;
+use chronicals::backend::Backend;
+use chronicals::session::{DataSource, PackingStrategy, SessionBuilder, Task};
 use chronicals::util::commas;
-use std::rc::Rc;
 
 fn main() -> anyhow::Result<()> {
-    // The runtime compiles each HLO-text artifact once and keeps all
-    // training state on the PJRT device between steps.
-    let rt = Rc::new(Runtime::new("artifacts")?);
+    // Full fine-tuning with the complete Chronicals stack: BFD packing,
+    // verified gradient flow, honest (real-token) throughput accounting.
+    let mut session = SessionBuilder::new()
+        .task(Task::FullFinetune)
+        .packing(PackingStrategy::Bfd)
+        .steps(20)
+        .meter_warmup(2)
+        .lr(3e-3)
+        .data(DataSource::synthetic(512, 42, 1024))
+        .build()?;
+
     println!(
-        "loaded {} executables (profile: {})",
-        rt.manifest.executables.len(),
-        rt.manifest.profile
+        "training {} on the {} backend for 20 steps...",
+        session.resolved().train,
+        session.backend().name()
     );
-
-    // Full fine-tuning with the complete Chronicals stack: flash-structure
-    // attention, fused kernels, Cut Cross-Entropy, fused AdamW, BFD packing.
-    let cfg = RunConfig {
-        executable: "train_step_chronicals".into(),
-        steps: 20,
-        warmup_steps: 2,
-        lr: 3e-3,
-        packed: true,
-        corpus_examples: 512,
-        ..RunConfig::default()
-    };
-
-    println!("training {} for {} steps...", cfg.executable, cfg.steps);
-    let summary = harness::run_variant(&rt, &cfg)?;
+    let report = session.run()?;
+    let s = &report.summary;
 
     println!("\n=== results ===");
-    println!(
-        "loss:        {:.4} -> {:.4}",
-        summary.first_loss, summary.last_loss
-    );
+    println!("loss:        {:.4} -> {:.4}", s.first_loss, s.last_loss);
     println!(
         "throughput:  {} tokens/sec (real tokens)",
-        commas(summary.tokens_per_sec as u64)
+        commas(s.tokens_per_sec as u64)
     );
-    println!(
-        "step time:   {:.1} ms ± {:.1}",
-        summary.mean_step_ms, summary.std_step_ms
-    );
+    println!("step time:   {:.1} ms ± {:.1}", s.mean_step_ms, s.std_step_ms);
     println!(
         "gradients:   [{:.3e}, {:.3e}]",
-        summary.verification.min_grad_norm, summary.verification.max_grad_norm
+        s.verification.min_grad_norm, s.verification.max_grad_norm
     );
-    println!("status:      {}", summary.verification.status());
-    anyhow::ensure!(summary.verification.is_training, "run failed verification");
-    anyhow::ensure!(summary.last_loss < summary.first_loss, "loss did not improve");
+    println!(
+        "data:        {} examples -> {} batches ({} staged)",
+        report.examples, report.batches_planned, report.batches_staged
+    );
+    println!("status:      {}", s.verification.status());
+    anyhow::ensure!(s.verification.is_training, "run failed verification");
+    anyhow::ensure!(s.last_loss < s.first_loss, "loss did not improve");
     println!("\nquickstart OK");
     Ok(())
 }

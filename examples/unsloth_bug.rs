@@ -5,36 +5,30 @@
 //!
 //! Run: `cargo run --release --example unsloth_bug -- [steps]`
 
-use chronicals::config::RunConfig;
 use chronicals::coordinator::Verifier;
-use chronicals::harness;
-use chronicals::runtime::Runtime;
+use chronicals::session::{DataSource, SessionBuilder, Task};
 use chronicals::util::commas;
-use std::rc::Rc;
 
 fn main() -> anyhow::Result<()> {
     let steps: u64 = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(10);
-    let rt = Rc::new(Runtime::new("artifacts")?);
 
     println!("=== the benchmark that lies (paper Fig. 10) ===\n");
     let mut results = Vec::new();
-    for (label, exe) in [
-        ("correct LoRA", "train_step_lora"),
-        ("'fast mode' LoRA", "train_step_lora_broken"),
+    for (label, task) in [
+        ("correct LoRA", Task::lora()),
+        ("'fast mode' LoRA", Task::LoraBroken),
     ] {
-        let cfg = RunConfig {
-            executable: exe.into(),
-            steps,
-            warmup_steps: 1,
-            lr: 1e-3,
-            packed: true,
-            corpus_examples: 512,
-            ..RunConfig::default()
-        };
-        let s = harness::run_variant(&rt, &cfg)?;
+        let mut session = SessionBuilder::new()
+            .task(task)
+            .steps(steps)
+            .meter_warmup(1)
+            .lr(1e-3)
+            .data(DataSource::synthetic(512, 42, 1024))
+            .build()?;
+        let s = session.run()?.summary;
         println!(
             "{label:<18} {:>9} tok/s | loss {:.4} -> {:.4} | grad_norm max {:.3e} | {}",
             commas(s.tokens_per_sec as u64),

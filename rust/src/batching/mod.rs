@@ -4,6 +4,17 @@
 //! segment ids (0 = padding, 1..k = packed sequence index) and position ids
 //! (reset to 0 at each segment start — paper Alg. 17, so RoPE sees
 //! per-sequence positions).
+//!
+//! All layouts are produced by the lazy [`stream::BatchStream`] pipeline;
+//! the eager `Vec<Batch>` helpers below are thin `collect()` adapters kept
+//! for tests, benches and exact-legacy comparisons. The adapters copy the
+//! example slice to feed the owning stream — fine at test-corpus scale;
+//! hot paths (`session::Session::run`) hand their `Vec` to the stream by
+//! value instead and never copy.
+
+pub mod stream;
+
+pub use stream::{BatchStream, PackingStrategy, TailPolicy};
 
 use crate::data::TokenizedExample;
 use crate::packing::{best_fit_decreasing, Packing};
@@ -31,27 +42,19 @@ impl Batch {
 }
 
 /// Padded batching (the baseline): one example per row, truncated/padded to
-/// `seq`. Waste = 1 - mean(len)/seq (paper Eq. 85).
+/// `seq`. Waste = 1 - mean(len)/seq (paper Eq. 85). Eager adapter over
+/// [`BatchStream`] with the historical drop-the-tail semantics.
 pub fn padded_batches(examples: &[TokenizedExample], batch: usize, seq: usize) -> Vec<Batch> {
-    examples
-        .chunks(batch)
-        .filter(|c| c.len() == batch)
-        .map(|chunk| {
-            let mut b = BatchBuilder::new(batch, seq);
-            for (row, ex) in chunk.iter().enumerate() {
-                b.place(row, 0, ex, 1);
-            }
-            b.finish()
-        })
+    BatchStream::new(examples.to_vec(), PackingStrategy::Padded, batch, seq, TailPolicy::Drop)
         .collect()
 }
 
 /// BFD-packed batching: pack examples into `seq`-capacity bins, then group
-/// `batch` bins per batch. Rows carry multiple segments.
+/// `batch` bins per batch. Rows carry multiple segments. Eager adapter over
+/// [`BatchStream`] with the historical drop-the-tail semantics.
 pub fn packed_batches(examples: &[TokenizedExample], batch: usize, seq: usize) -> Vec<Batch> {
-    let lengths: Vec<usize> = examples.iter().map(|e| e.len()).collect();
-    let packing = best_fit_decreasing(&lengths, seq);
-    packing_to_batches(&packing, examples, batch, seq)
+    BatchStream::new(examples.to_vec(), PackingStrategy::Bfd, batch, seq, TailPolicy::Drop)
+        .collect()
 }
 
 /// Convert an arbitrary packing into batches (used by the packing ablation
@@ -135,7 +138,7 @@ pub fn token_budget_batches(
     batches
 }
 
-struct BatchBuilder {
+pub(crate) struct BatchBuilder {
     tokens: Vec<i32>,
     targets: Vec<i32>,
     seg_ids: Vec<i32>,
@@ -147,7 +150,7 @@ struct BatchBuilder {
 }
 
 impl BatchBuilder {
-    fn new(batch: usize, seq: usize) -> Self {
+    pub(crate) fn new(batch: usize, seq: usize) -> Self {
         BatchBuilder {
             tokens: vec![0; batch * seq],
             targets: vec![-1; batch * seq],
@@ -160,7 +163,7 @@ impl BatchBuilder {
         }
     }
 
-    fn place(&mut self, row: usize, offset: usize, ex: &TokenizedExample, seg: i32) {
+    pub(crate) fn place(&mut self, row: usize, offset: usize, ex: &TokenizedExample, seg: i32) {
         let n = ex.len().min(self.seq - offset);
         let base = row * self.seq + offset;
         for i in 0..n {
@@ -183,7 +186,7 @@ impl BatchBuilder {
         self.real_tokens += n;
     }
 
-    fn finish(self) -> Batch {
+    pub(crate) fn finish(self) -> Batch {
         let shape = vec![self.batch, self.seq];
         Batch {
             tokens: HostTensor::i32(self.tokens, shape.clone()),

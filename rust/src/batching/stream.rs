@@ -1,0 +1,272 @@
+//! Lazy batch pipeline: tokenized examples → packing plan → batches on
+//! demand.
+//!
+//! [`BatchStream`] is the one implementation behind every batch layout in
+//! the crate: it plans the packing up front (lengths only — cheap), then
+//! materializes each `[B, S]` tensor quadruple lazily as the iterator is
+//! pulled. Corpora therefore never need to exist as a resident
+//! `Vec<Batch>`; the eager [`super::packed_batches`] / [`super::padded_batches`]
+//! helpers are thin `collect()` adapters over this stream and keep their
+//! historical tail semantics ([`TailPolicy::Drop`]).
+
+use super::{Batch, BatchBuilder};
+use crate::data::TokenizedExample;
+use crate::packing::{best_fit_decreasing, first_fit_decreasing, next_fit, Bin};
+use anyhow::{bail, Result};
+
+/// How examples are arranged into `[B, S]` rows (paper Fig. 18 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackingStrategy {
+    /// One example per row, padded to `S` (the baseline; paper Eq. 85).
+    Padded,
+    /// Best-Fit Decreasing bin packing (the Chronicals default, Alg. 16).
+    Bfd,
+    /// First-Fit Decreasing (ablation baseline).
+    Ffd,
+    /// Next-Fit (the weakest packing baseline, §S4.2).
+    NextFit,
+}
+
+impl PackingStrategy {
+    /// Parse a CLI/config name.
+    pub fn parse(name: &str) -> Result<PackingStrategy> {
+        Ok(match name {
+            "padded" | "none" => PackingStrategy::Padded,
+            "bfd" => PackingStrategy::Bfd,
+            "ffd" => PackingStrategy::Ffd,
+            "next-fit" | "next_fit" | "nf" => PackingStrategy::NextFit,
+            other => bail!(
+                "unknown packing strategy '{other}' (expected padded | bfd | ffd | next-fit)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PackingStrategy::Padded => "padded",
+            PackingStrategy::Bfd => "bfd",
+            PackingStrategy::Ffd => "ffd",
+            PackingStrategy::NextFit => "next-fit",
+        }
+    }
+}
+
+/// What to do with a trailing group of fewer than `batch` rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TailPolicy {
+    /// Drop the partial batch (the historical `packed_batches` behavior;
+    /// silently loses the tail examples — kept only for the eager adapters
+    /// and exact-legacy comparisons).
+    Drop,
+    /// Emit the partial batch with the remaining rows empty (all padding,
+    /// segment id 0). No example is ever lost; the session default.
+    Pad,
+}
+
+/// Lazy `tokenize → pack → emit` pipeline over an owned example set.
+///
+/// The packing *plan* (bins of example indices) is computed eagerly from
+/// the lengths; batch tensors are built one at a time in [`Iterator::next`].
+/// Examples longer than `seq` are dropped by the packing algorithms exactly
+/// as in the eager path (paper Alg. 16 "skip oversized") — the count is
+/// reported by [`BatchStream::oversized_dropped`] so callers can surface it
+/// instead of losing data without trace. `Padded` truncates instead of
+/// dropping, mirroring the legacy padded path.
+pub struct BatchStream {
+    examples: Vec<TokenizedExample>,
+    bins: Vec<Bin>,
+    oversized: usize,
+    batch: usize,
+    seq: usize,
+    tail: TailPolicy,
+    next_bin: usize,
+}
+
+impl BatchStream {
+    pub fn new(
+        examples: Vec<TokenizedExample>,
+        strategy: PackingStrategy,
+        batch: usize,
+        seq: usize,
+        tail: TailPolicy,
+    ) -> BatchStream {
+        assert!(batch > 0 && seq > 0, "batch geometry must be positive");
+        let (bins, oversized) = match strategy {
+            PackingStrategy::Padded => {
+                let bins = examples
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| Bin { items: vec![i], used: e.len().min(seq) })
+                    .collect();
+                (bins, 0)
+            }
+            _ => {
+                let lengths: Vec<usize> = examples.iter().map(|e| e.len()).collect();
+                let packing = match strategy {
+                    PackingStrategy::Bfd => best_fit_decreasing(&lengths, seq),
+                    PackingStrategy::Ffd => first_fit_decreasing(&lengths, seq),
+                    PackingStrategy::NextFit => next_fit(&lengths, seq),
+                    PackingStrategy::Padded => unreachable!(),
+                };
+                (packing.bins, packing.oversized.len())
+            }
+        };
+        BatchStream { examples, bins, oversized, batch, seq, tail, next_bin: 0 }
+    }
+
+    /// Total batches this stream will emit (known from the plan).
+    pub fn n_batches(&self) -> usize {
+        match self.tail {
+            TailPolicy::Drop => self.bins.len() / self.batch,
+            TailPolicy::Pad => self.bins.len().div_ceil(self.batch),
+        }
+    }
+
+    /// Planned row-bins (each bin becomes one `[S]` row).
+    pub fn n_bins(&self) -> usize {
+        self.bins.len()
+    }
+
+    /// Examples skipped by the packing plan because they exceed `seq`.
+    pub fn oversized_dropped(&self) -> usize {
+        self.oversized
+    }
+
+    /// Whether the final emitted batch carries empty padding rows.
+    pub fn tail_padded(&self) -> bool {
+        self.tail == TailPolicy::Pad && !self.bins.is_empty() && self.bins.len() % self.batch != 0
+    }
+}
+
+impl Iterator for BatchStream {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.next_bin >= self.bins.len() {
+            return None;
+        }
+        let end = (self.next_bin + self.batch).min(self.bins.len());
+        if end - self.next_bin < self.batch && self.tail == TailPolicy::Drop {
+            self.next_bin = self.bins.len();
+            return None;
+        }
+        let mut b = BatchBuilder::new(self.batch, self.seq);
+        for (row, bin) in self.bins[self.next_bin..end].iter().enumerate() {
+            let mut offset = 0;
+            for (seg, &item) in bin.items.iter().enumerate() {
+                let ex = &self.examples[item];
+                b.place(row, offset, ex, (seg + 1) as i32);
+                offset += ex.len().min(self.seq - offset);
+                if offset >= self.seq {
+                    break;
+                }
+            }
+        }
+        self.next_bin = end;
+        Some(b.finish())
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = self.bins.len() - self.next_bin;
+        let n = match self.tail {
+            TailPolicy::Drop => left / self.batch,
+            TailPolicy::Pad => left.div_ceil(self.batch),
+        };
+        (n, Some(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ex(n: usize, base: i32) -> TokenizedExample {
+        let tokens: Vec<i32> = (0..n as i32).map(|i| base + i).collect();
+        let mut targets: Vec<i32> = tokens.iter().skip(1).copied().collect();
+        targets.push(-1);
+        TokenizedExample { tokens, targets }
+    }
+
+    fn corpus(n: usize) -> Vec<TokenizedExample> {
+        (0..n).map(|i| ex(3 + (i % 7), 10 + i as i32)).collect()
+    }
+
+    #[test]
+    fn drop_policy_matches_eager_adapters_exactly() {
+        let exs = corpus(37);
+        for (strategy, eager) in [
+            (PackingStrategy::Bfd, super::super::packed_batches(&exs, 4, 16)),
+            (PackingStrategy::Padded, super::super::padded_batches(&exs, 4, 16)),
+        ] {
+            let streamed: Vec<Batch> =
+                BatchStream::new(exs.clone(), strategy, 4, 16, TailPolicy::Drop).collect();
+            assert_eq!(streamed.len(), eager.len(), "{strategy:?}");
+            for (a, b) in streamed.iter().zip(&eager) {
+                assert_eq!(a.tokens, b.tokens, "{strategy:?}");
+                assert_eq!(a.targets, b.targets);
+                assert_eq!(a.seg_ids, b.seg_ids);
+                assert_eq!(a.pos_ids, b.pos_ids);
+                assert_eq!(a.real_tokens, b.real_tokens);
+                assert_eq!(a.real_targets, b.real_targets);
+            }
+        }
+    }
+
+    #[test]
+    fn pad_policy_keeps_every_example() {
+        let exs = corpus(13); // 13 singleton rows won't divide by 4
+        let total: usize = exs.iter().map(|e| e.len()).sum();
+        let mut s = BatchStream::new(exs, PackingStrategy::Padded, 4, 16, TailPolicy::Pad);
+        assert_eq!(s.n_batches(), 4); // ceil(13/4)
+        assert!(s.tail_padded());
+        let got: usize = s.by_ref().map(|b| b.real_tokens).sum();
+        assert_eq!(got, total, "padding the tail must not lose tokens");
+        assert!(s.next().is_none());
+    }
+
+    #[test]
+    fn drop_policy_loses_the_tail() {
+        let exs = corpus(13);
+        let s = BatchStream::new(exs, PackingStrategy::Padded, 4, 16, TailPolicy::Drop);
+        assert_eq!(s.n_batches(), 3); // floor(13/4): one example dropped
+        assert!(!s.tail_padded());
+        assert_eq!(s.count(), 3);
+    }
+
+    #[test]
+    fn oversized_examples_are_counted_not_silent() {
+        let exs = vec![ex(40, 1), ex(5, 2), ex(6, 3)];
+        let s = BatchStream::new(exs, PackingStrategy::Bfd, 1, 16, TailPolicy::Pad);
+        assert_eq!(s.oversized_dropped(), 1);
+        assert_eq!(s.n_batches(), 1); // 5+6 pack into one 16-capacity bin
+    }
+
+    #[test]
+    fn ffd_and_next_fit_strategies_emit_plans() {
+        let exs = corpus(24);
+        for strategy in [PackingStrategy::Ffd, PackingStrategy::NextFit] {
+            let s = BatchStream::new(exs.clone(), strategy, 2, 16, TailPolicy::Pad);
+            let total: usize = exs.iter().map(|e| e.len()).sum();
+            let got: usize = s.map(|b| b.real_tokens).sum();
+            assert_eq!(got, total, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn size_hint_is_exact() {
+        let exs = corpus(10);
+        let mut s = BatchStream::new(exs, PackingStrategy::Padded, 4, 16, TailPolicy::Pad);
+        assert_eq!(s.size_hint(), (3, Some(3)));
+        s.next();
+        assert_eq!(s.size_hint(), (2, Some(2)));
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(PackingStrategy::parse("bfd").unwrap(), PackingStrategy::Bfd);
+        assert_eq!(PackingStrategy::parse("padded").unwrap(), PackingStrategy::Padded);
+        assert_eq!(PackingStrategy::parse("next-fit").unwrap(), PackingStrategy::NextFit);
+        assert!(PackingStrategy::parse("zip").is_err());
+        assert_eq!(PackingStrategy::Ffd.name(), "ffd");
+    }
+}

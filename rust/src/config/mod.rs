@@ -35,7 +35,11 @@ pub struct RunConfig {
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
-            executable: "train_step_chronicals".into(),
+            // full fine-tuning; the name comes from the session::resolve
+            // seam so this stringly front-end never spells it itself
+            executable: crate::session::resolve::train_executable(
+                &crate::session::Task::FullFinetune,
+            ),
             init_executable: String::new(),
             steps: 50,
             warmup_steps: 3,
@@ -114,39 +118,32 @@ impl RunConfig {
         env_threads().unwrap_or(self.threads)
     }
 
-    /// Derive the init executable name: explicit, or `init_<variant>` from
-    /// the train executable name.
-    pub fn init_name(&self) -> String {
-        if !self.init_executable.is_empty() {
-            return self.init_executable.clone();
-        }
-        self.executable
-            .strip_prefix("train_step_")
-            .map(|v| format!("init_{v}"))
-            .unwrap_or_else(|| "init_chronicals".into())
-    }
-
-    /// Paper Table 7 presets.
+    /// Paper Table 7 presets. Executable names come from the typed task
+    /// table behind `session::resolve` — this front-end never spells
+    /// `train_step_*` strings itself. (The `e2e` preset targets the
+    /// PJRT-only e2e-scale executable, which has no typed task; its name
+    /// lives in `resolve::E2E_EXECUTABLE`.)
     pub fn preset(name: &str) -> Option<RunConfig> {
+        use crate::session::{resolve, Task};
         let mut c = RunConfig::default();
         match name {
             "full_ft" => {
-                c.executable = "train_step_chronicals".into();
+                c.executable = resolve::train_executable(&Task::FullFinetune);
                 c.lr = 2e-5 * 10.0; // scaled for the small substrate model
                 c.lora_plus_ratio = 1.0;
             }
             "lora" => {
-                c.executable = "train_step_lora".into();
+                c.executable = resolve::train_executable(&Task::lora());
                 c.lr = 1e-4 * 10.0;
                 c.lora_plus_ratio = 1.0;
             }
             "lora_plus" => {
-                c.executable = "train_step_lora".into();
+                c.executable = resolve::train_executable(&Task::lora_plus(16.0));
                 c.lr = 1e-4 * 10.0;
                 c.lora_plus_ratio = 16.0;
             }
             "e2e" => {
-                c.executable = "train_step_e2e".into();
+                c.executable = resolve::E2E_EXECUTABLE.into();
                 c.steps = 300;
                 c.lr = 3e-4;
                 c.lr_schedule = "warmup_cosine".into();
@@ -194,7 +191,6 @@ lr_warmup_steps = 5
         assert_eq!(c.steps, 25);
         assert!(!c.packed);
         assert_eq!(c.lora_plus_ratio, 16.0);
-        assert_eq!(c.init_name(), "init_lora");
     }
 
     #[test]

@@ -133,35 +133,22 @@ impl Trainer {
         Ok(rec)
     }
 
-    /// Drive a full run over batches (cycling if needed) for `steps` steps.
-    /// Batches are staged on the backend once and reused every epoch.
-    pub fn run(&mut self, batches: &[Batch], steps: u64) -> Result<TrainSummary> {
-        if batches.is_empty() {
+    /// Drive a run over any batch stream: one step per batch, each batch
+    /// staged once. Cycling and step-count policy belong to the caller —
+    /// [`crate::session::Session::run`] pulls the lazy `BatchStream`, keeps
+    /// the staged `DeviceBatch`es and cycles over them when the corpus is
+    /// shorter than the run (§Perf L3: staging is amortized across epochs).
+    pub fn run<I>(&mut self, batches: I) -> Result<TrainSummary>
+    where
+        I: IntoIterator<Item = Batch>,
+    {
+        let mut stepped = false;
+        for b in batches {
+            self.step(&b)?;
+            stepped = true;
+        }
+        if !stepped {
             bail!("no batches");
-        }
-        // §Perf L3: amortize batch staging — stage at most `steps` distinct
-        // batches once, then cycle over backend-resident buffers.
-        let n_used = (batches.len() as u64).min(steps) as usize;
-        let uploaded: Vec<DeviceBatch> = batches[..n_used]
-            .iter()
-            .map(|b| self.upload_batch(b))
-            .collect::<Result<_>>()?;
-        for i in 0..steps {
-            let ub = &uploaded[(i % uploaded.len() as u64) as usize];
-            self.step_uploaded(ub)?;
-        }
-        Ok(self.summary())
-    }
-
-    /// `run` without staging reuse — the pre-optimization baseline, kept
-    /// for the §Perf before/after comparison (`bench_throughput --uncached`).
-    pub fn run_uncached(&mut self, batches: &[Batch], steps: u64) -> Result<TrainSummary> {
-        if batches.is_empty() {
-            bail!("no batches");
-        }
-        for i in 0..steps {
-            let b = &batches[(i % batches.len() as u64) as usize];
-            self.step(b)?;
         }
         Ok(self.summary())
     }

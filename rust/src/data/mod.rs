@@ -34,6 +34,25 @@ impl TokenizedExample {
     }
 }
 
+/// Build the synthetic tokenized corpus once per (size, seed, vocab cap):
+/// generate → fit tokenizer → tokenize. The standard data path behind
+/// `DataSource::Synthetic` and the harness workflows.
+pub fn build_corpus(
+    n_examples: usize,
+    seed: u64,
+    vocab_cap: usize,
+    max_seq: usize,
+) -> (Tokenizer, Vec<TokenizedExample>) {
+    let cfg = CorpusConfig { n_examples, seed, ..Default::default() };
+    let corpus = SyntheticCorpus::generate(&cfg);
+    let tok = Tokenizer::from_texts(
+        corpus.iter().map(|e| format!("{} {}", e.prompt, e.completion)),
+        vocab_cap,
+    );
+    let exs = tokenize_corpus(&corpus, &tok, max_seq);
+    (tok, exs)
+}
+
 /// Tokenize a corpus: prompt tokens are loss-masked, completion tokens are
 /// supervised (standard instruction-tuning recipe).
 pub fn tokenize_corpus(

@@ -4,36 +4,37 @@
 //! every workflow is backend-agnostic: pass any [`Backend`] — the CPU
 //! reference gives deterministic CI-runnable numbers, PJRT gives the real
 //! artifact measurements.
+//!
+//! All training workflows go through the typed [`crate::session`] API —
+//! the table generators below hold [`Task`]s, not executable-name strings
+//! (those exist only behind `session::resolve`).
 
 use crate::backend::Backend;
-use crate::batching::{packed_batches, padded_batches, Batch};
+use crate::batching::{Batch, BatchStream, PackingStrategy, TailPolicy};
 use crate::config::RunConfig;
-use crate::coordinator::{Trainer, TrainSummary};
-use crate::data::{tokenize_corpus, CorpusConfig, SyntheticCorpus, Tokenizer, TokenizedExample};
+use crate::coordinator::TrainSummary;
+use crate::data::{TokenizedExample, Tokenizer};
 use crate::manifest::Manifest;
-use crate::optim::LrSchedule;
 use crate::report::{self, Row};
+use crate::session::{Session, SessionBuilder, SessionSpec, Task};
 use anyhow::{anyhow, Result};
 use std::rc::Rc;
 
-/// Build the tokenized corpus once per (seed, size, vocab cap).
+/// Build the tokenized corpus once per (seed, size, vocab cap). Thin
+/// re-export of [`crate::data::build_corpus`] kept for the test suites.
 pub fn build_corpus(
     n_examples: usize,
     seed: u64,
     vocab_cap: usize,
     max_seq: usize,
 ) -> (Tokenizer, Vec<TokenizedExample>) {
-    let cfg = CorpusConfig { n_examples, seed, ..Default::default() };
-    let corpus = SyntheticCorpus::generate(&cfg);
-    let tok = Tokenizer::from_texts(
-        corpus.iter().map(|e| format!("{} {}", e.prompt, e.completion)),
-        vocab_cap,
-    );
-    let exs = tokenize_corpus(&corpus, &tok, max_seq);
-    (tok, exs)
+    crate::data::build_corpus(n_examples, seed, vocab_cap, max_seq)
 }
 
-/// Make batches for a given executable spec + packing choice.
+/// Make batches for a given executable spec + packing choice. Eager helper
+/// for tests and manual trainer driving; unlike the legacy version, the
+/// trailing partial batch is padded, not silently dropped (the session
+/// pipeline's [`TailPolicy::Pad`]).
 pub fn make_batches(
     manifest: &Manifest,
     exe_name: &str,
@@ -42,14 +43,12 @@ pub fn make_batches(
 ) -> Result<Vec<Batch>> {
     let spec = manifest.get(exe_name)?;
     let (b, s) = (spec.batch, spec.seq);
-    let batches = if packed {
-        packed_batches(examples, b, s)
-    } else {
-        padded_batches(examples, b, s)
-    };
+    let strategy = if packed { PackingStrategy::Bfd } else { PackingStrategy::Padded };
+    let batches: Vec<Batch> =
+        BatchStream::new(examples.to_vec(), strategy, b, s, TailPolicy::Pad).collect();
     if batches.is_empty() {
         return Err(anyhow!(
-            "no complete batches for {exe_name} (B={b}, S={s}, {} examples)",
+            "no batches for {exe_name} (B={b}, S={s}, {} examples)",
             examples.len()
         ));
     }
@@ -57,75 +56,50 @@ pub fn make_batches(
 }
 
 /// Run one training configuration end to end, returning the summary row.
+/// `RunConfig` is the stringly front-end: it lowers into a typed
+/// [`SessionSpec`] and runs on the given backend.
 pub fn run_variant(backend: &Rc<dyn Backend>, cfg: &RunConfig) -> Result<TrainSummary> {
-    let spec = backend.manifest().get(&cfg.executable)?.clone();
-    // vocab cap = the model's vocab so token ids stay in range
-    let vocab = spec.model_config.vocab.max(64);
-    let (_tok, exs) = build_corpus(cfg.corpus_examples, cfg.seed, vocab, cfg.max_seq);
-    let batches = make_batches(backend.manifest(), &cfg.executable, &exs, cfg.packed)?;
-
-    let schedule = match cfg.lr_schedule.as_str() {
-        "warmup_cosine" => LrSchedule::warmup_cosine(
-            cfg.lr,
-            cfg.lr_warmup_steps,
-            cfg.steps,
-            cfg.lora_plus_ratio,
-        ),
-        _ => LrSchedule::constant(cfg.lr, cfg.lora_plus_ratio),
-    };
-
-    // init state: families without an init executable reuse the family's
-    // canonical init (same param set).
-    let init_name = resolve_init(backend.manifest(), &cfg.executable, &cfg.init_name())?;
-    let state = backend.init_state(&init_name, cfg.seed as i32)?;
-    let mut trainer =
-        Trainer::new(backend.clone(), &cfg.executable, state, schedule, cfg.warmup_steps)?;
-    trainer.run(&batches, cfg.steps)
+    let spec = SessionSpec::from_run_config(cfg)?;
+    let mut session = Session::with_backend(spec, backend.clone())?;
+    Ok(session.run()?.summary)
 }
 
-/// Find a usable init executable: the requested one, else the canonical
-/// init for the same family and model/batch geometry.
-pub fn resolve_init(manifest: &Manifest, train_name: &str, preferred: &str) -> Result<String> {
-    if manifest.get(preferred).is_ok() {
-        return Ok(preferred.to_string());
-    }
-    let train = manifest.get(train_name)?;
-    for e in &manifest.executables {
-        if e.kind == "init"
-            && e.family == train.family
-            && e.n_trainable == train.n_trainable
-            && e.n_frozen == train.n_frozen
-            // same tensor count is not enough — shapes must match too
-            && e.param_count == train.param_count
-        {
-            return Ok(e.name.clone());
-        }
-    }
-    Err(anyhow!("no init executable for {train_name}"))
+/// Run one typed table row on a shared backend: a task + packing choice at
+/// the harness defaults (2 meter-warmup steps, RunConfig-default corpus).
+fn table_row(
+    backend: &Rc<dyn Backend>,
+    task: Task,
+    packing: PackingStrategy,
+    steps: u64,
+    lr: f64,
+) -> Result<(TrainSummary, usize)> {
+    let mut session = SessionBuilder::new()
+        .task(task)
+        .packing(packing)
+        .steps(steps)
+        .meter_warmup(2)
+        .lr(lr)
+        .on_backend(backend.clone())
+        .build()?;
+    let summary = session.run()?.summary;
+    let batch = session.resolved().spec.batch;
+    Ok((summary, batch))
 }
 
 /// Table 4 ablation ladder: run each rung, return report rows.
 pub fn ablation_ladder(backend: &Rc<dyn Backend>, steps: u64) -> Result<Vec<Row>> {
-    let rungs: &[(&str, &str, bool)] = &[
-        ("Baseline (eager, padded)", "train_step_ablate_naive", false),
-        ("+ FlashAttention", "train_step_ablate_flash", false),
-        ("+ whole-graph compile", "train_step_ablate_compiled", false),
-        ("+ fused kernels & CCE", "train_step_ablate_liger", false),
-        ("+ sequence packing", "train_step_ablate_liger", true),
-        ("+ fused optimizer", "train_step_chronicals", true),
+    let rungs: Vec<(&str, Task, PackingStrategy)> = vec![
+        ("Baseline (eager, padded)", Task::AblateNaive, PackingStrategy::Padded),
+        ("+ FlashAttention", Task::AblateFlash, PackingStrategy::Padded),
+        ("+ whole-graph compile", Task::AblateCompiled, PackingStrategy::Padded),
+        ("+ fused kernels & CCE", Task::AblateLiger, PackingStrategy::Padded),
+        ("+ sequence packing", Task::AblateLiger, PackingStrategy::Bfd),
+        ("+ fused optimizer", Task::FullFinetune, PackingStrategy::Bfd),
     ];
     let mut rows = Vec::new();
-    for (label, exe, packed) in rungs {
-        let cfg = RunConfig {
-            executable: exe.to_string(),
-            steps,
-            packed: *packed,
-            warmup_steps: 2,
-            ..RunConfig::default()
-        };
-        let s = run_variant(backend, &cfg)?;
-        let spec = backend.manifest().get(exe)?;
-        rows.push(Row::from_summary(label, "full", spec.batch, &s));
+    for (label, task, packing) in rungs {
+        let (s, batch) = table_row(backend, task, packing, steps, 2e-4)?;
+        rows.push(Row::from_summary(label, "full", batch, &s));
     }
     Ok(rows)
 }
@@ -133,47 +107,30 @@ pub fn ablation_ladder(backend: &Rc<dyn Backend>, steps: u64) -> Result<Vec<Row>
 /// Table 2: full fine-tuning, naive ("Unsloth-correct"-shaped baseline) vs
 /// chronicals, plus the broken "fast mode" row (Fig. 10).
 pub fn full_ft_comparison(backend: &Rc<dyn Backend>, steps: u64) -> Result<Vec<Row>> {
+    let runs: Vec<(&str, Task, PackingStrategy)> = vec![
+        ("Baseline (naive, verified)", Task::AblateNaive, PackingStrategy::Padded),
+        ("Chronicals (verified)", Task::FullFinetune, PackingStrategy::Bfd),
+    ];
     let mut rows = Vec::new();
-    for (label, exe, packed) in [
-        ("Baseline (naive, verified)", "train_step_ablate_naive", false),
-        ("Chronicals (verified)", "train_step_chronicals", true),
-    ] {
-        let cfg = RunConfig {
-            executable: exe.to_string(),
-            steps,
-            packed,
-            warmup_steps: 2,
-            ..RunConfig::default()
-        };
-        let s = run_variant(backend, &cfg)?;
-        let spec = backend.manifest().get(exe)?;
-        rows.push(Row::from_summary(label, "full", spec.batch, &s));
+    for (label, task, packing) in runs {
+        let (s, batch) = table_row(backend, task, packing, steps, 2e-4)?;
+        rows.push(Row::from_summary(label, "full", batch, &s));
     }
     Ok(rows)
 }
 
 /// Table 3: LoRA naive vs Chronicals LoRA vs LoRA+ (λ=16) vs broken mode.
 pub fn lora_comparison(backend: &Rc<dyn Backend>, steps: u64) -> Result<Vec<Row>> {
-    let runs: &[(&str, &str, bool, f64)] = &[
-        ("LoRA naive (Unsloth-shaped)", "train_step_lora_naive", false, 1.0),
-        ("Chronicals LoRA", "train_step_lora", true, 1.0),
-        ("Chronicals LoRA+ (λ=16)", "train_step_lora", true, 16.0),
-        ("'Fast mode' (BROKEN)", "train_step_lora_broken", true, 1.0),
+    let runs: Vec<(&str, Task, PackingStrategy)> = vec![
+        ("LoRA naive (Unsloth-shaped)", Task::LoraNaive, PackingStrategy::Padded),
+        ("Chronicals LoRA", Task::lora(), PackingStrategy::Bfd),
+        ("Chronicals LoRA+ (λ=16)", Task::lora_plus(16.0), PackingStrategy::Bfd),
+        ("'Fast mode' (BROKEN)", Task::LoraBroken, PackingStrategy::Bfd),
     ];
     let mut rows = Vec::new();
-    for (label, exe, packed, ratio) in runs {
-        let cfg = RunConfig {
-            executable: exe.to_string(),
-            steps,
-            packed: *packed,
-            lora_plus_ratio: *ratio,
-            lr: 1e-3,
-            warmup_steps: 2,
-            ..RunConfig::default()
-        };
-        let s = run_variant(backend, &cfg)?;
-        let spec = backend.manifest().get(exe)?;
-        rows.push(Row::from_summary(label, "lora", spec.batch, &s));
+    for (label, task, packing) in runs {
+        let (s, batch) = table_row(backend, task, packing, steps, 1e-3)?;
+        rows.push(Row::from_summary(label, "lora", batch, &s));
     }
     Ok(rows)
 }
@@ -265,24 +222,6 @@ mod tests {
     use crate::backend::cpu::CpuBackend;
 
     #[test]
-    fn resolve_init_falls_back_to_family_canonical() {
-        let be = CpuBackend::new();
-        // the ablation aliases have no init of their own; the canonical
-        // full-family init must be found by geometry match
-        let init = resolve_init(
-            be.manifest(),
-            "train_step_ablate_naive",
-            "init_ablate_naive",
-        )
-        .unwrap();
-        assert_eq!(init, "init_chronicals");
-        // a broken lora variant resolves to the lora init
-        let init =
-            resolve_init(be.manifest(), "train_step_lora_broken", "init_lora_broken").unwrap();
-        assert_eq!(init, "init_lora");
-    }
-
-    #[test]
     fn kernel_microbench_errors_cleanly_on_cpu() {
         let be = CpuBackend::new();
         let err = kernel_microbench(&be, 1).unwrap_err();
@@ -297,5 +236,23 @@ mod tests {
         for (name, fused, naive) in rows {
             assert!(fused > 0.0 && naive > 0.0, "{name}: {fused} vs {naive}");
         }
+    }
+
+    #[test]
+    fn make_batches_pads_the_tail_instead_of_dropping() {
+        let be = CpuBackend::new();
+        let spec = be.manifest().get("train_step_chronicals").unwrap().clone();
+        // 13 examples of ≤ 8 tokens in 64-token bins: BFD packs several per
+        // bin; whatever the bin count, no token may vanish
+        let exs: Vec<TokenizedExample> = (0..13)
+            .map(|i| TokenizedExample {
+                tokens: vec![4 + i, 5 + i, 6 + i],
+                targets: vec![5 + i, 6 + i, -1],
+            })
+            .collect();
+        let batches = make_batches(be.manifest(), "train_step_chronicals", &exs, true).unwrap();
+        let total: usize = batches.iter().map(|b| b.real_tokens).sum();
+        assert_eq!(total, 13 * 3, "padded tail must keep every example");
+        assert_eq!(batches[0].batch, spec.batch);
     }
 }

@@ -24,6 +24,28 @@
 //! adds the PJRT runtime that executes the AOT artifacts; there, Python
 //! never runs on the training path: `make artifacts` is the only Python
 //! invocation and afterwards the `chronicals` binary is self-contained.
+//!
+//! ## Quickstart
+//!
+//! The typed [`session`] API is the one public way to run training:
+//! describe the run with the builder, `build()` validates it against the
+//! backend manifest, `run()` streams batches lazily and returns the
+//! verified summary.
+//!
+//! ```
+//! use chronicals::session::{DataSource, PackingStrategy, SessionBuilder, Task};
+//!
+//! let mut session = SessionBuilder::new()
+//!     .task(Task::lora_plus(16.0))      // LoRA+ with λ = 16 (paper Thm. 1)
+//!     .packing(PackingStrategy::Bfd)    // BFD sequence packing (Alg. 16)
+//!     .steps(3)
+//!     .lr(2e-3)
+//!     .data(DataSource::synthetic(64, 7, 48))
+//!     .build()?;                        // CPU reference backend by default
+//! let report = session.run()?;
+//! assert!(report.summary.verification.is_training);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 pub mod backend;
 pub mod batching;
@@ -39,6 +61,7 @@ pub mod packing;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod session;
 pub mod util;
 
 /// Crate version (mirrors `Cargo.toml`).

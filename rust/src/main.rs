@@ -21,6 +21,9 @@ use chronicals::config::{self, RunConfig};
 use chronicals::harness;
 use chronicals::metrics::{MemoryModel, Precision};
 use chronicals::report;
+use chronicals::session::{
+    PackingStrategy, RunReport, Schedule, SessionBuilder, SessionSpec, Task,
+};
 use chronicals::util::commas;
 use std::rc::Rc;
 
@@ -106,10 +109,15 @@ fn print_help() {
 USAGE: chronicals <command> [--flags]
 
 COMMANDS
-  train    --preset <full_ft|lora|lora_plus|e2e> | --config <file.toml>
-           [--executable NAME] [--steps N] [--packed true|false]
-           [--lr X] [--lora-plus-ratio X] [--backend cpu|cpu-fast|pjrt]
-           [--threads N] [--artifacts DIR]
+  train    --task <full-ft|lora|lora-plus|ablate-naive|ablate-flash|
+                   ablate-compiled|ablate-liger|lora-naive|lora-broken>
+           [--packing padded|bfd|ffd|next-fit] [--schedule constant|
+           warmup-cosine] [--lr-warmup N] [--lora-rank N]
+           [--lora-plus-ratio X] [--steps N] [--lr X] [--seed N]
+           [--backend cpu|cpu-fast|pjrt] [--threads N] [--artifacts DIR]
+           legacy front-ends (lowered into the same typed session):
+           --preset <full_ft|lora|lora_plus|e2e> | --config <file.toml> |
+           --executable NAME [--packed true|false]
   bench    --summary | --ablation | --kernels | --lora | --full
            [--steps N] [--reps N] [--backend cpu|cpu-fast|pjrt]
            [--threads N] [--artifacts DIR]
@@ -135,19 +143,22 @@ BACKENDS
 /// > config value > 0 (backend autodetects). A malformed `--threads`
 /// value is an error, not a silent fallback.
 fn thread_request(args: &Args, cfg_threads: usize) -> Result<usize> {
+    // validate the flag first so a malformed value errors even when the
+    // env override ends up winning
+    let flag: Option<usize> = match args.get("threads") {
+        Some(v) => Some(v.parse().map_err(|_| {
+            anyhow!("invalid --threads '{v}' (expected a non-negative integer)")
+        })?),
+        None => None,
+    };
     if let Some(n) = config::env_threads() {
         return Ok(n);
     }
-    if let Some(v) = args.get("threads") {
-        let n: usize = v
-            .parse()
-            .map_err(|_| anyhow!("invalid --threads '{v}' (expected a non-negative integer)"))?;
-        if n > 0 {
-            return Ok(n);
-        }
+    match flag {
         // 0 = explicit autodetect request
+        Some(n) if n > 0 => Ok(n),
+        _ => Ok(cfg_threads),
     }
-    Ok(cfg_threads)
 }
 
 fn load_backend(args: &Args) -> Result<Rc<dyn Backend>> {
@@ -159,6 +170,7 @@ fn load_backend(args: &Args) -> Result<Rc<dyn Backend>> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // 1) legacy front-ends: preset / TOML config / string flags
     let mut cfg = if let Some(preset) = args.get("preset") {
         RunConfig::preset(preset).ok_or_else(|| anyhow!("unknown preset '{preset}'"))?
     } else if let Some(path) = args.get("config") {
@@ -181,6 +193,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(r) = args.get("lora-plus-ratio") {
         cfg.lora_plus_ratio = r.parse()?;
     }
+    if let Some(s) = args.get("seed") {
+        cfg.seed = s.parse()?;
+    }
     if let Some(d) = args.get("artifacts") {
         cfg.artifacts_dir = d.to_string();
     }
@@ -190,18 +205,40 @@ fn cmd_train(args: &Args) -> Result<()> {
     // one parser for --threads everywhere (env > flag > config file)
     cfg.threads = thread_request(args, cfg.threads)?;
 
-    let backend = create_backend(&cfg.backend, &cfg.artifacts_dir, cfg.effective_threads())?;
+    // 2) lower into the typed spec, then apply the typed flags on top
+    let mut spec = SessionSpec::from_run_config(&cfg)?;
+    if let Some(name) = args.get("task") {
+        let rank = args
+            .get("lora-rank")
+            .map(|v| v.parse::<usize>().map_err(|_| anyhow!("invalid --lora-rank '{v}'")))
+            .transpose()?;
+        let ratio = args
+            .get("lora-plus-ratio")
+            .map(|v| v.parse::<f64>().map_err(|_| anyhow!("invalid --lora-plus-ratio '{v}'")))
+            .transpose()?;
+        spec.task = Task::parse(name, rank, ratio)?;
+    }
+    if let Some(name) = args.get("schedule") {
+        spec.schedule = Schedule::parse(name, args.u64_or("lr-warmup", cfg.lr_warmup_steps))?;
+    }
+    if let Some(name) = args.get("packing") {
+        spec.packing = PackingStrategy::parse(name)?;
+    }
+
+    let mut session = spec.build()?;
     println!(
-        "training {} on the {} backend for {} steps (packed={}, lr={}, λ={})",
-        cfg.executable,
-        backend.name(),
-        cfg.steps,
-        cfg.packed,
-        cfg.lr,
-        cfg.lora_plus_ratio
+        "training {} ({}) on the {} backend for {} steps (packing={}, lr={}, λ={})",
+        session.resolved().train,
+        session.spec().task,
+        session.backend().name(),
+        session.spec().steps,
+        session.spec().packing.name(),
+        session.spec().lr,
+        session.resolved().lora_plus_ratio,
     );
     let t0 = std::time::Instant::now();
-    let s = harness::run_variant(&backend, &cfg)?;
+    let report = session.run()?;
+    let s = &report.summary;
     println!(
         "done in {:.1}s: loss {:.4} -> {:.4} | {} tok/s | {:.1} ms/step ±{:.1} | {}",
         t0.elapsed().as_secs_f64(),
@@ -212,10 +249,30 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.std_step_ms,
         s.verification.status()
     );
+    print_data_accounting(&report);
     for f in &s.verification.failures {
         println!("  verification failure: {f}");
     }
     Ok(())
+}
+
+/// Surface what the data pipeline did with the corpus — nothing is ever
+/// dropped without a trace.
+fn print_data_accounting(report: &RunReport) {
+    println!(
+        "data: {} examples -> {} batches ({} staged{})",
+        report.examples,
+        report.batches_planned,
+        report.batches_staged,
+        if report.tail_padded { ", partial tail padded" } else { "" }
+    );
+    if report.oversized_dropped > 0 {
+        println!(
+            "  warning: {} examples exceed the row capacity and were skipped \
+             by the packing plan (raise max_seq truncation or use --packing padded)",
+            report.oversized_dropped
+        );
+    }
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -334,19 +391,18 @@ fn cmd_verify(args: &Args) -> Result<()> {
     let steps = args.u64_or("steps", 8);
     println!("reproducing the paper's Unsloth-bug finding (Fig. 10/22)\n");
     let runs = [
-        ("correct LoRA config", "train_step_lora"),
-        ("'fast mode' config", "train_step_lora_broken"),
+        ("correct LoRA config", Task::lora()),
+        ("'fast mode' config", Task::LoraBroken),
     ];
-    for (label, exe) in runs {
-        let cfg = RunConfig {
-            executable: exe.to_string(),
-            steps,
-            packed: true,
-            lr: 1e-3,
-            warmup_steps: 1,
-            ..RunConfig::default()
-        };
-        let s = harness::run_variant(&backend, &cfg)?;
+    for (label, task) in runs {
+        let mut session = SessionBuilder::new()
+            .task(task)
+            .steps(steps)
+            .lr(1e-3)
+            .meter_warmup(1)
+            .on_backend(backend.clone())
+            .build()?;
+        let s = session.run()?.summary;
         println!(
             "{label}: {} tok/s | loss {:.4} -> {:.4} | grad_norm in [{:.2e}, {:.2e}] | {}",
             commas(s.tokens_per_sec as u64),

@@ -155,11 +155,12 @@ pub fn update_bench_json(
     value: crate::util::json::Json,
 ) -> anyhow::Result<()> {
     use crate::util::json::{Json, Obj};
-    // A missing file starts a fresh report; an *unparseable* existing file
-    // is an error — silently restarting would discard the other benches'
-    // measured sections.
+    // A missing file starts a fresh report; an *unreadable* or
+    // *unparseable* existing file is an error — silently restarting would
+    // discard the other benches' measured sections.
     let mut obj = match std::fs::read_to_string(path) {
-        Err(_) => Obj::default(),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Obj::default(),
+        Err(e) => anyhow::bail!("reading {}: {e}", path.display()),
         Ok(text) => match Json::parse(&text) {
             Ok(Json::Obj(o)) => o,
             Ok(_) => anyhow::bail!(

@@ -1,0 +1,769 @@
+//! The typed Session API — the one public way to run a training workload.
+//!
+//! Everything that used to hand-stitch `build_corpus → make_batches →
+//! LrSchedule → resolve_init → Trainer::new → run` around a stringly-typed
+//! `RunConfig` goes through here instead:
+//!
+//! * [`SessionBuilder`] — typed knobs ([`Task`], [`Schedule`],
+//!   [`PackingStrategy`], [`DataSource`], [`BackendSpec`]) with validation
+//!   at build time, so a bad combination is a real error message instead of
+//!   a manifest-miss panic deep inside the run.
+//! * [`SessionSpec`] — the validated plain-data description of a run.
+//!   `RunConfig` (TOML files, presets, legacy CLI flags) lowers into one
+//!   via [`SessionSpec::from_run_config`].
+//! * [`resolve`] — the single seam where tasks meet manifest executable
+//!   names (`train_step_*` / `init_*` strings exist only there).
+//! * [`Session`] — the built runner: it streams batches lazily
+//!   ([`crate::batching::BatchStream`]: tokenize → pack → emit), stages
+//!   each distinct batch on the backend once, cycles when the corpus is
+//!   shorter than the run, and reports data accounting (padded tail,
+//!   oversized drops) alongside the [`TrainSummary`].
+//!
+//! ```
+//! use chronicals::session::{DataSource, PackingStrategy, SessionBuilder, Task};
+//!
+//! // Two full fine-tuning steps on the hermetic CPU reference backend —
+//! // no artifacts, no network, sub-second.
+//! let mut session = SessionBuilder::new()
+//!     .task(Task::FullFinetune)
+//!     .steps(2)
+//!     .lr(5e-3)
+//!     .data(DataSource::synthetic(64, 42, 48))
+//!     .packing(PackingStrategy::Bfd)
+//!     .build()?;
+//! let report = session.run()?;
+//! assert_eq!(report.summary.steps, 2);
+//! assert!(report.summary.last_loss.is_finite());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod resolve;
+
+pub use crate::batching::{PackingStrategy, TailPolicy};
+pub use resolve::{resolve_init, Resolved};
+
+use crate::backend::{create_backend, Backend, DeviceBatch};
+use crate::batching::BatchStream;
+use crate::checkpoint::Codec;
+use crate::config::RunConfig;
+use crate::coordinator::{StepRecord, Trainer, TrainSummary};
+use crate::data::{self, TokenizedExample};
+use anyhow::{bail, Result};
+use std::fmt;
+use std::path::Path;
+use std::rc::Rc;
+
+/// What to train — the typed replacement for the `executable: String` zoo.
+/// Variants cover the paper tables (full fine-tuning, LoRA, LoRA+, the
+/// ablation ladder rungs and the intentionally-broken §8 configs); the
+/// escape hatch for anything else is [`Task::Custom`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Task {
+    /// Full fine-tuning with the complete Chronicals stack (paper Table 2).
+    FullFinetune,
+    /// LoRA adapters. `rank: None` accepts whatever rank the backend's
+    /// executable was compiled with; `Some(r)` is validated against it.
+    Lora { rank: Option<usize> },
+    /// LoRA+ — dual learning rate with `lr_B = ratio · lr_A` (paper Thm. 1,
+    /// λ ≈ 16).
+    LoraPlus { rank: Option<usize>, ratio: f64 },
+    /// Ablation ladder rung: eager baseline (paper Table 4).
+    AblateNaive,
+    /// Ablation ladder rung: + FlashAttention.
+    AblateFlash,
+    /// Ablation ladder rung: + whole-graph compile.
+    AblateCompiled,
+    /// Ablation ladder rung: + fused kernels & Cut Cross-Entropy.
+    AblateLiger,
+    /// The Unsloth-shaped naive LoRA baseline (paper Table 3).
+    LoraNaive,
+    /// The intentionally-broken zero-gradient "fast mode" (paper §8 /
+    /// Fig. 10) — trains nothing while reporting high throughput.
+    LoraBroken,
+    /// Escape hatch: run a manifest executable by name (the legacy
+    /// `--executable` path). `init: None` derives `init_<variant>` with the
+    /// geometry-matching fallback.
+    Custom { executable: String, init: Option<String>, lora_plus_ratio: f64 },
+}
+
+impl Task {
+    /// Plain LoRA at the backend-default rank.
+    pub fn lora() -> Task {
+        Task::Lora { rank: None }
+    }
+
+    /// LoRA+ at the backend-default rank.
+    pub fn lora_plus(ratio: f64) -> Task {
+        Task::LoraPlus { rank: None, ratio }
+    }
+
+    /// The escape hatch for a manifest executable by name.
+    pub fn custom(executable: impl Into<String>) -> Task {
+        Task::Custom { executable: executable.into(), init: None, lora_plus_ratio: 1.0 }
+    }
+
+    /// Effective LoRA+ ratio λ for the lr schedule (1.0 = off).
+    pub fn lora_plus_ratio(&self) -> f64 {
+        match self {
+            Task::LoraPlus { ratio, .. } => *ratio,
+            Task::Custom { lora_plus_ratio, .. } => *lora_plus_ratio,
+            _ => 1.0,
+        }
+    }
+
+    /// Parse a CLI task name (`--task`), composing the optional
+    /// `--lora-rank` / `--lora-plus-ratio` flags.
+    pub fn parse(name: &str, rank: Option<usize>, ratio: Option<f64>) -> Result<Task> {
+        let base = match name {
+            "full-ft" | "full_ft" | "full" => Task::FullFinetune,
+            "lora" => Task::Lora { rank },
+            "lora-plus" | "lora_plus" => Task::LoraPlus { rank, ratio: ratio.unwrap_or(16.0) },
+            "ablate-naive" | "ablate_naive" => Task::AblateNaive,
+            "ablate-flash" | "ablate_flash" => Task::AblateFlash,
+            "ablate-compiled" | "ablate_compiled" => Task::AblateCompiled,
+            "ablate-liger" | "ablate_liger" => Task::AblateLiger,
+            "lora-naive" | "lora_naive" => Task::LoraNaive,
+            "lora-broken" | "lora_broken" => Task::LoraBroken,
+            other => bail!(
+                "unknown task '{other}' (expected full-ft | lora | lora-plus | ablate-naive | \
+                 ablate-flash | ablate-compiled | ablate-liger | lora-naive | lora-broken)"
+            ),
+        };
+        match base {
+            Task::Lora { rank } => Ok(match ratio {
+                Some(r) => Task::LoraPlus { rank, ratio: r },
+                None => Task::Lora { rank },
+            }),
+            Task::LoraPlus { .. } => Ok(base),
+            _ => {
+                if ratio.is_some() {
+                    bail!("--lora-plus-ratio requires a LoRA task ({base} is not one)");
+                }
+                if rank.is_some() {
+                    bail!("--lora-rank requires a LoRA task ({base} is not one)");
+                }
+                Ok(base)
+            }
+        }
+    }
+}
+
+impl fmt::Display for Task {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Task::FullFinetune => write!(f, "task full-ft"),
+            Task::Lora { rank: None } => write!(f, "task lora"),
+            Task::Lora { rank: Some(r) } => write!(f, "task lora (rank {r})"),
+            Task::LoraPlus { rank: None, ratio } => write!(f, "task lora-plus (λ={ratio})"),
+            Task::LoraPlus { rank: Some(r), ratio } => {
+                write!(f, "task lora-plus (rank {r}, λ={ratio})")
+            }
+            Task::AblateNaive => write!(f, "task ablate-naive"),
+            Task::AblateFlash => write!(f, "task ablate-flash"),
+            Task::AblateCompiled => write!(f, "task ablate-compiled"),
+            Task::AblateLiger => write!(f, "task ablate-liger"),
+            Task::LoraNaive => write!(f, "task lora-naive"),
+            Task::LoraBroken => write!(f, "task lora-broken"),
+            Task::Custom { executable, .. } => write!(f, "custom task '{executable}'"),
+        }
+    }
+}
+
+/// Learning-rate schedule (paper Table 7: constant or warmup + cosine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    Constant,
+    WarmupCosine { warmup: u64 },
+}
+
+impl Schedule {
+    /// Parse a CLI schedule name (`--schedule`), composing `--lr-warmup`.
+    pub fn parse(name: &str, warmup: u64) -> Result<Schedule> {
+        Ok(match name {
+            "constant" => Schedule::Constant,
+            "warmup-cosine" | "warmup_cosine" | "cosine" => Schedule::WarmupCosine { warmup },
+            other => bail!("unknown schedule '{other}' (expected constant | warmup-cosine)"),
+        })
+    }
+
+    /// Concrete per-step schedule for a run of `steps` steps.
+    pub fn lr_schedule(&self, lr: f64, steps: u64, lora_plus_ratio: f64) -> crate::optim::LrSchedule {
+        match self {
+            Schedule::Constant => crate::optim::LrSchedule::constant(lr, lora_plus_ratio),
+            Schedule::WarmupCosine { warmup } => {
+                crate::optim::LrSchedule::warmup_cosine(lr, *warmup, steps, lora_plus_ratio)
+            }
+        }
+    }
+}
+
+/// Execution backend selection (typed mirror of `--backend`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BackendSpec {
+    /// Pure-Rust deterministic reference backend (the default oracle).
+    Cpu,
+    /// Threaded fused-kernel CPU backend; `threads: 0` = autodetect.
+    CpuFast { threads: usize },
+    /// AOT artifacts via PJRT (needs a `--features pjrt` build).
+    Pjrt { artifacts_dir: String },
+}
+
+impl BackendSpec {
+    /// Parse a CLI/config backend name.
+    pub fn parse(name: &str, artifacts_dir: &str, threads: usize) -> Result<BackendSpec> {
+        Ok(match name {
+            "cpu" => BackendSpec::Cpu,
+            "cpu-fast" | "cpu_fast" => BackendSpec::CpuFast { threads },
+            "pjrt" => BackendSpec::Pjrt { artifacts_dir: artifacts_dir.to_string() },
+            other => bail!("unknown backend '{other}' (expected cpu | cpu-fast | pjrt)"),
+        })
+    }
+
+    /// Instantiate the backend.
+    pub fn create(&self) -> Result<Rc<dyn Backend>> {
+        match self {
+            BackendSpec::Cpu => create_backend("cpu", "", 0),
+            BackendSpec::CpuFast { threads } => create_backend("cpu-fast", "", *threads),
+            BackendSpec::Pjrt { artifacts_dir } => create_backend("pjrt", artifacts_dir, 0),
+        }
+    }
+}
+
+/// A pluggable source of tokenized training examples. Implement this to
+/// feed real datasets through the session pipeline; the synthetic corpus
+/// is the built-in implementation.
+pub trait ExampleSource {
+    /// Human-readable label for logs and reports.
+    fn label(&self) -> String;
+    /// Produce tokenized examples with every token id `< vocab_cap`.
+    fn examples(&self, vocab_cap: usize) -> Result<Vec<TokenizedExample>>;
+}
+
+/// Where training data comes from.
+#[derive(Clone)]
+pub enum DataSource {
+    /// The built-in synthetic instruction corpus (the paper's
+    /// Alpaca-shaped substitute, DESIGN.md §2): `examples` examples from
+    /// `seed`, each truncated to `max_seq` tokens.
+    Synthetic { examples: usize, seed: u64, max_seq: usize },
+    /// Any external source behind the [`ExampleSource`] trait.
+    Custom(Rc<dyn ExampleSource>),
+}
+
+impl DataSource {
+    pub fn synthetic(examples: usize, seed: u64, max_seq: usize) -> DataSource {
+        DataSource::Synthetic { examples, seed, max_seq }
+    }
+
+    /// Materialize the tokenized example set.
+    pub fn tokenized(&self, vocab_cap: usize) -> Result<Vec<TokenizedExample>> {
+        match self {
+            DataSource::Synthetic { examples, seed, max_seq } => {
+                Ok(data::build_corpus(*examples, *seed, vocab_cap, *max_seq).1)
+            }
+            DataSource::Custom(src) => src.examples(vocab_cap),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            DataSource::Synthetic { examples, seed, max_seq } => {
+                format!("synthetic({examples} examples, seed {seed}, max_seq {max_seq})")
+            }
+            DataSource::Custom(src) => src.label(),
+        }
+    }
+}
+
+impl fmt::Debug for DataSource {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+impl PartialEq for DataSource {
+    fn eq(&self, other: &DataSource) -> bool {
+        match (self, other) {
+            (
+                DataSource::Synthetic { examples: a, seed: b, max_seq: c },
+                DataSource::Synthetic { examples: x, seed: y, max_seq: z },
+            ) => a == x && b == y && c == z,
+            (DataSource::Custom(a), DataSource::Custom(b)) => Rc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+}
+
+/// The validated, typed description of one training run. Built by
+/// [`SessionBuilder`] or lowered from a legacy [`RunConfig`]; turned into a
+/// runnable [`Session`] by [`SessionSpec::build`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionSpec {
+    pub task: Task,
+    pub schedule: Schedule,
+    pub packing: PackingStrategy,
+    pub data: DataSource,
+    pub backend: BackendSpec,
+    pub steps: u64,
+    /// Throughput-meter warmup steps excluded from tokens/sec.
+    pub meter_warmup: usize,
+    pub seed: u64,
+    pub lr: f64,
+}
+
+impl SessionSpec {
+    /// Validate everything that can be checked without a backend manifest.
+    /// (Manifest-dependent checks — unknown executables, LoRA rank
+    /// mismatches — happen in [`resolve::resolve`] at build time.)
+    pub fn validate(&self) -> Result<()> {
+        if self.steps == 0 {
+            bail!("steps must be positive");
+        }
+        if !self.lr.is_finite() || self.lr <= 0.0 {
+            bail!("learning rate must be positive and finite (got {})", self.lr);
+        }
+        if let Schedule::WarmupCosine { warmup } = self.schedule {
+            if warmup >= self.steps {
+                bail!(
+                    "lr warmup ({warmup} steps) must be shorter than the run ({} steps)",
+                    self.steps
+                );
+            }
+        }
+        match &self.task {
+            Task::LoraPlus { ratio, .. } => {
+                if !ratio.is_finite() || *ratio <= 0.0 {
+                    bail!("LoRA+ ratio λ must be positive and finite (got {ratio})");
+                }
+            }
+            Task::Custom { executable, lora_plus_ratio, .. } => {
+                if executable.is_empty() {
+                    bail!("custom task needs a non-empty executable name");
+                }
+                if !lora_plus_ratio.is_finite() || *lora_plus_ratio <= 0.0 {
+                    bail!("LoRA+ ratio λ must be positive and finite (got {lora_plus_ratio})");
+                }
+            }
+            _ => {}
+        }
+        if let DataSource::Synthetic { examples, max_seq, .. } = &self.data {
+            if *examples == 0 {
+                bail!("synthetic data source needs at least one example");
+            }
+            if *max_seq == 0 {
+                bail!("synthetic data source needs max_seq > 0");
+            }
+        }
+        Ok(())
+    }
+
+    /// Lower a legacy [`RunConfig`] (TOML file, preset or legacy CLI flags)
+    /// into a typed spec. Known executable names become typed tasks; the
+    /// rest go through [`Task::Custom`], so `--executable` keeps working as
+    /// an escape hatch and both paths produce identical runs.
+    pub fn from_run_config(cfg: &RunConfig) -> Result<SessionSpec> {
+        let init =
+            if cfg.init_executable.is_empty() { None } else { Some(cfg.init_executable.as_str()) };
+        let task = resolve::task_from_executable(&cfg.executable, init, cfg.lora_plus_ratio);
+        let schedule = match cfg.lr_schedule.as_str() {
+            "constant" => Schedule::Constant,
+            "warmup_cosine" | "warmup-cosine" => {
+                Schedule::WarmupCosine { warmup: cfg.lr_warmup_steps }
+            }
+            other => bail!("unknown lr_schedule '{other}' (expected constant | warmup_cosine)"),
+        };
+        let packing = if cfg.packed { PackingStrategy::Bfd } else { PackingStrategy::Padded };
+        let backend =
+            BackendSpec::parse(&cfg.backend, &cfg.artifacts_dir, cfg.effective_threads())?;
+        let spec = SessionSpec {
+            task,
+            schedule,
+            packing,
+            data: DataSource::Synthetic {
+                examples: cfg.corpus_examples,
+                seed: cfg.seed,
+                max_seq: cfg.max_seq,
+            },
+            backend,
+            steps: cfg.steps,
+            meter_warmup: cfg.warmup_steps,
+            seed: cfg.seed,
+            lr: cfg.lr,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Build a runnable session, creating the backend from
+    /// [`SessionSpec::backend`].
+    pub fn build(self) -> Result<Session> {
+        let backend = self.backend.create()?;
+        Session::with_backend(self, backend)
+    }
+}
+
+/// Fluent builder for a [`SessionSpec`] / [`Session`]. Defaults mirror
+/// `RunConfig::default()`: 50 steps, lr 2e-4, seed 42, BFD packing,
+/// constant schedule, 2048-example synthetic corpus, CPU reference backend.
+pub struct SessionBuilder {
+    task: Task,
+    schedule: Schedule,
+    packing: PackingStrategy,
+    data: Option<DataSource>,
+    backend_spec: BackendSpec,
+    backend: Option<Rc<dyn Backend>>,
+    steps: u64,
+    meter_warmup: usize,
+    seed: u64,
+    lr: f64,
+    lora_plus_ratio: Option<f64>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder::new()
+    }
+}
+
+impl SessionBuilder {
+    pub fn new() -> SessionBuilder {
+        SessionBuilder {
+            task: Task::FullFinetune,
+            schedule: Schedule::Constant,
+            packing: PackingStrategy::Bfd,
+            data: None,
+            backend_spec: BackendSpec::Cpu,
+            backend: None,
+            steps: 50,
+            meter_warmup: 3,
+            seed: 42,
+            lr: 2e-4,
+            lora_plus_ratio: None,
+        }
+    }
+
+    pub fn task(mut self, task: Task) -> Self {
+        self.task = task;
+        self
+    }
+
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    pub fn packing(mut self, packing: PackingStrategy) -> Self {
+        self.packing = packing;
+        self
+    }
+
+    pub fn data(mut self, data: DataSource) -> Self {
+        self.data = Some(data);
+        self
+    }
+
+    /// Select the backend by spec (created at build time).
+    pub fn backend(mut self, backend: BackendSpec) -> Self {
+        self.backend_spec = backend;
+        self
+    }
+
+    /// Run on an already-constructed backend (tests, benches, sharing one
+    /// backend across sessions). Overrides [`SessionBuilder::backend`].
+    pub fn on_backend(mut self, backend: Rc<dyn Backend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    pub fn steps(mut self, steps: u64) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    /// Throughput-meter warmup steps excluded from tokens/sec.
+    pub fn meter_warmup(mut self, steps: usize) -> Self {
+        self.meter_warmup = steps;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn lr(mut self, lr: f64) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    /// LoRA+ ratio λ; composes with the task at build time (a [`Task::Lora`]
+    /// task becomes [`Task::LoraPlus`]). Setting it on a non-LoRA task is a
+    /// build error.
+    pub fn lora_plus_ratio(mut self, ratio: f64) -> Self {
+        self.lora_plus_ratio = Some(ratio);
+        self
+    }
+
+    /// Validate and produce the plain-data spec.
+    pub fn build_spec(self) -> Result<SessionSpec> {
+        let task = match (self.task, self.lora_plus_ratio) {
+            (t, None) => t,
+            (Task::Lora { rank }, Some(r)) | (Task::LoraPlus { rank, .. }, Some(r)) => {
+                Task::LoraPlus { rank, ratio: r }
+            }
+            (Task::Custom { executable, init, .. }, Some(r)) => {
+                Task::Custom { executable, init, lora_plus_ratio: r }
+            }
+            (t, Some(r)) if (r - 1.0).abs() < 1e-12 => t, // λ=1 is "off"
+            (t, Some(r)) => bail!("LoRA+ ratio λ={r} requires a LoRA task ({t} is not one)"),
+        };
+        let seed = self.seed;
+        let data = self
+            .data
+            .unwrap_or(DataSource::Synthetic { examples: 2048, seed, max_seq: 1024 });
+        let spec = SessionSpec {
+            task,
+            schedule: self.schedule,
+            packing: self.packing,
+            data,
+            backend: self.backend_spec,
+            steps: self.steps,
+            meter_warmup: self.meter_warmup,
+            seed,
+            lr: self.lr,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Validate, create (or adopt) the backend, resolve the task against
+    /// its manifest and initialize training state.
+    pub fn build(mut self) -> Result<Session> {
+        let backend = self.backend.take();
+        let spec = self.build_spec()?;
+        match backend {
+            Some(be) => Session::with_backend(spec, be),
+            None => spec.build(),
+        }
+    }
+}
+
+/// Everything a run reports: the training summary plus the data-pipeline
+/// accounting that used to be lost silently.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub summary: TrainSummary,
+    /// Examples the data source produced.
+    pub examples: usize,
+    /// Examples skipped by the packing plan because they exceed the row
+    /// capacity `S` (paper Alg. 16 "skip oversized"). Zero for `Padded`
+    /// (it truncates instead).
+    pub oversized_dropped: usize,
+    /// Distinct batches staged on the backend (≤ steps; the stream cycles
+    /// over staged batches when the corpus is shorter than the run).
+    pub batches_staged: usize,
+    /// Batches the packing plan produced in total.
+    pub batches_planned: usize,
+    /// Whether the final planned batch carries empty padding rows (the
+    /// partial tail is padded, not dropped — no example is lost).
+    pub tail_padded: bool,
+}
+
+/// A built, runnable training session: backend + resolved executables +
+/// trainer, driving the lazy batch stream.
+pub struct Session {
+    spec: SessionSpec,
+    backend: Rc<dyn Backend>,
+    resolved: Resolved,
+    trainer: Trainer,
+}
+
+impl Session {
+    /// Build on an explicit backend instance (ignores `spec.backend`).
+    pub fn with_backend(spec: SessionSpec, backend: Rc<dyn Backend>) -> Result<Session> {
+        spec.validate()?;
+        let resolved = resolve::resolve(backend.manifest(), &spec.task)?;
+        let schedule = spec.schedule.lr_schedule(spec.lr, spec.steps, resolved.lora_plus_ratio);
+        let state = backend.init_state(&resolved.init, spec.seed as i32)?;
+        let trainer =
+            Trainer::new(backend.clone(), &resolved.train, state, schedule, spec.meter_warmup)?;
+        Ok(Session { spec, backend, resolved, trainer })
+    }
+
+    pub fn spec(&self) -> &SessionSpec {
+        &self.spec
+    }
+
+    /// The manifest wiring this session resolved to.
+    pub fn resolved(&self) -> &Resolved {
+        &self.resolved
+    }
+
+    pub fn backend(&self) -> &Rc<dyn Backend> {
+        &self.backend
+    }
+
+    /// Per-step records (loss curve, grad norms) accumulated so far.
+    pub fn records(&self) -> &[StepRecord] {
+        &self.trainer.records
+    }
+
+    /// Direct access to the underlying trainer (eval, manual stepping).
+    pub fn trainer_mut(&mut self) -> &mut Trainer {
+        &mut self.trainer
+    }
+
+    /// Save current parameters to a checkpoint file.
+    pub fn save_checkpoint(&self, path: impl AsRef<Path>, codec: Codec) -> Result<()> {
+        self.trainer.save_checkpoint(path, codec)
+    }
+
+    /// Run the configured number of steps: tokenize → pack → stream
+    /// batches lazily, staging each distinct batch on the backend once and
+    /// cycling over staged batches when the stream is exhausted. The tail
+    /// batch is padded, never dropped ([`TailPolicy::Pad`]).
+    pub fn run(&mut self) -> Result<RunReport> {
+        let exe = &self.resolved.spec;
+        // vocab cap = the model's vocab so token ids stay in range
+        let vocab = exe.model_config.vocab.max(64);
+        let (batch, seq) = (exe.batch, exe.seq);
+        let examples = self.spec.data.tokenized(vocab)?;
+        let n_examples = examples.len();
+        let mut stream =
+            BatchStream::new(examples, self.spec.packing, batch, seq, TailPolicy::Pad);
+        if stream.n_batches() == 0 {
+            bail!(
+                "no batches for '{}' (B={batch}, S={seq}, {n_examples} examples from {})",
+                self.resolved.train,
+                self.spec.data.label()
+            );
+        }
+        let batches_planned = stream.n_batches();
+        let oversized_dropped = stream.oversized_dropped();
+        let tail_padded = stream.tail_padded();
+
+        let mut staged: Vec<DeviceBatch> = Vec::new();
+        for i in 0..self.spec.steps {
+            match stream.next() {
+                Some(b) => {
+                    staged.push(self.trainer.upload_batch(&b)?);
+                    let ub = staged.last().expect("just pushed");
+                    self.trainer.step_uploaded(ub)?;
+                }
+                None => {
+                    let idx = (i % staged.len() as u64) as usize;
+                    self.trainer.step_uploaded(&staged[idx])?;
+                }
+            }
+        }
+        Ok(RunReport {
+            summary: self.trainer.summary(),
+            examples: n_examples,
+            oversized_dropped,
+            batches_staged: staged.len(),
+            batches_planned,
+            tail_padded,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_validate() {
+        let spec = SessionBuilder::new().build_spec().unwrap();
+        assert_eq!(spec.task, Task::FullFinetune);
+        assert_eq!(spec.packing, PackingStrategy::Bfd);
+        assert_eq!(spec.steps, 50);
+    }
+
+    #[test]
+    fn zero_steps_rejected() {
+        let err = SessionBuilder::new().steps(0).build_spec().unwrap_err();
+        assert!(err.to_string().contains("steps"), "{err}");
+    }
+
+    #[test]
+    fn warmup_longer_than_run_rejected() {
+        let err = SessionBuilder::new()
+            .steps(10)
+            .schedule(Schedule::WarmupCosine { warmup: 10 })
+            .build_spec()
+            .unwrap_err();
+        assert!(err.to_string().contains("warmup"), "{err}");
+    }
+
+    #[test]
+    fn ratio_on_non_lora_task_rejected() {
+        let err = SessionBuilder::new()
+            .task(Task::FullFinetune)
+            .lora_plus_ratio(16.0)
+            .build_spec()
+            .unwrap_err();
+        assert!(err.to_string().contains("LoRA"), "{err}");
+        // λ=1 means "off" and is accepted everywhere
+        assert!(SessionBuilder::new()
+            .task(Task::FullFinetune)
+            .lora_plus_ratio(1.0)
+            .build_spec()
+            .is_ok());
+    }
+
+    #[test]
+    fn ratio_composes_with_lora_task() {
+        let spec = SessionBuilder::new()
+            .task(Task::lora())
+            .lora_plus_ratio(16.0)
+            .build_spec()
+            .unwrap();
+        assert_eq!(spec.task, Task::LoraPlus { rank: None, ratio: 16.0 });
+    }
+
+    #[test]
+    fn nonpositive_ratio_rejected() {
+        let err = SessionBuilder::new().task(Task::lora_plus(0.0)).build_spec().unwrap_err();
+        assert!(err.to_string().contains("positive"), "{err}");
+    }
+
+    #[test]
+    fn empty_corpus_rejected() {
+        let err = SessionBuilder::new()
+            .data(DataSource::synthetic(0, 1, 64))
+            .build_spec()
+            .unwrap_err();
+        assert!(err.to_string().contains("example"), "{err}");
+    }
+
+    #[test]
+    fn unknown_backend_name_rejected() {
+        assert!(BackendSpec::parse("tpu", "", 0).is_err());
+    }
+
+    #[test]
+    fn task_parse_cli_names() {
+        assert_eq!(Task::parse("full-ft", None, None).unwrap(), Task::FullFinetune);
+        assert_eq!(
+            Task::parse("lora-plus", None, None).unwrap(),
+            Task::LoraPlus { rank: None, ratio: 16.0 }
+        );
+        assert_eq!(
+            Task::parse("lora", Some(4), Some(8.0)).unwrap(),
+            Task::LoraPlus { rank: Some(4), ratio: 8.0 }
+        );
+        assert!(Task::parse("full-ft", None, Some(16.0)).is_err());
+        assert!(Task::parse("ablate-naive", Some(4), None).is_err());
+        assert!(Task::parse("frobnicate", None, None).is_err());
+    }
+
+    #[test]
+    fn schedule_parse_names() {
+        assert_eq!(Schedule::parse("constant", 0).unwrap(), Schedule::Constant);
+        assert_eq!(
+            Schedule::parse("warmup-cosine", 5).unwrap(),
+            Schedule::WarmupCosine { warmup: 5 }
+        );
+        assert!(Schedule::parse("linear", 0).is_err());
+    }
+}

@@ -1,0 +1,239 @@
+//! The one seam where typed tasks meet manifest executable names.
+//!
+//! Every `train_step_*` / `init_*` string in the crate is constructed (or
+//! recognized) here and nowhere else: callers hold a typed
+//! [`Task`](super::Task) and receive a [`Resolved`] wiring — executable
+//! names plus the manifest spec — so the manifest string zoo never leaks
+//! into the harness, the CLI or the benches. The geometry-matching init
+//! fallback that used to live in `harness::resolve_init` lives here too.
+
+use super::Task;
+use crate::manifest::{ExecutableSpec, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A task resolved against a concrete backend manifest: the exact train and
+/// init executables to run, the executable spec (geometry, param counts,
+/// step config echo) and the effective LoRA+ ratio for the lr schedule.
+#[derive(Debug, Clone)]
+pub struct Resolved {
+    pub train: String,
+    pub init: String,
+    pub spec: ExecutableSpec,
+    pub lora_plus_ratio: f64,
+}
+
+/// The e2e-scale train executable (PJRT artifact set only; the CPU
+/// substrate backends don't register it). Used by the `e2e` preset; it has
+/// no typed task of its own, so runs lower through [`Task::Custom`].
+pub const E2E_EXECUTABLE: &str = "train_step_e2e";
+
+/// The manifest executable name a task runs. This is the only place in the
+/// crate that *builds* `train_step_*` names.
+pub fn train_executable(task: &Task) -> String {
+    match task {
+        Task::FullFinetune => "train_step_chronicals".into(),
+        Task::Lora { .. } | Task::LoraPlus { .. } => "train_step_lora".into(),
+        Task::AblateNaive => "train_step_ablate_naive".into(),
+        Task::AblateFlash => "train_step_ablate_flash".into(),
+        Task::AblateCompiled => "train_step_ablate_compiled".into(),
+        Task::AblateLiger => "train_step_ablate_liger".into(),
+        Task::LoraNaive => "train_step_lora_naive".into(),
+        Task::LoraBroken => "train_step_lora_broken".into(),
+        Task::Custom { executable, .. } => executable.clone(),
+    }
+}
+
+/// Derive the canonical `init_<variant>` name from a train executable name.
+pub fn derive_init_name(train: &str) -> String {
+    train
+        .strip_prefix("train_step_")
+        .map(|v| format!("init_{v}"))
+        .unwrap_or_else(|| "init_chronicals".into())
+}
+
+/// Recognize a legacy executable-name string as a typed task (the
+/// `RunConfig` → `SessionSpec` lowering direction). Unknown names — and any
+/// combination that the typed variants cannot express, like an explicit
+/// init override — become [`Task::Custom`], the escape hatch.
+pub fn task_from_executable(
+    executable: &str,
+    init: Option<&str>,
+    lora_plus_ratio: f64,
+) -> Task {
+    if init.is_some() {
+        return Task::Custom {
+            executable: executable.to_string(),
+            init: init.map(str::to_string),
+            lora_plus_ratio,
+        };
+    }
+    let ratio_is_off = (lora_plus_ratio - 1.0).abs() < 1e-12;
+    match executable {
+        "train_step_chronicals" if ratio_is_off => Task::FullFinetune,
+        "train_step_lora" if ratio_is_off => Task::Lora { rank: None },
+        "train_step_lora" => Task::LoraPlus { rank: None, ratio: lora_plus_ratio },
+        "train_step_ablate_naive" if ratio_is_off => Task::AblateNaive,
+        "train_step_ablate_flash" if ratio_is_off => Task::AblateFlash,
+        "train_step_ablate_compiled" if ratio_is_off => Task::AblateCompiled,
+        "train_step_ablate_liger" if ratio_is_off => Task::AblateLiger,
+        "train_step_lora_naive" if ratio_is_off => Task::LoraNaive,
+        "train_step_lora_broken" if ratio_is_off => Task::LoraBroken,
+        other => Task::Custom {
+            executable: other.to_string(),
+            init: None,
+            lora_plus_ratio,
+        },
+    }
+}
+
+/// Resolve a task against a backend manifest: pick the train executable,
+/// validate what the backend actually provides (kind, LoRA rank), and find
+/// a usable init executable.
+pub fn resolve(manifest: &Manifest, task: &Task) -> Result<Resolved> {
+    let train = train_executable(task);
+    let spec = manifest
+        .get(&train)
+        .with_context(|| format!("resolving {task} on this backend"))?
+        .clone();
+    if spec.kind != "train" {
+        bail!("{task} resolves to '{train}', which is not a train executable (kind = {})", spec.kind);
+    }
+    if let Task::Lora { rank: Some(r) } | Task::LoraPlus { rank: Some(r), .. } = task {
+        if spec.step_config.lora_rank != *r {
+            bail!(
+                "{task} requests LoRA rank {r}, but '{train}' on this backend is compiled \
+                 with rank {} — drop the rank to accept the backend default",
+                spec.step_config.lora_rank
+            );
+        }
+    }
+    let preferred = match task {
+        Task::Custom { init: Some(i), .. } => i.clone(),
+        _ => derive_init_name(&train),
+    };
+    let init = resolve_init(manifest, &train, &preferred)?;
+    Ok(Resolved { train, init, spec, lora_plus_ratio: task.lora_plus_ratio() })
+}
+
+/// Find a usable init executable: the requested one, else the canonical
+/// init for the same family and model/batch geometry (ablation aliases and
+/// broken variants have no init of their own).
+pub fn resolve_init(manifest: &Manifest, train_name: &str, preferred: &str) -> Result<String> {
+    if manifest.get(preferred).is_ok() {
+        return Ok(preferred.to_string());
+    }
+    let train = manifest.get(train_name)?;
+    for e in &manifest.executables {
+        if e.kind == "init"
+            && e.family == train.family
+            && e.n_trainable == train.n_trainable
+            && e.n_frozen == train.n_frozen
+            // same tensor count is not enough — shapes must match too
+            && e.param_count == train.param_count
+        {
+            return Ok(e.name.clone());
+        }
+    }
+    Err(anyhow!("no init executable for {train_name}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cpu::CpuBackend;
+    use crate::backend::Backend;
+
+    #[test]
+    fn typed_tasks_resolve_on_the_reference_backend() {
+        let be = CpuBackend::new();
+        for task in [
+            Task::FullFinetune,
+            Task::Lora { rank: None },
+            Task::LoraPlus { rank: None, ratio: 16.0 },
+            Task::AblateNaive,
+            Task::AblateFlash,
+            Task::AblateCompiled,
+            Task::AblateLiger,
+            Task::LoraNaive,
+            Task::LoraBroken,
+        ] {
+            let r = resolve(be.manifest(), &task).unwrap();
+            assert_eq!(r.spec.kind, "train", "{task}");
+            assert!(!r.init.is_empty(), "{task}");
+        }
+    }
+
+    #[test]
+    fn ablation_and_broken_variants_fall_back_to_family_init() {
+        let be = CpuBackend::new();
+        let r = resolve(be.manifest(), &Task::AblateNaive).unwrap();
+        assert_eq!(r.init, "init_chronicals");
+        let r = resolve(be.manifest(), &Task::LoraBroken).unwrap();
+        assert_eq!(r.init, "init_lora");
+    }
+
+    #[test]
+    fn rank_mismatch_is_a_build_time_error() {
+        let be = CpuBackend::new();
+        // the reference substrate compiles rank 4
+        let err = resolve(be.manifest(), &Task::Lora { rank: Some(32) }).unwrap_err();
+        assert!(err.to_string().contains("rank"), "{err}");
+        assert!(resolve(be.manifest(), &Task::Lora { rank: Some(4) }).is_ok());
+    }
+
+    #[test]
+    fn unknown_custom_executable_errors_with_context() {
+        let be = CpuBackend::new();
+        let task = Task::Custom {
+            executable: "train_step_nope".into(),
+            init: None,
+            lora_plus_ratio: 1.0,
+        };
+        let err = resolve(be.manifest(), &task).unwrap_err();
+        assert!(format!("{err:#}").contains("not in manifest"), "{err:#}");
+    }
+
+    #[test]
+    fn lowering_recognizes_known_names() {
+        assert_eq!(task_from_executable("train_step_chronicals", None, 1.0), Task::FullFinetune);
+        assert_eq!(
+            task_from_executable("train_step_lora", None, 1.0),
+            Task::Lora { rank: None }
+        );
+        assert_eq!(
+            task_from_executable("train_step_lora", None, 16.0),
+            Task::LoraPlus { rank: None, ratio: 16.0 }
+        );
+        assert_eq!(task_from_executable("train_step_lora_broken", None, 1.0), Task::LoraBroken);
+        // unknown names and explicit inits stay custom
+        assert_eq!(
+            task_from_executable("train_step_e2e", None, 1.0),
+            Task::Custom { executable: "train_step_e2e".into(), init: None, lora_plus_ratio: 1.0 }
+        );
+        assert_eq!(
+            task_from_executable("train_step_lora", Some("init_special"), 1.0),
+            Task::Custom {
+                executable: "train_step_lora".into(),
+                init: Some("init_special".into()),
+                lora_plus_ratio: 1.0
+            }
+        );
+    }
+
+    #[test]
+    fn lowering_roundtrips_through_train_executable() {
+        for name in [
+            "train_step_chronicals",
+            "train_step_lora",
+            "train_step_ablate_naive",
+            "train_step_ablate_flash",
+            "train_step_ablate_compiled",
+            "train_step_ablate_liger",
+            "train_step_lora_naive",
+            "train_step_lora_broken",
+        ] {
+            let task = task_from_executable(name, None, 1.0);
+            assert_eq!(train_executable(&task), name);
+        }
+    }
+}

@@ -281,7 +281,8 @@ fn same_seed_runs_are_bitwise_identical() {
             0,
         )
         .unwrap();
-        trainer.run(&batches, 12).unwrap();
+        assert!(batches.len() >= 12, "corpus too small for a 12-step epoch");
+        trainer.run(batches.iter().cloned().take(12)).unwrap();
         trainer
             .records
             .iter()
@@ -387,8 +388,12 @@ mod pjrt_integration {
     #[test]
     fn checkpoint_roundtrip_from_device_state() {
         let Some(be) = pjrt() else { return };
-        let init = harness::resolve_init(be.manifest(), "train_step_chronicals", "init_chronicals")
-            .unwrap();
+        let init = chronicals::session::resolve_init(
+            be.manifest(),
+            "train_step_chronicals",
+            "init_chronicals",
+        )
+        .unwrap();
         let state = be.init_state(&init, 11).unwrap();
         let tensors = be.state_params(&state).unwrap();
         let path = std::env::temp_dir().join("chronicals_pjrt_integration.ckpt");

@@ -1,0 +1,237 @@
+//! Integration tests for the typed Session API (ISSUE 3):
+//!
+//! * the acceptance gate: `--task lora-plus --packing bfd` and the legacy
+//!   `--executable train_step_lora` escape hatch produce bitwise-identical
+//!   summaries on the CPU reference backend,
+//! * `RunConfig` (TOML + every preset) → `SessionSpec` lowering,
+//! * `BatchStream` vs the materialized helpers on a real corpus,
+//! * build-time validation against a backend manifest,
+//! * run-report data accounting (padded tail, oversized drops, cycling).
+
+use chronicals::backend::cpu::CpuBackend;
+use chronicals::backend::Backend;
+use chronicals::batching::{
+    packed_batches, padded_batches, BatchStream, PackingStrategy, TailPolicy,
+};
+use chronicals::config::RunConfig;
+use chronicals::harness;
+use chronicals::session::{
+    BackendSpec, DataSource, Schedule, SessionBuilder, SessionSpec, Task,
+};
+use std::rc::Rc;
+
+fn cpu() -> Rc<dyn Backend> {
+    Rc::new(CpuBackend::new())
+}
+
+/// The ISSUE acceptance criterion: the typed task surface and the
+/// stringly escape hatch must be the same run, bit for bit.
+#[test]
+fn typed_task_and_executable_escape_hatch_are_bitwise_identical() {
+    let be = cpu();
+
+    // `chronicals train --task lora-plus --packing bfd`
+    let mut typed = SessionBuilder::new()
+        .task(Task::lora_plus(16.0))
+        .packing(PackingStrategy::Bfd)
+        .steps(8)
+        .lr(1e-3)
+        .seed(11)
+        .data(DataSource::synthetic(192, 11, 48))
+        .on_backend(be.clone())
+        .build()
+        .unwrap();
+    let t = typed.run().unwrap().summary;
+
+    // `chronicals train --executable train_step_lora --lora-plus-ratio 16`
+    let cfg = RunConfig {
+        executable: "train_step_lora".into(),
+        lora_plus_ratio: 16.0,
+        packed: true,
+        steps: 8,
+        lr: 1e-3,
+        seed: 11,
+        corpus_examples: 192,
+        max_seq: 48,
+        warmup_steps: 3,
+        ..RunConfig::default()
+    };
+    let e = harness::run_variant(&be, &cfg).unwrap();
+
+    assert_eq!(t.first_loss.to_bits(), e.first_loss.to_bits());
+    assert_eq!(t.last_loss.to_bits(), e.last_loss.to_bits());
+    assert_eq!(
+        t.verification.min_grad_norm.to_bits(),
+        e.verification.min_grad_norm.to_bits()
+    );
+    assert_eq!(
+        t.verification.max_grad_norm.to_bits(),
+        e.verification.max_grad_norm.to_bits()
+    );
+    assert!(t.verification.is_training && e.verification.is_training);
+}
+
+#[test]
+fn presets_lower_to_typed_specs() {
+    let full = SessionSpec::from_run_config(&RunConfig::preset("full_ft").unwrap()).unwrap();
+    assert_eq!(full.task, Task::FullFinetune);
+    assert_eq!(full.packing, PackingStrategy::Bfd);
+    assert_eq!(full.schedule, Schedule::Constant);
+    assert_eq!(full.backend, BackendSpec::Cpu);
+
+    let lora = SessionSpec::from_run_config(&RunConfig::preset("lora").unwrap()).unwrap();
+    assert_eq!(lora.task, Task::Lora { rank: None });
+
+    let lp = SessionSpec::from_run_config(&RunConfig::preset("lora_plus").unwrap()).unwrap();
+    assert_eq!(lp.task, Task::LoraPlus { rank: None, ratio: 16.0 });
+
+    let e2e = SessionSpec::from_run_config(&RunConfig::preset("e2e").unwrap()).unwrap();
+    assert_eq!(e2e.schedule, Schedule::WarmupCosine { warmup: 10 });
+    assert_eq!(e2e.steps, 300);
+    match &e2e.task {
+        Task::Custom { executable, init, lora_plus_ratio } => {
+            assert_eq!(executable, "train_step_e2e");
+            assert!(init.is_none());
+            assert_eq!(*lora_plus_ratio, 1.0);
+        }
+        other => panic!("e2e should lower to Custom, got {other:?}"),
+    }
+}
+
+#[test]
+fn toml_lowers_to_typed_spec() {
+    let cfg = RunConfig::from_toml(
+        r#"
+[train]
+executable = "train_step_lora"
+steps = 25
+[data]
+packed = false
+corpus_examples = 512
+max_seq = 256
+[optim]
+lr = 1e-3
+lora_plus_ratio = 16.0
+lr_schedule = "warmup_cosine"
+lr_warmup_steps = 5
+"#,
+    )
+    .unwrap();
+    let spec = SessionSpec::from_run_config(&cfg).unwrap();
+    assert_eq!(spec.task, Task::LoraPlus { rank: None, ratio: 16.0 });
+    assert_eq!(spec.packing, PackingStrategy::Padded);
+    assert_eq!(spec.schedule, Schedule::WarmupCosine { warmup: 5 });
+    assert_eq!(spec.steps, 25);
+    assert_eq!(spec.lr, 1e-3);
+    assert_eq!(spec.data, DataSource::synthetic(512, cfg.seed, 256));
+}
+
+#[test]
+fn lowering_rejects_bad_strings_with_real_errors() {
+    let bad_schedule = RunConfig { lr_schedule: "linear".into(), ..RunConfig::default() };
+    let err = SessionSpec::from_run_config(&bad_schedule).unwrap_err();
+    assert!(err.to_string().contains("lr_schedule"), "{err}");
+
+    let bad_backend = RunConfig { backend: "tpu".into(), ..RunConfig::default() };
+    let err = SessionSpec::from_run_config(&bad_backend).unwrap_err();
+    assert!(err.to_string().contains("backend"), "{err}");
+}
+
+#[test]
+fn unknown_executable_on_backend_is_a_build_error() {
+    // the e2e-scale executable exists only in the PJRT artifact set — on
+    // the CPU substrate it must fail at build(), naming the executable
+    let err = SessionBuilder::new()
+        .task(Task::custom("train_step_e2e"))
+        .on_backend(cpu())
+        .build()
+        .map(|_| ())
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("train_step_e2e"), "{msg}");
+    assert!(msg.contains("not in manifest"), "{msg}");
+}
+
+#[test]
+fn batch_stream_matches_materialized_helpers_on_real_corpus() {
+    let (_tok, exs) = harness::build_corpus(256, 9, 64, 48);
+    for (strategy, eager) in [
+        (PackingStrategy::Bfd, packed_batches(&exs, 4, 64)),
+        (PackingStrategy::Padded, padded_batches(&exs, 4, 64)),
+    ] {
+        let streamed: Vec<_> =
+            BatchStream::new(exs.clone(), strategy, 4, 64, TailPolicy::Drop).collect();
+        assert_eq!(streamed.len(), eager.len(), "{strategy:?}");
+        for (a, b) in streamed.iter().zip(&eager) {
+            assert_eq!(a.tokens, b.tokens, "{strategy:?}: identical tensors, identical order");
+            assert_eq!(a.targets, b.targets);
+            assert_eq!(a.seg_ids, b.seg_ids);
+            assert_eq!(a.pos_ids, b.pos_ids);
+            assert_eq!(a.real_tokens, b.real_tokens);
+            assert_eq!(a.real_targets, b.real_targets);
+        }
+    }
+}
+
+#[test]
+fn session_reports_data_accounting_and_cycles_staged_batches() {
+    let mut session = SessionBuilder::new()
+        .task(Task::FullFinetune)
+        .steps(40) // more steps than batches → the stream cycles
+        .lr(5e-3)
+        .data(DataSource::synthetic(64, 3, 48))
+        .on_backend(cpu())
+        .build()
+        .unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.summary.steps, 40);
+    assert_eq!(report.examples, 64);
+    assert!(report.batches_planned >= 1);
+    assert!(report.batches_staged <= report.batches_planned);
+    assert!(
+        report.batches_staged < 40,
+        "tiny corpus must be staged once and cycled, not re-planned"
+    );
+    assert_eq!(report.oversized_dropped, 0, "48-token examples fit 64-token rows");
+    assert!(report.summary.verification.is_training);
+}
+
+#[test]
+fn oversized_examples_surface_in_the_report() {
+    // max_seq 96 exceeds the 64-token row capacity: the BFD plan must skip
+    // those examples *and say so* instead of losing them silently
+    let mut session = SessionBuilder::new()
+        .task(Task::FullFinetune)
+        .steps(4)
+        .lr(5e-3)
+        .data(DataSource::synthetic(256, 5, 96))
+        .on_backend(cpu())
+        .build()
+        .unwrap();
+    let report = session.run().unwrap();
+    assert!(
+        report.oversized_dropped > 0,
+        "a 96-token-truncated corpus must contain >64-token examples"
+    );
+}
+
+#[test]
+fn lora_plus_ratio_actually_changes_the_typed_run() {
+    let run = |task: Task| {
+        let mut s = SessionBuilder::new()
+            .task(task)
+            .steps(6)
+            .lr(2e-3)
+            .seed(4)
+            .data(DataSource::synthetic(128, 4, 48))
+            .on_backend(cpu())
+            .build()
+            .unwrap();
+        s.run().unwrap().summary
+    };
+    let lora = run(Task::lora());
+    let plus = run(Task::lora_plus(16.0));
+    assert!(lora.verification.is_training && plus.verification.is_training);
+    // identical data + seed, different λ ⇒ different trajectories
+    assert_ne!(lora.last_loss.to_bits(), plus.last_loss.to_bits());
+}

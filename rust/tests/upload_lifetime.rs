@@ -27,8 +27,12 @@ fn uploaded_batch_survives_and_is_reusable() {
     let (_tok, exs) = harness::build_corpus(256, 1, spec.model_config.vocab, 512);
     let batches =
         harness::make_batches(be.manifest(), "train_step_chronicals", &exs, true).unwrap();
-    let init =
-        harness::resolve_init(be.manifest(), "train_step_chronicals", "init_chronicals").unwrap();
+    let init = chronicals::session::resolve_init(
+        be.manifest(),
+        "train_step_chronicals",
+        "init_chronicals",
+    )
+    .unwrap();
     let state = be.init_state(&init, 1).unwrap();
     let mut trainer = Trainer::new(
         be.clone(),

@@ -1,6 +1,6 @@
 //! Offline workalike of the `anyhow` API subset used by the chronicals
-//! workspace: [`Error`], [`Result`], [`anyhow!`], [`bail!`] and the
-//! [`Context`] extension trait.
+//! workspace: [`Error`], [`Result`], [`anyhow!`], [`bail!`], [`ensure!`]
+//! and the [`Context`] extension trait.
 //!
 //! Semantics mirror the real crate where it matters here:
 //! * `Error` is cheap to build from a message or from any
@@ -120,6 +120,22 @@ macro_rules! bail {
     };
 }
 
+/// Return early with an [`Error`] when a condition is false (mirrors the
+/// real crate: the bare form reports the stringified condition).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("Condition failed: `", stringify!($cond), "`")));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,6 +164,21 @@ mod tests {
             bail!("nope: {}", 7)
         }
         assert_eq!(fails().unwrap_err().to_string(), "nope: 7");
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn check(x: i32) -> Result<()> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            ensure!(x != 3);
+            Ok(())
+        }
+        assert!(check(1).is_ok());
+        assert_eq!(
+            check(-1).unwrap_err().to_string(),
+            "x must be positive, got -1"
+        );
+        assert!(check(3).unwrap_err().to_string().contains("x != 3"));
     }
 
     #[test]
