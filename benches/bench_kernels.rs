@@ -1,6 +1,7 @@
 //! Kernel microbenchmarks — regenerates paper Table 5 (fused vs naive
 //! timings for RMSNorm / SwiGLU / QK-RoPE / Attention / Cross-Entropy /
-//! AdamW / LoRA-linear) through the `Backend` trait.
+//! AdamW / LoRA-linear) through the `Backend` trait, plus the dispatch
+//! comparison for the fast backend's persistent worker pool.
 //!
 //! Plain-main bench (offline build: no criterion): mean over `REPS`
 //! executions after warmup. Backend comes from `BACKEND` (default
@@ -8,21 +9,68 @@
 //! the reference backend's scalar implementations on identical inputs;
 //! `pjrt` times compiled kernel artifacts when available).
 //!
+//! The `dispatch` section times one small-geometry matmul (T ≤ 64, where
+//! per-call dispatch overhead dominates the arithmetic) three ways on a
+//! `DISPATCH_THREADS`-lane fast backend: through the persistent pool
+//! (`pool_ms`), through a fresh `std::thread::scope` spawn per call — the
+//! PR 2 baseline — (`spawn_ms`), and fully single-threaded (`single_ms`).
+//! `spawn_over_pool` ≥ 1.3 at 4 threads is the acceptance bar for the
+//! pool actually amortizing spawn overhead.
+//!
 //! Writes the per-kernel means into the repo-root `BENCH_cpu.json`
-//! (section `"kernels"`) so the perf trajectory is machine-readable.
+//! (sections `"kernels"` and `"dispatch"`) so the perf trajectory is
+//! machine-readable.
 //!
 //! Run: `cargo bench --bench bench_kernels`
-//! Env: REPS (default 30), BACKEND (default cpu-fast), CHRONICALS_THREADS.
+//! Env: REPS (default 30), BACKEND (default cpu-fast), CHRONICALS_THREADS,
+//!      DISPATCH_THREADS (default 4).
 
+use chronicals::backend::cpu_fast::FastCpuBackend;
 use chronicals::backend::{create_backend, Backend};
 use chronicals::report;
 use chronicals::util::json::{Json, Obj};
 
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Time the pool-vs-spawn-vs-serial dispatch triple and merge the
+/// `"dispatch"` section into `BENCH_cpu.json`.
+fn dispatch_section(reps: usize) {
+    let threads = env_usize("DISPATCH_THREADS", 4);
+    let be = FastCpuBackend::with_threads(threads);
+    let mut timings = Vec::new();
+    for name in ["dispatch_matmul_pool", "dispatch_matmul_spawn", "dispatch_matmul_single"] {
+        match be.bench_kernel(name, reps, 2) {
+            Ok(secs) => timings.push((name, secs)),
+            Err(e) => {
+                eprintln!("dispatch bench {name} failed: {e:#}");
+                return;
+            }
+        }
+    }
+    let (pool, spawn, single) = (timings[0].1, timings[1].1, timings[2].1);
+    println!("\ndispatch (small-geometry matmul, T<=64, threads={threads}):");
+    println!("  pool   {:>9.3} us", pool * 1e6);
+    println!("  spawn  {:>9.3} us  ({:.2}x the pooled latency)", spawn * 1e6, spawn / pool);
+    println!("  single {:>9.3} us", single * 1e6);
+
+    let mut section = Obj::default();
+    section.insert("threads", Json::Num(threads as f64));
+    section.insert("reps", Json::Num(reps as f64));
+    section.insert("pool_ms", Json::Num(pool * 1e3));
+    section.insert("spawn_ms", Json::Num(spawn * 1e3));
+    section.insert("single_ms", Json::Num(single * 1e3));
+    section.insert("spawn_over_pool", Json::Num(spawn / pool));
+    let path = report::bench_json_path();
+    match report::update_bench_json(&path, "dispatch", Json::Obj(section)) {
+        Ok(()) => println!("wrote dispatch means to {}", path.display()),
+        Err(e) => eprintln!("could not update {}: {e:#}", path.display()),
+    }
+}
+
 fn main() {
-    let reps: usize = std::env::var("REPS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(30);
+    let reps: usize = env_usize("REPS", 30);
     let backend_name = std::env::var("BACKEND").unwrap_or_else(|_| "cpu-fast".into());
     let be = match create_backend(&backend_name, "artifacts", 0) {
         Ok(be) => be,
@@ -65,4 +113,8 @@ fn main() {
         }
         Err(e) => eprintln!("bench_kernels failed: {e:#}"),
     }
+    // the dispatch comparison is fast-backend-specific: run it regardless
+    // of which backend the table above used (the fast CPU backend is
+    // always available)
+    dispatch_section(reps.max(100));
 }

@@ -14,15 +14,28 @@
 //!   lse_i)`, using the identity `Σ_j p_ij dp_ij = dout_i · out_i` so no
 //!   per-row probability vector is needed either.
 //!
+//! **Packed-KV tile layout.** K and V rows live in the `[T, n_kv·hd]`
+//! activations with stride `n_kv·hd` between consecutive tokens, so the
+//! hot `j` loops would walk memory with a gap per step. Both passes
+//! therefore pack the K and V rows of the current `(batch row, kv head)`
+//! into contiguous `[S, hd]` arena buffers once, and every KV-tile scan —
+//! `group · S` query rows' worth — streams them unit-stride. The packed
+//! rows hold identical bits read in the identical order, so packing does
+//! not change results.
+//!
 //! Segment masking matches the reference exactly: tokens attend causally
 //! within their own non-zero segment; padding rows (seg 0) produce zero
 //! output and receive zero gradient.
 //!
-//! Threading is per batch row (disjoint `chunks_mut` of out/lse/dq/dk/dv),
-//! so bits are invariant to the thread count.
+//! Pooling is per batch row (disjoint `chunks_mut` of out/lse/dq/dk/dv
+//! dispatched on the backend's persistent pool), so bits are invariant to
+//! the thread count. Per-tile scratch (score strip, output accumulator,
+//! packed K/V) is leased from the arena on the dispatching thread *before*
+//! jobs are queued, so the arena's lease sequence — and its warm-arena
+//! zero-allocation property — never depends on worker scheduling.
 
-use super::kernels::{axpy, dot4, rows_per_tile};
-use super::scratch;
+use super::kernels::{axpy, dot8, rows_per_tile};
+use super::pool::Exec;
 
 /// KV tile width for the forward streaming pass. Fixed (not derived from
 /// the thread count) so results do not depend on parallelism.
@@ -47,7 +60,7 @@ pub fn flash_attention_fwd(
     hd: usize,
     out: &mut [f32],
     lse: &mut [f32],
-    threads: usize,
+    ex: &Exec,
 ) {
     let group = n_heads / n_kv;
     let dqw = n_heads * hd;
@@ -58,96 +71,129 @@ pub fn flash_attention_fwd(
     debug_assert_eq!(out.len(), bsz * s * dqw);
     debug_assert_eq!(lse.len(), bsz * n_heads * s);
 
-    let body = |b0: usize, out_c: &mut [f32], lse_c: &mut [f32]| {
+    let body = |b0: usize,
+                out_c: &mut [f32],
+                lse_c: &mut [f32],
+                sc: &mut [f32],
+                acc: &mut [f32],
+                kp: &mut [f32],
+                vp: &mut [f32]| {
         let n_b = lse_c.len() / (n_heads * s);
-        let mut sc = scratch::alloc_f32(KV_TILE);
-        let mut acc = scratch::alloc_f32(hd);
         for lb in 0..n_b {
             let b = b0 + lb;
-            for h in 0..n_heads {
-                let kh = h / group;
-                for i in 0..s {
-                    let ti = b * s + i;
-                    let seg_i = seg[ti];
-                    let lse_slot = &mut lse_c[(lb * n_heads + h) * s + i];
-                    if seg_i == 0 {
-                        // padding row: zero output explicitly so reused
-                        // (dirty) buffers cannot leak stale activations
-                        *lse_slot = f32::NEG_INFINITY;
-                        let or = &mut out_c
-                            [(lb * s + i) * dqw + h * hd..(lb * s + i) * dqw + (h + 1) * hd];
-                        or.fill(0.0);
-                        continue;
-                    }
-                    let qr = &q[ti * dqw + h * hd..ti * dqw + (h + 1) * hd];
-                    let mut m = f32::NEG_INFINITY;
-                    let mut l = 0.0f32;
-                    for a in acc.iter_mut() {
-                        *a = 0.0;
-                    }
-                    let mut j0 = 0usize;
-                    while j0 <= i {
-                        let j1 = (j0 + KV_TILE).min(i + 1);
-                        let mut tm = f32::NEG_INFINITY;
-                        for (jj, j) in (j0..j1).enumerate() {
-                            let tj = b * s + j;
-                            if seg[tj] != seg_i {
-                                sc[jj] = f32::NEG_INFINITY;
-                                continue;
-                            }
-                            let kr = &k[tj * dkvw + kh * hd..tj * dkvw + (kh + 1) * hd];
-                            let sv = dot4(qr, kr) * scale;
-                            sc[jj] = sv;
-                            tm = tm.max(sv);
+            for kh in 0..n_kv {
+                // pack this (row, kv head)'s K/V once; the j loops below
+                // then stream unit-stride through [S, hd] rows
+                for j in 0..s {
+                    let tj = b * s + j;
+                    kp[j * hd..(j + 1) * hd]
+                        .copy_from_slice(&k[tj * dkvw + kh * hd..tj * dkvw + (kh + 1) * hd]);
+                    vp[j * hd..(j + 1) * hd]
+                        .copy_from_slice(&v[tj * dkvw + kh * hd..tj * dkvw + (kh + 1) * hd]);
+                }
+                for g in 0..group {
+                    let h = kh * group + g; // same ascending-h order as before
+                    for i in 0..s {
+                        let ti = b * s + i;
+                        let seg_i = seg[ti];
+                        let lse_slot = &mut lse_c[(lb * n_heads + h) * s + i];
+                        if seg_i == 0 {
+                            // padding row: zero output explicitly so reused
+                            // (dirty) buffers cannot leak stale activations
+                            *lse_slot = f32::NEG_INFINITY;
+                            let or = &mut out_c
+                                [(lb * s + i) * dqw + h * hd..(lb * s + i) * dqw + (h + 1) * hd];
+                            or.fill(0.0);
+                            continue;
                         }
-                        if tm > f32::NEG_INFINITY {
-                            let m_new = m.max(tm);
-                            if m > f32::NEG_INFINITY {
-                                // correct previous statistics (exp(0) = 1
-                                // exactly, so the no-op case is bit-exact)
-                                let alpha = (m - m_new).exp();
-                                l *= alpha;
-                                for a in acc.iter_mut() {
-                                    *a *= alpha;
-                                }
-                            }
+                        let qr = &q[ti * dqw + h * hd..ti * dqw + (h + 1) * hd];
+                        let mut m = f32::NEG_INFINITY;
+                        let mut l = 0.0f32;
+                        for a in acc.iter_mut() {
+                            *a = 0.0;
+                        }
+                        let mut j0 = 0usize;
+                        while j0 <= i {
+                            let j1 = (j0 + KV_TILE).min(i + 1);
+                            let mut tm = f32::NEG_INFINITY;
                             for (jj, j) in (j0..j1).enumerate() {
-                                if sc[jj] == f32::NEG_INFINITY {
+                                if seg[b * s + j] != seg_i {
+                                    sc[jj] = f32::NEG_INFINITY;
                                     continue;
                                 }
-                                let e = (sc[jj] - m_new).exp();
-                                l += e;
-                                let tj = b * s + j;
-                                let vr = &v[tj * dkvw + kh * hd..tj * dkvw + (kh + 1) * hd];
-                                axpy(e, vr, &mut acc);
+                                let kr = &kp[j * hd..(j + 1) * hd];
+                                let sv = dot8(qr, kr) * scale;
+                                sc[jj] = sv;
+                                tm = tm.max(sv);
                             }
-                            m = m_new;
+                            if tm > f32::NEG_INFINITY {
+                                let m_new = m.max(tm);
+                                if m > f32::NEG_INFINITY {
+                                    // correct previous statistics (exp(0) = 1
+                                    // exactly, so the no-op case is bit-exact)
+                                    let alpha = (m - m_new).exp();
+                                    l *= alpha;
+                                    for a in acc.iter_mut() {
+                                        *a *= alpha;
+                                    }
+                                }
+                                for (jj, j) in (j0..j1).enumerate() {
+                                    if sc[jj] == f32::NEG_INFINITY {
+                                        continue;
+                                    }
+                                    let e = (sc[jj] - m_new).exp();
+                                    l += e;
+                                    let vr = &vp[j * hd..(j + 1) * hd];
+                                    axpy(e, vr, acc);
+                                }
+                                m = m_new;
+                            }
+                            j0 = j1;
                         }
-                        j0 = j1;
+                        let or = &mut out_c
+                            [(lb * s + i) * dqw + h * hd..(lb * s + i) * dqw + (h + 1) * hd];
+                        for (o, &a) in or.iter_mut().zip(acc.iter()) {
+                            *o = a / l;
+                        }
+                        *lse_slot = m + l.ln();
                     }
-                    let or = &mut out_c[(lb * s + i) * dqw + h * hd..(lb * s + i) * dqw + (h + 1) * hd];
-                    for (o, &a) in or.iter_mut().zip(acc.iter()) {
-                        *o = a / l;
-                    }
-                    *lse_slot = m + l.ln();
                 }
             }
         }
     };
 
-    let bp = rows_per_tile(bsz, threads);
-    if threads <= 1 || bsz <= 1 {
-        body(0, out, lse);
+    let bp = rows_per_tile(bsz, ex.threads());
+    if ex.threads() <= 1 || bsz <= 1 {
+        let (mut sc, mut acc) = (ex.arena().lease_uninit(KV_TILE), ex.arena().lease_uninit(hd));
+        let (mut kp, mut vp) = (ex.arena().lease_uninit(s * hd), ex.arena().lease_uninit(s * hd));
+        body(0, out, lse, &mut sc, &mut acc, &mut kp, &mut vp);
         return;
     }
-    std::thread::scope(|scope| {
+    ex.scope(|scope| {
         let body = &body;
+        // lease every tile's scratch before any job is queued: a job that
+        // finishes early returns buffers mid-loop, which would otherwise
+        // make the cold-step allocation count scheduling-dependent and
+        // break the warm-arena zero-allocation guarantee
+        let scratch: Vec<_> = (0..out.len().div_ceil(bp * s * dqw))
+            .map(|_| {
+                (
+                    ex.arena().lease_uninit(KV_TILE),
+                    ex.arena().lease_uninit(hd),
+                    ex.arena().lease_uninit(s * hd),
+                    ex.arena().lease_uninit(s * hd),
+                )
+            })
+            .collect();
         let iter = out
             .chunks_mut(bp * s * dqw)
             .zip(lse.chunks_mut(bp * n_heads * s))
+            .zip(scratch)
             .enumerate();
-        for (idx, (out_c, lse_c)) in iter {
-            scope.spawn(move || body(idx * bp, out_c, lse_c));
+        for (idx, ((out_c, lse_c), (mut sc, mut acc, mut kp, mut vp))) in iter {
+            scope.spawn(move || {
+                body(idx * bp, out_c, lse_c, &mut sc, &mut acc, &mut kp, &mut vp)
+            });
         }
     });
 }
@@ -174,7 +220,7 @@ pub fn flash_attention_bwd(
     dq: &mut [f32],
     dk: &mut [f32],
     dv: &mut [f32],
-    threads: usize,
+    ex: &Exec,
 ) {
     let group = n_heads / n_kv;
     let dqw = n_heads * hd;
@@ -182,59 +228,78 @@ pub fn flash_attention_bwd(
     let scale = 1.0 / (hd as f32).sqrt();
     debug_assert_eq!(lse.len(), bsz * n_heads * s);
 
-    let body = |b0: usize, dq_c: &mut [f32], dk_c: &mut [f32], dv_c: &mut [f32]| {
+    let body = |b0: usize,
+                dq_c: &mut [f32],
+                dk_c: &mut [f32],
+                dv_c: &mut [f32],
+                kp: &mut [f32],
+                vp: &mut [f32]| {
         let n_b = dq_c.len() / (s * dqw);
         for lb in 0..n_b {
             let b = b0 + lb;
-            for h in 0..n_heads {
-                let kh = h / group;
-                for i in 0..s {
-                    let ti = b * s + i;
-                    let seg_i = seg[ti];
-                    if seg_i == 0 {
-                        continue;
-                    }
-                    let lse_i = lse[(b * n_heads + h) * s + i];
-                    let dor = &dout[ti * dqw + h * hd..ti * dqw + (h + 1) * hd];
-                    let or = &out[ti * dqw + h * hd..ti * dqw + (h + 1) * hd];
-                    let qr = &q[ti * dqw + h * hd..ti * dqw + (h + 1) * hd];
-                    let d_i = dot4(dor, or);
-                    for j in 0..=i {
-                        let tj = b * s + j;
-                        if seg[tj] != seg_i {
+            for kh in 0..n_kv {
+                for j in 0..s {
+                    let tj = b * s + j;
+                    kp[j * hd..(j + 1) * hd]
+                        .copy_from_slice(&k[tj * dkvw + kh * hd..tj * dkvw + (kh + 1) * hd]);
+                    vp[j * hd..(j + 1) * hd]
+                        .copy_from_slice(&v[tj * dkvw + kh * hd..tj * dkvw + (kh + 1) * hd]);
+                }
+                for g in 0..group {
+                    let h = kh * group + g; // same ascending-h order as before
+                    for i in 0..s {
+                        let ti = b * s + i;
+                        let seg_i = seg[ti];
+                        if seg_i == 0 {
                             continue;
                         }
-                        let kr = &k[tj * dkvw + kh * hd..tj * dkvw + (kh + 1) * hd];
-                        let vr = &v[tj * dkvw + kh * hd..tj * dkvw + (kh + 1) * hd];
-                        let s_ij = dot4(qr, kr) * scale;
-                        let p = (s_ij - lse_i).exp();
-                        let dp = dot4(dor, vr);
-                        let ds = p * (dp - d_i) * scale;
-                        let lrow = lb * s + j;
-                        axpy(p, dor, &mut dv_c[lrow * dkvw + kh * hd..lrow * dkvw + (kh + 1) * hd]);
-                        axpy(ds, qr, &mut dk_c[lrow * dkvw + kh * hd..lrow * dkvw + (kh + 1) * hd]);
-                        let lqrow = lb * s + i;
-                        axpy(ds, kr, &mut dq_c[lqrow * dqw + h * hd..lqrow * dqw + (h + 1) * hd]);
+                        let lse_i = lse[(b * n_heads + h) * s + i];
+                        let dor = &dout[ti * dqw + h * hd..ti * dqw + (h + 1) * hd];
+                        let or = &out[ti * dqw + h * hd..ti * dqw + (h + 1) * hd];
+                        let qr = &q[ti * dqw + h * hd..ti * dqw + (h + 1) * hd];
+                        let d_i = dot8(dor, or);
+                        for j in 0..=i {
+                            if seg[b * s + j] != seg_i {
+                                continue;
+                            }
+                            let kr = &kp[j * hd..(j + 1) * hd];
+                            let vr = &vp[j * hd..(j + 1) * hd];
+                            let s_ij = dot8(qr, kr) * scale;
+                            let p = (s_ij - lse_i).exp();
+                            let dp = dot8(dor, vr);
+                            let ds = p * (dp - d_i) * scale;
+                            let lrow = lb * s + j;
+                            axpy(p, dor, &mut dv_c[lrow * dkvw + kh * hd..lrow * dkvw + (kh + 1) * hd]);
+                            axpy(ds, qr, &mut dk_c[lrow * dkvw + kh * hd..lrow * dkvw + (kh + 1) * hd]);
+                            let lqrow = lb * s + i;
+                            axpy(ds, kr, &mut dq_c[lqrow * dqw + h * hd..lqrow * dqw + (h + 1) * hd]);
+                        }
                     }
                 }
             }
         }
     };
 
-    let bp = rows_per_tile(bsz, threads);
-    if threads <= 1 || bsz <= 1 {
-        body(0, dq, dk, dv);
+    let bp = rows_per_tile(bsz, ex.threads());
+    if ex.threads() <= 1 || bsz <= 1 {
+        let (mut kp, mut vp) = (ex.arena().lease_uninit(s * hd), ex.arena().lease_uninit(s * hd));
+        body(0, dq, dk, dv, &mut kp, &mut vp);
         return;
     }
-    std::thread::scope(|scope| {
+    ex.scope(|scope| {
         let body = &body;
+        // all tile scratch leased up front (see the forward pass note)
+        let scratch: Vec<_> = (0..dq.len().div_ceil(bp * s * dqw))
+            .map(|_| (ex.arena().lease_uninit(s * hd), ex.arena().lease_uninit(s * hd)))
+            .collect();
         let iter = dq
             .chunks_mut(bp * s * dqw)
             .zip(dk.chunks_mut(bp * s * dkvw))
             .zip(dv.chunks_mut(bp * s * dkvw))
+            .zip(scratch)
             .enumerate();
-        for (idx, ((dq_c, dk_c), dv_c)) in iter {
-            scope.spawn(move || body(idx * bp, dq_c, dk_c, dv_c));
+        for (idx, (((dq_c, dk_c), dv_c), (mut kp, mut vp))) in iter {
+            scope.spawn(move || body(idx * bp, dq_c, dk_c, dv_c, &mut kp, &mut vp));
         }
     });
 }
@@ -303,11 +368,12 @@ mod tests {
         let mut probs = vec![0.0f32; f.bsz * f.n_heads * f.s * f.s];
         model::attention_fwd(&f.q, &f.k, &f.v, &bv, f.n_heads, f.n_kv, f.hd, &mut want, &mut probs);
         for threads in [1usize, 2, 4] {
+            let ex = Exec::new(threads);
             let mut out = vec![0.0f32; t * f.n_heads * f.hd];
             let mut lse = vec![0.0f32; f.bsz * f.n_heads * f.s];
             flash_attention_fwd(
                 &f.q, &f.k, &f.v, &f.seg, f.bsz, f.s, f.n_heads, f.n_kv, f.hd, &mut out, &mut lse,
-                threads,
+                &ex,
             );
             for (i, (a, b)) in out.iter().zip(&want).enumerate() {
                 assert!((a - b).abs() < 1e-5, "threads={threads} out[{i}]: {a} vs {b}");
@@ -334,17 +400,19 @@ mod tests {
             &mut dv_r,
         );
 
+        let ex2 = Exec::new(2);
         let mut out = vec![0.0f32; t * dqw];
         let mut lse = vec![0.0f32; f.bsz * f.n_heads * f.s];
         flash_attention_fwd(
-            &f.q, &f.k, &f.v, &f.seg, f.bsz, f.s, f.n_heads, f.n_kv, f.hd, &mut out, &mut lse, 2,
+            &f.q, &f.k, &f.v, &f.seg, f.bsz, f.s, f.n_heads, f.n_kv, f.hd, &mut out, &mut lse, &ex2,
         );
         for threads in [1usize, 3] {
+            let ex = Exec::new(threads);
             let (mut dq, mut dk, mut dv) =
                 (vec![0.0f32; t * dqw], vec![0.0f32; t * dkvw], vec![0.0f32; t * dkvw]);
             flash_attention_bwd(
                 &f.dout, &f.q, &f.k, &f.v, &out, &lse, &f.seg, f.bsz, f.s, f.n_heads, f.n_kv, f.hd,
-                &mut dq, &mut dk, &mut dv, threads,
+                &mut dq, &mut dk, &mut dv, &ex,
             );
             for (name, got, want) in [("dq", &dq, &dq_r), ("dk", &dk, &dk_r), ("dv", &dv, &dv_r)] {
                 for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
@@ -360,10 +428,11 @@ mod tests {
         let t = f.bsz * f.s;
         let dqw = f.n_heads * f.hd;
         let dkvw = f.n_kv * f.hd;
+        let ex = Exec::new(1);
         let mut out = vec![0.0f32; t * dqw];
         let mut lse = vec![0.0f32; f.bsz * f.n_heads * f.s];
         flash_attention_fwd(
-            &f.q, &f.k, &f.v, &f.seg, f.bsz, f.s, f.n_heads, f.n_kv, f.hd, &mut out, &mut lse, 1,
+            &f.q, &f.k, &f.v, &f.seg, f.bsz, f.s, f.n_heads, f.n_kv, f.hd, &mut out, &mut lse, &ex,
         );
         // rows 9 (row 0 tail) and 16.. (row 1 tail) are padding
         for ti in [9usize, 16, 17, 18, 19] {
@@ -373,7 +442,7 @@ mod tests {
             (vec![0.0f32; t * dqw], vec![0.0f32; t * dkvw], vec![0.0f32; t * dkvw]);
         flash_attention_bwd(
             &f.dout, &f.q, &f.k, &f.v, &out, &lse, &f.seg, f.bsz, f.s, f.n_heads, f.n_kv, f.hd,
-            &mut dq, &mut dk, &mut dv, 1,
+            &mut dq, &mut dk, &mut dv, &ex,
         );
         for ti in [9usize, 16, 17, 18, 19] {
             assert!(dq[ti * dqw..(ti + 1) * dqw].iter().all(|&x| x == 0.0), "dq row {ti}");
@@ -398,9 +467,10 @@ mod tests {
         let mut want = vec![0.0f32; t * n_heads * hd];
         let mut probs = vec![0.0f32; n_heads * s * s];
         model::attention_fwd(&q, &k, &v, &bv, n_heads, n_kv, hd, &mut want, &mut probs);
+        let ex = Exec::new(1);
         let mut out = vec![0.0f32; t * n_heads * hd];
         let mut lse = vec![0.0f32; n_heads * s];
-        flash_attention_fwd(&q, &k, &v, &seg, bsz, s, n_heads, n_kv, hd, &mut out, &mut lse, 1);
+        flash_attention_fwd(&q, &k, &v, &seg, bsz, s, n_heads, n_kv, hd, &mut out, &mut lse, &ex);
         for (i, (a, b)) in out.iter().zip(&want).enumerate() {
             assert!((a - b).abs() < 1e-4, "out[{i}]: {a} vs {b}");
         }

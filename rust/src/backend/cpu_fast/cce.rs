@@ -9,23 +9,28 @@
 //! * **Backward** fuses the `(softmax − onehot)/n_valid` term into the
 //!   gradient tile loops, recomputing `d = (exp(z − lse) − onehot)/n_valid`
 //!   on the fly from the forward's `lse`. It runs as two partial-free
-//!   passes: the dW pass parallelizes over vocab-row tiles (each worker
-//!   owns its `dW_head` rows outright), the dhf pass over token rows (each
-//!   worker owns its `dhf` rows and walks the vocab tiles in ascending
-//!   order). The only transient is one `V_TILE` logit strip per worker —
-//!   never `[T, V]`, and never a per-tile `[T, d]` partial either (a
+//!   passes: the dW pass parallelizes over vocab-row tiles (each job owns
+//!   its `dW_head` rows outright), the dhf pass over token rows (each job
+//!   owns its `dhf` rows and walks the vocab tiles in ascending order).
+//!   The only transient is one `V_TILE` logit strip per job — never
+//!   `[T, V]`, and never a per-tile `[T, d]` partial either (a
 //!   single-reduction variant would hold `V/V_TILE` of those, which
 //!   *exceeds* `[T, V]` once `d_model ≥ V_TILE`). The price is recomputing
 //!   the logit tile once per pass; that is the paper's CCE trade — flops
 //!   for memory traffic.
 //!
+//! Jobs run on the backend's persistent pool (`pool.rs`); the per-job
+//! logit strips and the `[T]` row-loss buffer are leased from the arena on
+//! the dispatching thread before dispatch, so the lease sequence is
+//! scheduling-independent.
+//!
 //! Thread-count invariance: the tile width is a fixed constant and every
 //! output row (of `dW_head` and of `dhf`) is accumulated by exactly one
-//! worker in the same ascending order regardless of the partition — so the
+//! job in the same ascending order regardless of the partition — so the
 //! bits never depend on how work was assigned to workers.
 
-use super::kernels::{axpy, dot4, rows_per_tile};
-use super::scratch;
+use super::kernels::{axpy, dot8, rows_per_tile};
+use super::pool::Exec;
 
 /// Vocab tile width. Fixed (not thread-derived) so results are independent
 /// of parallelism.
@@ -46,15 +51,14 @@ pub fn cce_loss_fwd(
     d: usize,
     v: usize,
     lse: &mut [f32],
-    threads: usize,
+    ex: &Exec,
 ) -> (f32, usize) {
     debug_assert_eq!(hf.len(), t * d);
     debug_assert_eq!(w_head.len(), v * d);
     debug_assert_eq!(lse.len(), t);
-    let mut rowloss = scratch::alloc_f32(t);
+    let mut rowloss = ex.arena().lease_uninit(t);
 
-    let body = |r0: usize, lse_c: &mut [f32], rl_c: &mut [f32]| {
-        let mut z = scratch::alloc_f32(V_TILE);
+    let body = |r0: usize, lse_c: &mut [f32], rl_c: &mut [f32], z: &mut [f32]| {
         for r in 0..lse_c.len() {
             let ti = r0 + r;
             let tgt = targets[ti];
@@ -72,7 +76,7 @@ pub fn cce_loss_fwd(
                 let v1 = (v0 + V_TILE).min(v);
                 let mut tm = f32::NEG_INFINITY;
                 for (jj, n) in (v0..v1).enumerate() {
-                    let zv = dot4(hr, &w_head[n * d..(n + 1) * d]);
+                    let zv = dot8(hr, &w_head[n * d..(n + 1) * d]);
                     z[jj] = zv;
                     tm = tm.max(zv);
                 }
@@ -95,14 +99,20 @@ pub fn cce_loss_fwd(
         }
     };
 
-    let rp = rows_per_tile(t, threads);
-    if threads <= 1 || t <= 1 {
-        body(0, lse, &mut rowloss);
+    let rp = rows_per_tile(t, ex.threads());
+    if ex.threads() <= 1 || t <= 1 {
+        let mut z = ex.arena().lease_uninit(V_TILE);
+        body(0, lse, &mut rowloss, &mut z);
     } else {
-        std::thread::scope(|sc| {
+        ex.scope(|scope| {
             let body = &body;
-            for (idx, (lse_c, rl_c)) in lse.chunks_mut(rp).zip(rowloss.chunks_mut(rp)).enumerate() {
-                sc.spawn(move || body(idx * rp, lse_c, rl_c));
+            // per-tile logit strips leased before any job is queued, so
+            // arena traffic never depends on worker scheduling
+            let strips: Vec<_> =
+                (0..t.div_ceil(rp)).map(|_| ex.arena().lease_uninit(V_TILE)).collect();
+            let iter = lse.chunks_mut(rp).zip(rowloss.chunks_mut(rp)).zip(strips).enumerate();
+            for (idx, ((lse_c, rl_c), mut z)) in iter {
+                scope.spawn(move || body(idx * rp, lse_c, rl_c, &mut z));
             }
         });
     }
@@ -137,7 +147,7 @@ pub fn cce_bwd_fused(
     n_valid: usize,
     mut dw_head: Option<&mut [f32]>,
     dhf: &mut [f32],
-    threads: usize,
+    ex: &Exec,
 ) {
     debug_assert_eq!(dhf.len(), t * d);
     if let Some(dw) = dw_head.as_deref() {
@@ -145,38 +155,50 @@ pub fn cce_bwd_fused(
     }
     let nv = n_valid.max(1) as f32;
 
-    // dW pass: workers own disjoint vocab-row blocks of dw_head outright.
+    // dW pass: jobs own disjoint vocab-row blocks of dw_head outright.
     if let Some(dw) = dw_head.as_deref_mut() {
         let n_tiles = v.div_ceil(V_TILE);
-        let tp = rows_per_tile(n_tiles, threads); // vocab tiles per worker
-        if threads <= 1 || n_tiles <= 1 {
-            dw_pass(hf, w_head, targets, lse, t, d, v, nv, 0, dw);
+        let tp = rows_per_tile(n_tiles, ex.threads()); // vocab tiles per job
+        if ex.threads() <= 1 || n_tiles <= 1 {
+            let mut z = ex.arena().lease_uninit(V_TILE);
+            dw_pass(hf, w_head, targets, lse, t, d, v, nv, 0, dw, &mut z);
         } else {
-            std::thread::scope(|sc| {
-                for (idx, dw_c) in dw.chunks_mut(tp * V_TILE * d).enumerate() {
-                    sc.spawn(move || {
-                        dw_pass(hf, w_head, targets, lse, t, d, v, nv, idx * tp * V_TILE, dw_c)
+            ex.scope(|scope| {
+                // strips leased up front (scheduling-independent arena traffic)
+                let strips: Vec<_> = (0..dw.len().div_ceil(tp * V_TILE * d))
+                    .map(|_| ex.arena().lease_uninit(V_TILE))
+                    .collect();
+                let iter = dw.chunks_mut(tp * V_TILE * d).zip(strips).enumerate();
+                for (idx, (dw_c, mut z)) in iter {
+                    scope.spawn(move || {
+                        dw_pass(hf, w_head, targets, lse, t, d, v, nv, idx * tp * V_TILE, dw_c, &mut z)
                     });
                 }
             });
         }
     }
 
-    // dhf pass: workers own disjoint token-row blocks of dhf, each walking
+    // dhf pass: jobs own disjoint token-row blocks of dhf, each walking
     // the vocab tiles in ascending order (thread-count-invariant bits).
-    let rp = rows_per_tile(t, threads);
-    if threads <= 1 || t <= 1 {
-        dhf_pass(hf, w_head, targets, lse, d, v, nv, 0, dhf);
+    let rp = rows_per_tile(t, ex.threads());
+    if ex.threads() <= 1 || t <= 1 {
+        let mut z = ex.arena().lease_uninit(V_TILE);
+        dhf_pass(hf, w_head, targets, lse, d, v, nv, 0, dhf, &mut z);
     } else {
-        std::thread::scope(|sc| {
-            for (idx, dhf_c) in dhf.chunks_mut(rp * d).enumerate() {
-                sc.spawn(move || dhf_pass(hf, w_head, targets, lse, d, v, nv, idx * rp, dhf_c));
+        ex.scope(|scope| {
+            // strips leased up front (scheduling-independent arena traffic)
+            let strips: Vec<_> = (0..dhf.len().div_ceil(rp * d))
+                .map(|_| ex.arena().lease_uninit(V_TILE))
+                .collect();
+            let iter = dhf.chunks_mut(rp * d).zip(strips).enumerate();
+            for (idx, (dhf_c, mut z)) in iter {
+                scope.spawn(move || dhf_pass(hf, w_head, targets, lse, d, v, nv, idx * rp, dhf_c, &mut z));
             }
         });
     }
 }
 
-/// dW worker: accumulate `dw_c = dW_head[v0 .. v0 + rows]` (a contiguous
+/// dW job: accumulate `dw_c = dW_head[v0 .. v0 + rows]` (a contiguous
 /// block of vocab rows starting at global row `v0`) over all tokens, one
 /// recomputed logit strip at a time.
 #[allow(clippy::too_many_arguments)]
@@ -191,9 +213,9 @@ fn dw_pass(
     nv: f32,
     v0: usize,
     dw_c: &mut [f32],
+    z: &mut [f32],
 ) {
     let v_end = (v0 + dw_c.len() / d).min(v);
-    let mut z = scratch::alloc_f32(V_TILE);
     let mut t0 = v0;
     while t0 < v_end {
         let t1 = (t0 + V_TILE).min(v_end);
@@ -204,7 +226,7 @@ fn dw_pass(
             }
             let hr = &hf[ti * d..(ti + 1) * d];
             for (jj, n) in (t0..t1).enumerate() {
-                z[jj] = dot4(hr, &w_head[n * d..(n + 1) * d]);
+                z[jj] = dot8(hr, &w_head[n * d..(n + 1) * d]);
             }
             let lse_i = lse[ti];
             for (jj, n) in (t0..t1).enumerate() {
@@ -223,9 +245,9 @@ fn dw_pass(
     }
 }
 
-/// dhf worker: accumulate `dhf_c = dhf[r0 .. r0 + rows]` (a contiguous
-/// block of token rows), walking all vocab tiles in ascending order per
-/// row so the summation order never depends on the thread count.
+/// dhf job: accumulate `dhf_c = dhf[r0 .. r0 + rows]` (a contiguous block
+/// of token rows), walking all vocab tiles in ascending order per row so
+/// the summation order never depends on the thread count.
 #[allow(clippy::too_many_arguments)]
 fn dhf_pass(
     hf: &[f32],
@@ -237,9 +259,9 @@ fn dhf_pass(
     nv: f32,
     r0: usize,
     dhf_c: &mut [f32],
+    z: &mut [f32],
 ) {
     let rows = dhf_c.len() / d;
-    let mut z = scratch::alloc_f32(V_TILE);
     for r in 0..rows {
         let ti = r0 + r;
         let tgt = targets[ti];
@@ -253,7 +275,7 @@ fn dhf_pass(
         while v0 < v {
             let v1 = (v0 + V_TILE).min(v);
             for (jj, n) in (v0..v1).enumerate() {
-                z[jj] = dot4(hr, &w_head[n * d..(n + 1) * d]);
+                z[jj] = dot8(hr, &w_head[n * d..(n + 1) * d]);
             }
             for (jj, n) in (v0..v1).enumerate() {
                 let mut dl = (z[jj] - lse_i).exp() / nv;
@@ -328,8 +350,9 @@ mod tests {
             let f = fixture(31, v);
             let (loss_ref, nv_ref, _, _, _) = reference(&f);
             for threads in [1usize, 2, 4] {
+                let ex = Exec::new(threads);
                 let mut lse = vec![0.0f32; f.t];
-                let (loss, nv) = cce_loss_fwd(&f.hf, &f.w, &f.targets, f.t, f.d, f.v, &mut lse, threads);
+                let (loss, nv) = cce_loss_fwd(&f.hf, &f.w, &f.targets, f.t, f.d, f.v, &mut lse, &ex);
                 assert_eq!(nv, nv_ref);
                 assert!(
                     (loss - loss_ref).abs() < 1e-4 * (1.0 + loss_ref.abs()),
@@ -344,8 +367,9 @@ mod tests {
         let f = fixture(32, V_TILE + 9);
         let mut logits = vec![0.0f32; f.t * f.v];
         math::linear_fwd(&f.hf, &f.w, f.t, f.d, f.v, &mut logits);
+        let ex = Exec::new(2);
         let mut lse = vec![0.0f32; f.t];
-        cce_loss_fwd(&f.hf, &f.w, &f.targets, f.t, f.d, f.v, &mut lse, 2);
+        cce_loss_fwd(&f.hf, &f.w, &f.targets, f.t, f.d, f.v, &mut lse, &ex);
         for ti in 0..f.t {
             if f.targets[ti] < 0 {
                 continue;
@@ -361,14 +385,16 @@ mod tests {
     fn fused_backward_matches_reference_grads() {
         let f = fixture(33, 2 * V_TILE + 13);
         let (_, n_valid, _, dw_ref, dhf_ref) = reference(&f);
+        let ex1 = Exec::new(1);
         let mut lse = vec![0.0f32; f.t];
-        cce_loss_fwd(&f.hf, &f.w, &f.targets, f.t, f.d, f.v, &mut lse, 1);
+        cce_loss_fwd(&f.hf, &f.w, &f.targets, f.t, f.d, f.v, &mut lse, &ex1);
         for threads in [1usize, 3] {
+            let ex = Exec::new(threads);
             let mut dw = vec![0.0f32; f.v * f.d];
             let mut dhf = vec![0.0f32; f.t * f.d];
             cce_bwd_fused(
                 &f.hf, &f.w, &f.targets, &lse, f.t, f.d, f.v, n_valid,
-                Some(&mut dw), &mut dhf, threads,
+                Some(&mut dw), &mut dhf, &ex,
             );
             for (i, (a, b)) in dw.iter().zip(&dw_ref).enumerate() {
                 assert!((a - b).abs() < 1e-5, "threads={threads} dw[{i}]: {a} vs {b}");
@@ -383,10 +409,11 @@ mod tests {
     fn frozen_head_skips_weight_grad_but_fills_dhf() {
         let f = fixture(34, V_TILE + 3);
         let (_, n_valid, _, _, dhf_ref) = reference(&f);
+        let ex = Exec::new(2);
         let mut lse = vec![0.0f32; f.t];
-        cce_loss_fwd(&f.hf, &f.w, &f.targets, f.t, f.d, f.v, &mut lse, 2);
+        cce_loss_fwd(&f.hf, &f.w, &f.targets, f.t, f.d, f.v, &mut lse, &ex);
         let mut dhf = vec![0.0f32; f.t * f.d];
-        cce_bwd_fused(&f.hf, &f.w, &f.targets, &lse, f.t, f.d, f.v, n_valid, None, &mut dhf, 2);
+        cce_bwd_fused(&f.hf, &f.w, &f.targets, &lse, f.t, f.d, f.v, n_valid, None, &mut dhf, &ex);
         for (i, (a, b)) in dhf.iter().zip(&dhf_ref).enumerate() {
             assert!((a - b).abs() < 1e-5, "dhf[{i}]: {a} vs {b}");
         }
@@ -396,11 +423,12 @@ mod tests {
     fn bits_invariant_to_thread_count() {
         let f = fixture(35, 3 * V_TILE);
         let run = |threads: usize| -> (u32, Vec<u32>, Vec<u32>) {
+            let ex = Exec::new(threads);
             let mut lse = vec![0.0f32; f.t];
-            let (loss, nv) = cce_loss_fwd(&f.hf, &f.w, &f.targets, f.t, f.d, f.v, &mut lse, threads);
+            let (loss, nv) = cce_loss_fwd(&f.hf, &f.w, &f.targets, f.t, f.d, f.v, &mut lse, &ex);
             let mut dw = vec![0.0f32; f.v * f.d];
             let mut dhf = vec![0.0f32; f.t * f.d];
-            cce_bwd_fused(&f.hf, &f.w, &f.targets, &lse, f.t, f.d, f.v, nv, Some(&mut dw), &mut dhf, threads);
+            cce_bwd_fused(&f.hf, &f.w, &f.targets, &lse, f.t, f.d, f.v, nv, Some(&mut dw), &mut dhf, &ex);
             (
                 loss.to_bits(),
                 dw.iter().map(|x| x.to_bits()).collect(),

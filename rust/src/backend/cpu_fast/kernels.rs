@@ -1,28 +1,36 @@
-//! Cache-blocked, multithreaded kernels for the fast CPU backend.
+//! Cache-blocked kernels for the fast CPU backend, dispatched on the
+//! persistent worker pool.
 //!
 //! Design rules (DESIGN.md §4.3):
 //!
-//! * **Row-tile parallelism.** Every kernel partitions its *output* rows
-//!   into at most `threads` contiguous tiles and hands each tile to one
-//!   scoped thread (`std::thread::scope` — no pool, no new dependencies).
-//!   Tiles are disjoint `chunks_mut` slices, so there is no locking and no
-//!   write contention.
+//! * **Row-tile parallelism on a persistent pool.** Every kernel
+//!   partitions its *output* rows into at most `ex.threads()` contiguous
+//!   tiles and hands each tile to the backend's [`Exec`] pool (`pool.rs`)
+//!   — workers are spawned once per backend and parked between dispatches,
+//!   so small-geometry kernels no longer pay a spawn/join per call. Tiles
+//!   are disjoint `chunks_mut` slices: no locking, no write contention.
 //! * **Thread-count-invariant bits.** Each output element is produced by
-//!   exactly one thread running the same sequential inner loop regardless
-//!   of how rows were partitioned, and every cross-tile reduction in the
-//!   backend is performed on the main thread in fixed tile order. The
-//!   result: `threads = 1` and `threads = N` produce bitwise-identical
-//!   steps (asserted in `rust/tests/parity.rs`), and `threads = 1` never
-//!   spawns at all.
+//!   exactly one job running the same sequential inner loop regardless of
+//!   how rows were partitioned or which worker ran the tile, and every
+//!   cross-tile reduction in the backend is performed on the dispatching
+//!   thread in fixed tile order. The result: `threads = 1` and
+//!   `threads = N` produce bitwise-identical steps (asserted in
+//!   `rust/tests/parity.rs`), and `threads = 1` never touches the pool.
 //! * **Fused epilogues.** RMSNorm feeds its projection(s) while the
 //!   normalized row is still cache-hot (`fused_rmsnorm_qkv`,
 //!   `fused_rmsnorm_swiglu`), matmuls carry their residual add
 //!   (`matmul_residual`), and SwiGLU is applied as the gate/up epilogue —
 //!   the paper's read-activations-once rule.
-//! * **ILP dot products.** The inner dot uses four independent
-//!   accumulators (`dot4`) so the f32 add chain pipelines; this changes
-//!   summation order vs. the reference (tolerance-based parity, not
-//!   bitwise — DESIGN.md §4.3 tolerance policy).
+//! * **SIMD-width microkernels.** The inner dot ([`dot8`]) and AXPY
+//!   ([`axpy`]) run fixed 8-lane unrolled loops over `[f32; 8]` chunks so
+//!   the autovectorizer emits one AVX/NEON FMA per chunk, with a
+//!   deterministic lane-reduction order (a fixed binary tree over the 8
+//!   accumulators) — the summation order depends only on the slice
+//!   length, never on threads or tiles. This reassociates vs. the scalar
+//!   reference (tolerance-based parity, not bitwise — DESIGN.md §4.3
+//!   tolerance policy).
+
+use super::pool::Exec;
 
 /// Rows per tile so that at most `threads` tiles cover `rows`.
 pub(crate) fn rows_per_tile(rows: usize, threads: usize) -> usize {
@@ -30,38 +38,56 @@ pub(crate) fn rows_per_tile(rows: usize, threads: usize) -> usize {
     rows.div_ceil(th)
 }
 
-/// Dot product with four independent accumulators (ILP), deterministic for
-/// a given slice length.
+/// Number of f32 lanes the unrolled microkernels process per iteration —
+/// one AVX256 register (or two NEON registers) worth.
+pub const LANES: usize = 8;
+
+/// Dot product, 8-lane unrolled: independent per-lane accumulators over
+/// `[f32; 8]` chunks (autovectorizes to one SIMD FMA per chunk), reduced
+/// in a fixed binary-tree order. Deterministic for a given slice length.
 #[inline]
-pub fn dot4(a: &[f32], b: &[f32]) -> f32 {
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut ca = a.chunks_exact(4);
-    let mut cb = b.chunks_exact(4);
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    let mut acc = [0.0f32; LANES];
     for (x, y) in ca.by_ref().zip(cb.by_ref()) {
-        s0 += x[0] * y[0];
-        s1 += x[1] * y[1];
-        s2 += x[2] * y[2];
-        s3 += x[3] * y[3];
+        let x: &[f32; LANES] = x.try_into().unwrap();
+        let y: &[f32; LANES] = y.try_into().unwrap();
+        for l in 0..LANES {
+            acc[l] += x[l] * y[l];
+        }
     }
-    let mut s = (s0 + s1) + (s2 + s3);
+    // fixed lane-reduction tree: bits depend only on the input length
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
     for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
         s += x * y;
     }
     s
 }
 
-/// `y += alpha · x`, elementwise.
+/// `y += alpha · x`, 8-lane unrolled. Elementwise (no reduction), so the
+/// bits match the scalar loop exactly.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    for (yi, xi) in y.iter_mut().zip(x) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut cy = y.chunks_exact_mut(LANES);
+    let mut cx = x.chunks_exact(LANES);
+    for (yc, xc) in cy.by_ref().zip(cx.by_ref()) {
+        let yc: &mut [f32; LANES] = yc.try_into().unwrap();
+        let xc: &[f32; LANES] = xc.try_into().unwrap();
+        for l in 0..LANES {
+            yc[l] += alpha * xc[l];
+        }
+    }
+    for (yi, xi) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
         *yi += alpha * xi;
     }
 }
 
-/// `out[t, n] = Σ_k x[t, k] · w[n, k]` — `y = x @ W.T`, threaded over row
+/// `out[t, n] = Σ_k x[t, k] · w[n, k]` — `y = x @ W.T`, pooled over row
 /// tiles of the output.
-pub fn matmul(x: &[f32], w: &[f32], t: usize, k_in: usize, n_out: usize, out: &mut [f32], threads: usize) {
+pub fn matmul(x: &[f32], w: &[f32], t: usize, k_in: usize, n_out: usize, out: &mut [f32], ex: &Exec) {
     debug_assert_eq!(x.len(), t * k_in);
     debug_assert_eq!(w.len(), n_out * k_in);
     debug_assert_eq!(out.len(), t * n_out);
@@ -71,19 +97,19 @@ pub fn matmul(x: &[f32], w: &[f32], t: usize, k_in: usize, n_out: usize, out: &m
             let xr = &x[(r0 + r) * k_in..(r0 + r + 1) * k_in];
             let or = &mut out_c[r * n_out..(r + 1) * n_out];
             for (n, o) in or.iter_mut().enumerate() {
-                *o = dot4(xr, &w[n * k_in..(n + 1) * k_in]);
+                *o = dot8(xr, &w[n * k_in..(n + 1) * k_in]);
             }
         }
     };
-    let rp = rows_per_tile(t, threads);
-    if threads <= 1 || t <= 1 {
+    let rp = rows_per_tile(t, ex.threads());
+    if ex.threads() <= 1 || t <= 1 {
         body(0, out);
         return;
     }
-    std::thread::scope(|sc| {
+    ex.scope(|scope| {
         let body = &body;
         for (idx, out_c) in out.chunks_mut(rp * n_out).enumerate() {
-            sc.spawn(move || body(idx * rp, out_c));
+            scope.spawn(move || body(idx * rp, out_c));
         }
     });
 }
@@ -99,7 +125,7 @@ pub fn matmul_residual(
     k_in: usize,
     n_out: usize,
     out: &mut [f32],
-    threads: usize,
+    ex: &Exec,
 ) {
     debug_assert_eq!(x.len(), t * k_in);
     debug_assert_eq!(res.len(), t * n_out);
@@ -112,26 +138,26 @@ pub fn matmul_residual(
             let rr = &res[ti * n_out..(ti + 1) * n_out];
             let or = &mut out_c[r * n_out..(r + 1) * n_out];
             for n in 0..n_out {
-                or[n] = rr[n] + dot4(xr, &w[n * k_in..(n + 1) * k_in]);
+                or[n] = rr[n] + dot8(xr, &w[n * k_in..(n + 1) * k_in]);
             }
         }
     };
-    let rp = rows_per_tile(t, threads);
-    if threads <= 1 || t <= 1 {
+    let rp = rows_per_tile(t, ex.threads());
+    if ex.threads() <= 1 || t <= 1 {
         body(0, out);
         return;
     }
-    std::thread::scope(|sc| {
+    ex.scope(|scope| {
         let body = &body;
         for (idx, out_c) in out.chunks_mut(rp * n_out).enumerate() {
-            sc.spawn(move || body(idx * rp, out_c));
+            scope.spawn(move || body(idx * rp, out_c));
         }
     });
 }
 
-/// `dx[t, k] += Σ_n dy[t, n] · w[n, k]` — input gradient, threaded over dx
+/// `dx[t, k] += Σ_n dy[t, n] · w[n, k]` — input gradient, pooled over dx
 /// row tiles (accumulates, like the reference convention).
-pub fn matmul_bwd_x(dy: &[f32], w: &[f32], t: usize, k_in: usize, n_out: usize, dx: &mut [f32], threads: usize) {
+pub fn matmul_bwd_x(dy: &[f32], w: &[f32], t: usize, k_in: usize, n_out: usize, dx: &mut [f32], ex: &Exec) {
     debug_assert_eq!(dy.len(), t * n_out);
     debug_assert_eq!(dx.len(), t * k_in);
     let body = |r0: usize, dx_c: &mut [f32]| {
@@ -148,23 +174,23 @@ pub fn matmul_bwd_x(dy: &[f32], w: &[f32], t: usize, k_in: usize, n_out: usize, 
             }
         }
     };
-    let rp = rows_per_tile(t, threads);
-    if threads <= 1 || t <= 1 {
+    let rp = rows_per_tile(t, ex.threads());
+    if ex.threads() <= 1 || t <= 1 {
         body(0, dx);
         return;
     }
-    std::thread::scope(|sc| {
+    ex.scope(|scope| {
         let body = &body;
         for (idx, dx_c) in dx.chunks_mut(rp * k_in).enumerate() {
-            sc.spawn(move || body(idx * rp, dx_c));
+            scope.spawn(move || body(idx * rp, dx_c));
         }
     });
 }
 
-/// `dw[n, k] += Σ_t dy[t, n] · x[t, k]` — weight gradient, threaded over
-/// output-neuron tiles (each thread owns a contiguous block of dw rows and
+/// `dw[n, k] += Σ_t dy[t, n] · x[t, k]` — weight gradient, pooled over
+/// output-neuron tiles (each job owns a contiguous block of dw rows and
 /// scans all tokens sequentially, so bits are thread-count invariant).
-pub fn matmul_bwd_w(dy: &[f32], x: &[f32], t: usize, k_in: usize, n_out: usize, dw: &mut [f32], threads: usize) {
+pub fn matmul_bwd_w(dy: &[f32], x: &[f32], t: usize, k_in: usize, n_out: usize, dw: &mut [f32], ex: &Exec) {
     debug_assert_eq!(dy.len(), t * n_out);
     debug_assert_eq!(x.len(), t * k_in);
     debug_assert_eq!(dw.len(), n_out * k_in);
@@ -182,22 +208,22 @@ pub fn matmul_bwd_w(dy: &[f32], x: &[f32], t: usize, k_in: usize, n_out: usize, 
             }
         }
     };
-    let np = rows_per_tile(n_out, threads);
-    if threads <= 1 || n_out <= 1 {
+    let np = rows_per_tile(n_out, ex.threads());
+    if ex.threads() <= 1 || n_out <= 1 {
         body(0, dw);
         return;
     }
-    std::thread::scope(|sc| {
+    ex.scope(|scope| {
         let body = &body;
         for (idx, dw_c) in dw.chunks_mut(np * k_in).enumerate() {
-            sc.spawn(move || body(idx * np, dw_c));
+            scope.spawn(move || body(idx * np, dw_c));
         }
     });
 }
 
-/// RMSNorm forward, threaded over rows (same per-row math as the
-/// reference: `rstd` sum stays sequential within a row).
-pub fn rmsnorm(x: &[f32], gamma: &[f32], t: usize, d: usize, y: &mut [f32], rstd: &mut [f32], threads: usize) {
+/// RMSNorm forward, pooled over rows (same per-row math as the reference:
+/// `rstd` sum stays sequential within a row).
+pub fn rmsnorm(x: &[f32], gamma: &[f32], t: usize, d: usize, y: &mut [f32], rstd: &mut [f32], ex: &Exec) {
     use crate::backend::cpu::math::RMS_EPS;
     debug_assert_eq!(x.len(), t * d);
     debug_assert_eq!(gamma.len(), d);
@@ -217,15 +243,15 @@ pub fn rmsnorm(x: &[f32], gamma: &[f32], t: usize, d: usize, y: &mut [f32], rstd
             }
         }
     };
-    let rp = rows_per_tile(t, threads);
-    if threads <= 1 || t <= 1 {
+    let rp = rows_per_tile(t, ex.threads());
+    if ex.threads() <= 1 || t <= 1 {
         body(0, y, rstd);
         return;
     }
-    std::thread::scope(|sc| {
+    ex.scope(|scope| {
         let body = &body;
         for (idx, (y_c, rstd_c)) in y.chunks_mut(rp * d).zip(rstd.chunks_mut(rp)).enumerate() {
-            sc.spawn(move || body(idx * rp, y_c, rstd_c));
+            scope.spawn(move || body(idx * rp, y_c, rstd_c));
         }
     });
 }
@@ -249,7 +275,7 @@ pub fn fused_rmsnorm_qkv(
     q: &mut [f32],
     k: &mut [f32],
     v: &mut [f32],
-    threads: usize,
+    ex: &Exec,
 ) {
     use crate::backend::cpu::math::RMS_EPS;
     debug_assert_eq!(x.len(), t * d);
@@ -273,24 +299,24 @@ pub fn fused_rmsnorm_qkv(
             let hr = &h1_c[r * d..(r + 1) * d];
             let qr = &mut q_c[r * d..(r + 1) * d];
             for (n, o) in qr.iter_mut().enumerate() {
-                *o = dot4(hr, &wq[n * d..(n + 1) * d]);
+                *o = dot8(hr, &wq[n * d..(n + 1) * d]);
             }
             let kr = &mut k_c[r * dkv..(r + 1) * dkv];
             for (n, o) in kr.iter_mut().enumerate() {
-                *o = dot4(hr, &wk[n * d..(n + 1) * d]);
+                *o = dot8(hr, &wk[n * d..(n + 1) * d]);
             }
             let vr = &mut v_c[r * dkv..(r + 1) * dkv];
             for (n, o) in vr.iter_mut().enumerate() {
-                *o = dot4(hr, &wv[n * d..(n + 1) * d]);
+                *o = dot8(hr, &wv[n * d..(n + 1) * d]);
             }
         }
     };
-    let rp = rows_per_tile(t, threads);
-    if threads <= 1 || t <= 1 {
+    let rp = rows_per_tile(t, ex.threads());
+    if ex.threads() <= 1 || t <= 1 {
         body(0, h1, rstd, q, k, v);
         return;
     }
-    std::thread::scope(|sc| {
+    ex.scope(|scope| {
         let body = &body;
         let iter = h1
             .chunks_mut(rp * d)
@@ -300,7 +326,7 @@ pub fn fused_rmsnorm_qkv(
             .zip(v.chunks_mut(rp * dkv))
             .enumerate();
         for (idx, ((((h1_c, rstd_c), q_c), k_c), v_c)) in iter {
-            sc.spawn(move || body(idx * rp, h1_c, rstd_c, q_c, k_c, v_c));
+            scope.spawn(move || body(idx * rp, h1_c, rstd_c, q_c, k_c, v_c));
         }
     });
 }
@@ -321,7 +347,7 @@ pub fn fused_rmsnorm_swiglu(
     gate: &mut [f32],
     up: &mut [f32],
     y: &mut [f32],
-    threads: usize,
+    ex: &Exec,
 ) {
     use crate::backend::cpu::math::RMS_EPS;
     debug_assert_eq!(x.len(), t * d);
@@ -346,8 +372,8 @@ pub fn fused_rmsnorm_swiglu(
             let ur = &mut up_c[r * f..(r + 1) * f];
             let yr = &mut y_c[r * f..(r + 1) * f];
             for n in 0..f {
-                let g = dot4(hr, &w_gate[n * d..(n + 1) * d]);
-                let u = dot4(hr, &w_up[n * d..(n + 1) * d]);
+                let g = dot8(hr, &w_gate[n * d..(n + 1) * d]);
+                let u = dot8(hr, &w_up[n * d..(n + 1) * d]);
                 gr[n] = g;
                 ur[n] = u;
                 let sig = 1.0 / (1.0 + (-g).exp());
@@ -355,12 +381,12 @@ pub fn fused_rmsnorm_swiglu(
             }
         }
     };
-    let rp = rows_per_tile(t, threads);
-    if threads <= 1 || t <= 1 {
+    let rp = rows_per_tile(t, ex.threads());
+    if ex.threads() <= 1 || t <= 1 {
         body(0, h2, rstd, gate, up, y);
         return;
     }
-    std::thread::scope(|sc| {
+    ex.scope(|scope| {
         let body = &body;
         let iter = h2
             .chunks_mut(rp * d)
@@ -370,12 +396,12 @@ pub fn fused_rmsnorm_swiglu(
             .zip(y.chunks_mut(rp * f))
             .enumerate();
         for (idx, ((((h2_c, rstd_c), gate_c), up_c), y_c)) in iter {
-            sc.spawn(move || body(idx * rp, h2_c, rstd_c, gate_c, up_c, y_c));
+            scope.spawn(move || body(idx * rp, h2_c, rstd_c, gate_c, up_c, y_c));
         }
     });
 }
 
-/// RMSNorm backward: `dx` rows threaded; `dgamma` accumulated in a
+/// RMSNorm backward: `dx` rows pooled; `dgamma` accumulated in a
 /// sequential second pass so its bits never depend on the row partition.
 #[allow(clippy::too_many_arguments)]
 pub fn rmsnorm_bwd(
@@ -387,7 +413,7 @@ pub fn rmsnorm_bwd(
     d: usize,
     dx: &mut [f32],
     dgamma: &mut [f32],
-    threads: usize,
+    ex: &Exec,
 ) {
     let body = |r0: usize, dx_c: &mut [f32]| {
         let rows = dx_c.len() / d;
@@ -408,14 +434,14 @@ pub fn rmsnorm_bwd(
             }
         }
     };
-    let rp = rows_per_tile(t, threads);
-    if threads <= 1 || t <= 1 {
+    let rp = rows_per_tile(t, ex.threads());
+    if ex.threads() <= 1 || t <= 1 {
         body(0, dx);
     } else {
-        std::thread::scope(|sc| {
+        ex.scope(|scope| {
             let body = &body;
             for (idx, dx_c) in dx.chunks_mut(rp * d).enumerate() {
-                sc.spawn(move || body(idx * rp, dx_c));
+                scope.spawn(move || body(idx * rp, dx_c));
             }
         });
     }
@@ -430,8 +456,8 @@ pub fn rmsnorm_bwd(
     }
 }
 
-/// SwiGLU backward, threaded over element tiles (pure elementwise).
-pub fn swiglu_bwd(gate: &[f32], up: &[f32], dy: &[f32], dgate: &mut [f32], dup: &mut [f32], threads: usize) {
+/// SwiGLU backward, pooled over element tiles (pure elementwise).
+pub fn swiglu_bwd(gate: &[f32], up: &[f32], dy: &[f32], dgate: &mut [f32], dup: &mut [f32], ex: &Exec) {
     let n = dy.len();
     let body = |e0: usize, dgate_c: &mut [f32], dup_c: &mut [f32]| {
         for (j, (dg, du)) in dgate_c.iter_mut().zip(dup_c.iter_mut()).enumerate() {
@@ -443,25 +469,25 @@ pub fn swiglu_bwd(gate: &[f32], up: &[f32], dy: &[f32], dgate: &mut [f32], dup: 
             *du += dy[i] * silu;
         }
     };
-    let ep = rows_per_tile(n, threads);
-    if threads <= 1 || n <= 1 {
+    let ep = rows_per_tile(n, ex.threads());
+    if ex.threads() <= 1 || n <= 1 {
         body(0, dgate, dup);
         return;
     }
-    std::thread::scope(|sc| {
+    ex.scope(|scope| {
         let body = &body;
         for (idx, (dgate_c, dup_c)) in dgate.chunks_mut(ep).zip(dup.chunks_mut(ep)).enumerate() {
-            sc.spawn(move || body(idx * ep, dgate_c, dup_c));
+            scope.spawn(move || body(idx * ep, dgate_c, dup_c));
         }
     });
 }
 
-/// RoPE (rotate-half), threaded over token rows. Same per-element math as
+/// RoPE (rotate-half), pooled over token rows. Same per-element math as
 /// the reference `rope_apply` (bitwise-identical results), but the angle —
 /// which depends only on `(pos, j)` — is computed once per `(row, j)` and
 /// reused across all heads instead of recomputing `powf`/`cos`/`sin`
 /// `n_heads` times.
-pub fn rope(x: &mut [f32], pos: &[i32], t: usize, n_heads: usize, hd: usize, sign: f32, threads: usize) {
+pub fn rope(x: &mut [f32], pos: &[i32], t: usize, n_heads: usize, hd: usize, sign: f32, ex: &Exec) {
     use crate::backend::cpu::math::ROPE_BASE;
     debug_assert_eq!(x.len(), t * n_heads * hd);
     let row = n_heads * hd;
@@ -484,20 +510,20 @@ pub fn rope(x: &mut [f32], pos: &[i32], t: usize, n_heads: usize, hd: usize, sig
             }
         }
     };
-    let rp = rows_per_tile(t, threads);
-    if threads <= 1 || t <= 1 {
+    let rp = rows_per_tile(t, ex.threads());
+    if ex.threads() <= 1 || t <= 1 {
         body(0, x);
         return;
     }
-    std::thread::scope(|sc| {
+    ex.scope(|scope| {
         let body = &body;
         for (idx, x_c) in x.chunks_mut(rp * row).enumerate() {
-            sc.spawn(move || body(idx * rp, x_c));
+            scope.spawn(move || body(idx * rp, x_c));
         }
     });
 }
 
-/// AdamW, threaded over element tiles. Elementwise and therefore bitwise
+/// AdamW, pooled over element tiles. Elementwise and therefore bitwise
 /// identical to the sequential reference update for every element.
 #[allow(clippy::too_many_arguments)]
 pub fn adamw(
@@ -508,7 +534,7 @@ pub fn adamw(
     lr: f32,
     step: f32,
     weight_decay: f32,
-    threads: usize,
+    ex: &Exec,
 ) {
     const B1: f32 = 0.9;
     const B2: f32 = 0.999;
@@ -526,16 +552,16 @@ pub fn adamw(
             *pv = *pv * (1.0 - lr * weight_decay) - lr * m_hat / (v_hat.sqrt() + EPS);
         }
     };
-    let ep = rows_per_tile(n, threads);
-    if threads <= 1 || n <= 1 {
+    let ep = rows_per_tile(n, ex.threads());
+    if ex.threads() <= 1 || n <= 1 {
         body(0, p, m, v);
         return;
     }
-    std::thread::scope(|sc| {
+    ex.scope(|scope| {
         let body = &body;
         let iter = p.chunks_mut(ep).zip(m.chunks_mut(ep)).zip(v.chunks_mut(ep)).enumerate();
         for (idx, ((p_c, m_c), v_c)) in iter {
-            sc.spawn(move || body(idx * ep, p_c, m_c, v_c));
+            scope.spawn(move || body(idx * ep, p_c, m_c, v_c));
         }
     });
 }
@@ -554,7 +580,7 @@ pub fn lora_linear(
     scale: f32,
     ha: &mut [f32],
     out: &mut [f32],
-    threads: usize,
+    ex: &Exec,
 ) {
     debug_assert_eq!(x.len(), t * d);
     debug_assert_eq!(a.len(), r * d);
@@ -567,24 +593,24 @@ pub fn lora_linear(
             let xr = &x[(r0 + rr) * d..(r0 + rr + 1) * d];
             let har = &mut ha_c[rr * r..(rr + 1) * r];
             for (n, o) in har.iter_mut().enumerate() {
-                *o = dot4(xr, &a[n * d..(n + 1) * d]);
+                *o = dot8(xr, &a[n * d..(n + 1) * d]);
             }
             let har = &ha_c[rr * r..(rr + 1) * r];
             let or = &mut out_c[rr * n_out..(rr + 1) * n_out];
             for (n, o) in or.iter_mut().enumerate() {
-                *o += scale * dot4(har, &b[n * r..(n + 1) * r]);
+                *o += scale * dot8(har, &b[n * r..(n + 1) * r]);
             }
         }
     };
-    let rp = rows_per_tile(t, threads);
-    if threads <= 1 || t <= 1 {
+    let rp = rows_per_tile(t, ex.threads());
+    if ex.threads() <= 1 || t <= 1 {
         body(0, ha, out);
         return;
     }
-    std::thread::scope(|sc| {
+    ex.scope(|scope| {
         let body = &body;
         for (idx, (ha_c, out_c)) in ha.chunks_mut(rp * r).zip(out.chunks_mut(rp * n_out)).enumerate() {
-            sc.spawn(move || body(idx * rp, ha_c, out_c));
+            scope.spawn(move || body(idx * rp, ha_c, out_c));
         }
     });
 }
@@ -610,13 +636,32 @@ mod tests {
     }
 
     #[test]
-    fn dot4_matches_sequential() {
+    fn dot8_matches_sequential() {
         let mut rng = Rng::new(1);
-        for n in [0usize, 1, 3, 4, 7, 8, 33] {
+        for n in [0usize, 1, 3, 4, 7, 8, 9, 16, 33] {
             let a = randv(&mut rng, n);
             let b = randv(&mut rng, n);
             let seq: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
-            assert!((dot4(&a, &b) - seq).abs() < 1e-4, "n={n}");
+            assert!((dot8(&a, &b) - seq).abs() < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar_bits() {
+        let mut rng = Rng::new(10);
+        for n in [0usize, 1, 7, 8, 19, 32] {
+            let x = randv(&mut rng, n);
+            let mut y1 = randv(&mut rng, n);
+            let mut y2 = y1.clone();
+            axpy(0.37, &x, &mut y1);
+            for (yi, xi) in y2.iter_mut().zip(&x) {
+                *yi += 0.37 * xi;
+            }
+            assert_eq!(
+                y1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "n={n}: unrolled axpy changed bits vs the scalar loop"
+            );
         }
     }
 
@@ -630,8 +675,9 @@ mod tests {
         math::linear_fwd(&x, &w, t, k, n, &mut want);
         let mut bits1: Option<Vec<u32>> = None;
         for threads in [1usize, 2, 5] {
+            let ex = Exec::new(threads);
             let mut got = vec![0.0f32; t * n];
-            matmul(&x, &w, t, k, n, &mut got, threads);
+            matmul(&x, &w, t, k, n, &mut got, &ex);
             assert_close(&got, &want, 1e-5, "matmul");
             let bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
             match &bits1 {
@@ -653,8 +699,9 @@ mod tests {
         for i in 0..t * n {
             want[i] += res[i];
         }
+        let ex = Exec::new(3);
         let mut got = vec![0.0f32; t * n];
-        matmul_residual(&x, &w, &res, t, k, n, &mut got, 3);
+        matmul_residual(&x, &w, &res, t, k, n, &mut got, &ex);
         assert_close(&got, &want, 1e-5, "matmul_residual");
     }
 
@@ -669,9 +716,10 @@ mod tests {
         math::linear_bwd_x(&dy, &w, t, k, n, &mut dx_ref);
         math::linear_bwd_w(&dy, &x, t, k, n, &mut dw_ref);
         for threads in [1usize, 3] {
+            let ex = Exec::new(threads);
             let (mut dx, mut dw) = (vec![0.0f32; t * k], vec![0.0f32; n * k]);
-            matmul_bwd_x(&dy, &w, t, k, n, &mut dx, threads);
-            matmul_bwd_w(&dy, &x, t, k, n, &mut dw, threads);
+            matmul_bwd_x(&dy, &w, t, k, n, &mut dx, &ex);
+            matmul_bwd_w(&dy, &x, t, k, n, &mut dw, &ex);
             assert_close(&dx, &dx_ref, 1e-5, "dx");
             assert_close(&dw, &dw_ref, 1e-5, "dw");
         }
@@ -695,11 +743,12 @@ mod tests {
         math::linear_fwd(&h_ref, &wk, t, d, dkv, &mut k_ref);
         math::linear_fwd(&h_ref, &wv, t, d, dkv, &mut v_ref);
         for threads in [1usize, 4] {
+            let ex = Exec::new(threads);
             let (mut h1, mut rstd) = (vec![0.0f32; t * d], vec![0.0f32; t]);
             let mut q = vec![0.0f32; t * d];
             let mut k = vec![0.0f32; t * dkv];
             let mut v = vec![0.0f32; t * dkv];
-            fused_rmsnorm_qkv(&x, &gamma, &wq, &wk, &wv, t, d, dkv, &mut h1, &mut rstd, &mut q, &mut k, &mut v, threads);
+            fused_rmsnorm_qkv(&x, &gamma, &wq, &wk, &wv, t, d, dkv, &mut h1, &mut rstd, &mut q, &mut k, &mut v, &ex);
             assert_close(&h1, &h_ref, 1e-5, "h1");
             assert_close(&q, &q_ref, 1e-5, "q");
             assert_close(&k, &k_ref, 1e-5, "k");
@@ -723,10 +772,11 @@ mod tests {
         math::linear_fwd(&h_ref, &wu, t, d, f, &mut u_ref);
         let mut y_ref = vec![0.0f32; t * f];
         math::swiglu_fwd(&g_ref, &u_ref, &mut y_ref);
+        let ex = Exec::new(2);
         let (mut h2, mut rstd) = (vec![0.0f32; t * d], vec![0.0f32; t]);
         let (mut gate, mut up, mut y) =
             (vec![0.0f32; t * f], vec![0.0f32; t * f], vec![0.0f32; t * f]);
-        fused_rmsnorm_swiglu(&x, &gamma, &wg, &wu, t, d, f, &mut h2, &mut rstd, &mut gate, &mut up, &mut y, 2);
+        fused_rmsnorm_swiglu(&x, &gamma, &wg, &wu, t, d, f, &mut h2, &mut rstd, &mut gate, &mut up, &mut y, &ex);
         assert_close(&y, &y_ref, 1e-5, "y");
         assert_close(&gate, &g_ref, 1e-5, "gate");
         assert_close(&up, &u_ref, 1e-5, "up");
@@ -743,8 +793,9 @@ mod tests {
         math::rmsnorm_fwd(&x, &gamma, t, d, &mut y, &mut rstd);
         let (mut dx_ref, mut dg_ref) = (vec![0.0f32; t * d], vec![0.0f32; d]);
         math::rmsnorm_bwd(&x, &gamma, &rstd, &dy, t, d, &mut dx_ref, &mut dg_ref);
+        let ex = Exec::new(3);
         let (mut dx, mut dg) = (vec![0.0f32; t * d], vec![0.0f32; d]);
-        rmsnorm_bwd(&x, &gamma, &rstd, &dy, t, d, &mut dx, &mut dg, 3);
+        rmsnorm_bwd(&x, &gamma, &rstd, &dy, t, d, &mut dx, &mut dg, &ex);
         assert_close(&dx, &dx_ref, 1e-5, "dx");
         assert_close(&dg, &dg_ref, 1e-5, "dgamma");
     }
@@ -757,8 +808,9 @@ mod tests {
         let orig = randv(&mut rng, t * heads * hd);
         let mut a = orig.clone();
         let mut b = orig.clone();
+        let ex = Exec::new(3);
         math::rope_apply(&mut a, &pos, t, heads, hd, 1.0);
-        rope(&mut b, &pos, t, heads, hd, 1.0, 3);
+        rope(&mut b, &pos, t, heads, hd, 1.0, &ex);
         assert_eq!(
             a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
@@ -770,8 +822,9 @@ mod tests {
         let mut p2 = p1.clone();
         let (mut m1, mut v1) = (vec![0.0f32; n], vec![0.0f32; n]);
         let (mut m2, mut v2) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let ex = Exec::new(4);
         math::adamw_update(&mut p1, &g, &mut m1, &mut v1, 1e-3, 1.0, 0.01);
-        adamw(&mut p2, &g, &mut m2, &mut v2, 1e-3, 1.0, 0.01, 4);
+        adamw(&mut p2, &g, &mut m2, &mut v2, 1e-3, 1.0, 0.01, &ex);
         assert_eq!(
             p1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             p2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
@@ -795,9 +848,10 @@ mod tests {
         for i in 0..t * n {
             want[i] += scale * delta[i];
         }
+        let ex = Exec::new(2);
         let mut ha = vec![0.0f32; t * r];
         let mut out = base.clone();
-        lora_linear(&x, &a, &b, t, d, r, n, scale, &mut ha, &mut out, 2);
+        lora_linear(&x, &a, &b, t, d, r, n, scale, &mut ha, &mut out, &ex);
         assert_close(&ha, &ha_ref, 1e-5, "ha");
         assert_close(&out, &want, 1e-5, "out");
     }

@@ -6,23 +6,32 @@
 //! `"cpu-fast"`), shares `CpuState` — so checkpoints, init and the family
 //! guards are identical — and swaps the execution for:
 //!
-//! * cache-blocked, multithreaded matmuls (`kernels.rs`),
-//! * flash-style tiled attention with online softmax (`attention.rs`),
-//! * streaming Cut Cross-Entropy (`cce.rs`),
-//! * fused RMSNorm→linear and SwiGLU epilogues.
+//! * a persistent worker pool + step-scoped scratch arena (`pool.rs`,
+//!   `scratch.rs`): workers spawn once per backend and park between
+//!   dispatches, and working buffers are leased from a size-bucketed free
+//!   list — zero arena heap allocations in steady-state train steps,
+//! * cache-blocked, pooled matmuls with 8-lane SIMD-width inner loops
+//!   (`kernels.rs`) and fused RMSNorm→linear / SwiGLU epilogues,
+//! * flash-style tiled attention with online softmax and packed-KV tiles
+//!   (`attention.rs`),
+//! * streaming Cut Cross-Entropy (`cce.rs`).
 //!
 //! Thread count comes from [`crate::config::resolve_threads`]:
 //! `CHRONICALS_THREADS` env > configured value > `available_parallelism`.
-//! `threads = 1` runs fully single-threaded (no scoped threads are ever
-//! spawned). The reference backend stays the bitwise-deterministic oracle;
-//! this backend is validated against it by the parity suite
-//! (`rust/tests/parity.rs`) under the tolerance policy of DESIGN.md §4.3.
+//! `threads = 1` runs fully single-threaded (the pool holds zero workers
+//! and every kernel takes its serial path). The reference backend stays
+//! the bitwise-deterministic oracle; this backend is validated against it
+//! by the parity suite (`rust/tests/parity.rs`) under the tolerance policy
+//! of DESIGN.md §4.3.
 
 pub mod attention;
 pub mod cce;
 pub mod kernels;
 pub mod model;
+pub mod pool;
 pub mod scratch;
+
+pub use pool::Exec;
 
 use super::cpu::{
     self, as_cpu_state, as_cpu_state_mut, batch_view, check_geometry, family_lora, reference_dims,
@@ -37,7 +46,7 @@ use anyhow::{bail, Result};
 
 pub struct FastCpuBackend {
     manifest: Manifest,
-    threads: usize,
+    exec: Exec,
 }
 
 impl Default for FastCpuBackend {
@@ -66,13 +75,20 @@ impl FastCpuBackend {
     pub fn custom(dims: ModelDims, batch: usize, seq: usize, threads: usize) -> FastCpuBackend {
         FastCpuBackend {
             manifest: cpu::synth_manifest(dims, batch, seq, "cpu-fast"),
-            threads: crate::config::resolve_threads(threads),
+            exec: Exec::new(crate::config::resolve_threads(threads)),
         }
     }
 
     /// The resolved worker-thread count this backend runs with.
     pub fn threads(&self) -> usize {
-        self.threads
+        self.exec.threads()
+    }
+
+    /// The execution substrate (persistent pool + scratch arena). Exposed
+    /// for the accounting tests (`rust/tests/no_materialization.rs`) and
+    /// the dispatch benches.
+    pub fn exec(&self) -> &Exec {
+        &self.exec
     }
 
     fn spec(&self, name: &str) -> Result<&ExecutableSpec> {
@@ -145,7 +161,7 @@ impl Backend for FastCpuBackend {
         };
         check_geometry(spec, b)?;
         let view = batch_view(b)?;
-        let out = model::train_step(s, &view, broken, step, lr, lr_b, self.threads)?;
+        let out = model::train_step(s, &view, broken, step, lr, lr_b, &self.exec)?;
         Ok(StepOutputs { loss: out.loss, grad_norm: out.grad_norm, n_tokens: out.n_tokens })
     }
 
@@ -165,7 +181,7 @@ impl Backend for FastCpuBackend {
             );
         }
         let view = batch_view(batch)?;
-        model::eval_loss(s, &view, self.threads)
+        model::eval_loss(s, &view, &self.exec)
     }
 
     fn state_params(&self, state: &DeviceState) -> Result<Vec<HostTensor>> {
@@ -179,17 +195,21 @@ impl Backend for FastCpuBackend {
     /// Table-5-style kernel microbench: `*_fused`/`*_flash` names time this
     /// backend's kernels, `*_naive` names time the reference scalar
     /// implementations — on identical deterministic inputs at a bench
-    /// geometry large enough for tiling and threading to matter.
+    /// geometry large enough for tiling and threading to matter. The
+    /// `dispatch_matmul_{pool,spawn,single}` names time a small-geometry
+    /// matmul (where dispatch overhead dominates) through the persistent
+    /// pool, a scoped-spawn baseline, and the serial path respectively.
     fn bench_kernel(&self, name: &str, reps: usize, warmup: usize) -> Result<f64> {
-        bench::run(name, reps, warmup, self.threads)
+        bench::run(name, reps, warmup, &self.exec)
     }
 }
 
-/// Kernel microbench implementations (fused-vs-naive pairs, paper Table 5).
+/// Kernel microbench implementations (fused-vs-naive pairs, paper Table 5,
+/// plus the pool-vs-spawn dispatch comparison).
 mod bench {
     use super::super::cpu::math;
     use super::super::cpu::model as refmodel;
-    use super::{attention, cce, kernels};
+    use super::{attention, cce, kernels, Exec};
     use crate::backend::cpu::model::BatchView;
     use crate::util::rng::Rng;
     use anyhow::{bail, Result};
@@ -209,6 +229,12 @@ mod bench {
     const F: usize = 128;
     const V: usize = 512;
     const R: usize = 8;
+
+    // dispatch bench substrate: deliberately small (T ≤ 64) so per-call
+    // dispatch overhead — not arithmetic — dominates the timing
+    const DISPATCH_T: usize = 32;
+    const DISPATCH_K: usize = 64;
+    const DISPATCH_N: usize = 64;
 
     fn randv(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
         (0..n).map(|_| rng.normal() as f32 * scale).collect()
@@ -238,7 +264,43 @@ mod bench {
         t0.elapsed().as_secs_f64() / reps.max(1) as f64
     }
 
-    pub fn run(name: &str, reps: usize, warmup: usize, threads: usize) -> Result<f64> {
+    /// The PR 2 dispatch baseline: identical tiling and inner loop to
+    /// `kernels::matmul`, but spawning fresh scoped threads per call.
+    /// Kept only as the bench reference the pooled dispatch is measured
+    /// against (`dispatch_matmul_spawn`).
+    fn matmul_scoped_spawn(
+        x: &[f32],
+        w: &[f32],
+        t: usize,
+        k_in: usize,
+        n_out: usize,
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        let body = |r0: usize, out_c: &mut [f32]| {
+            let rows = out_c.len() / n_out;
+            for r in 0..rows {
+                let xr = &x[(r0 + r) * k_in..(r0 + r + 1) * k_in];
+                let or = &mut out_c[r * n_out..(r + 1) * n_out];
+                for (n, o) in or.iter_mut().enumerate() {
+                    *o = kernels::dot8(xr, &w[n * k_in..(n + 1) * k_in]);
+                }
+            }
+        };
+        let rp = kernels::rows_per_tile(t, threads);
+        if threads <= 1 || t <= 1 {
+            body(0, out);
+            return;
+        }
+        std::thread::scope(|sc| {
+            let body = &body;
+            for (idx, out_c) in out.chunks_mut(rp * n_out).enumerate() {
+                sc.spawn(move || body(idx * rp, out_c));
+            }
+        });
+    }
+
+    pub fn run(name: &str, reps: usize, warmup: usize, ex: &Exec) -> Result<f64> {
         let mut rng = Rng::new(0xC0FFEE);
         let secs = match name {
             "kernel_rmsnorm_fused" | "kernel_rmsnorm_naive" => {
@@ -255,7 +317,7 @@ mod bench {
                     time(reps, warmup, || {
                         kernels::fused_rmsnorm_qkv(
                             &x, &gamma, &wq, &wk, &wv, T, D, DKV, &mut h, &mut rstd, &mut q,
-                            &mut k, &mut v, threads,
+                            &mut k, &mut v, ex,
                         );
                         black_box(&q);
                     })
@@ -282,7 +344,7 @@ mod bench {
                     time(reps, warmup, || {
                         kernels::fused_rmsnorm_swiglu(
                             &x, &gamma, &wg, &wu, T, D, F, &mut h, &mut rstd, &mut gate, &mut up,
-                            &mut y, threads,
+                            &mut y, ex,
                         );
                         black_box(&y);
                     })
@@ -301,7 +363,7 @@ mod bench {
                 let (_, pos) = seg_pos();
                 if name.ends_with("fused") {
                     time(reps, warmup, || {
-                        kernels::rope(&mut x, &pos, T, HEADS, HD, 1.0, threads);
+                        kernels::rope(&mut x, &pos, T, HEADS, HD, 1.0, ex);
                         black_box(&x);
                     })
                 } else {
@@ -322,8 +384,7 @@ mod bench {
                     let mut lse = vec![0.0f32; B * HEADS * S];
                     time(reps, warmup, || {
                         attention::flash_attention_fwd(
-                            &q, &k, &v, &seg, B, S, HEADS, KV_HEADS, HD, &mut out, &mut lse,
-                            threads,
+                            &q, &k, &v, &seg, B, S, HEADS, KV_HEADS, HD, &mut out, &mut lse, ex,
                         );
                         black_box(&out);
                     })
@@ -352,7 +413,7 @@ mod bench {
                 if name.ends_with("fused") {
                     let mut lse = vec![0.0f32; T];
                     time(reps, warmup, || {
-                        let out = cce::cce_loss_fwd(&hf, &w, &targets, T, D, V, &mut lse, threads);
+                        let out = cce::cce_loss_fwd(&hf, &w, &targets, T, D, V, &mut lse, ex);
                         black_box(out);
                     })
                 } else {
@@ -373,7 +434,7 @@ mod bench {
                 let mut v = vec![0.0f32; n];
                 if name.ends_with("fused") {
                     time(reps, warmup, || {
-                        kernels::adamw(&mut pbuf, &g, &mut m, &mut v, 1e-4, 2.0, 0.01, threads);
+                        kernels::adamw(&mut pbuf, &g, &mut m, &mut v, 1e-4, 2.0, 0.01, ex);
                         black_box(&pbuf);
                     })
                 } else {
@@ -391,7 +452,7 @@ mod bench {
                 let mut out = vec![0.0f32; T * D];
                 if name.ends_with("fused") {
                     time(reps, warmup, || {
-                        kernels::lora_linear(&x, &a, &b, T, D, R, D, 0.5, &mut ha, &mut out, threads);
+                        kernels::lora_linear(&x, &a, &b, T, D, R, D, 0.5, &mut ha, &mut out, ex);
                         black_box(&out);
                     })
                 } else {
@@ -404,6 +465,29 @@ mod bench {
                         }
                         black_box(&out);
                     })
+                }
+            }
+            "dispatch_matmul_pool" | "dispatch_matmul_spawn" | "dispatch_matmul_single" => {
+                let (t, k_in, n_out) = (DISPATCH_T, DISPATCH_K, DISPATCH_N);
+                let x = randv(&mut rng, t * k_in, 0.5);
+                let w = randv(&mut rng, n_out * k_in, 0.1);
+                let mut out = vec![0.0f32; t * n_out];
+                match name {
+                    "dispatch_matmul_pool" => time(reps, warmup, || {
+                        kernels::matmul(&x, &w, t, k_in, n_out, &mut out, ex);
+                        black_box(&out);
+                    }),
+                    "dispatch_matmul_spawn" => time(reps, warmup, || {
+                        matmul_scoped_spawn(&x, &w, t, k_in, n_out, &mut out, ex.threads());
+                        black_box(&out);
+                    }),
+                    _ => {
+                        let serial = Exec::new(1);
+                        time(reps, warmup, || {
+                            kernels::matmul(&x, &w, t, k_in, n_out, &mut out, &serial);
+                            black_box(&out);
+                        })
+                    }
                 }
             }
             other => bail!("unknown kernel microbench '{other}' on the cpu-fast backend"),
@@ -451,6 +535,15 @@ mod tests {
             assert!(secs > 0.0, "{name}: {secs}");
         }
         assert!(be.bench_kernel("kernel_nope", 1, 0).is_err());
+    }
+
+    #[test]
+    fn dispatch_bench_variants_run() {
+        let be = FastCpuBackend::with_threads(2);
+        for name in ["dispatch_matmul_pool", "dispatch_matmul_spawn", "dispatch_matmul_single"] {
+            let secs = be.bench_kernel(name, 1, 0).unwrap();
+            assert!(secs > 0.0, "{name}: {secs}");
+        }
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! The fast CPU train step: the reference architecture executed through
-//! the fused/tiled/threaded kernels of this module's siblings.
+//! the fused/tiled/pooled kernels of this module's siblings.
 //!
 //! Same state layout, same parameter names, same batch semantics as
 //! `backend::cpu::model` — the two backends share `CpuState`, so
@@ -10,9 +10,14 @@
 //!   recompute backward — `attention.rs`);
 //! * the loss never materializes `[T, V]` (streaming CCE — `cce.rs`);
 //! * RMSNorm feeds its projections fused, matmuls carry residual adds, and
-//!   every row-parallel kernel runs on `threads` scoped threads.
+//!   every row-parallel kernel dispatches on the backend's persistent
+//!   worker pool (`pool.rs`);
+//! * every f32 working buffer — activations, caches, gradients, kernel
+//!   scratch — is leased from the backend's arena (`scratch.rs`), so
+//!   steady-state steps perform zero arena heap allocations after the
+//!   first (warm-arena) step.
 //!
-//! Numerics: reassociation (tiled dots, online softmax) legitimately
+//! Numerics: reassociation (8-lane dots, online softmax) legitimately
 //! changes low-order bits vs. the sequential reference, so cross-backend
 //! parity is tolerance-based (loss |Δ| ≤ 1e-4, grad-norm rel ≤ 1e-3 —
 //! `rust/tests/parity.rs`), while the fast backend itself is bitwise
@@ -22,48 +27,49 @@
 use super::attention::{flash_attention_bwd, flash_attention_fwd};
 use super::cce::{cce_bwd_fused, cce_loss_fwd};
 use super::kernels as k;
-use super::scratch;
+use super::pool::Exec;
+use super::scratch::Lease;
 use crate::backend::cpu::model::{BatchView, CpuState, ParamIdx, StepOut, WEIGHT_DECAY};
 use crate::optim::{classify_param, ParamGroup};
 use anyhow::{anyhow, bail, Result};
 
-/// Per-layer forward activations kept for the backward pass. Identical to
-/// the reference cache except `probs: [B, Hq, S, S]` is replaced by
-/// `lse: [B, Hq, S]` (linear in S).
-struct LayerCache {
-    x_in: Vec<f32>,
-    h1: Vec<f32>,
-    rstd1: Vec<f32>,
-    q: Vec<f32>, // post-RoPE
-    kk: Vec<f32>, // post-RoPE
-    v: Vec<f32>,
-    hq_a: Option<Vec<f32>>,
-    hv_a: Option<Vec<f32>>,
-    att: Vec<f32>, // attention output (pre-Wo); doubles as the bwd `out`
-    lse: Vec<f32>, // [B, Hq, S] logsumexp per query row
-    x_mid: Vec<f32>,
-    h2: Vec<f32>,
-    rstd2: Vec<f32>,
-    gate: Vec<f32>,
-    up: Vec<f32>,
-    y: Vec<f32>,
+/// Per-layer forward activations kept for the backward pass, all leased
+/// from the backend arena. Identical to the reference cache except
+/// `probs: [B, Hq, S, S]` is replaced by `lse: [B, Hq, S]` (linear in S).
+struct LayerCache<'e> {
+    x_in: Lease<'e>,
+    h1: Lease<'e>,
+    rstd1: Lease<'e>,
+    q: Lease<'e>,  // post-RoPE
+    kk: Lease<'e>, // post-RoPE
+    v: Lease<'e>,
+    hq_a: Option<Lease<'e>>,
+    hv_a: Option<Lease<'e>>,
+    att: Lease<'e>, // attention output (pre-Wo); doubles as the bwd `out`
+    lse: Lease<'e>, // [B, Hq, S] logsumexp per query row
+    x_mid: Lease<'e>,
+    h2: Lease<'e>,
+    rstd2: Lease<'e>,
+    gate: Lease<'e>,
+    up: Lease<'e>,
+    y: Lease<'e>,
 }
 
-struct FinalCache {
-    x_f: Vec<f32>,
-    hf: Vec<f32>,
-    rstd_f: Vec<f32>,
-    lse: Vec<f32>, // [T] streaming logsumexp (replaces [T, V] probs)
+struct FinalCache<'e> {
+    x_f: Lease<'e>,
+    hf: Lease<'e>,
+    rstd_f: Lease<'e>,
+    lse: Lease<'e>, // [T] streaming logsumexp (replaces [T, V] probs)
     n_valid: usize,
 }
 
 /// Forward pass; fills `caches` when training. Returns summed loss +
 /// valid-target count (mean reduction is the caller's, like the reference).
-fn forward(
+fn forward<'e>(
     state: &CpuState,
     bv: &BatchView,
-    caches: Option<(&mut Vec<LayerCache>, &mut Option<FinalCache>)>,
-    threads: usize,
+    caches: Option<(&mut Vec<LayerCache<'e>>, &mut Option<FinalCache<'e>>)>,
+    ex: &'e Exec,
 ) -> Result<(f32, usize)> {
     let dims = &state.dims;
     let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
@@ -84,7 +90,7 @@ fn forward(
     }
 
     let embed = p.get("embed")?;
-    let mut x = scratch::alloc_f32(t * d);
+    let mut x = ex.arena().lease_uninit(t * d);
     for ti in 0..t {
         let tok = bv.tokens[ti] as usize;
         x[ti * d..(ti + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
@@ -96,11 +102,11 @@ fn forward(
         let pre = format!("layer_{l:02}.");
         let x_in = x;
 
-        let mut h1 = scratch::alloc_f32(t * d);
-        let mut rstd1 = scratch::alloc_f32(t);
-        let mut q = scratch::alloc_f32(t * d);
-        let mut kk = scratch::alloc_f32(t * dkv);
-        let mut vv = scratch::alloc_f32(t * dkv);
+        let mut h1 = ex.arena().lease_uninit(t * d);
+        let mut rstd1 = ex.arena().lease_uninit(t);
+        let mut q = ex.arena().lease_uninit(t * d);
+        let mut kk = ex.arena().lease_uninit(t * dkv);
+        let mut vv = ex.arena().lease_uninit(t * dkv);
         k::fused_rmsnorm_qkv(
             &x_in,
             p.get(&format!("{pre}norm1"))?,
@@ -115,14 +121,14 @@ fn forward(
             &mut q,
             &mut kk,
             &mut vv,
-            threads,
+            ex,
         );
 
         let (mut hq_a, mut hv_a) = (None, None);
         if let Some(lc) = &state.lora {
             let r = lc.rank;
             let s = lc.scale();
-            let mut ha = scratch::alloc_f32(t * r);
+            let mut ha = ex.arena().lease_uninit(t * r);
             k::lora_linear(
                 &h1,
                 p.get(&format!("{pre}wq_a"))?,
@@ -134,10 +140,10 @@ fn forward(
                 s,
                 &mut ha,
                 &mut q,
-                threads,
+                ex,
             );
             hq_a = Some(ha);
-            let mut ha = scratch::alloc_f32(t * r);
+            let mut ha = ex.arena().lease_uninit(t * r);
             k::lora_linear(
                 &h1,
                 p.get(&format!("{pre}wv_a"))?,
@@ -149,28 +155,28 @@ fn forward(
                 s,
                 &mut ha,
                 &mut vv,
-                threads,
+                ex,
             );
             hv_a = Some(ha);
         }
 
-        k::rope(&mut q, bv.pos, t, hq, hd, 1.0, threads);
-        k::rope(&mut kk, bv.pos, t, hkv, hd, 1.0, threads);
+        k::rope(&mut q, bv.pos, t, hq, hd, 1.0, ex);
+        k::rope(&mut kk, bv.pos, t, hkv, hd, 1.0, ex);
 
-        let mut att = scratch::alloc_f32(t * d);
-        let mut lse = scratch::alloc_f32(bv.bsz * hq * bv.seq);
+        let mut att = ex.arena().lease_uninit(t * d);
+        let mut lse = ex.arena().lease_uninit(bv.bsz * hq * bv.seq);
         flash_attention_fwd(
-            &q, &kk, &vv, bv.seg, bv.bsz, bv.seq, hq, hkv, hd, &mut att, &mut lse, threads,
+            &q, &kk, &vv, bv.seg, bv.bsz, bv.seq, hq, hkv, hd, &mut att, &mut lse, ex,
         );
 
-        let mut x_mid = scratch::alloc_f32(t * d);
-        k::matmul_residual(&att, p.get(&format!("{pre}wo"))?, &x_in, t, d, d, &mut x_mid, threads);
+        let mut x_mid = ex.arena().lease_uninit(t * d);
+        k::matmul_residual(&att, p.get(&format!("{pre}wo"))?, &x_in, t, d, d, &mut x_mid, ex);
 
-        let mut h2 = scratch::alloc_f32(t * d);
-        let mut rstd2 = scratch::alloc_f32(t);
-        let mut gate = scratch::alloc_f32(t * f);
-        let mut up = scratch::alloc_f32(t * f);
-        let mut y = scratch::alloc_f32(t * f);
+        let mut h2 = ex.arena().lease_uninit(t * d);
+        let mut rstd2 = ex.arena().lease_uninit(t);
+        let mut gate = ex.arena().lease_uninit(t * f);
+        let mut up = ex.arena().lease_uninit(t * f);
+        let mut y = ex.arena().lease_uninit(t * f);
         k::fused_rmsnorm_swiglu(
             &x_mid,
             p.get(&format!("{pre}norm2"))?,
@@ -184,11 +190,11 @@ fn forward(
             &mut gate,
             &mut up,
             &mut y,
-            threads,
+            ex,
         );
 
-        let mut x_out = scratch::alloc_f32(t * d);
-        k::matmul_residual(&y, p.get(&format!("{pre}w_down"))?, &x_mid, t, f, d, &mut x_out, threads);
+        let mut x_out = ex.arena().lease_uninit(t * d);
+        k::matmul_residual(&y, p.get(&format!("{pre}w_down"))?, &x_mid, t, f, d, &mut x_out, ex);
 
         if let Some((lcs, _)) = caches.as_mut() {
             lcs.push(LayerCache {
@@ -214,12 +220,12 @@ fn forward(
     }
 
     let x_f = x;
-    let mut hf = scratch::alloc_f32(t * d);
-    let mut rstd_f = scratch::alloc_f32(t);
-    k::rmsnorm(&x_f, p.get("norm_f")?, t, d, &mut hf, &mut rstd_f, threads);
-    let mut lse = scratch::alloc_f32(t);
+    let mut hf = ex.arena().lease_uninit(t * d);
+    let mut rstd_f = ex.arena().lease_uninit(t);
+    k::rmsnorm(&x_f, p.get("norm_f")?, t, d, &mut hf, &mut rstd_f, ex);
+    let mut lse = ex.arena().lease_uninit(t);
     let (loss_sum, n_valid) =
-        cce_loss_fwd(&hf, p.get("w_head")?, bv.targets, t, d, v, &mut lse, threads);
+        cce_loss_fwd(&hf, p.get("w_head")?, bv.targets, t, d, v, &mut lse, ex);
 
     if let Some((_, fc)) = caches.as_mut() {
         **fc = Some(FinalCache { x_f, hf, rstd_f, lse, n_valid });
@@ -230,26 +236,26 @@ fn forward(
 /// Full backward pass; gradients aligned with `state.params` (frozen
 /// entries stay zero except where the dx chain needs them — same contract
 /// as the reference backward).
-fn backward(
+fn backward<'e>(
     state: &CpuState,
     bv: &BatchView,
-    layer_caches: &[LayerCache],
-    fc: &FinalCache,
-    threads: usize,
-) -> Result<Vec<Vec<f32>>> {
+    layer_caches: &[LayerCache<'e>],
+    fc: &FinalCache<'e>,
+    ex: &'e Exec,
+) -> Result<Vec<Lease<'e>>> {
     let dims = &state.dims;
     let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
     let (hq, hkv, hd) = (dims.n_heads, dims.n_kv_heads, dims.head_dim());
     let dkv = dims.d_kv();
     let t = bv.bsz * bv.seq;
     let p = ParamIdx::new(&state.names, &state.params);
-    let mut grads: Vec<Vec<f32>> =
-        state.params.iter().map(|tn| scratch::alloc_f32(tn.elements())).collect();
+    let mut grads: Vec<Lease<'e>> =
+        state.params.iter().map(|tn| ex.arena().lease(tn.elements())).collect();
     let nt = state.n_trainable;
 
     // CCE backward: dW_head and dhf in one fused tile loop, no [T, V]
     let i_head = p.id("w_head")?;
-    let mut dhf = scratch::alloc_f32(t * d);
+    let mut dhf = ex.arena().lease(t * d);
     {
         let dw_head = if i_head < nt { Some(grads[i_head].as_mut_slice()) } else { None };
         cce_bwd_fused(
@@ -263,13 +269,13 @@ fn backward(
             fc.n_valid,
             dw_head,
             &mut dhf,
-            threads,
+            ex,
         );
     }
 
-    let mut dx = scratch::alloc_f32(t * d);
+    let mut dx = ex.arena().lease(t * d);
     let i_nf = p.id("norm_f")?;
-    k::rmsnorm_bwd(&fc.x_f, p.get("norm_f")?, &fc.rstd_f, &dhf, t, d, &mut dx, &mut grads[i_nf], threads);
+    k::rmsnorm_bwd(&fc.x_f, p.get("norm_f")?, &fc.rstd_f, &dhf, t, d, &mut dx, &mut grads[i_nf], ex);
 
     for l in (0..dims.n_layers).rev() {
         let pre = format!("layer_{l:02}.");
@@ -278,26 +284,26 @@ fn backward(
         // x_out = x_mid + y @ w_down.T
         let i_down = p.id(&format!("{pre}w_down"))?;
         if i_down < nt {
-            k::matmul_bwd_w(&dx, &c.y, t, f, d, &mut grads[i_down], threads);
+            k::matmul_bwd_w(&dx, &c.y, t, f, d, &mut grads[i_down], ex);
         }
-        let mut dy = scratch::alloc_f32(t * f);
-        k::matmul_bwd_x(&dx, p.get(&format!("{pre}w_down"))?, t, f, d, &mut dy, threads);
+        let mut dy = ex.arena().lease(t * f);
+        k::matmul_bwd_x(&dx, p.get(&format!("{pre}w_down"))?, t, f, d, &mut dy, ex);
 
-        let mut dgate = scratch::alloc_f32(t * f);
-        let mut dup = scratch::alloc_f32(t * f);
-        k::swiglu_bwd(&c.gate, &c.up, &dy, &mut dgate, &mut dup, threads);
+        let mut dgate = ex.arena().lease(t * f);
+        let mut dup = ex.arena().lease(t * f);
+        k::swiglu_bwd(&c.gate, &c.up, &dy, &mut dgate, &mut dup, ex);
 
         let i_gate = p.id(&format!("{pre}w_gate"))?;
         let i_up = p.id(&format!("{pre}w_up"))?;
         if i_gate < nt {
-            k::matmul_bwd_w(&dgate, &c.h2, t, d, f, &mut grads[i_gate], threads);
+            k::matmul_bwd_w(&dgate, &c.h2, t, d, f, &mut grads[i_gate], ex);
         }
         if i_up < nt {
-            k::matmul_bwd_w(&dup, &c.h2, t, d, f, &mut grads[i_up], threads);
+            k::matmul_bwd_w(&dup, &c.h2, t, d, f, &mut grads[i_up], ex);
         }
-        let mut dh2 = scratch::alloc_f32(t * d);
-        k::matmul_bwd_x(&dgate, p.get(&format!("{pre}w_gate"))?, t, d, f, &mut dh2, threads);
-        k::matmul_bwd_x(&dup, p.get(&format!("{pre}w_up"))?, t, d, f, &mut dh2, threads);
+        let mut dh2 = ex.arena().lease(t * d);
+        k::matmul_bwd_x(&dgate, p.get(&format!("{pre}w_gate"))?, t, d, f, &mut dh2, ex);
+        k::matmul_bwd_x(&dup, p.get(&format!("{pre}w_up"))?, t, d, f, &mut dh2, ex);
 
         let i_n2 = p.id(&format!("{pre}norm2"))?;
         let mut dx_mid = dx; // residual passthrough...
@@ -310,71 +316,71 @@ fn backward(
             d,
             &mut dx_mid, // ...plus the norm branch accumulated
             &mut grads[i_n2],
-            threads,
+            ex,
         );
 
         // x_mid = x_in + att @ wo.T
         let i_wo = p.id(&format!("{pre}wo"))?;
         if i_wo < nt {
-            k::matmul_bwd_w(&dx_mid, &c.att, t, d, d, &mut grads[i_wo], threads);
+            k::matmul_bwd_w(&dx_mid, &c.att, t, d, d, &mut grads[i_wo], ex);
         }
-        let mut datt = scratch::alloc_f32(t * d);
-        k::matmul_bwd_x(&dx_mid, p.get(&format!("{pre}wo"))?, t, d, d, &mut datt, threads);
+        let mut datt = ex.arena().lease(t * d);
+        k::matmul_bwd_x(&dx_mid, p.get(&format!("{pre}wo"))?, t, d, d, &mut datt, ex);
 
-        let mut dq = scratch::alloc_f32(t * d);
-        let mut dk = scratch::alloc_f32(t * dkv);
-        let mut dv = scratch::alloc_f32(t * dkv);
+        let mut dq = ex.arena().lease(t * d);
+        let mut dk = ex.arena().lease(t * dkv);
+        let mut dv = ex.arena().lease(t * dkv);
         flash_attention_bwd(
             &datt, &c.q, &c.kk, &c.v, &c.att, &c.lse, bv.seg, bv.bsz, bv.seq, hq, hkv, hd,
-            &mut dq, &mut dk, &mut dv, threads,
+            &mut dq, &mut dk, &mut dv, ex,
         );
-        k::rope(&mut dq, bv.pos, t, hq, hd, -1.0, threads);
-        k::rope(&mut dk, bv.pos, t, hkv, hd, -1.0, threads);
+        k::rope(&mut dq, bv.pos, t, hq, hd, -1.0, ex);
+        k::rope(&mut dk, bv.pos, t, hkv, hd, -1.0, ex);
 
         let i_wq = p.id(&format!("{pre}wq"))?;
         let i_wk = p.id(&format!("{pre}wk"))?;
         let i_wv = p.id(&format!("{pre}wv"))?;
         if i_wq < nt {
-            k::matmul_bwd_w(&dq, &c.h1, t, d, d, &mut grads[i_wq], threads);
+            k::matmul_bwd_w(&dq, &c.h1, t, d, d, &mut grads[i_wq], ex);
         }
         if i_wk < nt {
-            k::matmul_bwd_w(&dk, &c.h1, t, d, dkv, &mut grads[i_wk], threads);
+            k::matmul_bwd_w(&dk, &c.h1, t, d, dkv, &mut grads[i_wk], ex);
         }
         if i_wv < nt {
-            k::matmul_bwd_w(&dv, &c.h1, t, d, dkv, &mut grads[i_wv], threads);
+            k::matmul_bwd_w(&dv, &c.h1, t, d, dkv, &mut grads[i_wv], ex);
         }
-        let mut dh1 = scratch::alloc_f32(t * d);
-        k::matmul_bwd_x(&dq, p.get(&format!("{pre}wq"))?, t, d, d, &mut dh1, threads);
-        k::matmul_bwd_x(&dk, p.get(&format!("{pre}wk"))?, t, d, dkv, &mut dh1, threads);
-        k::matmul_bwd_x(&dv, p.get(&format!("{pre}wv"))?, t, d, dkv, &mut dh1, threads);
+        let mut dh1 = ex.arena().lease(t * d);
+        k::matmul_bwd_x(&dq, p.get(&format!("{pre}wq"))?, t, d, d, &mut dh1, ex);
+        k::matmul_bwd_x(&dk, p.get(&format!("{pre}wk"))?, t, d, dkv, &mut dh1, ex);
+        k::matmul_bwd_x(&dv, p.get(&format!("{pre}wv"))?, t, d, dkv, &mut dh1, ex);
 
         if let Some(lc) = &state.lora {
             let (r, s) = (lc.rank, lc.scale());
             let hq_a = c.hq_a.as_ref().expect("lora cache");
             let hv_a = c.hv_a.as_ref().expect("lora cache");
-            let mut dq_s = scratch::alloc_f32(t * d);
+            let mut dq_s = ex.arena().lease_uninit(t * d);
             for (o, &g) in dq_s.iter_mut().zip(dq.iter()) {
                 *o = s * g;
             }
             let i_qb = p.id(&format!("{pre}wq_b"))?;
             let i_qa = p.id(&format!("{pre}wq_a"))?;
-            k::matmul_bwd_w(&dq_s, hq_a, t, r, d, &mut grads[i_qb], threads);
-            let mut dhq_a = scratch::alloc_f32(t * r);
-            k::matmul_bwd_x(&dq_s, p.get(&format!("{pre}wq_b"))?, t, r, d, &mut dhq_a, threads);
-            k::matmul_bwd_w(&dhq_a, &c.h1, t, d, r, &mut grads[i_qa], threads);
-            k::matmul_bwd_x(&dhq_a, p.get(&format!("{pre}wq_a"))?, t, d, r, &mut dh1, threads);
+            k::matmul_bwd_w(&dq_s, hq_a, t, r, d, &mut grads[i_qb], ex);
+            let mut dhq_a = ex.arena().lease(t * r);
+            k::matmul_bwd_x(&dq_s, p.get(&format!("{pre}wq_b"))?, t, r, d, &mut dhq_a, ex);
+            k::matmul_bwd_w(&dhq_a, &c.h1, t, d, r, &mut grads[i_qa], ex);
+            k::matmul_bwd_x(&dhq_a, p.get(&format!("{pre}wq_a"))?, t, d, r, &mut dh1, ex);
 
-            let mut dv_s = scratch::alloc_f32(t * dkv);
+            let mut dv_s = ex.arena().lease_uninit(t * dkv);
             for (o, &g) in dv_s.iter_mut().zip(dv.iter()) {
                 *o = s * g;
             }
             let i_vb = p.id(&format!("{pre}wv_b"))?;
             let i_va = p.id(&format!("{pre}wv_a"))?;
-            k::matmul_bwd_w(&dv_s, hv_a, t, r, dkv, &mut grads[i_vb], threads);
-            let mut dhv_a = scratch::alloc_f32(t * r);
-            k::matmul_bwd_x(&dv_s, p.get(&format!("{pre}wv_b"))?, t, r, dkv, &mut dhv_a, threads);
-            k::matmul_bwd_w(&dhv_a, &c.h1, t, d, r, &mut grads[i_va], threads);
-            k::matmul_bwd_x(&dhv_a, p.get(&format!("{pre}wv_a"))?, t, d, r, &mut dh1, threads);
+            k::matmul_bwd_w(&dv_s, hv_a, t, r, dkv, &mut grads[i_vb], ex);
+            let mut dhv_a = ex.arena().lease(t * r);
+            k::matmul_bwd_x(&dv_s, p.get(&format!("{pre}wv_b"))?, t, r, dkv, &mut dhv_a, ex);
+            k::matmul_bwd_w(&dhv_a, &c.h1, t, d, r, &mut grads[i_va], ex);
+            k::matmul_bwd_x(&dhv_a, p.get(&format!("{pre}wv_a"))?, t, d, r, &mut dh1, ex);
         }
 
         let i_n1 = p.id(&format!("{pre}norm1"))?;
@@ -388,7 +394,7 @@ fn backward(
             d,
             &mut dx_in,
             &mut grads[i_n1],
-            threads,
+            ex,
         );
         dx = dx_in;
     }
@@ -407,8 +413,8 @@ fn backward(
 }
 
 /// Forward-only mean loss (the eval path).
-pub fn eval_loss(state: &CpuState, bv: &BatchView, threads: usize) -> Result<f32> {
-    let (loss_sum, n_valid) = forward(state, bv, None, threads)?;
+pub fn eval_loss(state: &CpuState, bv: &BatchView, ex: &Exec) -> Result<f32> {
+    let (loss_sum, n_valid) = forward(state, bv, None, ex)?;
     Ok(loss_sum / n_valid.max(1) as f32)
 }
 
@@ -422,12 +428,12 @@ pub fn train_step(
     step: u64,
     lr: f32,
     lr_b: f32,
-    threads: usize,
+    ex: &Exec,
 ) -> Result<StepOut> {
     let mut layer_caches: Vec<LayerCache> = Vec::with_capacity(state.dims.n_layers);
     let mut final_cache: Option<FinalCache> = None;
     let (loss_sum, n_valid) =
-        forward(state, bv, Some((&mut layer_caches, &mut final_cache)), threads)?;
+        forward(state, bv, Some((&mut layer_caches, &mut final_cache)), ex)?;
     let loss = loss_sum / n_valid.max(1) as f32;
 
     if broken {
@@ -435,12 +441,12 @@ pub fn train_step(
     }
 
     let fc = final_cache.ok_or_else(|| anyhow!("forward did not fill caches"))?;
-    let grads = backward(state, bv, &layer_caches, &fc, threads)?;
+    let grads = backward(state, bv, &layer_caches, &fc, ex)?;
 
     // fixed parameter order: grad-norm bits never depend on threads
     let mut sq = 0.0f32;
     for g in &grads[..state.n_trainable] {
-        for &x in g {
+        for &x in g.iter() {
             sq += x * x;
         }
     }
@@ -460,7 +466,7 @@ pub fn train_step(
             lr_p,
             step as f32,
             WEIGHT_DECAY,
-            threads,
+            ex,
         );
     }
     Ok(StepOut { loss, grad_norm, n_tokens: n_valid as f32 })
@@ -524,10 +530,11 @@ mod tests {
             let ref_grads =
                 refmodel::backward(&state, &view, &ref_lcs, &ref_fc.unwrap()).unwrap();
 
+            let ex = Exec::new(2);
             let mut lcs = Vec::new();
             let mut fc = None;
-            let (loss, _) = forward(&state, &view, Some((&mut lcs, &mut fc)), 2).unwrap();
-            let grads = backward(&state, &view, &lcs, &fc.unwrap(), 2).unwrap();
+            let (loss, _) = forward(&state, &view, Some((&mut lcs, &mut fc)), &ex).unwrap();
+            let grads = backward(&state, &view, &lcs, &fc.unwrap(), &ex).unwrap();
 
             assert!(
                 (loss - ref_loss).abs() < 1e-4 * (1.0 + ref_loss.abs()),
@@ -549,10 +556,11 @@ mod tests {
     #[test]
     fn loss_decreases_and_matches_reference_trajectory() {
         let b = batch();
+        let ex = Exec::new(3);
         let mut fast = init_state(dims(), None, 7);
         let mut reference = init_state(dims(), None, 7);
         for step in 1..=8u64 {
-            let fo = train_step(&mut fast, &bv(&b), false, step, 5e-3, 5e-3, 3).unwrap();
+            let fo = train_step(&mut fast, &bv(&b), false, step, 5e-3, 5e-3, &ex).unwrap();
             let ro = refmodel::train_step(&mut reference, &bv(&b), false, step, 5e-3, 5e-3).unwrap();
             assert!(fo.grad_norm > 0.0);
             assert!(
@@ -570,11 +578,12 @@ mod tests {
     fn step_bits_invariant_to_thread_count() {
         let b = batch();
         let run = |threads: usize| {
+            let ex = Exec::new(threads);
             let mut state = init_state(dims(), Some(LoraCfg { rank: 2, alpha: 4.0 }), 42);
             let mut bits = Vec::new();
             for step in 1..=4u64 {
                 let out =
-                    train_step(&mut state, &bv(&b), false, step, 3e-3, 6e-3, threads).unwrap();
+                    train_step(&mut state, &bv(&b), false, step, 3e-3, 6e-3, &ex).unwrap();
                 bits.push((out.loss.to_bits(), out.grad_norm.to_bits()));
             }
             bits
@@ -587,25 +596,46 @@ mod tests {
 
     #[test]
     fn broken_mode_has_zero_grad() {
+        let ex = Exec::new(2);
         let mut state = init_state(dims(), None, 7);
         let b = batch();
-        let o1 = train_step(&mut state, &bv(&b), true, 1, 5e-3, 5e-3, 2).unwrap();
-        let o2 = train_step(&mut state, &bv(&b), true, 2, 5e-3, 5e-3, 2).unwrap();
+        let o1 = train_step(&mut state, &bv(&b), true, 1, 5e-3, 5e-3, &ex).unwrap();
+        let o2 = train_step(&mut state, &bv(&b), true, 2, 5e-3, 5e-3, &ex).unwrap();
         assert_eq!(o1.grad_norm, 0.0);
         assert_eq!(o1.loss.to_bits(), o2.loss.to_bits(), "params moved in broken mode");
     }
 
     #[test]
     fn eval_matches_train_loss_before_update() {
+        let ex = Exec::new(2);
         let mut state = init_state(dims(), None, 3);
         let b = batch();
-        let e = eval_loss(&state, &bv(&b), 2).unwrap();
-        let out = train_step(&mut state, &bv(&b), false, 1, 1e-3, 1e-3, 2).unwrap();
+        let e = eval_loss(&state, &bv(&b), &ex).unwrap();
+        let out = train_step(&mut state, &bv(&b), false, 1, 1e-3, 1e-3, &ex).unwrap();
         assert_eq!(e.to_bits(), out.loss.to_bits());
     }
 
     #[test]
+    fn warm_arena_train_steps_stop_allocating() {
+        // the train-step-level version of the arena contract: after the
+        // cold first step, further steps lease everything from the free
+        // list (the integration-level assertion lives in
+        // rust/tests/no_materialization.rs on a larger geometry)
+        let ex = Exec::new(2);
+        let mut state = init_state(dims(), None, 11);
+        let b = batch();
+        train_step(&mut state, &bv(&b), false, 1, 1e-3, 1e-3, &ex).unwrap();
+        let cold = ex.arena().heap_allocs();
+        assert!(cold > 0, "first step must populate the arena");
+        for step in 2..=5u64 {
+            train_step(&mut state, &bv(&b), false, step, 1e-3, 1e-3, &ex).unwrap();
+        }
+        assert_eq!(ex.arena().heap_allocs(), cold, "steady-state steps must not allocate");
+    }
+
+    #[test]
     fn out_of_vocab_token_rejected() {
+        let ex = Exec::new(1);
         let state = init_state(dims(), None, 7);
         let tokens = vec![99i32];
         let targets = vec![-1i32];
@@ -613,6 +643,6 @@ mod tests {
         let pos = vec![0i32];
         let view =
             BatchView { tokens: &tokens, targets: &targets, seg: &seg, pos: &pos, bsz: 1, seq: 1 };
-        assert!(eval_loss(&state, &view, 1).is_err());
+        assert!(eval_loss(&state, &view, &ex).is_err());
     }
 }

@@ -1,0 +1,367 @@
+//! Persistent worker pool and the execution substrate for the fast CPU
+//! backend (DESIGN.md §4.3).
+//!
+//! PR 2 dispatched every kernel through `std::thread::scope`, which spawns
+//! and joins fresh OS threads on every call — acceptable at large
+//! geometries, but at small ones (short sequences, LoRA-rank projections,
+//! the `[T]`-row norm passes) the spawn/join cost dominates the arithmetic.
+//! That per-op dispatch overhead is the CPU analogue of the kernel-launch
+//! overhead the paper's fusion work removes. [`WorkerPool`] eliminates it:
+//!
+//! * **Spawn once.** `threads − 1` workers are created with the backend
+//!   and live until it is dropped. The dispatching thread is the remaining
+//!   compute lane: inside [`WorkerPool::scope`] it runs queued jobs too,
+//!   so `threads` lanes exist with only `threads − 1` OS threads.
+//! * **Park between dispatches.** Idle workers block on a condvar — no
+//!   spinning between kernels or between train steps.
+//! * **Dispatch.** [`Scope::spawn`] mirrors the `std::thread::scope` API,
+//!   so the kernels keep their disjoint-`chunks_mut` row-tile structure
+//!   unchanged: each job is one output tile cut by `rows_per_tile`, every
+//!   output element is written by exactly one job running the same
+//!   sequential inner loop, and *which* worker runs a tile can never
+//!   affect the bits.
+//! * **Join on drop.** Dropping the pool signals shutdown and joins every
+//!   worker. A panic inside a job is caught, recorded, and re-raised on
+//!   the dispatching thread — after the scope has fully drained, so no
+//!   worker can still hold a borrow into the caller's tiles.
+//!
+//! [`Exec`] bundles the pool with the resolved thread count and the
+//! size-bucketed scratch [`Arena`] — the one execution handle the kernels
+//! take in place of a bare `threads: usize`. `threads = 1` builds a pool
+//! with zero workers and every kernel takes its serial path, so the
+//! single-threaded contract ("never spawns, never touches the pool")
+//! holds by construction.
+
+use super::scratch::Arena;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A queued unit of work: one output tile of one kernel call.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    queue: VecDeque<Job>,
+    /// Jobs queued or still running in the currently open scope.
+    pending: usize,
+    /// First panic payload raised by a job of the open scope.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Wakes parked workers: a job was queued or shutdown was requested.
+    work_cv: Condvar,
+    /// Wakes the scope owner: `pending` may have reached zero.
+    done_cv: Condvar,
+}
+
+impl Shared {
+    /// Run one job and account for its completion.
+    fn run_job(&self, job: Job) {
+        let result = catch_unwind(AssertUnwindSafe(job));
+        let mut st = self.state.lock().unwrap();
+        if let Err(payload) = result {
+            if st.panic.is_none() {
+                st.panic = Some(payload);
+            }
+        }
+        st.pending -= 1;
+        if st.pending == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Caller-participating drain: run queued jobs on this thread until the
+    /// queue is empty, then park until in-flight jobs finish.
+    fn drain(&self) {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = st.queue.pop_front() {
+                drop(st);
+                self.run_job(job);
+                st = self.state.lock().unwrap();
+                continue;
+            }
+            if st.pending == 0 {
+                return;
+            }
+            st = self.done_cv.wait(st).unwrap();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(job) = st.queue.pop_front() {
+                    break job;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        shared.run_job(job);
+    }
+}
+
+/// Drains the open scope even if the scope body unwinds, so spawned jobs
+/// can never outlive the borrows they capture.
+struct DrainGuard<'a>(&'a Shared);
+
+impl Drop for DrainGuard<'_> {
+    fn drop(&mut self) {
+        self.0.drain();
+    }
+}
+
+/// A pool of parked worker threads with a `std::thread::scope`-shaped
+/// dispatch API. See the module docs for the lifecycle contract.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` long-lived worker threads (zero is valid: `scope`
+    /// then runs every job on the dispatching thread).
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                pending: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("chronicals-worker-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawning fast-backend worker thread")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Number of parked worker threads (compute lanes minus the caller).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Open a dispatch scope: `f` queues jobs via [`Scope::spawn`]; this
+    /// call returns only after every queued job has run to completion (the
+    /// calling thread participates in running them). If a job panicked,
+    /// the first panic is re-raised here after the drain.
+    ///
+    /// The fast backend opens at most one scope at a time (kernels never
+    /// nest dispatches); concurrent scopes would be safe — each waits for
+    /// a fully empty pool — just imprecise about whose jobs they wait on.
+    pub fn scope<'env, F>(&self, f: F)
+    where
+        F: FnOnce(&Scope<'_, 'env>),
+    {
+        let scope = Scope { pool: self, _env: PhantomData };
+        // discard any orphaned payload from a scope whose *body* (not a
+        // job) unwound before it could re-raise, so it cannot surface here
+        self.shared.state.lock().unwrap().panic = None;
+        {
+            let _guard = DrainGuard(&self.shared);
+            f(&scope);
+            // guard drops here: drain runs on the normal path and on unwind
+        }
+        let payload = self.shared.state.lock().unwrap().panic.take();
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Dispatch handle passed to the closure of [`WorkerPool::scope`].
+///
+/// `'env` is invariant and pinned to the scope call, exactly like
+/// `std::thread::Scope`: jobs may borrow anything that outlives the
+/// `scope()` call, because `scope()` cannot return before they finish.
+pub struct Scope<'pool, 'env> {
+    pool: &'pool WorkerPool,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'pool, 'env> Scope<'pool, 'env> {
+    /// Queue one job on the pool (runs on a parked worker or on the
+    /// dispatching thread during the drain — whichever is free first).
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(f);
+        // SAFETY: `scope()` does not return (even on unwind — DrainGuard)
+        // until `pending` reaches zero, i.e. until this job has run to
+        // completion, so every `'env` borrow it captures strictly outlives
+        // it. Erasing the lifetime to `'static` is the same argument
+        // `std::thread::scope` makes for its spawned closures.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Box<dyn FnOnce() + Send + 'static>>(
+                job,
+            )
+        };
+        let shared = &self.pool.shared;
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.pending += 1;
+            st.queue.push_back(job);
+        }
+        shared.work_cv.notify_one();
+    }
+}
+
+/// The execution substrate of one `FastCpuBackend`: resolved thread count,
+/// persistent worker pool, and the step-scoped scratch arena. Kernels take
+/// `&Exec` instead of a bare thread count so dispatch and scratch leasing
+/// share one lifecycle (spawned/warmed once per backend, dropped with it).
+pub struct Exec {
+    threads: usize,
+    pool: WorkerPool,
+    arena: Arena,
+}
+
+impl Exec {
+    /// Build a substrate with `threads` compute lanes (`threads − 1`
+    /// parked workers plus the dispatching thread). `threads = 1` spawns
+    /// nothing and keeps every kernel on its serial path.
+    pub fn new(threads: usize) -> Exec {
+        let threads = threads.max(1);
+        Exec { threads, pool: WorkerPool::new(threads - 1), arena: Arena::new() }
+    }
+
+    /// The compute-lane count kernels partition their output rows by.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The scratch arena working buffers are leased from.
+    pub fn arena(&self) -> &Arena {
+        &self.arena
+    }
+
+    /// Dispatch a batch of row-tile jobs on the persistent pool (see
+    /// [`WorkerPool::scope`]).
+    pub fn scope<'env, F>(&self, f: F)
+    where
+        F: FnOnce(&Scope<'_, 'env>),
+    {
+        self.pool.scope(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scope_runs_every_job_before_returning() {
+        let pool = WorkerPool::new(3);
+        let mut out = vec![0usize; 64];
+        pool.scope(|sc| {
+            for (idx, chunk) in out.chunks_mut(16).enumerate() {
+                sc.spawn(move || {
+                    for (j, o) in chunk.iter_mut().enumerate() {
+                        *o = idx * 16 + j;
+                    }
+                });
+            }
+        });
+        // jobs finished inside scope(): the borrow is back and complete
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_jobs_on_the_caller() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 0);
+        let hits = AtomicUsize::new(0);
+        pool.scope(|sc| {
+            for _ in 0..5 {
+                let hits = &hits;
+                sc.spawn(move || {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn pool_survives_many_dispatches() {
+        // the point of the pool: thousands of scopes, zero new threads
+        let pool = WorkerPool::new(2);
+        let total = AtomicUsize::new(0);
+        for _ in 0..500 {
+            pool.scope(|sc| {
+                for _ in 0..3 {
+                    let total = &total;
+                    sc.spawn(move || {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 1500);
+    }
+
+    #[test]
+    fn job_panic_propagates_and_pool_stays_usable() {
+        let pool = WorkerPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|sc| {
+                sc.spawn(|| panic!("tile exploded"));
+            });
+        }));
+        assert!(caught.is_err(), "scope must re-raise the job panic");
+        // the scope drained before re-raising: the pool is clean and reusable
+        let ran = AtomicUsize::new(0);
+        pool.scope(|sc| {
+            let ran = &ran;
+            sc.spawn(move || {
+                ran.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn exec_threads_clamp_to_at_least_one() {
+        let ex = Exec::new(0);
+        assert_eq!(ex.threads(), 1);
+        assert_eq!(ex.pool.workers(), 0);
+        let ex = Exec::new(4);
+        assert_eq!(ex.threads(), 4);
+        assert_eq!(ex.pool.workers(), 3);
+    }
+}

@@ -1,61 +1,273 @@
-//! Allocation accounting for the fast backend's working buffers.
+//! Step-scoped scratch arena + allocation accounting for the fast
+//! backend's working buffers.
 //!
-//! Every f32 buffer the fast train step allocates — activations, gradient
-//! accumulators, kernel scratch — goes through [`alloc_f32`], which records
-//! the largest single allocation seen since the last [`reset_peak`]. This is
-//! how the no-materialization claim is *asserted* rather than assumed: the
-//! parity suite resets the counter, runs a full train step, and checks that
-//! the peak single allocation is far below both `B·Hq·S·S` (the attention
-//! probability tensor the reference backend materializes) and `T·V` (the
-//! full-logits softmax buffer) — see `rust/tests/parity.rs`.
+//! Every f32 working buffer the fast train step uses — activations,
+//! gradient accumulators, per-worker kernel scratch — is leased from the
+//! backend's [`Arena`] via [`Arena::lease`]. The arena keeps returned
+//! buffers on a size-bucketed free list, so the first train step pays the
+//! heap allocations and every steady-state step after it performs **zero**
+//! arena heap allocations (asserted by `rust/tests/no_materialization.rs`
+//! via [`Arena::heap_allocs`]). Leases are RAII guards: dropping one
+//! returns its buffer to the free list, capacity intact. Two lease
+//! flavors split the zeroing cost: [`Arena::lease`] hands out zeroed
+//! buffers for accumulators, [`Arena::lease_uninit`] skips the memset for
+//! buffers whose every element is written before it is read.
 //!
-//! The counter is a process-global atomic so worker threads spawned inside
-//! kernels are counted too; `fetch_max` keeps it lock-free.
+//! The accounting that *asserts* (rather than assumes) the
+//! no-materialization claims survives the reuse: `lease(len)` records the
+//! **logical** buffer size in a running largest-single-buffer peak even
+//! when it hands back a recycled (possibly larger-capacity) buffer, so the
+//! parity/no-materialization suites can still check that the peak stays
+//! far below `B·Hq·S·S` (the attention probabilities the reference
+//! materializes) and `T·V` (the full-logits buffer).
+//!
+//! Both counters are **arena-local** (one arena per backend instance), not
+//! process-global as in PR 2 — accounting tests cannot race against other
+//! tests that happen to drive a fast backend concurrently, which is what
+//! made the old global counter flaky under `cargo test -q`.
+//!
+//! Determinism note: every lease is taken on the dispatching thread,
+//! either between dispatches or — for per-tile kernel scratch — *before
+//! any job of the dispatch is queued* (see `attention.rs`/`cce.rs`).
+//! Workers return buffers in whatever order they finish, but no lease can
+//! race a return within one dispatch, so the multiset of free buffers at
+//! every lease point — and therefore the heap-allocation count and the
+//! warm-arena zero-allocation property — never depends on worker
+//! scheduling.
 
+use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
-static PEAK_ALLOC_ELEMS: AtomicUsize = AtomicUsize::new(0);
-
-/// Record an allocation of `len` f32 elements (kept as the running peak of
-/// the largest *single* allocation).
-pub fn track(len: usize) {
-    PEAK_ALLOC_ELEMS.fetch_max(len, Ordering::Relaxed);
+/// Size-bucketed free list of f32 buffers with peak/allocation accounting.
+/// One arena lives in each `FastCpuBackend` (inside its `Exec` substrate).
+pub struct Arena {
+    free: Mutex<Vec<Vec<f32>>>,
+    peak_elems: AtomicUsize,
+    heap_allocs: AtomicUsize,
 }
 
-/// Allocate a zeroed f32 buffer, recording its size.
-pub fn alloc_f32(len: usize) -> Vec<f32> {
-    track(len);
-    vec![0.0; len]
+impl Default for Arena {
+    fn default() -> Self {
+        Arena::new()
+    }
 }
 
-/// Reset the peak counter (call before the step you want to measure).
-pub fn reset_peak() {
-    PEAK_ALLOC_ELEMS.store(0, Ordering::SeqCst);
+impl Arena {
+    /// An empty (cold) arena: the first lease of each size allocates.
+    pub fn new() -> Arena {
+        Arena {
+            free: Mutex::new(Vec::new()),
+            peak_elems: AtomicUsize::new(0),
+            heap_allocs: AtomicUsize::new(0),
+        }
+    }
+
+    /// Lease a zeroed f32 buffer of exactly `len` elements — the right
+    /// call for accumulators (gradients, `dx` chains, attention `dq/dk/dv`)
+    /// whose kernels `+=` into them.
+    pub fn lease(&self, len: usize) -> Lease<'_> {
+        let mut l = self.lease_uninit(len);
+        l.fill(0.0);
+        l
+    }
+
+    /// Lease an f32 buffer of exactly `len` elements *without* zeroing any
+    /// recycled contents — for buffers every element of which is written
+    /// before it is read (matmul/fused-kernel outputs, packed-KV tiles,
+    /// logit strips). Skipping the memset matters: assign-style buffers
+    /// dominate the forward pass, and lease-zeroing them is pure waste.
+    ///
+    /// Reuses the free buffer with the smallest sufficient capacity when
+    /// one exists (exact fits win; best fit otherwise, so small requests
+    /// do not squat on large buffers), allocating only on a cold miss.
+    /// Always records `len` in the logical-size peak.
+    pub fn lease_uninit(&self, len: usize) -> Lease<'_> {
+        self.peak_elems.fetch_max(len, Ordering::Relaxed);
+        let mut buf = {
+            let mut free = self.free.lock().unwrap();
+            let mut best: Option<usize> = None;
+            for (i, b) in free.iter().enumerate() {
+                if b.capacity() < len {
+                    continue;
+                }
+                match best {
+                    Some(j) if free[j].capacity() <= b.capacity() => {}
+                    _ => best = Some(i),
+                }
+                if b.capacity() == len {
+                    break; // exact fit: stop scanning
+                }
+            }
+            match best {
+                Some(i) => free.swap_remove(i),
+                None => Vec::new(),
+            }
+        };
+        if buf.capacity() < len {
+            self.heap_allocs.fetch_add(1, Ordering::Relaxed);
+            buf = Vec::with_capacity(len);
+        }
+        // no clear-then-zero: keep recycled contents (stale values are
+        // fine by this method's contract), only the growth region — and a
+        // cold buffer — pays the fill that `resize` needs to set the length
+        if buf.len() > len {
+            buf.truncate(len);
+        } else {
+            buf.resize(len, 0.0);
+        }
+        Lease { buf: Some(buf), arena: self }
+    }
+
+    /// Return a buffer to the free list (called by `Lease::drop`).
+    fn give_back(&self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        self.free.lock().unwrap().push(buf);
+    }
+
+    /// Largest *logical* buffer (in f32 elements) leased since the last
+    /// [`Arena::reset_peak`] — recorded even when the physical buffer was
+    /// recycled, so no-materialization bounds hold on a warm arena.
+    pub fn peak_elems(&self) -> usize {
+        self.peak_elems.load(Ordering::SeqCst)
+    }
+
+    /// Reset the logical-size peak (call before the step to measure).
+    pub fn reset_peak(&self) {
+        self.peak_elems.store(0, Ordering::SeqCst);
+    }
+
+    /// Total heap allocations this arena has performed since construction
+    /// (monotone). Steady-state train steps must not advance it.
+    pub fn heap_allocs(&self) -> usize {
+        self.heap_allocs.load(Ordering::SeqCst)
+    }
+
+    /// Number of buffers currently parked on the free list.
+    pub fn free_buffers(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
 }
 
-/// Largest single f32 allocation (in elements) since the last reset.
-pub fn peak_elems() -> usize {
-    PEAK_ALLOC_ELEMS.load(Ordering::SeqCst)
+/// RAII lease of an arena buffer. Dereferences to `[f32]`; dropping it
+/// returns the buffer (capacity intact) to the arena's free list.
+pub struct Lease<'a> {
+    buf: Option<Vec<f32>>,
+    arena: &'a Arena,
+}
+
+impl Lease<'_> {
+    /// The leased buffer as a mutable slice (convenience for call sites
+    /// that need an explicit `&mut [f32]`, e.g. `Option<&mut [f32]>`).
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        self.buf.as_mut().expect("lease buffer present").as_mut_slice()
+    }
+}
+
+impl Deref for Lease<'_> {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.buf.as_ref().expect("lease buffer present")
+    }
+}
+
+impl DerefMut for Lease<'_> {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.buf.as_mut().expect("lease buffer present")
+    }
+}
+
+impl Drop for Lease<'_> {
+    fn drop(&mut self) {
+        if let Some(buf) = self.buf.take() {
+            self.arena.give_back(buf);
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    /// The counter is process-global and other lib tests allocate through
-    /// it concurrently, so only race-proof (monotone ≥) properties are
-    /// asserted here; the exact largest-single-allocation semantics are
-    /// exercised in isolation by `rust/tests/no_materialization.rs`
-    /// (integration-test files get their own process).
     #[test]
-    fn peak_is_monotone_over_single_allocations() {
-        reset_peak();
-        let a = alloc_f32(10);
-        let b = alloc_f32(100);
-        let c = alloc_f32(50);
-        assert_eq!(a.len() + b.len() + c.len(), 160);
-        assert!(peak_elems() >= 100, "peak {} lost the largest alloc", peak_elems());
-        track(7); // smaller than the peak: must not lower it
-        assert!(peak_elems() >= 100);
+    fn lease_is_zeroed_and_tracks_logical_peak() {
+        let arena = Arena::new();
+        {
+            let mut a = arena.lease(100);
+            assert_eq!(a.len(), 100);
+            assert!(a.iter().all(|&x| x == 0.0));
+            a[0] = 7.0; // dirty it so reuse must re-zero
+        }
+        let b = arena.lease(10);
+        assert_eq!(b.len(), 10);
+        assert!(b.iter().all(|&x| x == 0.0), "recycled buffer must be re-zeroed");
+        // peak records logical sizes: 100 from the first lease, not the
+        // recycled capacity of the second
+        assert_eq!(arena.peak_elems(), 100);
+        arena.reset_peak();
+        drop(b);
+        let _c = arena.lease(10);
+        assert_eq!(arena.peak_elems(), 10, "post-reset peak is the logical size");
+    }
+
+    #[test]
+    fn lease_uninit_recycles_without_memset_but_lease_still_zeroes() {
+        let arena = Arena::new();
+        {
+            let mut a = arena.lease_uninit(8);
+            a.fill(3.0);
+        }
+        {
+            // stale contents may (and here do) survive an uninit re-lease
+            let b = arena.lease_uninit(8);
+            assert_eq!(b.len(), 8);
+            assert_eq!(arena.heap_allocs(), 1, "uninit re-lease must not allocate");
+            assert!(b.iter().all(|&x| x == 3.0), "uninit lease should not memset");
+        }
+        // the zeroed flavor scrubs the same dirty buffer
+        let c = arena.lease(8);
+        assert!(c.iter().all(|&x| x == 0.0));
+        assert_eq!(arena.heap_allocs(), 1);
+        // growing within a fresh allocation still yields a fully-set length
+        drop(c);
+        let d = arena.lease_uninit(4096);
+        assert_eq!(d.len(), 4096);
+        assert_eq!(arena.heap_allocs(), 2);
+    }
+
+    #[test]
+    fn warm_arena_leases_without_new_heap_allocations() {
+        let arena = Arena::new();
+        for _ in 0..3 {
+            let _a = arena.lease(64);
+            let _b = arena.lease(128);
+        }
+        // 2 live at once in round 1 ⇒ exactly 2 allocations ever
+        assert_eq!(arena.heap_allocs(), 2);
+        assert_eq!(arena.free_buffers(), 2);
+    }
+
+    #[test]
+    fn best_fit_prefers_small_buffers_for_small_requests() {
+        let arena = Arena::new();
+        drop(arena.lease(1000));
+        drop(arena.lease(8));
+        let small = arena.lease(8);
+        assert!(small.buf.as_ref().unwrap().capacity() < 1000, "small request took the big buffer");
+        let big = arena.lease(1000); // big buffer still available: no alloc
+        assert_eq!(big.len(), 1000);
+        assert_eq!(arena.heap_allocs(), 2);
+    }
+
+    #[test]
+    fn cold_miss_allocates_even_when_smaller_buffers_are_free() {
+        let arena = Arena::new();
+        drop(arena.lease(16));
+        let before = arena.heap_allocs();
+        let big = arena.lease(4096);
+        assert_eq!(big.len(), 4096);
+        assert_eq!(arena.heap_allocs(), before + 1);
     }
 }

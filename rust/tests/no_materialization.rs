@@ -1,22 +1,47 @@
-//! The no-materialization assertion for the fast CPU backend, in its own
-//! test binary: `scratch::peak_elems()` is a process-global counter, so
-//! isolating this file guarantees no other concurrently running test can
-//! allocate through the fast path between `reset_peak` and the assertion
-//! (integration-test files each get their own process).
+//! Allocation-accounting assertions for the fast CPU backend.
+//!
+//! The counters live on the backend's own scratch arena
+//! (`FastCpuBackend::exec().arena()`), not in a process-global — so these
+//! tests cannot race against other tests that drive a fast backend
+//! concurrently (the flake mode the old global counter admitted).
+//!
+//! Two contracts are pinned here:
+//! * **No materialization** — the peak single *logical* buffer a train
+//!   step leases stays at activation scale, far below `[B, Hq, S, S]` and
+//!   `[T, V]`.
+//! * **Warm arena** — after the cold first step populated the free list,
+//!   steady-state train steps perform zero arena heap allocations, while
+//!   the logical-size peak accounting keeps reflecting the largest buffer
+//!   (leases record their logical size even when the physical buffer is
+//!   recycled).
 
 use chronicals::backend::cpu::ModelDims;
-use chronicals::backend::cpu_fast::{scratch, FastCpuBackend};
+use chronicals::backend::cpu_fast::FastCpuBackend;
 use chronicals::backend::Backend;
 use chronicals::harness;
 
+fn dims() -> ModelDims {
+    ModelDims { vocab: 256, d_model: 32, n_layers: 2, n_heads: 4, n_kv_heads: 2, d_ff: 64 }
+}
+
+/// Build a warmed-up (state, staged batch) pair on the accounting geometry.
+fn setup(fast: &FastCpuBackend) -> (chronicals::backend::DeviceState, chronicals::backend::DeviceBatch) {
+    let exe = "train_step_chronicals";
+    let spec = fast.manifest().get(exe).unwrap().clone();
+    let (_tok, exs) = harness::build_corpus(384, 5, spec.model_config.vocab, 96);
+    let batches = harness::make_batches(fast.manifest(), exe, &exs, true).unwrap();
+    let state = fast.init_state("init_chronicals", 5).unwrap();
+    let ub = fast.upload_batch(exe, &batches[0]).unwrap();
+    (state, ub)
+}
+
 /// Run a full fast train step on a geometry where `[B, Hq, S, S]` and
-/// `[T, V]` are large, and check the peak single f32 allocation recorded
-/// by the fast backend's scratch accounting stays at the O(T·d_ff)
-/// activation scale — far below either forbidden buffer.
+/// `[T, V]` are large, and check the peak single f32 lease recorded by the
+/// backend's arena stays at the O(T·d_ff) activation scale — far below
+/// either forbidden buffer.
 #[test]
 fn fast_path_never_materializes_probs_or_logits() {
-    let dims =
-        ModelDims { vocab: 256, d_model: 32, n_layers: 2, n_heads: 4, n_kv_heads: 2, d_ff: 64 };
+    let dims = dims();
     let (batch, seq) = (4usize, 128usize);
     let t = batch * seq;
     let bhss = batch * dims.n_heads * seq * seq; // 262144: the attention tensor
@@ -24,22 +49,60 @@ fn fast_path_never_materializes_probs_or_logits() {
     let activation_ceiling = t * dims.d_ff.max(dims.d_model); // 32768: largest legit buffer
 
     let fast = FastCpuBackend::custom(dims, batch, seq, 2);
-    let exe = "train_step_chronicals";
-    let spec = fast.manifest().get(exe).unwrap().clone();
-    let (_tok, exs) = harness::build_corpus(384, 5, spec.model_config.vocab, 96);
-    let batches = harness::make_batches(fast.manifest(), exe, &exs, true).unwrap();
-    let mut state = fast.init_state("init_chronicals", 5).unwrap();
-    let ub = fast.upload_batch(exe, &batches[0]).unwrap();
+    let (mut state, ub) = setup(&fast);
 
-    scratch::reset_peak();
-    let out = fast.train_step(exe, &mut state, &ub, 1, 1e-3, 1e-3).unwrap();
+    fast.exec().arena().reset_peak();
+    let out = fast.train_step("train_step_chronicals", &mut state, &ub, 1, 1e-3, 1e-3).unwrap();
     assert!(out.grad_norm > 0.0, "step must actually train");
-    let peak = scratch::peak_elems();
-    assert!(peak > 0, "scratch accounting saw no allocations");
+    let peak = fast.exec().arena().peak_elems();
+    assert!(peak > 0, "arena accounting saw no leases");
     assert!(
         peak <= activation_ceiling,
-        "peak single allocation {peak} exceeds the activation ceiling {activation_ceiling}"
+        "peak single lease {peak} exceeds the activation ceiling {activation_ceiling}"
     );
     assert!(peak < bhss / 4, "peak {peak} is within 4x of the [B,Hq,S,S] tensor ({bhss})");
     assert!(peak < tv / 2, "peak {peak} is within 2x of the [T,V] tensor ({tv})");
+}
+
+/// Steady-state steps lease everything from the warm free list: zero arena
+/// heap allocations after step 1 — and the peak accounting still reports
+/// the largest *logical* buffer even though every byte was recycled.
+#[test]
+fn warm_arena_steps_allocate_nothing_and_keep_peak_accounting() {
+    let dims = dims();
+    let (batch, seq) = (4usize, 128usize);
+    let t = batch * seq;
+    let largest_logical = t * dims.d_ff.max(dims.d_model);
+
+    // pooled path (threads = 2): leases are taken on the dispatching
+    // thread, so the warm-arena property must hold despite worker threads
+    let fast = FastCpuBackend::custom(dims, batch, seq, 2);
+    let (mut state, ub) = setup(&fast);
+
+    fast.train_step("train_step_chronicals", &mut state, &ub, 1, 1e-3, 1e-3).unwrap();
+    let cold = fast.exec().arena().heap_allocs();
+    assert!(cold > 0, "the first step must populate the arena");
+
+    for step in 2..=5u64 {
+        let out = fast
+            .train_step("train_step_chronicals", &mut state, &ub, step, 1e-3, 1e-3)
+            .unwrap();
+        assert!(out.grad_norm > 0.0);
+    }
+    assert_eq!(
+        fast.exec().arena().heap_allocs(),
+        cold,
+        "steady-state train steps must perform zero arena heap allocations"
+    );
+
+    // warm-arena peak accounting: every lease records its logical size,
+    // so a fully recycled step still reports the largest logical buffer
+    fast.exec().arena().reset_peak();
+    fast.train_step("train_step_chronicals", &mut state, &ub, 6, 1e-3, 1e-3).unwrap();
+    assert_eq!(fast.exec().arena().heap_allocs(), cold, "measured step allocated");
+    assert_eq!(
+        fast.exec().arena().peak_elems(),
+        largest_logical,
+        "warm-step peak must reflect the largest logical buffer (T·d_ff)"
+    );
 }

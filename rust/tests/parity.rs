@@ -9,15 +9,15 @@
 //! thread counts.
 //!
 //! Also here: the online-softmax/tiled-logsumexp unit check against the
-//! materialized reference. The allocation-accounting test that proves the
-//! fast path never materializes `[B, Hq, S, S]` or `[T, V]` lives in its
-//! own integration-test file (`no_materialization.rs`) because it reads a
-//! process-global peak counter — an own test binary means no races with
-//! concurrently running tests that also allocate through the fast path.
+//! materialized reference. The allocation-accounting tests that prove the
+//! fast path never materializes `[B, Hq, S, S]` or `[T, V]` — and that a
+//! warm arena stops allocating — live in `no_materialization.rs`; the
+//! counters are arena-local (one arena per backend), so they cannot race
+//! against other tests that drive a fast backend concurrently.
 
 use chronicals::backend::cpu::math;
 use chronicals::backend::cpu::CpuBackend;
-use chronicals::backend::cpu_fast::{cce, FastCpuBackend};
+use chronicals::backend::cpu_fast::{cce, Exec, FastCpuBackend};
 use chronicals::backend::{Backend, DeviceBatch, DeviceState};
 use chronicals::batching::Batch;
 use chronicals::harness;
@@ -121,11 +121,12 @@ fn broken_mode_parity_zero_grad() {
     }
 }
 
-/// `threads = 1` must be fully single-threaded and run-to-run
-/// deterministic; by construction the fast backend's bits are also
-/// invariant to the thread count — assert both.
+/// `threads = 1` must be fully single-threaded (zero pool workers) and
+/// run-to-run deterministic; by construction the fast backend's bits are
+/// also invariant to the thread count on the pooled path — assert both
+/// across the satellite-required `CHRONICALS_THREADS ∈ {1, 2, 8}` ladder.
 #[test]
-fn threads_one_is_deterministic_and_thread_count_invariant() {
+fn pooled_steps_bitwise_identical_across_thread_counts() {
     let run = |threads: usize| {
         let fast = FastCpuBackend::with_threads(threads);
         let (steps, _) = drive(&fast, "train_step_chronicals", "init_chronicals", 11, 5, 5e-3, 5e-3);
@@ -137,7 +138,27 @@ fn threads_one_is_deterministic_and_thread_count_invariant() {
     let once = run(1);
     let again = run(1);
     assert_eq!(once, again, "threads=1 runs diverged");
-    assert_eq!(once, run(4), "thread count changed the bits");
+    for threads in [2usize, 4, 8] {
+        assert_eq!(once, run(threads), "threads={threads} changed the bits");
+    }
+}
+
+/// The env-resolved backend (what CI's `CHRONICALS_THREADS` matrix
+/// constructs) must produce the same bits as the explicit single-threaded
+/// run — this is the test that makes the CI thread matrix meaningful.
+#[test]
+fn env_resolved_thread_count_keeps_bits() {
+    let auto = FastCpuBackend::new(); // CHRONICALS_THREADS > autodetect
+    let (a, _) = drive(&auto, "train_step_chronicals", "init_chronicals", 13, 4, 5e-3, 5e-3);
+    let one = FastCpuBackend::with_threads(1);
+    let (b, _) = drive(&one, "train_step_chronicals", "init_chronicals", 13, 4, 5e-3, 5e-3);
+    let bits = |v: &[(f32, f32)]| v.iter().map(|(l, g)| (l.to_bits(), g.to_bits())).collect::<Vec<_>>();
+    assert_eq!(
+        bits(&a),
+        bits(&b),
+        "env-resolved thread count ({}) changed the bits vs threads=1",
+        auto.threads()
+    );
 }
 
 /// Online-softmax unit test: the tiled streaming logsumexp must match the
@@ -159,8 +180,9 @@ fn tiled_logsumexp_matches_materialized_reference() {
         let mut probs = vec![0.0f32; t * v];
         let (want_loss, want_nv) = math::softmax_xent(&logits, &targets, t, v, &mut probs);
 
+        let ex = Exec::new(2);
         let mut lse = vec![0.0f32; t];
-        let (loss, nv) = cce::cce_loss_fwd(&hf, &w, &targets, t, d, v, &mut lse, 2);
+        let (loss, nv) = cce::cce_loss_fwd(&hf, &w, &targets, t, d, v, &mut lse, &ex);
         assert_eq!(nv, want_nv, "v={v}");
         assert!(
             (loss - want_loss).abs() < 1e-4 * (1.0 + want_loss.abs()),
