@@ -8,12 +8,64 @@
 //!
 //! Run: `cargo bench --bench bench_packing`
 
+use chronicals::data_source::JsonlSource;
 use chronicals::harness;
 use chronicals::packing::*;
 use chronicals::report;
+use chronicals::session::ExampleSource;
 use chronicals::util::json::{Json, Obj};
 use chronicals::util::rng::Rng;
+use std::path::PathBuf;
 use std::time::Instant;
+
+/// BFD efficiency on the checked-in real corpus vs a synthetic corpus of
+/// the same size, at the reference row capacity (DESIGN.md §8: the packing
+/// story must hold on an actual length distribution, not only on the
+/// log-normal generator it was tuned against).
+fn real_vs_synthetic(section: &mut Obj) {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../data/sample.jsonl");
+    let src = JsonlSource::new(&path, 7, 1024);
+    let exs = match src.examples(64) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping real-corpus section: {e:#}");
+            return;
+        }
+    };
+    let capacity = 64; // reference backend row capacity
+    let real: Vec<usize> = exs.iter().map(|e| e.len()).collect();
+    let (_tok, synth) = harness::build_corpus(real.len(), 7, 64, capacity);
+    let synth: Vec<usize> = synth.iter().map(|e| e.len()).collect();
+
+    println!("\n| corpus              | n    | padded eff | bfd eff | recovery |");
+    println!("|---------------------|------|------------|---------|----------|");
+    let mut rows = Obj::default();
+    for (name, lengths) in [("real (sample.jsonl)", &real), ("synthetic", &synth)] {
+        let padded = no_packing(lengths, capacity);
+        let packed = best_fit_decreasing(lengths, capacity);
+        let recovery = if padded.waste() > 0.0 {
+            ((padded.waste() - packed.waste()) / padded.waste()).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        println!(
+            "| {name:<19} | {:<4} | {:>9.1}% | {:>6.1}% | {:>7.1}% |",
+            lengths.len(),
+            padded.efficiency() * 100.0,
+            packed.efficiency() * 100.0,
+            recovery * 100.0
+        );
+        let mut row = Obj::default();
+        row.insert("n", Json::Num(lengths.len() as f64));
+        row.insert("padded_efficiency", Json::Num(padded.efficiency()));
+        row.insert("bfd_efficiency", Json::Num(packed.efficiency()));
+        row.insert("padding_recovery", Json::Num(recovery));
+        row.insert("oversized", Json::Num(packed.oversized.len() as f64));
+        let key = if name.starts_with("real") { "real_sample" } else { "synthetic" };
+        rows.insert(key, Json::Obj(row));
+    }
+    section.insert("real_vs_synthetic_cap64", Json::Obj(rows));
+}
 
 fn main() {
     // Fig. 18 tables at two capacities
@@ -65,6 +117,7 @@ fn main() {
     section.insert("alpaca_52k_bins", Json::Num(p.n_bins() as f64));
     section.insert("alpaca_52k_efficiency", Json::Num(p.efficiency()));
     section.insert("scaling", Json::Obj(algo_ms));
+    real_vs_synthetic(&mut section);
     let path = report::bench_json_path();
     match report::update_bench_json(&path, "packing", Json::Obj(section)) {
         Ok(()) => println!("\nwrote packing numbers to {}", path.display()),

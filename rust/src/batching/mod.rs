@@ -14,7 +14,7 @@
 
 pub mod stream;
 
-pub use stream::{BatchStream, PackingStrategy, TailPolicy};
+pub use stream::{BatchStream, EpochSpec, PackingStrategy, TailPolicy};
 
 use crate::data::TokenizedExample;
 use crate::packing::{best_fit_decreasing, Packing};

@@ -12,6 +12,7 @@
 use super::{Batch, BatchBuilder};
 use crate::data::TokenizedExample;
 use crate::packing::{best_fit_decreasing, first_fit_decreasing, next_fit, Bin};
+use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 
 /// How examples are arranged into `[B, S]` rows (paper Fig. 18 ablation).
@@ -63,6 +64,24 @@ pub enum TailPolicy {
     Pad,
 }
 
+/// How many passes a [`BatchStream`] makes over its packing plan, and
+/// whether each pass reorders it. The session's
+/// [`crate::session::EpochPolicy`] lowers into this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EpochSpec {
+    /// Deterministic per-epoch shuffle seed for the bin order; `None`
+    /// keeps plan order (bitwise-legacy).
+    pub shuffle: Option<u64>,
+    /// Number of passes over the plan (≥ 1).
+    pub epochs: u64,
+}
+
+impl Default for EpochSpec {
+    fn default() -> EpochSpec {
+        EpochSpec { shuffle: None, epochs: 1 }
+    }
+}
+
 /// Lazy `tokenize → pack → emit` pipeline over an owned example set.
 ///
 /// The packing *plan* (bins of example indices) is computed eagerly from
@@ -72,6 +91,11 @@ pub enum TailPolicy {
 /// reported by [`BatchStream::oversized_dropped`] so callers can surface it
 /// instead of losing data without trace. `Padded` truncates instead of
 /// dropping, mirroring the legacy padded path.
+///
+/// With [`BatchStream::with_epochs`] the stream makes several passes over
+/// the plan; a shuffle seed permutes the *bin order* deterministically per
+/// epoch (examples are packed once and never re-tokenized — each epoch
+/// emits the same bins, possibly grouped into different batches).
 pub struct BatchStream {
     examples: Vec<TokenizedExample>,
     bins: Vec<Bin>,
@@ -79,10 +103,17 @@ pub struct BatchStream {
     batch: usize,
     seq: usize,
     tail: TailPolicy,
+    /// Bin emission order for the current epoch (indices into `bins`).
+    order: Vec<usize>,
     next_bin: usize,
+    epoch: u64,
+    epochs: u64,
+    shuffle: Option<u64>,
 }
 
 impl BatchStream {
+    /// Single-pass stream in plan order — the legacy constructor; exactly
+    /// `with_epochs(…, EpochSpec::default())`.
     pub fn new(
         examples: Vec<TokenizedExample>,
         strategy: PackingStrategy,
@@ -90,7 +121,22 @@ impl BatchStream {
         seq: usize,
         tail: TailPolicy,
     ) -> BatchStream {
+        Self::with_epochs(examples, strategy, batch, seq, tail, EpochSpec::default())
+    }
+
+    /// Multi-epoch stream: `epoch.epochs` passes over the packing plan,
+    /// each pass's bin order permuted by `epoch.shuffle` (identity when
+    /// `None` — bitwise identical to [`BatchStream::new`]).
+    pub fn with_epochs(
+        examples: Vec<TokenizedExample>,
+        strategy: PackingStrategy,
+        batch: usize,
+        seq: usize,
+        tail: TailPolicy,
+        epoch: EpochSpec,
+    ) -> BatchStream {
         assert!(batch > 0 && seq > 0, "batch geometry must be positive");
+        assert!(epoch.epochs >= 1, "epochs must be ≥ 1");
         let (bins, oversized) = match strategy {
             PackingStrategy::Padded => {
                 let bins = examples
@@ -111,28 +157,67 @@ impl BatchStream {
                 (packing.bins, packing.oversized.len())
             }
         };
-        BatchStream { examples, bins, oversized, batch, seq, tail, next_bin: 0 }
+        let mut s = BatchStream {
+            examples,
+            bins,
+            oversized,
+            batch,
+            seq,
+            tail,
+            order: Vec::new(),
+            next_bin: 0,
+            epoch: 0,
+            epochs: epoch.epochs,
+            shuffle: epoch.shuffle,
+        };
+        s.plan_epoch();
+        s
     }
 
-    /// Total batches this stream will emit (known from the plan).
-    pub fn n_batches(&self) -> usize {
+    /// (Re)compute the bin order for the current epoch: identity without a
+    /// shuffle seed; otherwise a Fisher–Yates permutation seeded by a
+    /// golden-ratio mix of (seed, epoch) — epoch 0 uses the seed itself,
+    /// and each epoch draws an unrelated permutation.
+    fn plan_epoch(&mut self) {
+        self.order = (0..self.bins.len()).collect();
+        if let Some(seed) = self.shuffle {
+            let mixed = seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(self.epoch);
+            Rng::new(mixed).shuffle(&mut self.order);
+        }
+    }
+
+    /// Batches one pass over the plan emits.
+    pub fn batches_per_epoch(&self) -> usize {
         match self.tail {
             TailPolicy::Drop => self.bins.len() / self.batch,
             TailPolicy::Pad => self.bins.len().div_ceil(self.batch),
         }
     }
 
-    /// Planned row-bins (each bin becomes one `[S]` row).
+    /// Total batches this stream will emit across every epoch (known from
+    /// the plan).
+    pub fn n_batches(&self) -> usize {
+        self.batches_per_epoch() * self.epochs as usize
+    }
+
+    /// Planned row-bins per epoch (each bin becomes one `[S]` row).
     pub fn n_bins(&self) -> usize {
         self.bins.len()
     }
 
-    /// Examples skipped by the packing plan because they exceed `seq`.
+    /// Real tokens one pass over the plan carries (Σ bin.used — the
+    /// numerator of the packing-density accounting).
+    pub fn planned_tokens(&self) -> usize {
+        self.bins.iter().map(|b| b.used).sum()
+    }
+
+    /// Examples skipped by the packing plan because they exceed `seq`
+    /// (counted once — the plan is shared by every epoch).
     pub fn oversized_dropped(&self) -> usize {
         self.oversized
     }
 
-    /// Whether the final emitted batch carries empty padding rows.
+    /// Whether each epoch's final emitted batch carries empty padding rows.
     pub fn tail_padded(&self) -> bool {
         self.tail == TailPolicy::Pad && !self.bins.is_empty() && self.bins.len() % self.batch != 0
     }
@@ -142,36 +227,47 @@ impl Iterator for BatchStream {
     type Item = Batch;
 
     fn next(&mut self) -> Option<Batch> {
-        if self.next_bin >= self.bins.len() {
-            return None;
-        }
-        let end = (self.next_bin + self.batch).min(self.bins.len());
-        if end - self.next_bin < self.batch && self.tail == TailPolicy::Drop {
-            self.next_bin = self.bins.len();
-            return None;
-        }
-        let mut b = BatchBuilder::new(self.batch, self.seq);
-        for (row, bin) in self.bins[self.next_bin..end].iter().enumerate() {
-            let mut offset = 0;
-            for (seg, &item) in bin.items.iter().enumerate() {
-                let ex = &self.examples[item];
-                b.place(row, offset, ex, (seg + 1) as i32);
-                offset += ex.len().min(self.seq - offset);
-                if offset >= self.seq {
-                    break;
+        loop {
+            if self.next_bin >= self.order.len() {
+                // epoch rollover (or plain exhaustion for epochs == 1)
+                if self.epoch + 1 >= self.epochs || self.order.is_empty() {
+                    return None;
+                }
+                self.epoch += 1;
+                self.next_bin = 0;
+                self.plan_epoch();
+            }
+            let end = (self.next_bin + self.batch).min(self.order.len());
+            if end - self.next_bin < self.batch && self.tail == TailPolicy::Drop {
+                self.next_bin = self.order.len();
+                continue; // may roll into the next epoch
+            }
+            let mut b = BatchBuilder::new(self.batch, self.seq);
+            for (row, &bin_idx) in self.order[self.next_bin..end].iter().enumerate() {
+                let bin = &self.bins[bin_idx];
+                let mut offset = 0;
+                for (seg, &item) in bin.items.iter().enumerate() {
+                    let ex = &self.examples[item];
+                    b.place(row, offset, ex, (seg + 1) as i32);
+                    offset += ex.len().min(self.seq - offset);
+                    if offset >= self.seq {
+                        break;
+                    }
                 }
             }
+            self.next_bin = end;
+            return Some(b.finish());
         }
-        self.next_bin = end;
-        Some(b.finish())
     }
 
     fn size_hint(&self) -> (usize, Option<usize>) {
-        let left = self.bins.len() - self.next_bin;
-        let n = match self.tail {
+        let left = self.order.len() - self.next_bin;
+        let current = match self.tail {
             TailPolicy::Drop => left / self.batch,
             TailPolicy::Pad => left.div_ceil(self.batch),
         };
+        let future_epochs = (self.epochs - self.epoch - 1) as usize;
+        let n = current + future_epochs * self.batches_per_epoch();
         (n, Some(n))
     }
 }
@@ -259,6 +355,143 @@ mod tests {
         assert_eq!(s.size_hint(), (3, Some(3)));
         s.next();
         assert_eq!(s.size_hint(), (2, Some(2)));
+    }
+
+    /// All real (segment ≠ 0) token ids a batch carries, in slot order.
+    fn real_tokens_of(b: &Batch) -> Vec<i32> {
+        let toks = b.tokens.as_i32().unwrap();
+        let segs = b.seg_ids.as_i32().unwrap();
+        toks.iter().zip(segs).filter(|(_, &s)| s != 0).map(|(&t, _)| t).collect()
+    }
+
+    #[test]
+    fn no_shuffle_single_epoch_is_bitwise_legacy() {
+        let exs = corpus(23);
+        let legacy: Vec<Batch> =
+            BatchStream::new(exs.clone(), PackingStrategy::Bfd, 4, 16, TailPolicy::Pad)
+                .collect();
+        let explicit: Vec<Batch> = BatchStream::with_epochs(
+            exs,
+            PackingStrategy::Bfd,
+            4,
+            16,
+            TailPolicy::Pad,
+            EpochSpec { shuffle: None, epochs: 1 },
+        )
+        .collect();
+        assert_eq!(legacy.len(), explicit.len());
+        for (a, b) in legacy.iter().zip(&explicit) {
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.targets, b.targets);
+            assert_eq!(a.seg_ids, b.seg_ids);
+            assert_eq!(a.pos_ids, b.pos_ids);
+        }
+    }
+
+    #[test]
+    fn epochs_repeat_the_plan() {
+        let exs = corpus(17);
+        let one = BatchStream::with_epochs(
+            exs.clone(),
+            PackingStrategy::Bfd,
+            2,
+            16,
+            TailPolicy::Pad,
+            EpochSpec { shuffle: None, epochs: 1 },
+        );
+        let per_epoch = one.batches_per_epoch();
+        let first: Vec<Batch> = one.collect();
+        let three = BatchStream::with_epochs(
+            exs,
+            PackingStrategy::Bfd,
+            2,
+            16,
+            TailPolicy::Pad,
+            EpochSpec { shuffle: None, epochs: 3 },
+        );
+        assert_eq!(three.n_batches(), 3 * per_epoch);
+        assert_eq!(three.size_hint(), (3 * per_epoch, Some(3 * per_epoch)));
+        let all: Vec<Batch> = three.collect();
+        assert_eq!(all.len(), 3 * per_epoch);
+        // without a shuffle seed every epoch is identical
+        for e in 1..3 {
+            for i in 0..per_epoch {
+                assert_eq!(all[e * per_epoch + i].tokens, first[i].tokens, "epoch {e} batch {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn shuffled_epochs_preserve_the_token_multiset() {
+        let exs = corpus(29);
+        let epochs = 3usize;
+        let plain: Vec<Batch> =
+            BatchStream::new(exs.clone(), PackingStrategy::Bfd, 4, 16, TailPolicy::Pad)
+                .collect();
+        let mut expected: Vec<i32> = plain.iter().flat_map(real_tokens_of).collect();
+        expected.sort_unstable();
+
+        let per_epoch = plain.len();
+        let shuffled: Vec<Batch> = BatchStream::with_epochs(
+            exs,
+            PackingStrategy::Bfd,
+            4,
+            16,
+            TailPolicy::Pad,
+            EpochSpec { shuffle: Some(7), epochs: epochs as u64 },
+        )
+        .collect();
+        assert_eq!(shuffled.len(), epochs * per_epoch);
+        for e in 0..epochs {
+            let mut got: Vec<i32> = shuffled[e * per_epoch..(e + 1) * per_epoch]
+                .iter()
+                .flat_map(real_tokens_of)
+                .collect();
+            got.sort_unstable();
+            assert_eq!(got, expected, "epoch {e} must carry the exact token multiset");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_deterministic_and_epoch_dependent() {
+        let exs = corpus(29);
+        let collect = |seed: u64| -> Vec<Vec<i32>> {
+            BatchStream::with_epochs(
+                exs.clone(),
+                PackingStrategy::Bfd,
+                4,
+                16,
+                TailPolicy::Pad,
+                EpochSpec { shuffle: Some(seed), epochs: 2 },
+            )
+            .map(|b| b.tokens.as_i32().unwrap().to_vec())
+            .collect()
+        };
+        assert_eq!(collect(7), collect(7), "same seed ⇒ same batches, bit for bit");
+        assert_ne!(collect(7), collect(8), "different seed ⇒ different order");
+        let two = collect(7);
+        let per_epoch = two.len() / 2;
+        assert_ne!(
+            two[..per_epoch],
+            two[per_epoch..],
+            "each epoch draws its own permutation"
+        );
+    }
+
+    #[test]
+    fn drop_tail_rolls_across_epochs() {
+        // 3 singleton bins at batch 2, Drop tail: each epoch emits 1 batch
+        let exs = corpus(3);
+        let s = BatchStream::with_epochs(
+            exs,
+            PackingStrategy::Padded,
+            2,
+            16,
+            TailPolicy::Drop,
+            EpochSpec { shuffle: None, epochs: 2 },
+        );
+        assert_eq!(s.n_batches(), 2);
+        assert_eq!(s.count(), 2);
     }
 
     #[test]

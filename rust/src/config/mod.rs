@@ -2,7 +2,7 @@
 //! hyperparameters and every benchmark row.
 
 use crate::util::toml::TomlDoc;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 #[derive(Debug, Clone, PartialEq)]
@@ -23,6 +23,17 @@ pub struct RunConfig {
     pub lr_warmup_steps: u64,
     pub corpus_examples: usize,
     pub max_seq: usize,
+    /// File-backed JSONL instruction corpus (`--data-file` / `data.file`);
+    /// empty = the synthetic corpus.
+    pub data_file: String,
+    /// Tokenizer vocab file for the JSONL source (loaded when present,
+    /// learned from the corpus and written there when absent); empty =
+    /// learn in memory each run.
+    pub tokenizer_file: String,
+    /// Deterministic per-epoch shuffle seed for the batch plan.
+    pub shuffle_seed: Option<u64>,
+    /// Number of data passes; `None` = legacy cycle-to-`steps`.
+    pub epochs: Option<u64>,
     pub artifacts_dir: String,
     /// Execution backend: "cpu" (reference oracle), "cpu-fast" (threaded
     /// fused kernels) or "pjrt" (AOT artifacts, `--features pjrt`).
@@ -51,6 +62,10 @@ impl Default for RunConfig {
             lr_warmup_steps: 0,
             corpus_examples: 2048,
             max_seq: 1024,
+            data_file: String::new(),
+            tokenizer_file: String::new(),
+            shuffle_seed: None,
+            epochs: None,
             artifacts_dir: "artifacts".into(),
             backend: "cpu".into(),
             threads: 0,
@@ -91,6 +106,14 @@ impl RunConfig {
     pub fn from_toml(text: &str) -> Result<RunConfig> {
         let doc = TomlDoc::parse(text)?;
         let d = RunConfig::default();
+        // a negative value must not wrap through `as u64` into ~1.8e19
+        let opt_u64 = |key: &str| -> Result<Option<u64>> {
+            match doc.get(key).and_then(|v| v.as_i64()) {
+                Some(v) if v < 0 => bail!("{key} must be non-negative (got {v})"),
+                Some(v) => Ok(Some(v as u64)),
+                None => Ok(None),
+            }
+        };
         Ok(RunConfig {
             executable: doc.str_or("train.executable", &d.executable).to_string(),
             init_executable: doc.str_or("train.init_executable", "").to_string(),
@@ -105,6 +128,10 @@ impl RunConfig {
             corpus_examples: doc.i64_or("data.corpus_examples", d.corpus_examples as i64)
                 as usize,
             max_seq: doc.i64_or("data.max_seq", d.max_seq as i64) as usize,
+            data_file: doc.str_or("data.file", "").to_string(),
+            tokenizer_file: doc.str_or("data.tokenizer", "").to_string(),
+            shuffle_seed: opt_u64("data.shuffle_seed")?,
+            epochs: opt_u64("data.epochs")?,
             artifacts_dir: doc.str_or("artifacts_dir", &d.artifacts_dir).to_string(),
             backend: doc.str_or("backend.name", &d.backend).to_string(),
             threads: doc.i64_or("backend.threads", d.threads as i64).max(0) as usize,
@@ -191,6 +218,35 @@ lr_warmup_steps = 5
         assert_eq!(c.steps, 25);
         assert!(!c.packed);
         assert_eq!(c.lora_plus_ratio, 16.0);
+    }
+
+    #[test]
+    fn data_file_section_parses() {
+        let c = RunConfig::from_toml(
+            r#"
+[data]
+file = "data/sample.jsonl"
+tokenizer = "data/sample.vocab"
+shuffle_seed = 7
+epochs = 2
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.data_file, "data/sample.jsonl");
+        assert_eq!(c.tokenizer_file, "data/sample.vocab");
+        assert_eq!(c.shuffle_seed, Some(7));
+        assert_eq!(c.epochs, Some(2));
+        // absent keys stay None/empty (legacy behavior)
+        let d = RunConfig::from_toml("").unwrap();
+        assert!(d.data_file.is_empty());
+        assert!(d.tokenizer_file.is_empty());
+        assert_eq!(d.shuffle_seed, None);
+        assert_eq!(d.epochs, None);
+        // a negative epoch count must error, not wrap to ~1.8e19 passes
+        let err = RunConfig::from_toml("[data]\nepochs = -1\n").unwrap_err();
+        assert!(err.to_string().contains("non-negative"), "{err}");
+        let err = RunConfig::from_toml("[data]\nshuffle_seed = -3\n").unwrap_err();
+        assert!(err.to_string().contains("non-negative"), "{err}");
     }
 
     #[test]

@@ -92,6 +92,14 @@ impl Trainer {
         &self.spec
     }
 
+    /// Replace the lr schedule. The session uses this before the first
+    /// step when an epoch policy derives the true run length from the data
+    /// plan (the step counter is untouched, so swapping mid-run rescales
+    /// the remaining steps).
+    pub fn set_schedule(&mut self, schedule: LrSchedule) {
+        self.schedule = schedule;
+    }
+
     pub fn backend(&self) -> &Rc<dyn Backend> {
         &self.backend
     }

@@ -1,0 +1,502 @@
+//! Byte-level mini-BPE: a seeded, corpus-learnable pair-merge vocabulary.
+//!
+//! The paper fine-tunes with Qwen's 151,936-token BPE vocabulary. The
+//! properties the experiments actually depend on are determinism and a
+//! vocab capped to what the model's embedding table can index, so the
+//! offline substitute is a miniature byte-pair encoder:
+//!
+//! * the **base alphabet** is the corpus's own bytes, frequency-ranked and
+//!   capped (bytes never seen at learn time encode as `<unk>`),
+//! * **merges** are learned greedily — repeatedly fuse the most frequent
+//!   adjacent pair — until the vocab cap is reached or no pair repeats;
+//!   ties are broken by a seeded SplitMix64 rank so learning is a pure
+//!   function of (corpus, cap, seed),
+//! * the learned vocabulary **serializes** to a plain-text vocab file
+//!   (`chronicals-bpe v1`) and loads back bit-identically, so a run can be
+//!   reproduced later without re-learning.
+//!
+//! Text is pre-tokenized GPT-2 style: lowercased, whitespace-normalized,
+//! and split into chunks that keep their leading space, so decoding is a
+//! pure concatenation and `decode(encode(text))` round-trips normalized
+//! text exactly.
+//!
+//! Token ids: `0 <pad>`, `1 <unk>`, `2 <bos>`, `3 <eos>`, then the ranked
+//! byte alphabet, then one id per merge in learn order.
+//!
+//! ```
+//! use chronicals::data_source::{ByteBpe, Tokenizer};
+//!
+//! let corpus = ["the packing plan", "the packing bins", "the padded rows"];
+//! let tok = ByteBpe::learn(corpus, 48, 7);
+//! assert!(tok.vocab_size() <= 48);
+//! // deterministic: same corpus, cap and seed ⇒ same ids
+//! let again = ByteBpe::learn(corpus, 48, 7);
+//! assert_eq!(tok.encode("the packing"), again.encode("the packing"));
+//! // round-trip (modulo whitespace normalization and lowercasing)
+//! assert_eq!(tok.decode(&tok.encode("THE  packing")), "<bos>the packing<eos>");
+//! ```
+
+use super::Tokenizer;
+use crate::data::tokenizer::{BOS, EOS, UNK};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+const N_SPECIAL: usize = 4;
+/// Vocab-file magic line; bump the version if the format ever changes.
+const MAGIC: &str = "chronicals-bpe v1";
+
+/// SplitMix64 finalizer (the same mix `util::rng` seeds with): a bijection
+/// on `u64`, used to give every candidate pair a distinct seeded rank so
+/// merge-order ties cannot exist.
+fn splitmix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Seeded total-order rank for a candidate pair (lower wins ties).
+fn pair_rank(seed: u64, a: i32, b: i32) -> u64 {
+    splitmix64(seed ^ ((a as u64) << 32) ^ (b as u64))
+}
+
+/// Lowercase + whitespace-normalize text into GPT-2-style chunks: the
+/// first word is bare, every following word keeps one leading space.
+/// Concatenating the chunks reproduces the normalized text.
+fn chunks(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for w in text.split_whitespace() {
+        let w = w.to_lowercase();
+        if out.is_empty() {
+            out.push(w);
+        } else {
+            out.push(format!(" {w}"));
+        }
+    }
+    out
+}
+
+/// One left-to-right pass replacing adjacent `(a, b)` with `new_id` — the
+/// single merge-application primitive shared by learning and encoding, so
+/// both always agree.
+fn apply_merge(s: &mut Vec<i32>, a: i32, b: i32, new_id: i32) {
+    if s.len() < 2 {
+        return;
+    }
+    let mut out = Vec::with_capacity(s.len());
+    let mut i = 0;
+    while i < s.len() {
+        if i + 1 < s.len() && s[i] == a && s[i + 1] == b {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(s[i]);
+            i += 1;
+        }
+    }
+    *s = out;
+}
+
+/// Streaming vocabulary learner: feed it text field by field (each call is
+/// one record field — no corpus-wide `String` is ever built), then
+/// [`BpeLearner::finish`] to fit the vocabulary.
+#[derive(Debug, Default)]
+pub struct BpeLearner {
+    words: HashMap<String, u64>,
+}
+
+impl BpeLearner {
+    /// Fresh learner with no observed text.
+    pub fn new() -> BpeLearner {
+        BpeLearner::default()
+    }
+
+    /// Observe one text field (a prompt, a completion, or a `text` value).
+    pub fn feed(&mut self, text: &str) {
+        for chunk in chunks(text) {
+            *self.words.entry(chunk).or_default() += 1;
+        }
+    }
+
+    /// Fit the vocabulary: rank the byte alphabet, then greedily learn
+    /// pair merges until `cap` total ids or no adjacent pair repeats.
+    /// Deterministic in (observed text, `cap`, `seed`).
+    pub fn finish(self, cap: usize, seed: u64) -> ByteBpe {
+        assert!(cap > N_SPECIAL, "vocab cap {cap} leaves no room for the byte alphabet");
+        // deterministic word order for all subsequent accumulation
+        let mut words: Vec<(String, u64)> = self.words.into_iter().collect();
+        words.sort_by(|a, b| a.0.cmp(&b.0));
+
+        // 1) byte alphabet, frequency-ranked (ties to the smaller byte)
+        let mut byte_count = [0u64; 256];
+        for (w, c) in &words {
+            for &b in w.as_bytes() {
+                byte_count[b as usize] += c;
+            }
+        }
+        let mut ranked: Vec<u8> =
+            (0..=255u8).filter(|&b| byte_count[b as usize] > 0).collect();
+        ranked.sort_by(|&a, &b| {
+            byte_count[b as usize].cmp(&byte_count[a as usize]).then(a.cmp(&b))
+        });
+        ranked.truncate(cap - N_SPECIAL);
+        let mut byte_ids = [UNK; 256];
+        for (i, &b) in ranked.iter().enumerate() {
+            byte_ids[b as usize] = (N_SPECIAL + i) as i32;
+        }
+
+        // 2) symbol sequences for every distinct word
+        let counts: Vec<u64> = words.iter().map(|(_, c)| *c).collect();
+        let mut seqs: Vec<Vec<i32>> = words
+            .iter()
+            .map(|(w, _)| w.as_bytes().iter().map(|&b| byte_ids[b as usize]).collect())
+            .collect();
+
+        // 3) greedy pair merging under the cap
+        let mut merges: Vec<(i32, i32)> = Vec::new();
+        while N_SPECIAL + ranked.len() + merges.len() < cap {
+            let mut pair_counts: HashMap<(i32, i32), u64> = HashMap::new();
+            for (s, &c) in seqs.iter().zip(&counts) {
+                for win in s.windows(2) {
+                    // never merge across unknown bytes
+                    if win[0] != UNK && win[1] != UNK {
+                        *pair_counts.entry((win[0], win[1])).or_default() += c;
+                    }
+                }
+            }
+            // total order: count first, then the seeded rank (injective, so
+            // HashMap iteration order cannot influence the pick)
+            let best = pair_counts
+                .into_iter()
+                .max_by_key(|&((a, b), c)| (c, std::cmp::Reverse(pair_rank(seed, a, b))));
+            let Some(((a, b), c)) = best else { break };
+            if c < 2 {
+                break; // a pair seen once compresses nothing
+            }
+            let new_id = (N_SPECIAL + ranked.len() + merges.len()) as i32;
+            for s in &mut seqs {
+                apply_merge(s, a, b, new_id);
+            }
+            merges.push((a, b));
+        }
+        ByteBpe::assemble(seed, cap, ranked, merges)
+    }
+}
+
+/// A learned byte-level mini-BPE vocabulary (see the module docs for the
+/// id layout and determinism contract).
+#[derive(Debug, Clone)]
+pub struct ByteBpe {
+    seed: u64,
+    cap: usize,
+    /// id `4 + i` encodes byte `bytes[i]`.
+    bytes: Vec<u8>,
+    /// byte value → token id (`UNK` when outside the learned alphabet).
+    byte_ids: [i32; 256],
+    /// merge `k` fuses this (left, right) pair into id `4 + bytes.len() + k`.
+    merges: Vec<(i32, i32)>,
+    /// id → raw byte string (for decoding; specials render as markers).
+    pieces: Vec<Vec<u8>>,
+}
+
+impl ByteBpe {
+    /// Learn a vocabulary from an in-memory corpus — convenience wrapper
+    /// over [`BpeLearner`] for tests, doctests and small corpora.
+    pub fn learn<I, S>(texts: I, cap: usize, seed: u64) -> ByteBpe
+    where
+        I: IntoIterator<Item = S>,
+        S: AsRef<str>,
+    {
+        let mut learner = BpeLearner::new();
+        for t in texts {
+            learner.feed(t.as_ref());
+        }
+        learner.finish(cap, seed)
+    }
+
+    fn assemble(seed: u64, cap: usize, bytes: Vec<u8>, merges: Vec<(i32, i32)>) -> ByteBpe {
+        let mut byte_ids = [UNK; 256];
+        for (i, &b) in bytes.iter().enumerate() {
+            byte_ids[b as usize] = (N_SPECIAL + i) as i32;
+        }
+        let mut pieces: Vec<Vec<u8>> = vec![
+            b"<pad>".to_vec(),
+            b"<unk>".to_vec(),
+            b"<bos>".to_vec(),
+            b"<eos>".to_vec(),
+        ];
+        for &b in &bytes {
+            pieces.push(vec![b]);
+        }
+        for &(a, b) in &merges {
+            let mut p = pieces[a as usize].clone();
+            p.extend_from_slice(&pieces[b as usize]);
+            pieces.push(p);
+        }
+        ByteBpe { seed, cap, bytes, byte_ids, merges, pieces }
+    }
+
+    /// The seed the vocabulary was learned with (tie-break salt; recorded
+    /// in the vocab file so re-learning reproduces the same merges).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The vocab cap the learning ran under (≥ [`Tokenizer::vocab_size`]).
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Number of learned pair merges.
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Serialize to a plain-text vocab file. [`ByteBpe::load`] restores the
+    /// exact vocabulary, making tokenization reproducible across runs and
+    /// machines without re-learning.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut out = String::new();
+        let _ = writeln!(out, "{MAGIC}");
+        let _ = writeln!(out, "seed {}", self.seed);
+        let _ = writeln!(out, "cap {}", self.cap);
+        for &b in &self.bytes {
+            let _ = writeln!(out, "byte {b}");
+        }
+        for &(a, b) in &self.merges {
+            let _ = writeln!(out, "merge {a} {b}");
+        }
+        std::fs::write(path, out)
+            .with_context(|| format!("writing vocab file {}", path.display()))
+    }
+
+    /// Load a vocabulary saved by [`ByteBpe::save`]. Errors carry
+    /// `file:line` so a corrupt vocab file points at the offending line.
+    pub fn load(path: impl AsRef<Path>) -> Result<ByteBpe> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading vocab file {}", path.display()))?;
+        let at = |lineno: usize| format!("{}:{}", path.display(), lineno);
+        let mut lines = text.lines().enumerate().map(|(i, l)| (i + 1, l.trim()));
+        let (_, magic) = lines
+            .next()
+            .ok_or_else(|| anyhow!("{}: empty vocab file", path.display()))?;
+        if magic != MAGIC {
+            bail!("{}: not a '{MAGIC}' vocab file (got '{magic}')", at(1));
+        }
+        let mut seed: Option<u64> = None;
+        let mut cap: Option<usize> = None;
+        let mut bytes: Vec<u8> = Vec::new();
+        let mut merges: Vec<(i32, i32)> = Vec::new();
+        for (lineno, line) in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let key = parts.next().unwrap_or_default();
+            let args: Vec<&str> = parts.collect();
+            match (key, args.as_slice()) {
+                ("seed", [v]) => {
+                    seed = Some(v.parse().map_err(|_| anyhow!("{}: bad seed '{v}'", at(lineno)))?)
+                }
+                ("cap", [v]) => {
+                    cap = Some(v.parse().map_err(|_| anyhow!("{}: bad cap '{v}'", at(lineno)))?)
+                }
+                ("byte", [v]) => {
+                    if !merges.is_empty() {
+                        bail!("{}: byte lines must precede merge lines", at(lineno));
+                    }
+                    let b: u8 =
+                        v.parse().map_err(|_| anyhow!("{}: bad byte '{v}'", at(lineno)))?;
+                    if bytes.contains(&b) {
+                        bail!("{}: duplicate byte {b}", at(lineno));
+                    }
+                    bytes.push(b);
+                }
+                ("merge", [l, r]) => {
+                    let parse = |v: &&str| {
+                        v.parse::<i32>()
+                            .map_err(|_| anyhow!("{}: bad merge operand '{v}'", at(lineno)))
+                    };
+                    let (l, r) = (parse(l)?, parse(r)?);
+                    let defined = (N_SPECIAL + bytes.len() + merges.len()) as i32;
+                    for op in [l, r] {
+                        if op < N_SPECIAL as i32 || op >= defined {
+                            bail!(
+                                "{}: merge operand {op} is not a previously defined id \
+                                 (expected {}..{defined})",
+                                at(lineno),
+                                N_SPECIAL
+                            );
+                        }
+                    }
+                    merges.push((l, r));
+                }
+                _ => bail!("{}: unrecognized vocab line '{line}'", at(lineno)),
+            }
+        }
+        let seed = seed.ok_or_else(|| anyhow!("{}: missing 'seed' line", path.display()))?;
+        let cap = cap.ok_or_else(|| anyhow!("{}: missing 'cap' line", path.display()))?;
+        if cap <= N_SPECIAL {
+            bail!("{}: cap {cap} is too small", path.display());
+        }
+        if N_SPECIAL + bytes.len() + merges.len() > cap {
+            bail!(
+                "{}: vocab holds {} ids but declares cap {cap}",
+                path.display(),
+                N_SPECIAL + bytes.len() + merges.len()
+            );
+        }
+        Ok(ByteBpe::assemble(seed, cap, bytes, merges))
+    }
+}
+
+impl Tokenizer for ByteBpe {
+    fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = vec![BOS];
+        for chunk in chunks(text) {
+            let mut s: Vec<i32> =
+                chunk.as_bytes().iter().map(|&b| self.byte_ids[b as usize]).collect();
+            for (k, &(a, b)) in self.merges.iter().enumerate() {
+                apply_merge(&mut s, a, b, (N_SPECIAL + self.bytes.len() + k) as i32);
+            }
+            out.extend(s);
+        }
+        out.push(EOS);
+        out
+    }
+
+    fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if id >= 0 {
+                if let Some(p) = self.pieces.get(id as usize) {
+                    bytes.extend_from_slice(p);
+                }
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn vocab_size(&self) -> usize {
+        N_SPECIAL + self.bytes.len() + self.merges.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORPUS: &[&str] = &[
+        "the attention kernel streams tiles",
+        "the packing plan streams bins",
+        "the optimizer updates the weights",
+    ];
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a = ByteBpe::learn(CORPUS, 48, 7);
+        let b = ByteBpe::learn(CORPUS, 48, 7);
+        assert_eq!(a.encode("the packing plan"), b.encode("the packing plan"));
+        assert_eq!(a.n_merges(), b.n_merges());
+    }
+
+    #[test]
+    fn vocab_respects_cap() {
+        for cap in [8, 16, 40, 64, 256] {
+            let t = ByteBpe::learn(CORPUS, cap, 3);
+            assert!(t.vocab_size() <= cap, "cap {cap}: {}", t.vocab_size());
+            for id in t.encode("the attention kernel") {
+                assert!((id as usize) < cap, "id {id} out of cap {cap}");
+            }
+        }
+    }
+
+    #[test]
+    fn merges_compress() {
+        // a cap of exactly 4 + |alphabet| leaves zero room for merges
+        let distinct: std::collections::HashSet<u8> =
+            CORPUS.iter().flat_map(|s| s.bytes()).collect();
+        let no_merges = ByteBpe::learn(CORPUS, 4 + distinct.len(), 7);
+        assert_eq!(no_merges.n_merges(), 0);
+        let merged = ByteBpe::learn(CORPUS, 64, 7);
+        assert!(merged.n_merges() > 0);
+        let text = "the packing plan streams";
+        assert!(
+            merged.encode(text).len() < no_merges.encode(text).len(),
+            "merges must shorten encodings"
+        );
+    }
+
+    #[test]
+    fn roundtrip_normalized_text() {
+        let t = ByteBpe::learn(CORPUS, 64, 7);
+        assert_eq!(
+            t.decode(&t.encode("The  Packing   plan")),
+            "<bos>the packing plan<eos>"
+        );
+    }
+
+    #[test]
+    fn unknown_bytes_map_to_unk() {
+        let t = ByteBpe::learn(CORPUS, 64, 7);
+        let ids = t.encode("qjxv!"); // none of these bytes appear in CORPUS
+        assert!(ids.contains(&UNK));
+        // every id still in range
+        for id in ids {
+            assert!((id as usize) < t.vocab_size());
+        }
+    }
+
+    #[test]
+    fn negative_ids_skipped_in_decode() {
+        let t = ByteBpe::learn(CORPUS, 64, 7);
+        assert_eq!(t.decode(&[-1, BOS, -1]), "<bos>");
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_exact() {
+        let t = ByteBpe::learn(CORPUS, 64, 9);
+        let path = std::env::temp_dir().join("chronicals_bpe_roundtrip.vocab");
+        t.save(&path).unwrap();
+        let loaded = ByteBpe::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.seed(), 9);
+        assert_eq!(loaded.vocab_size(), t.vocab_size());
+        assert_eq!(loaded.n_merges(), t.n_merges());
+        let text = "the attention kernel streams tiles and bins";
+        assert_eq!(loaded.encode(text), t.encode(text));
+    }
+
+    #[test]
+    fn load_rejects_corruption_with_file_line() {
+        let path = std::env::temp_dir().join("chronicals_bpe_corrupt.vocab");
+        std::fs::write(&path, "chronicals-bpe v1\nseed 1\ncap 64\nbyte 300\n").unwrap();
+        let err = ByteBpe::load(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains(":4"), "error must carry file:line, got {err}");
+
+        let path2 = std::env::temp_dir().join("chronicals_bpe_magic.vocab");
+        std::fs::write(&path2, "not a vocab\n").unwrap();
+        let err2 = ByteBpe::load(&path2).unwrap_err().to_string();
+        std::fs::remove_file(&path2).ok();
+        assert!(err2.contains("chronicals-bpe"), "{err2}");
+    }
+
+    #[test]
+    fn merge_operand_validation() {
+        let path = std::env::temp_dir().join("chronicals_bpe_badmerge.vocab");
+        // merge references id 40, but only ids 4..6 are defined
+        std::fs::write(
+            &path,
+            "chronicals-bpe v1\nseed 1\ncap 64\nbyte 97\nbyte 98\nmerge 4 40\n",
+        )
+        .unwrap();
+        let err = ByteBpe::load(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("merge operand"), "{err}");
+    }
+}

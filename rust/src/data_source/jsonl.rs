@@ -1,0 +1,395 @@
+//! File-backed JSONL instruction data: the real-corpus `ExampleSource`.
+//!
+//! A corpus file holds one JSON object per line, either an instruction
+//! pair or plain text:
+//!
+//! ```text
+//! {"prompt": "explain sequence packing .", "completion": "bfd places each sequence ..."}
+//! {"text": "padding wastes compute on positions that contribute nothing"}
+//! ```
+//!
+//! [`JsonlSource`] streams the file with buffered line-at-a-time reads and
+//! tokenizes each record as the line is consumed — no corpus-wide string,
+//! no eager tokenization pass (ChunkFT's byte-streamed ethos). Parsing
+//! uses the crate's hermetic [`crate::util::json`] parser — no serde, no
+//! external dependencies.
+//!
+//! Error policy (DESIGN.md §8):
+//! * I/O failures and unreadable files are hard errors naming the path,
+//! * a line that is not valid JSON or does not match the schema is
+//!   **skipped and counted** ([`SourceStats::malformed`]) with a
+//!   `file:line:` diagnostic retained, so a half-corrupt corpus still
+//!   trains — loudly;
+//! * a file yielding zero usable examples is a hard error carrying the
+//!   first per-line diagnostic.
+//!
+//! ```
+//! use chronicals::data_source::JsonlSource;
+//! use chronicals::session::ExampleSource;
+//!
+//! let path = std::env::temp_dir().join("chronicals_doc_corpus.jsonl");
+//! std::fs::write(
+//!     &path,
+//!     "{\"prompt\": \"add two and two .\", \"completion\": \"four\"}\n\
+//!      {\"text\": \"padding wastes compute\"}\n",
+//! )?;
+//! let src = JsonlSource::new(&path, 7, 64);
+//! let examples = src.examples(64)?; // vocab-capped to the model
+//! assert_eq!(examples.len(), 2);
+//! assert_eq!(src.stats().malformed, 0);
+//! # std::fs::remove_file(&path).ok();
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use super::bpe::{BpeLearner, ByteBpe};
+use super::{tokenize_pair, tokenize_text, SourceStats, Tokenizer};
+use crate::data::TokenizedExample;
+use crate::session::ExampleSource;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+
+/// Retain at most this many per-line diagnostics in [`SourceStats::notes`].
+const MAX_NOTES: usize = 8;
+
+/// One parsed JSONL record.
+enum Record {
+    /// `{"prompt": …, "completion": …}` — prompt loss-masked, completion
+    /// supervised.
+    Pair { prompt: String, completion: String },
+    /// `{"text": …}` — every next-token position supervised.
+    Text(String),
+}
+
+/// Parse one line into a [`Record`]; schema errors name the offending key.
+fn parse_record(line: &str) -> Result<Record> {
+    let v = Json::parse(line)?;
+    let obj = v.as_obj().ok_or_else(|| anyhow!("expected a JSON object"))?;
+    let str_field = |key: &str, j: &Json| -> Result<String> {
+        j.as_str()
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("\"{key}\" must be a string"))
+    };
+    match (obj.get("prompt"), obj.get("completion"), obj.get("text")) {
+        (Some(p), Some(c), _) => Ok(Record::Pair {
+            prompt: str_field("prompt", p)?,
+            completion: str_field("completion", c)?,
+        }),
+        (Some(_), None, _) => bail!("\"prompt\" without \"completion\""),
+        (None, Some(_), _) => bail!("\"completion\" without \"prompt\""),
+        (None, None, Some(t)) => Ok(Record::Text(str_field("text", t)?)),
+        (None, None, None) => {
+            bail!("expected {{\"prompt\", \"completion\"}} or {{\"text\"}} keys")
+        }
+    }
+}
+
+/// A file-backed [`ExampleSource`] streaming an instruction-tuning JSONL
+/// corpus through the byte-level mini-BPE tokenizer (see the module docs
+/// for the schema and error policy).
+pub struct JsonlSource {
+    path: PathBuf,
+    vocab_file: Option<PathBuf>,
+    seed: u64,
+    max_seq: usize,
+    stats: RefCell<SourceStats>,
+}
+
+impl JsonlSource {
+    /// Describe a JSONL corpus. Nothing is read until
+    /// [`ExampleSource::examples`] is called. `seed` drives tokenizer
+    /// learning (merge tie-breaks); `max_seq` caps tokens per example
+    /// (longer records are truncated and counted).
+    pub fn new(path: impl Into<PathBuf>, seed: u64, max_seq: usize) -> JsonlSource {
+        JsonlSource {
+            path: path.into(),
+            vocab_file: None,
+            seed,
+            max_seq,
+            stats: RefCell::new(SourceStats::default()),
+        }
+    }
+
+    /// Persist the tokenizer: load the vocab file when it exists, else
+    /// learn from the corpus and write it there — so a second run (or
+    /// another machine) tokenizes identically without re-learning.
+    pub fn with_vocab_file(mut self, path: impl Into<PathBuf>) -> JsonlSource {
+        self.vocab_file = Some(path.into());
+        self
+    }
+
+    /// The corpus path this source reads.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Stream the file once, calling `f` per well-formed record. Malformed
+    /// lines are skipped and counted into the returned stats with
+    /// `file:line:` diagnostics; I/O failures are hard errors.
+    fn for_each_record(&self, mut f: impl FnMut(Record)) -> Result<SourceStats> {
+        let file = File::open(&self.path)
+            .with_context(|| format!("opening data file {}", self.path.display()))?;
+        let reader = BufReader::new(file);
+        let mut stats = SourceStats::default();
+        for (i, line) in reader.lines().enumerate() {
+            let lineno = i + 1;
+            let line = line
+                .with_context(|| format!("reading {}:{}", self.path.display(), lineno))?;
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            match parse_record(trimmed) {
+                Ok(r) => f(r),
+                Err(e) => {
+                    stats.malformed += 1;
+                    if stats.notes.len() < MAX_NOTES {
+                        stats
+                            .notes
+                            .push(format!("{}:{}: {e:#}", self.path.display(), lineno));
+                    }
+                }
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Load or learn the tokenizer for this corpus under the model's
+    /// vocab cap.
+    fn resolve_tokenizer(&self, vocab_cap: usize) -> Result<ByteBpe> {
+        if let Some(vf) = &self.vocab_file {
+            if vf.exists() {
+                let tok = ByteBpe::load(vf)?;
+                if tok.vocab_size() > vocab_cap {
+                    bail!(
+                        "vocab file {} holds {} ids but the model vocab is {vocab_cap} — \
+                         re-learn it (delete the file) or pick a smaller vocab",
+                        vf.display(),
+                        tok.vocab_size()
+                    );
+                }
+                return Ok(tok);
+            }
+        }
+        if vocab_cap <= 8 {
+            bail!("model vocab {vocab_cap} is too small for the byte-level tokenizer");
+        }
+        let mut learner = BpeLearner::new();
+        // pass-1 accounting is discarded; pass 2 records the real stats
+        self.for_each_record(|r| match r {
+            Record::Pair { prompt, completion } => {
+                learner.feed(&prompt);
+                learner.feed(&completion);
+            }
+            Record::Text(t) => learner.feed(&t),
+        })?;
+        let tok = learner.finish(vocab_cap, self.seed);
+        if let Some(vf) = &self.vocab_file {
+            tok.save(vf)?;
+        }
+        Ok(tok)
+    }
+}
+
+impl ExampleSource for JsonlSource {
+    fn label(&self) -> String {
+        format!("jsonl({})", self.path.display())
+    }
+
+    fn examples(&self, vocab_cap: usize) -> Result<Vec<TokenizedExample>> {
+        let tok = self.resolve_tokenizer(vocab_cap)?;
+        let mut out = Vec::new();
+        let mut truncated = 0usize;
+        let mut stats = self.for_each_record(|r| {
+            let (ex, was_truncated) = match r {
+                Record::Pair { prompt, completion } => {
+                    tokenize_pair(&tok, &prompt, &completion, self.max_seq)
+                }
+                Record::Text(t) => tokenize_text(&tok, &t, self.max_seq),
+            };
+            if was_truncated {
+                truncated += 1;
+            }
+            // a record whose prompt alone fills max_seq ends up fully
+            // loss-masked — it would occupy batch slots while contributing
+            // nothing to the loss, so it is skipped (counted above)
+            if !ex.is_empty() && ex.real_targets() > 0 {
+                out.push(ex);
+            }
+        })?;
+        stats.truncated = truncated;
+        if out.is_empty() {
+            match stats.notes.first() {
+                Some(n) => bail!(
+                    "no usable examples in {} ({} malformed records; first: {n})",
+                    self.path.display(),
+                    stats.malformed
+                ),
+                None => bail!("no examples in {}", self.path.display()),
+            }
+        }
+        *self.stats.borrow_mut() = stats;
+        Ok(out)
+    }
+
+    fn stats(&self) -> SourceStats {
+        self.stats.borrow().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(name: &str, content: &str) -> PathBuf {
+        let path = std::env::temp_dir().join(name);
+        std::fs::write(&path, content).unwrap();
+        path
+    }
+
+    const GOOD: &str = concat!(
+        "{\"prompt\": \"explain packing .\", \"completion\": \"bins hold sequences\"}\n",
+        "\n",
+        "{\"text\": \"padding wastes compute on empty positions\"}\n",
+        "{\"prompt\": \"count to three .\", \"completion\": \"one two three\"}\n",
+    );
+
+    #[test]
+    fn streams_both_schemas() {
+        let path = write_tmp("chronicals_jsonl_good.jsonl", GOOD);
+        let src = JsonlSource::new(&path, 7, 64);
+        let exs = src.examples(64).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(exs.len(), 3, "blank lines are skipped, both schemas parse");
+        let stats = src.stats();
+        assert_eq!(stats.malformed, 0);
+        assert_eq!(stats.truncated, 0);
+        // the pair records mask their prompt, the text record supervises all
+        assert!(exs[0].real_targets() < exs[0].len() - 1);
+        assert_eq!(exs[1].real_targets(), exs[1].len() - 1);
+        // every id respects the vocab cap
+        for ex in &exs {
+            for &t in &ex.tokens {
+                assert!((0..64).contains(&t), "token {t} out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_lines_are_counted_with_file_line() {
+        let content = concat!(
+            "{\"prompt\": \"a b\", \"completion\": \"c d\"}\n",
+            "{not json at all\n",
+            "{\"instruction\": \"wrong schema\"}\n",
+            "{\"prompt\": \"only half\"}\n",
+            "{\"text\": 42}\n",
+            "{\"text\": \"still fine\"}\n",
+        );
+        let path = write_tmp("chronicals_jsonl_bad.jsonl", content);
+        let src = JsonlSource::new(&path, 7, 64);
+        let exs = src.examples(64).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(exs.len(), 2);
+        let stats = src.stats();
+        assert_eq!(stats.malformed, 4);
+        assert_eq!(stats.notes.len(), 4);
+        assert!(stats.notes[0].contains(":2:"), "{:?}", stats.notes);
+        assert!(stats.notes[1].contains(":3:"), "{:?}", stats.notes);
+        assert!(stats.notes[2].contains("completion"), "{:?}", stats.notes);
+        assert!(stats.notes[3].contains(":5:"), "{:?}", stats.notes);
+    }
+
+    #[test]
+    fn all_malformed_is_a_hard_error_naming_the_first_line() {
+        let path = write_tmp("chronicals_jsonl_allbad.jsonl", "nope\nalso nope\n");
+        let err = JsonlSource::new(&path, 7, 64).examples(64).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("no usable examples"), "{err}");
+        assert!(err.contains(":1:"), "{err}");
+    }
+
+    #[test]
+    fn missing_file_is_a_hard_error() {
+        let err = JsonlSource::new("/definitely/not/here.jsonl", 7, 64)
+            .examples(64)
+            .map(|_| ())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("not/here.jsonl"), "{err:#}");
+    }
+
+    #[test]
+    fn fully_masked_records_are_skipped() {
+        // the prompt alone exceeds max_seq, so truncation leaves zero
+        // supervised positions — the record must not occupy batch slots
+        let long_prompt = "p ".repeat(64);
+        let content = format!(
+            "{{\"prompt\": \"{}\", \"completion\": \"lost\"}}\n{{\"text\": \"kept words\"}}\n",
+            long_prompt.trim()
+        );
+        let path = write_tmp("chronicals_jsonl_masked.jsonl", &content);
+        let src = JsonlSource::new(&path, 7, 16);
+        let exs = src.examples(64).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(exs.len(), 1, "the fully-masked record must be skipped");
+        assert_eq!(src.stats().truncated, 1);
+        assert!(exs[0].real_targets() > 0);
+    }
+
+    #[test]
+    fn truncation_counted() {
+        let long = "w ".repeat(400);
+        let content = format!("{{\"text\": \"{}\"}}\n{{\"text\": \"short\"}}\n", long.trim());
+        let path = write_tmp("chronicals_jsonl_long.jsonl", &content);
+        let src = JsonlSource::new(&path, 7, 32);
+        let exs = src.examples(64).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(exs.len(), 2);
+        assert_eq!(src.stats().truncated, 1);
+        assert!(exs.iter().all(|e| e.len() <= 32));
+    }
+
+    #[test]
+    fn vocab_file_written_then_reused() {
+        let path = write_tmp("chronicals_jsonl_vocab_corpus.jsonl", GOOD);
+        let vocab = std::env::temp_dir().join("chronicals_jsonl.vocab");
+        std::fs::remove_file(&vocab).ok();
+
+        let src = JsonlSource::new(&path, 7, 64).with_vocab_file(&vocab);
+        let first = src.examples(64).unwrap();
+        assert!(vocab.exists(), "learning must persist the vocab file");
+
+        // a second source loads the file instead of re-learning
+        let src2 = JsonlSource::new(&path, 999, 64).with_vocab_file(&vocab);
+        let second = src2.examples(64).unwrap();
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.tokens, b.tokens, "loaded vocab must tokenize identically");
+        }
+
+        // an oversized vocab file against a smaller model vocab is an error
+        let err = JsonlSource::new(&path, 7, 64)
+            .with_vocab_file(&vocab)
+            .examples(10)
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("model vocab"), "{err}");
+
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&vocab).ok();
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let path = write_tmp("chronicals_jsonl_det.jsonl", GOOD);
+        let a = JsonlSource::new(&path, 7, 64).examples(64).unwrap();
+        let b = JsonlSource::new(&path, 7, 64).examples(64).unwrap();
+        std::fs::remove_file(&path).ok();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.targets, y.targets);
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Real, file-backed training data: JSONL corpora and the streaming
+//! byte-level tokenizer (DESIGN.md §8).
+//!
+//! The synthetic corpus under [`crate::data`] exists to reproduce the
+//! paper's *length distribution*; this module is the path that trains on
+//! actual instruction data:
+//!
+//! * [`Tokenizer`] — the trait every text tokenizer implements. The
+//!   default implementation is [`ByteBpe`], a deterministic byte-level
+//!   mini-BPE with a seeded, corpus-learnable pair-merge vocabulary that
+//!   is capped to the model's vocab and serializable to a plain-text
+//!   vocab file (reproducible runs). The word-level
+//!   [`crate::data::Tokenizer`] implements the trait too.
+//! * [`JsonlSource`] — a file-backed [`crate::session::ExampleSource`]
+//!   that streams an instruction-tuning JSONL file line by line
+//!   (buffered reads, tokenize-as-you-go — the corpus never exists as a
+//!   resident `Vec<String>`), reporting per-line errors as `file:line`
+//!   and accounting for malformed / truncated records in
+//!   [`SourceStats`] instead of dropping data silently.
+//!
+//! ```
+//! use chronicals::data_source::{ByteBpe, Tokenizer};
+//!
+//! // Learn a 32-id vocabulary from a two-line corpus (seeded, deterministic).
+//! let tok = ByteBpe::learn(["pack the tokens", "pack the bins"], 32, 7);
+//! let ids = tok.encode("pack the bins");
+//! assert!(ids.len() >= 3); // BOS + pieces + EOS
+//! assert_eq!(tok.decode(&ids), "<bos>pack the bins<eos>");
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+#![warn(missing_docs)]
+
+pub mod bpe;
+pub mod jsonl;
+
+pub use bpe::{BpeLearner, ByteBpe};
+pub use jsonl::JsonlSource;
+
+use crate::data::TokenizedExample;
+
+/// A deterministic text tokenizer: text in, model-ready token ids out.
+///
+/// The contract mirrors the word tokenizer the synthetic pipeline uses:
+/// `encode` frames the ids with `<bos>` … `<eos>`, every id is
+/// `< vocab_size()`, and the same text always produces the same ids (runs
+/// must be reproducible — see DESIGN.md §8).
+pub trait Tokenizer {
+    /// Encode text to token ids with `<bos>` / `<eos>` framing.
+    fn encode(&self, text: &str) -> Vec<i32>;
+    /// Best-effort inverse of [`Tokenizer::encode`]; ids outside the
+    /// vocabulary (for example `-1` target masks) are skipped.
+    fn decode(&self, ids: &[i32]) -> String;
+    /// Number of distinct ids this tokenizer can emit (≤ the model vocab).
+    fn vocab_size(&self) -> usize;
+}
+
+/// The word-level frequency tokenizer behind the synthetic corpus also
+/// speaks the trait, so sources can swap tokenizers without caring which
+/// family they got.
+impl Tokenizer for crate::data::Tokenizer {
+    fn encode(&self, text: &str) -> Vec<i32> {
+        // inherent methods take precedence: this calls data::Tokenizer::encode
+        self.encode(text)
+    }
+    fn decode(&self, ids: &[i32]) -> String {
+        self.decode(ids)
+    }
+    fn vocab_size(&self) -> usize {
+        self.vocab_size()
+    }
+}
+
+/// Accounting for what a data source did to its records — folded into
+/// [`crate::session::RunReport`] so nothing is dropped without a trace.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SourceStats {
+    /// Records skipped because the line was not valid JSON or did not match
+    /// the expected schema.
+    pub malformed: usize,
+    /// Records truncated to the source's `max_seq` token cap.
+    pub truncated: usize,
+    /// First few per-record diagnostics, each prefixed `file:line:`.
+    pub notes: Vec<String>,
+}
+
+/// Tokenize an instruction pair the standard way: prompt tokens are
+/// loss-masked, completion tokens are supervised (the recipe
+/// [`crate::data::tokenize_corpus`] uses). Returns the example and whether
+/// it was truncated to `max_len` tokens.
+///
+/// ```
+/// use chronicals::data_source::{tokenize_pair, ByteBpe};
+///
+/// let tok = ByteBpe::learn(["add two numbers", "four"], 40, 1);
+/// let (ex, truncated) = tokenize_pair(&tok, "add two numbers", "four", 64);
+/// assert!(!truncated);
+/// // prompt interior is masked, completion is supervised
+/// assert_eq!(ex.targets[0], -1);
+/// assert!(ex.real_targets() > 0);
+/// ```
+pub fn tokenize_pair(
+    tok: &dyn Tokenizer,
+    prompt: &str,
+    completion: &str,
+    max_len: usize,
+) -> (TokenizedExample, bool) {
+    let mut tokens = tok.encode(prompt);
+    let prompt_len = tokens.len();
+    tokens.extend(tok.encode(completion));
+    let truncated = tokens.len() > max_len;
+    tokens.truncate(max_len);
+    let mut targets = vec![-1i32; tokens.len()];
+    for i in prompt_len.saturating_sub(1)..tokens.len().saturating_sub(1) {
+        targets[i] = tokens[i + 1];
+    }
+    (TokenizedExample { tokens, targets }, truncated)
+}
+
+/// Tokenize plain text (the `{"text": …}` JSONL fallback): every
+/// next-token position is supervised, the final position is masked.
+/// Returns the example and whether it was truncated to `max_len` tokens.
+pub fn tokenize_text(
+    tok: &dyn Tokenizer,
+    text: &str,
+    max_len: usize,
+) -> (TokenizedExample, bool) {
+    let mut tokens = tok.encode(text);
+    let truncated = tokens.len() > max_len;
+    tokens.truncate(max_len);
+    let mut targets = vec![-1i32; tokens.len()];
+    for i in 0..tokens.len().saturating_sub(1) {
+        targets[i] = tokens[i + 1];
+    }
+    (TokenizedExample { tokens, targets }, truncated)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_tokenizer_speaks_the_trait() {
+        let t = crate::data::Tokenizer::from_texts(["the cat sat".to_string()], 16);
+        let dynamic: &dyn Tokenizer = &t;
+        assert_eq!(dynamic.encode("the cat"), t.encode("the cat"));
+        assert_eq!(dynamic.vocab_size(), t.vocab_size());
+        assert_eq!(dynamic.decode(&t.encode("cat")), "<bos> cat <eos>");
+    }
+
+    #[test]
+    fn pair_masks_prompt_and_supervises_completion() {
+        let tok = ByteBpe::learn(["ab cd", "ef"], 32, 0);
+        let (ex, truncated) = tokenize_pair(&tok, "ab cd", "ef", 128);
+        assert!(!truncated);
+        let prompt_len = tok.encode("ab cd").len();
+        for i in 0..prompt_len - 1 {
+            assert_eq!(ex.targets[i], -1, "prompt pos {i} must be masked");
+        }
+        for i in prompt_len - 1..ex.tokens.len() - 1 {
+            assert_eq!(ex.targets[i], ex.tokens[i + 1], "pos {i}");
+        }
+        assert_eq!(*ex.targets.last().unwrap(), -1);
+    }
+
+    #[test]
+    fn text_supervises_everything_but_last() {
+        let tok = ByteBpe::learn(["ab cd"], 32, 0);
+        let (ex, _) = tokenize_text(&tok, "ab cd", 128);
+        for i in 0..ex.tokens.len() - 1 {
+            assert_eq!(ex.targets[i], ex.tokens[i + 1], "pos {i}");
+        }
+        assert_eq!(*ex.targets.last().unwrap(), -1);
+    }
+
+    #[test]
+    fn truncation_reported_and_boundary_masked() {
+        let tok = ByteBpe::learn(["abcdefgh"], 32, 0);
+        let (ex, truncated) = tokenize_text(&tok, "abcdefgh", 4);
+        assert!(truncated);
+        assert_eq!(ex.tokens.len(), 4);
+        assert_eq!(ex.targets.len(), 4);
+        // last kept position must not predict a token we dropped
+        assert_eq!(ex.targets[3], -1);
+    }
+}

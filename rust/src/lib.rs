@@ -9,8 +9,9 @@
 //! * **L2** — the JAX training graph (`python/compile/model.py`), AOT-lowered
 //!   to HLO text artifacts by `python/compile/aot.py`.
 //! * **L3** — this crate: the training coordinator. It owns the event loop,
-//!   data pipeline (synthetic instruction corpus → tokenize → BFD-pack →
-//!   batch), the pluggable execution backends (`backend::Backend`), metrics
+//!   data pipeline (synthetic instruction corpus or a file-backed JSONL
+//!   corpus via [`data_source`] → tokenize → BFD-pack → shuffle/epoch batch
+//!   stream), the pluggable execution backends (`backend::Backend`), metrics
 //!   (throughput, MFU, memory model), benchmark verification (the paper's
 //!   gradient-norm methodology), checkpointing and the CLI.
 //!
@@ -53,6 +54,7 @@ pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod data_source;
 pub mod harness;
 pub mod manifest;
 pub mod metrics;

@@ -114,7 +114,14 @@ COMMANDS
            [--packing padded|bfd|ffd|next-fit] [--schedule constant|
            warmup-cosine] [--lr-warmup N] [--lora-rank N]
            [--lora-plus-ratio X] [--steps N] [--lr X] [--seed N]
+           [--data-file FILE.jsonl] [--tokenizer FILE.vocab]
+           [--shuffle-seed N] [--epochs N]
            [--backend cpu|cpu-fast|pjrt] [--threads N] [--artifacts DIR]
+           data: --data-file streams a JSONL instruction corpus
+           ({{\"prompt\",\"completion\"}} or {{\"text\"}} per line) through the
+           byte-level mini-BPE tokenizer; --tokenizer loads/persists its
+           vocab file; --shuffle-seed permutes the packing plan per epoch;
+           --epochs N runs N data passes instead of cycling to --steps
            legacy front-ends (lowered into the same typed session):
            --preset <full_ft|lora|lora_plus|e2e> | --config <file.toml> |
            --executable NAME [--packed true|false]
@@ -202,6 +209,27 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(b) = args.get("backend") {
         cfg.backend = b.to_string();
     }
+    if let Some(f) = args.get("data-file") {
+        cfg.data_file = f.to_string();
+    }
+    if let Some(t) = args.get("tokenizer") {
+        cfg.tokenizer_file = t.to_string();
+    }
+    if cfg.data_file.is_empty() && !cfg.tokenizer_file.is_empty() {
+        bail!("--tokenizer requires --data-file (the synthetic corpus has its own tokenizer)");
+    }
+    if let Some(s) = args.get("shuffle-seed") {
+        cfg.shuffle_seed = Some(
+            s.parse()
+                .map_err(|_| anyhow!("invalid --shuffle-seed '{s}' (expected an integer)"))?,
+        );
+    }
+    if let Some(e) = args.get("epochs") {
+        cfg.epochs = Some(
+            e.parse()
+                .map_err(|_| anyhow!("invalid --epochs '{e}' (expected a positive integer)"))?,
+        );
+    }
     // one parser for --threads everywhere (env > flag > config file)
     cfg.threads = thread_request(args, cfg.threads)?;
 
@@ -226,15 +254,23 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
 
     let mut session = spec.build()?;
+    let run_length = match session.spec().epoch_policy.epochs {
+        Some(n) => format!("{n} epochs"),
+        None => format!("{} steps", session.spec().steps),
+    };
     println!(
-        "training {} ({}) on the {} backend for {} steps (packing={}, lr={}, λ={})",
+        "training {} ({}) on the {} backend for {run_length} (packing={}, lr={}, λ={}, data={}{})",
         session.resolved().train,
         session.spec().task,
         session.backend().name(),
-        session.spec().steps,
         session.spec().packing.name(),
         session.spec().lr,
         session.resolved().lora_plus_ratio,
+        session.spec().data.label(),
+        match session.spec().epoch_policy.shuffle {
+            Some(s) => format!(", shuffle seed {s}"),
+            None => String::new(),
+        },
     );
     let t0 = std::time::Instant::now();
     let report = session.run()?;
@@ -260,12 +296,35 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// dropped without a trace.
 fn print_data_accounting(report: &RunReport) {
     println!(
-        "data: {} examples -> {} batches ({} staged{})",
+        "data: {} examples -> {} batches over {} epoch{} ({} staged{})",
         report.examples,
         report.batches_planned,
+        report.epochs,
+        if report.epochs == 1 { "" } else { "s" },
         report.batches_staged,
         if report.tail_padded { ", partial tail padded" } else { "" }
     );
+    println!(
+        "  packing: {:.1}% of [B, S] slots hold real tokens; {:.1}% of the padded \
+         baseline's waste recovered",
+        report.packed_density * 100.0,
+        report.padding_recovery * 100.0
+    );
+    if report.malformed_skipped > 0 {
+        println!(
+            "  warning: {} malformed records skipped (invalid JSON or schema):",
+            report.malformed_skipped
+        );
+        for n in &report.source_notes {
+            println!("    {n}");
+        }
+    }
+    if report.truncated > 0 {
+        println!(
+            "  note: {} records truncated to the source's max_seq token cap",
+            report.truncated
+        );
+    }
     if report.oversized_dropped > 0 {
         println!(
             "  warning: {} examples exceed the row capacity and were skipped \

@@ -43,11 +43,12 @@ pub use crate::batching::{PackingStrategy, TailPolicy};
 pub use resolve::{resolve_init, Resolved};
 
 use crate::backend::{create_backend, Backend, DeviceBatch};
-use crate::batching::BatchStream;
+use crate::batching::{BatchStream, EpochSpec};
 use crate::checkpoint::Codec;
 use crate::config::RunConfig;
 use crate::coordinator::{StepRecord, Trainer, TrainSummary};
 use crate::data::{self, TokenizedExample};
+use crate::data_source::{JsonlSource, SourceStats};
 use anyhow::{bail, Result};
 use std::fmt;
 use std::path::Path;
@@ -231,12 +232,18 @@ impl BackendSpec {
 
 /// A pluggable source of tokenized training examples. Implement this to
 /// feed real datasets through the session pipeline; the synthetic corpus
-/// is the built-in implementation.
+/// and the file-backed [`JsonlSource`] are the built-in implementations.
 pub trait ExampleSource {
     /// Human-readable label for logs and reports.
     fn label(&self) -> String;
     /// Produce tokenized examples with every token id `< vocab_cap`.
     fn examples(&self, vocab_cap: usize) -> Result<Vec<TokenizedExample>>;
+    /// Accounting from the last [`ExampleSource::examples`] call
+    /// (malformed / truncated records). Defaults to all-zeros for sources
+    /// that cannot fail per record.
+    fn stats(&self) -> SourceStats {
+        SourceStats::default()
+    }
 }
 
 /// Where training data comes from.
@@ -245,7 +252,29 @@ pub enum DataSource {
     /// The built-in synthetic instruction corpus (the paper's
     /// Alpaca-shaped substitute, DESIGN.md §2): `examples` examples from
     /// `seed`, each truncated to `max_seq` tokens.
-    Synthetic { examples: usize, seed: u64, max_seq: usize },
+    Synthetic {
+        /// Number of generated examples.
+        examples: usize,
+        /// Corpus-generation seed.
+        seed: u64,
+        /// Token cap per example (longer examples are truncated).
+        max_seq: usize,
+    },
+    /// A file-backed instruction-tuning JSONL corpus
+    /// (`{"prompt", "completion"}` records with a `{"text"}` fallback),
+    /// streamed and tokenized by the byte-level mini-BPE
+    /// ([`crate::data_source`], DESIGN.md §8).
+    Jsonl {
+        /// Path to the `.jsonl` corpus file.
+        file: String,
+        /// Optional tokenizer vocab file: loaded when present, learned
+        /// from the corpus and written there when absent.
+        vocab_file: Option<String>,
+        /// Tokenizer-learning seed (merge tie-breaks).
+        seed: u64,
+        /// Token cap per example (longer records are truncated + counted).
+        max_seq: usize,
+    },
     /// Any external source behind the [`ExampleSource`] trait.
     Custom(Rc<dyn ExampleSource>),
 }
@@ -255,13 +284,47 @@ impl DataSource {
         DataSource::Synthetic { examples, seed, max_seq }
     }
 
-    /// Materialize the tokenized example set.
-    pub fn tokenized(&self, vocab_cap: usize) -> Result<Vec<TokenizedExample>> {
+    /// A file-backed JSONL corpus with an in-memory (re-learned per run,
+    /// still deterministic) tokenizer. Set the `vocab_file` field on
+    /// [`DataSource::Jsonl`] to persist the vocabulary.
+    ///
+    /// ```
+    /// use chronicals::session::{DataSource, SessionBuilder};
+    ///
+    /// let path = std::env::temp_dir().join("chronicals_ds_doc.jsonl");
+    /// std::fs::write(&path, "{\"text\": \"tokens stream into packed bins\"}\n")?;
+    /// let mut session = SessionBuilder::new()
+    ///     .steps(1)
+    ///     .lr(5e-3)
+    ///     .data(DataSource::jsonl(path.to_str().unwrap(), 7, 64))
+    ///     .build()?;
+    /// let report = session.run()?;
+    /// assert_eq!(report.examples, 1);
+    /// # std::fs::remove_file(&path).ok();
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn jsonl(file: impl Into<String>, seed: u64, max_seq: usize) -> DataSource {
+        DataSource::Jsonl { file: file.into(), vocab_file: None, seed, max_seq }
+    }
+
+    /// Materialize the tokenized example set plus the source's
+    /// malformed/truncated accounting.
+    pub fn tokenized(&self, vocab_cap: usize) -> Result<(Vec<TokenizedExample>, SourceStats)> {
         match self {
-            DataSource::Synthetic { examples, seed, max_seq } => {
-                Ok(data::build_corpus(*examples, *seed, vocab_cap, *max_seq).1)
+            DataSource::Synthetic { examples, seed, max_seq } => Ok((
+                data::build_corpus(*examples, *seed, vocab_cap, *max_seq).1,
+                SourceStats::default(),
+            )),
+            DataSource::Jsonl { file, vocab_file, seed, max_seq } => {
+                let mut src = JsonlSource::new(file, *seed, *max_seq);
+                if let Some(vf) = vocab_file {
+                    src = src.with_vocab_file(vf);
+                }
+                let exs = src.examples(vocab_cap)?;
+                let stats = src.stats();
+                Ok((exs, stats))
             }
-            DataSource::Custom(src) => src.examples(vocab_cap),
+            DataSource::Custom(src) => Ok((src.examples(vocab_cap)?, src.stats())),
         }
     }
 
@@ -270,6 +333,7 @@ impl DataSource {
             DataSource::Synthetic { examples, seed, max_seq } => {
                 format!("synthetic({examples} examples, seed {seed}, max_seq {max_seq})")
             }
+            DataSource::Jsonl { file, .. } => format!("jsonl({file})"),
             DataSource::Custom(src) => src.label(),
         }
     }
@@ -288,10 +352,33 @@ impl PartialEq for DataSource {
                 DataSource::Synthetic { examples: a, seed: b, max_seq: c },
                 DataSource::Synthetic { examples: x, seed: y, max_seq: z },
             ) => a == x && b == y && c == z,
+            (
+                DataSource::Jsonl { file: a, vocab_file: b, seed: c, max_seq: d },
+                DataSource::Jsonl { file: w, vocab_file: x, seed: y, max_seq: z },
+            ) => a == w && b == x && c == y && d == z,
             (DataSource::Custom(a), DataSource::Custom(b)) => Rc::ptr_eq(a, b),
             _ => false,
         }
     }
+}
+
+/// How the run walks the data: how many passes it makes over the packing
+/// plan and whether each pass reorders it. The default (`shuffle: None`,
+/// `epochs: None`) is bit-for-bit the legacy behavior: plan order, run
+/// exactly `steps` steps, cycling staged batches once the plan is
+/// exhausted.
+///
+/// Shuffling permutes the *plan* (the order packed bins enter batches) —
+/// examples are tokenized and packed exactly once, never re-tokenized, and
+/// every epoch carries the same token multiset (DESIGN.md §8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct EpochPolicy {
+    /// Deterministic per-epoch plan shuffle seed; `None` keeps plan order.
+    pub shuffle: Option<u64>,
+    /// `Some(n)`: run exactly `n` passes over the data — the run length
+    /// becomes `n × batches-per-epoch` and the lr schedule spans it
+    /// (`steps` is ignored). `None`: cycle to `steps`.
+    pub epochs: Option<u64>,
 }
 
 /// The validated, typed description of one training run. Built by
@@ -303,6 +390,8 @@ pub struct SessionSpec {
     pub schedule: Schedule,
     pub packing: PackingStrategy,
     pub data: DataSource,
+    /// Shuffle/epoch policy for the batch plan (default: legacy cycling).
+    pub epoch_policy: EpochPolicy,
     pub backend: BackendSpec,
     pub steps: u64,
     /// Throughput-meter warmup steps excluded from tokens/sec.
@@ -346,13 +435,27 @@ impl SessionSpec {
             }
             _ => {}
         }
-        if let DataSource::Synthetic { examples, max_seq, .. } = &self.data {
-            if *examples == 0 {
-                bail!("synthetic data source needs at least one example");
+        match &self.data {
+            DataSource::Synthetic { examples, max_seq, .. } => {
+                if *examples == 0 {
+                    bail!("synthetic data source needs at least one example");
+                }
+                if *max_seq == 0 {
+                    bail!("synthetic data source needs max_seq > 0");
+                }
             }
-            if *max_seq == 0 {
-                bail!("synthetic data source needs max_seq > 0");
+            DataSource::Jsonl { file, max_seq, .. } => {
+                if file.is_empty() {
+                    bail!("jsonl data source needs a file path");
+                }
+                if *max_seq == 0 {
+                    bail!("jsonl data source needs max_seq > 0");
+                }
             }
+            DataSource::Custom(_) => {}
+        }
+        if self.epoch_policy.epochs == Some(0) {
+            bail!("epochs must be ≥ 1 (use epochs: None for step-count cycling)");
         }
         Ok(())
     }
@@ -375,15 +478,26 @@ impl SessionSpec {
         let packing = if cfg.packed { PackingStrategy::Bfd } else { PackingStrategy::Padded };
         let backend =
             BackendSpec::parse(&cfg.backend, &cfg.artifacts_dir, cfg.effective_threads())?;
+        let data = if cfg.data_file.is_empty() {
+            DataSource::Synthetic {
+                examples: cfg.corpus_examples,
+                seed: cfg.seed,
+                max_seq: cfg.max_seq,
+            }
+        } else {
+            DataSource::Jsonl {
+                file: cfg.data_file.clone(),
+                vocab_file: (!cfg.tokenizer_file.is_empty()).then(|| cfg.tokenizer_file.clone()),
+                seed: cfg.seed,
+                max_seq: cfg.max_seq,
+            }
+        };
         let spec = SessionSpec {
             task,
             schedule,
             packing,
-            data: DataSource::Synthetic {
-                examples: cfg.corpus_examples,
-                seed: cfg.seed,
-                max_seq: cfg.max_seq,
-            },
+            data,
+            epoch_policy: EpochPolicy { shuffle: cfg.shuffle_seed, epochs: cfg.epochs },
             backend,
             steps: cfg.steps,
             meter_warmup: cfg.warmup_steps,
@@ -410,6 +524,7 @@ pub struct SessionBuilder {
     schedule: Schedule,
     packing: PackingStrategy,
     data: Option<DataSource>,
+    epoch_policy: EpochPolicy,
     backend_spec: BackendSpec,
     backend: Option<Rc<dyn Backend>>,
     steps: u64,
@@ -432,6 +547,7 @@ impl SessionBuilder {
             schedule: Schedule::Constant,
             packing: PackingStrategy::Bfd,
             data: None,
+            epoch_policy: EpochPolicy::default(),
             backend_spec: BackendSpec::Cpu,
             backend: None,
             steps: 50,
@@ -459,6 +575,57 @@ impl SessionBuilder {
 
     pub fn data(mut self, data: DataSource) -> Self {
         self.data = Some(data);
+        self
+    }
+
+    /// Shuffle the packing plan deterministically each epoch (a *plan*
+    /// permutation: nothing is re-tokenized, every epoch carries the same
+    /// token multiset — see [`EpochPolicy`]).
+    ///
+    /// ```
+    /// use chronicals::session::{DataSource, SessionBuilder};
+    ///
+    /// let mut session = SessionBuilder::new()
+    ///     .steps(4)
+    ///     .lr(5e-3)
+    ///     .data(DataSource::synthetic(64, 42, 48))
+    ///     .shuffle_seed(7) // deterministic: same seed ⇒ same batch order
+    ///     .build()?;
+    /// assert_eq!(session.run()?.summary.steps, 4);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn shuffle_seed(mut self, seed: u64) -> Self {
+        self.epoch_policy.shuffle = Some(seed);
+        self
+    }
+
+    /// Run exactly `n` passes over the data instead of cycling to
+    /// [`SessionBuilder::steps`]: the run length becomes
+    /// `n × batches-per-epoch` and the lr schedule spans it.
+    ///
+    /// ```
+    /// use chronicals::session::{DataSource, SessionBuilder};
+    ///
+    /// let mut session = SessionBuilder::new()
+    ///     .lr(5e-3)
+    ///     .data(DataSource::synthetic(32, 42, 48))
+    ///     .epochs(2)
+    ///     .shuffle_seed(11)
+    ///     .build()?;
+    /// let report = session.run()?;
+    /// assert_eq!(report.epochs, 2);
+    /// // two identical passes' worth of steps, derived from the plan
+    /// assert_eq!(report.summary.steps as usize, report.batches_planned);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn epochs(mut self, n: u64) -> Self {
+        self.epoch_policy.epochs = Some(n);
+        self
+    }
+
+    /// Set the whole shuffle/epoch policy at once.
+    pub fn epoch_policy(mut self, policy: EpochPolicy) -> Self {
+        self.epoch_policy = policy;
         self
     }
 
@@ -526,6 +693,7 @@ impl SessionBuilder {
             schedule: self.schedule,
             packing: self.packing,
             data,
+            epoch_policy: self.epoch_policy,
             backend: self.backend_spec,
             steps: self.steps,
             meter_warmup: self.meter_warmup,
@@ -559,14 +727,34 @@ pub struct RunReport {
     /// capacity `S` (paper Alg. 16 "skip oversized"). Zero for `Padded`
     /// (it truncates instead).
     pub oversized_dropped: usize,
-    /// Distinct batches staged on the backend (≤ steps; the stream cycles
-    /// over staged batches when the corpus is shorter than the run).
+    /// Batches staged on the backend. In cycle mode this is the distinct
+    /// batch count (≤ steps; staged batches are reused when the corpus is
+    /// shorter than the run); in epoch mode every emitted batch is staged
+    /// (shuffling can change batch composition per epoch).
     pub batches_staged: usize,
-    /// Batches the packing plan produced in total.
+    /// Batches the plan emits in total, across every epoch.
     pub batches_planned: usize,
-    /// Whether the final planned batch carries empty padding rows (the
+    /// Whether each epoch's final batch carries empty padding rows (the
     /// partial tail is padded, not dropped — no example is lost).
     pub tail_padded: bool,
+    /// Data passes the run made (1 in legacy cycle mode).
+    pub epochs: u64,
+    /// Records the data source skipped as malformed (JSON syntax or schema
+    /// errors; `file:line` details in [`RunReport::source_notes`]). Always
+    /// zero for the synthetic corpus.
+    pub malformed_skipped: usize,
+    /// Records the data source truncated to its `max_seq` token cap.
+    pub truncated: usize,
+    /// First few per-record diagnostics from the data source.
+    pub source_notes: Vec<String>,
+    /// Fraction of `[B, S]` slots holding real tokens across one epoch of
+    /// the plan (paper Fig. 18's packing efficiency, tail padding
+    /// included).
+    pub packed_density: f64,
+    /// Fraction of the padded baseline's padding waste that packing
+    /// recovered: 0 for `Padded`, 0.6–0.75 is the paper's BFD claim on
+    /// Alpaca-shaped length distributions (Prop. 14).
+    pub padding_recovery: f64,
 }
 
 /// A built, runnable training session: backend + resolved executables +
@@ -618,19 +806,47 @@ impl Session {
         self.trainer.save_checkpoint(path, codec)
     }
 
-    /// Run the configured number of steps: tokenize → pack → stream
-    /// batches lazily, staging each distinct batch on the backend once and
-    /// cycling over staged batches when the stream is exhausted. The tail
-    /// batch is padded, never dropped ([`TailPolicy::Pad`]).
+    /// Run the session: tokenize → pack → stream batches lazily under the
+    /// [`EpochPolicy`]. In cycle mode (the default) each distinct batch is
+    /// staged on the backend once and staged batches are cycled when the
+    /// stream is exhausted; in epoch mode the stream emits exactly
+    /// `epochs` (optionally shuffled) passes over the plan and the run
+    /// length follows the data. The tail batch is padded, never dropped
+    /// ([`TailPolicy::Pad`]).
     pub fn run(&mut self) -> Result<RunReport> {
         let exe = &self.resolved.spec;
         // vocab cap = the model's vocab so token ids stay in range
         let vocab = exe.model_config.vocab.max(64);
         let (batch, seq) = (exe.batch, exe.seq);
-        let examples = self.spec.data.tokenized(vocab)?;
+        let (examples, source) = self.spec.data.tokenized(vocab)?;
         let n_examples = examples.len();
-        let mut stream =
-            BatchStream::new(examples, self.spec.packing, batch, seq, TailPolicy::Pad);
+        // padded-baseline accounting (one row per example) for the
+        // padding-recovery report — over the example set the plan actually
+        // packs: packing strategies skip oversized examples, the padded
+        // layout truncates them, so the baseline must match or the two
+        // waste figures would cover different corpora
+        let (padded_rows, padded_tokens) = {
+            let lens = examples.iter().map(|e| e.len());
+            match self.spec.packing {
+                PackingStrategy::Padded => {
+                    (n_examples, lens.map(|l| l.min(seq)).sum::<usize>())
+                }
+                _ => {
+                    let packable: Vec<usize> = lens.filter(|&l| l <= seq).collect();
+                    (packable.len(), packable.iter().sum::<usize>())
+                }
+            }
+        };
+        let policy = self.spec.epoch_policy;
+        let epochs = policy.epochs.unwrap_or(1);
+        let mut stream = BatchStream::with_epochs(
+            examples,
+            self.spec.packing,
+            batch,
+            seq,
+            TailPolicy::Pad,
+            EpochSpec { shuffle: policy.shuffle, epochs },
+        );
         if stream.n_batches() == 0 {
             bail!(
                 "no batches for '{}' (B={batch}, S={seq}, {n_examples} examples from {})",
@@ -639,30 +855,95 @@ impl Session {
             );
         }
         let batches_planned = stream.n_batches();
+        let per_epoch = stream.batches_per_epoch();
         let oversized_dropped = stream.oversized_dropped();
         let tail_padded = stream.tail_padded();
+        // plan-level density + recovery (shuffling permutes the plan, so
+        // both are identical for every epoch)
+        let packed_tokens = stream.planned_tokens();
+        let packed_density = packed_tokens as f64 / (per_epoch * batch * seq) as f64;
+        let padding_recovery = if padded_rows == 0 {
+            0.0
+        } else {
+            let waste_padded = 1.0 - padded_tokens as f64 / (padded_rows * seq) as f64;
+            let waste_packed = 1.0 - packed_tokens as f64 / (stream.n_bins() * seq) as f64;
+            if waste_padded <= 0.0 {
+                0.0
+            } else {
+                ((waste_padded - waste_packed) / waste_padded).clamp(0.0, 1.0)
+            }
+        };
 
         let mut staged: Vec<DeviceBatch> = Vec::new();
-        for i in 0..self.spec.steps {
-            match stream.next() {
-                Some(b) => {
-                    staged.push(self.trainer.upload_batch(&b)?);
-                    let ub = staged.last().expect("just pushed");
-                    self.trainer.step_uploaded(ub)?;
-                }
-                None => {
-                    let idx = (i % staged.len() as u64) as usize;
-                    self.trainer.step_uploaded(&staged[idx])?;
+        let batches_staged;
+        if policy.epochs.is_some() {
+            // epoch mode: the run length follows the data, so rebuild the
+            // lr schedule to span it before the first step
+            let total = batches_planned as u64;
+            if let Schedule::WarmupCosine { warmup } = self.spec.schedule {
+                if warmup >= total {
+                    bail!(
+                        "lr warmup ({warmup} steps) must be shorter than the epoch run \
+                         ({total} steps = {epochs} epochs × {per_epoch} batches)"
+                    );
                 }
             }
+            self.trainer.set_schedule(self.spec.schedule.lr_schedule(
+                self.spec.lr,
+                total,
+                self.resolved.lora_plus_ratio,
+            ));
+            if policy.shuffle.is_none() {
+                // unshuffled epochs are bitwise-identical passes: stage one
+                // epoch and replay it, exactly like the cycle path
+                for b in stream.by_ref().take(per_epoch) {
+                    staged.push(self.trainer.upload_batch(&b)?);
+                }
+                for i in 0..total {
+                    let idx = (i % per_epoch as u64) as usize;
+                    self.trainer.step_uploaded(&staged[idx])?;
+                }
+                batches_staged = staged.len();
+            } else {
+                // every emitted batch is staged: under a shuffle seed the
+                // batch composition itself changes per epoch
+                let mut uploads = 0usize;
+                for b in stream {
+                    let ub = self.trainer.upload_batch(&b)?;
+                    uploads += 1;
+                    self.trainer.step_uploaded(&ub)?;
+                }
+                batches_staged = uploads;
+            }
+        } else {
+            for i in 0..self.spec.steps {
+                match stream.next() {
+                    Some(b) => {
+                        staged.push(self.trainer.upload_batch(&b)?);
+                        let ub = staged.last().expect("just pushed");
+                        self.trainer.step_uploaded(ub)?;
+                    }
+                    None => {
+                        let idx = (i % staged.len() as u64) as usize;
+                        self.trainer.step_uploaded(&staged[idx])?;
+                    }
+                }
+            }
+            batches_staged = staged.len();
         }
         Ok(RunReport {
             summary: self.trainer.summary(),
             examples: n_examples,
             oversized_dropped,
-            batches_staged: staged.len(),
+            batches_staged,
             batches_planned,
             tail_padded,
+            epochs,
+            malformed_skipped: source.malformed,
+            truncated: source.truncated,
+            source_notes: source.notes,
+            packed_density,
+            padding_recovery,
         })
     }
 }
@@ -725,6 +1006,35 @@ mod tests {
     fn nonpositive_ratio_rejected() {
         let err = SessionBuilder::new().task(Task::lora_plus(0.0)).build_spec().unwrap_err();
         assert!(err.to_string().contains("positive"), "{err}");
+    }
+
+    #[test]
+    fn zero_epochs_rejected() {
+        let err = SessionBuilder::new().epochs(0).build_spec().unwrap_err();
+        assert!(err.to_string().contains("epochs"), "{err}");
+    }
+
+    #[test]
+    fn builder_composes_epoch_policy() {
+        let spec = SessionBuilder::new().shuffle_seed(7).epochs(2).build_spec().unwrap();
+        assert_eq!(spec.epoch_policy, EpochPolicy { shuffle: Some(7), epochs: Some(2) });
+        // default stays bitwise-legacy
+        let d = SessionBuilder::new().build_spec().unwrap();
+        assert_eq!(d.epoch_policy, EpochPolicy::default());
+    }
+
+    #[test]
+    fn jsonl_source_validation() {
+        let err = SessionBuilder::new()
+            .data(DataSource::jsonl("", 1, 64))
+            .build_spec()
+            .unwrap_err();
+        assert!(err.to_string().contains("file path"), "{err}");
+        let err = SessionBuilder::new()
+            .data(DataSource::jsonl("x.jsonl", 1, 0))
+            .build_spec()
+            .unwrap_err();
+        assert!(err.to_string().contains("max_seq"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,139 @@
+//! Golden-file test for the file-backed data pipeline (ISSUE 5).
+//!
+//! Tokenizes the checked-in `data/sample.jsonl` with a fixed seed and pins
+//! the learned vocabulary shape, the first example's exact token ids, the
+//! source accounting (malformed / truncated) and the BFD plan accounting
+//! (bins, oversized drops, packed tokens → density / padding recovery).
+//!
+//! Any change to the tokenizer's learning order, tie-breaking, chunking or
+//! encoding — or to the packing plan — trips these assertions LOUDLY. If
+//! the change is intentional, rerun the suite and copy the printed actual
+//! values over the constants below (they are all printed on failure).
+
+use chronicals::batching::{BatchStream, PackingStrategy, TailPolicy};
+use chronicals::data_source::{ByteBpe, JsonlSource, Tokenizer};
+use chronicals::session::ExampleSource;
+use std::path::PathBuf;
+
+/// The golden parameters: seed 7, model vocab cap 64, source token cap 96,
+/// reference geometry B=4 / S=64.
+const SEED: u64 = 7;
+const VOCAB_CAP: usize = 64;
+const MAX_SEQ: usize = 96;
+const B: usize = 4;
+const S: usize = 64;
+
+/// Pinned: corpus shape.
+const N_EXAMPLES: usize = 40;
+const N_MALFORMED: usize = 2;
+const N_TRUNCATED: usize = 2;
+/// Pinned: learned vocabulary (4 specials + 29-byte alphabet + 31 merges).
+const VOCAB_SIZE: usize = 64;
+const N_MERGES: usize = 31;
+/// Pinned: the exact token ids of the first record,
+/// `{"prompt": "explain packing .", "completion": "bins share rows ."}`.
+const EX0_TOKENS: &[i32] = &[
+    2, 5, 29, 14, 16, 8, 34, 39, 60, 26, 37, 33, 3, 2, 22, 34, 7, 41, 13, 8, 40, 4, 57, 23, 7,
+    33, 3,
+];
+/// Pinned: the first record's prompt occupies 13 tokens, so 14 of its 27
+/// positions are supervised.
+const EX0_REAL_TARGETS: usize = 14;
+/// Pinned: BFD plan at row capacity 64.
+const N_BINS: usize = 28;
+const N_OVERSIZED: usize = 3;
+const PLANNED_TOKENS: usize = 1489;
+const BATCHES_PER_EPOCH: usize = 7;
+/// Pinned: Σ len over the packable (len ≤ S) examples — the
+/// padded-baseline numerator. Oversized examples are excluded from the
+/// baseline exactly as the packing plan excludes them, so both waste
+/// figures cover the same 37-example corpus.
+const PADDED_TOKENS: usize = 1489;
+const PADDED_ROWS: usize = N_EXAMPLES - N_OVERSIZED;
+
+fn sample_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../data/sample.jsonl")
+}
+
+#[test]
+fn golden_tokenization_and_accounting() {
+    let src = JsonlSource::new(sample_path(), SEED, MAX_SEQ);
+    let exs = src.examples(VOCAB_CAP).unwrap();
+    let stats = src.stats();
+
+    println!("examples: {}", exs.len());
+    println!("malformed: {} truncated: {}", stats.malformed, stats.truncated);
+    println!("ex0 tokens: {:?}", exs[0].tokens);
+    println!("ex0 real_targets: {}", exs[0].real_targets());
+    println!("lengths: {:?}", exs.iter().map(|e| e.len()).collect::<Vec<_>>());
+
+    assert_eq!(exs.len(), N_EXAMPLES);
+    assert_eq!(stats.malformed, N_MALFORMED);
+    assert_eq!(stats.truncated, N_TRUNCATED);
+    assert_eq!(exs[0].tokens, EX0_TOKENS, "tokenizer output changed — see module docs");
+    assert_eq!(exs[0].real_targets(), EX0_REAL_TARGETS);
+    // the two malformed lines carry file:line diagnostics
+    assert_eq!(stats.notes.len(), N_MALFORMED, "{:?}", stats.notes);
+    assert!(stats.notes[0].contains("sample.jsonl:11:"), "{:?}", stats.notes);
+    assert!(stats.notes[1].contains("sample.jsonl:22:"), "{:?}", stats.notes);
+    // every id respects the model vocab cap
+    for ex in &exs {
+        for &t in &ex.tokens {
+            assert!((0..VOCAB_CAP as i32).contains(&t), "token {t} out of range");
+        }
+        assert!(ex.len() <= MAX_SEQ);
+    }
+
+    // the learned vocabulary itself, via the persistence path
+    let vocab_path = std::env::temp_dir().join("chronicals_golden.vocab");
+    std::fs::remove_file(&vocab_path).ok();
+    let persisted = JsonlSource::new(sample_path(), SEED, MAX_SEQ).with_vocab_file(&vocab_path);
+    let exs2 = persisted.examples(VOCAB_CAP).unwrap();
+    let tok = ByteBpe::load(&vocab_path).unwrap();
+    std::fs::remove_file(&vocab_path).ok();
+    println!("vocab: {} merges: {}", tok.vocab_size(), tok.n_merges());
+    assert_eq!(tok.vocab_size(), VOCAB_SIZE);
+    assert_eq!(tok.n_merges(), N_MERGES);
+    assert_eq!(tok.seed(), SEED);
+    // persisting the vocab must not change tokenization
+    for (a, b) in exs.iter().zip(&exs2) {
+        assert_eq!(a.tokens, b.tokens);
+    }
+}
+
+#[test]
+fn golden_packing_plan() {
+    let src = JsonlSource::new(sample_path(), SEED, MAX_SEQ);
+    let exs = src.examples(VOCAB_CAP).unwrap();
+    let packable: Vec<usize> =
+        exs.iter().map(|e| e.len()).filter(|&l| l <= S).collect();
+    let padded_tokens: usize = packable.iter().sum();
+    let stream = BatchStream::new(exs, PackingStrategy::Bfd, B, S, TailPolicy::Pad);
+
+    println!(
+        "bins: {} oversized: {} planned: {} batches: {} padded_tokens: {padded_tokens}",
+        stream.n_bins(),
+        stream.oversized_dropped(),
+        stream.planned_tokens(),
+        stream.n_batches(),
+    );
+
+    assert_eq!(stream.n_bins(), N_BINS);
+    assert_eq!(stream.oversized_dropped(), N_OVERSIZED);
+    assert_eq!(stream.planned_tokens(), PLANNED_TOKENS);
+    assert_eq!(stream.n_batches(), BATCHES_PER_EPOCH);
+    assert_eq!(packable.len(), PADDED_ROWS);
+    assert_eq!(padded_tokens, PADDED_TOKENS);
+    // 28 bins divide evenly into 7 batches of 4 — no padded tail
+    assert!(!stream.tail_padded());
+
+    // density / padding recovery exactly as Session::run derives them
+    let density = PLANNED_TOKENS as f64 / (BATCHES_PER_EPOCH * B * S) as f64;
+    let waste_padded = 1.0 - PADDED_TOKENS as f64 / (PADDED_ROWS * S) as f64;
+    let waste_packed = 1.0 - PLANNED_TOKENS as f64 / (N_BINS * S) as f64;
+    let recovery = (waste_padded - waste_packed) / waste_padded;
+    println!("density: {density:.6} recovery: {recovery:.6}");
+    assert!((density - 0.830915).abs() < 1e-4, "density {density}");
+    assert!((recovery - 0.544490).abs() < 1e-4, "recovery {recovery}");
+    assert!(recovery > 0.0, "the sample corpus must show real padding recovery");
+}

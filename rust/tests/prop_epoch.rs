@@ -1,0 +1,204 @@
+//! Property tests for the shuffle/epoch policy (ISSUE 5):
+//!
+//! * for any example set, every shuffled epoch carries exactly the same
+//!   token multiset as the unshuffled plan — shuffling is a plan
+//!   permutation, it can neither lose nor duplicate an example;
+//! * `shuffle: None` is bitwise identical to the legacy single-pass
+//!   stream, for every packing strategy;
+//! * epoch-mode sessions derive their run length from the data and are
+//!   bitwise reproducible.
+
+use chronicals::backend::cpu::CpuBackend;
+use chronicals::backend::Backend;
+use chronicals::batching::{Batch, BatchStream, EpochSpec, PackingStrategy, TailPolicy};
+use chronicals::data::TokenizedExample;
+use chronicals::harness;
+use chronicals::session::{DataSource, EpochPolicy, SessionBuilder, Task};
+use chronicals::util::rng::Rng;
+use std::rc::Rc;
+
+fn cpu() -> Rc<dyn Backend> {
+    Rc::new(CpuBackend::new())
+}
+
+/// Random example set with lengths bounded by `max_len` (so nothing is
+/// oversized at the stream's row capacity).
+fn random_examples(seed: u64, n: usize, max_len: usize) -> Vec<TokenizedExample> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = rng.range(1, max_len + 1);
+            let tokens: Vec<i32> = (0..len).map(|_| rng.range(4, 64) as i32).collect();
+            let mut targets: Vec<i32> = tokens.iter().skip(1).copied().collect();
+            targets.push(-1);
+            TokenizedExample { tokens, targets }
+        })
+        .collect()
+}
+
+/// All real (segment ≠ 0) token ids a batch carries.
+fn real_tokens_of(b: &Batch) -> Vec<i32> {
+    let toks = b.tokens.as_i32().unwrap();
+    let segs = b.seg_ids.as_i32().unwrap();
+    toks.iter().zip(segs).filter(|(_, &s)| s != 0).map(|(&t, _)| t).collect()
+}
+
+#[test]
+fn shuffled_epoch_token_multiset_equals_unshuffled() {
+    for (case, (seed, n, batch, seq)) in
+        [(1u64, 7usize, 2usize, 16usize), (2, 40, 4, 32), (3, 93, 3, 24), (4, 256, 4, 48)]
+            .into_iter()
+            .enumerate()
+    {
+        for strategy in [
+            PackingStrategy::Bfd,
+            PackingStrategy::Ffd,
+            PackingStrategy::NextFit,
+            PackingStrategy::Padded,
+        ] {
+            let exs = random_examples(seed, n, seq - 1);
+            let mut expected: Vec<i32> = exs.iter().flat_map(|e| e.tokens.clone()).collect();
+            expected.sort_unstable();
+
+            let epochs = 3usize;
+            let per_epoch =
+                BatchStream::new(exs.clone(), strategy, batch, seq, TailPolicy::Pad)
+                    .n_batches();
+            let all: Vec<Batch> = BatchStream::with_epochs(
+                exs,
+                strategy,
+                batch,
+                seq,
+                TailPolicy::Pad,
+                EpochSpec { shuffle: Some(seed ^ 0xABCD), epochs: epochs as u64 },
+            )
+            .collect();
+            assert_eq!(all.len(), epochs * per_epoch, "case {case} {strategy:?}");
+            for e in 0..epochs {
+                let mut got: Vec<i32> = all[e * per_epoch..(e + 1) * per_epoch]
+                    .iter()
+                    .flat_map(real_tokens_of)
+                    .collect();
+                got.sort_unstable();
+                assert_eq!(
+                    got, expected,
+                    "case {case} {strategy:?} epoch {e}: an example was lost or duplicated"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn no_shuffle_is_bitwise_identical_to_legacy_for_every_strategy() {
+    // a real tokenized corpus, not synthetic ids
+    let (_tok, exs) = harness::build_corpus(128, 11, 64, 48);
+    for strategy in [
+        PackingStrategy::Bfd,
+        PackingStrategy::Ffd,
+        PackingStrategy::NextFit,
+        PackingStrategy::Padded,
+    ] {
+        for tail in [TailPolicy::Pad, TailPolicy::Drop] {
+            let legacy: Vec<Batch> =
+                BatchStream::new(exs.clone(), strategy, 4, 64, tail).collect();
+            let explicit: Vec<Batch> = BatchStream::with_epochs(
+                exs.clone(),
+                strategy,
+                4,
+                64,
+                tail,
+                EpochSpec { shuffle: None, epochs: 1 },
+            )
+            .collect();
+            assert_eq!(legacy.len(), explicit.len(), "{strategy:?} {tail:?}");
+            for (a, b) in legacy.iter().zip(&explicit) {
+                assert_eq!(a.tokens, b.tokens, "{strategy:?} {tail:?}");
+                assert_eq!(a.targets, b.targets);
+                assert_eq!(a.seg_ids, b.seg_ids);
+                assert_eq!(a.pos_ids, b.pos_ids);
+                assert_eq!(a.real_tokens, b.real_tokens);
+                assert_eq!(a.real_targets, b.real_targets);
+            }
+        }
+    }
+}
+
+#[test]
+fn default_policy_session_is_bitwise_stable_and_shuffle_changes_order_only() {
+    let run = |policy: EpochPolicy| {
+        let mut s = SessionBuilder::new()
+            .task(Task::FullFinetune)
+            .steps(10)
+            .lr(5e-3)
+            .seed(3)
+            .data(DataSource::synthetic(96, 3, 48))
+            .epoch_policy(policy)
+            .on_backend(cpu())
+            .build()
+            .unwrap();
+        s.run().unwrap()
+    };
+    let a = run(EpochPolicy::default());
+    let b = run(EpochPolicy::default());
+    assert_eq!(
+        a.summary.last_loss.to_bits(),
+        b.summary.last_loss.to_bits(),
+        "default policy must be deterministic"
+    );
+
+    let s1 = run(EpochPolicy { shuffle: Some(7), epochs: None });
+    let s2 = run(EpochPolicy { shuffle: Some(7), epochs: None });
+    assert_eq!(
+        s1.summary.last_loss.to_bits(),
+        s2.summary.last_loss.to_bits(),
+        "shuffled runs must be reproducible at a fixed seed"
+    );
+    // shuffling permutes the plan but cannot change what was planned
+    assert_eq!(a.examples, s1.examples);
+    assert_eq!(a.batches_planned, s1.batches_planned);
+    assert_eq!(a.oversized_dropped, s1.oversized_dropped);
+    assert_eq!(a.packed_density.to_bits(), s1.packed_density.to_bits());
+    assert_eq!(a.padding_recovery.to_bits(), s1.padding_recovery.to_bits());
+}
+
+#[test]
+fn epoch_mode_run_length_follows_the_data() {
+    let mut s = SessionBuilder::new()
+        .task(Task::FullFinetune)
+        .lr(5e-3)
+        .seed(5)
+        .data(DataSource::synthetic(64, 5, 48))
+        .epochs(2)
+        .shuffle_seed(9)
+        .on_backend(cpu())
+        .build()
+        .unwrap();
+    let report = s.run().unwrap();
+    assert_eq!(report.epochs, 2);
+    assert_eq!(report.summary.steps as usize, report.batches_planned);
+    assert_eq!(report.batches_planned % 2, 0, "two epochs emit an even batch total");
+    assert_eq!(report.batches_staged, report.batches_planned);
+    assert!(report.summary.verification.is_training);
+
+    // bitwise reproducible across two fresh sessions
+    let mut s2 = SessionBuilder::new()
+        .task(Task::FullFinetune)
+        .lr(5e-3)
+        .seed(5)
+        .data(DataSource::synthetic(64, 5, 48))
+        .epochs(2)
+        .shuffle_seed(9)
+        .on_backend(cpu())
+        .build()
+        .unwrap();
+    let report2 = s2.run().unwrap();
+    assert_eq!(
+        report.summary.last_loss.to_bits(),
+        report2.summary.last_loss.to_bits()
+    );
+    assert_eq!(
+        report.summary.verification.max_grad_norm.to_bits(),
+        report2.summary.verification.max_grad_norm.to_bits()
+    );
+}
