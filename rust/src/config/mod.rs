@@ -34,6 +34,11 @@ pub struct RunConfig {
     pub shuffle_seed: Option<u64>,
     /// Number of data passes; `None` = legacy cycle-to-`steps`.
     pub epochs: Option<u64>,
+    /// Held-out eval fraction in (0, 1); `None` = no eval split.
+    pub eval_fraction: Option<f64>,
+    /// Which token positions the loss supervises: "response-only"
+    /// (default) or "full". Empty = the default.
+    pub loss_mode: String,
     pub artifacts_dir: String,
     /// Execution backend: "cpu" (reference oracle), "cpu-fast" (threaded
     /// fused kernels) or "pjrt" (AOT artifacts, `--features pjrt`).
@@ -66,6 +71,8 @@ impl Default for RunConfig {
             tokenizer_file: String::new(),
             shuffle_seed: None,
             epochs: None,
+            eval_fraction: None,
+            loss_mode: String::new(),
             artifacts_dir: "artifacts".into(),
             backend: "cpu".into(),
             threads: 0,
@@ -132,6 +139,8 @@ impl RunConfig {
             tokenizer_file: doc.str_or("data.tokenizer", "").to_string(),
             shuffle_seed: opt_u64("data.shuffle_seed")?,
             epochs: opt_u64("data.epochs")?,
+            eval_fraction: doc.get("data.eval_fraction").and_then(|v| v.as_f64()),
+            loss_mode: doc.str_or("data.loss_mode", "").to_string(),
             artifacts_dir: doc.str_or("artifacts_dir", &d.artifacts_dir).to_string(),
             backend: doc.str_or("backend.name", &d.backend).to_string(),
             threads: doc.i64_or("backend.threads", d.threads as i64).max(0) as usize,
@@ -236,6 +245,16 @@ epochs = 2
         assert_eq!(c.tokenizer_file, "data/sample.vocab");
         assert_eq!(c.shuffle_seed, Some(7));
         assert_eq!(c.epochs, Some(2));
+        // eval/loss-mode keys parse and default to off
+        let e = RunConfig::from_toml(
+            "[data]\neval_fraction = 0.2\nloss_mode = \"full\"\n",
+        )
+        .unwrap();
+        assert_eq!(e.eval_fraction, Some(0.2));
+        assert_eq!(e.loss_mode, "full");
+        let d0 = RunConfig::from_toml("").unwrap();
+        assert_eq!(d0.eval_fraction, None);
+        assert!(d0.loss_mode.is_empty());
         // absent keys stay None/empty (legacy behavior)
         let d = RunConfig::from_toml("").unwrap();
         assert!(d.data_file.is_empty());

@@ -23,6 +23,11 @@ pub struct VerificationReport {
     pub max_grad_norm: f32,
     pub loss_changed: bool,
     pub trainable_fraction: f64,
+    /// Paper §9 guard: the run *ended* with a dead gradient — the final
+    /// step's norm was exactly 0.0 or NaN. A run can recover from early
+    /// zero-grad steps, but a dead final step means the parameters stopped
+    /// moving (frozen weights, a detached graph, or numeric blow-up).
+    pub final_step_grad_dead: bool,
     /// The verdict: throughput from this run is a valid training number.
     pub is_training: bool,
     pub failures: Vec<String>,
@@ -58,11 +63,23 @@ impl Verifier {
             trainable_params as f64 / expected_trainable as f64
         };
 
+        let final_step_grad_dead = self
+            .grad_norms
+            .last()
+            .is_some_and(|g| *g == 0.0 || g.is_nan());
+
         let mut failures = Vec::new();
         if zero_grad_steps > 0 {
             failures.push(format!(
                 "gradient norm was exactly 0.0 on {zero_grad_steps}/{} steps — model is NOT training (the Unsloth-bug signature)",
                 self.grad_norms.len()
+            ));
+        }
+        if final_step_grad_dead {
+            failures.push(format!(
+                "final-step gradient norm is {} — the run ended with dead gradients (§9 guard: \
+                 frozen weights, a detached graph, or numeric blow-up)",
+                self.grad_norms.last().copied().unwrap_or(f32::NAN)
             ));
         }
         if self.losses.len() >= 2 && !loss_changed {
@@ -81,6 +98,7 @@ impl Verifier {
             max_grad_norm: max_g,
             loss_changed,
             trainable_fraction,
+            final_step_grad_dead,
             is_training: failures.is_empty() && !self.losses.is_empty(),
             failures,
         }
@@ -143,5 +161,50 @@ mod tests {
     fn empty_run_not_verified() {
         let v = Verifier::default();
         assert!(!v.report(1, 1).is_training);
+    }
+
+    #[test]
+    fn final_step_zero_grad_flagged_even_after_healthy_steps() {
+        // early steps train fine, then the gradient dies on the last step —
+        // the per-step zero counter catches it, but the §9 guard names the
+        // specific failure shape
+        let mut v = Verifier::default();
+        for i in 0..9 {
+            v.observe(5.0 - i as f32 * 0.1, 0.5);
+        }
+        v.observe(4.1, 0.0);
+        let r = v.report(100, 100);
+        assert!(r.final_step_grad_dead);
+        assert!(!r.is_training);
+        assert!(r.failures.iter().any(|f| f.contains("final-step")), "{:?}", r.failures);
+    }
+
+    #[test]
+    fn final_step_nan_grad_flagged() {
+        let mut v = Verifier::default();
+        for i in 0..5 {
+            v.observe(5.0 - i as f32 * 0.1, 0.5);
+        }
+        v.observe(f32::NAN, f32::NAN);
+        let r = v.report(100, 100);
+        assert!(r.final_step_grad_dead);
+        assert!(!r.is_training);
+        // NaN is not == 0.0, so only the §9 guard catches it
+        assert_eq!(r.zero_grad_steps, 0);
+        assert!(r.failures.iter().any(|f| f.contains("NaN")), "{:?}", r.failures);
+    }
+
+    #[test]
+    fn recovered_early_zero_grad_does_not_set_the_final_step_flag() {
+        let mut v = Verifier::default();
+        v.observe(5.0, 0.0); // e.g. an all-masked warmup batch
+        for i in 0..5 {
+            v.observe(4.9 - i as f32 * 0.1, 0.5);
+        }
+        let r = v.report(100, 100);
+        assert!(!r.final_step_grad_dead, "healthy ending must not trip the §9 guard");
+        // …but the run still fails verification on the zero-grad step count
+        assert_eq!(r.zero_grad_steps, 1);
+        assert!(!r.is_training);
     }
 }

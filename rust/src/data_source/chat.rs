@@ -1,0 +1,356 @@
+//! Chat-transcript JSONL corpora: multi-turn conversations with role
+//! framing and per-turn loss masks (DESIGN.md §9).
+//!
+//! One JSON object per line, the conversational schema used by chat
+//! fine-tuning stacks:
+//!
+//! ```text
+//! {"messages": [{"role": "user", "content": "explain packing ."},
+//!               {"role": "assistant", "content": "bins share rows ."}]}
+//! ```
+//!
+//! Each turn is tokenized with `role: content` framing and its own
+//! `<bos>`/`<eos>` envelope; under [`LossMode::ResponseOnly`] (the
+//! default) only assistant turns are supervised — system and user tokens
+//! are loss-masked via the `targets: -1` convention, so both CPU backends
+//! honor the mask with no kernel changes. [`ChatSource`] streams plain
+//! `.jsonl` and gzip-compressed `.jsonl.gz` files through the same
+//! machinery as [`super::JsonlSource`] (file:line diagnostics, malformed
+//! counting, truncation accounting).
+//!
+//! ```
+//! use chronicals::data_source::ChatSource;
+//! use chronicals::session::ExampleSource;
+//!
+//! let path = std::env::temp_dir().join("chronicals_doc_chat.jsonl");
+//! std::fs::write(
+//!     &path,
+//!     "{\"messages\": [{\"role\": \"user\", \"content\": \"add two and two .\"}, \
+//!       {\"role\": \"assistant\", \"content\": \"four\"}]}\n",
+//! )?;
+//! let src = ChatSource::new(&path, 7, 64);
+//! let examples = src.examples(64)?;
+//! assert_eq!(examples.len(), 1);
+//! // the user turn is loss-masked, the assistant turn supervised
+//! assert_eq!(examples[0].targets[0], -1);
+//! assert!(examples[0].real_targets() > 0);
+//! # std::fs::remove_file(&path).ok();
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use super::jsonl::JsonlSource;
+use super::{LossMode, SourceStats, Tokenizer};
+use crate::data::TokenizedExample;
+use crate::session::ExampleSource;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::path::{Path, PathBuf};
+
+/// Who is speaking in a chat turn.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Instructions framing the conversation; never supervised under
+    /// [`LossMode::ResponseOnly`].
+    System,
+    /// The human side of the conversation.
+    User,
+    /// The model side — the only role supervised under
+    /// [`LossMode::ResponseOnly`].
+    Assistant,
+}
+
+impl Role {
+    /// Parse a schema role name.
+    pub fn parse(name: &str) -> Result<Role> {
+        Ok(match name {
+            "system" => Role::System,
+            "user" => Role::User,
+            "assistant" => Role::Assistant,
+            other => bail!("unknown role \"{other}\" (expected system | user | assistant)"),
+        })
+    }
+
+    /// The canonical schema name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Role::System => "system",
+            Role::User => "user",
+            Role::Assistant => "assistant",
+        }
+    }
+}
+
+/// One `{"role": …, "content": …}` message of a transcript.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChatTurn {
+    /// Who is speaking.
+    pub role: Role,
+    /// What they said.
+    pub content: String,
+}
+
+impl ChatTurn {
+    /// The exact text this turn tokenizes as: `role: content`. Exposed so
+    /// tokenizer learning feeds the same strings encoding will see (the
+    /// role prefix and `:` must be in the learned alphabet).
+    pub fn framed(&self) -> String {
+        format!("{}: {}", self.role.name(), self.content)
+    }
+}
+
+/// Parse the value of a `"messages"` key into turns; errors name the
+/// offending turn index.
+pub fn parse_messages(v: &Json) -> Result<Vec<ChatTurn>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("\"messages\" must be an array"))?;
+    if arr.is_empty() {
+        bail!("\"messages\" is empty");
+    }
+    let mut turns = Vec::with_capacity(arr.len());
+    for (i, item) in arr.iter().enumerate() {
+        let obj = item
+            .as_obj()
+            .ok_or_else(|| anyhow!("messages[{i}] is not an object"))?;
+        let role = obj
+            .get("role")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("messages[{i}] has no string \"role\""))?;
+        let content = obj
+            .get("content")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("messages[{i}] has no string \"content\""))?;
+        turns.push(ChatTurn {
+            role: Role::parse(role).map_err(|e| anyhow!("messages[{i}]: {e}"))?,
+            content: content.to_string(),
+        });
+    }
+    Ok(turns)
+}
+
+/// Tokenize a transcript: each turn is encoded as its [`ChatTurn::framed`]
+/// text (with `<bos>`/`<eos>` framing per turn, like the pair recipe), and
+/// the per-turn target masks follow `mode` — [`LossMode::ResponseOnly`]
+/// supervises exactly the positions that predict assistant-turn tokens,
+/// [`LossMode::Full`] supervises every next-token position. Returns the
+/// example and whether it was truncated to `max_len` tokens (truncation
+/// re-masks the dangling boundary, so no position predicts a dropped
+/// token).
+pub fn tokenize_chat(
+    tok: &dyn Tokenizer,
+    turns: &[ChatTurn],
+    max_len: usize,
+    mode: LossMode,
+) -> (TokenizedExample, bool) {
+    let mut tokens: Vec<i32> = Vec::new();
+    // (start, end) token span of each turn, plus whether it is supervised
+    let mut spans: Vec<(usize, usize, bool)> = Vec::with_capacity(turns.len());
+    for turn in turns {
+        let start = tokens.len();
+        tokens.extend(tok.encode(&turn.framed()));
+        let supervised = match mode {
+            LossMode::Full => true,
+            LossMode::ResponseOnly => turn.role == Role::Assistant,
+        };
+        spans.push((start, tokens.len(), supervised));
+    }
+    let truncated = tokens.len() > max_len;
+    tokens.truncate(max_len);
+    let mut targets = vec![-1i32; tokens.len()];
+    for (start, end, supervised) in spans {
+        if !supervised {
+            continue;
+        }
+        // supervise predictions OF tokens[start..end]: positions
+        // start-1 ..= end-2, clamped for the first turn and truncation
+        let lo = start.saturating_sub(1);
+        let hi = end.min(tokens.len()).saturating_sub(1);
+        for i in lo..hi {
+            targets[i] = tokens[i + 1];
+        }
+    }
+    (TokenizedExample { tokens, targets }, truncated)
+}
+
+/// A file-backed [`ExampleSource`] for chat-transcript corpora: exactly
+/// [`super::JsonlSource`]'s streaming, diagnostics and tokenizer handling,
+/// but every record must be a `{"messages": …}` transcript — pair/text
+/// records are counted as malformed, so a mis-pointed corpus is loud.
+pub struct ChatSource {
+    inner: JsonlSource,
+}
+
+impl ChatSource {
+    /// Describe a chat corpus (`.jsonl` or `.jsonl.gz`). Nothing is read
+    /// until [`ExampleSource::examples`] is called.
+    pub fn new(path: impl Into<PathBuf>, seed: u64, max_seq: usize) -> ChatSource {
+        ChatSource { inner: JsonlSource::new(path, seed, max_seq).chat_only() }
+    }
+
+    /// Persist the tokenizer vocab (see [`JsonlSource::with_vocab_file`]).
+    pub fn with_vocab_file(mut self, path: impl Into<PathBuf>) -> ChatSource {
+        self.inner = self.inner.with_vocab_file(path);
+        self
+    }
+
+    /// Select which turns are supervised (default
+    /// [`LossMode::ResponseOnly`]).
+    pub fn with_loss_mode(mut self, mode: LossMode) -> ChatSource {
+        self.inner = self.inner.with_loss_mode(mode);
+        self
+    }
+
+    /// The corpus path this source reads.
+    pub fn path(&self) -> &Path {
+        self.inner.path()
+    }
+}
+
+impl ExampleSource for ChatSource {
+    fn label(&self) -> String {
+        format!("chat({})", self.inner.path().display())
+    }
+
+    fn examples(&self, vocab_cap: usize) -> Result<Vec<TokenizedExample>> {
+        self.inner.examples(vocab_cap)
+    }
+
+    fn stats(&self) -> SourceStats {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data_source::ByteBpe;
+
+    fn turns(list: &[(&str, &str)]) -> Vec<ChatTurn> {
+        list.iter()
+            .map(|(r, c)| ChatTurn { role: Role::parse(r).unwrap(), content: (*c).to_string() })
+            .collect()
+    }
+
+    fn learn_for(turns: &[ChatTurn]) -> ByteBpe {
+        let framed: Vec<String> = turns.iter().map(ChatTurn::framed).collect();
+        ByteBpe::learn(framed.iter().map(String::as_str), 96, 7)
+    }
+
+    #[test]
+    fn roles_parse_and_reject() {
+        assert_eq!(Role::parse("assistant").unwrap(), Role::Assistant);
+        assert!(Role::parse("robot").is_err());
+        assert_eq!(Role::User.name(), "user");
+    }
+
+    #[test]
+    fn messages_schema_errors_name_the_turn() {
+        let bad = Json::parse(r#"[{"role": "user"}]"#).unwrap();
+        let err = parse_messages(&bad).unwrap_err().to_string();
+        assert!(err.contains("messages[0]"), "{err}");
+
+        let bad = Json::parse(r#"[{"role": "u", "content": "x"}]"#).unwrap();
+        let err = parse_messages(&bad).unwrap_err().to_string();
+        assert!(err.contains("unknown role"), "{err}");
+
+        let bad = Json::parse("[]").unwrap();
+        assert!(parse_messages(&bad).unwrap_err().to_string().contains("empty"));
+
+        let bad = Json::parse("\"hi\"").unwrap();
+        assert!(parse_messages(&bad).unwrap_err().to_string().contains("array"));
+    }
+
+    #[test]
+    fn response_only_masks_every_non_assistant_token() {
+        let ts = turns(&[
+            ("system", "be terse ."),
+            ("user", "explain packing ."),
+            ("assistant", "bins share rows ."),
+            ("user", "and masks ?"),
+            ("assistant", "targets mark masks ."),
+        ]);
+        let tok = learn_for(&ts);
+        let (ex, truncated) = tokenize_chat(&tok, &ts, 4096, LossMode::ResponseOnly);
+        assert!(!truncated);
+
+        // recompute the assistant spans exactly as the tokenizer framed them
+        let mut pos = 0usize;
+        let mut supervised = vec![false; ex.tokens.len()];
+        for t in &ts {
+            let n = tok.encode(&t.framed()).len();
+            if t.role == Role::Assistant {
+                let lo = pos.saturating_sub(1);
+                for s in supervised.iter_mut().take(pos + n - 1).skip(lo) {
+                    *s = true;
+                }
+            }
+            pos += n;
+        }
+        for (i, &sup) in supervised.iter().enumerate() {
+            if sup {
+                assert_eq!(ex.targets[i], ex.tokens[i + 1], "pos {i} must be supervised");
+            } else {
+                assert_eq!(ex.targets[i], -1, "pos {i} must be masked");
+            }
+        }
+        // both assistant turns contribute
+        assert!(ex.real_targets() > tok.encode(&ts[2].framed()).len() - 1);
+    }
+
+    #[test]
+    fn full_mode_supervises_all_roles() {
+        let ts = turns(&[("user", "a b c"), ("assistant", "d e")]);
+        let tok = learn_for(&ts);
+        let (ex, _) = tokenize_chat(&tok, &ts, 4096, LossMode::Full);
+        for i in 0..ex.tokens.len() - 1 {
+            assert_eq!(ex.targets[i], ex.tokens[i + 1], "pos {i}");
+        }
+        assert_eq!(*ex.targets.last().unwrap(), -1);
+    }
+
+    #[test]
+    fn truncation_masks_the_boundary() {
+        let ts = turns(&[("user", "q q q q"), ("assistant", "a a a a a a a a")]);
+        let tok = learn_for(&ts);
+        let full_len = ts.iter().map(|t| tok.encode(&t.framed()).len()).sum::<usize>();
+        let cap = full_len - 3;
+        let (ex, truncated) = tokenize_chat(&tok, &ts, cap, LossMode::ResponseOnly);
+        assert!(truncated);
+        assert_eq!(ex.tokens.len(), cap);
+        assert_eq!(*ex.targets.last().unwrap(), -1, "boundary must not predict dropped tokens");
+        assert!(ex.real_targets() > 0);
+    }
+
+    #[test]
+    fn transcript_with_no_assistant_turn_is_fully_masked() {
+        let ts = turns(&[("user", "anyone here ?")]);
+        let tok = learn_for(&ts);
+        let (ex, _) = tokenize_chat(&tok, &ts, 4096, LossMode::ResponseOnly);
+        assert_eq!(ex.real_targets(), 0, "no assistant turn ⇒ nothing supervised");
+        // …but Full mode still supervises it
+        let (full, _) = tokenize_chat(&tok, &ts, 4096, LossMode::Full);
+        assert!(full.real_targets() > 0);
+    }
+
+    #[test]
+    fn chat_source_rejects_non_chat_records() {
+        let path = std::env::temp_dir().join("chronicals_chat_strict.jsonl");
+        std::fs::write(
+            &path,
+            concat!(
+                "{\"messages\": [{\"role\": \"user\", \"content\": \"hi .\"}, \
+                 {\"role\": \"assistant\", \"content\": \"hello .\"}]}\n",
+                "{\"prompt\": \"a\", \"completion\": \"b\"}\n",
+            ),
+        )
+        .unwrap();
+        let src = ChatSource::new(&path, 7, 64);
+        let exs = src.examples(64).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(exs.len(), 1);
+        let stats = src.stats();
+        assert_eq!(stats.malformed, 1, "pair record must be malformed in chat-only mode");
+        assert!(stats.notes[0].contains("messages"), "{:?}", stats.notes);
+        assert!(src.label().starts_with("chat("));
+    }
+}

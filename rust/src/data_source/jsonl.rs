@@ -1,12 +1,17 @@
 //! File-backed JSONL instruction data: the real-corpus `ExampleSource`.
 //!
-//! A corpus file holds one JSON object per line, either an instruction
-//! pair or plain text:
+//! A corpus file holds one JSON object per line — an instruction pair,
+//! plain text, or a chat transcript (see [`super::chat`]):
 //!
 //! ```text
 //! {"prompt": "explain sequence packing .", "completion": "bfd places each sequence ..."}
 //! {"text": "padding wastes compute on positions that contribute nothing"}
+//! {"messages": [{"role": "user", "content": "hi"}, {"role": "assistant", "content": "hello"}]}
 //! ```
+//!
+//! A `.jsonl.gz` path streams through the hermetic [`crate::util::gzip`]
+//! inflater; everything else (schema detection, diagnostics, accounting)
+//! is identical for compressed and plain corpora.
 //!
 //! [`JsonlSource`] streams the file with buffered line-at-a-time reads and
 //! tokenizes each record as the line is consumed — no corpus-wide string,
@@ -42,14 +47,15 @@
 //! ```
 
 use super::bpe::{BpeLearner, ByteBpe};
-use super::{tokenize_pair, tokenize_text, SourceStats, Tokenizer};
+use super::chat::{parse_messages, tokenize_chat, ChatTurn};
+use super::{tokenize_pair, tokenize_text, LossMode, SourceStats, Tokenizer};
 use crate::data::TokenizedExample;
 use crate::session::ExampleSource;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::cell::RefCell;
 use std::fs::File;
-use std::io::{BufRead, BufReader};
+use std::io::{BufRead, BufReader, Cursor};
 use std::path::{Path, PathBuf};
 
 /// Retain at most this many per-line diagnostics in [`SourceStats::notes`].
@@ -62,12 +68,23 @@ enum Record {
     Pair { prompt: String, completion: String },
     /// `{"text": …}` — every next-token position supervised.
     Text(String),
+    /// `{"messages": [{"role": …, "content": …}, …]}` — a chat transcript
+    /// with per-turn masks (see [`super::chat`]).
+    Chat(Vec<ChatTurn>),
 }
 
 /// Parse one line into a [`Record`]; schema errors name the offending key.
-fn parse_record(line: &str) -> Result<Record> {
+/// With `chat_only`, anything but a `messages` transcript is a schema
+/// error (the [`super::ChatSource`] strictness).
+fn parse_record(line: &str, chat_only: bool) -> Result<Record> {
     let v = Json::parse(line)?;
     let obj = v.as_obj().ok_or_else(|| anyhow!("expected a JSON object"))?;
+    if let Some(m) = obj.get("messages") {
+        return Ok(Record::Chat(parse_messages(m)?));
+    }
+    if chat_only {
+        bail!("expected a {{\"messages\": [...]}} chat record");
+    }
     let str_field = |key: &str, j: &Json| -> Result<String> {
         j.as_str()
             .map(str::to_string)
@@ -82,8 +99,26 @@ fn parse_record(line: &str) -> Result<Record> {
         (None, Some(_), _) => bail!("\"completion\" without \"prompt\""),
         (None, None, Some(t)) => Ok(Record::Text(str_field("text", t)?)),
         (None, None, None) => {
-            bail!("expected {{\"prompt\", \"completion\"}} or {{\"text\"}} keys")
+            bail!("expected {{\"prompt\", \"completion\"}}, {{\"text\"}} or {{\"messages\"}} keys")
         }
+    }
+}
+
+/// Open a corpus for buffered line reads; a `.gz` path is decompressed
+/// through the hermetic [`crate::util::gzip`] inflater (corpora are small,
+/// so whole-file decompression to memory is fine — the line iteration
+/// stays streaming either way).
+fn open_lines(path: &Path) -> Result<Box<dyn BufRead>> {
+    if path.extension().and_then(|e| e.to_str()) == Some("gz") {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("opening data file {}", path.display()))?;
+        let plain = crate::util::gzip::decompress(&bytes)
+            .with_context(|| format!("decompressing {}", path.display()))?;
+        Ok(Box::new(Cursor::new(plain)))
+    } else {
+        let file = File::open(path)
+            .with_context(|| format!("opening data file {}", path.display()))?;
+        Ok(Box::new(BufReader::new(file)))
     }
 }
 
@@ -95,12 +130,14 @@ pub struct JsonlSource {
     vocab_file: Option<PathBuf>,
     seed: u64,
     max_seq: usize,
+    loss_mode: LossMode,
+    chat_only: bool,
     stats: RefCell<SourceStats>,
 }
 
 impl JsonlSource {
-    /// Describe a JSONL corpus. Nothing is read until
-    /// [`ExampleSource::examples`] is called. `seed` drives tokenizer
+    /// Describe a JSONL corpus (`.jsonl` or `.jsonl.gz`). Nothing is read
+    /// until [`ExampleSource::examples`] is called. `seed` drives tokenizer
     /// learning (merge tie-breaks); `max_seq` caps tokens per example
     /// (longer records are truncated and counted).
     pub fn new(path: impl Into<PathBuf>, seed: u64, max_seq: usize) -> JsonlSource {
@@ -109,6 +146,8 @@ impl JsonlSource {
             vocab_file: None,
             seed,
             max_seq,
+            loss_mode: LossMode::default(),
+            chat_only: false,
             stats: RefCell::new(SourceStats::default()),
         }
     }
@@ -121,6 +160,21 @@ impl JsonlSource {
         self
     }
 
+    /// Select which token positions are supervised (default
+    /// [`LossMode::ResponseOnly`]: pair prompts and non-assistant chat
+    /// turns are loss-masked).
+    pub fn with_loss_mode(mut self, mode: LossMode) -> JsonlSource {
+        self.loss_mode = mode;
+        self
+    }
+
+    /// Restrict the schema to `{"messages": …}` transcripts (the
+    /// [`super::ChatSource`] strictness).
+    pub(super) fn chat_only(mut self) -> JsonlSource {
+        self.chat_only = true;
+        self
+    }
+
     /// The corpus path this source reads.
     pub fn path(&self) -> &Path {
         &self.path
@@ -130,9 +184,7 @@ impl JsonlSource {
     /// lines are skipped and counted into the returned stats with
     /// `file:line:` diagnostics; I/O failures are hard errors.
     fn for_each_record(&self, mut f: impl FnMut(Record)) -> Result<SourceStats> {
-        let file = File::open(&self.path)
-            .with_context(|| format!("opening data file {}", self.path.display()))?;
-        let reader = BufReader::new(file);
+        let reader = open_lines(&self.path)?;
         let mut stats = SourceStats::default();
         for (i, line) in reader.lines().enumerate() {
             let lineno = i + 1;
@@ -142,7 +194,7 @@ impl JsonlSource {
             if trimmed.is_empty() {
                 continue;
             }
-            match parse_record(trimmed) {
+            match parse_record(trimmed, self.chat_only) {
                 Ok(r) => f(r),
                 Err(e) => {
                     stats.malformed += 1;
@@ -185,6 +237,13 @@ impl JsonlSource {
                 learner.feed(&completion);
             }
             Record::Text(t) => learner.feed(&t),
+            // feed the framed form so the role prefixes (`user: `) are in
+            // the learned alphabet exactly as encoding will see them
+            Record::Chat(turns) => {
+                for turn in &turns {
+                    learner.feed(&turn.framed());
+                }
+            }
         })?;
         let tok = learner.finish(vocab_cap, self.seed);
         if let Some(vf) = &self.vocab_file {
@@ -206,9 +265,12 @@ impl ExampleSource for JsonlSource {
         let mut stats = self.for_each_record(|r| {
             let (ex, was_truncated) = match r {
                 Record::Pair { prompt, completion } => {
-                    tokenize_pair(&tok, &prompt, &completion, self.max_seq)
+                    tokenize_pair(&tok, &prompt, &completion, self.max_seq, self.loss_mode)
                 }
                 Record::Text(t) => tokenize_text(&tok, &t, self.max_seq),
+                Record::Chat(turns) => {
+                    tokenize_chat(&tok, &turns, self.max_seq, self.loss_mode)
+                }
             };
             if was_truncated {
                 truncated += 1;
@@ -391,5 +453,120 @@ mod tests {
             assert_eq!(x.tokens, y.tokens);
             assert_eq!(x.targets, y.targets);
         }
+    }
+
+    #[test]
+    fn chat_records_stream_through_the_mixed_source() {
+        let content = concat!(
+            "{\"prompt\": \"explain packing .\", \"completion\": \"bins hold sequences\"}\n",
+            "{\"messages\": [{\"role\": \"user\", \"content\": \"explain packing .\"}, \
+             {\"role\": \"assistant\", \"content\": \"bins hold sequences\"}]}\n",
+            "{\"messages\": [{\"role\": \"user\", \"content\": \"no reply here\"}]}\n",
+        );
+        let path = write_tmp("chronicals_jsonl_mixed.jsonl", content);
+        let src = JsonlSource::new(&path, 7, 96);
+        let exs = src.examples(96).unwrap();
+        std::fs::remove_file(&path).ok();
+        // the assistant-less transcript is fully masked and skipped
+        assert_eq!(exs.len(), 2);
+        assert_eq!(src.stats().malformed, 0);
+        // the chat example masks its user turn
+        assert_eq!(exs[1].targets[0], -1);
+        assert!(exs[1].real_targets() > 0);
+    }
+
+    #[test]
+    fn full_loss_mode_supervises_prompts() {
+        let path = write_tmp("chronicals_jsonl_lossmode.jsonl", GOOD);
+        let masked = JsonlSource::new(&path, 7, 64).examples(64).unwrap();
+        let full = JsonlSource::new(&path, 7, 64)
+            .with_loss_mode(LossMode::Full)
+            .examples(64)
+            .unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(masked.len(), full.len());
+        for (m, f) in masked.iter().zip(&full) {
+            assert_eq!(m.tokens, f.tokens, "loss mode must not change tokenization");
+            assert!(f.real_targets() >= m.real_targets());
+        }
+        // the pair records gain prompt supervision
+        assert!(full[0].real_targets() > masked[0].real_targets());
+        assert_eq!(full[0].real_targets(), full[0].len() - 1);
+    }
+
+    #[test]
+    fn gz_corpus_tokenizes_identically_to_plain() {
+        // hand-built single-member gzip with a stored block: tests the
+        // whole .jsonl.gz read path without shelling out to gzip
+        fn crc32(data: &[u8]) -> u32 {
+            let mut crc = 0xffff_ffffu32;
+            for &b in data {
+                crc ^= b as u32;
+                for _ in 0..8 {
+                    let mask = (crc & 1).wrapping_neg();
+                    crc = (crc >> 1) ^ (0xedb8_8320 & mask);
+                }
+            }
+            !crc
+        }
+        let plain = GOOD.as_bytes();
+        let mut gz = vec![0x1f, 0x8b, 0x08, 0x00, 0, 0, 0, 0, 0x00, 0xff, 0x01];
+        gz.extend_from_slice(&(plain.len() as u16).to_le_bytes());
+        gz.extend_from_slice(&(!(plain.len() as u16)).to_le_bytes());
+        gz.extend_from_slice(plain);
+        gz.extend_from_slice(&crc32(plain).to_le_bytes());
+        gz.extend_from_slice(&(plain.len() as u32).to_le_bytes());
+
+        let plain_path = write_tmp("chronicals_jsonl_gzcmp.jsonl", GOOD);
+        let gz_path = std::env::temp_dir().join("chronicals_jsonl_gzcmp.jsonl.gz");
+        std::fs::write(&gz_path, &gz).unwrap();
+
+        let a = JsonlSource::new(&plain_path, 7, 64).examples(64).unwrap();
+        let b = JsonlSource::new(&gz_path, 7, 64).examples(64).unwrap();
+        std::fs::remove_file(&plain_path).ok();
+        std::fs::remove_file(&gz_path).ok();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens, "gz and plain corpora must tokenize identically");
+            assert_eq!(x.targets, y.targets);
+        }
+    }
+
+    #[test]
+    fn corrupt_gz_is_a_hard_error() {
+        let gz_path = std::env::temp_dir().join("chronicals_jsonl_corrupt.jsonl.gz");
+        std::fs::write(&gz_path, b"not gzip at all").unwrap();
+        let err = JsonlSource::new(&gz_path, 7, 64)
+            .examples(64)
+            .map(|_| ())
+            .unwrap_err();
+        std::fs::remove_file(&gz_path).ok();
+        assert!(format!("{err:#}").contains("decompressing"), "{err:#}");
+    }
+
+    #[test]
+    fn emoji_survives_the_full_pipeline() {
+        // escaped surrogate pair in the file → real 😀 in the tokenized
+        // stream → intact after decode (the §9 surrogate bugfix, end to end)
+        let content = concat!(
+            "{\"prompt\": \"decode the emoji \\ud83d\\ude00 .\", ",
+            "\"completion\": \"the smile survives .\"}\n",
+        );
+        let path = write_tmp("chronicals_jsonl_emoji.jsonl", content);
+        let src = JsonlSource::new(&path, 7, 96);
+        let exs = src.examples(96).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(exs.len(), 1);
+        assert_eq!(src.stats().malformed, 0, "{:?}", src.stats().notes);
+        // rebuild the exact tokenizer the source learned (same feed order,
+        // same cap, same seed) and decode the tokenized example
+        let mut learner = BpeLearner::new();
+        learner.feed("decode the emoji \u{1f600} .");
+        learner.feed("the smile survives .");
+        let tok = learner.finish(96, 7);
+        let text = tok.decode(&exs[0].tokens);
+        assert!(text.contains('\u{1f600}'), "emoji lost in {text:?}");
+        assert!(!text.contains('\u{fffd}'), "replacement char in {text:?}");
+        assert!(!text.contains("<unk>"), "unk in {text:?}");
     }
 }

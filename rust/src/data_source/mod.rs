@@ -32,12 +32,51 @@
 #![warn(missing_docs)]
 
 pub mod bpe;
+pub mod chat;
 pub mod jsonl;
 
 pub use bpe::{BpeLearner, ByteBpe};
+pub use chat::{tokenize_chat, ChatSource, ChatTurn, Role};
 pub use jsonl::JsonlSource;
 
 use crate::data::TokenizedExample;
+use anyhow::{bail, Result};
+
+/// Which token positions contribute to the loss (HyperSloth's
+/// `--loss_type` knob). Lowered into tokenization-time target masking via
+/// the `targets: -1` convention, so every backend honors it for free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LossMode {
+    /// Supervise every next-token position: prompts, system and user turns
+    /// included (HyperSloth `--loss_type all`).
+    Full,
+    /// Supervise only response tokens — pair completions and assistant
+    /// turns; everything else is loss-masked. The default, and bitwise
+    /// identical to the historical pair-masking behavior.
+    #[default]
+    ResponseOnly,
+}
+
+impl LossMode {
+    /// Parse a CLI/config name.
+    pub fn parse(name: &str) -> Result<LossMode> {
+        Ok(match name {
+            "full" => LossMode::Full,
+            "response-only" | "response_only" | "target-only" | "target_only" => {
+                LossMode::ResponseOnly
+            }
+            other => bail!("unknown loss mode '{other}' (expected full | response-only)"),
+        })
+    }
+
+    /// The canonical CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LossMode::Full => "full",
+            LossMode::ResponseOnly => "response-only",
+        }
+    }
+}
 
 /// A deterministic text tokenizer: text in, model-ready token ids out.
 ///
@@ -84,26 +123,34 @@ pub struct SourceStats {
     pub notes: Vec<String>,
 }
 
-/// Tokenize an instruction pair the standard way: prompt tokens are
-/// loss-masked, completion tokens are supervised (the recipe
-/// [`crate::data::tokenize_corpus`] uses). Returns the example and whether
-/// it was truncated to `max_len` tokens.
+/// Tokenize an instruction pair: under [`LossMode::ResponseOnly`] the
+/// prompt tokens are loss-masked and the completion supervised (the recipe
+/// [`crate::data::tokenize_corpus`] uses); under [`LossMode::Full`] every
+/// next-token position is supervised. Returns the example and whether it
+/// was truncated to `max_len` tokens.
 ///
 /// ```
-/// use chronicals::data_source::{tokenize_pair, ByteBpe};
+/// use chronicals::data_source::{tokenize_pair, ByteBpe, LossMode};
 ///
 /// let tok = ByteBpe::learn(["add two numbers", "four"], 40, 1);
-/// let (ex, truncated) = tokenize_pair(&tok, "add two numbers", "four", 64);
+/// let (ex, truncated) =
+///     tokenize_pair(&tok, "add two numbers", "four", 64, LossMode::ResponseOnly);
 /// assert!(!truncated);
 /// // prompt interior is masked, completion is supervised
 /// assert_eq!(ex.targets[0], -1);
 /// assert!(ex.real_targets() > 0);
+///
+/// // Full mode supervises the prompt too
+/// let (full, _) = tokenize_pair(&tok, "add two numbers", "four", 64, LossMode::Full);
+/// assert_eq!(full.targets[0], full.tokens[1]);
+/// assert!(full.real_targets() > ex.real_targets());
 /// ```
 pub fn tokenize_pair(
     tok: &dyn Tokenizer,
     prompt: &str,
     completion: &str,
     max_len: usize,
+    mode: LossMode,
 ) -> (TokenizedExample, bool) {
     let mut tokens = tok.encode(prompt);
     let prompt_len = tokens.len();
@@ -111,7 +158,11 @@ pub fn tokenize_pair(
     let truncated = tokens.len() > max_len;
     tokens.truncate(max_len);
     let mut targets = vec![-1i32; tokens.len()];
-    for i in prompt_len.saturating_sub(1)..tokens.len().saturating_sub(1) {
+    let start = match mode {
+        LossMode::Full => 0,
+        LossMode::ResponseOnly => prompt_len.saturating_sub(1),
+    };
+    for i in start..tokens.len().saturating_sub(1) {
         targets[i] = tokens[i + 1];
     }
     (TokenizedExample { tokens, targets }, truncated)
@@ -149,15 +200,35 @@ mod tests {
     }
 
     #[test]
+    fn loss_mode_parses_and_defaults() {
+        assert_eq!(LossMode::parse("full").unwrap(), LossMode::Full);
+        assert_eq!(LossMode::parse("response-only").unwrap(), LossMode::ResponseOnly);
+        assert_eq!(LossMode::parse("target_only").unwrap(), LossMode::ResponseOnly);
+        assert!(LossMode::parse("half").is_err());
+        assert_eq!(LossMode::default(), LossMode::ResponseOnly);
+        assert_eq!(LossMode::Full.name(), "full");
+    }
+
+    #[test]
     fn pair_masks_prompt_and_supervises_completion() {
         let tok = ByteBpe::learn(["ab cd", "ef"], 32, 0);
-        let (ex, truncated) = tokenize_pair(&tok, "ab cd", "ef", 128);
+        let (ex, truncated) = tokenize_pair(&tok, "ab cd", "ef", 128, LossMode::ResponseOnly);
         assert!(!truncated);
         let prompt_len = tok.encode("ab cd").len();
         for i in 0..prompt_len - 1 {
             assert_eq!(ex.targets[i], -1, "prompt pos {i} must be masked");
         }
         for i in prompt_len - 1..ex.tokens.len() - 1 {
+            assert_eq!(ex.targets[i], ex.tokens[i + 1], "pos {i}");
+        }
+        assert_eq!(*ex.targets.last().unwrap(), -1);
+    }
+
+    #[test]
+    fn full_mode_supervises_the_prompt_too() {
+        let tok = ByteBpe::learn(["ab cd", "ef"], 32, 0);
+        let (ex, _) = tokenize_pair(&tok, "ab cd", "ef", 128, LossMode::Full);
+        for i in 0..ex.tokens.len() - 1 {
             assert_eq!(ex.targets[i], ex.tokens[i + 1], "pos {i}");
         }
         assert_eq!(*ex.targets.last().unwrap(), -1);

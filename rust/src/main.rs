@@ -114,14 +114,21 @@ COMMANDS
            [--packing padded|bfd|ffd|next-fit] [--schedule constant|
            warmup-cosine] [--lr-warmup N] [--lora-rank N]
            [--lora-plus-ratio X] [--steps N] [--lr X] [--seed N]
-           [--data-file FILE.jsonl] [--tokenizer FILE.vocab]
-           [--shuffle-seed N] [--epochs N]
+           [--data-file FILE.jsonl[.gz]] [--tokenizer FILE.vocab]
+           [--shuffle-seed N] [--epochs N] [--eval-fraction F]
+           [--loss-mode response-only|full]
            [--backend cpu|cpu-fast|pjrt] [--threads N] [--artifacts DIR]
            data: --data-file streams a JSONL instruction corpus
-           ({{\"prompt\",\"completion\"}} or {{\"text\"}} per line) through the
-           byte-level mini-BPE tokenizer; --tokenizer loads/persists its
-           vocab file; --shuffle-seed permutes the packing plan per epoch;
-           --epochs N runs N data passes instead of cycling to --steps
+           ({{\"prompt\",\"completion\"}}, {{\"text\"}} or chat
+           {{\"messages\":[{{\"role\",\"content\"}},..]}} per line; .jsonl.gz is
+           inflated on the fly) through the byte-level mini-BPE tokenizer;
+           --tokenizer loads/persists its vocab file; --shuffle-seed
+           permutes the packing plan per epoch; --epochs N runs N data
+           passes instead of cycling to --steps; --eval-fraction F holds
+           out a seeded F of the examples (disjoint from train, stable
+           under shuffling) and reports periodic held-out eval loss;
+           --loss-mode full supervises prompts/user turns too (default:
+           response-only)
            legacy front-ends (lowered into the same typed session):
            --preset <full_ft|lora|lora_plus|e2e> | --config <file.toml> |
            --executable NAME [--packed true|false]
@@ -230,6 +237,15 @@ fn cmd_train(args: &Args) -> Result<()> {
                 .map_err(|_| anyhow!("invalid --epochs '{e}' (expected a positive integer)"))?,
         );
     }
+    if let Some(f) = args.get("eval-fraction") {
+        cfg.eval_fraction = Some(
+            f.parse()
+                .map_err(|_| anyhow!("invalid --eval-fraction '{f}' (expected e.g. 0.2)"))?,
+        );
+    }
+    if let Some(m) = args.get("loss-mode") {
+        cfg.loss_mode = m.to_string();
+    }
     // one parser for --threads everywhere (env > flag > config file)
     cfg.threads = thread_request(args, cfg.threads)?;
 
@@ -286,8 +302,25 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.verification.status()
     );
     print_data_accounting(&report);
+    if !report.eval.is_empty() {
+        let series: Vec<String> =
+            report.eval.iter().map(|(step, loss)| format!("{step}:{loss:.4}")).collect();
+        println!(
+            "eval: {} held-out examples | loss [{}] | final {:.4}",
+            report.eval_examples,
+            series.join(" "),
+            report.final_eval_loss.unwrap_or(f32::NAN)
+        );
+    }
     for f in &s.verification.failures {
         println!("  verification failure: {f}");
+    }
+    if s.verification.final_step_grad_dead {
+        println!(
+            "\nWARNING: the final step's gradient norm was 0.0 or NaN — this run ended\n\
+             NOT training (paper §9). Its throughput numbers are not admissible; check\n\
+             for frozen weights, a detached graph, or numeric blow-up."
+        );
     }
     Ok(())
 }
@@ -450,10 +483,10 @@ fn cmd_verify(args: &Args) -> Result<()> {
     let steps = args.u64_or("steps", 8);
     println!("reproducing the paper's Unsloth-bug finding (Fig. 10/22)\n");
     let runs = [
-        ("correct LoRA config", Task::lora()),
-        ("'fast mode' config", Task::LoraBroken),
+        ("correct LoRA config", Task::lora(), false),
+        ("'fast mode' config", Task::LoraBroken, true),
     ];
-    for (label, task) in runs {
+    for (label, task, expect_dead) in runs {
         let mut session = SessionBuilder::new()
             .task(task)
             .steps(steps)
@@ -474,11 +507,23 @@ fn cmd_verify(args: &Args) -> Result<()> {
         for f in &s.verification.failures {
             println!("    -> {f}");
         }
+        // the §9 guard must fire on the frozen-weights config and stay
+        // clear on the healthy one — `verify` is itself verified
+        if s.verification.final_step_grad_dead != expect_dead {
+            bail!(
+                "§9 final-step guard mismatch for {label}: expected dead={expect_dead}, \
+                 got dead={} (grad_norm range [{:.2e}, {:.2e}])",
+                s.verification.final_step_grad_dead,
+                s.verification.min_grad_norm,
+                s.verification.max_grad_norm
+            );
+        }
     }
     println!(
         "\nThe broken config reports HIGHER throughput (the backward pass is\n\
          dead-code-eliminated) while training nothing — exactly the paper's\n\
-         46k-tokens/sec-with-zero-gradients finding. Always verify gradient flow."
+         46k-tokens/sec-with-zero-gradients finding. Always verify gradient flow.\n\
+         §9 final-step guard: fired on the broken config, clear on the healthy one."
     );
     Ok(())
 }

@@ -40,15 +40,17 @@
 pub mod resolve;
 
 pub use crate::batching::{PackingStrategy, TailPolicy};
-pub use resolve::{resolve_init, Resolved};
+pub use crate::data_source::LossMode;
+pub use resolve::{resolve_eval, resolve_init, Resolved};
 
 use crate::backend::{create_backend, Backend, DeviceBatch};
-use crate::batching::{BatchStream, EpochSpec};
+use crate::batching::{Batch, BatchStream, EpochSpec};
 use crate::checkpoint::Codec;
 use crate::config::RunConfig;
 use crate::coordinator::{StepRecord, Trainer, TrainSummary};
 use crate::data::{self, TokenizedExample};
-use crate::data_source::{JsonlSource, SourceStats};
+use crate::data_source::{ChatSource, JsonlSource, SourceStats};
+use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 use std::fmt;
 use std::path::Path;
@@ -275,6 +277,21 @@ pub enum DataSource {
         /// Token cap per example (longer records are truncated + counted).
         max_seq: usize,
     },
+    /// A chat-transcript JSONL corpus — every record must be a
+    /// `{"messages": [{"role", "content"}, …]}` transcript
+    /// ([`crate::data_source::ChatSource`]): role-framed turns with
+    /// per-turn loss masks under the session's [`LossMode`].
+    Chat {
+        /// Path to the `.jsonl` / `.jsonl.gz` transcript file.
+        file: String,
+        /// Optional tokenizer vocab file: loaded when present, learned
+        /// from the corpus and written there when absent.
+        vocab_file: Option<String>,
+        /// Tokenizer-learning seed (merge tie-breaks).
+        seed: u64,
+        /// Token cap per example (longer records are truncated + counted).
+        max_seq: usize,
+    },
     /// Any external source behind the [`ExampleSource`] trait.
     Custom(Rc<dyn ExampleSource>),
 }
@@ -307,16 +324,57 @@ impl DataSource {
         DataSource::Jsonl { file: file.into(), vocab_file: None, seed, max_seq }
     }
 
+    /// A chat-transcript JSONL corpus (`{"messages": [...]}` records only;
+    /// `.jsonl.gz` streams through the hermetic inflater).
+    ///
+    /// ```
+    /// use chronicals::session::{DataSource, SessionBuilder};
+    ///
+    /// let path = std::env::temp_dir().join("chronicals_ds_chat_doc.jsonl");
+    /// std::fs::write(
+    ///     &path,
+    ///     "{\"messages\": [{\"role\": \"user\", \"content\": \"pack bins\"}, \
+    ///       {\"role\": \"assistant\", \"content\": \"bfd packs tightly\"}]}\n",
+    /// )?;
+    /// let mut session = SessionBuilder::new()
+    ///     .steps(1)
+    ///     .lr(5e-3)
+    ///     .data(DataSource::chat(path.to_str().unwrap(), 7, 64))
+    ///     .build()?;
+    /// let report = session.run()?;
+    /// assert_eq!(report.examples, 1);
+    /// # std::fs::remove_file(&path).ok();
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn chat(file: impl Into<String>, seed: u64, max_seq: usize) -> DataSource {
+        DataSource::Chat { file: file.into(), vocab_file: None, seed, max_seq }
+    }
+
     /// Materialize the tokenized example set plus the source's
-    /// malformed/truncated accounting.
-    pub fn tokenized(&self, vocab_cap: usize) -> Result<(Vec<TokenizedExample>, SourceStats)> {
+    /// malformed/truncated accounting. `loss_mode` selects which positions
+    /// are supervised (file-backed sources only; the synthetic corpus has
+    /// its masking baked in).
+    pub fn tokenized(
+        &self,
+        vocab_cap: usize,
+        loss_mode: LossMode,
+    ) -> Result<(Vec<TokenizedExample>, SourceStats)> {
         match self {
             DataSource::Synthetic { examples, seed, max_seq } => Ok((
                 data::build_corpus(*examples, *seed, vocab_cap, *max_seq).1,
                 SourceStats::default(),
             )),
             DataSource::Jsonl { file, vocab_file, seed, max_seq } => {
-                let mut src = JsonlSource::new(file, *seed, *max_seq);
+                let mut src = JsonlSource::new(file, *seed, *max_seq).with_loss_mode(loss_mode);
+                if let Some(vf) = vocab_file {
+                    src = src.with_vocab_file(vf);
+                }
+                let exs = src.examples(vocab_cap)?;
+                let stats = src.stats();
+                Ok((exs, stats))
+            }
+            DataSource::Chat { file, vocab_file, seed, max_seq } => {
+                let mut src = ChatSource::new(file, *seed, *max_seq).with_loss_mode(loss_mode);
                 if let Some(vf) = vocab_file {
                     src = src.with_vocab_file(vf);
                 }
@@ -334,6 +392,7 @@ impl DataSource {
                 format!("synthetic({examples} examples, seed {seed}, max_seq {max_seq})")
             }
             DataSource::Jsonl { file, .. } => format!("jsonl({file})"),
+            DataSource::Chat { file, .. } => format!("chat({file})"),
             DataSource::Custom(src) => src.label(),
         }
     }
@@ -355,6 +414,10 @@ impl PartialEq for DataSource {
             (
                 DataSource::Jsonl { file: a, vocab_file: b, seed: c, max_seq: d },
                 DataSource::Jsonl { file: w, vocab_file: x, seed: y, max_seq: z },
+            ) => a == w && b == x && c == y && d == z,
+            (
+                DataSource::Chat { file: a, vocab_file: b, seed: c, max_seq: d },
+                DataSource::Chat { file: w, vocab_file: x, seed: y, max_seq: z },
             ) => a == w && b == x && c == y && d == z,
             (DataSource::Custom(a), DataSource::Custom(b)) => Rc::ptr_eq(a, b),
             _ => false,
@@ -392,6 +455,14 @@ pub struct SessionSpec {
     pub data: DataSource,
     /// Shuffle/epoch policy for the batch plan (default: legacy cycling).
     pub epoch_policy: EpochPolicy,
+    /// Which token positions the loss supervises (file-backed sources;
+    /// default [`LossMode::ResponseOnly`]).
+    pub loss_mode: LossMode,
+    /// `Some(f)`: hold out ⌊f · examples⌋ examples (seeded by
+    /// [`SessionSpec::seed`], disjoint from the train set, stable under
+    /// shuffle/epoch settings) and report periodic forward-only eval loss.
+    /// `None` (default): no eval split.
+    pub eval_fraction: Option<f64>,
     pub backend: BackendSpec,
     pub steps: u64,
     /// Throughput-meter warmup steps excluded from tokens/sec.
@@ -452,10 +523,31 @@ impl SessionSpec {
                     bail!("jsonl data source needs max_seq > 0");
                 }
             }
+            DataSource::Chat { file, max_seq, .. } => {
+                if file.is_empty() {
+                    bail!("chat data source needs a file path");
+                }
+                if *max_seq == 0 {
+                    bail!("chat data source needs max_seq > 0");
+                }
+            }
             DataSource::Custom(_) => {}
         }
         if self.epoch_policy.epochs == Some(0) {
             bail!("epochs must be ≥ 1 (use epochs: None for step-count cycling)");
+        }
+        if let Some(f) = self.eval_fraction {
+            if !f.is_finite() || f <= 0.0 {
+                bail!(
+                    "eval fraction must be positive and finite (got {f}); \
+                     omit --eval-fraction to train on everything"
+                );
+            }
+            if f >= 1.0 {
+                bail!(
+                    "eval fraction must be < 1 so at least one example trains (got {f})"
+                );
+            }
         }
         Ok(())
     }
@@ -492,12 +584,19 @@ impl SessionSpec {
                 max_seq: cfg.max_seq,
             }
         };
+        let loss_mode = if cfg.loss_mode.is_empty() {
+            LossMode::default()
+        } else {
+            crate::data_source::LossMode::parse(&cfg.loss_mode)?
+        };
         let spec = SessionSpec {
             task,
             schedule,
             packing,
             data,
             epoch_policy: EpochPolicy { shuffle: cfg.shuffle_seed, epochs: cfg.epochs },
+            loss_mode,
+            eval_fraction: cfg.eval_fraction,
             backend,
             steps: cfg.steps,
             meter_warmup: cfg.warmup_steps,
@@ -525,6 +624,8 @@ pub struct SessionBuilder {
     packing: PackingStrategy,
     data: Option<DataSource>,
     epoch_policy: EpochPolicy,
+    loss_mode: LossMode,
+    eval_fraction: Option<f64>,
     backend_spec: BackendSpec,
     backend: Option<Rc<dyn Backend>>,
     steps: u64,
@@ -548,6 +649,8 @@ impl SessionBuilder {
             packing: PackingStrategy::Bfd,
             data: None,
             epoch_policy: EpochPolicy::default(),
+            loss_mode: LossMode::default(),
+            eval_fraction: None,
             backend_spec: BackendSpec::Cpu,
             backend: None,
             steps: 50,
@@ -629,6 +732,56 @@ impl SessionBuilder {
         self
     }
 
+    /// Select which token positions the loss supervises (file-backed
+    /// sources; default [`LossMode::ResponseOnly`]).
+    ///
+    /// ```
+    /// use chronicals::session::{DataSource, LossMode, SessionBuilder};
+    ///
+    /// let path = std::env::temp_dir().join("chronicals_lm_doc.jsonl");
+    /// std::fs::write(&path, "{\"prompt\": \"two and two .\", \"completion\": \"four\"}\n")?;
+    /// let mut session = SessionBuilder::new()
+    ///     .steps(1)
+    ///     .lr(5e-3)
+    ///     .data(DataSource::jsonl(path.to_str().unwrap(), 7, 64))
+    ///     .loss_mode(LossMode::Full) // supervise the prompt too
+    ///     .build()?;
+    /// assert!(session.run()?.summary.last_loss.is_finite());
+    /// # std::fs::remove_file(&path).ok();
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn loss_mode(mut self, mode: LossMode) -> Self {
+        self.loss_mode = mode;
+        self
+    }
+
+    /// Hold out a seeded fraction of the examples for periodic
+    /// forward-only eval: the split is driven by [`SessionBuilder::seed`]
+    /// alone, so it is disjoint from the train set and bitwise-stable
+    /// under any `shuffle_seed`/`epochs` setting.
+    ///
+    /// ```
+    /// use chronicals::session::{DataSource, SessionBuilder};
+    ///
+    /// let mut session = SessionBuilder::new()
+    ///     .steps(4)
+    ///     .lr(5e-3)
+    ///     .data(DataSource::synthetic(64, 42, 48))
+    ///     .eval_fraction(0.25)
+    ///     .build()?;
+    /// let report = session.run()?;
+    /// assert_eq!(report.eval_examples, 16);
+    /// assert!(report.final_eval_loss.unwrap().is_finite());
+    /// // series: eval before training, at interval points, and at the end
+    /// assert_eq!(report.eval.first().unwrap().0, 0);
+    /// assert_eq!(report.eval.last().unwrap().0, 4);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn eval_fraction(mut self, fraction: f64) -> Self {
+        self.eval_fraction = Some(fraction);
+        self
+    }
+
     /// Select the backend by spec (created at build time).
     pub fn backend(mut self, backend: BackendSpec) -> Self {
         self.backend_spec = backend;
@@ -694,6 +847,8 @@ impl SessionBuilder {
             packing: self.packing,
             data,
             epoch_policy: self.epoch_policy,
+            loss_mode: self.loss_mode,
+            eval_fraction: self.eval_fraction,
             backend: self.backend_spec,
             steps: self.steps,
             meter_warmup: self.meter_warmup,
@@ -755,6 +910,54 @@ pub struct RunReport {
     /// recovered: 0 for `Padded`, 0.6–0.75 is the paper's BFD claim on
     /// Alpaca-shaped length distributions (Prop. 14).
     pub padding_recovery: f64,
+    /// Held-out eval loss series `(step, loss)`: one entry before training
+    /// (step 0), at periodic interval points, and after the final step.
+    /// Empty when no eval fraction is set.
+    pub eval: Vec<(u64, f32)>,
+    /// The last entry of [`RunReport::eval`]; `None` when eval is off.
+    pub final_eval_loss: Option<f32>,
+    /// Examples held out of training for the eval split (0 = eval off).
+    pub eval_examples: usize,
+}
+
+/// Domain-separation salt for the eval split's RNG: the split must not
+/// correlate with any other consumer of the run seed (corpus generation,
+/// init, plan shuffling).
+const EVAL_SPLIT_SALT: u64 = 0x5EED_E7A1_0F5E_11D5;
+
+/// The deterministic held-out split: Fisher–Yates over `0..n` seeded by
+/// `seed` alone, then the first ⌊n·fraction⌋ indices (clamped to keep at
+/// least one example on each side) become the eval set. Returns
+/// `(train_indices, eval_indices)`, each sorted ascending — together they
+/// partition `0..n`, and the same `(n, fraction, seed)` always produces the
+/// same split regardless of shuffle/epoch settings (DESIGN.md §9).
+pub fn eval_split(n: usize, fraction: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
+    assert!(n >= 2, "an eval split needs at least 2 examples (got {n})");
+    let mut idx: Vec<usize> = (0..n).collect();
+    Rng::new(seed ^ EVAL_SPLIT_SALT).shuffle(&mut idx);
+    let n_eval = ((n as f64 * fraction).floor() as usize).clamp(1, n - 1);
+    let mut eval: Vec<usize> = idx[..n_eval].to_vec();
+    let mut train: Vec<usize> = idx[n_eval..].to_vec();
+    eval.sort_unstable();
+    train.sort_unstable();
+    (train, eval)
+}
+
+/// Weighted mean eval loss over a fixed batch set: each batch's mean loss
+/// weighted by its supervised-target count, so padding rows and short tail
+/// batches do not skew the aggregate.
+fn eval_pass(trainer: &Trainer, eval_exe: &str, batches: &[Batch]) -> Result<f32> {
+    let mut num = 0.0f64;
+    let mut den = 0usize;
+    for b in batches {
+        let loss = trainer.eval(eval_exe, b)?;
+        num += loss as f64 * b.real_targets as f64;
+        den += b.real_targets;
+    }
+    if den == 0 {
+        bail!("eval batches hold no supervised targets");
+    }
+    Ok((num / den as f64) as f32)
 }
 
 /// A built, runnable training session: backend + resolved executables +
@@ -818,8 +1021,48 @@ impl Session {
         // vocab cap = the model's vocab so token ids stay in range
         let vocab = exe.model_config.vocab.max(64);
         let (batch, seq) = (exe.batch, exe.seq);
-        let (examples, source) = self.spec.data.tokenized(vocab)?;
+        let (mut examples, source) = self.spec.data.tokenized(vocab, self.spec.loss_mode)?;
         let n_examples = examples.len();
+        // seeded held-out split: disjoint from the train set and stable
+        // under shuffle/epoch settings (it depends on spec.seed alone)
+        let mut eval_ctx: Option<(String, Vec<Batch>)> = None;
+        let mut eval_examples = 0usize;
+        if let Some(f) = self.spec.eval_fraction {
+            if n_examples < 2 {
+                bail!(
+                    "eval fraction needs at least 2 usable examples, {} has {n_examples}",
+                    self.spec.data.label()
+                );
+            }
+            let (_, eval_idx) = eval_split(n_examples, f, self.spec.seed);
+            eval_examples = eval_idx.len();
+            let mut in_eval = vec![false; n_examples];
+            for &i in &eval_idx {
+                in_eval[i] = true;
+            }
+            let mut train_set = Vec::with_capacity(n_examples - eval_examples);
+            let mut eval_set = Vec::with_capacity(eval_examples);
+            for (i, ex) in examples.into_iter().enumerate() {
+                if in_eval[i] {
+                    eval_set.push(ex);
+                } else {
+                    train_set.push(ex);
+                }
+            }
+            examples = train_set;
+            let eval_exe = resolve_eval(self.backend.manifest(), &self.resolved.train)?;
+            let eval_batches: Vec<Batch> =
+                BatchStream::new(eval_set, self.spec.packing, batch, seq, TailPolicy::Pad)
+                    .collect();
+            if eval_batches.is_empty() {
+                bail!(
+                    "the eval split ({eval_examples} examples) produced no batches — \
+                     lower the eval fraction or raise max_seq"
+                );
+            }
+            eval_ctx = Some((eval_exe, eval_batches));
+        }
+        let n_train = examples.len();
         // padded-baseline accounting (one row per example) for the
         // padding-recovery report — over the example set the plan actually
         // packs: packing strategies skip oversized examples, the padded
@@ -829,7 +1072,7 @@ impl Session {
             let lens = examples.iter().map(|e| e.len());
             match self.spec.packing {
                 PackingStrategy::Padded => {
-                    (n_examples, lens.map(|l| l.min(seq)).sum::<usize>())
+                    (n_train, lens.map(|l| l.min(seq)).sum::<usize>())
                 }
                 _ => {
                     let packable: Vec<usize> = lens.filter(|&l| l <= seq).collect();
@@ -849,7 +1092,7 @@ impl Session {
         );
         if stream.n_batches() == 0 {
             bail!(
-                "no batches for '{}' (B={batch}, S={seq}, {n_examples} examples from {})",
+                "no batches for '{}' (B={batch}, S={seq}, {n_train} train examples from {})",
                 self.resolved.train,
                 self.spec.data.label()
             );
@@ -873,6 +1116,21 @@ impl Session {
                 ((waste_padded - waste_packed) / waste_padded).clamp(0.0, 1.0)
             }
         };
+
+        // periodic eval points: before training (step 0), every interval
+        // (each epoch boundary in epoch mode, quarters of the run in cycle
+        // mode) and after the final step
+        let total_steps =
+            if policy.epochs.is_some() { batches_planned as u64 } else { self.spec.steps };
+        let eval_interval = if policy.epochs.is_some() {
+            per_epoch as u64
+        } else {
+            (total_steps / 4).max(1)
+        };
+        let mut eval_series: Vec<(u64, f32)> = Vec::new();
+        if let Some((eval_exe, eb)) = &eval_ctx {
+            eval_series.push((0, eval_pass(&self.trainer, eval_exe, eb)?));
+        }
 
         let mut staged: Vec<DeviceBatch> = Vec::new();
         let batches_staged;
@@ -902,6 +1160,12 @@ impl Session {
                 for i in 0..total {
                     let idx = (i % per_epoch as u64) as usize;
                     self.trainer.step_uploaded(&staged[idx])?;
+                    let s = i + 1;
+                    if let Some((eval_exe, eb)) = &eval_ctx {
+                        if s == total_steps || s % eval_interval == 0 {
+                            eval_series.push((s, eval_pass(&self.trainer, eval_exe, eb)?));
+                        }
+                    }
                 }
                 batches_staged = staged.len();
             } else {
@@ -912,6 +1176,12 @@ impl Session {
                     let ub = self.trainer.upload_batch(&b)?;
                     uploads += 1;
                     self.trainer.step_uploaded(&ub)?;
+                    let s = uploads as u64;
+                    if let Some((eval_exe, eb)) = &eval_ctx {
+                        if s == total_steps || s % eval_interval == 0 {
+                            eval_series.push((s, eval_pass(&self.trainer, eval_exe, eb)?));
+                        }
+                    }
                 }
                 batches_staged = uploads;
             }
@@ -928,9 +1198,16 @@ impl Session {
                         self.trainer.step_uploaded(&staged[idx])?;
                     }
                 }
+                let s = i + 1;
+                if let Some((eval_exe, eb)) = &eval_ctx {
+                    if s == total_steps || s % eval_interval == 0 {
+                        eval_series.push((s, eval_pass(&self.trainer, eval_exe, eb)?));
+                    }
+                }
             }
             batches_staged = staged.len();
         }
+        let final_eval_loss = eval_series.last().map(|&(_, l)| l);
         Ok(RunReport {
             summary: self.trainer.summary(),
             examples: n_examples,
@@ -944,6 +1221,9 @@ impl Session {
             source_notes: source.notes,
             packed_density,
             padding_recovery,
+            eval: eval_series,
+            final_eval_loss,
+            eval_examples,
         })
     }
 }
@@ -1021,6 +1301,63 @@ mod tests {
         // default stays bitwise-legacy
         let d = SessionBuilder::new().build_spec().unwrap();
         assert_eq!(d.epoch_policy, EpochPolicy::default());
+    }
+
+    #[test]
+    fn eval_fraction_bounds_rejected_at_build() {
+        for bad in [0.0, -0.25, f64::NAN] {
+            let err = SessionBuilder::new().eval_fraction(bad).build_spec().unwrap_err();
+            assert!(
+                err.to_string().contains("positive and finite"),
+                "fraction {bad}: {err}"
+            );
+        }
+        for bad in [1.0, 1.5, 7.0] {
+            let err = SessionBuilder::new().eval_fraction(bad).build_spec().unwrap_err();
+            assert!(
+                err.to_string().contains("at least one example trains"),
+                "fraction {bad}: {err}"
+            );
+        }
+        let spec = SessionBuilder::new().eval_fraction(0.2).build_spec().unwrap();
+        assert_eq!(spec.eval_fraction, Some(0.2));
+        // default: no eval split, response-only loss
+        let d = SessionBuilder::new().build_spec().unwrap();
+        assert_eq!(d.eval_fraction, None);
+        assert_eq!(d.loss_mode, LossMode::ResponseOnly);
+    }
+
+    #[test]
+    fn eval_split_is_a_stable_disjoint_partition() {
+        let (train, eval) = eval_split(100, 0.2, 42);
+        assert_eq!(eval.len(), 20);
+        assert_eq!(train.len(), 80);
+        let mut union: Vec<usize> = train.iter().chain(&eval).copied().collect();
+        union.sort_unstable();
+        assert_eq!(union, (0..100).collect::<Vec<_>>(), "partition of 0..n");
+        // bitwise stable across calls; seed-driven
+        assert_eq!(eval_split(100, 0.2, 42), (train, eval));
+        assert_ne!(eval_split(100, 0.2, 43).1, eval_split(100, 0.2, 42).1);
+        // clamped to keep both sides non-empty
+        let (t, e) = eval_split(2, 0.01, 7);
+        assert_eq!((t.len(), e.len()), (1, 1));
+        let (t, e) = eval_split(10, 0.99, 7);
+        assert_eq!((t.len(), e.len()), (1, 9));
+    }
+
+    #[test]
+    fn chat_source_validation() {
+        let err = SessionBuilder::new()
+            .data(DataSource::chat("", 1, 64))
+            .build_spec()
+            .unwrap_err();
+        assert!(err.to_string().contains("file path"), "{err}");
+        let err = SessionBuilder::new()
+            .data(DataSource::chat("x.jsonl", 1, 0))
+            .build_spec()
+            .unwrap_err();
+        assert!(err.to_string().contains("max_seq"), "{err}");
+        assert_eq!(DataSource::chat("x.jsonl", 1, 64).label(), "chat(x.jsonl)");
     }
 
     #[test]

@@ -115,6 +115,37 @@ pub fn resolve(manifest: &Manifest, task: &Task) -> Result<Resolved> {
     Ok(Resolved { train, init, spec, lora_plus_ratio: task.lora_plus_ratio() })
 }
 
+/// Find the forward-only eval executable for a train executable: the
+/// canonical `eval_<variant>` when the backend registers it, else any
+/// `kind == "eval"` executable of the same family and batch geometry
+/// (ablation aliases and broken variants share their family's eval, just
+/// like they share its init).
+pub fn resolve_eval(manifest: &Manifest, train_name: &str) -> Result<String> {
+    let preferred = train_name
+        .strip_prefix("train_step_")
+        .map(|v| format!("eval_{v}"))
+        .unwrap_or_else(|| "eval_chronicals".into());
+    if let Ok(e) = manifest.get(&preferred) {
+        if e.kind == "eval" {
+            return Ok(preferred);
+        }
+    }
+    let train = manifest.get(train_name)?;
+    for e in &manifest.executables {
+        if e.kind == "eval"
+            && e.family == train.family
+            && e.batch == train.batch
+            && e.seq == train.seq
+        {
+            return Ok(e.name.clone());
+        }
+    }
+    Err(anyhow!(
+        "no eval executable for {train_name} on this backend — \
+         held-out eval needs a forward-only executable of the same family"
+    ))
+}
+
 /// Find a usable init executable: the requested one, else the canonical
 /// init for the same family and model/batch geometry (ablation aliases and
 /// broken variants have no init of their own).
@@ -170,6 +201,26 @@ mod tests {
         assert_eq!(r.init, "init_chronicals");
         let r = resolve(be.manifest(), &Task::LoraBroken).unwrap();
         assert_eq!(r.init, "init_lora");
+    }
+
+    #[test]
+    fn eval_resolves_for_every_train_task() {
+        let be = CpuBackend::new();
+        assert_eq!(
+            resolve_eval(be.manifest(), "train_step_chronicals").unwrap(),
+            "eval_chronicals"
+        );
+        assert_eq!(resolve_eval(be.manifest(), "train_step_lora").unwrap(), "eval_lora");
+        // aliases without an eval of their own fall back to the family eval
+        assert_eq!(
+            resolve_eval(be.manifest(), "train_step_ablate_liger").unwrap(),
+            "eval_chronicals"
+        );
+        assert_eq!(
+            resolve_eval(be.manifest(), "train_step_lora_broken").unwrap(),
+            "eval_lora"
+        );
+        assert!(resolve_eval(be.manifest(), "train_step_nope").is_err());
     }
 
     #[test]

@@ -1,0 +1,472 @@
+//! Hermetic gzip (RFC 1952) + DEFLATE (RFC 1951) decompressor for
+//! `.jsonl.gz` corpora. Decompression only — the repo never writes
+//! archives — and no external crates: like `util::json` and `util::toml`
+//! this is a small, auditable subset implementation (stored, fixed-Huffman
+//! and dynamic-Huffman blocks; the complete format every `gzip`/zlib
+//! encoder emits). The CRC32 and ISIZE trailer are verified, so a
+//! truncated or corrupted corpus is a hard error, never silent garbage.
+
+use anyhow::{anyhow, bail, Result};
+
+const MAX_BITS: usize = 15;
+
+/// Decompress a complete gzip file image (one or more concatenated
+/// members, as `gzip` and `cat a.gz b.gz` produce).
+pub fn decompress(gz: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut rest = gz;
+    if rest.is_empty() {
+        bail!("empty gzip stream");
+    }
+    while !rest.is_empty() {
+        rest = member(rest, &mut out)?;
+    }
+    Ok(out)
+}
+
+/// Decode one gzip member into `out`, returning the unconsumed suffix.
+fn member<'a>(gz: &'a [u8], out: &mut Vec<u8>) -> Result<&'a [u8]> {
+    if gz.len() < 10 || gz[0] != 0x1f || gz[1] != 0x8b {
+        bail!("not a gzip stream (bad magic bytes)");
+    }
+    if gz[2] != 8 {
+        bail!("unsupported gzip compression method {} (expected 8 = deflate)", gz[2]);
+    }
+    let flg = gz[3];
+    if flg & 0xe0 != 0 {
+        bail!("reserved gzip FLG bits set ({flg:#04x})");
+    }
+    // skip MTIME(4), XFL, OS
+    let mut i = 10usize;
+    let need = |i: usize, n: usize| -> Result<()> {
+        if i + n > gz.len() {
+            bail!("truncated gzip header");
+        }
+        Ok(())
+    };
+    if flg & 0x04 != 0 {
+        // FEXTRA
+        need(i, 2)?;
+        let xlen = u16::from_le_bytes([gz[i], gz[i + 1]]) as usize;
+        i += 2;
+        need(i, xlen)?;
+        i += xlen;
+    }
+    for flag in [0x08u8, 0x10] {
+        // FNAME, FCOMMENT: NUL-terminated
+        if flg & flag != 0 {
+            let nul = gz[i..]
+                .iter()
+                .position(|&b| b == 0)
+                .ok_or_else(|| anyhow!("unterminated gzip header string"))?;
+            i += nul + 1;
+        }
+    }
+    if flg & 0x02 != 0 {
+        // FHCRC
+        need(i, 2)?;
+        i += 2;
+    }
+
+    let start = out.len();
+    let consumed = inflate(&gz[i..], out)?;
+    let trailer = &gz[i + consumed..];
+    if trailer.len() < 8 {
+        bail!("truncated gzip trailer");
+    }
+    let want_crc = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+    let want_len = u32::from_le_bytes([trailer[4], trailer[5], trailer[6], trailer[7]]);
+    let got = &out[start..];
+    if got.len() as u32 != want_len {
+        bail!(
+            "gzip ISIZE mismatch: trailer says {want_len} bytes, decompressed {}",
+            got.len()
+        );
+    }
+    let got_crc = crc32(got);
+    if got_crc != want_crc {
+        bail!("gzip CRC32 mismatch: expected {want_crc:#010x}, computed {got_crc:#010x}");
+    }
+    Ok(&trailer[8..])
+}
+
+/// Inflate a raw DEFLATE stream into `out`; returns the number of input
+/// bytes consumed (the stream knows its own end via the final-block bit).
+fn inflate(data: &[u8], out: &mut Vec<u8>) -> Result<usize> {
+    let mut bits = Bits { b: data, pos: 0, buf: 0, cnt: 0 };
+    loop {
+        let bfinal = bits.need(1)?;
+        let btype = bits.need(2)?;
+        match btype {
+            0 => stored_block(&mut bits, out)?,
+            1 => {
+                let (litlen, dist) = fixed_tables();
+                codes(&mut bits, &litlen, &dist, out)?;
+            }
+            2 => {
+                let (litlen, dist) = dynamic_tables(&mut bits)?;
+                codes(&mut bits, &litlen, &dist, out)?;
+            }
+            _ => bail!("invalid deflate block type 3"),
+        }
+        if bfinal == 1 {
+            // cnt < 8 always holds here, so the buffered bits are padding
+            // within the last consumed byte: the trailer starts at pos.
+            return Ok(bits.pos);
+        }
+    }
+}
+
+/// LSB-first bit reader (the DEFLATE bit order).
+struct Bits<'a> {
+    b: &'a [u8],
+    pos: usize,
+    buf: u32,
+    cnt: u32,
+}
+
+impl Bits<'_> {
+    fn need(&mut self, n: u32) -> Result<u32> {
+        debug_assert!(n <= 16);
+        while self.cnt < n {
+            let byte = *self
+                .b
+                .get(self.pos)
+                .ok_or_else(|| anyhow!("truncated deflate stream"))? as u32;
+            self.pos += 1;
+            self.buf |= byte << self.cnt;
+            self.cnt += 8;
+        }
+        let v = self.buf & ((1u32 << n) - 1);
+        self.buf >>= n;
+        self.cnt -= n;
+        Ok(v)
+    }
+
+    /// Discard the partial byte (stored blocks are byte-aligned).
+    fn byte_align(&mut self) {
+        self.buf = 0;
+        self.cnt = 0;
+    }
+}
+
+fn stored_block(bits: &mut Bits, out: &mut Vec<u8>) -> Result<()> {
+    bits.byte_align();
+    let b = bits.b;
+    if bits.pos + 4 > b.len() {
+        bail!("truncated stored block header");
+    }
+    let len = u16::from_le_bytes([b[bits.pos], b[bits.pos + 1]]) as usize;
+    let nlen = u16::from_le_bytes([b[bits.pos + 2], b[bits.pos + 3]]);
+    if nlen != !(len as u16) {
+        bail!("stored block LEN/NLEN mismatch");
+    }
+    bits.pos += 4;
+    if bits.pos + len > b.len() {
+        bail!("truncated stored block payload");
+    }
+    out.extend_from_slice(&b[bits.pos..bits.pos + len]);
+    bits.pos += len;
+    Ok(())
+}
+
+/// Canonical Huffman decoding table: code counts per bit length plus the
+/// symbols sorted by (length, symbol) — the puff/zlib representation.
+struct Huffman {
+    count: [u16; MAX_BITS + 1],
+    symbol: Vec<u16>,
+}
+
+impl Huffman {
+    fn build(lengths: &[u16]) -> Result<Huffman> {
+        let mut count = [0u16; MAX_BITS + 1];
+        for &l in lengths {
+            count[l as usize] += 1;
+        }
+        // over-subscription check (incomplete codes are tolerated: any
+        // unassigned code errors at decode time)
+        let mut left: i32 = 1;
+        for len in 1..=MAX_BITS {
+            left <<= 1;
+            left -= count[len] as i32;
+            if left < 0 {
+                bail!("over-subscribed Huffman code");
+            }
+        }
+        let mut offs = [0usize; MAX_BITS + 1];
+        for len in 1..MAX_BITS {
+            offs[len + 1] = offs[len] + count[len] as usize;
+        }
+        let mut symbol = vec![0u16; lengths.len()];
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l != 0 {
+                symbol[offs[l as usize]] = sym as u16;
+                offs[l as usize] += 1;
+            }
+        }
+        Ok(Huffman { count, symbol })
+    }
+
+    /// Decode one symbol bit by bit (simple and fast enough for corpora).
+    fn decode(&self, bits: &mut Bits) -> Result<usize> {
+        let mut code = 0usize;
+        let mut first = 0usize;
+        let mut index = 0usize;
+        for len in 1..=MAX_BITS {
+            code |= bits.need(1)? as usize;
+            let count = self.count[len] as usize;
+            if code < first + count {
+                return Ok(self.symbol[index + (code - first)] as usize);
+            }
+            index += count;
+            first = (first + count) << 1;
+            code <<= 1;
+        }
+        bail!("invalid Huffman code")
+    }
+}
+
+/// The fixed-Huffman tables (RFC 1951 §3.2.6).
+fn fixed_tables() -> (Huffman, Huffman) {
+    let mut litlen = vec![8u16; 288];
+    for l in litlen.iter_mut().take(256).skip(144) {
+        *l = 9;
+    }
+    for l in litlen.iter_mut().take(280).skip(256) {
+        *l = 7;
+    }
+    let dist = vec![5u16; 30];
+    // fixed tables cannot be over-subscribed: unwraps are safe
+    (Huffman::build(&litlen).unwrap(), Huffman::build(&dist).unwrap())
+}
+
+/// Read the dynamic-Huffman table definition (RFC 1951 §3.2.7).
+fn dynamic_tables(bits: &mut Bits) -> Result<(Huffman, Huffman)> {
+    const ORDER: [usize; 19] = [16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15];
+    let hlit = bits.need(5)? as usize + 257;
+    let hdist = bits.need(5)? as usize + 1;
+    let hclen = bits.need(4)? as usize + 4;
+    if hlit > 286 || hdist > 30 {
+        bail!("dynamic block declares too many codes (HLIT={hlit}, HDIST={hdist})");
+    }
+    let mut cl_lengths = [0u16; 19];
+    for &o in ORDER.iter().take(hclen) {
+        cl_lengths[o] = bits.need(3)? as u16;
+    }
+    let cl = Huffman::build(&cl_lengths)?;
+
+    let total = hlit + hdist;
+    let mut lengths = Vec::with_capacity(total);
+    while lengths.len() < total {
+        let sym = cl.decode(bits)?;
+        let (value, repeat) = match sym {
+            0..=15 => (sym as u16, 1usize),
+            16 => {
+                let prev = *lengths
+                    .last()
+                    .ok_or_else(|| anyhow!("repeat code with no previous length"))?;
+                (prev, 3 + bits.need(2)? as usize)
+            }
+            17 => (0, 3 + bits.need(3)? as usize),
+            18 => (0, 11 + bits.need(7)? as usize),
+            _ => bail!("invalid code-length symbol {sym}"),
+        };
+        if lengths.len() + repeat > total {
+            bail!("code-length repeat overflows the table");
+        }
+        lengths.extend(std::iter::repeat(value).take(repeat));
+    }
+    if lengths[256] == 0 {
+        bail!("dynamic block has no end-of-block code");
+    }
+    Ok((Huffman::build(&lengths[..hlit])?, Huffman::build(&lengths[hlit..])?))
+}
+
+const LEN_BASE: [usize; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99, 115,
+    131, 163, 195, 227, 258,
+];
+const LEN_EXTRA: [u32; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0,
+];
+const DIST_BASE: [usize; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025, 1537,
+    2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+const DIST_EXTRA: [u32; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12, 12,
+    13, 13,
+];
+
+/// Decode one compressed block's literal/length + distance code stream.
+fn codes(bits: &mut Bits, litlen: &Huffman, dist: &Huffman, out: &mut Vec<u8>) -> Result<()> {
+    loop {
+        let sym = litlen.decode(bits)?;
+        match sym {
+            0..=255 => out.push(sym as u8),
+            256 => return Ok(()),
+            _ => {
+                let s = sym - 257;
+                if s >= 29 {
+                    bail!("invalid length symbol {sym}");
+                }
+                let len = LEN_BASE[s] + bits.need(LEN_EXTRA[s])? as usize;
+                let d = dist.decode(bits)?;
+                if d >= 30 {
+                    bail!("invalid distance symbol {d}");
+                }
+                let distance = DIST_BASE[d] + bits.need(DIST_EXTRA[d])? as usize;
+                if distance > out.len() {
+                    bail!("back-reference distance {distance} exceeds output ({})", out.len());
+                }
+                // byte-at-a-time copy: overlapping references (distance <
+                // len) are the RLE idiom and must see freshly written bytes
+                let from = out.len() - distance;
+                for k in 0..len {
+                    let byte = out[from + k];
+                    out.push(byte);
+                }
+            }
+        }
+    }
+}
+
+/// CRC-32 (IEEE 802.3, the gzip polynomial), bitwise — corpora are small
+/// enough that a table is not worth the code.
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xffff_ffffu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xedb8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Wrap a raw deflate stream in a minimal gzip member by hand.
+    fn gz_wrap(deflate: &[u8], plain: &[u8]) -> Vec<u8> {
+        let mut v = vec![0x1f, 0x8b, 0x08, 0x00, 0, 0, 0, 0, 0x00, 0xff];
+        v.extend_from_slice(deflate);
+        v.extend_from_slice(&crc32(plain).to_le_bytes());
+        v.extend_from_slice(&(plain.len() as u32).to_le_bytes());
+        v
+    }
+
+    /// Hand-built stored (uncompressed) block.
+    fn stored_deflate(plain: &[u8]) -> Vec<u8> {
+        let len = plain.len() as u16;
+        let mut v = vec![0x01]; // BFINAL=1, BTYPE=00
+        v.extend_from_slice(&len.to_le_bytes());
+        v.extend_from_slice(&(!len).to_le_bytes());
+        v.extend_from_slice(plain);
+        v
+    }
+
+    #[test]
+    fn stored_block_roundtrip() {
+        let plain = b"one json line per record\n";
+        let gz = gz_wrap(&stored_deflate(plain), plain);
+        assert_eq!(decompress(&gz).unwrap(), plain);
+    }
+
+    #[test]
+    fn fixed_huffman_block() {
+        // `zlib.compressobj(9, DEFLATED, -15)` on b"hello hello hello hello"
+        // emits a single fixed-Huffman final block with back-references.
+        let deflate = [0xcb, 0x48, 0xcd, 0xc9, 0xc9, 0x57, 0xc8, 0x40, 0x27, 0x01];
+        let plain = b"hello hello hello hello";
+        let gz = gz_wrap(&deflate, plain);
+        assert_eq!(decompress(&gz).unwrap(), plain);
+    }
+
+    #[test]
+    fn dynamic_huffman_member_from_real_gzip() {
+        // A real `gzip`-format member (python zlib, mtime=0) over 30 varied
+        // chat-JSONL lines: BTYPE=10, the encoding every encoder uses for
+        // real corpora.
+        let gz: &[u8] = &DYNAMIC_VECTOR;
+        let out = decompress(gz).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(text.lines().count(), 30);
+        assert!(text.starts_with(r#"{"messages":[{"role":"user","#), "{text}");
+        assert!(text.contains(r#""content":"question 29 about packing and kernels""#));
+    }
+
+    #[test]
+    fn concatenated_members() {
+        let a = b"first member\n";
+        let b = b"second member\n";
+        let mut gz = gz_wrap(&stored_deflate(a), a);
+        gz.extend_from_slice(&gz_wrap(&stored_deflate(b), b));
+        assert_eq!(decompress(&gz).unwrap(), b"first member\nsecond member\n");
+    }
+
+    #[test]
+    fn corruption_is_a_hard_error() {
+        let plain = b"payload";
+        let good = gz_wrap(&stored_deflate(plain), plain);
+
+        // flipped payload byte -> CRC mismatch
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - 10] ^= 0x01;
+        assert!(decompress(&bad).unwrap_err().to_string().contains("CRC32"));
+
+        // truncated trailer
+        assert!(decompress(&good[..good.len() - 3])
+            .unwrap_err()
+            .to_string()
+            .contains("trailer"));
+
+        // not gzip at all
+        assert!(decompress(b"{\"messages\": []}")
+            .unwrap_err()
+            .to_string()
+            .contains("magic"));
+
+        // empty input
+        assert!(decompress(b"").is_err());
+    }
+
+    #[test]
+    fn isize_mismatch_is_detected() {
+        let plain = b"payload";
+        let mut gz = gz_wrap(&stored_deflate(plain), plain);
+        let n = gz.len();
+        gz[n - 4] ^= 0x01; // corrupt ISIZE
+        assert!(decompress(&gz).unwrap_err().to_string().contains("ISIZE"));
+    }
+
+    const DYNAMIC_VECTOR: [u8; 282] = [
+        0x1f, 0x8b, 0x08, 0x00, 0x00, 0x00, 0x00, 0x00, 0x02, 0xff, 0xcd, 0xd7,
+        0x3d, 0x6a, 0xc4, 0x30, 0x10, 0x86, 0xe1, 0x3e, 0xa7, 0x10, 0xaa, 0x5d,
+        0xec, 0x8c, 0xff, 0xf7, 0x2a, 0x21, 0x85, 0x76, 0x33, 0x6c, 0xc4, 0x3a,
+        0x52, 0xa2, 0x91, 0x71, 0x61, 0xf6, 0xee, 0x71, 0x9a, 0x90, 0x36, 0xf0,
+        0x05, 0xa6, 0x32, 0x18, 0x3c, 0x3c, 0x18, 0x6b, 0x5e, 0xbc, 0xfb, 0x77,
+        0x51, 0x0d, 0x37, 0x51, 0x7f, 0x7e, 0xde, 0x7d, 0xc9, 0x8b, 0xf8, 0xb3,
+        0x5f, 0x55, 0x8a, 0x6f, 0xfc, 0x35, 0xa7, 0x2a, 0xa9, 0x1e, 0x37, 0x3e,
+        0x57, 0xd1, 0x1a, 0x73, 0x72, 0x27, 0x17, 0x2e, 0x79, 0xad, 0xee, 0x23,
+        0x5c, 0xef, 0x31, 0xdd, 0x5c, 0x48, 0xaf, 0xee, 0x2e, 0x25, 0xc9, 0xa2,
+        0xfe, 0xd1, 0xfc, 0x0c, 0x08, 0xaa, 0x51, 0x6b, 0x38, 0x9e, 0xfd, 0x3d,
+        0x25, 0x24, 0xdd, 0xa4, 0x1c, 0x33, 0xb6, 0x58, 0xdf, 0xdc, 0x25, 0x26,
+        0x75, 0x8d, 0x2b, 0x79, 0xfb, 0xbe, 0x2c, 0x59, 0x8f, 0x09, 0x2f, 0x8f,
+        0xa7, 0xfd, 0x8f, 0x22, 0x02, 0x88, 0x46, 0xa8, 0x88, 0x01, 0x22, 0x82,
+        0x8a, 0x5a, 0x80, 0x68, 0x82, 0x8a, 0x3a, 0x80, 0x88, 0xa1, 0xa2, 0x1e,
+        0x20, 0x9a, 0xa1, 0xa2, 0x01, 0x20, 0x6a, 0xa1, 0xa2, 0x11, 0xf1, 0x65,
+        0x63, 0x8f, 0xff, 0x04, 0x20, 0x75, 0x50, 0xd1, 0x8c, 0x78, 0x49, 0xd8,
+        0xf3, 0x4f, 0x88, 0xb5, 0xdd, 0x63, 0x49, 0x88, 0xbd, 0x4d, 0xd8, 0x15,
+        0x40, 0x88, 0xcd, 0x3d, 0x60, 0x49, 0xad, 0xbd, 0xe0, 0x76, 0xe6, 0x8a,
+        0x4b, 0xbd, 0xb9, 0xe4, 0xd2, 0x60, 0xae, 0xb9, 0x34, 0x9a, 0x8b, 0x2e,
+        0x4d, 0xe6, 0xaa, 0x4b, 0xb3, 0xb9, 0xec, 0xf2, 0xc9, 0x5e, 0x77, 0x99,
+        0xcc, 0x85, 0x97, 0xd9, 0x5e, 0x79, 0xb9, 0x35, 0x57, 0x5e, 0xee, 0xec,
+        0x95, 0x97, 0x7b, 0x73, 0xe5, 0xe5, 0xc1, 0x5c, 0x79, 0x79, 0xb4, 0xf7,
+        0xaf, 0x3b, 0x99, 0x2b, 0x2f, 0xcf, 0xff, 0x5e, 0xde, 0x2f, 0x97, 0x91,
+        0x1e, 0x1d, 0x36, 0x11, 0x00, 0x00,
+    ];
+}

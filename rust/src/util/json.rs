@@ -248,14 +248,39 @@ impl<'a> Parser<'a> {
                         b'b' => out.push('\u{8}'),
                         b'f' => out.push('\u{c}'),
                         b'u' => {
-                            let hex = std::str::from_utf8(
-                                self.b
-                                    .get(self.i..self.i + 4)
-                                    .ok_or_else(|| anyhow!("bad \\u escape"))?,
-                            )?;
-                            let cp = u32::from_str_radix(hex, 16)?;
-                            self.i += 4;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            let cp = self.hex4()?;
+                            let cp = match cp {
+                                // UTF-16 high surrogate: must pair with a
+                                // following \uDC00..\uDFFF low surrogate
+                                0xD800..=0xDBFF => {
+                                    if self.b.get(self.i) != Some(&b'\\')
+                                        || self.b.get(self.i + 1) != Some(&b'u')
+                                    {
+                                        bail!(
+                                            "lone high surrogate \\u{cp:04X} at offset {} \
+                                             (expected a \\uDC00..\\uDFFF low surrogate)",
+                                            self.i
+                                        );
+                                    }
+                                    self.i += 2;
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..=0xDFFF).contains(&lo) {
+                                        bail!(
+                                            "\\u{cp:04X} followed by \\u{lo:04X}, \
+                                             which is not a low surrogate"
+                                        );
+                                    }
+                                    0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00)
+                                }
+                                0xDC00..=0xDFFF => {
+                                    bail!("lone low surrogate \\u{cp:04X} at offset {}", self.i)
+                                }
+                                cp => cp,
+                            };
+                            out.push(
+                                char::from_u32(cp)
+                                    .ok_or_else(|| anyhow!("invalid code point U+{cp:04X}"))?,
+                            );
                         }
                         _ => bail!("bad escape at offset {}", self.i),
                     }
@@ -274,6 +299,18 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits of a `\u` escape, consumed.
+    fn hex4(&mut self) -> Result<u32> {
+        let hex = std::str::from_utf8(
+            self.b
+                .get(self.i..self.i + 4)
+                .ok_or_else(|| anyhow!("bad \\u escape"))?,
+        )?;
+        let cp = u32::from_str_radix(hex, 16)?;
+        self.i += 4;
+        Ok(cp)
     }
 
     fn array(&mut self) -> Result<Json> {
@@ -390,5 +427,43 @@ mod tests {
     fn unicode_strings() {
         let j = Json::parse(r#""café — ünïcödé""#).unwrap();
         assert_eq!(j.as_str(), Some("café — ünïcödé"));
+    }
+
+    #[test]
+    fn surrogate_pairs_combine() {
+        // U+1F600 is \ud83d\ude00 in UTF-16; the pair must decode to
+        // one char, not two U+FFFD replacement chars
+        let j = Json::parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(j.as_str(), Some("\u{1f600}"));
+        let j = Json::parse(r#""a \ud83d\ude00 b""#).unwrap();
+        assert_eq!(j.as_str(), Some("a \u{1f600} b"));
+        // BMP escapes still work, including ones adjacent to a pair
+        let j = Json::parse(r#""\u00e9\ud83d\ude00\u0041""#).unwrap();
+        assert_eq!(j.as_str(), Some("\u{e9}\u{1f600}A"));
+    }
+
+    #[test]
+    fn lone_surrogates_are_errors() {
+        for src in [
+            r#""\ud83d""#,         // lone high at end of string
+            r#""\ud83d x""#,       // high followed by a plain char
+            r#""\ud83d\u0041""#,   // high followed by a non-surrogate escape
+            r#""\ude00""#,         // lone low
+            r#""\ude00\ud83d""#,   // reversed pair
+        ] {
+            let err = Json::parse(src).unwrap_err();
+            assert!(err.to_string().contains("surrogate"), "{src}: {err}");
+        }
+    }
+
+    #[test]
+    fn surrogate_pair_roundtrips_through_serializer() {
+        let j = Json::parse(r#"{"t":"smile 😀"}"#).unwrap();
+        assert_eq!(j.field("t").unwrap().as_str(), Some("smile 😀"));
+        // the serializer writes the char raw (valid UTF-8 JSON) and it
+        // parses back identically
+        let out = j.to_string_pretty();
+        assert!(out.contains('😀'), "{out}");
+        assert_eq!(Json::parse(&out).unwrap(), j);
     }
 }

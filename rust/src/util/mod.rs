@@ -1,9 +1,11 @@
-//! Self-contained substrates: JSON, a TOML subset, and a deterministic PRNG.
+//! Self-contained substrates: JSON, a TOML subset, gzip inflation, and a
+//! deterministic PRNG.
 //!
 //! The build environment is fully offline with a minimal crate set, so the
-//! serde/toml/rand stack is hand-rolled here (and unit-tested) instead of
-//! pulled from crates.io.
+//! serde/toml/rand/flate stack is hand-rolled here (and unit-tested)
+//! instead of pulled from crates.io.
 
+pub mod gzip;
 pub mod json;
 pub mod rng;
 pub mod toml;

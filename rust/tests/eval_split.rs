@@ -1,0 +1,130 @@
+//! Property tests for the held-out eval split (DESIGN.md §9).
+//!
+//! The split contract: `eval_split(n, fraction, seed)` partitions `0..n`
+//! into disjoint train/eval index sets, holds out ⌊n·fraction⌋ examples
+//! (clamped so both sides stay non-empty), is a pure function of
+//! `(n, fraction, seed)` — bitwise stable across calls and indifferent to
+//! shuffle seeds or epoch counts — and rejects nonsense fractions at
+//! session build time with actionable messages.
+
+use chronicals::backend::cpu::CpuBackend;
+use chronicals::session::{eval_split, DataSource, RunReport, SessionBuilder, Task};
+use std::rc::Rc;
+
+#[test]
+fn split_partitions_every_shape() {
+    for &(n, f) in &[(2, 0.5), (5, 0.9), (10, 0.01), (10, 0.2), (97, 0.33), (100, 0.2)] {
+        for seed in [0u64, 1, 42, u64::MAX] {
+            let (train, eval) = eval_split(n, f, seed);
+            // sizes: ⌊n·f⌋ clamped to [1, n-1], nothing lost
+            let expect_eval = ((n as f64 * f).floor() as usize).clamp(1, n - 1);
+            assert_eq!(eval.len(), expect_eval, "n={n} f={f} seed={seed}");
+            assert_eq!(train.len() + eval.len(), n);
+            // disjoint, and the union is exactly 0..n
+            let mut union: Vec<usize> = train.iter().chain(&eval).copied().collect();
+            union.sort_unstable();
+            assert_eq!(union, (0..n).collect::<Vec<_>>(), "n={n} f={f} seed={seed}");
+            // both sides come back sorted (stable downstream iteration)
+            assert!(train.windows(2).all(|w| w[0] < w[1]));
+            assert!(eval.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}
+
+#[test]
+fn split_is_bitwise_stable_and_seed_driven() {
+    let a = eval_split(100, 0.2, 7);
+    let b = eval_split(100, 0.2, 7);
+    assert_eq!(a, b, "same (n, fraction, seed) must reproduce the same split");
+    let c = eval_split(100, 0.2, 8);
+    assert_ne!(a.1, c.1, "a different seed must pick a different holdout");
+    // the clamp keeps both sides alive at the extremes
+    let (train, eval) = eval_split(2, 0.01, 3);
+    assert_eq!((train.len(), eval.len()), (1, 1));
+    let (train, eval) = eval_split(10, 0.99, 3);
+    assert_eq!((train.len(), eval.len()), (1, 9));
+}
+
+fn run_with(shuffle_seed: Option<u64>, epochs: Option<u64>) -> RunReport {
+    let mut b = SessionBuilder::new()
+        .task(Task::FullFinetune)
+        .data(DataSource::synthetic(64, 42, 48))
+        .eval_fraction(0.25)
+        .steps(4)
+        .lr(1e-3)
+        .seed(42)
+        .on_backend(Rc::new(CpuBackend::new()));
+    if let Some(s) = shuffle_seed {
+        b = b.shuffle_seed(s);
+    }
+    if let Some(e) = epochs {
+        b = b.epochs(e);
+    }
+    b.build().unwrap().run().unwrap()
+}
+
+#[test]
+fn holdout_is_invariant_to_shuffle_and_epoch_settings() {
+    // the split depends on the session seed alone: whatever the batch plan
+    // does (cycle mode, shuffled epochs, more epochs), the held-out set —
+    // and therefore the untrained step-0 eval loss — is bitwise identical
+    let base = run_with(None, None);
+    let shuffled = run_with(Some(9), Some(1));
+    let two_epochs = run_with(Some(3), Some(2));
+
+    assert_eq!(base.eval_examples, 16, "⌊64 · 0.25⌋ examples held out");
+    assert_eq!(shuffled.eval_examples, 16);
+    assert_eq!(two_epochs.eval_examples, 16);
+
+    let step0 = |r: &RunReport| {
+        assert_eq!(r.eval.first().map(|&(s, _)| s), Some(0), "eval starts before training");
+        r.eval[0].1
+    };
+    let b0 = step0(&base);
+    assert_eq!(b0.to_bits(), step0(&shuffled).to_bits(), "shuffle must not move the holdout");
+    assert_eq!(b0.to_bits(), step0(&two_epochs).to_bits(), "epochs must not move the holdout");
+
+    // the series covers the run: last point lands on the final step, the
+    // summary echoes it, and training only ever saw the remaining examples
+    for r in [&base, &shuffled, &two_epochs] {
+        assert_eq!(r.examples, 64);
+        assert_eq!(r.final_eval_loss, r.eval.last().map(|&(_, l)| l));
+        assert!(r.eval.len() >= 2, "step-0 and final-step eval points: {:?}", r.eval);
+    }
+    assert_eq!(base.eval.last().unwrap().0, 4, "cycle mode evals at the last step");
+}
+
+#[test]
+fn training_moves_the_eval_loss() {
+    // held-out loss responds to training on this tiny substrate — the eval
+    // pass reads real updated parameters, not a stale snapshot
+    let r = run_with(None, None);
+    let first = r.eval.first().unwrap().1;
+    let last = r.final_eval_loss.unwrap();
+    assert!(first.is_finite() && last.is_finite());
+    assert_ne!(
+        first.to_bits(),
+        last.to_bits(),
+        "4 optimizer steps must move the held-out loss ({first} -> {last})"
+    );
+}
+
+#[test]
+fn bad_fractions_are_rejected_at_build_with_real_messages() {
+    let build = |f: f64| {
+        SessionBuilder::new()
+            .data(DataSource::synthetic(16, 1, 32))
+            .eval_fraction(f)
+            .build_spec()
+    };
+    for bad in [0.0, -0.25, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        let err = build(bad).unwrap_err().to_string();
+        assert!(err.contains("positive and finite"), "{bad}: {err}");
+        assert!(err.contains("--eval-fraction"), "points at the flag: {err}");
+    }
+    for bad in [1.0, 1.5, 7.0] {
+        let err = build(bad).unwrap_err().to_string();
+        assert!(err.contains("at least one example trains"), "{bad}: {err}");
+    }
+    assert!(build(0.2).is_ok());
+}

@@ -64,6 +64,57 @@ fn fast_path_never_materializes_probs_or_logits() {
     assert!(peak < tv / 2, "peak {peak} is within 2x of the [T,V] tensor ({tv})");
 }
 
+/// The forward-only eval pass (the held-out loss loop) is a subset of the
+/// train step's forward: it must stay within the same activation-scale
+/// lease ceiling — never materializing `[B, Hq, S, S]` or `[T, V]` — and a
+/// warm arena serves it with zero new heap allocations, so periodic eval
+/// adds no new peak buffers to a training run.
+#[test]
+fn eval_pass_adds_no_new_peak_buffers() {
+    let dims = dims();
+    let (batch, seq) = (4usize, 128usize);
+    let t = batch * seq;
+    let bhss = batch * dims.n_heads * seq * seq;
+    let tv = t * dims.vocab;
+    let activation_ceiling = t * dims.d_ff.max(dims.d_model);
+
+    let fast = FastCpuBackend::custom(dims, batch, seq, 2);
+    let exe = "train_step_chronicals";
+    let spec = fast.manifest().get(exe).unwrap().clone();
+    let (_tok, exs) = harness::build_corpus(384, 5, spec.model_config.vocab, 96);
+    let batches = harness::make_batches(fast.manifest(), exe, &exs, true).unwrap();
+    let mut state = fast.init_state("init_chronicals", 5).unwrap();
+    let ub = fast.upload_batch(exe, &batches[0]).unwrap();
+
+    // warm the arena with a full train step (forward + backward)
+    fast.train_step(exe, &mut state, &ub, 1, 1e-3, 1e-3).unwrap();
+    fast.exec().arena().reset_peak();
+    fast.train_step(exe, &mut state, &ub, 2, 1e-3, 1e-3).unwrap();
+    let train_peak = fast.exec().arena().peak_elems();
+    let warm_allocs = fast.exec().arena().heap_allocs();
+
+    fast.exec().arena().reset_peak();
+    let loss = fast.eval_loss(exe, &state, &batches[0]).unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "eval loss {loss}");
+    let eval_peak = fast.exec().arena().peak_elems();
+    assert!(eval_peak > 0, "arena accounting saw no eval leases");
+    assert!(
+        eval_peak <= train_peak,
+        "eval peak {eval_peak} exceeds the train-step peak {train_peak}"
+    );
+    assert!(
+        eval_peak <= activation_ceiling,
+        "eval peak {eval_peak} exceeds the activation ceiling {activation_ceiling}"
+    );
+    assert!(eval_peak < bhss / 4, "eval peak {eval_peak} within 4x of [B,Hq,S,S] ({bhss})");
+    assert!(eval_peak < tv / 2, "eval peak {eval_peak} within 2x of [T,V] ({tv})");
+    assert_eq!(
+        fast.exec().arena().heap_allocs(),
+        warm_allocs,
+        "a warm arena must serve the eval pass without new heap allocations"
+    );
+}
+
 /// Steady-state steps lease everything from the warm free list: zero arena
 /// heap allocations after step 1 — and the peak accounting still reports
 /// the largest *logical* buffer even though every byte was recycled.

@@ -266,6 +266,42 @@ fn run_variant_trains_on_fast_backend() {
     assert!(s.last_loss < s.first_loss, "{} -> {}", s.first_loss, s.last_loss);
 }
 
+/// Held-out eval parity: the same session spec (synthetic corpus, 25%
+/// eval split) run on both CPU backends must agree on every point of the
+/// eval-loss series within the loss tolerance — same split (seeded), same
+/// batches, reassociation-only differences in the forward pass.
+#[test]
+fn session_eval_series_parity() {
+    let run = |be: Rc<dyn Backend>| {
+        chronicals::session::SessionBuilder::new()
+            .data(chronicals::session::DataSource::synthetic(64, 42, 48))
+            .eval_fraction(0.25)
+            .steps(4)
+            .lr(5e-3)
+            .seed(42)
+            .on_backend(be)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let r = run(Rc::new(CpuBackend::new()));
+    let f = run(Rc::new(FastCpuBackend::with_threads(3)));
+    assert_eq!(r.eval_examples, 16);
+    assert_eq!(f.eval_examples, 16, "split must not depend on the backend");
+    assert_eq!(r.eval.len(), f.eval.len());
+    for ((rs, rl), (fs, fl)) in r.eval.iter().zip(&f.eval) {
+        assert_eq!(rs, fs, "eval step points must line up");
+        assert!(rl.is_finite() && fl.is_finite(), "step {rs}: non-finite eval loss");
+        assert!(
+            (rl - fl).abs() <= LOSS_TOL * (1.0 + rl.abs()),
+            "step {rs}: eval loss {fl} vs reference {rl}"
+        );
+    }
+    let (rf, ff) = (r.final_eval_loss.unwrap(), f.final_eval_loss.unwrap());
+    assert!((rf - ff).abs() <= LOSS_TOL * (1.0 + rf.abs()), "final {ff} vs {rf}");
+}
+
 /// DeviceState/DeviceBatch created by one CPU backend are accepted by the
 /// other (shared representation) — documented contract, pinned here.
 #[test]
