@@ -14,13 +14,13 @@ pub mod model;
 
 pub use model::{CpuState, LoraCfg, ModelDims};
 
-use super::{Backend, DeviceBatch, DeviceState, StepOutputs};
+use super::{Backend, DeviceBatch, DeviceState, RowGrad, StepOutputs};
 use crate::batching::Batch;
 use crate::manifest::{
     DType, ExecutableSpec, Manifest, ModelConfigEcho, Role, StepConfigEcho, TensorSpec,
 };
 use crate::runtime::HostTensor;
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 use std::path::PathBuf;
 
 /// Reference batch geometry: small enough that a full train step is
@@ -261,6 +261,53 @@ pub(crate) fn batch_view(b: &Batch) -> Result<model::BatchView<'_>> {
     })
 }
 
+/// A borrowed single-row view of a staged batch — the data-parallel row
+/// shard (DESIGN.md §10). Sound because every part of the step is
+/// row-local: segment-masked attention never attends across batch rows,
+/// norms and the loss are per-position, so row `r` of the full batch and a
+/// `[1, S]` batch holding only row `r` compute identical values.
+pub(crate) fn row_view(b: &Batch, row: usize) -> Result<model::BatchView<'_>> {
+    ensure!(row < b.batch, "shard row {row} out of range for batch of {} rows", b.batch);
+    let (lo, hi) = (row * b.seq, (row + 1) * b.seq);
+    Ok(model::BatchView {
+        tokens: &b.tokens.as_i32()?[lo..hi],
+        targets: &b.targets.as_i32()?[lo..hi],
+        seg: &b.seg_ids.as_i32()?[lo..hi],
+        pos: &b.pos_ids.as_i32()?[lo..hi],
+        bsz: 1,
+        seq: b.seq,
+    })
+}
+
+/// Shared spec/family/geometry validation for the data-parallel seams —
+/// the same guards `train_step` applies, factored so both CPU backends
+/// stay exactly as strict on the sharded path.
+pub(crate) fn check_shard_call<'b>(
+    spec: &ExecutableSpec,
+    lora: Option<model::LoraCfg>,
+    state_lora: Option<model::LoraCfg>,
+    batch: &'b DeviceBatch,
+) -> Result<&'b Batch> {
+    if spec.kind != "train" {
+        bail!("'{}' is not a train executable (kind = {})", spec.name, spec.kind);
+    }
+    if state_lora != lora {
+        bail!(
+            "state family mismatch: executable '{}' expects lora={:?}, state has {:?}",
+            spec.name,
+            lora,
+            state_lora
+        );
+    }
+    let b = match batch {
+        DeviceBatch::Cpu(b) => b,
+        #[cfg(feature = "pjrt")]
+        _ => bail!("batch was uploaded to a different backend"),
+    };
+    check_geometry(spec, b)?;
+    Ok(b)
+}
+
 impl Backend for CpuBackend {
     fn name(&self) -> &'static str {
         "cpu"
@@ -330,7 +377,49 @@ impl Backend for CpuBackend {
         check_geometry(spec, b)?;
         let view = batch_view(b)?;
         let out = model::train_step(s, &view, broken, step, lr, lr_b)?;
-        Ok(StepOutputs { loss: out.loss, grad_norm: out.grad_norm, n_tokens: out.n_tokens })
+        Ok(StepOutputs {
+            loss: out.loss,
+            grad_norm: out.grad_norm,
+            n_tokens: out.n_tokens,
+            phases: out.phases,
+        })
+    }
+
+    fn flat_grad_len(&self, state: &DeviceState) -> Result<usize> {
+        Ok(model::flat_grad_len(as_cpu_state(state)?))
+    }
+
+    fn grad_row(
+        &self,
+        train_name: &str,
+        state: &DeviceState,
+        batch: &DeviceBatch,
+        row: usize,
+        global_n_valid: usize,
+        out: &mut [f32],
+    ) -> Result<RowGrad> {
+        let spec = self.spec(train_name)?;
+        let s = as_cpu_state(state)?;
+        let b = check_shard_call(spec, family_lora(&spec.family), s.lora, batch)?;
+        let view = row_view(b, row)?;
+        let (loss_sum, fwd_s, bwd_s) = model::grad_row_into(s, &view, global_n_valid, out)?;
+        Ok(RowGrad { loss_sum, fwd_s, bwd_s })
+    }
+
+    fn apply_grads(
+        &self,
+        train_name: &str,
+        state: &mut DeviceState,
+        flat: &[f32],
+        step: u64,
+        lr: f32,
+        lr_b: f32,
+    ) -> Result<()> {
+        let spec = self.spec(train_name)?;
+        if spec.kind != "train" {
+            bail!("'{train_name}' is not a train executable (kind = {})", spec.kind);
+        }
+        model::apply_flat_grads(as_cpu_state_mut(state)?, flat, step, lr, lr_b)
     }
 
     fn eval_loss(&self, eval_name: &str, state: &DeviceState, batch: &Batch) -> Result<f32> {

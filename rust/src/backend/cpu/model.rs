@@ -23,11 +23,13 @@ use super::math::{
     adamw_update, linear_bwd_w, linear_bwd_x, linear_fwd, rmsnorm_bwd, rmsnorm_fwd, rope_apply,
     softmax_xent, swiglu_bwd, swiglu_fwd,
 };
+use crate::backend::StepPhases;
 use crate::optim::{classify_param, ParamGroup};
 use crate::runtime::HostTensor;
 use crate::util::rng::Rng;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::HashMap;
+use std::time::Instant;
 
 pub const WEIGHT_DECAY: f32 = 0.01;
 
@@ -714,6 +716,8 @@ pub struct StepOut {
     pub grad_norm: f32,
     /// Number of supervised (non-masked) targets in the batch.
     pub n_tokens: f32,
+    /// Per-phase step-time breakdown (fwd/bwd/optim seconds).
+    pub phases: StepPhases,
 }
 
 /// Forward-only mean loss (the eval path — identical math to the train-step
@@ -737,16 +741,22 @@ pub fn train_step(
 ) -> Result<StepOut> {
     let mut layer_caches: Vec<LayerCache> = Vec::with_capacity(state.dims.n_layers);
     let mut final_cache: Option<FinalCache> = None;
+    let t_fwd = Instant::now();
     let (loss_sum, n_valid) = forward(state, bv, Some((&mut layer_caches, &mut final_cache)))?;
+    let fwd_s = t_fwd.elapsed().as_secs_f64();
     let loss = loss_sum / n_valid.max(1) as f32;
 
     if broken {
-        return Ok(StepOut { loss, grad_norm: 0.0, n_tokens: n_valid as f32 });
+        let phases = StepPhases { fwd_s, ..StepPhases::default() };
+        return Ok(StepOut { loss, grad_norm: 0.0, n_tokens: n_valid as f32, phases });
     }
 
     let fc = final_cache.ok_or_else(|| anyhow!("forward did not fill caches"))?;
+    let t_bwd = Instant::now();
     let grads = backward(state, bv, &layer_caches, &fc)?;
+    let bwd_s = t_bwd.elapsed().as_secs_f64();
 
+    let t_optim = Instant::now();
     let mut sq = 0.0f32;
     for g in &grads[..state.n_trainable] {
         for &x in g {
@@ -771,7 +781,85 @@ pub fn train_step(
             WEIGHT_DECAY,
         );
     }
-    Ok(StepOut { loss, grad_norm, n_tokens: n_valid as f32 })
+    let optim_s = t_optim.elapsed().as_secs_f64();
+    let phases = StepPhases { fwd_s, bwd_s, optim_s };
+    Ok(StepOut { loss, grad_norm, n_tokens: n_valid as f32, phases })
+}
+
+/// Total element count of the trainable-gradient vector — the lane length
+/// of the data-parallel gradient arena (DESIGN.md §10).
+pub fn flat_grad_len(state: &CpuState) -> usize {
+    state.params[..state.n_trainable].iter().map(|t| t.elements()).sum()
+}
+
+/// Data-parallel shard gradient (DESIGN.md §10): forward + backward on a
+/// single-row view, with the cross-entropy normalizer forced to
+/// `global_n_valid` — the *whole batch's* supervised-target count — so the
+/// per-row gradients sum to exactly the full-batch mean-loss gradient.
+/// Flattens the trainable gradients into `out` (state order) and returns
+/// `(row loss sum, forward seconds, backward seconds)`. Never touches
+/// optimizer state.
+pub fn grad_row_into(
+    state: &CpuState,
+    bv: &BatchView,
+    global_n_valid: usize,
+    out: &mut [f32],
+) -> Result<(f32, f64, f64)> {
+    let mut layer_caches: Vec<LayerCache> = Vec::with_capacity(state.dims.n_layers);
+    let mut final_cache: Option<FinalCache> = None;
+    let t_fwd = Instant::now();
+    let (loss_sum, _row_valid) = forward(state, bv, Some((&mut layer_caches, &mut final_cache)))?;
+    let fwd_s = t_fwd.elapsed().as_secs_f64();
+    let mut fc = final_cache.ok_or_else(|| anyhow!("forward did not fill caches"))?;
+    // backward reads its loss normalizer from the cache; seeding it with
+    // the global count is what makes shard gradients tree-reduce to the
+    // full-batch gradient
+    fc.n_valid = global_n_valid.max(1);
+    let t_bwd = Instant::now();
+    let grads = backward(state, bv, &layer_caches, &fc)?;
+    let bwd_s = t_bwd.elapsed().as_secs_f64();
+    let mut off = 0usize;
+    for g in &grads[..state.n_trainable] {
+        ensure!(off + g.len() <= out.len(), "gradient lane overflow at offset {off}");
+        out[off..off + g.len()].copy_from_slice(g);
+        off += g.len();
+    }
+    ensure!(off == out.len(), "gradient lane length mismatch: wrote {off}, lane {}", out.len());
+    Ok((loss_sum, fwd_s, bwd_s))
+}
+
+/// Apply one AdamW step from a flat reduced gradient (trainable prefix,
+/// state order) — the "step once" half of the data-parallel contract.
+/// Bitwise-identical to the per-parameter update loop in [`train_step`].
+pub fn apply_flat_grads(
+    state: &mut CpuState,
+    flat: &[f32],
+    step: u64,
+    lr: f32,
+    lr_b: f32,
+) -> Result<()> {
+    let mut off = 0usize;
+    for i in 0..state.n_trainable {
+        let lr_p = match classify_param(&state.names[i]) {
+            ParamGroup::LoraB => lr_b,
+            _ => lr,
+        };
+        let param = state.params[i].as_f32_mut()?;
+        let n = param.len();
+        ensure!(off + n <= flat.len(), "flat gradient underflow at parameter {i}");
+        adamw_update(
+            param,
+            &flat[off..off + n],
+            &mut state.slot_m[i],
+            &mut state.slot_v[i],
+            lr_p,
+            step as f32,
+            WEIGHT_DECAY,
+        );
+        off += n;
+    }
+    ensure!(off == flat.len(), "flat gradient length {} != trainable elements {off}", flat.len());
+    Ok(())
 }
 
 #[cfg(test)]

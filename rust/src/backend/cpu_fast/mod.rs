@@ -37,7 +37,7 @@ use super::cpu::{
     self, as_cpu_state, as_cpu_state_mut, batch_view, check_geometry, family_lora, reference_dims,
     REF_BATCH, REF_SEQ,
 };
-use super::{Backend, DeviceBatch, DeviceState, StepOutputs};
+use super::{Backend, DeviceBatch, DeviceState, RowGrad, StepOutputs};
 use crate::backend::cpu::model::ModelDims;
 use crate::batching::Batch;
 use crate::manifest::{ExecutableSpec, Manifest};
@@ -162,7 +162,50 @@ impl Backend for FastCpuBackend {
         check_geometry(spec, b)?;
         let view = batch_view(b)?;
         let out = model::train_step(s, &view, broken, step, lr, lr_b, &self.exec)?;
-        Ok(StepOutputs { loss: out.loss, grad_norm: out.grad_norm, n_tokens: out.n_tokens })
+        Ok(StepOutputs {
+            loss: out.loss,
+            grad_norm: out.grad_norm,
+            n_tokens: out.n_tokens,
+            phases: out.phases,
+        })
+    }
+
+    fn flat_grad_len(&self, state: &DeviceState) -> Result<usize> {
+        Ok(cpu::model::flat_grad_len(as_cpu_state(state)?))
+    }
+
+    fn grad_row(
+        &self,
+        train_name: &str,
+        state: &DeviceState,
+        batch: &DeviceBatch,
+        row: usize,
+        global_n_valid: usize,
+        out: &mut [f32],
+    ) -> Result<RowGrad> {
+        let spec = self.spec(train_name)?;
+        let s = as_cpu_state(state)?;
+        let b = cpu::check_shard_call(spec, family_lora(&spec.family), s.lora, batch)?;
+        let view = cpu::row_view(b, row)?;
+        let (loss_sum, fwd_s, bwd_s) =
+            model::grad_row_into(s, &view, global_n_valid, out, &self.exec)?;
+        Ok(RowGrad { loss_sum, fwd_s, bwd_s })
+    }
+
+    fn apply_grads(
+        &self,
+        train_name: &str,
+        state: &mut DeviceState,
+        flat: &[f32],
+        step: u64,
+        lr: f32,
+        lr_b: f32,
+    ) -> Result<()> {
+        let spec = self.spec(train_name)?;
+        if spec.kind != "train" {
+            bail!("'{train_name}' is not a train executable (kind = {})", spec.kind);
+        }
+        model::apply_flat_grads(as_cpu_state_mut(state)?, flat, step, lr, lr_b, &self.exec)
     }
 
     fn eval_loss(&self, eval_name: &str, state: &DeviceState, batch: &Batch) -> Result<f32> {

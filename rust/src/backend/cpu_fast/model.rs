@@ -30,8 +30,10 @@ use super::kernels as k;
 use super::pool::Exec;
 use super::scratch::Lease;
 use crate::backend::cpu::model::{BatchView, CpuState, ParamIdx, StepOut, WEIGHT_DECAY};
+use crate::backend::StepPhases;
 use crate::optim::{classify_param, ParamGroup};
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::time::Instant;
 
 /// Per-layer forward activations kept for the backward pass, all leased
 /// from the backend arena. Identical to the reference cache except
@@ -432,18 +434,24 @@ pub fn train_step(
 ) -> Result<StepOut> {
     let mut layer_caches: Vec<LayerCache> = Vec::with_capacity(state.dims.n_layers);
     let mut final_cache: Option<FinalCache> = None;
+    let t_fwd = Instant::now();
     let (loss_sum, n_valid) =
         forward(state, bv, Some((&mut layer_caches, &mut final_cache)), ex)?;
+    let fwd_s = t_fwd.elapsed().as_secs_f64();
     let loss = loss_sum / n_valid.max(1) as f32;
 
     if broken {
-        return Ok(StepOut { loss, grad_norm: 0.0, n_tokens: n_valid as f32 });
+        let phases = StepPhases { fwd_s, ..StepPhases::default() };
+        return Ok(StepOut { loss, grad_norm: 0.0, n_tokens: n_valid as f32, phases });
     }
 
     let fc = final_cache.ok_or_else(|| anyhow!("forward did not fill caches"))?;
+    let t_bwd = Instant::now();
     let grads = backward(state, bv, &layer_caches, &fc, ex)?;
+    let bwd_s = t_bwd.elapsed().as_secs_f64();
 
     // fixed parameter order: grad-norm bits never depend on threads
+    let t_optim = Instant::now();
     let mut sq = 0.0f32;
     for g in &grads[..state.n_trainable] {
         for &x in g.iter() {
@@ -469,7 +477,79 @@ pub fn train_step(
             ex,
         );
     }
-    Ok(StepOut { loss, grad_norm, n_tokens: n_valid as f32 })
+    let optim_s = t_optim.elapsed().as_secs_f64();
+    let phases = StepPhases { fwd_s, bwd_s, optim_s };
+    Ok(StepOut { loss, grad_norm, n_tokens: n_valid as f32, phases })
+}
+
+/// Data-parallel shard gradient (DESIGN.md §10): forward + backward on a
+/// single-row view with the CCE normalizer forced to `global_n_valid`, so
+/// per-row gradients tree-reduce to the full-batch mean-loss gradient.
+/// Flattens the trainable gradients into `out` (state order) and returns
+/// `(row loss sum, forward seconds, backward seconds)`.
+pub fn grad_row_into(
+    state: &CpuState,
+    bv: &BatchView,
+    global_n_valid: usize,
+    out: &mut [f32],
+    ex: &Exec,
+) -> Result<(f32, f64, f64)> {
+    let mut layer_caches: Vec<LayerCache> = Vec::with_capacity(state.dims.n_layers);
+    let mut final_cache: Option<FinalCache> = None;
+    let t_fwd = Instant::now();
+    let (loss_sum, _row_valid) =
+        forward(state, bv, Some((&mut layer_caches, &mut final_cache)), ex)?;
+    let fwd_s = t_fwd.elapsed().as_secs_f64();
+    let mut fc = final_cache.ok_or_else(|| anyhow!("forward did not fill caches"))?;
+    // backward reads its loss normalizer from the cache (cce_bwd_fused
+    // divides by fc.n_valid); the global count makes shards sum exactly
+    fc.n_valid = global_n_valid.max(1);
+    let t_bwd = Instant::now();
+    let grads = backward(state, bv, &layer_caches, &fc, ex)?;
+    let bwd_s = t_bwd.elapsed().as_secs_f64();
+    let mut off = 0usize;
+    for g in &grads[..state.n_trainable] {
+        ensure!(off + g.len() <= out.len(), "gradient lane overflow at offset {off}");
+        out[off..off + g.len()].copy_from_slice(g);
+        off += g.len();
+    }
+    ensure!(off == out.len(), "gradient lane length mismatch: wrote {off}, lane {}", out.len());
+    Ok((loss_sum, fwd_s, bwd_s))
+}
+
+/// Apply one AdamW step from a flat reduced gradient (trainable prefix,
+/// state order). Bitwise-identical to the update loop in [`train_step`].
+pub fn apply_flat_grads(
+    state: &mut CpuState,
+    flat: &[f32],
+    step: u64,
+    lr: f32,
+    lr_b: f32,
+    ex: &Exec,
+) -> Result<()> {
+    let mut off = 0usize;
+    for i in 0..state.n_trainable {
+        let lr_p = match classify_param(&state.names[i]) {
+            ParamGroup::LoraB => lr_b,
+            _ => lr,
+        };
+        let param = state.params[i].as_f32_mut()?;
+        let n = param.len();
+        ensure!(off + n <= flat.len(), "flat gradient underflow at parameter {i}");
+        k::adamw(
+            param,
+            &flat[off..off + n],
+            &mut state.slot_m[i],
+            &mut state.slot_v[i],
+            lr_p,
+            step as f32,
+            WEIGHT_DECAY,
+            ex,
+        );
+        off += n;
+    }
+    ensure!(off == flat.len(), "flat gradient length {} != trainable elements {off}", flat.len());
+    Ok(())
 }
 
 #[cfg(test)]

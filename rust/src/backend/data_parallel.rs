@@ -1,0 +1,327 @@
+//! Data-parallel execution over any shardable [`Backend`] (DESIGN.md §10).
+//!
+//! [`DataParallel`] wraps N replica backends and splits every staged batch
+//! into **per-row micro-shards**: a `[B, S]` batch always decomposes into
+//! exactly B single-row gradient tasks, no matter how many workers run
+//! them. The worker count only changes which replica executes which rows
+//! (balanced contiguous assignment, remainder rows to the first `B % N`
+//! replicas) — never the shape of the computation. Each row's flat
+//! trainable gradient lands in its own lane of a shared gradient arena,
+//! and the lanes are combined by a fixed-order in-place binary reduction
+//! tree. Because the decomposition and the reduction order are functions
+//! of B alone, the reduced gradient — and therefore the loss, grad-norm
+//! and eval series of a whole run — is **bitwise invariant to the worker
+//! count**: the thread-ladder determinism contract of DESIGN.md §4.3,
+//! one level up.
+//!
+//! Gradient correctness: each shard's backward seeds its dlogits with the
+//! *global* supervised-target count of the whole batch (not the row-local
+//! count), so `Σ_rows ∂(loss_sum_row / N_global) = ∂(mean loss)` exactly —
+//! the tree-reduced gradient equals the full-batch gradient, and the
+//! optimizer + LR schedule are applied exactly once on it
+//! ([`Backend::apply_grads`] on replica 0).
+//!
+//! Replicas are in-process today, each owning its own execution substrate
+//! (a fast-CPU replica brings its own worker pool + scratch arena). The
+//! seam — a replica sees `(staged batch, row range, global norm)` and
+//! fills flat gradient lanes — is what a future mmap-backed worker
+//! *process* would implement; nothing above this module would change.
+//!
+//! The wrapper implements [`Backend`] itself and delegates everything
+//! except `train_step` to replica 0, so the Trainer/Session plumbing is
+//! unchanged and `--workers 1` still exercises the full
+//! shard→reduce→step path.
+
+use super::{Backend, DeviceBatch, DeviceState, StepOutputs, StepPhases};
+use crate::batching::{shard_rows, Batch};
+use crate::manifest::Manifest;
+use crate::runtime::HostTensor;
+use anyhow::{ensure, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// The shared gradient arena: one flat f32 lane per batch row plus the
+/// per-row loss sums, allocated once and reused (zero per-step heap
+/// allocations in the reduction path — pinned by
+/// `rust/tests/no_materialization.rs`).
+#[derive(Default)]
+struct GradArena {
+    lanes: Vec<f32>,
+    loss_sums: Vec<f32>,
+    lane_len: usize,
+    rows: usize,
+    heap_allocs: u64,
+}
+
+impl GradArena {
+    /// Size the arena for `(rows, lane_len)` and zero it. Reallocation
+    /// only happens when the geometry changes (counted in `heap_allocs`).
+    fn prepare(&mut self, rows: usize, lane_len: usize) {
+        if self.rows != rows || self.lane_len != lane_len {
+            self.lanes = vec![0.0; rows * lane_len];
+            self.loss_sums = vec![0.0; rows];
+            self.rows = rows;
+            self.lane_len = lane_len;
+            self.heap_allocs += 1;
+        } else {
+            self.lanes.fill(0.0);
+            self.loss_sums.fill(0.0);
+        }
+    }
+
+    fn lane_mut(&mut self, row: usize) -> &mut [f32] {
+        let lo = row * self.lane_len;
+        &mut self.lanes[lo..lo + self.lane_len]
+    }
+
+    /// Fixed-order in-place binary reduction tree over the row lanes (and,
+    /// with identical structure, the per-row loss sums): stride-doubling
+    /// pairwise adds, `lane[i] += lane[i + stride]`. The tree is a pure
+    /// function of the row count — worker assignment never appears — so
+    /// the reduced bits are worker-count invariant by construction. Also
+    /// handles non-power-of-two row counts (odd nodes pass through).
+    fn tree_reduce(&mut self) {
+        let ll = self.lane_len;
+        let mut stride = 1;
+        while stride < self.rows {
+            let mut i = 0;
+            while i + stride < self.rows {
+                let (head, tail) = self.lanes.split_at_mut((i + stride) * ll);
+                let dst = &mut head[i * ll..i * ll + ll];
+                let src = &tail[..ll];
+                for k in 0..ll {
+                    dst[k] += src[k];
+                }
+                self.loss_sums[i] += self.loss_sums[i + stride];
+                i += 2 * stride;
+            }
+            stride *= 2;
+        }
+    }
+
+    /// The reduced gradient (lane 0 after [`Self::tree_reduce`]).
+    fn reduced(&self) -> &[f32] {
+        &self.lanes[..self.lane_len]
+    }
+}
+
+/// Data-parallel wrapper over N replica backends. See the module docs for
+/// the shard→reduce→step contract.
+pub struct DataParallel {
+    replicas: Vec<Rc<dyn Backend>>,
+    arena: RefCell<GradArena>,
+}
+
+impl DataParallel {
+    /// Wrap an explicit replica set (replica 0 is the primary: it serves
+    /// the manifest, state init/IO, eval and the optimizer apply). All
+    /// replicas must be interchangeable — same backend kind, same
+    /// manifest geometry; the Session layer constructs them that way.
+    pub fn from_replicas(replicas: Vec<Rc<dyn Backend>>) -> Result<DataParallel> {
+        ensure!(!replicas.is_empty(), "data-parallel requires at least one replica");
+        Ok(DataParallel { replicas, arena: RefCell::new(GradArena::default()) })
+    }
+
+    /// The worker (replica) count.
+    pub fn workers(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Heap allocations performed by the shared gradient arena so far
+    /// (exactly 1 after any number of same-geometry steps — the
+    /// no-materialization contract for the reduction path).
+    pub fn grad_arena_heap_allocs(&self) -> u64 {
+        self.arena.borrow().heap_allocs
+    }
+
+    /// Currently allocated gradient-arena elements (`rows × lane_len`).
+    pub fn grad_arena_elems(&self) -> usize {
+        let a = self.arena.borrow();
+        a.rows * a.lane_len
+    }
+
+    fn primary(&self) -> &Rc<dyn Backend> {
+        &self.replicas[0]
+    }
+}
+
+impl Backend for DataParallel {
+    fn name(&self) -> &'static str {
+        "data-parallel"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.primary().manifest()
+    }
+
+    fn init_state(&self, init_name: &str, seed: i32) -> Result<DeviceState> {
+        self.primary().init_state(init_name, seed)
+    }
+
+    fn upload_batch(&self, train_name: &str, batch: &Batch) -> Result<DeviceBatch> {
+        self.primary().upload_batch(train_name, batch)
+    }
+
+    fn train_step(
+        &self,
+        train_name: &str,
+        state: &mut DeviceState,
+        batch: &DeviceBatch,
+        step: u64,
+        lr: f32,
+        lr_b: f32,
+    ) -> Result<StepOutputs> {
+        let (broken, rows) = {
+            let spec = self.primary().manifest().get(train_name)?;
+            (spec.step_config.broken, spec.batch)
+        };
+        let b = match batch {
+            DeviceBatch::Cpu(b) => b,
+            #[cfg(feature = "pjrt")]
+            _ => anyhow::bail!("batch was uploaded to a different backend"),
+        };
+        ensure!(b.batch == rows, "staged batch has {} rows, executable expects {rows}", b.batch);
+        let n_valid = b.targets.as_i32()?.iter().filter(|&&t| t >= 0).count();
+
+        if broken {
+            // the broken §8 config discards every gradient: no backward, no
+            // reduce, and crucially no optimizer apply (AdamW with a zero
+            // gradient would still decay weights) — matching the reference
+            // step's "parameters never move" semantics exactly.
+            let t_fwd = Instant::now();
+            let loss = self.primary().eval_loss(train_name, state, b)?;
+            let phases =
+                StepPhases { fwd_s: t_fwd.elapsed().as_secs_f64(), ..StepPhases::default() };
+            return Ok(StepOutputs { loss, grad_norm: 0.0, n_tokens: n_valid as f32, phases });
+        }
+
+        let lane_len = self.primary().flat_grad_len(state)?;
+        let global = n_valid.max(1);
+        let assignment = shard_rows(b.batch, self.workers());
+
+        let mut arena = self.arena.borrow_mut();
+        arena.prepare(b.batch, lane_len);
+
+        // shard: every row's gradient is computed against the same frozen
+        // `state` (replicas run their row ranges; in-process they run in
+        // turn, each on its own pool/arena substrate)
+        let (mut fwd_s, mut bwd_s) = (0.0f64, 0.0f64);
+        for (replica, row_range) in self.replicas.iter().zip(&assignment) {
+            for row in row_range.clone() {
+                let lane = arena.lane_mut(row);
+                let rg = replica.grad_row(train_name, state, batch, row, global, lane)?;
+                arena.loss_sums[row] = rg.loss_sum;
+                fwd_s += rg.fwd_s;
+                bwd_s += rg.bwd_s;
+            }
+        }
+
+        // reduce: fixed-order tree, charged to the backward phase
+        let t_reduce = Instant::now();
+        arena.tree_reduce();
+        bwd_s += t_reduce.elapsed().as_secs_f64();
+
+        // step once: grad-norm in fixed (flat) order, then one optimizer
+        // apply on the reduced gradient
+        let t_optim = Instant::now();
+        let reduced = arena.reduced();
+        let mut sq = 0.0f32;
+        for &x in reduced {
+            sq += x * x;
+        }
+        let grad_norm = sq.sqrt();
+        self.primary().apply_grads(train_name, state, reduced, step, lr, lr_b)?;
+        let optim_s = t_optim.elapsed().as_secs_f64();
+
+        let loss = arena.loss_sums[0] / global as f32;
+        let phases = StepPhases { fwd_s, bwd_s, optim_s };
+        Ok(StepOutputs { loss, grad_norm, n_tokens: n_valid as f32, phases })
+    }
+
+    fn eval_loss(&self, eval_name: &str, state: &DeviceState, batch: &Batch) -> Result<f32> {
+        self.primary().eval_loss(eval_name, state, batch)
+    }
+
+    fn state_params(&self, state: &DeviceState) -> Result<Vec<HostTensor>> {
+        self.primary().state_params(state)
+    }
+
+    fn load_params(&self, state: &mut DeviceState, params: &[HostTensor]) -> Result<()> {
+        self.primary().load_params(state, params)
+    }
+
+    fn bench_kernel(&self, name: &str, reps: usize, warmup: usize) -> Result<f64> {
+        self.primary().bench_kernel(name, reps, warmup)
+    }
+
+    fn flat_grad_len(&self, state: &DeviceState) -> Result<usize> {
+        self.primary().flat_grad_len(state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cpu::CpuBackend;
+
+    fn dp(workers: usize) -> DataParallel {
+        let replicas: Vec<Rc<dyn Backend>> =
+            (0..workers).map(|_| Rc::new(CpuBackend::new()) as Rc<dyn Backend>).collect();
+        DataParallel::from_replicas(replicas).unwrap()
+    }
+
+    #[test]
+    fn zero_replicas_rejected() {
+        assert!(DataParallel::from_replicas(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn delegates_manifest_and_state_to_primary() {
+        let dp = dp(2);
+        assert_eq!(dp.workers(), 2);
+        assert!(dp.manifest().get("train_step_chronicals").is_ok());
+        let state = dp.init_state("init_chronicals", 3).unwrap();
+        let reference = CpuBackend::new().init_state("init_chronicals", 3).unwrap();
+        let a = dp.state_params(&state).unwrap();
+        let b = CpuBackend::new().state_params(&reference).unwrap();
+        assert_eq!(a, b, "data-parallel init must be the primary's init");
+    }
+
+    #[test]
+    fn tree_reduce_is_exact_on_integers_and_handles_odd_rows() {
+        // integer-valued f32 adds are exact, so the tree must produce the
+        // plain sum for any row count, including non-powers of two
+        for rows in 1..=9usize {
+            let mut a = GradArena::default();
+            a.prepare(rows, 3);
+            for r in 0..rows {
+                let lane = a.lane_mut(r);
+                for (k, x) in lane.iter_mut().enumerate() {
+                    *x = (r * 10 + k) as f32;
+                }
+                a.loss_sums[r] = r as f32;
+            }
+            a.tree_reduce();
+            for k in 0..3 {
+                let expect: f32 = (0..rows).map(|r| (r * 10 + k) as f32).sum();
+                assert_eq!(a.reduced()[k], expect, "rows={rows} k={k}");
+            }
+            let expect: f32 = (0..rows).map(|r| r as f32).sum();
+            assert_eq!(a.loss_sums[0], expect, "rows={rows} loss");
+        }
+    }
+
+    #[test]
+    fn grad_arena_reallocates_only_on_geometry_change() {
+        let mut a = GradArena::default();
+        a.prepare(4, 8);
+        assert_eq!(a.heap_allocs, 1);
+        a.lane_mut(2)[5] = 3.0;
+        a.prepare(4, 8);
+        assert_eq!(a.heap_allocs, 1, "same geometry must reuse the buffer");
+        assert_eq!(a.lane_mut(2)[5], 0.0, "prepare must zero the lanes");
+        a.prepare(2, 8);
+        assert_eq!(a.heap_allocs, 2, "geometry change reallocates");
+    }
+}

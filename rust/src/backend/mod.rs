@@ -38,8 +38,11 @@
 
 pub mod cpu;
 pub mod cpu_fast;
+pub mod data_parallel;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+
+pub use data_parallel::DataParallel;
 
 use crate::batching::Batch;
 use crate::manifest::Manifest;
@@ -76,12 +79,47 @@ pub fn create_backend(name: &str, artifacts_dir: &str, threads: usize) -> Result
     }
 }
 
-/// The three scalar metrics every train step reports.
+/// Per-phase wall-clock breakdown of one train step, in seconds. The
+/// backend fills the compute phases; the coordinator derives the data
+/// phase as the residual of the measured step wall time (everything that
+/// is not forward/backward/optimizer: batch cycling, metering, dispatch).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StepPhases {
+    /// Forward-pass seconds (loss computation).
+    pub fwd_s: f64,
+    /// Backward-pass seconds (gradient computation + reduction).
+    pub bwd_s: f64,
+    /// Optimizer seconds (grad-norm + AdamW update).
+    pub optim_s: f64,
+}
+
+impl StepPhases {
+    /// Total seconds attributed to compute phases.
+    pub fn compute_s(&self) -> f64 {
+        self.fwd_s + self.bwd_s + self.optim_s
+    }
+}
+
+/// The three scalar metrics every train step reports, plus the per-phase
+/// timing breakdown (zeroed on backends that predate it).
 #[derive(Debug, Clone, Copy)]
 pub struct StepOutputs {
     pub loss: f32,
     pub grad_norm: f32,
     pub n_tokens: f32,
+    /// Per-phase step-time breakdown (fwd/bwd/optim seconds).
+    pub phases: StepPhases,
+}
+
+/// One shard-row gradient result from [`Backend::grad_row`].
+#[derive(Debug, Clone, Copy)]
+pub struct RowGrad {
+    /// Summed (not mean) loss over the row's supervised targets.
+    pub loss_sum: f32,
+    /// Forward-pass seconds for this row.
+    pub fwd_s: f64,
+    /// Backward-pass seconds for this row.
+    pub bwd_s: f64,
 }
 
 /// Backend-resident training state (params + optimizer slots).
@@ -166,5 +204,58 @@ pub trait Backend {
             "kernel microbench '{name}' is not supported on the {} backend",
             self.name()
         )
+    }
+
+    // ---- data-parallel seams (DESIGN.md §10) -------------------------
+    //
+    // The `DataParallel` layer shards a staged batch into per-row micro-
+    // shards, computes each row's gradient through `grad_row` (with the
+    // loss normalizer forced to the whole batch's supervised-target count
+    // so shard gradients sum to the full-batch gradient), tree-reduces the
+    // shards in fixed order, then applies the optimizer exactly once via
+    // `apply_grads`. Backends that cannot shard (PJRT's compiled [B, S]
+    // step is monolithic) keep the default bail and simply cannot be
+    // wrapped.
+
+    /// Total element count of the flat trainable-gradient vector for
+    /// `state` — the lane length of the data-parallel gradient arena.
+    fn flat_grad_len(&self, state: &DeviceState) -> Result<usize> {
+        let _ = state;
+        bail!("the {} backend does not support data-parallel sharding", self.name())
+    }
+
+    /// Forward + backward on row `row` of the staged batch only, with the
+    /// cross-entropy normalizer forced to `global_n_valid` (the whole
+    /// batch's supervised-target count). Writes the row's flat trainable
+    /// gradient into `out` (state order, trainable prefix) and returns its
+    /// summed loss plus per-phase seconds. Must not touch optimizer state.
+    fn grad_row(
+        &self,
+        train_name: &str,
+        state: &DeviceState,
+        batch: &DeviceBatch,
+        row: usize,
+        global_n_valid: usize,
+        out: &mut [f32],
+    ) -> Result<RowGrad> {
+        let _ = (train_name, state, batch, row, global_n_valid, out);
+        bail!("the {} backend does not support data-parallel sharding", self.name())
+    }
+
+    /// Apply one optimizer step from a flat reduced gradient (trainable
+    /// prefix, state order) — the "step once" half of the data-parallel
+    /// shard→reduce→step contract. Bitwise-identical to the update loop
+    /// inside `train_step`.
+    fn apply_grads(
+        &self,
+        train_name: &str,
+        state: &mut DeviceState,
+        flat: &[f32],
+        step: u64,
+        lr: f32,
+        lr_b: f32,
+    ) -> Result<()> {
+        let _ = (train_name, state, flat, step, lr, lr_b);
+        bail!("the {} backend does not support data-parallel sharding", self.name())
     }
 }

@@ -120,7 +120,7 @@ impl Backend for PjrtBackend {
         debug_assert_eq!(outs.len(), spec.n_state_outputs());
         st.apply_step_outputs(&self.rt, outs)?;
 
-        Ok(StepOutputs { loss, grad_norm, n_tokens })
+        Ok(StepOutputs { loss, grad_norm, n_tokens, phases: Default::default() })
     }
 
     fn eval_loss(&self, eval_name: &str, state: &DeviceState, batch: &Batch) -> Result<f32> {

@@ -19,6 +19,7 @@ pub use stream::{BatchStream, EpochSpec, PackingStrategy, TailPolicy};
 use crate::data::TokenizedExample;
 use crate::packing::{best_fit_decreasing, Packing};
 use crate::runtime::HostTensor;
+use anyhow::Result;
 
 #[derive(Debug, Clone)]
 pub struct Batch {
@@ -39,6 +40,69 @@ impl Batch {
     pub fn density(&self) -> f64 {
         self.real_tokens as f64 / (self.batch * self.seq) as f64
     }
+
+    /// Split into per-replica row shards for data-parallel execution
+    /// (DESIGN.md §10): balanced contiguous row ranges via [`shard_rows`],
+    /// remainder rows to the first `B % N` shards. Each shard is a
+    /// standalone `[rows, S]` batch with its accounting recomputed from
+    /// its own rows; replicas whose assignment is empty get no shard, so
+    /// the shard count is `min(workers, B)`. The in-process
+    /// [`crate::backend::DataParallel`] layer shards by borrowed row views
+    /// instead (zero copies); this owning split is the seam a future
+    /// mmap-backed worker process would consume, and what the multiset
+    /// property tests exercise.
+    pub fn shard(&self, workers: usize) -> Result<Vec<Batch>> {
+        let tokens = self.tokens.as_i32()?;
+        let targets = self.targets.as_i32()?;
+        let seg_ids = self.seg_ids.as_i32()?;
+        let pos_ids = self.pos_ids.as_i32()?;
+        let mut out = Vec::new();
+        for range in shard_rows(self.batch, workers) {
+            if range.is_empty() {
+                continue;
+            }
+            let rows = range.len();
+            let (lo, hi) = (range.start * self.seq, range.end * self.seq);
+            let shape = vec![rows, self.seq];
+            let seg = seg_ids[lo..hi].to_vec();
+            let tgt = targets[lo..hi].to_vec();
+            let real_tokens = seg.iter().filter(|&&s| s != 0).count();
+            let real_targets = tgt.iter().filter(|&&t| t >= 0).count();
+            out.push(Batch {
+                tokens: HostTensor::i32(tokens[lo..hi].to_vec(), shape.clone()),
+                targets: HostTensor::i32(tgt, shape.clone()),
+                seg_ids: HostTensor::i32(seg, shape.clone()),
+                pos_ids: HostTensor::i32(pos_ids[lo..hi].to_vec(), shape),
+                real_tokens,
+                real_targets,
+                batch: rows,
+                seq: self.seq,
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// Balanced contiguous row→replica assignment for data-parallel sharding:
+/// replica `r` gets `rows / workers` rows, and the first `rows % workers`
+/// replicas take one extra (the remainder policy, DESIGN.md §10). Returns
+/// one range per replica, in replica order, covering `0..rows` exactly;
+/// trailing replicas get empty ranges when `workers > rows`. The
+/// assignment never influences gradient bits — the reduction tree is a
+/// function of the row count alone — so this is purely a load-balancing
+/// choice.
+pub fn shard_rows(rows: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
+    let workers = workers.max(1);
+    let base = rows / workers;
+    let extra = rows % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0usize;
+    for r in 0..workers {
+        let len = base + usize::from(r < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
 }
 
 /// Padded batching (the baseline): one example per row, truncated/padded to
@@ -289,6 +353,47 @@ mod tests {
         let non_final = &batches[..batches.len() - 1];
         for b in non_final {
             assert!(b.real_tokens >= 48, "under-full budget batch: {}", b.real_tokens);
+        }
+    }
+
+    #[test]
+    fn shard_rows_is_balanced_and_covers() {
+        for rows in 0..=9usize {
+            for workers in 1..=5usize {
+                let ranges = shard_rows(rows, workers);
+                assert_eq!(ranges.len(), workers);
+                assert_eq!(ranges[0].start, 0);
+                assert_eq!(ranges.last().unwrap().end, rows);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].end, w[1].start, "contiguous coverage");
+                }
+                let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(max - min <= 1, "balanced: {lens:?}");
+                // remainder policy: the bigger shards come first
+                assert!(lens.windows(2).all(|w| w[0] >= w[1]), "remainder first: {lens:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_preserves_rows_and_accounting() {
+        let exs: Vec<_> = (0..24).map(|i| ex(5 + (i % 9), 7)).collect();
+        let batches = packed_batches(&exs, 4, 32);
+        let b = &batches[0];
+        for workers in [1usize, 2, 3, 4, 7] {
+            let shards = b.shard(workers).unwrap();
+            assert_eq!(shards.len(), workers.min(b.batch));
+            let rows: usize = shards.iter().map(|s| s.batch).sum();
+            assert_eq!(rows, b.batch);
+            assert_eq!(shards.iter().map(|s| s.real_tokens).sum::<usize>(), b.real_tokens);
+            assert_eq!(shards.iter().map(|s| s.real_targets).sum::<usize>(), b.real_targets);
+            // concatenating shard rows reproduces the original tensors
+            let cat: Vec<i32> = shards
+                .iter()
+                .flat_map(|s| s.tokens.as_i32().unwrap().iter().copied())
+                .collect();
+            assert_eq!(cat, b.tokens.as_i32().unwrap());
         }
     }
 

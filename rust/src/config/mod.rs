@@ -46,6 +46,11 @@ pub struct RunConfig {
     /// Worker threads for the fast backend; 0 = autodetect
     /// (`available_parallelism`). Overridden by `CHRONICALS_THREADS`.
     pub threads: usize,
+    /// Data-parallel replica count (`--workers` / `backend.workers`):
+    /// shard each batch row-wise across `n` backend replicas and reduce
+    /// gradients through the fixed-order tree. 0 = the legacy
+    /// single-backend path (the default).
+    pub workers: usize,
 }
 
 impl Default for RunConfig {
@@ -76,6 +81,7 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".into(),
             backend: "cpu".into(),
             threads: 0,
+            workers: 0,
         }
     }
 }
@@ -144,6 +150,7 @@ impl RunConfig {
             artifacts_dir: doc.str_or("artifacts_dir", &d.artifacts_dir).to_string(),
             backend: doc.str_or("backend.name", &d.backend).to_string(),
             threads: doc.i64_or("backend.threads", d.threads as i64).max(0) as usize,
+            workers: doc.i64_or("backend.workers", d.workers as i64).max(0) as usize,
         })
     }
 
@@ -298,6 +305,16 @@ threads = 3
         let d = RunConfig::from_toml("").unwrap();
         assert_eq!(d.backend, "cpu");
         assert_eq!(d.threads, 0);
+        assert_eq!(d.workers, 0, "workers default to the legacy path");
+    }
+
+    #[test]
+    fn backend_workers_key_parses() {
+        let c = RunConfig::from_toml("[backend]\nname = \"cpu-fast\"\nworkers = 4\n").unwrap();
+        assert_eq!(c.workers, 4);
+        // negative values clamp to 0 (= unset) rather than wrapping
+        let c = RunConfig::from_toml("[backend]\nworkers = -2\n").unwrap();
+        assert_eq!(c.workers, 0);
     }
 
     #[test]

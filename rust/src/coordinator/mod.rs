@@ -15,7 +15,7 @@ use crate::backend::{Backend, DeviceBatch, DeviceState};
 use crate::batching::Batch;
 use crate::checkpoint::{self, Codec};
 use crate::manifest::ExecutableSpec;
-use crate::metrics::ThroughputMeter;
+use crate::metrics::{PhaseBreakdown, ThroughputMeter};
 use crate::optim::LrSchedule;
 use crate::runtime::HostTensor;
 use anyhow::{bail, Result};
@@ -47,6 +47,9 @@ pub struct TrainSummary {
     pub verification: VerificationReport,
     pub param_count: u64,
     pub trainable_param_count: u64,
+    /// Mean per-step phase breakdown (fwd/bwd/optim/data ms), post-warmup;
+    /// `None` when no step reported phases.
+    pub phases: Option<PhaseBreakdown>,
 }
 
 pub struct Trainer {
@@ -127,7 +130,7 @@ impl Trainer {
             .backend
             .train_step(&self.exe_name, &mut self.state, ub, self.step, lr, lr_b)?;
         self.meter
-            .step_end(ub.slot_tokens() as u64, ub.real_tokens() as u64);
+            .step_end_phased(ub.slot_tokens() as u64, ub.real_tokens() as u64, out.phases);
 
         let rec = StepRecord {
             step: self.step,
@@ -181,6 +184,7 @@ impl Trainer {
             ),
             param_count: self.spec.param_count,
             trainable_param_count: self.spec.trainable_param_count,
+            phases: self.meter.phase_breakdown(),
         }
     }
 

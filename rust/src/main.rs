@@ -16,15 +16,20 @@
 //! Arg parsing is hand-rolled (offline build: no clap).
 
 use anyhow::{anyhow, bail, Result};
+use chronicals::backend::cpu::CpuBackend;
+use chronicals::backend::cpu_fast::FastCpuBackend;
 use chronicals::backend::{create_backend, Backend};
 use chronicals::config::{self, RunConfig};
+use chronicals::coordinator::TrainSummary;
 use chronicals::harness;
 use chronicals::metrics::{MemoryModel, Precision};
 use chronicals::report;
 use chronicals::session::{
-    PackingStrategy, RunReport, Schedule, SessionBuilder, SessionSpec, Task,
+    BackendSpec, DataSource, PackingStrategy, RunReport, Schedule, SessionBuilder, SessionSpec,
+    Task,
 };
 use chronicals::util::commas;
+use chronicals::util::json::Json;
 use std::rc::Rc;
 
 fn main() {
@@ -117,7 +122,8 @@ COMMANDS
            [--data-file FILE.jsonl[.gz]] [--tokenizer FILE.vocab]
            [--shuffle-seed N] [--epochs N] [--eval-fraction F]
            [--loss-mode response-only|full]
-           [--backend cpu|cpu-fast|pjrt] [--threads N] [--artifacts DIR]
+           [--backend cpu|cpu-fast|pjrt] [--threads N] [--workers N]
+           [--artifacts DIR]
            data: --data-file streams a JSONL instruction corpus
            ({{\"prompt\",\"completion\"}}, {{\"text\"}} or chat
            {{\"messages\":[{{\"role\",\"content\"}},..]}} per line; .jsonl.gz is
@@ -132,9 +138,17 @@ COMMANDS
            legacy front-ends (lowered into the same typed session):
            --preset <full_ft|lora|lora_plus|e2e> | --config <file.toml> |
            --executable NAME [--packed true|false]
+           --workers N shards each batch row-wise across N data-parallel
+           backend replicas with a fixed-order gradient reduction tree;
+           the loss/grad-norm/eval series are bitwise identical for every
+           N (cpu | cpu-fast backends only)
   bench    --summary | --ablation | --kernels | --lora | --full
            [--steps N] [--reps N] [--backend cpu|cpu-fast|pjrt]
            [--threads N] [--artifacts DIR]
+           --check [--check-threshold F]  re-measure the headline rows and
+           fail if any drops more than F (default 0.2 = 20%) below the
+           committed BENCH_cpu.json (sections marked verified = false are
+           skipped)
   pack     [--capacity N] [--examples N]
   inspect  --manifest | --memory [--backend ...] [--artifacts DIR]
   verify   [--steps N] [--backend ...] [--artifacts DIR]
@@ -246,6 +260,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(m) = args.get("loss-mode") {
         cfg.loss_mode = m.to_string();
     }
+    if let Some(w) = args.get("workers") {
+        cfg.workers = w
+            .parse::<usize>()
+            .ok()
+            .filter(|&n| n > 0)
+            .ok_or_else(|| anyhow!("invalid --workers '{w}' (expected a positive integer)"))?;
+    }
     // one parser for --threads everywhere (env > flag > config file)
     cfg.threads = thread_request(args, cfg.threads)?;
 
@@ -288,6 +309,14 @@ fn cmd_train(args: &Args) -> Result<()> {
             None => String::new(),
         },
     );
+    if session.spec().workers > 0 {
+        println!(
+            "data-parallel: {} replica{}, row-sharded batches, fixed-order gradient \
+             reduction tree (bits invariant to the worker count)",
+            session.spec().workers,
+            if session.spec().workers == 1 { "" } else { "s" },
+        );
+    }
     let t0 = std::time::Instant::now();
     let report = session.run()?;
     let s = &report.summary;
@@ -301,6 +330,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.std_step_ms,
         s.verification.status()
     );
+    if let Some(p) = &s.phases {
+        println!(
+            "phases: fwd {:.2} ms | bwd {:.2} ms | optim {:.2} ms | data {:.2} ms per step \
+             (post-warmup means; data = wall-time residual)",
+            p.fwd_ms, p.bwd_ms, p.optim_ms, p.data_ms
+        );
+    }
     print_data_accounting(&report);
     if !report.eval.is_empty() {
         let series: Vec<String> =
@@ -368,6 +404,9 @@ fn print_data_accounting(report: &RunReport) {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
+    if args.has("check") {
+        return cmd_bench_check(args);
+    }
     let backend = load_backend(args)?;
     let steps = args.u64_or("steps", 12);
     let reps = args.u64_or("reps", 20) as usize;
@@ -412,6 +451,130 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
     if !any {
         println!("nothing to do: pass --summary, --full, --lora, --ablation or --kernels");
+    }
+    Ok(())
+}
+
+/// The `bench_throughput` measurement geometry — `bench --check` must
+/// re-measure under the same [B, S] the committed numbers were taken at.
+const CHECK_BATCH: usize = 4;
+const CHECK_SEQ: usize = 128;
+
+/// One fresh measurement row for the regression gate, using the exact
+/// session settings `benches/bench_throughput.rs` committed its numbers
+/// under. A row that fails to run is reported and skipped — the check
+/// then fails only if a *measured* number regressed.
+fn check_row(backend: &Rc<dyn Backend>, task: Task, steps: u64) -> Option<TrainSummary> {
+    let result = SessionBuilder::new()
+        .task(task.clone())
+        .steps(steps)
+        .meter_warmup(2)
+        .lr(5e-3)
+        .packing(PackingStrategy::Bfd)
+        .data(DataSource::synthetic(384, 42, 96))
+        .on_backend(backend.clone())
+        .build()
+        .and_then(|mut session| session.run());
+    match result {
+        Ok(r) => Some(r.summary),
+        Err(e) => {
+            eprintln!("  row failed ({task} on {}): {e:#}", backend.name());
+            None
+        }
+    }
+}
+
+/// `bench --check`: re-measure the headline throughput rows and the
+/// data-parallel worker ladder, then gate them against the committed
+/// repo-root `BENCH_cpu.json` — a fresh number more than
+/// `--check-threshold` (default 0.2 = 20%) below its committed value is
+/// a regression and exits non-zero. Sections still marked
+/// `verified = false` (seed placeholders) are skipped.
+fn cmd_bench_check(args: &Args) -> Result<()> {
+    let steps = args.u64_or("steps", 12);
+    let threshold: f64 = match args.get("check-threshold") {
+        Some(v) => {
+            let t: f64 = v.parse().map_err(|_| {
+                anyhow!("invalid --check-threshold '{v}' (expected a fraction, e.g. 0.2)")
+            })?;
+            if !(0.0..1.0).contains(&t) {
+                bail!("--check-threshold must be in [0, 1) (got {t})");
+            }
+            t
+        }
+        None => 0.2,
+    };
+    let path = report::bench_json_path();
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        anyhow!("reading committed bench report {}: {e} (run `cargo bench` first)", path.display())
+    })?;
+    let committed =
+        Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+    let threads = thread_request(args, 0)?;
+    println!(
+        "bench --check: {steps} steps per row, regression threshold {:.0}%, \
+         committed report {}",
+        threshold * 100.0,
+        path.display()
+    );
+
+    let mut fresh: Vec<(String, f64)> = Vec::new();
+    let reference: Rc<dyn Backend> = Rc::new(CpuBackend::with_geometry(CHECK_BATCH, CHECK_SEQ));
+    let fast: Rc<dyn Backend> = Rc::new(FastCpuBackend::with_geometry(CHECK_BATCH, CHECK_SEQ));
+    for (mode, task) in [("full_ft", Task::FullFinetune), ("lora", Task::lora())] {
+        if let Some(s) = check_row(&reference, task.clone(), steps) {
+            fresh.push((format!("throughput.{mode}.cpu_tokens_per_sec"), s.tokens_per_sec));
+        }
+        if let Some(s) = check_row(&fast, task, steps) {
+            fresh.push((format!("throughput.{mode}.cpu_fast_tokens_per_sec"), s.tokens_per_sec));
+        }
+    }
+    // the data-parallel worker ladder (replicas built from the spec, the
+    // same settings bench_throughput's data_parallel section records)
+    for workers in [1usize, 2, 4] {
+        let result = SessionBuilder::new()
+            .task(Task::FullFinetune)
+            .steps(steps)
+            .meter_warmup(2)
+            .lr(5e-3)
+            .packing(PackingStrategy::Bfd)
+            .data(DataSource::synthetic(384, 42, 96))
+            .backend(BackendSpec::CpuFast { threads })
+            .workers(workers)
+            .build()
+            .and_then(|mut session| session.run());
+        match result {
+            Ok(r) => fresh.push((
+                format!("data_parallel.workers_{workers}.tokens_per_sec"),
+                r.summary.tokens_per_sec,
+            )),
+            Err(e) => eprintln!("  row failed (data-parallel workers={workers}): {e:#}"),
+        }
+    }
+
+    let out = report::check_bench_metrics(&committed, &fresh, threshold);
+    for l in &out.checked {
+        println!("  ok   {l}");
+    }
+    for l in &out.skipped {
+        println!("  skip {l}");
+    }
+    for l in &out.regressions {
+        println!("  FAIL {l}");
+    }
+    println!(
+        "bench --check: {} compared, {} skipped, {} regressed",
+        out.checked.len(),
+        out.skipped.len(),
+        out.regressions.len()
+    );
+    if !out.passed() {
+        bail!(
+            "bench --check failed: {} metric(s) regressed more than {:.0}% below \
+             the committed report",
+            out.regressions.len(),
+            threshold * 100.0
+        );
     }
     Ok(())
 }

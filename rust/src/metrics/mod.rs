@@ -6,7 +6,7 @@ pub mod memory;
 pub mod throughput;
 
 pub use memory::{MemoryBreakdown, MemoryModel, Precision};
-pub use throughput::ThroughputMeter;
+pub use throughput::{PhaseBreakdown, ThroughputMeter};
 
 /// Model FLOPs Utilization (paper Eq. 87):
 /// `MFU = 6·N·tokens_per_sec / peak_flops`.

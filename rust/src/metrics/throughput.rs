@@ -7,7 +7,25 @@
 //! that is what the tests use (no `thread::sleep`, no wall-clock flake)
 //! and what replay tooling can feed from recorded traces.
 
+use crate::backend::StepPhases;
 use std::time::Instant;
+
+/// Mean per-step phase breakdown in milliseconds, post-warmup (the
+/// runtime-dissection view of arXiv 2311.03687: where a step's wall time
+/// actually goes). `data_ms` is the residual of the measured step wall
+/// time after the backend-reported compute phases — batch cycling,
+/// metering, dispatch overhead.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    /// Forward-pass ms per step.
+    pub fwd_ms: f64,
+    /// Backward-pass ms per step (includes gradient reduction).
+    pub bwd_ms: f64,
+    /// Optimizer ms per step (grad-norm + AdamW).
+    pub optim_ms: f64,
+    /// Non-compute residual ms per step.
+    pub data_ms: f64,
+}
 
 #[derive(Debug)]
 pub struct ThroughputMeter {
@@ -18,6 +36,14 @@ pub struct ThroughputMeter {
     /// per-step durations (seconds) after warmup
     step_times: Vec<f64>,
     last_step_start: Option<Instant>,
+    /// post-warmup phase accumulators (seconds) + the step count that fed
+    /// them — kept separate from `step_times` so phase-blind callers
+    /// (older paths, backends reporting zeroed phases) never skew means
+    phase_fwd_s: f64,
+    phase_bwd_s: f64,
+    phase_optim_s: f64,
+    phase_data_s: f64,
+    phase_steps: usize,
 }
 
 impl ThroughputMeter {
@@ -29,6 +55,11 @@ impl ThroughputMeter {
             real_tokens: 0,
             step_times: Vec::new(),
             last_step_start: None,
+            phase_fwd_s: 0.0,
+            phase_bwd_s: 0.0,
+            phase_optim_s: 0.0,
+            phase_data_s: 0.0,
+            phase_steps: 0,
         }
     }
 
@@ -44,26 +75,78 @@ impl ThroughputMeter {
             .last_step_start
             .take()
             .map(|t0| t0.elapsed().as_secs_f64());
-        self.note_step(dur, slot_tokens, real_tokens);
+        self.note_step(dur, slot_tokens, real_tokens, None);
+    }
+
+    /// Like [`Self::step_end`], also folding the backend-reported phase
+    /// breakdown into the post-warmup phase accounting. The data phase is
+    /// derived here as the residual of the step wall time.
+    pub fn step_end_phased(&mut self, slot_tokens: u64, real_tokens: u64, phases: StepPhases) {
+        let dur = self
+            .last_step_start
+            .take()
+            .map(|t0| t0.elapsed().as_secs_f64());
+        self.note_step(dur, slot_tokens, real_tokens, Some(phases));
     }
 
     /// Record a finished step with an explicit duration — the
     /// deterministic injection point (tests, recorded traces). Identical
     /// warmup/token accounting to `step_end`.
     pub fn record_step(&mut self, seconds: f64, slot_tokens: u64, real_tokens: u64) {
-        self.note_step(Some(seconds), slot_tokens, real_tokens);
+        self.note_step(Some(seconds), slot_tokens, real_tokens, None);
     }
 
-    fn note_step(&mut self, duration_secs: Option<f64>, slot_tokens: u64, real_tokens: u64) {
+    /// [`Self::record_step`] with a phase breakdown — the deterministic
+    /// injection point for the phase accounting tests.
+    pub fn record_step_phased(
+        &mut self,
+        seconds: f64,
+        slot_tokens: u64,
+        real_tokens: u64,
+        phases: StepPhases,
+    ) {
+        self.note_step(Some(seconds), slot_tokens, real_tokens, Some(phases));
+    }
+
+    fn note_step(
+        &mut self,
+        duration_secs: Option<f64>,
+        slot_tokens: u64,
+        real_tokens: u64,
+        phases: Option<StepPhases>,
+    ) {
         self.steps_seen += 1;
         if self.steps_seen <= self.warmup_steps {
             return;
         }
         if let Some(d) = duration_secs {
             self.step_times.push(d);
+            if let Some(p) = phases {
+                self.phase_fwd_s += p.fwd_s;
+                self.phase_bwd_s += p.bwd_s;
+                self.phase_optim_s += p.optim_s;
+                // residual: wall time not attributed to a compute phase
+                self.phase_data_s += (d - p.compute_s()).max(0.0);
+                self.phase_steps += 1;
+            }
         }
         self.tokens += slot_tokens;
         self.real_tokens += real_tokens;
+    }
+
+    /// Mean per-step phase breakdown over the post-warmup steps that
+    /// reported phases; `None` when no step did (phase-blind callers).
+    pub fn phase_breakdown(&self) -> Option<PhaseBreakdown> {
+        if self.phase_steps == 0 {
+            return None;
+        }
+        let n = self.phase_steps as f64;
+        Some(PhaseBreakdown {
+            fwd_ms: self.phase_fwd_s / n * 1e3,
+            bwd_ms: self.phase_bwd_s / n * 1e3,
+            optim_ms: self.phase_optim_s / n * 1e3,
+            data_ms: self.phase_data_s / n * 1e3,
+        })
     }
 
     pub fn measured_steps(&self) -> usize {
@@ -180,5 +263,36 @@ mod tests {
         assert_eq!(m.tokens_per_sec(), 0.0);
         assert_eq!(m.mean_step_ms(), 0.0);
         assert_eq!(m.std_step_ms(), 0.0);
+        assert_eq!(m.phase_breakdown(), None);
+    }
+
+    #[test]
+    fn phase_breakdown_means_and_residual() {
+        let mut m = ThroughputMeter::new(1);
+        let p = StepPhases { fwd_s: 0.002, bwd_s: 0.004, optim_s: 0.001 };
+        // warmup step must not feed the phase accounting
+        m.record_step_phased(0.010, 100, 100, p);
+        m.record_step_phased(0.010, 100, 100, p);
+        m.record_step_phased(0.012, 100, 100, p);
+        let b = m.phase_breakdown().unwrap();
+        assert!((b.fwd_ms - 2.0).abs() < 1e-9);
+        assert!((b.bwd_ms - 4.0).abs() < 1e-9);
+        assert!((b.optim_ms - 1.0).abs() < 1e-9);
+        // residual: (10 - 7) and (12 - 7) ms averaged
+        assert!((b.data_ms - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn residual_clamps_at_zero_and_phase_blind_steps_do_not_skew() {
+        let mut m = ThroughputMeter::new(0);
+        // reported compute exceeds the wall duration (clock skew): clamp
+        let p = StepPhases { fwd_s: 0.020, bwd_s: 0.0, optim_s: 0.0 };
+        m.record_step_phased(0.010, 100, 100, p);
+        // a phase-blind step contributes to throughput but not to phases
+        m.record_step(0.010, 100, 100);
+        let b = m.phase_breakdown().unwrap();
+        assert_eq!(b.data_ms, 0.0);
+        assert!((b.fwd_ms - 20.0).abs() < 1e-9);
+        assert_eq!(m.measured_steps(), 2);
     }
 }

@@ -182,6 +182,79 @@ pub fn update_bench_json(
     Ok(())
 }
 
+/// Outcome of a bench regression check ([`check_bench_metrics`]): every
+/// fresh measurement lands in exactly one bucket.
+#[derive(Debug, Clone, Default)]
+pub struct BenchCheckOutcome {
+    /// Metrics compared and within the threshold: "path: committed X,
+    /// fresh Y (ratio)".
+    pub checked: Vec<String>,
+    /// Metrics not compared, with the reason (section `verified = false`,
+    /// path missing from the committed report, non-numeric leaf).
+    pub skipped: Vec<String>,
+    /// Metrics that regressed beyond the threshold.
+    pub regressions: Vec<String>,
+}
+
+impl BenchCheckOutcome {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+/// Compare fresh bench measurements against a committed report (e.g. the
+/// repo-root `BENCH_cpu.json`). Each fresh entry is a dotted path into the
+/// committed JSON (`"throughput.full_ft.cpu_tokens_per_sec"`) plus the
+/// freshly measured value; higher is better. A fresh value below
+/// `committed · (1 − threshold)` is a regression. Any object on the path
+/// carrying `"verified": false` gates its whole subtree — seed numbers
+/// that were never measured can't fail a check — and paths absent from
+/// the committed report are skipped, so a fresh section can land before
+/// its first committed measurement.
+pub fn check_bench_metrics(
+    committed: &crate::util::json::Json,
+    fresh: &[(String, f64)],
+    threshold: f64,
+) -> BenchCheckOutcome {
+    let mut out = BenchCheckOutcome::default();
+    'next: for (path, fresh_v) in fresh {
+        let mut node = committed;
+        for seg in path.split('.') {
+            let Some(obj) = node.as_obj() else {
+                out.skipped.push(format!("{path}: committed entry is not an object"));
+                continue 'next;
+            };
+            if obj.get("verified").and_then(|v| v.as_bool()) == Some(false) {
+                out.skipped.push(format!("{path}: committed section is unverified"));
+                continue 'next;
+            }
+            match obj.get(seg) {
+                Some(n) => node = n,
+                None => {
+                    out.skipped.push(format!("{path}: not in the committed report"));
+                    continue 'next;
+                }
+            }
+        }
+        let Some(committed_v) = node.as_f64() else {
+            out.skipped.push(format!("{path}: committed value is not a number"));
+            continue;
+        };
+        let floor = committed_v * (1.0 - threshold);
+        let ratio = if committed_v > 0.0 { fresh_v / committed_v } else { f64::INFINITY };
+        let line = format!("{path}: committed {committed_v:.1}, fresh {fresh_v:.1} ({ratio:.2}x)");
+        if *fresh_v < floor {
+            out.regressions.push(format!(
+                "{line} — below the {:.0}% regression floor {floor:.1}",
+                threshold * 100.0
+            ));
+        } else {
+            out.checked.push(line);
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,6 +291,58 @@ mod tests {
     fn kernel_table_speedup() {
         let t = kernel_table(&[("RMSNorm".into(), 0.001, 0.007)]);
         assert!(t.contains("7.00x"), "{t}");
+    }
+
+    #[test]
+    fn bench_check_buckets_and_threshold() {
+        let committed = Json::parse(
+            r#"{
+              "throughput": {
+                "full_ft": {"cpu_tokens_per_sec": 1000.0, "speedup": 2.5, "verified": true},
+                "lora": {"cpu_tokens_per_sec": 800.0, "verified": false}
+              }
+            }"#,
+        )
+        .unwrap();
+        let fresh = vec![
+            ("throughput.full_ft.cpu_tokens_per_sec".to_string(), 950.0), // -5%: ok
+            ("throughput.full_ft.speedup".to_string(), 1.0),              // -60%: regression
+            ("throughput.lora.cpu_tokens_per_sec".to_string(), 1.0),      // unverified: skip
+            ("throughput.full_ft.missing_metric".to_string(), 1.0),       // absent: skip
+            ("no_such_section.x".to_string(), 1.0),                       // absent: skip
+        ];
+        let out = check_bench_metrics(&committed, &fresh, 0.2);
+        assert_eq!(out.checked.len(), 1, "{out:?}");
+        assert_eq!(out.regressions.len(), 1, "{out:?}");
+        assert_eq!(out.skipped.len(), 3, "{out:?}");
+        assert!(!out.passed());
+        assert!(out.regressions[0].contains("speedup"), "{:?}", out.regressions);
+        assert!(
+            out.skipped.iter().any(|s| s.contains("unverified")),
+            "{:?}",
+            out.skipped
+        );
+        // everything within threshold passes
+        let out = check_bench_metrics(
+            &committed,
+            &[("throughput.full_ft.speedup".to_string(), 2.4)],
+            0.2,
+        );
+        assert!(out.passed());
+        assert_eq!(out.checked.len(), 1);
+    }
+
+    #[test]
+    fn bench_check_improvements_pass_and_leaf_objects_skip() {
+        let committed =
+            Json::parse(r#"{"s": {"tps": 100.0, "cfg": {"batch": 4}}}"#).unwrap();
+        // a big improvement is never a regression
+        let out = check_bench_metrics(&committed, &[("s.tps".to_string(), 500.0)], 0.1);
+        assert!(out.passed());
+        // a path landing on an object (not a number) is skipped, not a panic
+        let out = check_bench_metrics(&committed, &[("s.cfg".to_string(), 1.0)], 0.1);
+        assert_eq!(out.skipped.len(), 1);
+        assert!(out.passed());
     }
 
     #[test]

@@ -43,7 +43,7 @@ pub use crate::batching::{PackingStrategy, TailPolicy};
 pub use crate::data_source::LossMode;
 pub use resolve::{resolve_eval, resolve_init, Resolved};
 
-use crate::backend::{create_backend, Backend, DeviceBatch};
+use crate::backend::{create_backend, Backend, DataParallel, DeviceBatch};
 use crate::batching::{Batch, BatchStream, EpochSpec};
 use crate::checkpoint::Codec;
 use crate::config::RunConfig;
@@ -464,6 +464,16 @@ pub struct SessionSpec {
     /// `None` (default): no eval split.
     pub eval_fraction: Option<f64>,
     pub backend: BackendSpec,
+    /// Data-parallel replica count. `0` (default) = the legacy
+    /// single-backend path, bit-identical to every release before workers
+    /// existed. `n ≥ 1` = build `n` backend replicas from
+    /// [`SessionSpec::backend`] and wrap them in
+    /// [`crate::backend::DataParallel`]: each batch is sharded row-wise,
+    /// per-row gradients combine through a fixed-order reduction tree, and
+    /// the optimizer steps once on the reduced gradient — so the loss /
+    /// grad-norm / eval series are bitwise invariant across worker counts
+    /// (DESIGN.md §10). Even `n = 1` goes through the sharded path.
+    pub workers: usize,
     pub steps: u64,
     /// Throughput-meter warmup steps excluded from tokens/sec.
     pub meter_warmup: usize,
@@ -536,6 +546,18 @@ impl SessionSpec {
         if self.epoch_policy.epochs == Some(0) {
             bail!("epochs must be ≥ 1 (use epochs: None for step-count cycling)");
         }
+        if self.workers > 0 {
+            if let BackendSpec::Pjrt { .. } = self.backend {
+                bail!(
+                    "data-parallel workers need a backend that supports per-row \
+                     gradient sharding (cpu | cpu-fast); the pjrt artifact runtime \
+                     does not"
+                );
+            }
+            if self.workers > 64 {
+                bail!("workers must be ≤ 64 (got {})", self.workers);
+            }
+        }
         if let Some(f) = self.eval_fraction {
             if !f.is_finite() || f <= 0.0 {
                 bail!(
@@ -598,6 +620,7 @@ impl SessionSpec {
             loss_mode,
             eval_fraction: cfg.eval_fraction,
             backend,
+            workers: cfg.workers,
             steps: cfg.steps,
             meter_warmup: cfg.warmup_steps,
             seed: cfg.seed,
@@ -608,10 +631,24 @@ impl SessionSpec {
     }
 
     /// Build a runnable session, creating the backend from
-    /// [`SessionSpec::backend`].
+    /// [`SessionSpec::backend`] (wrapped in [`DataParallel`] over
+    /// [`SessionSpec::workers`] replicas when workers are requested).
     pub fn build(self) -> Result<Session> {
-        let backend = self.backend.create()?;
+        let backend = self.create_backend()?;
         Session::with_backend(self, backend)
+    }
+
+    /// Instantiate the execution backend this spec describes: the plain
+    /// backend when `workers == 0`, otherwise `workers` independent
+    /// replicas behind the [`DataParallel`] reduction tree.
+    pub fn create_backend(&self) -> Result<Rc<dyn Backend>> {
+        if self.workers == 0 {
+            return self.backend.create();
+        }
+        let replicas = (0..self.workers)
+            .map(|_| self.backend.create())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Rc::new(DataParallel::from_replicas(replicas)?))
     }
 }
 
@@ -628,6 +665,7 @@ pub struct SessionBuilder {
     eval_fraction: Option<f64>,
     backend_spec: BackendSpec,
     backend: Option<Rc<dyn Backend>>,
+    workers: usize,
     steps: u64,
     meter_warmup: usize,
     seed: u64,
@@ -653,6 +691,7 @@ impl SessionBuilder {
             eval_fraction: None,
             backend_spec: BackendSpec::Cpu,
             backend: None,
+            workers: 0,
             steps: 50,
             meter_warmup: 3,
             seed: 42,
@@ -795,6 +834,34 @@ impl SessionBuilder {
         self
     }
 
+    /// Run data-parallel over `n` backend replicas: each batch is sharded
+    /// row-wise across the replicas and their gradients combine through a
+    /// fixed-order reduction tree before one optimizer step, so the loss /
+    /// grad-norm / eval series are **bitwise identical for every worker
+    /// count** (DESIGN.md §10). `n = 1` still goes through the sharded
+    /// path; `0` (the default) is the legacy single-backend path.
+    ///
+    /// ```
+    /// use chronicals::session::{DataSource, SessionBuilder};
+    ///
+    /// let run = |workers: usize| -> anyhow::Result<f32> {
+    ///     let mut s = SessionBuilder::new()
+    ///         .steps(3)
+    ///         .lr(5e-3)
+    ///         .data(DataSource::synthetic(64, 42, 48))
+    ///         .workers(workers)
+    ///         .build()?;
+    ///     Ok(s.run()?.summary.last_loss)
+    /// };
+    /// // worker count only changes who computes which row, never the bits
+    /// assert_eq!(run(1)?.to_bits(), run(2)?.to_bits());
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
     pub fn steps(mut self, steps: u64) -> Self {
         self.steps = steps;
         self
@@ -850,6 +917,7 @@ impl SessionBuilder {
             loss_mode: self.loss_mode,
             eval_fraction: self.eval_fraction,
             backend: self.backend_spec,
+            workers: self.workers,
             steps: self.steps,
             meter_warmup: self.meter_warmup,
             seed,
@@ -865,6 +933,15 @@ impl SessionBuilder {
         let backend = self.backend.take();
         let spec = self.build_spec()?;
         match backend {
+            Some(_) if spec.workers > 0 => {
+                // an adopted backend is a single instance; data-parallel
+                // needs to construct one replica per worker from the spec
+                bail!(
+                    "workers({}) cannot be combined with on_backend(): replicas \
+                     are created from the backend spec — use .backend(...) instead",
+                    spec.workers
+                )
+            }
             Some(be) => Session::with_backend(spec, be),
             None => spec.build(),
         }
@@ -1402,6 +1479,43 @@ mod tests {
         assert!(Task::parse("full-ft", None, Some(16.0)).is_err());
         assert!(Task::parse("ablate-naive", Some(4), None).is_err());
         assert!(Task::parse("frobnicate", None, None).is_err());
+    }
+
+    #[test]
+    fn workers_default_is_legacy_path() {
+        let spec = SessionBuilder::new().build_spec().unwrap();
+        assert_eq!(spec.workers, 0);
+    }
+
+    #[test]
+    fn workers_validation() {
+        let spec = SessionBuilder::new().workers(4).build_spec().unwrap();
+        assert_eq!(spec.workers, 4);
+        let err = SessionBuilder::new()
+            .workers(2)
+            .backend(BackendSpec::Pjrt { artifacts_dir: "x".into() })
+            .build_spec()
+            .unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        let err = SessionBuilder::new().workers(65).build_spec().unwrap_err();
+        assert!(err.to_string().contains("64"), "{err}");
+    }
+
+    #[test]
+    fn workers_with_adopted_backend_rejected() {
+        let be: Rc<dyn Backend> = Rc::new(crate::backend::cpu::CpuBackend::new());
+        let err = SessionBuilder::new().workers(2).on_backend(be).build().unwrap_err();
+        assert!(err.to_string().contains("on_backend"), "{err}");
+    }
+
+    #[test]
+    fn workers_spec_builds_data_parallel_backend() {
+        let spec = SessionBuilder::new().workers(3).build_spec().unwrap();
+        let be = spec.create_backend().unwrap();
+        assert_eq!(be.name(), "data-parallel");
+        // legacy path untouched when workers are unset
+        let spec = SessionBuilder::new().build_spec().unwrap();
+        assert_eq!(spec.create_backend().unwrap().name(), "cpu");
     }
 
     #[test]

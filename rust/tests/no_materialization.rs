@@ -17,8 +17,9 @@
 
 use chronicals::backend::cpu::ModelDims;
 use chronicals::backend::cpu_fast::FastCpuBackend;
-use chronicals::backend::Backend;
+use chronicals::backend::{Backend, DataParallel};
 use chronicals::harness;
+use std::rc::Rc;
 
 fn dims() -> ModelDims {
     ModelDims { vocab: 256, d_model: 32, n_layers: 2, n_heads: 4, n_kv_heads: 2, d_ff: 64 }
@@ -26,13 +27,29 @@ fn dims() -> ModelDims {
 
 /// Build a warmed-up (state, staged batch) pair on the accounting geometry.
 fn setup(fast: &FastCpuBackend) -> (chronicals::backend::DeviceState, chronicals::backend::DeviceBatch) {
+    setup_on(fast)
+}
+
+/// [`setup`] through the `Backend` trait — also serves the data-parallel
+/// wrapper (its manifest/init/upload delegate to replica 0).
+fn setup_on(be: &dyn Backend) -> (chronicals::backend::DeviceState, chronicals::backend::DeviceBatch) {
     let exe = "train_step_chronicals";
-    let spec = fast.manifest().get(exe).unwrap().clone();
+    let spec = be.manifest().get(exe).unwrap().clone();
     let (_tok, exs) = harness::build_corpus(384, 5, spec.model_config.vocab, 96);
-    let batches = harness::make_batches(fast.manifest(), exe, &exs, true).unwrap();
-    let state = fast.init_state("init_chronicals", 5).unwrap();
-    let ub = fast.upload_batch(exe, &batches[0]).unwrap();
+    let batches = harness::make_batches(be.manifest(), exe, &exs, true).unwrap();
+    let state = be.init_state("init_chronicals", 5).unwrap();
+    let ub = be.upload_batch(exe, &batches[0]).unwrap();
     (state, ub)
+}
+
+/// A data-parallel wrapper over `workers` fast-CPU replicas on the
+/// accounting geometry, with concrete handles kept for arena inspection.
+fn dp_fast(workers: usize, batch: usize, seq: usize) -> (DataParallel, Vec<Rc<FastCpuBackend>>) {
+    let replicas: Vec<Rc<FastCpuBackend>> =
+        (0..workers).map(|_| Rc::new(FastCpuBackend::custom(dims(), batch, seq, 2))).collect();
+    let dyns: Vec<Rc<dyn Backend>> =
+        replicas.iter().map(|r| r.clone() as Rc<dyn Backend>).collect();
+    (DataParallel::from_replicas(dyns).unwrap(), replicas)
 }
 
 /// Run a full fast train step on a geometry where `[B, Hq, S, S]` and
@@ -156,4 +173,81 @@ fn warm_arena_steps_allocate_nothing_and_keep_peak_accounting() {
         largest_logical,
         "warm-step peak must reflect the largest logical buffer (T·d_ff)"
     );
+}
+
+/// The data-parallel reduction path shares its gradient arena across
+/// steps: one heap allocation when the geometry is first seen, zero on
+/// every steady-state step after it — the same warm-arena contract the
+/// per-replica scratch arenas obey, now for the lanes + reduction tree.
+#[test]
+fn data_parallel_grad_arena_allocates_once() {
+    let (batch, seq) = (4usize, 128usize);
+    let (dp, _replicas) = dp_fast(2, batch, seq);
+    let (mut state, ub) = setup_on(&dp);
+
+    dp.train_step("train_step_chronicals", &mut state, &ub, 1, 1e-3, 1e-3).unwrap();
+    assert_eq!(dp.grad_arena_heap_allocs(), 1, "first step sizes the arena exactly once");
+    let lane_len = dp.flat_grad_len(&state).unwrap();
+    assert_eq!(dp.grad_arena_elems(), batch * lane_len, "one flat lane per batch row");
+
+    for step in 2..=5u64 {
+        let out = dp
+            .train_step("train_step_chronicals", &mut state, &ub, step, 1e-3, 1e-3)
+            .unwrap();
+        assert!(out.grad_norm > 0.0, "step {step} must train");
+    }
+    assert_eq!(
+        dp.grad_arena_heap_allocs(),
+        1,
+        "steady-state shard→reduce→step must perform zero arena heap allocations"
+    );
+}
+
+/// Peak accounting composes across the replica set: every replica that
+/// ran rows reports a non-zero scratch peak at *row* scale (a `[1, S]`
+/// forward/backward, far below the full-batch activation ceiling), the
+/// aggregate is bounded by `workers × row-ceiling`, and warm replica
+/// arenas serve their row shards without new heap allocations.
+#[test]
+fn data_parallel_peak_accounting_aggregates_per_replica_arenas() {
+    let d = dims();
+    let (batch, seq) = (4usize, 128usize);
+    // a single-row shard's largest legitimate lease: S·max(d_ff, d_model)
+    let row_ceiling = seq * d.d_ff.max(d.d_model);
+    let (dp, replicas) = dp_fast(2, batch, seq);
+    let (mut state, ub) = setup_on(&dp);
+
+    // cold step: replicas size their scratch arenas for row-shard work
+    dp.train_step("train_step_chronicals", &mut state, &ub, 1, 1e-3, 1e-3).unwrap();
+    let warm_allocs: Vec<u64> =
+        replicas.iter().map(|r| r.exec().arena().heap_allocs()).collect();
+    for r in &replicas {
+        r.exec().arena().reset_peak();
+    }
+
+    dp.train_step("train_step_chronicals", &mut state, &ub, 2, 1e-3, 1e-3).unwrap();
+    let mut aggregate = 0usize;
+    for (i, r) in replicas.iter().enumerate() {
+        let peak = r.exec().arena().peak_elems();
+        assert!(peak > 0, "replica {i} received rows but recorded no leases");
+        assert!(
+            peak <= row_ceiling,
+            "replica {i} peak {peak} exceeds the row-shard ceiling {row_ceiling}"
+        );
+        aggregate += peak;
+    }
+    assert!(
+        aggregate <= replicas.len() * row_ceiling,
+        "aggregate replica peak {aggregate} exceeds workers × row ceiling"
+    );
+    for (i, r) in replicas.iter().enumerate() {
+        assert_eq!(
+            r.exec().arena().heap_allocs(),
+            warm_allocs[i],
+            "warm replica {i} must serve its row shard without new heap allocations"
+        );
+    }
+    // and the shared gradient lanes are accounted separately, in full
+    let lane_len = dp.flat_grad_len(&state).unwrap();
+    assert_eq!(dp.grad_arena_elems(), batch * lane_len);
 }

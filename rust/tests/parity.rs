@@ -302,6 +302,147 @@ fn session_eval_series_parity() {
     assert!((rf - ff).abs() <= LOSS_TOL * (1.0 + rf.abs()), "final {ff} vs {rf}");
 }
 
+/// Drive a full session at a given data-parallel worker count and return
+/// the bit patterns of everything the RunReport exposes as a series:
+/// per-step (loss, grad_norm) and the held-out eval-loss series.
+fn dp_session_bits(workers: usize, threads: usize) -> (Vec<(u32, u32)>, Vec<(u64, u32)>) {
+    let mut session = chronicals::session::SessionBuilder::new()
+        .data(chronicals::session::DataSource::synthetic(64, 42, 48))
+        .eval_fraction(0.25)
+        .steps(5)
+        .lr(5e-3)
+        .seed(42)
+        .backend(chronicals::session::BackendSpec::CpuFast { threads })
+        .workers(workers)
+        .build()
+        .unwrap();
+    let report = session.run().unwrap();
+    let steps = session
+        .records()
+        .iter()
+        .map(|r| (r.loss.to_bits(), r.grad_norm.to_bits()))
+        .collect();
+    let eval = report.eval.iter().map(|(s, l)| (*s, l.to_bits())).collect();
+    (steps, eval)
+}
+
+/// The tentpole contract: `--workers N` for N ∈ {1, 2, 4} produces
+/// bitwise-identical loss, grad-norm and eval series. Worker count only
+/// changes which replica computes which row — every batch decomposes into
+/// the same per-row gradient tasks and the same fixed-order reduction
+/// tree regardless of N (DESIGN.md §10).
+#[test]
+fn workers_ladder_bitwise_identical() {
+    let one = dp_session_bits(1, 2);
+    assert!(!one.0.is_empty() && !one.1.is_empty());
+    for workers in [2usize, 4] {
+        assert_eq!(one, dp_session_bits(workers, 2), "workers={workers} changed the bits");
+    }
+}
+
+/// The worker ladder composes with the PR-4 thread ladder: neither the
+/// replica count nor each replica's pool width may touch the bits.
+#[test]
+fn worker_and_thread_ladders_compose() {
+    let base = dp_session_bits(2, 1);
+    assert_eq!(base, dp_session_bits(2, 4), "threads=4 changed the bits at workers=2");
+    assert_eq!(base, dp_session_bits(4, 1), "workers=4 changed the bits at threads=1");
+}
+
+/// The data-parallel path is the same mathematics as the legacy
+/// single-backend step — per-row forward/backward with the global loss
+/// normalizer, tree-reduced — so DP(1) must match the legacy path within
+/// the standard reassociation tolerance (it is NOT required to be
+/// bitwise equal: the reduction tree sums row gradients in a different
+/// association order than the batched backward).
+#[test]
+fn data_parallel_matches_legacy_within_tolerance() {
+    let run = |workers: usize| {
+        let mut session = chronicals::session::SessionBuilder::new()
+            .data(chronicals::session::DataSource::synthetic(64, 42, 48))
+            .steps(5)
+            .lr(5e-3)
+            .seed(42)
+            .backend(chronicals::session::BackendSpec::Cpu)
+            .workers(workers)
+            .build()
+            .unwrap();
+        session.run().unwrap();
+        session
+            .records()
+            .iter()
+            .map(|r| (r.loss, r.grad_norm))
+            .collect::<Vec<_>>()
+    };
+    let legacy = {
+        let mut session = chronicals::session::SessionBuilder::new()
+            .data(chronicals::session::DataSource::synthetic(64, 42, 48))
+            .steps(5)
+            .lr(5e-3)
+            .seed(42)
+            .backend(chronicals::session::BackendSpec::Cpu)
+            .build()
+            .unwrap();
+        session.run().unwrap();
+        session
+            .records()
+            .iter()
+            .map(|r| (r.loss, r.grad_norm))
+            .collect::<Vec<_>>()
+    };
+    assert_parity(&legacy, &run(1), "dp(1) vs legacy");
+    assert_parity(&legacy, &run(2), "dp(2) vs legacy");
+}
+
+/// Property test for the shard seam: splitting a packed batch across any
+/// worker count preserves the real-token and supervised-target multisets
+/// and the row/accounting totals — sharding moves rows, never edits them.
+#[test]
+fn shard_splitting_preserves_token_and_target_multiset() {
+    let reference = CpuBackend::new();
+    let batches = batches_for(&reference, "train_step_chronicals", 5);
+    assert!(!batches.is_empty());
+    let real = |b: &Batch| -> (Vec<i32>, Vec<i32>) {
+        let toks = b.tokens.as_i32().unwrap();
+        let segs = b.seg_ids.as_i32().unwrap();
+        let tgts = b.targets.as_i32().unwrap();
+        let mut t: Vec<i32> = toks
+            .iter()
+            .zip(segs)
+            .filter(|(_, &s)| s != 0)
+            .map(|(&x, _)| x)
+            .collect();
+        let mut g: Vec<i32> = tgts.iter().filter(|&&x| x >= 0).copied().collect();
+        t.sort_unstable();
+        g.sort_unstable();
+        (t, g)
+    };
+    for b in &batches {
+        let want = real(b);
+        for workers in 1..=b.batch + 2 {
+            let shards = b.shard(workers).unwrap();
+            assert!(shards.len() <= workers.min(b.batch));
+            let (mut toks, mut tgts) = (Vec::new(), Vec::new());
+            let (mut rows, mut rt, mut rg) = (0usize, 0usize, 0usize);
+            for s in &shards {
+                let (t, g) = real(s);
+                toks.extend(t);
+                tgts.extend(g);
+                rows += s.batch;
+                rt += s.real_tokens;
+                rg += s.real_targets;
+            }
+            toks.sort_unstable();
+            tgts.sort_unstable();
+            assert_eq!(toks, want.0, "workers={workers}: token multiset changed");
+            assert_eq!(tgts, want.1, "workers={workers}: target multiset changed");
+            assert_eq!(rows, b.batch, "workers={workers}: rows lost");
+            assert_eq!(rt, b.real_tokens, "workers={workers}: real_tokens accounting");
+            assert_eq!(rg, b.real_targets, "workers={workers}: real_targets accounting");
+        }
+    }
+}
+
 /// DeviceState/DeviceBatch created by one CPU backend are accepted by the
 /// other (shared representation) — documented contract, pinned here.
 #[test]
