@@ -22,14 +22,14 @@ use chronicals::metrics::PhaseBreakdown;
 use chronicals::report::{self, Row};
 use chronicals::session::{BackendSpec, DataSource, PackingStrategy, SessionBuilder, Task};
 use chronicals::util::json::{Json, Obj};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Bench geometry: larger than the 4×64 reference substrate so tiling,
 /// threading and the no-materialization paths have real work to do.
 const BATCH: usize = 4;
 const SEQ: usize = 128;
 
-fn run(backend: &Rc<dyn Backend>, task: Task, steps: u64) -> Option<TrainSummary> {
+fn run(backend: &Arc<dyn Backend>, task: Task, steps: u64) -> Option<TrainSummary> {
     let result = SessionBuilder::new()
         .task(task.clone())
         .steps(steps)
@@ -90,8 +90,8 @@ fn main() {
         .unwrap_or(12);
     let fast = FastCpuBackend::with_geometry(BATCH, SEQ);
     let threads = fast.threads();
-    let reference: Rc<dyn Backend> = Rc::new(CpuBackend::with_geometry(BATCH, SEQ));
-    let fast: Rc<dyn Backend> = Rc::new(fast);
+    let reference: Arc<dyn Backend> = Arc::new(CpuBackend::with_geometry(BATCH, SEQ));
+    let fast: Arc<dyn Backend> = Arc::new(fast);
     println!(
         "bench_throughput: {steps} steps per config, B={BATCH} S={SEQ}, \
          cpu-fast threads={threads}\n"

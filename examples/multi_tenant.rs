@@ -1,0 +1,106 @@
+//! Two tenants, one base model (DESIGN.md §11):
+//!
+//! 1. `data/chat_sample.jsonl` is split into two disjoint tenant corpora
+//!    (even- vs odd-indexed transcripts) via a custom [`ExampleSource`],
+//! 2. `tenant-even` fine-tunes a LoRA adapter and `tenant-odd` a LoRA+
+//!    adapter against the *same* shared base weights, co-scheduled by the
+//!    serve engine in fused rounds — one workspace, two adapters swapped
+//!    in and out per slice,
+//! 3. the whole service runs twice; both tenants' report files must match
+//!    bit for bit across runs (serve reports carry no wall-clock fields,
+//!    so determinism is byte-level).
+//!
+//! Runs on the hermetic CPU reference backend: no artifacts, no Python.
+//!
+//! Run: `cargo run --release --example multi_tenant`
+
+use chronicals::backend::create_backend;
+use chronicals::data::TokenizedExample;
+use chronicals::serve::{JobSpec, ServeConfig, ServeEngine};
+use chronicals::session::{DataSource, ExampleSource, LossMode, Schedule, Task};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+fn chat_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../data/chat_sample.jsonl")
+}
+
+/// One tenant's private slice of the shared chat corpus: the even- or
+/// odd-indexed transcripts, tokenized exactly like `DataSource::chat`.
+struct ChatSlice {
+    keep_odd: bool,
+}
+
+impl ExampleSource for ChatSlice {
+    fn label(&self) -> String {
+        format!("chat-slice({})", if self.keep_odd { "odd" } else { "even" })
+    }
+
+    fn examples(&self, vocab_cap: usize) -> anyhow::Result<Vec<TokenizedExample>> {
+        let (all, _stats) = DataSource::chat(chat_path().to_string_lossy(), 7, 48)
+            .tokenized(vocab_cap, LossMode::default())?;
+        Ok(all
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| (i % 2 == 1) == self.keep_odd)
+            .map(|(_, e)| e)
+            .collect())
+    }
+}
+
+fn tenant(id: &str, task: Task, seed: i64, keep_odd: bool) -> JobSpec {
+    JobSpec {
+        id: id.to_string(),
+        task,
+        steps: 8,
+        lr: 5e-3,
+        seed,
+        schedule: Schedule::Constant,
+        loss_mode: LossMode::default(),
+        data: DataSource::Custom(Rc::new(ChatSlice { keep_odd })),
+    }
+}
+
+/// Serve both tenants once; return each report file's exact text.
+fn serve_once(out: &Path) -> anyhow::Result<(String, String)> {
+    let _ = std::fs::remove_dir_all(out);
+    let backend = create_backend("cpu", "", 0)?;
+    let cfg =
+        ServeConfig { out_dir: out.to_path_buf(), steps_per_round: 2, ..Default::default() };
+    let mut engine = ServeEngine::new(backend, cfg)?;
+    engine.admit_spec(tenant("tenant-even", Task::lora(), 7, false))?;
+    engine.admit_spec(tenant("tenant-odd", Task::lora_plus(16.0), 11, true))?;
+    let summary = engine.run()?;
+    anyhow::ensure!(summary.completed == 2, "both tenants finish their budgets: {summary:?}");
+    anyhow::ensure!(
+        summary.fused_rounds > 0,
+        "compatible LoRA tenants share fused rounds: {summary:?}"
+    );
+    let even = std::fs::read_to_string(out.join("tenant-even.report.json"))?;
+    let odd = std::fs::read_to_string(out.join("tenant-odd.report.json"))?;
+    Ok((even, odd))
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("serving two adapters over disjoint slices of data/chat_sample.jsonl\n");
+    let base = std::env::temp_dir().join(format!("chronicals_multi_tenant_{}", std::process::id()));
+    let (even_a, odd_a) = serve_once(&base.join("run1"))?;
+    let (even_b, odd_b) = serve_once(&base.join("run2"))?;
+
+    for (id, text) in [("tenant-even", &even_a), ("tenant-odd", &odd_a)] {
+        anyhow::ensure!(
+            text.contains("\"loss_decreased\": true"),
+            "{id} must show decreasing loss:\n{text}"
+        );
+        anyhow::ensure!(text.contains("\"completed\": true"), "{id} must complete:\n{text}");
+        println!("--- {id}.report.json ---\n{text}");
+    }
+
+    anyhow::ensure!(even_a == even_b, "tenant-even reports must match bit for bit across runs");
+    anyhow::ensure!(odd_a == odd_b, "tenant-odd reports must match bit for bit across runs");
+    println!("reproducibility: second service run produced byte-identical reports");
+
+    let _ = std::fs::remove_dir_all(&base);
+    println!("multi_tenant OK");
+    Ok(())
+}

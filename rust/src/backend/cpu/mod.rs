@@ -14,13 +14,13 @@ pub mod model;
 
 pub use model::{CpuState, LoraCfg, ModelDims};
 
-use super::{Backend, DeviceBatch, DeviceState, RowGrad, StepOutputs};
+use super::{AdapterState, Backend, DeviceBatch, DeviceState, RowGrad, StepOutputs};
 use crate::batching::Batch;
 use crate::manifest::{
     DType, ExecutableSpec, Manifest, ModelConfigEcho, Role, StepConfigEcho, TensorSpec,
 };
 use crate::runtime::HostTensor;
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use std::path::PathBuf;
 
 /// Reference batch geometry: small enough that a full train step is
@@ -188,6 +188,48 @@ pub(crate) fn synth_manifest(
     Manifest { profile: profile.into(), dir: PathBuf::new(), executables }
 }
 
+/// Model geometry echoed by an executable spec — the dims every CPU-family
+/// state and adapter for that executable must carry.
+pub(crate) fn spec_dims(spec: &ExecutableSpec) -> ModelDims {
+    ModelDims {
+        vocab: spec.model_config.vocab,
+        d_model: spec.model_config.d_model,
+        n_layers: spec.model_config.n_layers,
+        n_heads: spec.model_config.n_heads,
+        n_kv_heads: spec.model_config.n_kv_heads,
+        d_ff: spec.model_config.d_ff,
+    }
+}
+
+// ---- multi-tenant adapter seam (DESIGN.md §11) -----------------------
+//
+// Both CPU backends share the `CpuState` layout, so one implementation of
+// the adapter split serves both; a validation fix applied here reaches
+// `cpu` and `cpu-fast` alike.
+
+pub(crate) fn cpu_init_adapter(spec: &ExecutableSpec, seed: i32) -> Result<AdapterState> {
+    let lora = family_lora(&spec.family).ok_or_else(|| {
+        anyhow!(
+            "executable '{}' (family '{}') has no LoRA adapters — only the lora \
+             family supports per-tenant adapter state",
+            spec.name,
+            spec.family
+        )
+    })?;
+    Ok(AdapterState::Cpu(model::init_adapter(spec_dims(spec), lora, seed)))
+}
+
+pub(crate) fn cpu_swap_adapter(state: &mut DeviceState, adapter: &mut AdapterState) -> Result<()> {
+    let s = as_cpu_state_mut(state)?;
+    let AdapterState::Cpu(a) = adapter;
+    model::swap_adapter(s, a)
+}
+
+pub(crate) fn cpu_adapter_params(adapter: &AdapterState) -> Result<Vec<HostTensor>> {
+    let AdapterState::Cpu(a) = adapter;
+    Ok(a.params.clone())
+}
+
 pub(crate) fn as_cpu_state(state: &DeviceState) -> Result<&CpuState> {
     match state {
         DeviceState::Cpu(s) => Ok(s),
@@ -322,16 +364,8 @@ impl Backend for CpuBackend {
         if spec.kind != "init" {
             bail!("'{init_name}' is not an init executable (kind = {})", spec.kind);
         }
-        let dims = ModelDims {
-            vocab: spec.model_config.vocab,
-            d_model: spec.model_config.d_model,
-            n_layers: spec.model_config.n_layers,
-            n_heads: spec.model_config.n_heads,
-            n_kv_heads: spec.model_config.n_kv_heads,
-            d_ff: spec.model_config.d_ff,
-        };
         let lora = family_lora(&spec.family);
-        Ok(DeviceState::Cpu(model::init_state(dims, lora, seed)))
+        Ok(DeviceState::Cpu(model::init_state(spec_dims(spec), lora, seed)))
     }
 
     fn upload_batch(&self, train_name: &str, batch: &Batch) -> Result<DeviceBatch> {
@@ -383,6 +417,18 @@ impl Backend for CpuBackend {
             n_tokens: out.n_tokens,
             phases: out.phases,
         })
+    }
+
+    fn init_adapter(&self, train_name: &str, seed: i32) -> Result<AdapterState> {
+        cpu_init_adapter(self.spec(train_name)?, seed)
+    }
+
+    fn swap_adapter(&self, state: &mut DeviceState, adapter: &mut AdapterState) -> Result<()> {
+        cpu_swap_adapter(state, adapter)
+    }
+
+    fn adapter_params(&self, adapter: &AdapterState) -> Result<Vec<HostTensor>> {
+        cpu_adapter_params(adapter)
     }
 
     fn flat_grad_len(&self, state: &DeviceState) -> Result<usize> {

@@ -862,6 +862,90 @@ pub fn apply_flat_grads(
     Ok(())
 }
 
+/// Per-tenant adapter state for the serve subsystem (DESIGN.md §11): the
+/// trainable prefix of a LoRA [`CpuState`] — the rank-r A/B tensors and
+/// their AdamW moment slots — detached from the shared frozen base
+/// weights, so many tenants can train against one resident base.
+#[derive(Debug, Clone)]
+pub struct CpuAdapter {
+    pub dims: ModelDims,
+    pub lora: LoraCfg,
+    /// Trainable tensor names, state order (the LoRA prefix of the layout).
+    pub names: Vec<String>,
+    pub params: Vec<HostTensor>,
+    pub slot_m: Vec<Vec<f32>>,
+    pub slot_v: Vec<Vec<f32>>,
+}
+
+/// Initialize a fresh per-tenant adapter. Draw-order contract: the LoRA
+/// adapters are the *first* tensors in the state layout and the only
+/// pre-base tensors that consume RNG draws (`*_b` starts at zero, paper
+/// §5), so `init_adapter(dims, lora, seed)` is bitwise identical to the
+/// trainable prefix of `init_state(dims, Some(lora), seed)` — pinned by
+/// the `init_adapter_matches_init_state_prefix` test below.
+pub fn init_adapter(dims: ModelDims, lora: LoraCfg, seed: i32) -> CpuAdapter {
+    let (layout, n_trainable) = param_layout(&dims, Some(&lora));
+    let mut rng = Rng::new(seed as u32 as u64);
+    let mut names = Vec::with_capacity(n_trainable);
+    let mut params = Vec::with_capacity(n_trainable);
+    for (name, shape) in layout.into_iter().take(n_trainable) {
+        let n: usize = shape.iter().product();
+        let short = name.rsplit('.').next().unwrap_or(&name);
+        let data: Vec<f32> = if short.ends_with("_b") {
+            vec![0.0; n]
+        } else {
+            (0..n).map(|_| rng.normal() as f32 * 0.1).collect()
+        };
+        names.push(name);
+        params.push(HostTensor::f32(data, shape));
+    }
+    let slot_m: Vec<Vec<f32>> = params.iter().map(|t| vec![0.0; t.elements()]).collect();
+    let slot_v = slot_m.clone();
+    CpuAdapter { dims, lora, names, params, slot_m, slot_v }
+}
+
+/// O(1) swap of a tenant's adapter into (or out of) a shared workspace
+/// state. The workspace's frozen suffix — the shared base weights — is
+/// untouched; the trainable prefix tensors and their AdamW slots exchange
+/// places with the adapter's, so "swap in → `train_step` × N → swap out"
+/// runs exactly the math a dedicated per-tenant state would. The serve
+/// subsystem's fused-vs-serial bitwise-parity contract rests on this
+/// (DESIGN.md §11).
+pub fn swap_adapter(state: &mut CpuState, adapter: &mut CpuAdapter) -> Result<()> {
+    ensure!(
+        state.dims == adapter.dims,
+        "adapter/base geometry mismatch: adapter {:?} vs workspace {:?}",
+        adapter.dims,
+        state.dims
+    );
+    let sl = state
+        .lora
+        .ok_or_else(|| anyhow!("workspace state is not a LoRA state — nothing to swap"))?;
+    ensure!(
+        sl == adapter.lora,
+        "LoRA config mismatch: workspace {sl:?} vs adapter {:?}",
+        adapter.lora
+    );
+    ensure!(
+        state.n_trainable == adapter.params.len(),
+        "adapter tensor count {} != workspace trainable prefix {}",
+        adapter.params.len(),
+        state.n_trainable
+    );
+    for i in 0..state.n_trainable {
+        ensure!(
+            state.names[i] == adapter.names[i],
+            "trainable tensor {i} name mismatch: workspace '{}' vs adapter '{}'",
+            state.names[i],
+            adapter.names[i]
+        );
+        std::mem::swap(&mut state.params[i], &mut adapter.params[i]);
+        std::mem::swap(&mut state.slot_m[i], &mut adapter.slot_m[i]);
+        std::mem::swap(&mut state.slot_v[i], &mut adapter.slot_v[i]);
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1046,6 +1130,102 @@ mod tests {
         let e = eval_loss(&state, &bv(&b)).unwrap();
         let out = train_step(&mut state, &bv(&b), false, 1, 1e-3, 1e-3).unwrap();
         assert_eq!(e.to_bits(), out.loss.to_bits());
+    }
+
+    #[test]
+    fn init_adapter_matches_init_state_prefix() {
+        let lora = LoraCfg { rank: 2, alpha: 4.0 };
+        for seed in [0, 7, 42, -3] {
+            let state = init_state(dims(), Some(lora), seed);
+            let adapter = init_adapter(dims(), lora, seed);
+            assert_eq!(adapter.params.len(), state.n_trainable);
+            for i in 0..state.n_trainable {
+                assert_eq!(adapter.names[i], state.names[i]);
+                let a: Vec<u32> =
+                    adapter.params[i].as_f32().unwrap().iter().map(|x| x.to_bits()).collect();
+                let s: Vec<u32> =
+                    state.params[i].as_f32().unwrap().iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a, s, "seed {seed}, tensor {} diverges", adapter.names[i]);
+            }
+        }
+    }
+
+    /// The serve contract in miniature: two tenants time-sliced onto one
+    /// shared workspace via `swap_adapter` train bitwise identically to
+    /// each tenant on its own dedicated state, and the shared base never
+    /// moves.
+    #[test]
+    fn swapped_adapters_train_bitwise_identically_to_dedicated_states() {
+        let lora = LoraCfg { rank: 2, alpha: 4.0 };
+        let b = batch();
+        let base_seed = 11;
+
+        // dedicated per-tenant states (the serial oracle)
+        let dedicated = |adapter_seed: i32| {
+            let mut st = init_state(dims(), Some(lora), base_seed);
+            let mut ad = init_adapter(dims(), lora, adapter_seed);
+            swap_adapter(&mut st, &mut ad).unwrap();
+            let mut losses = Vec::new();
+            for step in 1..=6u64 {
+                losses.push(train_step(&mut st, &bv(&b), false, step, 5e-3, 5e-3).unwrap().loss);
+            }
+            swap_adapter(&mut st, &mut ad).unwrap();
+            (losses, ad)
+        };
+        let (l1, a1) = dedicated(100);
+        let (l2, a2) = dedicated(200);
+
+        // one shared workspace, tenants interleaved round-robin
+        let mut ws = init_state(dims(), Some(lora), base_seed);
+        let base_before: Vec<Vec<f32>> = ws.params[ws.n_trainable..]
+            .iter()
+            .map(|t| t.as_f32().unwrap().to_vec())
+            .collect();
+        let mut t1 = init_adapter(dims(), lora, 100);
+        let mut t2 = init_adapter(dims(), lora, 200);
+        let mut f1 = Vec::new();
+        let mut f2 = Vec::new();
+        for step in 1..=6u64 {
+            swap_adapter(&mut ws, &mut t1).unwrap();
+            f1.push(train_step(&mut ws, &bv(&b), false, step, 5e-3, 5e-3).unwrap().loss);
+            swap_adapter(&mut ws, &mut t1).unwrap();
+            swap_adapter(&mut ws, &mut t2).unwrap();
+            f2.push(train_step(&mut ws, &bv(&b), false, step, 5e-3, 5e-3).unwrap().loss);
+            swap_adapter(&mut ws, &mut t2).unwrap();
+        }
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&f1), bits(&l1), "tenant 1 fused != serial");
+        assert_eq!(bits(&f2), bits(&l2), "tenant 2 fused != serial");
+        for (ad, ded) in [(&t1, &a1), (&t2, &a2)] {
+            for i in 0..ad.params.len() {
+                assert_eq!(
+                    bits(ad.params[i].as_f32().unwrap()),
+                    bits(ded.params[i].as_f32().unwrap()),
+                    "final adapter weights diverge at {}",
+                    ad.names[i]
+                );
+                assert_eq!(bits(&ad.slot_m[i]), bits(&ded.slot_m[i]), "slot_m diverges");
+                assert_eq!(bits(&ad.slot_v[i]), bits(&ded.slot_v[i]), "slot_v diverges");
+            }
+        }
+        for (t, before) in ws.params[ws.n_trainable..].iter().zip(&base_before) {
+            assert_eq!(t.as_f32().unwrap(), &before[..], "shared base weights moved");
+        }
+    }
+
+    #[test]
+    fn swap_adapter_rejects_mismatches() {
+        let lora = LoraCfg { rank: 2, alpha: 4.0 };
+        let mut full = init_state(dims(), None, 1);
+        let mut ad = init_adapter(dims(), lora, 1);
+        assert!(swap_adapter(&mut full, &mut ad).is_err(), "full-FT state has no adapter seam");
+        let mut st = init_state(dims(), Some(lora), 1);
+        let mut wrong_rank = init_adapter(dims(), LoraCfg { rank: 4, alpha: 4.0 }, 1);
+        assert!(swap_adapter(&mut st, &mut wrong_rank).is_err(), "rank mismatch must fail");
+        let other =
+            ModelDims { vocab: 16, d_model: 8, n_layers: 1, n_heads: 2, n_kv_heads: 1, d_ff: 12 };
+        let mut wrong_dims = init_adapter(other, lora, 1);
+        assert!(swap_adapter(&mut st, &mut wrong_dims).is_err(), "geometry mismatch must fail");
     }
 
     #[test]

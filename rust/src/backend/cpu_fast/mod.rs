@@ -37,7 +37,7 @@ use super::cpu::{
     self, as_cpu_state, as_cpu_state_mut, batch_view, check_geometry, family_lora, reference_dims,
     REF_BATCH, REF_SEQ,
 };
-use super::{Backend, DeviceBatch, DeviceState, RowGrad, StepOutputs};
+use super::{AdapterState, Backend, DeviceBatch, DeviceState, RowGrad, StepOutputs};
 use crate::backend::cpu::model::ModelDims;
 use crate::batching::Batch;
 use crate::manifest::{ExecutableSpec, Manifest};
@@ -110,18 +110,10 @@ impl Backend for FastCpuBackend {
         if spec.kind != "init" {
             bail!("'{init_name}' is not an init executable (kind = {})", spec.kind);
         }
-        let dims = ModelDims {
-            vocab: spec.model_config.vocab,
-            d_model: spec.model_config.d_model,
-            n_layers: spec.model_config.n_layers,
-            n_heads: spec.model_config.n_heads,
-            n_kv_heads: spec.model_config.n_kv_heads,
-            d_ff: spec.model_config.d_ff,
-        };
         let lora = family_lora(&spec.family);
         // identical init to the reference backend: same seed ⇒ same params,
         // which is what makes cross-backend parity runs line up exactly
-        Ok(DeviceState::Cpu(cpu::model::init_state(dims, lora, seed)))
+        Ok(DeviceState::Cpu(cpu::model::init_state(cpu::spec_dims(spec), lora, seed)))
     }
 
     fn upload_batch(&self, train_name: &str, batch: &Batch) -> Result<DeviceBatch> {
@@ -168,6 +160,20 @@ impl Backend for FastCpuBackend {
             n_tokens: out.n_tokens,
             phases: out.phases,
         })
+    }
+
+    fn init_adapter(&self, train_name: &str, seed: i32) -> Result<AdapterState> {
+        // identical adapter init to the reference backend: same seed ⇒ same
+        // tensors, so fused serve rounds line up across CPU backends
+        cpu::cpu_init_adapter(self.spec(train_name)?, seed)
+    }
+
+    fn swap_adapter(&self, state: &mut DeviceState, adapter: &mut AdapterState) -> Result<()> {
+        cpu::cpu_swap_adapter(state, adapter)
+    }
+
+    fn adapter_params(&self, adapter: &AdapterState) -> Result<Vec<HostTensor>> {
+        cpu::cpu_adapter_params(adapter)
     }
 
     fn flat_grad_len(&self, state: &DeviceState) -> Result<usize> {

@@ -38,7 +38,7 @@ use crate::manifest::Manifest;
 use crate::runtime::HostTensor;
 use anyhow::{ensure, Result};
 use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// The shared gradient arena: one flat f32 lane per batch row plus the
@@ -109,7 +109,7 @@ impl GradArena {
 /// Data-parallel wrapper over N replica backends. See the module docs for
 /// the shard→reduce→step contract.
 pub struct DataParallel {
-    replicas: Vec<Rc<dyn Backend>>,
+    replicas: Vec<Arc<dyn Backend>>,
     arena: RefCell<GradArena>,
 }
 
@@ -118,7 +118,7 @@ impl DataParallel {
     /// the manifest, state init/IO, eval and the optimizer apply). All
     /// replicas must be interchangeable — same backend kind, same
     /// manifest geometry; the Session layer constructs them that way.
-    pub fn from_replicas(replicas: Vec<Rc<dyn Backend>>) -> Result<DataParallel> {
+    pub fn from_replicas(replicas: Vec<Arc<dyn Backend>>) -> Result<DataParallel> {
         ensure!(!replicas.is_empty(), "data-parallel requires at least one replica");
         Ok(DataParallel { replicas, arena: RefCell::new(GradArena::default()) })
     }
@@ -141,7 +141,7 @@ impl DataParallel {
         a.rows * a.lane_len
     }
 
-    fn primary(&self) -> &Rc<dyn Backend> {
+    fn primary(&self) -> &Arc<dyn Backend> {
         &self.replicas[0]
     }
 }
@@ -266,8 +266,8 @@ mod tests {
     use crate::backend::cpu::CpuBackend;
 
     fn dp(workers: usize) -> DataParallel {
-        let replicas: Vec<Rc<dyn Backend>> =
-            (0..workers).map(|_| Rc::new(CpuBackend::new()) as Rc<dyn Backend>).collect();
+        let replicas: Vec<Arc<dyn Backend>> =
+            (0..workers).map(|_| Arc::new(CpuBackend::new()) as Arc<dyn Backend>).collect();
         DataParallel::from_replicas(replicas).unwrap()
     }
 

@@ -48,7 +48,7 @@ use crate::batching::Batch;
 use crate::manifest::Manifest;
 use crate::runtime::HostTensor;
 use anyhow::{bail, Result};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Backend registry: construct a backend by CLI/config name.
 ///
@@ -56,15 +56,15 @@ use std::rc::Rc;
 /// resolve via `CHRONICALS_THREADS`, then `available_parallelism`);
 /// `artifacts_dir` is only read by the PJRT backend. Shared by the CLI,
 /// the benches and the tests so every entrypoint accepts the same names.
-pub fn create_backend(name: &str, artifacts_dir: &str, threads: usize) -> Result<Rc<dyn Backend>> {
+pub fn create_backend(name: &str, artifacts_dir: &str, threads: usize) -> Result<Arc<dyn Backend>> {
     match name {
-        "cpu" => Ok(Rc::new(cpu::CpuBackend::new())),
-        "cpu-fast" | "cpu_fast" => Ok(Rc::new(cpu_fast::FastCpuBackend::with_threads(threads))),
+        "cpu" => Ok(Arc::new(cpu::CpuBackend::new())),
+        "cpu-fast" | "cpu_fast" => Ok(Arc::new(cpu_fast::FastCpuBackend::with_threads(threads))),
         "pjrt" => {
             #[cfg(feature = "pjrt")]
             {
                 let _ = threads;
-                Ok(Rc::new(pjrt::PjrtBackend::new(artifacts_dir)?))
+                Ok(Arc::new(pjrt::PjrtBackend::new(artifacts_dir)?))
             }
             #[cfg(not(feature = "pjrt"))]
             {
@@ -129,6 +129,13 @@ pub enum DeviceState {
     Pjrt(crate::runtime::TrainState),
 }
 
+/// Per-tenant adapter state for the serve subsystem (DESIGN.md §11): the
+/// trainable LoRA tensors plus their optimizer slots, detached from the
+/// shared read-only base weights held in a workspace [`DeviceState`].
+pub enum AdapterState {
+    Cpu(cpu::model::CpuAdapter),
+}
+
 /// A batch staged for a backend (uploaded once, reusable across steps).
 pub enum DeviceBatch {
     Cpu(Batch),
@@ -158,7 +165,7 @@ impl DeviceBatch {
 
 /// A training execution backend. See the module docs for the state and
 /// step contracts; all methods take `&self` so a backend can be shared
-/// behind `Rc<dyn Backend>`.
+/// behind `Arc<dyn Backend>`.
 pub trait Backend {
     /// Short human name ("cpu", "pjrt") for logs and error messages.
     fn name(&self) -> &'static str;
@@ -204,6 +211,43 @@ pub trait Backend {
             "kernel microbench '{name}' is not supported on the {} backend",
             self.name()
         )
+    }
+
+    // ---- multi-tenant serve seams (DESIGN.md §11) --------------------
+    //
+    // `chronicals serve` splits training state into one shared read-only
+    // base (the frozen suffix of a workspace `DeviceState`, loaded once)
+    // and many per-tenant `AdapterState`s (LoRA A/B + AdamW slots). A
+    // fused round time-slices tenants onto the shared workspace by
+    // swapping their adapters in and out — each swap is O(1) pointer
+    // exchange on the trainable prefix, the base never moves — so the
+    // fused path runs bit-for-bit the same math as a dedicated per-tenant
+    // state. Backends without a host-visible trainable prefix (PJRT's
+    // compiled state is opaque) keep the default bail and serve falls
+    // back to serial execution.
+
+    /// Build a fresh per-tenant adapter (trainable LoRA tensors + zeroed
+    /// optimizer slots) for the named train executable, seeded
+    /// deterministically: bitwise identical to the trainable prefix of
+    /// [`Backend::init_state`] at the same seed.
+    fn init_adapter(&self, train_name: &str, seed: i32) -> Result<AdapterState> {
+        let _ = (train_name, seed);
+        bail!("the {} backend does not support per-tenant adapters", self.name())
+    }
+
+    /// Exchange a tenant's adapter with the workspace state's trainable
+    /// prefix (tensors + optimizer slots), leaving the shared base
+    /// untouched. Symmetric: calling twice restores both sides.
+    fn swap_adapter(&self, state: &mut DeviceState, adapter: &mut AdapterState) -> Result<()> {
+        let _ = (state, adapter);
+        bail!("the {} backend does not support per-tenant adapters", self.name())
+    }
+
+    /// Read a tenant adapter's trainable tensors to host, in state order
+    /// (the trainable prefix of the checkpoint interchange format).
+    fn adapter_params(&self, adapter: &AdapterState) -> Result<Vec<HostTensor>> {
+        let _ = adapter;
+        bail!("the {} backend does not support per-tenant adapters", self.name())
     }
 
     // ---- data-parallel seams (DESIGN.md §10) -------------------------

@@ -20,7 +20,7 @@ use crate::optim::LrSchedule;
 use crate::runtime::HostTensor;
 use anyhow::{bail, Result};
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 pub use verify::{VerificationReport, Verifier};
 
 /// Per-step record (loss curve, grad norms — Fig. 17/19 inputs).
@@ -53,7 +53,7 @@ pub struct TrainSummary {
 }
 
 pub struct Trainer {
-    backend: Rc<dyn Backend>,
+    backend: Arc<dyn Backend>,
     exe_name: String,
     spec: ExecutableSpec,
     pub state: DeviceState,
@@ -68,7 +68,7 @@ impl Trainer {
     /// Build a trainer for a train-step executable; state must come from the
     /// matching `init_*` executable (or a checkpoint) on the same backend.
     pub fn new(
-        backend: Rc<dyn Backend>,
+        backend: Arc<dyn Backend>,
         train_exe_name: &str,
         state: DeviceState,
         schedule: LrSchedule,
@@ -103,7 +103,7 @@ impl Trainer {
         self.schedule = schedule;
     }
 
-    pub fn backend(&self) -> &Rc<dyn Backend> {
+    pub fn backend(&self) -> &Arc<dyn Backend> {
         &self.backend
     }
 
@@ -224,14 +224,14 @@ mod tests {
     use crate::harness;
 
     fn cpu_trainer(exe: &str, init: &str, seed: i32) -> Trainer {
-        let backend: Rc<dyn Backend> = Rc::new(CpuBackend::new());
+        let backend: Arc<dyn Backend> = Arc::new(CpuBackend::new());
         let state = backend.init_state(init, seed).unwrap();
         Trainer::new(backend, exe, state, LrSchedule::constant(5e-3, 1.0), 0).unwrap()
     }
 
     #[test]
     fn rejects_non_train_executable() {
-        let backend: Rc<dyn Backend> = Rc::new(CpuBackend::new());
+        let backend: Arc<dyn Backend> = Arc::new(CpuBackend::new());
         let state = backend.init_state("init_chronicals", 1).unwrap();
         let r = Trainer::new(
             backend,

@@ -18,7 +18,7 @@ use crate::manifest::Manifest;
 use crate::report::{self, Row};
 use crate::session::{Session, SessionBuilder, SessionSpec, Task};
 use anyhow::{anyhow, Result};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Build the tokenized corpus once per (seed, size, vocab cap). Thin
 /// re-export of [`crate::data::build_corpus`] kept for the test suites.
@@ -58,7 +58,7 @@ pub fn make_batches(
 /// Run one training configuration end to end, returning the summary row.
 /// `RunConfig` is the stringly front-end: it lowers into a typed
 /// [`SessionSpec`] and runs on the given backend.
-pub fn run_variant(backend: &Rc<dyn Backend>, cfg: &RunConfig) -> Result<TrainSummary> {
+pub fn run_variant(backend: &Arc<dyn Backend>, cfg: &RunConfig) -> Result<TrainSummary> {
     let spec = SessionSpec::from_run_config(cfg)?;
     let mut session = Session::with_backend(spec, backend.clone())?;
     Ok(session.run()?.summary)
@@ -67,7 +67,7 @@ pub fn run_variant(backend: &Rc<dyn Backend>, cfg: &RunConfig) -> Result<TrainSu
 /// Run one typed table row on a shared backend: a task + packing choice at
 /// the harness defaults (2 meter-warmup steps, RunConfig-default corpus).
 fn table_row(
-    backend: &Rc<dyn Backend>,
+    backend: &Arc<dyn Backend>,
     task: Task,
     packing: PackingStrategy,
     steps: u64,
@@ -87,7 +87,7 @@ fn table_row(
 }
 
 /// Table 4 ablation ladder: run each rung, return report rows.
-pub fn ablation_ladder(backend: &Rc<dyn Backend>, steps: u64) -> Result<Vec<Row>> {
+pub fn ablation_ladder(backend: &Arc<dyn Backend>, steps: u64) -> Result<Vec<Row>> {
     let rungs: Vec<(&str, Task, PackingStrategy)> = vec![
         ("Baseline (eager, padded)", Task::AblateNaive, PackingStrategy::Padded),
         ("+ FlashAttention", Task::AblateFlash, PackingStrategy::Padded),
@@ -106,7 +106,7 @@ pub fn ablation_ladder(backend: &Rc<dyn Backend>, steps: u64) -> Result<Vec<Row>
 
 /// Table 2: full fine-tuning, naive ("Unsloth-correct"-shaped baseline) vs
 /// chronicals, plus the broken "fast mode" row (Fig. 10).
-pub fn full_ft_comparison(backend: &Rc<dyn Backend>, steps: u64) -> Result<Vec<Row>> {
+pub fn full_ft_comparison(backend: &Arc<dyn Backend>, steps: u64) -> Result<Vec<Row>> {
     let runs: Vec<(&str, Task, PackingStrategy)> = vec![
         ("Baseline (naive, verified)", Task::AblateNaive, PackingStrategy::Padded),
         ("Chronicals (verified)", Task::FullFinetune, PackingStrategy::Bfd),
@@ -120,7 +120,7 @@ pub fn full_ft_comparison(backend: &Rc<dyn Backend>, steps: u64) -> Result<Vec<R
 }
 
 /// Table 3: LoRA naive vs Chronicals LoRA vs LoRA+ (λ=16) vs broken mode.
-pub fn lora_comparison(backend: &Rc<dyn Backend>, steps: u64) -> Result<Vec<Row>> {
+pub fn lora_comparison(backend: &Arc<dyn Backend>, steps: u64) -> Result<Vec<Row>> {
     let runs: Vec<(&str, Task, PackingStrategy)> = vec![
         ("LoRA naive (Unsloth-shaped)", Task::LoraNaive, PackingStrategy::Padded),
         ("Chronicals LoRA", Task::lora(), PackingStrategy::Bfd),
@@ -195,7 +195,7 @@ pub fn packing_report(capacity: usize, n_examples: usize) -> String {
 }
 
 /// Render the full `bench --summary` report.
-pub fn summary_report(backend: &Rc<dyn Backend>, steps: u64) -> Result<String> {
+pub fn summary_report(backend: &Arc<dyn Backend>, steps: u64) -> Result<String> {
     let mut out = String::new();
     let full = full_ft_comparison(backend, steps)?;
     out.push_str(&report::throughput_table(

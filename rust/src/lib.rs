@@ -63,6 +63,7 @@ pub mod packing;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod util;
 

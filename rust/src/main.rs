@@ -6,6 +6,8 @@
 //!   pack     — packing analysis (Fig. 18)
 //!   inspect  — manifest / analytic memory model (Table 10, §S15)
 //!   verify   — the Unsloth-bug demonstration (Fig. 10/22)
+//!   serve    — multi-tenant fine-tuning service (fused LoRA rounds,
+//!              DESIGN.md §11)
 //!
 //! Every subcommand takes `--backend cpu|cpu-fast|pjrt` (default `cpu`:
 //! the hermetic pure-Rust reference backend; `cpu-fast` is the threaded
@@ -24,13 +26,14 @@ use chronicals::coordinator::TrainSummary;
 use chronicals::harness;
 use chronicals::metrics::{MemoryModel, Precision};
 use chronicals::report;
+use chronicals::serve::{ServeConfig, ServeEngine};
 use chronicals::session::{
     BackendSpec, DataSource, PackingStrategy, RunReport, Schedule, SessionBuilder, SessionSpec,
     Task,
 };
 use chronicals::util::commas;
 use chronicals::util::json::Json;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() {
     if let Err(e) = run() {
@@ -99,6 +102,7 @@ fn run() -> Result<()> {
         "pack" => cmd_pack(&args),
         "inspect" => cmd_inspect(&args),
         "verify" => cmd_verify(&args),
+        "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -153,6 +157,19 @@ COMMANDS
   inspect  --manifest | --memory [--backend ...] [--artifacts DIR]
   verify   [--steps N] [--backend ...] [--artifacts DIR]
            (the Unsloth-bug demo)
+  serve    --spool DIR | --jobs LIST.toml [--out DIR] [--once]
+           [--max-rounds N] [--steps-per-round N] [--fuse on|off]
+           [--base-seed N] [--poll-ms N] [--backend cpu|cpu-fast]
+           [--threads N]
+           multi-tenant fine-tuning service (DESIGN.md §11): admits TOML
+           job files (from a watched spool dir and/or a 'jobs = [...]'
+           manifest), shares one read-only base across tenants, fuses
+           compatible LoRA/LoRA+ jobs into round-robin scheduling rounds
+           (bitwise identical to running each job serially; --fuse off is
+           the serial reference path), and streams one deterministic
+           <out>/<id>.report.json per job as it completes; malformed jobs
+           become <out>/<stem>.reject.txt diagnostics instead of crashing
+           the server; --once drains the queue and exits (CI mode)
 
 BACKENDS
   cpu       (default) pure-Rust deterministic reference — the correctness
@@ -189,7 +206,7 @@ fn thread_request(args: &Args, cfg_threads: usize) -> Result<usize> {
     }
 }
 
-fn load_backend(args: &Args) -> Result<Rc<dyn Backend>> {
+fn load_backend(args: &Args) -> Result<Arc<dyn Backend>> {
     create_backend(
         args.get("backend").unwrap_or("cpu"),
         args.get("artifacts").unwrap_or("artifacts"),
@@ -464,7 +481,7 @@ const CHECK_SEQ: usize = 128;
 /// session settings `benches/bench_throughput.rs` committed its numbers
 /// under. A row that fails to run is reported and skipped — the check
 /// then fails only if a *measured* number regressed.
-fn check_row(backend: &Rc<dyn Backend>, task: Task, steps: u64) -> Option<TrainSummary> {
+fn check_row(backend: &Arc<dyn Backend>, task: Task, steps: u64) -> Option<TrainSummary> {
     let result = SessionBuilder::new()
         .task(task.clone())
         .steps(steps)
@@ -519,8 +536,8 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
     );
 
     let mut fresh: Vec<(String, f64)> = Vec::new();
-    let reference: Rc<dyn Backend> = Rc::new(CpuBackend::with_geometry(CHECK_BATCH, CHECK_SEQ));
-    let fast: Rc<dyn Backend> = Rc::new(FastCpuBackend::with_geometry(CHECK_BATCH, CHECK_SEQ));
+    let reference: Arc<dyn Backend> = Arc::new(CpuBackend::with_geometry(CHECK_BATCH, CHECK_SEQ));
+    let fast: Arc<dyn Backend> = Arc::new(FastCpuBackend::with_geometry(CHECK_BATCH, CHECK_SEQ));
     for (mode, task) in [("full_ft", Task::FullFinetune), ("lora", Task::lora())] {
         if let Some(s) = check_row(&reference, task.clone(), steps) {
             fresh.push((format!("throughput.{mode}.cpu_tokens_per_sec"), s.tokens_per_sec));
@@ -639,6 +656,66 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         return Ok(());
     }
     bail!("pass --manifest or --memory")
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let spool = args.get("spool").map(std::path::PathBuf::from);
+    let jobs_manifest = args.get("jobs").map(std::path::PathBuf::from);
+    if spool.is_none() && jobs_manifest.is_none() {
+        bail!("serve needs a job source: --spool DIR and/or --jobs LIST.toml");
+    }
+    let max_rounds = args
+        .get("max-rounds")
+        .map(|v| {
+            v.parse::<u64>()
+                .map_err(|_| anyhow!("invalid --max-rounds '{v}' (expected a positive integer)"))
+        })
+        .transpose()?;
+    let fuse = match args.get("fuse") {
+        None => true,
+        Some("on") | Some("true") => true,
+        Some("off") | Some("false") => false,
+        Some(other) => bail!("invalid --fuse '{other}' (expected on | off)"),
+    };
+    let base_seed: i32 = match args.get("base-seed") {
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow!("invalid --base-seed '{v}' (expected an integer)"))?,
+        None => 0,
+    };
+    let cfg = ServeConfig {
+        spool,
+        jobs_manifest,
+        out_dir: std::path::PathBuf::from(args.get("out").unwrap_or("serve-out")),
+        once: args.has("once"),
+        max_rounds,
+        steps_per_round: args.u64_or("steps-per-round", 4),
+        fuse,
+        base_seed,
+        poll_ms: args.u64_or("poll-ms", 500),
+    };
+    let backend = load_backend(args)?;
+    println!(
+        "serve: {} backend, fusion {}, {} steps/round, base seed {}{}",
+        backend.name(),
+        if cfg.fuse { "on" } else { "off" },
+        cfg.steps_per_round,
+        cfg.base_seed,
+        if cfg.once { ", --once (drain and exit)" } else { ", watching for jobs" },
+    );
+    let t0 = std::time::Instant::now();
+    let mut engine = ServeEngine::new(backend, cfg)?;
+    let s = engine.run()?;
+    println!(
+        "serve: {} admitted, {} rejected, {} completed over {} rounds ({} fused) in {:.1}s",
+        s.admitted,
+        s.rejected,
+        s.completed,
+        s.rounds,
+        s.fused_rounds,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
 }
 
 fn cmd_verify(args: &Args) -> Result<()> {

@@ -255,6 +255,60 @@ pub fn check_bench_metrics(
     out
 }
 
+/// One tenant's `chronicals serve` run report (DESIGN.md §11), rendered
+/// as deterministic JSON. Every field is a pure function of the job spec
+/// and the training math — deliberately no wall-clock fields — so a fused
+/// run's report byte-matches the same job run serially and CI can
+/// `diff -r` the two output directories.
+#[derive(Debug, Clone)]
+pub struct ServeJobReport<'a> {
+    /// Job id (also the report's file stem).
+    pub id: &'a str,
+    /// Human task label (`Task`'s `Display` form).
+    pub task: String,
+    /// Backend the job ran on.
+    pub backend: &'a str,
+    /// Data-source label.
+    pub data: String,
+    /// The job's requested step budget.
+    pub steps_budget: u64,
+    /// Steps actually run (< budget when `--max-rounds` cut the run).
+    pub steps_run: u64,
+    /// Whether the full budget completed.
+    pub completed: bool,
+    /// Per-step training losses, in step order.
+    pub losses: &'a [f32],
+    /// Per-step trainable gradient norms, in step order.
+    pub grad_norms: &'a [f32],
+    /// The §8 verification verdict: gradients flowed on every step.
+    pub verified: bool,
+}
+
+impl ServeJobReport<'_> {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{Json, Obj};
+        let series = |xs: &[f32]| Json::Arr(xs.iter().map(|&v| Json::Num(v as f64)).collect());
+        let first = self.losses.first().copied();
+        let last = self.losses.last().copied();
+        let mut o = Obj::default();
+        o.insert("id", Json::Str(self.id.to_string()));
+        o.insert("task", Json::Str(self.task.clone()));
+        o.insert("backend", Json::Str(self.backend.to_string()));
+        o.insert("data", Json::Str(self.data.clone()));
+        o.insert("steps_budget", Json::Num(self.steps_budget as f64));
+        o.insert("steps_run", Json::Num(self.steps_run as f64));
+        o.insert("completed", Json::Bool(self.completed));
+        o.insert("first_loss", first.map_or(Json::Null, |v| Json::Num(v as f64)));
+        o.insert("final_loss", last.map_or(Json::Null, |v| Json::Num(v as f64)));
+        let decreased = matches!((first, last), (Some(a), Some(b)) if b < a);
+        o.insert("loss_decreased", Json::Bool(decreased));
+        o.insert("losses", series(self.losses));
+        o.insert("grad_norms", series(self.grad_norms));
+        o.insert("verified", Json::Bool(self.verified));
+        Json::Obj(o)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -364,5 +418,38 @@ mod tests {
         std::fs::write(&path, "{ truncated").unwrap();
         assert!(update_bench_json(&path, "kernels", Json::Num(4.0)).is_err());
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn serve_job_report_is_deterministic_and_timing_free() {
+        let rep = ServeJobReport {
+            id: "tenant-a",
+            task: "task lora".to_string(),
+            backend: "cpu",
+            data: "synthetic(40 examples, seed 3, max_seq 48)".to_string(),
+            steps_budget: 2,
+            steps_run: 2,
+            completed: true,
+            losses: &[4.5, 4.25],
+            grad_norms: &[1.5, 1.25],
+            verified: true,
+        };
+        let a = rep.to_json().to_string_pretty();
+        let b = rep.to_json().to_string_pretty();
+        assert_eq!(a, b);
+        // the CI acceptance grep target, with exact formatting
+        assert!(a.contains("\"loss_decreased\": true"), "{a}");
+        // no wall-clock fields may ever sneak in (fused-vs-serial diff)
+        for banned in ["tokens_per_sec", "_ms", "seconds", "elapsed", "wall"] {
+            assert!(!a.contains(banned), "timing field '{banned}' in {a}");
+        }
+        let parsed = Json::parse(&a).unwrap();
+        assert_eq!(parsed.field("final_loss").unwrap().as_f64(), Some(4.25));
+        assert_eq!(parsed.field("losses").unwrap().as_arr().unwrap().len(), 2);
+        // an empty (never-started) job still renders, without a decrease
+        let empty = ServeJobReport { losses: &[], grad_norms: &[], completed: false, ..rep };
+        let t = empty.to_json().to_string_pretty();
+        assert!(t.contains("\"loss_decreased\": false"), "{t}");
+        assert!(t.contains("\"first_loss\": null"), "{t}");
     }
 }

@@ -1,0 +1,433 @@
+//! Job specs for `chronicals serve` (DESIGN.md §11): the TOML job-file
+//! format, admission validation with real error messages, and the pure
+//! round-grouping rules that decide which tenants may share a fused
+//! scheduling round.
+//!
+//! A job file is a flat TOML document (an optional `[job]` section header
+//! is accepted and ignored) describing one tenant's fine-tuning session:
+//!
+//! ```toml
+//! id = "tenant-a"        # required; names the report file
+//! task = "lora"          # full-ft | lora | lora-plus | ... (default lora)
+//! steps = 8              # per-job step budget (default 8)
+//! lr = 0.005             # default 5e-3
+//! seed = 7               # tenant seed: adapter init + default data seed
+//! examples = 64          # synthetic-corpus size (default data source)
+//! ```
+//!
+//! Every key is validated on admission — unknown keys, duplicate keys, a
+//! missing or malformed `id`, non-positive `steps`/`lr` are all rejected
+//! with messages that name the offending key, so a malformed job becomes a
+//! diagnostic file instead of a crashed server.
+
+use crate::manifest::ExecutableSpec;
+use crate::session::{DataSource, LossMode, Schedule, Task};
+use crate::util::toml::{TomlDoc, TomlValue};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One admitted tenant job: a validated, typed fine-tuning request. The
+/// fields mirror the session vocabulary ([`Task`], [`Schedule`],
+/// [`DataSource`]) so admission is exactly the spec → session lowering.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Unique job id (`[A-Za-z0-9_-]+`); names the per-job report file.
+    pub id: String,
+    /// What to train (FullFinetune is accepted but never fused).
+    pub task: Task,
+    /// Per-job step budget: the job completes after exactly this many
+    /// optimizer steps, spread across scheduling rounds.
+    pub steps: u64,
+    /// Base learning rate (LoRA+ jobs derive `lr_b = λ·lr` from the task).
+    pub lr: f64,
+    /// Tenant seed: drives the adapter init and, unless `data_seed`
+    /// overrides it, the data source. The *base* weights come from the
+    /// server-wide base seed, never from here.
+    pub seed: i64,
+    /// Learning-rate schedule over the job's own step budget.
+    pub schedule: Schedule,
+    /// Which token positions are supervised (file-backed sources).
+    pub loss_mode: LossMode,
+    /// Where this tenant's training data comes from.
+    pub data: DataSource,
+}
+
+/// Every key a job file may set. Kept in one place so the unknown-key
+/// diagnostic can enumerate the whole vocabulary.
+const ALLOWED_KEYS: &[&str] = &[
+    "id",
+    "task",
+    "lora_rank",
+    "lora_plus_ratio",
+    "steps",
+    "lr",
+    "seed",
+    "schedule",
+    "warmup",
+    "loss_mode",
+    "data",
+    "data_file",
+    "examples",
+    "data_seed",
+    "max_seq",
+];
+
+impl JobSpec {
+    /// Parse and validate a job file's text. `base_dir` anchors relative
+    /// `data_file` paths (the job file's own directory when loading from
+    /// disk). Every admission error names the offending key or value.
+    pub fn parse(text: &str, base_dir: &Path) -> Result<JobSpec> {
+        let doc = TomlDoc::parse(text).context("parsing job TOML")?;
+        // normalize the optional [job] section away, then reject unknown
+        // and duplicate keys before reading anything
+        let mut entries: Vec<(String, TomlValue)> = Vec::new();
+        for (k, v) in doc.entries {
+            let bare = k.strip_prefix("job.").unwrap_or(&k).to_string();
+            if !ALLOWED_KEYS.contains(&bare.as_str()) {
+                bail!("unknown key '{k}' in job file (allowed: {})", ALLOWED_KEYS.join(", "));
+            }
+            if entries.iter().any(|(e, _)| *e == bare) {
+                bail!("duplicate key '{bare}' in job file");
+            }
+            entries.push((bare, v));
+        }
+        let get = |key: &str| entries.iter().find(|(k, _)| k == key).map(|(_, v)| v);
+        let get_str = |key: &str| -> Result<Option<&str>> {
+            match get(key) {
+                None => Ok(None),
+                Some(v) => Ok(Some(v.as_str().with_context(|| {
+                    format!("key '{key}' must be a quoted string")
+                })?)),
+            }
+        };
+        let get_int = |key: &str| -> Result<Option<i64>> {
+            match get(key) {
+                None => Ok(None),
+                Some(v) => {
+                    Ok(Some(v.as_i64().with_context(|| format!("key '{key}' must be an integer"))?))
+                }
+            }
+        };
+
+        let id = match get_str("id")? {
+            Some(s) => s.to_string(),
+            None => bail!("job file is missing the required key 'id'"),
+        };
+        if id.is_empty()
+            || !id.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+        {
+            bail!("invalid job id '{id}': use [A-Za-z0-9_-]+ (the id names the report file)");
+        }
+
+        let rank = match get_int("lora_rank")? {
+            Some(r) if r > 0 => Some(r as usize),
+            Some(r) => bail!("key 'lora_rank' must be a positive integer (got {r})"),
+            None => None,
+        };
+        let ratio = match get("lora_plus_ratio") {
+            Some(v) => Some(
+                v.as_f64()
+                    .with_context(|| "key 'lora_plus_ratio' must be a number".to_string())?,
+            ),
+            None => None,
+        };
+        let task = Task::parse(get_str("task")?.unwrap_or("lora"), rank, ratio)
+            .context("key 'task'")?;
+
+        let steps = get_int("steps")?.unwrap_or(8);
+        if steps <= 0 {
+            bail!("key 'steps' must be a positive step budget (got {steps})");
+        }
+        let lr = match get("lr") {
+            Some(v) => v.as_f64().with_context(|| "key 'lr' must be a number".to_string())?,
+            None => 5e-3,
+        };
+        if !(lr.is_finite() && lr > 0.0) {
+            bail!("key 'lr' must be a positive finite learning rate (got {lr})");
+        }
+        let seed = get_int("seed")?.unwrap_or(0);
+        let warmup = match get_int("warmup")? {
+            Some(w) if w >= 0 => w as u64,
+            Some(w) => bail!("key 'warmup' must be non-negative (got {w})"),
+            None => 0,
+        };
+        let schedule = Schedule::parse(get_str("schedule")?.unwrap_or("constant"), warmup)
+            .context("key 'schedule'")?;
+        let loss_mode = LossMode::parse(get_str("loss_mode")?.unwrap_or("response-only"))
+            .context("key 'loss_mode'")?;
+
+        let max_seq = match get_int("max_seq")? {
+            Some(m) if m > 0 => m as usize,
+            Some(m) => bail!("key 'max_seq' must be a positive token cap (got {m})"),
+            None => 64,
+        };
+        let data_seed = match get_int("data_seed")? {
+            Some(s) => s as u64,
+            None => seed as u64,
+        };
+        let kind = get_str("data")?.unwrap_or("synthetic");
+        let data_file = get_str("data_file")?;
+        let data = match kind {
+            "synthetic" => {
+                if let Some(f) = data_file {
+                    bail!(
+                        "key 'data_file' ('{f}') requires data = \"jsonl\" or data = \"chat\" \
+                         (the default data = \"synthetic\" generates its own corpus)"
+                    );
+                }
+                let examples = match get_int("examples")? {
+                    Some(n) if n > 0 => n as usize,
+                    Some(n) => bail!("key 'examples' must be a positive count (got {n})"),
+                    None => 64,
+                };
+                DataSource::synthetic(examples, data_seed, max_seq)
+            }
+            "jsonl" | "chat" => {
+                if get("examples").is_some() {
+                    bail!("key 'examples' only applies to data = \"synthetic\"");
+                }
+                let f = match data_file {
+                    Some(f) => f,
+                    None => bail!("data = \"{kind}\" requires a 'data_file' path"),
+                };
+                let path = base_dir.join(f).to_string_lossy().into_owned();
+                if kind == "jsonl" {
+                    DataSource::jsonl(path, data_seed, max_seq)
+                } else {
+                    DataSource::chat(path, data_seed, max_seq)
+                }
+            }
+            other => bail!("unknown data kind '{other}' (expected synthetic | jsonl | chat)"),
+        };
+
+        Ok(JobSpec { id, task, steps: steps as u64, lr, seed, schedule, loss_mode, data })
+    }
+
+    /// Load and validate a job file from disk.
+    pub fn from_file(path: &Path) -> Result<JobSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading job file {}", path.display()))?;
+        let base = path.parent().unwrap_or(Path::new("."));
+        JobSpec::parse(&text, base)
+    }
+}
+
+/// What must match for two jobs to share a fused scheduling round: the
+/// task must be fusable at all (LoRA/LoRA+ on a backend with per-tenant
+/// adapter support — FullFinetune and the ablation/broken variants never
+/// fuse), and the jobs must train the same executable family at the same
+/// batch geometry, model dimensions and LoRA shape so one workspace's
+/// shared base serves every member. Jobs whose keys differ land in
+/// different rounds — never silently co-batched.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FuseKey {
+    /// Whether this job may share a round at all.
+    pub fusable: bool,
+    /// Executable family ("lora", "full", …).
+    pub family: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub lora_rank: usize,
+    pub lora_alpha: usize,
+}
+
+impl FuseKey {
+    /// The fuse key of a task resolved to a concrete executable spec.
+    /// `fuse_enabled` gates fusion globally (`--fuse off` and backends
+    /// without adapter support force every job serial).
+    pub fn for_job(task: &Task, spec: &ExecutableSpec, fuse_enabled: bool) -> FuseKey {
+        let fusable =
+            fuse_enabled && matches!(task, Task::Lora { .. } | Task::LoraPlus { .. });
+        FuseKey {
+            fusable,
+            family: spec.family.clone(),
+            batch: spec.batch,
+            seq: spec.seq,
+            vocab: spec.model_config.vocab,
+            d_model: spec.model_config.d_model,
+            n_layers: spec.model_config.n_layers,
+            n_heads: spec.model_config.n_heads,
+            n_kv_heads: spec.model_config.n_kv_heads,
+            d_ff: spec.model_config.d_ff,
+            lora_rank: spec.step_config.lora_rank,
+            lora_alpha: spec.step_config.lora_alpha,
+        }
+    }
+}
+
+/// Group pending jobs into scheduling rounds, deterministically.
+///
+/// Jobs are walked in admission order. A fusable job joins the round
+/// opened by the first earlier job with an identical [`FuseKey`]; a
+/// non-fusable job always gets a singleton round. Rounds are returned in
+/// the order they were opened, each holding indices into `keys` in
+/// admission order — so the schedule is a pure function of the pending
+/// set, independent of timing.
+pub fn group_rounds(keys: &[FuseKey]) -> Vec<Vec<usize>> {
+    let mut rounds: Vec<Vec<usize>> = Vec::new();
+    // (key, round index) for rounds that accept more members
+    let mut open: Vec<(&FuseKey, usize)> = Vec::new();
+    for (i, k) in keys.iter().enumerate() {
+        if !k.fusable {
+            rounds.push(vec![i]);
+            continue;
+        }
+        match open.iter().find(|(ok, _)| *ok == k) {
+            Some(&(_, r)) => rounds[r].push(i),
+            None => {
+                rounds.push(vec![i]);
+                open.push((k, rounds.len() - 1));
+            }
+        }
+    }
+    rounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Result<JobSpec> {
+        JobSpec::parse(text, Path::new("."))
+    }
+
+    #[test]
+    fn minimal_job_gets_documented_defaults() {
+        let j = parse("id = \"t1\"").unwrap();
+        assert_eq!(j.id, "t1");
+        assert_eq!(j.task, Task::Lora { rank: None });
+        assert_eq!(j.steps, 8);
+        assert_eq!(j.lr, 5e-3);
+        assert_eq!(j.seed, 0);
+        assert_eq!(j.schedule, Schedule::Constant);
+        assert_eq!(j.data, DataSource::synthetic(64, 0, 64));
+    }
+
+    #[test]
+    fn full_vocabulary_parses() {
+        let j = parse(
+            "[job]\n\
+             id = \"t2\"\n\
+             task = \"lora-plus\"\n\
+             lora_plus_ratio = 8.0\n\
+             steps = 12\n\
+             lr = 0.001\n\
+             seed = 7\n\
+             schedule = \"warmup-cosine\"\n\
+             warmup = 2\n\
+             examples = 32\n\
+             data_seed = 9\n\
+             max_seq = 48\n",
+        )
+        .unwrap();
+        assert_eq!(j.task, Task::LoraPlus { rank: None, ratio: 8.0 });
+        assert_eq!(j.steps, 12);
+        assert_eq!(j.seed, 7);
+        assert_eq!(j.schedule, Schedule::WarmupCosine { warmup: 2 });
+        assert_eq!(j.data, DataSource::synthetic(32, 9, 48));
+    }
+
+    /// Full error chain as text (`{:#}` renders contexts + root cause).
+    fn perr(text: &str) -> String {
+        format!("{:#}", parse(text).unwrap_err())
+    }
+
+    #[test]
+    fn admission_errors_name_the_offending_key() {
+        let err = perr("id = \"x\"\nspeed = 3\n");
+        assert!(err.contains("unknown key 'speed'"), "{err}");
+        let err = perr("task = \"lora\"");
+        assert!(err.contains("missing the required key 'id'"), "{err}");
+        let err = perr("id = \"bad id!\"");
+        assert!(err.contains("invalid job id"), "{err}");
+        let err = perr("id = \"x\"\nid = \"y\"\n");
+        assert!(err.contains("duplicate key 'id'"), "{err}");
+        let err = perr("id = \"x\"\nsteps = 0\n");
+        assert!(err.contains("'steps'"), "{err}");
+        let err = perr("id = \"x\"\nlr = -1.0\n");
+        assert!(err.contains("'lr'"), "{err}");
+        let err = perr("id = \"x\"\ntask = \"warp\"\n");
+        assert!(err.contains("unknown task"), "{err}");
+        let err = perr("id = \"x\"\ndata_file = \"c.jsonl\"\n");
+        assert!(err.contains("data_file"), "{err}");
+        let err = perr("id = \"x\"\ndata = \"chat\"\n");
+        assert!(err.contains("requires a 'data_file'"), "{err}");
+    }
+
+    #[test]
+    fn file_backed_data_paths_are_anchored_to_the_job_dir() {
+        let j = JobSpec::parse(
+            "id = \"t\"\ndata = \"chat\"\ndata_file = \"corpus.jsonl\"\n",
+            Path::new("/spool"),
+        )
+        .unwrap();
+        match &j.data {
+            DataSource::Chat { file, .. } => assert!(file.ends_with("/spool/corpus.jsonl")),
+            other => panic!("expected chat source, got {other:?}"),
+        }
+    }
+
+    fn key(fusable: bool, seq: usize) -> FuseKey {
+        FuseKey {
+            fusable,
+            family: "lora".into(),
+            batch: 4,
+            seq,
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 64,
+            lora_rank: 4,
+            lora_alpha: 8,
+        }
+    }
+
+    #[test]
+    fn compatible_jobs_share_a_round_in_admission_order() {
+        let rounds = group_rounds(&[key(true, 64), key(true, 64), key(true, 64)]);
+        assert_eq!(rounds, vec![vec![0, 1, 2]]);
+    }
+
+    #[test]
+    fn geometry_mismatch_lands_in_different_rounds() {
+        // same family, different seq: never silently co-batched
+        let rounds = group_rounds(&[key(true, 64), key(true, 128), key(true, 64)]);
+        assert_eq!(rounds, vec![vec![0, 2], vec![1]]);
+    }
+
+    #[test]
+    fn non_fusable_jobs_always_get_singleton_rounds() {
+        let rounds =
+            group_rounds(&[key(true, 64), key(false, 64), key(false, 64), key(true, 64)]);
+        assert_eq!(rounds, vec![vec![0, 3], vec![1], vec![2]]);
+    }
+
+    #[test]
+    fn fuse_keys_come_from_the_resolved_executable_spec() {
+        use crate::backend::cpu::CpuBackend;
+        use crate::backend::Backend;
+        use crate::session::resolve::resolve;
+        let be = CpuBackend::new();
+        let lora = resolve(be.manifest(), &Task::lora()).unwrap();
+        let plus = resolve(be.manifest(), &Task::lora_plus(16.0)).unwrap();
+        let full = resolve(be.manifest(), &Task::FullFinetune).unwrap();
+        let k_lora = FuseKey::for_job(&Task::lora(), &lora.spec, true);
+        let k_plus = FuseKey::for_job(&Task::lora_plus(16.0), &plus.spec, true);
+        let k_full = FuseKey::for_job(&Task::FullFinetune, &full.spec, true);
+        // LoRA and LoRA+ run the same executable → identical keys, fusable
+        assert_eq!(k_lora, k_plus);
+        assert!(k_lora.fusable);
+        // FullFinetune is never fusable, even with fusion enabled
+        assert!(!k_full.fusable);
+        // --fuse off forces everything serial
+        assert!(!FuseKey::for_job(&Task::lora(), &lora.spec, false).fusable);
+    }
+}

@@ -1,0 +1,523 @@
+//! `chronicals serve` — a deterministic multi-tenant fine-tuning service
+//! (DESIGN.md §11).
+//!
+//! The engine admits [`JobSpec`]s — from TOML job files dropped into a
+//! watched spool directory, an inline `jobs = [...]` manifest, or
+//! programmatically via [`ServeEngine::admit_spec`] — validates each on
+//! admission (malformed jobs become `<stem>.reject.txt` diagnostic files,
+//! never a crashed server), groups compatible LoRA/LoRA+ tenants into
+//! fused scheduling rounds, and streams one deterministic
+//! `<id>.report.json` per job as it completes its step budget.
+//!
+//! ## The shared-base / per-adapter state split
+//!
+//! Each fuse group owns one workspace [`DeviceState`] initialized from the
+//! server-wide base seed. Its frozen suffix *is* the shared base — loaded
+//! once, read by every tenant, never written. Each tenant owns an
+//! [`AdapterState`]: the trainable LoRA A/B tensors plus their AdamW
+//! slots, seeded from the tenant's own seed. A fused round time-slices
+//! tenants onto the workspace by swapping their adapters into the
+//! trainable prefix (an O(1) pointer exchange), running the tenant's slice
+//! of ordinary `train_step`s, and swapping back out.
+//!
+//! ## The fused-vs-serial determinism contract
+//!
+//! Because a swap moves tensors without touching their values, and the
+//! base never changes, the fused path executes bit-for-bit the same
+//! arithmetic as running each tenant alone on a dedicated state. `--fuse
+//! off` takes that dedicated-state path; the two produce byte-identical
+//! report files, enforced by `rust/tests/serve.rs` and the CI `serve
+//! --once` acceptance run. Report files contain no wall-clock fields for
+//! exactly this reason — timing goes to stdout only.
+
+pub mod job;
+
+pub use job::{group_rounds, FuseKey, JobSpec};
+
+use crate::backend::{AdapterState, Backend, DeviceBatch, DeviceState};
+use crate::batching::{Batch, BatchStream};
+use crate::coordinator::Verifier;
+use crate::optim::LrSchedule;
+use crate::report::ServeJobReport;
+use crate::runtime::HostTensor;
+use crate::session::resolve::{resolve, Resolved};
+use crate::session::{PackingStrategy, TailPolicy, Task};
+use crate::util::toml::{TomlDoc, TomlValue};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Serve-mode configuration (the typed mirror of the `serve` CLI flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Watched spool directory: every `*.toml` that appears is admitted
+    /// once, in lexicographic path order.
+    pub spool: Option<PathBuf>,
+    /// Inline job manifest (`jobs = ["a.toml", ...]`, paths relative to
+    /// the manifest's directory) — the hermetic front door for CI.
+    pub jobs_manifest: Option<PathBuf>,
+    /// Where per-job reports and reject diagnostics land.
+    pub out_dir: PathBuf,
+    /// Drain the admitted queue and exit instead of watching the spool.
+    pub once: bool,
+    /// Stop after this many scheduling rounds, reporting partial progress.
+    pub max_rounds: Option<u64>,
+    /// Steps each job runs per scheduling round (the fairness quantum).
+    pub steps_per_round: u64,
+    /// Group compatible LoRA/LoRA+ jobs into fused rounds; `false` runs
+    /// every job on a dedicated state (the parity reference path).
+    pub fuse: bool,
+    /// Seed of the shared base weights every tenant starts from.
+    pub base_seed: i32,
+    /// Spool poll interval in watch mode.
+    pub poll_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            spool: None,
+            jobs_manifest: None,
+            out_dir: PathBuf::from("serve-out"),
+            once: true,
+            max_rounds: None,
+            steps_per_round: 4,
+            fuse: true,
+            base_seed: 0,
+            poll_ms: 200,
+        }
+    }
+}
+
+/// What one serve run did — admission accounting, round log, output files.
+#[derive(Debug, Clone, Default)]
+pub struct ServeSummary {
+    /// Jobs that passed admission validation.
+    pub admitted: usize,
+    /// Job files rejected with a diagnostic file.
+    pub rejected: usize,
+    /// Jobs that completed their full step budget.
+    pub completed: usize,
+    /// Scheduling rounds executed.
+    pub rounds: u64,
+    /// Rounds that fused two or more tenants onto one workspace.
+    pub fused_rounds: u64,
+    /// Job ids per round, in execution order (the audit trail the
+    /// grouping tests assert on).
+    pub rounds_log: Vec<Vec<String>>,
+    /// Report files written, in completion order.
+    pub report_files: Vec<PathBuf>,
+    /// Reject diagnostic files written, in admission order.
+    pub reject_files: Vec<PathBuf>,
+}
+
+/// One admitted tenant's runtime state.
+struct ServeJob {
+    spec: JobSpec,
+    resolved: Resolved,
+    key: FuseKey,
+    /// Detached trainable state (LoRA tenants on adapter-capable
+    /// backends); swapped into a workspace for each slice.
+    adapter: Option<AdapterState>,
+    /// Dedicated full state for jobs that cannot share a workspace
+    /// (FullFinetune, ablation/broken variants, `--fuse off`, or backends
+    /// without adapter support). Created lazily on the first slice.
+    dedicated: Option<DeviceState>,
+    /// Staged batches, cycled by step index (the session cycle contract).
+    staged: Vec<DeviceBatch>,
+    schedule: LrSchedule,
+    step: u64,
+    losses: Vec<f32>,
+    grad_norms: Vec<f32>,
+    verifier: Verifier,
+    done: bool,
+    reported: bool,
+}
+
+/// The serve engine: admission queue + round scheduler + report streamer.
+pub struct ServeEngine {
+    backend: Arc<dyn Backend>,
+    cfg: ServeConfig,
+    jobs: Vec<ServeJob>,
+    /// Job files already admitted or rejected (spool files are tried once).
+    seen: BTreeSet<PathBuf>,
+    /// One shared workspace per fuse key; looked up, never iterated, so
+    /// scheduling order stays deterministic.
+    workspaces: Vec<(FuseKey, DeviceState)>,
+    summary: ServeSummary,
+    manifest_loaded: bool,
+}
+
+impl ServeEngine {
+    pub fn new(backend: Arc<dyn Backend>, cfg: ServeConfig) -> Result<ServeEngine> {
+        ensure!(cfg.steps_per_round > 0, "steps-per-round must be a positive step count");
+        std::fs::create_dir_all(&cfg.out_dir)
+            .with_context(|| format!("creating output directory {}", cfg.out_dir.display()))?;
+        Ok(ServeEngine {
+            backend,
+            cfg,
+            jobs: Vec::new(),
+            seen: BTreeSet::new(),
+            workspaces: Vec::new(),
+            summary: ServeSummary::default(),
+            manifest_loaded: false,
+        })
+    }
+
+    /// Admit one validated job spec: resolve the task against the backend
+    /// manifest, tokenize + stage its data, and build its adapter. Errors
+    /// here are admission errors — callers on the file path turn them into
+    /// reject diagnostics.
+    pub fn admit_spec(&mut self, spec: JobSpec) -> Result<()> {
+        if self.jobs.iter().any(|j| j.spec.id == spec.id) {
+            bail!("duplicate job id '{}': a job with this id was already admitted", spec.id);
+        }
+        let resolved = resolve(self.backend.manifest(), &spec.task)
+            .with_context(|| format!("admitting job '{}'", spec.id))?;
+        let exe = &resolved.spec;
+        let vocab_cap = exe.model_config.vocab.max(64);
+        let (examples, _stats) = spec
+            .data
+            .tokenized(vocab_cap, spec.loss_mode)
+            .with_context(|| {
+                format!("loading data for job '{}' ({})", spec.id, spec.data.label())
+            })?;
+        ensure!(
+            !examples.is_empty(),
+            "job '{}': data source {} produced no usable examples",
+            spec.id,
+            spec.data.label()
+        );
+        let batches: Vec<Batch> =
+            BatchStream::new(examples, PackingStrategy::Bfd, exe.batch, exe.seq, TailPolicy::Pad)
+                .collect();
+        ensure!(
+            !batches.is_empty(),
+            "job '{}': packing produced no batches (every example exceeded the row capacity?)",
+            spec.id
+        );
+        // stage ≤ steps distinct batches and cycle them, exactly like the
+        // session's cycle mode
+        let mut staged = Vec::new();
+        for b in batches.into_iter().take(spec.steps as usize) {
+            staged.push(self.backend.upload_batch(&resolved.train, &b)?);
+        }
+        // LoRA-family tenants get a detached adapter when the backend
+        // supports the swap seam; everything else (and every job on a
+        // swap-less backend) falls back to a dedicated state
+        let wants_adapter = matches!(
+            spec.task,
+            Task::Lora { .. } | Task::LoraPlus { .. } | Task::LoraNaive | Task::LoraBroken
+        );
+        let adapter = if wants_adapter {
+            self.backend.init_adapter(&resolved.train, spec.seed as i32).ok()
+        } else {
+            None
+        };
+        let key = FuseKey::for_job(&spec.task, exe, self.cfg.fuse && adapter.is_some());
+        let schedule = spec.schedule.lr_schedule(spec.lr, spec.steps, spec.task.lora_plus_ratio());
+        println!(
+            "serve: admitted '{}' ({}, {} steps, {}, {})",
+            spec.id,
+            spec.task,
+            spec.steps,
+            spec.data.label(),
+            if key.fusable { "fusable" } else { "serial" },
+        );
+        self.jobs.push(ServeJob {
+            spec,
+            resolved,
+            key,
+            adapter,
+            dedicated: None,
+            staged,
+            schedule,
+            step: 0,
+            losses: Vec::new(),
+            grad_norms: Vec::new(),
+            verifier: Verifier::default(),
+            done: false,
+            reported: false,
+        });
+        self.summary.admitted += 1;
+        Ok(())
+    }
+
+    /// The final trainable tensors of a tenant's detached adapter (the
+    /// parity tests compare these bitwise between fused and serial runs).
+    pub fn final_adapter(&self, id: &str) -> Result<Vec<HostTensor>> {
+        let job = self
+            .jobs
+            .iter()
+            .find(|j| j.spec.id == id)
+            .ok_or_else(|| anyhow!("no admitted job with id '{id}'"))?;
+        let adapter = job.adapter.as_ref().ok_or_else(|| {
+            anyhow!("job '{id}' trains a dedicated state, not a detached adapter")
+        })?;
+        self.backend.adapter_params(adapter)
+    }
+
+    /// Run the service: admit, schedule rounds, stream reports. Returns
+    /// when the queue is drained (`once`), the round cap is hit, or — in
+    /// watch mode — never.
+    pub fn run(&mut self) -> Result<ServeSummary> {
+        loop {
+            self.scan_sources()?;
+            let pending: Vec<usize> =
+                (0..self.jobs.len()).filter(|&i| !self.jobs[i].done).collect();
+            if pending.is_empty() {
+                if self.cfg.once {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(self.cfg.poll_ms));
+                continue;
+            }
+            let keys: Vec<FuseKey> = pending.iter().map(|&i| self.jobs[i].key.clone()).collect();
+            let mut capped = false;
+            for round in group_rounds(&keys) {
+                if self.cfg.max_rounds.is_some_and(|m| self.summary.rounds >= m) {
+                    capped = true;
+                    break;
+                }
+                let members: Vec<usize> = round.iter().map(|&p| pending[p]).collect();
+                self.summary
+                    .rounds_log
+                    .push(members.iter().map(|&ji| self.jobs[ji].spec.id.clone()).collect());
+                if members.len() > 1 {
+                    self.summary.fused_rounds += 1;
+                }
+                for &ji in &members {
+                    self.run_slice(ji)?;
+                }
+                self.summary.rounds += 1;
+                for &ji in &members {
+                    if self.jobs[ji].done && !self.jobs[ji].reported {
+                        self.write_report(ji)?;
+                    }
+                }
+            }
+            if capped {
+                break;
+            }
+        }
+        // round cap hit (or an empty drain): every admitted job still
+        // leaves a report, marked completed = false if it was cut short
+        for ji in 0..self.jobs.len() {
+            if !self.jobs[ji].reported {
+                self.write_report(ji)?;
+            }
+        }
+        Ok(std::mem::take(&mut self.summary))
+    }
+
+    /// Run one job's slice of a round: swap its adapter into the
+    /// workspace, run up to `steps_per_round` ordinary train steps, swap
+    /// back out.
+    fn run_slice(&mut self, ji: usize) -> Result<()> {
+        let backend = Arc::clone(&self.backend);
+        self.ensure_workspace(ji)?;
+        let quantum = self.cfg.steps_per_round;
+        let ServeJob {
+            spec,
+            resolved,
+            key,
+            adapter,
+            dedicated,
+            staged,
+            schedule,
+            step,
+            losses,
+            grad_norms,
+            verifier,
+            done,
+            ..
+        } = &mut self.jobs[ji];
+        let ws: &mut DeviceState = if key.fusable {
+            let slot = self
+                .workspaces
+                .iter_mut()
+                .find(|(k, _)| *k == *key)
+                .expect("ensure_workspace created the shared workspace");
+            &mut slot.1
+        } else {
+            dedicated.as_mut().expect("ensure_workspace created the dedicated state")
+        };
+        if let Some(ad) = adapter.as_mut() {
+            backend.swap_adapter(ws, ad)?;
+        }
+        let slice = quantum.min(spec.steps - *step);
+        for _ in 0..slice {
+            let step_1 = *step + 1;
+            let (lr, lr_b) = schedule.lr_pair(step_1);
+            let batch = &staged[(*step as usize) % staged.len()];
+            let out = backend.train_step(&resolved.train, ws, batch, step_1, lr, lr_b)?;
+            losses.push(out.loss);
+            grad_norms.push(out.grad_norm);
+            verifier.observe(out.loss, out.grad_norm);
+            *step += 1;
+        }
+        if let Some(ad) = adapter.as_mut() {
+            backend.swap_adapter(ws, ad)?;
+        }
+        if *step >= spec.steps {
+            *done = true;
+        }
+        Ok(())
+    }
+
+    /// Make sure the state a job trains against exists: the fuse group's
+    /// shared workspace, or the job's dedicated state.
+    fn ensure_workspace(&mut self, ji: usize) -> Result<()> {
+        let key = self.jobs[ji].key.clone();
+        if key.fusable {
+            if !self.workspaces.iter().any(|(k, _)| *k == key) {
+                let st =
+                    self.backend.init_state(&self.jobs[ji].resolved.init, self.cfg.base_seed)?;
+                self.workspaces.push((key, st));
+            }
+            return Ok(());
+        }
+        if self.jobs[ji].dedicated.is_none() {
+            // adapter jobs and FullFinetune start from the shared base
+            // checkpoint; only the swap-less LoRA fallback (no adapter
+            // support, no base/adapter split) seeds the whole state from
+            // the tenant
+            let seed = if self.jobs[ji].adapter.is_some()
+                || self.jobs[ji].spec.task == Task::FullFinetune
+            {
+                self.cfg.base_seed
+            } else {
+                self.jobs[ji].spec.seed as i32
+            };
+            let st = self.backend.init_state(&self.jobs[ji].resolved.init, seed)?;
+            self.jobs[ji].dedicated = Some(st);
+        }
+        Ok(())
+    }
+
+    /// Stream one job's report file. Deterministic by construction: no
+    /// wall-clock fields, so fused and serial runs byte-match.
+    fn write_report(&mut self, ji: usize) -> Result<()> {
+        let (path, line) = {
+            let job = &self.jobs[ji];
+            let expected = job.resolved.spec.trainable_param_count;
+            let verification = job.verifier.report(expected, expected);
+            let rep = ServeJobReport {
+                id: &job.spec.id,
+                task: job.spec.task.to_string(),
+                backend: self.backend.name(),
+                data: job.spec.data.label(),
+                steps_budget: job.spec.steps,
+                steps_run: job.step,
+                completed: job.done,
+                losses: &job.losses,
+                grad_norms: &job.grad_norms,
+                verified: verification.is_training,
+            };
+            let path = self.cfg.out_dir.join(format!("{}.report.json", job.spec.id));
+            let mut text = rep.to_json().to_string_pretty();
+            text.push('\n');
+            std::fs::write(&path, text)
+                .with_context(|| format!("writing report {}", path.display()))?;
+            let line = format!(
+                "serve: '{}' {} after {} steps ({}) -> {}",
+                job.spec.id,
+                if job.done { "completed" } else { "stopped" },
+                job.step,
+                verification.status(),
+                path.display(),
+            );
+            (path, line)
+        };
+        println!("{line}");
+        self.summary.completed += self.jobs[ji].done as usize;
+        self.summary.report_files.push(path);
+        self.jobs[ji].reported = true;
+        Ok(())
+    }
+
+    /// Pick up new job files: the manifest once, then the spool directory
+    /// on every pass (sorted, each file tried exactly once).
+    fn scan_sources(&mut self) -> Result<()> {
+        if let Some(man) = self.cfg.jobs_manifest.clone() {
+            if !self.manifest_loaded {
+                self.manifest_loaded = true;
+                self.load_manifest(&man)?;
+            }
+        }
+        if let Some(spool) = self.cfg.spool.clone() {
+            let mut paths: Vec<PathBuf> = std::fs::read_dir(&spool)
+                .with_context(|| format!("reading spool directory {}", spool.display()))?
+                .filter_map(|e| e.ok())
+                .map(|e| e.path())
+                .filter(|p| p.extension().and_then(|s| s.to_str()) == Some("toml"))
+                .collect();
+            paths.sort();
+            for p in paths {
+                if self.seen.insert(p.clone()) {
+                    self.admit_file(&p);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A malformed manifest is an operator error and fails the run —
+    /// unlike per-job files, there is no useful way to degrade.
+    fn load_manifest(&mut self, man: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(man)
+            .with_context(|| format!("reading jobs manifest {}", man.display()))?;
+        let doc = TomlDoc::parse(&text)
+            .with_context(|| format!("parsing jobs manifest {}", man.display()))?;
+        for (k, _) in &doc.entries {
+            if k != "jobs" {
+                bail!(
+                    "unknown key '{k}' in jobs manifest {} (expected only \
+                     'jobs = [\"job.toml\", ...]')",
+                    man.display()
+                );
+            }
+        }
+        let jobs = doc.get("jobs").ok_or_else(|| {
+            anyhow!("jobs manifest {} is missing the 'jobs = [...]' key", man.display())
+        })?;
+        let TomlValue::Arr(items) = jobs else {
+            bail!("'jobs' in {} must be an array of job-file paths", man.display());
+        };
+        let base = man.parent().unwrap_or(Path::new("."));
+        for item in items {
+            let rel = item
+                .as_str()
+                .ok_or_else(|| anyhow!("'jobs' entries in {} must be strings", man.display()))?;
+            let path = base.join(rel);
+            if self.seen.insert(path.clone()) {
+                self.admit_file(&path);
+            }
+        }
+        Ok(())
+    }
+
+    /// Admit a job file; on any admission error, write a reject diagnostic
+    /// next to the reports and keep serving.
+    fn admit_file(&mut self, path: &Path) {
+        let admitted = JobSpec::from_file(path)
+            .with_context(|| format!("job file {}", path.display()))
+            .and_then(|spec| self.admit_spec(spec));
+        if let Err(e) = admitted {
+            self.reject(path, &e);
+        }
+    }
+
+    fn reject(&mut self, path: &Path, err: &anyhow::Error) {
+        self.summary.rejected += 1;
+        let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("job");
+        let out = self.cfg.out_dir.join(format!("{stem}.reject.txt"));
+        let msg = format!("rejected job file {}:\n{err:#}\n", path.display());
+        eprint!("serve: {msg}");
+        if let Err(w) = std::fs::write(&out, &msg) {
+            eprintln!("serve: could not write reject diagnostic {}: {w}", out.display());
+        }
+        self.summary.reject_files.push(out);
+    }
+}

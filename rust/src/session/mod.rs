@@ -55,6 +55,7 @@ use anyhow::{bail, Result};
 use std::fmt;
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::Arc;
 
 /// What to train — the typed replacement for the `executable: String` zoo.
 /// Variants cover the paper tables (full fine-tuning, LoRA, LoRA+, the
@@ -223,7 +224,7 @@ impl BackendSpec {
     }
 
     /// Instantiate the backend.
-    pub fn create(&self) -> Result<Rc<dyn Backend>> {
+    pub fn create(&self) -> Result<Arc<dyn Backend>> {
         match self {
             BackendSpec::Cpu => create_backend("cpu", "", 0),
             BackendSpec::CpuFast { threads } => create_backend("cpu-fast", "", *threads),
@@ -641,14 +642,14 @@ impl SessionSpec {
     /// Instantiate the execution backend this spec describes: the plain
     /// backend when `workers == 0`, otherwise `workers` independent
     /// replicas behind the [`DataParallel`] reduction tree.
-    pub fn create_backend(&self) -> Result<Rc<dyn Backend>> {
+    pub fn create_backend(&self) -> Result<Arc<dyn Backend>> {
         if self.workers == 0 {
             return self.backend.create();
         }
         let replicas = (0..self.workers)
             .map(|_| self.backend.create())
             .collect::<Result<Vec<_>>>()?;
-        Ok(Rc::new(DataParallel::from_replicas(replicas)?))
+        Ok(Arc::new(DataParallel::from_replicas(replicas)?))
     }
 }
 
@@ -664,7 +665,7 @@ pub struct SessionBuilder {
     loss_mode: LossMode,
     eval_fraction: Option<f64>,
     backend_spec: BackendSpec,
-    backend: Option<Rc<dyn Backend>>,
+    backend: Option<Arc<dyn Backend>>,
     workers: usize,
     steps: u64,
     meter_warmup: usize,
@@ -829,7 +830,7 @@ impl SessionBuilder {
 
     /// Run on an already-constructed backend (tests, benches, sharing one
     /// backend across sessions). Overrides [`SessionBuilder::backend`].
-    pub fn on_backend(mut self, backend: Rc<dyn Backend>) -> Self {
+    pub fn on_backend(mut self, backend: Arc<dyn Backend>) -> Self {
         self.backend = Some(backend);
         self
     }
@@ -1041,14 +1042,14 @@ fn eval_pass(trainer: &Trainer, eval_exe: &str, batches: &[Batch]) -> Result<f32
 /// trainer, driving the lazy batch stream.
 pub struct Session {
     spec: SessionSpec,
-    backend: Rc<dyn Backend>,
+    backend: Arc<dyn Backend>,
     resolved: Resolved,
     trainer: Trainer,
 }
 
 impl Session {
     /// Build on an explicit backend instance (ignores `spec.backend`).
-    pub fn with_backend(spec: SessionSpec, backend: Rc<dyn Backend>) -> Result<Session> {
+    pub fn with_backend(spec: SessionSpec, backend: Arc<dyn Backend>) -> Result<Session> {
         spec.validate()?;
         let resolved = resolve::resolve(backend.manifest(), &spec.task)?;
         let schedule = spec.schedule.lr_schedule(spec.lr, spec.steps, resolved.lora_plus_ratio);
@@ -1067,7 +1068,7 @@ impl Session {
         &self.resolved
     }
 
-    pub fn backend(&self) -> &Rc<dyn Backend> {
+    pub fn backend(&self) -> &Arc<dyn Backend> {
         &self.backend
     }
 
@@ -1503,7 +1504,7 @@ mod tests {
 
     #[test]
     fn workers_with_adopted_backend_rejected() {
-        let be: Rc<dyn Backend> = Rc::new(crate::backend::cpu::CpuBackend::new());
+        let be: Arc<dyn Backend> = Arc::new(crate::backend::cpu::CpuBackend::new());
         let err = SessionBuilder::new().workers(2).on_backend(be).build().unwrap_err();
         assert!(err.to_string().contains("on_backend"), "{err}");
     }

@@ -9,7 +9,7 @@
 
 use chronicals::backend::cpu::CpuBackend;
 use chronicals::session::{eval_split, DataSource, RunReport, SessionBuilder, Task};
-use std::rc::Rc;
+use std::sync::Arc;
 
 #[test]
 fn split_partitions_every_shape() {
@@ -53,7 +53,7 @@ fn run_with(shuffle_seed: Option<u64>, epochs: Option<u64>) -> RunReport {
         .steps(4)
         .lr(1e-3)
         .seed(42)
-        .on_backend(Rc::new(CpuBackend::new()));
+        .on_backend(Arc::new(CpuBackend::new()));
     if let Some(s) = shuffle_seed {
         b = b.shuffle_seed(s);
     }

@@ -14,10 +14,10 @@ use chronicals::config::RunConfig;
 use chronicals::coordinator::Trainer;
 use chronicals::harness;
 use chronicals::optim::LrSchedule;
-use std::rc::Rc;
+use std::sync::Arc;
 
-fn cpu() -> Rc<dyn Backend> {
-    Rc::new(CpuBackend::new())
+fn cpu() -> Arc<dyn Backend> {
+    Arc::new(CpuBackend::new())
 }
 
 /// A config sized so every example fits a 64-token packing bin and a 12-step
@@ -316,9 +316,9 @@ mod pjrt_integration {
     use super::*;
     use chronicals::backend::pjrt::PjrtBackend;
 
-    fn pjrt() -> Option<Rc<dyn Backend>> {
+    fn pjrt() -> Option<Arc<dyn Backend>> {
         match PjrtBackend::new("artifacts") {
-            Ok(be) => Some(Rc::new(be)),
+            Ok(be) => Some(Arc::new(be)),
             Err(e) => {
                 eprintln!("SKIPPED pjrt integration (artifacts/runtime unavailable): {e:#}");
                 None

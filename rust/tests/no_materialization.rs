@@ -19,7 +19,7 @@ use chronicals::backend::cpu::ModelDims;
 use chronicals::backend::cpu_fast::FastCpuBackend;
 use chronicals::backend::{Backend, DataParallel};
 use chronicals::harness;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn dims() -> ModelDims {
     ModelDims { vocab: 256, d_model: 32, n_layers: 2, n_heads: 4, n_kv_heads: 2, d_ff: 64 }
@@ -44,11 +44,11 @@ fn setup_on(be: &dyn Backend) -> (chronicals::backend::DeviceState, chronicals::
 
 /// A data-parallel wrapper over `workers` fast-CPU replicas on the
 /// accounting geometry, with concrete handles kept for arena inspection.
-fn dp_fast(workers: usize, batch: usize, seq: usize) -> (DataParallel, Vec<Rc<FastCpuBackend>>) {
-    let replicas: Vec<Rc<FastCpuBackend>> =
-        (0..workers).map(|_| Rc::new(FastCpuBackend::custom(dims(), batch, seq, 2))).collect();
-    let dyns: Vec<Rc<dyn Backend>> =
-        replicas.iter().map(|r| r.clone() as Rc<dyn Backend>).collect();
+fn dp_fast(workers: usize, batch: usize, seq: usize) -> (DataParallel, Vec<Arc<FastCpuBackend>>) {
+    let replicas: Vec<Arc<FastCpuBackend>> =
+        (0..workers).map(|_| Arc::new(FastCpuBackend::custom(dims(), batch, seq, 2))).collect();
+    let dyns: Vec<Arc<dyn Backend>> =
+        replicas.iter().map(|r| r.clone() as Arc<dyn Backend>).collect();
     (DataParallel::from_replicas(dyns).unwrap(), replicas)
 }
 

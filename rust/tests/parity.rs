@@ -22,7 +22,7 @@ use chronicals::backend::{Backend, DeviceBatch, DeviceState};
 use chronicals::batching::Batch;
 use chronicals::harness;
 use chronicals::util::rng::Rng;
-use std::rc::Rc;
+use std::sync::Arc;
 
 const LOSS_TOL: f32 = 1e-4;
 const GRAD_NORM_REL_TOL: f32 = 1e-3;
@@ -250,7 +250,7 @@ fn fast_backend_rejects_mismatches_like_reference() {
 /// `run_variant` workflow the CLI uses (trainer, verifier, metering).
 #[test]
 fn run_variant_trains_on_fast_backend() {
-    let be: Rc<dyn Backend> = Rc::new(FastCpuBackend::with_threads(2));
+    let be: Arc<dyn Backend> = Arc::new(FastCpuBackend::with_threads(2));
     let cfg = chronicals::config::RunConfig {
         executable: "train_step_chronicals".into(),
         steps: 10,
@@ -272,7 +272,7 @@ fn run_variant_trains_on_fast_backend() {
 /// batches, reassociation-only differences in the forward pass.
 #[test]
 fn session_eval_series_parity() {
-    let run = |be: Rc<dyn Backend>| {
+    let run = |be: Arc<dyn Backend>| {
         chronicals::session::SessionBuilder::new()
             .data(chronicals::session::DataSource::synthetic(64, 42, 48))
             .eval_fraction(0.25)
@@ -285,8 +285,8 @@ fn session_eval_series_parity() {
             .run()
             .unwrap()
     };
-    let r = run(Rc::new(CpuBackend::new()));
-    let f = run(Rc::new(FastCpuBackend::with_threads(3)));
+    let r = run(Arc::new(CpuBackend::new()));
+    let f = run(Arc::new(FastCpuBackend::with_threads(3)));
     assert_eq!(r.eval_examples, 16);
     assert_eq!(f.eval_examples, 16, "split must not depend on the backend");
     assert_eq!(r.eval.len(), f.eval.len());

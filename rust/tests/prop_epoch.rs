@@ -15,10 +15,10 @@ use chronicals::data::TokenizedExample;
 use chronicals::harness;
 use chronicals::session::{DataSource, EpochPolicy, SessionBuilder, Task};
 use chronicals::util::rng::Rng;
-use std::rc::Rc;
+use std::sync::Arc;
 
-fn cpu() -> Rc<dyn Backend> {
-    Rc::new(CpuBackend::new())
+fn cpu() -> Arc<dyn Backend> {
+    Arc::new(CpuBackend::new())
 }
 
 /// Random example set with lengths bounded by `max_len` (so nothing is

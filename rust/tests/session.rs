@@ -18,10 +18,10 @@ use chronicals::harness;
 use chronicals::session::{
     BackendSpec, DataSource, Schedule, SessionBuilder, SessionSpec, Task,
 };
-use std::rc::Rc;
+use std::sync::Arc;
 
-fn cpu() -> Rc<dyn Backend> {
-    Rc::new(CpuBackend::new())
+fn cpu() -> Arc<dyn Backend> {
+    Arc::new(CpuBackend::new())
 }
 
 /// The ISSUE acceptance criterion: the typed task surface and the

@@ -12,12 +12,12 @@ use chronicals::backend::Backend;
 use chronicals::coordinator::Trainer;
 use chronicals::harness;
 use chronicals::optim::LrSchedule;
-use std::rc::Rc;
+use std::sync::Arc;
 
 #[test]
 fn uploaded_batch_survives_and_is_reusable() {
-    let be: Rc<dyn Backend> = match PjrtBackend::new("artifacts") {
-        Ok(be) => Rc::new(be),
+    let be: Arc<dyn Backend> = match PjrtBackend::new("artifacts") {
+        Ok(be) => Arc::new(be),
         Err(e) => {
             eprintln!("SKIPPED upload lifetime (artifacts/runtime unavailable): {e:#}");
             return;
