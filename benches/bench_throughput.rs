@@ -20,7 +20,10 @@ use chronicals::coordinator::TrainSummary;
 use chronicals::harness;
 use chronicals::metrics::PhaseBreakdown;
 use chronicals::report::{self, Row};
-use chronicals::session::{BackendSpec, DataSource, PackingStrategy, SessionBuilder, Task};
+use chronicals::serve::{FuseMode, JobSpec, ServeConfig, ServeEngine};
+use chronicals::session::{
+    BackendSpec, DataSource, LossMode, PackingStrategy, Schedule, SessionBuilder, Task,
+};
 use chronicals::util::json::{Json, Obj};
 use std::sync::Arc;
 
@@ -81,6 +84,75 @@ fn run_dp(workers: usize, steps: u64) -> Option<TrainSummary> {
             None
         }
     }
+}
+
+/// One serve-ladder rung: `tenants` identical-geometry LoRA tenants
+/// drained in `--once` mode under `mode` on a fresh fast backend. Returns
+/// slot tokens/sec — every tenant runs `steps` steps over a `[B, S]`
+/// batch, so throughput is `tenants × steps × B × S` over wall-clock —
+/// plus the summed per-phase ms pulled from the `--round-stats` sidecar
+/// (the per-job reports are timing-free by contract).
+fn run_serve(mode: FuseMode, tenants: usize, steps: u64) -> Option<(f64, Json)> {
+    let tag = format!("{mode:?}_{tenants}").to_lowercase();
+    let out =
+        std::env::temp_dir().join(format!("chronicals_bench_serve_{}_{tag}", std::process::id()));
+    let stats = out.with_extension("stats.json");
+    let _ = std::fs::remove_dir_all(&out);
+    let _ = std::fs::remove_file(&stats);
+    let backend: Arc<dyn Backend> = Arc::new(FastCpuBackend::with_geometry(BATCH, SEQ));
+    let cfg = ServeConfig {
+        out_dir: out.clone(),
+        fuse: mode,
+        steps_per_round: 4,
+        round_stats: Some(stats.clone()),
+        ..Default::default()
+    };
+    let res = (|| {
+        let mut engine = ServeEngine::new(backend, cfg).ok()?;
+        for i in 0..tenants {
+            engine
+                .admit_spec(JobSpec {
+                    id: format!("tenant-{i}"),
+                    task: Task::lora(),
+                    steps,
+                    lr: 5e-3,
+                    seed: 7 + i as i64,
+                    schedule: Schedule::Constant,
+                    loss_mode: LossMode::default(),
+                    data: DataSource::synthetic(40, 3 + i as u64, 48),
+                })
+                .ok()?;
+        }
+        let t0 = std::time::Instant::now();
+        let summary = engine.run().ok()?;
+        let secs = t0.elapsed().as_secs_f64();
+        if summary.completed != tenants || secs <= 0.0 {
+            return None;
+        }
+        let tok = (tenants as u64 * steps) as f64 * (BATCH * SEQ) as f64;
+        let mut phases = Obj::default();
+        let sidecar = std::fs::read_to_string(&stats).ok().and_then(|t| Json::parse(&t).ok());
+        if let Some(json) = sidecar {
+            if let Ok(rounds) = json.field("per_round") {
+                if let Some(rounds) = rounds.as_arr() {
+                    for key in ["fwd_ms", "bwd_ms", "optim_ms"] {
+                        let total: f64 = rounds
+                            .iter()
+                            .filter_map(|r| r.field(key).ok().and_then(|v| v.as_f64()))
+                            .sum();
+                        phases.insert(key, Json::Num(total));
+                    }
+                }
+            }
+        }
+        Some((tok / secs, Json::Obj(phases)))
+    })();
+    let _ = std::fs::remove_dir_all(&out);
+    let _ = std::fs::remove_file(&stats);
+    if res.is_none() {
+        eprintln!("serve ladder rung failed: {mode:?} tenants={tenants}");
+    }
+    res
 }
 
 fn main() {
@@ -216,6 +288,58 @@ fn main() {
     }
     match report::update_bench_json(&path, "data_parallel", Json::Obj(dp)) {
         Ok(()) => println!("wrote data-parallel numbers to {}", path.display()),
+        Err(e) => eprintln!("could not update {}: {e:#}", path.display()),
+    }
+
+    // serve intra-step fusion ladder: N identical LoRA tenants drained in
+    // --once mode — serial (--fuse off) vs adapter-swap round fusion
+    // (--fuse on) vs one concatenated base pass per quantum step
+    // (--fuse intra). All three are bitwise identical (the serve suite
+    // enforces it); this section measures what fusion buys in slot
+    // throughput, phase by phase.
+    let mut sv = Obj::default();
+    let mut sv_cfg = Obj::default();
+    sv_cfg.insert("task", Json::Str("lora".into()));
+    sv_cfg.insert("steps_per_tenant", Json::Num(steps as f64));
+    sv_cfg.insert("steps_per_round", Json::Num(4.0));
+    sv_cfg.insert("backend", Json::Str("cpu-fast".into()));
+    sv.insert("config", Json::Obj(sv_cfg));
+    let mut isf = Obj::default();
+    for tenants in [2usize, 4] {
+        let mut serial_tps = 0.0f64;
+        for (label, mode) in [
+            ("serial", FuseMode::Off),
+            ("round_fused", FuseMode::Round),
+            ("intra_fused", FuseMode::Intra),
+        ] {
+            let Some((tps, phases)) = run_serve(mode, tenants, steps) else {
+                continue;
+            };
+            if label == "serial" {
+                serial_tps = tps;
+            }
+            let speedup = if serial_tps > 0.0 { tps / serial_tps } else { 0.0 };
+            println!("serve {label} tenants={tenants}: {tps:.0} tok/s ({speedup:.2}x serial)");
+            let mut entry = Obj::default();
+            entry.insert("tokens_per_sec", Json::Num(tps));
+            entry.insert("phases", phases);
+            if label != "serial" {
+                entry.insert("speedup_vs_serial", Json::Num(speedup));
+            }
+            isf.insert(format!("{label}_{tenants}"), Json::Obj(entry));
+        }
+    }
+    sv.insert("intra_step_fusion", Json::Obj(isf));
+    sv.insert(
+        "acceptance",
+        Json::Str("intra_step_fusion.intra_fused_4.speedup_vs_serial >= 2.0".into()),
+    );
+    // one shared base pass per quantum step amortizes forward/backward
+    // across tenants; the ≥2x bar assumes real parallel headroom, so the
+    // section ships unverified until measured on such a host
+    sv.insert("verified", Json::Bool(false));
+    match report::update_bench_json(&path, "serve", Json::Obj(sv)) {
+        Ok(()) => println!("wrote serve fusion numbers to {}", path.display()),
         Err(e) => eprintln!("could not update {}: {e:#}", path.display()),
     }
 }

@@ -14,7 +14,10 @@ pub mod model;
 
 pub use model::{CpuState, LoraCfg, ModelDims};
 
-use super::{AdapterState, Backend, DeviceBatch, DeviceState, RowGrad, StepOutputs};
+use super::{
+    AdapterState, Backend, DeviceBatch, DeviceState, FusedOutputs, FusedSlice, RowGrad,
+    StepOutputs,
+};
 use crate::batching::Batch;
 use crate::manifest::{
     DType, ExecutableSpec, Manifest, ModelConfigEcho, Role, StepConfigEcho, TensorSpec,
@@ -321,6 +324,67 @@ pub(crate) fn row_view(b: &Batch, row: usize) -> Result<model::BatchView<'_>> {
     })
 }
 
+/// Shared validation for the intra-step fused seam (DESIGN.md §11): a
+/// non-broken LoRA train executable and a concatenated batch whose
+/// sequence length matches the spec. The row count is deliberately *not*
+/// checked against `spec.batch` — a fused round concatenates several
+/// tenants' batches, so the row total is validated against the slice map
+/// inside the model instead. Both CPU backends call this so their fused
+/// paths reject identical inputs.
+pub(crate) fn check_fused_batch(
+    spec: &ExecutableSpec,
+    b: &Batch,
+    slices: &[FusedSlice],
+) -> Result<()> {
+    if spec.kind != "train" {
+        bail!("'{}' is not a train executable (kind = {})", spec.name, spec.kind);
+    }
+    if spec.step_config.broken {
+        bail!(
+            "'{}' is a broken (zero-gradient) executable — refusing to fuse it",
+            spec.name
+        );
+    }
+    if family_lora(&spec.family).is_none() {
+        bail!(
+            "executable '{}' (family '{}') has no LoRA adapters — intra-step fusion \
+             requires the lora family",
+            spec.name,
+            spec.family
+        );
+    }
+    if b.seq != spec.seq {
+        bail!(
+            "concatenated batch seq {} does not match executable '{}' seq {}",
+            b.seq,
+            spec.name,
+            spec.seq
+        );
+    }
+    let rows: usize = slices.iter().map(|s| s.rows).sum();
+    if rows != b.batch {
+        bail!(
+            "slice map covers {rows} rows but the concatenated batch has {} — \
+             the serve scheduler built an inconsistent round",
+            b.batch
+        );
+    }
+    Ok(())
+}
+
+/// Unwrap a slice of [`AdapterState`]s into the CPU adapters both CPU
+/// backends train. Infallible today (CPU is the only adapter variant) but
+/// kept as the single seam to extend when another backend grows adapters.
+pub(crate) fn cpu_adapters_mut(adapters: &mut [AdapterState]) -> Vec<&mut model::CpuAdapter> {
+    adapters
+        .iter_mut()
+        .map(|a| {
+            let AdapterState::Cpu(ad) = a;
+            ad
+        })
+        .collect()
+}
+
 /// Shared spec/family/geometry validation for the data-parallel seams —
 /// the same guards `train_step` applies, factored so both CPU backends
 /// stay exactly as strict on the sharded path.
@@ -429,6 +493,46 @@ impl Backend for CpuBackend {
 
     fn adapter_params(&self, adapter: &AdapterState) -> Result<Vec<HostTensor>> {
         cpu_adapter_params(adapter)
+    }
+
+    fn supports_fused_step(&self) -> bool {
+        true
+    }
+
+    fn fused_step(
+        &self,
+        train_name: &str,
+        state: &DeviceState,
+        adapters: &mut [AdapterState],
+        batch: &Batch,
+        slices: &[FusedSlice],
+    ) -> Result<FusedOutputs> {
+        let spec = self.spec(train_name)?;
+        check_fused_batch(spec, batch, slices)?;
+        let s = as_cpu_state(state)?;
+        let expect_lora = family_lora(&spec.family);
+        if s.lora != expect_lora {
+            bail!(
+                "state family mismatch: executable '{train_name}' expects lora={:?}, state has {:?}",
+                expect_lora,
+                s.lora
+            );
+        }
+        let view = batch_view(batch)?;
+        let mut ads = cpu_adapters_mut(adapters);
+        let (outs, phases) = model::fused_train_step(s, &mut ads, &view, slices)?;
+        Ok(FusedOutputs {
+            tenants: outs
+                .into_iter()
+                .map(|o| StepOutputs {
+                    loss: o.loss,
+                    grad_norm: o.grad_norm,
+                    n_tokens: o.n_tokens,
+                    phases: o.phases,
+                })
+                .collect(),
+            phases,
+        })
     }
 
     fn flat_grad_len(&self, state: &DeviceState) -> Result<usize> {

@@ -23,7 +23,7 @@ use super::math::{
     adamw_update, linear_bwd_w, linear_bwd_x, linear_fwd, rmsnorm_bwd, rmsnorm_fwd, rope_apply,
     softmax_xent, swiglu_bwd, swiglu_fwd,
 };
-use crate::backend::StepPhases;
+use crate::backend::{FusedSlice, StepPhases};
 use crate::optim::{classify_param, ParamGroup};
 use crate::runtime::HostTensor;
 use crate::util::rng::Rng;
@@ -946,6 +946,424 @@ pub fn swap_adapter(state: &mut CpuState, adapter: &mut CpuAdapter) -> Result<()
     Ok(())
 }
 
+/// Validate one intra-step fused round (DESIGN.md §11) against the shared
+/// workspace: a LoRA workspace, one adapter per slice, contiguous ordered
+/// slices covering the concatenated batch exactly, and every adapter
+/// geometry-compatible with the workspace's trainable prefix. Shared by
+/// both CPU backends so their fused paths reject identical inputs.
+pub fn check_fused_inputs(
+    state: &CpuState,
+    adapters: &[&mut CpuAdapter],
+    bv: &BatchView,
+    slices: &[FusedSlice],
+) -> Result<()> {
+    let sl_cfg = state
+        .lora
+        .ok_or_else(|| anyhow!("intra-step fusion requires a LoRA workspace state"))?;
+    ensure!(!slices.is_empty(), "a fused round needs at least one tenant slice");
+    ensure!(
+        slices.len() == adapters.len(),
+        "slice count {} != adapter count {}",
+        slices.len(),
+        adapters.len()
+    );
+    let mut next_row = 0usize;
+    for (k, sl) in slices.iter().enumerate() {
+        ensure!(sl.rows > 0, "slice {k} is empty");
+        ensure!(sl.step >= 1, "slice {k} has 0-based step {} (steps are 1-based)", sl.step);
+        ensure!(
+            sl.row_start == next_row,
+            "slice {k} starts at row {} but the previous slice ends at row {next_row} \
+             (slices must be contiguous and ordered)",
+            sl.row_start
+        );
+        next_row += sl.rows;
+    }
+    ensure!(
+        next_row == bv.bsz,
+        "slices cover {next_row} rows but the concatenated batch has {}",
+        bv.bsz
+    );
+    for (k, ad) in adapters.iter().enumerate() {
+        ensure!(
+            ad.dims == state.dims,
+            "adapter {k} geometry {:?} != workspace {:?}",
+            ad.dims,
+            state.dims
+        );
+        ensure!(
+            ad.lora == sl_cfg,
+            "adapter {k} LoRA config {:?} != workspace {sl_cfg:?}",
+            ad.lora
+        );
+        ensure!(
+            ad.params.len() == state.n_trainable,
+            "adapter {k} tensor count {} != workspace trainable prefix {}",
+            ad.params.len(),
+            state.n_trainable
+        );
+        for i in 0..state.n_trainable {
+            ensure!(
+                ad.names[i] == state.names[i],
+                "adapter {k} tensor {i} name '{}' != workspace '{}'",
+                ad.names[i],
+                state.names[i]
+            );
+        }
+    }
+    Ok(())
+}
+
+/// One intra-step fused round (DESIGN.md §11): a single shared base
+/// forward/backward over the concatenated `[B_total, S]` batch, per-slice
+/// LoRA A/B application in the matmul epilogues, per-tenant adapter
+/// gradients accumulated over fixed-order row-slice reductions, then one
+/// AdamW step per tenant at that tenant's own `(step, lr, lr_b)`.
+///
+/// Bitwise-parity argument (the separability contract, pinned by the
+/// `fused_step_*` tests below): every base-path op in this model —
+/// embedding copy, RMSNorm, linears, RoPE, SwiGLU, residual adds, and the
+/// segment-masked attention (which iterates strictly per batch row) — is
+/// per-row pure, so running it once over the concat batch produces, on
+/// each tenant's rows, exactly the bits the serial per-tenant run
+/// produces. The order-sensitive pieces — the loss normalizer, the
+/// adapter weight-gradient reductions over tokens, the grad-norm, and the
+/// optimizer — are executed per-slice with the same functions, the same
+/// sub-inputs, and the same fixed accumulation order as the serial path.
+/// The base weights are frozen under LoRA, so no cross-tenant gradient
+/// ever accumulates: the dx chain through frozen weights is per-token
+/// pure, and frozen weight gradients are never formed at all.
+pub fn fused_train_step(
+    state: &CpuState,
+    adapters: &mut [&mut CpuAdapter],
+    bv: &BatchView,
+    slices: &[FusedSlice],
+) -> Result<(Vec<StepOut>, StepPhases)> {
+    check_fused_inputs(state, adapters, bv, slices)?;
+    let dims = &state.dims;
+    let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
+    let (hq, hkv, hd) = (dims.n_heads, dims.n_kv_heads, dims.head_dim());
+    let dkv = dims.d_kv();
+    let (t, seq) = (bv.t(), bv.seq);
+    let p = ParamIdx::new(&state.names, &state.params);
+    let lc_cfg = state.lora.expect("checked above");
+    let (r, scale) = (lc_cfg.rank, lc_cfg.scale());
+    let nt = state.n_trainable;
+
+    for (i, &tok) in bv.tokens.iter().enumerate() {
+        if tok < 0 || tok as usize >= v {
+            bail!("token id {tok} at position {i} out of vocab range 0..{v}");
+        }
+    }
+    for (i, &tgt) in bv.targets.iter().enumerate() {
+        if tgt >= v as i32 {
+            bail!("target id {tgt} at position {i} out of vocab range");
+        }
+    }
+
+    // ---- forward: one shared base pass, per-slice adapter epilogues ----
+    let t_fwd = Instant::now();
+    let embed = p.get("embed")?;
+    let mut x = vec![0.0f32; t * d];
+    for ti in 0..t {
+        let tok = bv.tokens[ti] as usize;
+        x[ti * d..(ti + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+    }
+
+    let mut layer_caches: Vec<LayerCache> = Vec::with_capacity(dims.n_layers);
+    for l in 0..dims.n_layers {
+        let pre = format!("layer_{l:02}.");
+        let x_in = x;
+
+        let mut h1 = vec![0.0f32; t * d];
+        let mut rstd1 = vec![0.0f32; t];
+        rmsnorm_fwd(&x_in, p.get(&format!("{pre}norm1"))?, t, d, &mut h1, &mut rstd1);
+
+        let mut q = vec![0.0f32; t * d];
+        linear_fwd(&h1, p.get(&format!("{pre}wq"))?, t, d, d, &mut q);
+        let mut k = vec![0.0f32; t * dkv];
+        linear_fwd(&h1, p.get(&format!("{pre}wk"))?, t, d, dkv, &mut k);
+        let mut vv = vec![0.0f32; t * dkv];
+        linear_fwd(&h1, p.get(&format!("{pre}wv"))?, t, d, dkv, &mut vv);
+
+        let i_qa = p.id(&format!("{pre}wq_a"))?;
+        let i_qb = p.id(&format!("{pre}wq_b"))?;
+        let i_va = p.id(&format!("{pre}wv_a"))?;
+        let i_vb = p.id(&format!("{pre}wv_b"))?;
+        let mut hq_a = vec![0.0f32; t * r];
+        let mut hv_a = vec![0.0f32; t * r];
+        for (ki, sl) in slices.iter().enumerate() {
+            let lo = sl.row_start * seq;
+            let hi = (sl.row_start + sl.rows) * seq;
+            let ts = hi - lo;
+            let ad = &adapters[ki];
+            linear_fwd(&h1[lo * d..hi * d], ad.params[i_qa].as_f32()?, ts, d, r, &mut hq_a[lo * r..hi * r]);
+            let mut dq = vec![0.0f32; ts * d];
+            linear_fwd(&hq_a[lo * r..hi * r], ad.params[i_qb].as_f32()?, ts, r, d, &mut dq);
+            for i in 0..ts * d {
+                q[lo * d + i] += scale * dq[i];
+            }
+            linear_fwd(&h1[lo * d..hi * d], ad.params[i_va].as_f32()?, ts, d, r, &mut hv_a[lo * r..hi * r]);
+            let mut dv = vec![0.0f32; ts * dkv];
+            linear_fwd(&hv_a[lo * r..hi * r], ad.params[i_vb].as_f32()?, ts, r, dkv, &mut dv);
+            for i in 0..ts * dkv {
+                vv[lo * dkv + i] += scale * dv[i];
+            }
+        }
+
+        rope_apply(&mut q, bv.pos, t, hq, hd, 1.0);
+        rope_apply(&mut k, bv.pos, t, hkv, hd, 1.0);
+
+        let mut att = vec![0.0f32; t * d];
+        let mut probs = vec![0.0f32; bv.bsz * hq * seq * seq];
+        attention_fwd(&q, &k, &vv, bv, hq, hkv, hd, &mut att, &mut probs);
+
+        let mut ao = vec![0.0f32; t * d];
+        linear_fwd(&att, p.get(&format!("{pre}wo"))?, t, d, d, &mut ao);
+        let mut x_mid = x_in.clone();
+        for i in 0..t * d {
+            x_mid[i] += ao[i];
+        }
+
+        let mut h2 = vec![0.0f32; t * d];
+        let mut rstd2 = vec![0.0f32; t];
+        rmsnorm_fwd(&x_mid, p.get(&format!("{pre}norm2"))?, t, d, &mut h2, &mut rstd2);
+        let mut gate = vec![0.0f32; t * f];
+        linear_fwd(&h2, p.get(&format!("{pre}w_gate"))?, t, d, f, &mut gate);
+        let mut up = vec![0.0f32; t * f];
+        linear_fwd(&h2, p.get(&format!("{pre}w_up"))?, t, d, f, &mut up);
+        let mut y = vec![0.0f32; t * f];
+        swiglu_fwd(&gate, &up, &mut y);
+        let mut mlp = vec![0.0f32; t * d];
+        linear_fwd(&y, p.get(&format!("{pre}w_down"))?, t, f, d, &mut mlp);
+
+        let mut x_out = x_mid.clone();
+        for i in 0..t * d {
+            x_out[i] += mlp[i];
+        }
+
+        layer_caches.push(LayerCache {
+            x_in,
+            h1,
+            rstd1,
+            q,
+            k,
+            v: vv,
+            hq_a: Some(hq_a),
+            hv_a: Some(hv_a),
+            probs,
+            att,
+            x_mid,
+            h2,
+            rstd2,
+            gate,
+            up,
+            y,
+        });
+        x = x_out;
+    }
+
+    let x_f = x;
+    let mut hf = vec![0.0f32; t * d];
+    let mut rstd_f = vec![0.0f32; t];
+    rmsnorm_fwd(&x_f, p.get("norm_f")?, t, d, &mut hf, &mut rstd_f);
+    let mut logits = vec![0.0f32; t * v];
+    linear_fwd(&hf, p.get("w_head")?, t, d, v, &mut logits);
+    // the loss reduction is the first order-sensitive op: run it per slice
+    // so each tenant gets exactly its serial (loss_sum, n_valid)
+    let mut probs_f = vec![0.0f32; t * v];
+    let mut tenant_fwd: Vec<(f32, usize)> = Vec::with_capacity(slices.len());
+    for sl in slices {
+        let lo = sl.row_start * seq;
+        let hi = (sl.row_start + sl.rows) * seq;
+        let (loss_sum, n_valid) = softmax_xent(
+            &logits[lo * v..hi * v],
+            &bv.targets[lo..hi],
+            hi - lo,
+            v,
+            &mut probs_f[lo * v..hi * v],
+        );
+        tenant_fwd.push((loss_sum, n_valid));
+    }
+    let fwd_s = t_fwd.elapsed().as_secs_f64();
+
+    // ---- backward: one shared base pass, per-slice adapter gradients ----
+    let t_bwd = Instant::now();
+    let mut tenant_grads: Vec<Vec<Vec<f32>>> = (0..slices.len())
+        .map(|_| state.params[..nt].iter().map(|tn| vec![0.0; tn.elements()]).collect())
+        .collect();
+    // frozen-parameter gradient sink: RMSNorm backward always emits a
+    // dgamma, but under LoRA every norm is frozen, so it is discarded —
+    // zeroed per call only to mirror the serial call's zeroed target
+    let mut dg_sink = vec![0.0f32; d];
+
+    // d(mean loss)/d logits, normalized per slice by that tenant's n_valid
+    let mut dlogits = vec![0.0f32; t * v];
+    for (ki, sl) in slices.iter().enumerate() {
+        let lo = sl.row_start * seq;
+        let hi = (sl.row_start + sl.rows) * seq;
+        let nv = tenant_fwd[ki].1.max(1) as f32;
+        for ti in lo..hi {
+            let tgt = bv.targets[ti];
+            if tgt < 0 {
+                continue;
+            }
+            let pr = &probs_f[ti * v..(ti + 1) * v];
+            let dr = &mut dlogits[ti * v..(ti + 1) * v];
+            for i in 0..v {
+                dr[i] = pr[i] / nv;
+            }
+            dr[tgt as usize] -= 1.0 / nv;
+        }
+    }
+
+    // w_head is frozen under LoRA: no weight grad, dx chain only
+    let mut dhf = vec![0.0f32; t * d];
+    linear_bwd_x(&dlogits, p.get("w_head")?, t, d, v, &mut dhf);
+
+    let mut dx = vec![0.0f32; t * d];
+    dg_sink.iter_mut().for_each(|g| *g = 0.0);
+    rmsnorm_bwd(&x_f, p.get("norm_f")?, &rstd_f, &dhf, t, d, &mut dx, &mut dg_sink);
+
+    for l in (0..dims.n_layers).rev() {
+        let pre = format!("layer_{l:02}.");
+        let c = &layer_caches[l];
+
+        let mut dy = vec![0.0f32; t * f];
+        linear_bwd_x(&dx, p.get(&format!("{pre}w_down"))?, t, f, d, &mut dy);
+
+        let mut dgate = vec![0.0f32; t * f];
+        let mut dup = vec![0.0f32; t * f];
+        swiglu_bwd(&c.gate, &c.up, &dy, &mut dgate, &mut dup);
+
+        let mut dh2 = vec![0.0f32; t * d];
+        linear_bwd_x(&dgate, p.get(&format!("{pre}w_gate"))?, t, d, f, &mut dh2);
+        linear_bwd_x(&dup, p.get(&format!("{pre}w_up"))?, t, d, f, &mut dh2);
+
+        let mut dx_mid = dx;
+        dg_sink.iter_mut().for_each(|g| *g = 0.0);
+        rmsnorm_bwd(
+            &c.x_mid,
+            p.get(&format!("{pre}norm2"))?,
+            &c.rstd2,
+            &dh2,
+            t,
+            d,
+            &mut dx_mid,
+            &mut dg_sink,
+        );
+
+        let mut datt = vec![0.0f32; t * d];
+        linear_bwd_x(&dx_mid, p.get(&format!("{pre}wo"))?, t, d, d, &mut datt);
+
+        let mut dq = vec![0.0f32; t * d];
+        let mut dk = vec![0.0f32; t * dkv];
+        let mut dv = vec![0.0f32; t * dkv];
+        attention_bwd(&datt, &c.q, &c.k, &c.v, &c.probs, bv, hq, hkv, hd, &mut dq, &mut dk, &mut dv);
+        rope_apply(&mut dq, bv.pos, t, hq, hd, -1.0);
+        rope_apply(&mut dk, bv.pos, t, hkv, hd, -1.0);
+
+        let mut dh1 = vec![0.0f32; t * d];
+        linear_bwd_x(&dq, p.get(&format!("{pre}wq"))?, t, d, d, &mut dh1);
+        linear_bwd_x(&dk, p.get(&format!("{pre}wk"))?, t, d, dkv, &mut dh1);
+        linear_bwd_x(&dv, p.get(&format!("{pre}wv"))?, t, d, dkv, &mut dh1);
+
+        // the adapter chain: the only trainable weights, reduced per slice
+        // in fixed slice order so each tenant's grads see exactly its own
+        // tokens in the serial accumulation order
+        let i_qa = p.id(&format!("{pre}wq_a"))?;
+        let i_qb = p.id(&format!("{pre}wq_b"))?;
+        let i_va = p.id(&format!("{pre}wv_a"))?;
+        let i_vb = p.id(&format!("{pre}wv_b"))?;
+        let hq_a = c.hq_a.as_ref().expect("lora cache");
+        let hv_a = c.hv_a.as_ref().expect("lora cache");
+        for (ki, sl) in slices.iter().enumerate() {
+            let lo = sl.row_start * seq;
+            let hi = (sl.row_start + sl.rows) * seq;
+            let ts = hi - lo;
+            let ad = &adapters[ki];
+            let g = &mut tenant_grads[ki];
+
+            let mut dq_s = dq[lo * d..hi * d].to_vec();
+            for gv in dq_s.iter_mut() {
+                *gv *= scale;
+            }
+            linear_bwd_w(&dq_s, &hq_a[lo * r..hi * r], ts, r, d, &mut g[i_qb]);
+            let mut dhq_a = vec![0.0f32; ts * r];
+            linear_bwd_x(&dq_s, ad.params[i_qb].as_f32()?, ts, r, d, &mut dhq_a);
+            linear_bwd_w(&dhq_a, &c.h1[lo * d..hi * d], ts, d, r, &mut g[i_qa]);
+            linear_bwd_x(&dhq_a, ad.params[i_qa].as_f32()?, ts, d, r, &mut dh1[lo * d..hi * d]);
+
+            let mut dv_s = dv[lo * dkv..hi * dkv].to_vec();
+            for gv in dv_s.iter_mut() {
+                *gv *= scale;
+            }
+            linear_bwd_w(&dv_s, &hv_a[lo * r..hi * r], ts, r, dkv, &mut g[i_vb]);
+            let mut dhv_a = vec![0.0f32; ts * r];
+            linear_bwd_x(&dv_s, ad.params[i_vb].as_f32()?, ts, r, dkv, &mut dhv_a);
+            linear_bwd_w(&dhv_a, &c.h1[lo * d..hi * d], ts, d, r, &mut g[i_va]);
+            linear_bwd_x(&dhv_a, ad.params[i_va].as_f32()?, ts, d, r, &mut dh1[lo * d..hi * d]);
+        }
+
+        let mut dx_in = dx_mid;
+        dg_sink.iter_mut().for_each(|g| *g = 0.0);
+        rmsnorm_bwd(
+            &c.x_in,
+            p.get(&format!("{pre}norm1"))?,
+            &c.rstd1,
+            &dh1,
+            t,
+            d,
+            &mut dx_in,
+            &mut dg_sink,
+        );
+        dx = dx_in;
+    }
+    // the embedding is frozen under LoRA: the remaining dx is discarded
+    let bwd_s = t_bwd.elapsed().as_secs_f64();
+
+    // ---- per-tenant grad-norm + optimizer, each at its own coordinates --
+    let t_optim = Instant::now();
+    let mut outs = Vec::with_capacity(slices.len());
+    for (ki, sl) in slices.iter().enumerate() {
+        let g = &tenant_grads[ki];
+        let mut sq = 0.0f32;
+        for gi in g {
+            for &xv in gi {
+                sq += xv * xv;
+            }
+        }
+        let grad_norm = sq.sqrt();
+
+        let ad = &mut *adapters[ki];
+        for i in 0..nt {
+            let lr_p = match classify_param(&state.names[i]) {
+                ParamGroup::LoraB => sl.lr_b,
+                _ => sl.lr,
+            };
+            let param = ad.params[i].as_f32_mut()?;
+            adamw_update(
+                param,
+                &g[i],
+                &mut ad.slot_m[i],
+                &mut ad.slot_v[i],
+                lr_p,
+                sl.step as f32,
+                WEIGHT_DECAY,
+            );
+        }
+        let (loss_sum, n_valid) = tenant_fwd[ki];
+        outs.push(StepOut {
+            loss: loss_sum / n_valid.max(1) as f32,
+            grad_norm,
+            n_tokens: n_valid as f32,
+            phases: StepPhases::default(),
+        });
+    }
+    let optim_s = t_optim.elapsed().as_secs_f64();
+    Ok((outs, StepPhases { fwd_s, bwd_s, optim_s }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1211,6 +1629,200 @@ mod tests {
         for (t, before) in ws.params[ws.n_trainable..].iter().zip(&base_before) {
             assert_eq!(t.as_f32().unwrap(), &before[..], "shared base weights moved");
         }
+    }
+
+    /// The intra-step contract in miniature, on a *ragged* round: tenant A
+    /// contributes 1 row and tenant B 2 rows to one concatenated batch; a
+    /// single shared base pass with per-slice adapter epilogues must land
+    /// bit-for-bit where each tenant's serial swap-in/train/swap-out run
+    /// lands — losses, grad norms, adapter weights and optimizer slots.
+    #[test]
+    fn fused_step_matches_serial_bitwise_with_ragged_slices() {
+        let lora = LoraCfg { rank: 2, alpha: 4.0 };
+        let base_seed = 11;
+        let b = batch();
+        let seq = b.5;
+
+        // tenant A trains on row 0 only; tenant B on both rows
+        let a_view = BatchView {
+            tokens: &b.0[..seq],
+            targets: &b.1[..seq],
+            seg: &b.2[..seq],
+            pos: &b.3[..seq],
+            bsz: 1,
+            seq,
+        };
+        let cat = |v: &Vec<i32>| {
+            let mut out = v[..seq].to_vec();
+            out.extend_from_slice(v);
+            out
+        };
+        let (ct, cg, cs, cp) = (cat(&b.0), cat(&b.1), cat(&b.2), cat(&b.3));
+        let concat = BatchView { tokens: &ct, targets: &cg, seg: &cs, pos: &cp, bsz: 3, seq };
+
+        let serial = |seed: i32, view: &BatchView, steps: u64, lr: f32, lr_b: f32| {
+            let mut st = init_state(dims(), Some(lora), base_seed);
+            let mut ad = init_adapter(dims(), lora, seed);
+            swap_adapter(&mut st, &mut ad).unwrap();
+            let mut outs = Vec::new();
+            for step in 1..=steps {
+                outs.push(train_step(&mut st, view, false, step, lr, lr_b).unwrap());
+            }
+            swap_adapter(&mut st, &mut ad).unwrap();
+            (outs, ad)
+        };
+        // tenant B runs LoRA+ (lr_b != lr) to exercise the dual-LR path
+        let (sa, ada) = serial(100, &a_view, 4, 5e-3, 5e-3);
+        let (sb, adb) = serial(200, &bv(&b), 4, 5e-3, 8e-3);
+
+        let ws = init_state(dims(), Some(lora), base_seed);
+        let mut t1 = init_adapter(dims(), lora, 100);
+        let mut t2 = init_adapter(dims(), lora, 200);
+        let mut fa = Vec::new();
+        let mut fb = Vec::new();
+        for step in 1..=4u64 {
+            let slices = [
+                FusedSlice { row_start: 0, rows: 1, step, lr: 5e-3, lr_b: 5e-3 },
+                FusedSlice { row_start: 1, rows: 2, step, lr: 5e-3, lr_b: 8e-3 },
+            ];
+            let mut ads = [&mut t1, &mut t2];
+            let (outs, _) = fused_train_step(&ws, &mut ads, &concat, &slices).unwrap();
+            assert_eq!(outs.len(), 2);
+            fa.push(outs[0]);
+            fb.push(outs[1]);
+        }
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for (fused, serial) in [(&fa, &sa), (&fb, &sb)] {
+            for (fo, so) in fused.iter().zip(serial.iter()) {
+                assert_eq!(fo.loss.to_bits(), so.loss.to_bits(), "loss diverges");
+                assert_eq!(fo.grad_norm.to_bits(), so.grad_norm.to_bits(), "grad_norm diverges");
+                assert_eq!(fo.n_tokens, so.n_tokens);
+            }
+        }
+        for (fused, serial) in [(&t1, &ada), (&t2, &adb)] {
+            for i in 0..fused.params.len() {
+                assert_eq!(
+                    bits(fused.params[i].as_f32().unwrap()),
+                    bits(serial.params[i].as_f32().unwrap()),
+                    "adapter weights diverge at {}",
+                    fused.names[i]
+                );
+                assert_eq!(bits(&fused.slot_m[i]), bits(&serial.slot_m[i]), "slot_m diverges");
+                assert_eq!(bits(&fused.slot_v[i]), bits(&serial.slot_v[i]), "slot_v diverges");
+            }
+        }
+    }
+
+    /// A mixed round: tenant A is mid-schedule (optimizer step 3) while
+    /// tenant B joins at step 1 with a different learning rate. Each slice
+    /// carries its own `(step, lr, lr_b)`, so the fused round must land
+    /// exactly where the two serial schedules land. Tenant A's warm-up
+    /// runs through single-slice fused rounds, which pins the degenerate
+    /// one-tenant fused path to serial bits as well.
+    #[test]
+    fn fused_step_handles_mixed_step_rounds() {
+        let lora = LoraCfg { rank: 2, alpha: 4.0 };
+        let base_seed = 11;
+        let b = batch();
+        let seq = b.5;
+        let a_view = BatchView {
+            tokens: &b.0[..seq],
+            targets: &b.1[..seq],
+            seg: &b.2[..seq],
+            pos: &b.3[..seq],
+            bsz: 1,
+            seq,
+        };
+        let cat = |v: &Vec<i32>| {
+            let mut out = v[..seq].to_vec();
+            out.extend_from_slice(v);
+            out
+        };
+        let (ct, cg, cs, cp) = (cat(&b.0), cat(&b.1), cat(&b.2), cat(&b.3));
+        let concat = BatchView { tokens: &ct, targets: &cg, seg: &cs, pos: &cp, bsz: 3, seq };
+
+        // serial oracles: A takes 3 steps at lr 5e-3, B one step at lr 2e-3
+        let serial = |seed: i32, view: &BatchView, steps: u64, lr: f32| {
+            let mut st = init_state(dims(), Some(lora), base_seed);
+            let mut ad = init_adapter(dims(), lora, seed);
+            swap_adapter(&mut st, &mut ad).unwrap();
+            let mut losses = Vec::new();
+            for step in 1..=steps {
+                losses.push(train_step(&mut st, view, false, step, lr, lr).unwrap().loss);
+            }
+            swap_adapter(&mut st, &mut ad).unwrap();
+            (losses, ad)
+        };
+        let (sa, ada) = serial(100, &a_view, 3, 5e-3);
+        let (sb, adb) = serial(200, &bv(&b), 1, 2e-3);
+
+        let ws = init_state(dims(), Some(lora), base_seed);
+        let mut t1 = init_adapter(dims(), lora, 100);
+        let mut t2 = init_adapter(dims(), lora, 200);
+        let mut fa = Vec::new();
+        // warm tenant A up two steps through single-slice fused rounds
+        for step in 1..=2u64 {
+            let slices = [FusedSlice { row_start: 0, rows: 1, step, lr: 5e-3, lr_b: 5e-3 }];
+            let mut ads = [&mut t1];
+            let (outs, _) = fused_train_step(&ws, &mut ads, &a_view, &slices).unwrap();
+            fa.push(outs[0].loss);
+        }
+        // the mixed round: A at step 3, B at step 1 with its own lr
+        let slices = [
+            FusedSlice { row_start: 0, rows: 1, step: 3, lr: 5e-3, lr_b: 5e-3 },
+            FusedSlice { row_start: 1, rows: 2, step: 1, lr: 2e-3, lr_b: 2e-3 },
+        ];
+        let mut ads = [&mut t1, &mut t2];
+        let (outs, _) = fused_train_step(&ws, &mut ads, &concat, &slices).unwrap();
+        fa.push(outs[0].loss);
+        let fb = vec![outs[1].loss];
+
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&fa), bits(&sa), "tenant A mixed-round losses diverge");
+        assert_eq!(bits(&fb), bits(&sb), "tenant B mixed-round losses diverge");
+        for (fused, serial) in [(&t1, &ada), (&t2, &adb)] {
+            for i in 0..fused.params.len() {
+                assert_eq!(
+                    bits(fused.params[i].as_f32().unwrap()),
+                    bits(serial.params[i].as_f32().unwrap()),
+                    "adapter weights diverge at {}",
+                    fused.names[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_step_rejects_bad_inputs() {
+        let lora = LoraCfg { rank: 2, alpha: 4.0 };
+        let b = batch();
+        let view = bv(&b);
+        let sl = |row_start, rows, step| FusedSlice { row_start, rows, step, lr: 1e-3, lr_b: 1e-3 };
+
+        // a full-FT workspace has no adapter seam
+        let full = init_state(dims(), None, 1);
+        let mut ad = init_adapter(dims(), lora, 1);
+        let mut ads = [&mut ad];
+        assert!(fused_train_step(&full, &mut ads, &view, &[sl(0, 2, 1)]).is_err());
+
+        let ws = init_state(dims(), Some(lora), 1);
+        // coverage mismatch: slices must tile the concat batch exactly
+        let mut a1 = init_adapter(dims(), lora, 1);
+        let mut ads = [&mut a1];
+        assert!(fused_train_step(&ws, &mut ads, &view, &[sl(0, 1, 1)]).is_err());
+        // non-contiguous slices
+        let mut a1 = init_adapter(dims(), lora, 1);
+        let mut a2 = init_adapter(dims(), lora, 2);
+        let mut ads = [&mut a1, &mut a2];
+        assert!(fused_train_step(&ws, &mut ads, &view, &[sl(0, 1, 1), sl(2, 1, 1)]).is_err());
+        // 0-based step
+        let mut a1 = init_adapter(dims(), lora, 1);
+        let mut ads = [&mut a1];
+        assert!(fused_train_step(&ws, &mut ads, &view, &[sl(0, 2, 0)]).is_err());
+        // adapter/slice count mismatch
+        let mut a1 = init_adapter(dims(), lora, 1);
+        let mut ads = [&mut a1];
+        assert!(fused_train_step(&ws, &mut ads, &view, &[sl(0, 1, 1), sl(1, 1, 1)]).is_err());
     }
 
     #[test]

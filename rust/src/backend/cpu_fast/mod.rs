@@ -37,7 +37,9 @@ use super::cpu::{
     self, as_cpu_state, as_cpu_state_mut, batch_view, check_geometry, family_lora, reference_dims,
     REF_BATCH, REF_SEQ,
 };
-use super::{AdapterState, Backend, DeviceBatch, DeviceState, RowGrad, StepOutputs};
+use super::{
+    AdapterState, Backend, DeviceBatch, DeviceState, FusedOutputs, FusedSlice, RowGrad, StepOutputs,
+};
 use crate::backend::cpu::model::ModelDims;
 use crate::batching::Batch;
 use crate::manifest::{ExecutableSpec, Manifest};
@@ -174,6 +176,45 @@ impl Backend for FastCpuBackend {
 
     fn adapter_params(&self, adapter: &AdapterState) -> Result<Vec<HostTensor>> {
         cpu::cpu_adapter_params(adapter)
+    }
+
+    fn supports_fused_step(&self) -> bool {
+        true
+    }
+
+    fn fused_step(
+        &self,
+        train_name: &str,
+        state: &DeviceState,
+        adapters: &mut [AdapterState],
+        batch: &Batch,
+        slices: &[FusedSlice],
+    ) -> Result<FusedOutputs> {
+        let spec = self.spec(train_name)?;
+        cpu::check_fused_batch(spec, batch, slices)?;
+        let s = as_cpu_state(state)?;
+        if s.lora != family_lora(&spec.family) {
+            bail!(
+                "state family mismatch: executable '{train_name}' expects lora={:?}, state has {:?}",
+                family_lora(&spec.family),
+                s.lora
+            );
+        }
+        let view = batch_view(batch)?;
+        let mut ads = cpu::cpu_adapters_mut(adapters);
+        let (outs, phases) = model::fused_train_step(s, &mut ads, &view, slices, &self.exec)?;
+        Ok(FusedOutputs {
+            tenants: outs
+                .into_iter()
+                .map(|o| StepOutputs {
+                    loss: o.loss,
+                    grad_norm: o.grad_norm,
+                    n_tokens: o.n_tokens,
+                    phases: o.phases,
+                })
+                .collect(),
+            phases,
+        })
     }
 
     fn flat_grad_len(&self, state: &DeviceState) -> Result<usize> {

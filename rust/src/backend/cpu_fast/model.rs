@@ -29,8 +29,10 @@ use super::cce::{cce_bwd_fused, cce_loss_fwd};
 use super::kernels as k;
 use super::pool::Exec;
 use super::scratch::Lease;
-use crate::backend::cpu::model::{BatchView, CpuState, ParamIdx, StepOut, WEIGHT_DECAY};
-use crate::backend::StepPhases;
+use crate::backend::cpu::model::{
+    check_fused_inputs, BatchView, CpuAdapter, CpuState, ParamIdx, StepOut, WEIGHT_DECAY,
+};
+use crate::backend::{FusedSlice, StepPhases};
 use crate::optim::{classify_param, ParamGroup};
 use anyhow::{anyhow, bail, ensure, Result};
 use std::time::Instant;
@@ -482,6 +484,417 @@ pub fn train_step(
     Ok(StepOut { loss, grad_norm, n_tokens: n_valid as f32, phases })
 }
 
+/// One intra-step fused round on the fast path (DESIGN.md §11): the same
+/// single-shared-base-pass contract as the reference
+/// `cpu::model::fused_train_step`, executed through the pooled/tiled
+/// kernels with every working buffer leased from the arena — so a warm
+/// arena serves whole fused rounds with zero new heap allocations, and
+/// the peak lease scales with the *concatenated* batch (one set of
+/// activations for all tenants), not with the tenant count times a
+/// per-tenant batch.
+///
+/// Bitwise parity with the fast serial path holds for the same reason as
+/// the reference: every full-batch kernel here is per-row pure (tiling
+/// partitions rows across threads but never reassociates within a row),
+/// and the order-sensitive reductions — CCE loss, adapter weight
+/// gradients, grad-norm, AdamW — run per slice with the same kernels on
+/// the same sub-inputs the serial run sees, in fixed slice order.
+pub fn fused_train_step(
+    state: &CpuState,
+    adapters: &mut [&mut CpuAdapter],
+    bv: &BatchView,
+    slices: &[FusedSlice],
+    ex: &Exec,
+) -> Result<(Vec<StepOut>, StepPhases)> {
+    check_fused_inputs(state, adapters, bv, slices)?;
+    let dims = &state.dims;
+    let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
+    let (hq, hkv, hd) = (dims.n_heads, dims.n_kv_heads, dims.head_dim());
+    let dkv = dims.d_kv();
+    let (t, seq) = (bv.bsz * bv.seq, bv.seq);
+    let p = ParamIdx::new(&state.names, &state.params);
+    let lc_cfg = state.lora.expect("checked by check_fused_inputs");
+    let (r, scale) = (lc_cfg.rank, lc_cfg.scale());
+    let nt = state.n_trainable;
+
+    for (i, &tok) in bv.tokens.iter().enumerate() {
+        if tok < 0 || tok as usize >= v {
+            bail!("token id {tok} at position {i} out of vocab range 0..{v}");
+        }
+    }
+    for (i, &tgt) in bv.targets.iter().enumerate() {
+        if tgt >= v as i32 {
+            bail!("target id {tgt} at position {i} out of vocab range");
+        }
+    }
+
+    // ---- forward: one shared base pass, per-slice adapter epilogues ----
+    let t_fwd = Instant::now();
+    let embed = p.get("embed")?;
+    let mut x = ex.arena().lease_uninit(t * d);
+    for ti in 0..t {
+        let tok = bv.tokens[ti] as usize;
+        x[ti * d..(ti + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+    }
+
+    let mut layer_caches: Vec<LayerCache> = Vec::with_capacity(dims.n_layers);
+    for l in 0..dims.n_layers {
+        let pre = format!("layer_{l:02}.");
+        let x_in = x;
+
+        let mut h1 = ex.arena().lease_uninit(t * d);
+        let mut rstd1 = ex.arena().lease_uninit(t);
+        let mut q = ex.arena().lease_uninit(t * d);
+        let mut kk = ex.arena().lease_uninit(t * dkv);
+        let mut vv = ex.arena().lease_uninit(t * dkv);
+        k::fused_rmsnorm_qkv(
+            &x_in,
+            p.get(&format!("{pre}norm1"))?,
+            p.get(&format!("{pre}wq"))?,
+            p.get(&format!("{pre}wk"))?,
+            p.get(&format!("{pre}wv"))?,
+            t,
+            d,
+            dkv,
+            &mut h1,
+            &mut rstd1,
+            &mut q,
+            &mut kk,
+            &mut vv,
+            ex,
+        );
+
+        let i_qa = p.id(&format!("{pre}wq_a"))?;
+        let i_qb = p.id(&format!("{pre}wq_b"))?;
+        let i_va = p.id(&format!("{pre}wv_a"))?;
+        let i_vb = p.id(&format!("{pre}wv_b"))?;
+        let mut hq_a = ex.arena().lease_uninit(t * r);
+        let mut hv_a = ex.arena().lease_uninit(t * r);
+        for (ki, sl) in slices.iter().enumerate() {
+            let lo = sl.row_start * seq;
+            let hi = (sl.row_start + sl.rows) * seq;
+            let ts = hi - lo;
+            let ad = &adapters[ki];
+            k::lora_linear(
+                &h1[lo * d..hi * d],
+                ad.params[i_qa].as_f32()?,
+                ad.params[i_qb].as_f32()?,
+                ts,
+                d,
+                r,
+                d,
+                scale,
+                &mut hq_a[lo * r..hi * r],
+                &mut q[lo * d..hi * d],
+                ex,
+            );
+            k::lora_linear(
+                &h1[lo * d..hi * d],
+                ad.params[i_va].as_f32()?,
+                ad.params[i_vb].as_f32()?,
+                ts,
+                d,
+                r,
+                dkv,
+                scale,
+                &mut hv_a[lo * r..hi * r],
+                &mut vv[lo * dkv..hi * dkv],
+                ex,
+            );
+        }
+
+        k::rope(&mut q, bv.pos, t, hq, hd, 1.0, ex);
+        k::rope(&mut kk, bv.pos, t, hkv, hd, 1.0, ex);
+
+        let mut att = ex.arena().lease_uninit(t * d);
+        let mut lse = ex.arena().lease_uninit(bv.bsz * hq * seq);
+        flash_attention_fwd(
+            &q, &kk, &vv, bv.seg, bv.bsz, seq, hq, hkv, hd, &mut att, &mut lse, ex,
+        );
+
+        let mut x_mid = ex.arena().lease_uninit(t * d);
+        k::matmul_residual(&att, p.get(&format!("{pre}wo"))?, &x_in, t, d, d, &mut x_mid, ex);
+
+        let mut h2 = ex.arena().lease_uninit(t * d);
+        let mut rstd2 = ex.arena().lease_uninit(t);
+        let mut gate = ex.arena().lease_uninit(t * f);
+        let mut up = ex.arena().lease_uninit(t * f);
+        let mut y = ex.arena().lease_uninit(t * f);
+        k::fused_rmsnorm_swiglu(
+            &x_mid,
+            p.get(&format!("{pre}norm2"))?,
+            p.get(&format!("{pre}w_gate"))?,
+            p.get(&format!("{pre}w_up"))?,
+            t,
+            d,
+            f,
+            &mut h2,
+            &mut rstd2,
+            &mut gate,
+            &mut up,
+            &mut y,
+            ex,
+        );
+
+        let mut x_out = ex.arena().lease_uninit(t * d);
+        k::matmul_residual(&y, p.get(&format!("{pre}w_down"))?, &x_mid, t, f, d, &mut x_out, ex);
+
+        layer_caches.push(LayerCache {
+            x_in,
+            h1,
+            rstd1,
+            q,
+            kk,
+            v: vv,
+            hq_a: Some(hq_a),
+            hv_a: Some(hv_a),
+            att,
+            lse,
+            x_mid,
+            h2,
+            rstd2,
+            gate,
+            up,
+            y,
+        });
+        x = x_out;
+    }
+
+    let x_f = x;
+    let mut hf = ex.arena().lease_uninit(t * d);
+    let mut rstd_f = ex.arena().lease_uninit(t);
+    k::rmsnorm(&x_f, p.get("norm_f")?, t, d, &mut hf, &mut rstd_f, ex);
+    // the loss reduction is order-sensitive: run it per slice so every
+    // tenant gets exactly its serial (loss_sum, n_valid)
+    let mut lse_f = ex.arena().lease_uninit(t);
+    let mut tenant_fwd: Vec<(f32, usize)> = Vec::with_capacity(slices.len());
+    for sl in slices {
+        let lo = sl.row_start * seq;
+        let hi = (sl.row_start + sl.rows) * seq;
+        let (loss_sum, n_valid) = cce_loss_fwd(
+            &hf[lo * d..hi * d],
+            p.get("w_head")?,
+            &bv.targets[lo..hi],
+            hi - lo,
+            d,
+            v,
+            &mut lse_f[lo..hi],
+            ex,
+        );
+        tenant_fwd.push((loss_sum, n_valid));
+    }
+    let fwd_s = t_fwd.elapsed().as_secs_f64();
+
+    // ---- backward: one shared base pass, per-slice adapter gradients ----
+    let t_bwd = Instant::now();
+    let mut tenant_grads: Vec<Vec<Lease>> = (0..slices.len())
+        .map(|_| {
+            state.params[..nt]
+                .iter()
+                .map(|tn| ex.arena().lease(tn.elements()))
+                .collect()
+        })
+        .collect();
+    // every norm is frozen under LoRA: dgamma goes to a discarded sink
+    let mut dg_sink = ex.arena().lease(d);
+
+    // CCE backward per slice, each normalized by its tenant's n_valid;
+    // w_head is frozen under LoRA so no weight gradient is formed
+    let mut dhf = ex.arena().lease(t * d);
+    for (ki, sl) in slices.iter().enumerate() {
+        let lo = sl.row_start * seq;
+        let hi = (sl.row_start + sl.rows) * seq;
+        cce_bwd_fused(
+            &hf[lo * d..hi * d],
+            p.get("w_head")?,
+            &bv.targets[lo..hi],
+            &lse_f[lo..hi],
+            hi - lo,
+            d,
+            v,
+            tenant_fwd[ki].1,
+            None,
+            &mut dhf[lo * d..hi * d],
+            ex,
+        );
+    }
+
+    let mut dx = ex.arena().lease(t * d);
+    k::rmsnorm_bwd(&x_f, p.get("norm_f")?, &rstd_f, &dhf, t, d, &mut dx, &mut dg_sink, ex);
+
+    for l in (0..dims.n_layers).rev() {
+        let pre = format!("layer_{l:02}.");
+        let c = &layer_caches[l];
+
+        let mut dy = ex.arena().lease(t * f);
+        k::matmul_bwd_x(&dx, p.get(&format!("{pre}w_down"))?, t, f, d, &mut dy, ex);
+
+        let mut dgate = ex.arena().lease(t * f);
+        let mut dup = ex.arena().lease(t * f);
+        k::swiglu_bwd(&c.gate, &c.up, &dy, &mut dgate, &mut dup, ex);
+
+        let mut dh2 = ex.arena().lease(t * d);
+        k::matmul_bwd_x(&dgate, p.get(&format!("{pre}w_gate"))?, t, d, f, &mut dh2, ex);
+        k::matmul_bwd_x(&dup, p.get(&format!("{pre}w_up"))?, t, d, f, &mut dh2, ex);
+
+        let mut dx_mid = dx;
+        k::rmsnorm_bwd(
+            &c.x_mid,
+            p.get(&format!("{pre}norm2"))?,
+            &c.rstd2,
+            &dh2,
+            t,
+            d,
+            &mut dx_mid,
+            &mut dg_sink,
+            ex,
+        );
+
+        let mut datt = ex.arena().lease(t * d);
+        k::matmul_bwd_x(&dx_mid, p.get(&format!("{pre}wo"))?, t, d, d, &mut datt, ex);
+
+        let mut dq = ex.arena().lease(t * d);
+        let mut dk = ex.arena().lease(t * dkv);
+        let mut dv = ex.arena().lease(t * dkv);
+        flash_attention_bwd(
+            &datt, &c.q, &c.kk, &c.v, &c.att, &c.lse, bv.seg, bv.bsz, seq, hq, hkv, hd,
+            &mut dq, &mut dk, &mut dv, ex,
+        );
+        k::rope(&mut dq, bv.pos, t, hq, hd, -1.0, ex);
+        k::rope(&mut dk, bv.pos, t, hkv, hd, -1.0, ex);
+
+        let mut dh1 = ex.arena().lease(t * d);
+        k::matmul_bwd_x(&dq, p.get(&format!("{pre}wq"))?, t, d, d, &mut dh1, ex);
+        k::matmul_bwd_x(&dk, p.get(&format!("{pre}wk"))?, t, d, dkv, &mut dh1, ex);
+        k::matmul_bwd_x(&dv, p.get(&format!("{pre}wv"))?, t, d, dkv, &mut dh1, ex);
+
+        // adapter chain: the only trainable gradients, reduced per slice
+        let i_qa = p.id(&format!("{pre}wq_a"))?;
+        let i_qb = p.id(&format!("{pre}wq_b"))?;
+        let i_va = p.id(&format!("{pre}wv_a"))?;
+        let i_vb = p.id(&format!("{pre}wv_b"))?;
+        let hq_a = c.hq_a.as_ref().expect("lora cache");
+        let hv_a = c.hv_a.as_ref().expect("lora cache");
+        let mut dq_s = ex.arena().lease_uninit(t * d);
+        for (o, &g) in dq_s.iter_mut().zip(dq.iter()) {
+            *o = scale * g;
+        }
+        let mut dv_s = ex.arena().lease_uninit(t * dkv);
+        for (o, &g) in dv_s.iter_mut().zip(dv.iter()) {
+            *o = scale * g;
+        }
+        let mut dhq_a = ex.arena().lease(t * r);
+        let mut dhv_a = ex.arena().lease(t * r);
+        for (ki, sl) in slices.iter().enumerate() {
+            let lo = sl.row_start * seq;
+            let hi = (sl.row_start + sl.rows) * seq;
+            let ts = hi - lo;
+            let ad = &adapters[ki];
+            let g = &mut tenant_grads[ki];
+
+            k::matmul_bwd_w(&dq_s[lo * d..hi * d], &hq_a[lo * r..hi * r], ts, r, d, &mut g[i_qb], ex);
+            k::matmul_bwd_x(
+                &dq_s[lo * d..hi * d],
+                ad.params[i_qb].as_f32()?,
+                ts,
+                r,
+                d,
+                &mut dhq_a[lo * r..hi * r],
+                ex,
+            );
+            k::matmul_bwd_w(&dhq_a[lo * r..hi * r], &c.h1[lo * d..hi * d], ts, d, r, &mut g[i_qa], ex);
+            k::matmul_bwd_x(
+                &dhq_a[lo * r..hi * r],
+                ad.params[i_qa].as_f32()?,
+                ts,
+                d,
+                r,
+                &mut dh1[lo * d..hi * d],
+                ex,
+            );
+
+            k::matmul_bwd_w(&dv_s[lo * dkv..hi * dkv], &hv_a[lo * r..hi * r], ts, r, dkv, &mut g[i_vb], ex);
+            k::matmul_bwd_x(
+                &dv_s[lo * dkv..hi * dkv],
+                ad.params[i_vb].as_f32()?,
+                ts,
+                r,
+                dkv,
+                &mut dhv_a[lo * r..hi * r],
+                ex,
+            );
+            k::matmul_bwd_w(&dhv_a[lo * r..hi * r], &c.h1[lo * d..hi * d], ts, d, r, &mut g[i_va], ex);
+            k::matmul_bwd_x(
+                &dhv_a[lo * r..hi * r],
+                ad.params[i_va].as_f32()?,
+                ts,
+                d,
+                r,
+                &mut dh1[lo * d..hi * d],
+                ex,
+            );
+        }
+
+        let mut dx_in = dx_mid;
+        k::rmsnorm_bwd(
+            &c.x_in,
+            p.get(&format!("{pre}norm1"))?,
+            &c.rstd1,
+            &dh1,
+            t,
+            d,
+            &mut dx_in,
+            &mut dg_sink,
+            ex,
+        );
+        dx = dx_in;
+    }
+    // the embedding is frozen under LoRA: the remaining dx is discarded
+    let bwd_s = t_bwd.elapsed().as_secs_f64();
+
+    // ---- per-tenant grad-norm + optimizer, each at its own coordinates --
+    let t_optim = Instant::now();
+    let mut outs = Vec::with_capacity(slices.len());
+    for (ki, sl) in slices.iter().enumerate() {
+        let g = &tenant_grads[ki];
+        let mut sq = 0.0f32;
+        for gi in g {
+            for &xv in gi.iter() {
+                sq += xv * xv;
+            }
+        }
+        let grad_norm = sq.sqrt();
+
+        let ad = &mut *adapters[ki];
+        for i in 0..nt {
+            let lr_p = match classify_param(&state.names[i]) {
+                ParamGroup::LoraB => sl.lr_b,
+                _ => sl.lr,
+            };
+            let param = ad.params[i].as_f32_mut()?;
+            k::adamw(
+                param,
+                &g[i],
+                &mut ad.slot_m[i],
+                &mut ad.slot_v[i],
+                lr_p,
+                sl.step as f32,
+                WEIGHT_DECAY,
+                ex,
+            );
+        }
+        let (loss_sum, n_valid) = tenant_fwd[ki];
+        outs.push(StepOut {
+            loss: loss_sum / n_valid.max(1) as f32,
+            grad_norm,
+            n_tokens: n_valid as f32,
+            phases: StepPhases::default(),
+        });
+    }
+    let optim_s = t_optim.elapsed().as_secs_f64();
+    Ok((outs, StepPhases { fwd_s, bwd_s, optim_s }))
+}
+
 /// Data-parallel shard gradient (DESIGN.md §10): forward + backward on a
 /// single-row view with the CCE normalizer forced to `global_n_valid`, so
 /// per-row gradients tree-reduce to the full-batch mean-loss gradient.
@@ -711,6 +1124,133 @@ mod tests {
             train_step(&mut state, &bv(&b), false, step, 1e-3, 1e-3, &ex).unwrap();
         }
         assert_eq!(ex.arena().heap_allocs(), cold, "steady-state steps must not allocate");
+    }
+
+    /// Fused intra-step round vs the fast serial swap-in/train/swap-out
+    /// path, on a ragged round (1-row + 2-row tenants) with LoRA+ dual LR:
+    /// losses, grad norms, adapter weights and optimizer slots must match
+    /// bit-for-bit (the DESIGN.md §11 separability contract on this
+    /// backend's pooled/tiled kernels).
+    #[test]
+    fn fused_step_matches_fast_serial_bitwise() {
+        let lora = LoraCfg { rank: 2, alpha: 4.0 };
+        let base_seed = 11;
+        let b = batch();
+        let seq = b.5;
+        let a_view = BatchView {
+            tokens: &b.0[..seq],
+            targets: &b.1[..seq],
+            seg: &b.2[..seq],
+            pos: &b.3[..seq],
+            bsz: 1,
+            seq,
+        };
+        let cat = |v: &Vec<i32>| {
+            let mut out = v[..seq].to_vec();
+            out.extend_from_slice(v);
+            out
+        };
+        let (ct, cg, cs, cp) = (cat(&b.0), cat(&b.1), cat(&b.2), cat(&b.3));
+        let concat = BatchView { tokens: &ct, targets: &cg, seg: &cs, pos: &cp, bsz: 3, seq };
+
+        let ex = Exec::new(2);
+        let serial = |seed: i32, view: &BatchView, steps: u64, lr: f32, lr_b: f32| {
+            let mut st = init_state(dims(), Some(lora), base_seed);
+            let mut ad = refmodel::init_adapter(dims(), lora, seed);
+            refmodel::swap_adapter(&mut st, &mut ad).unwrap();
+            let mut outs = Vec::new();
+            for step in 1..=steps {
+                outs.push(train_step(&mut st, view, false, step, lr, lr_b, &ex).unwrap());
+            }
+            refmodel::swap_adapter(&mut st, &mut ad).unwrap();
+            (outs, ad)
+        };
+        // tenant B runs LoRA+ (lr_b != lr) to exercise the dual-LR path
+        let (sa, ada) = serial(100, &a_view, 4, 5e-3, 5e-3);
+        let (sb, adb) = serial(200, &bv(&b), 4, 5e-3, 8e-3);
+
+        let ws = init_state(dims(), Some(lora), base_seed);
+        let mut t1 = refmodel::init_adapter(dims(), lora, 100);
+        let mut t2 = refmodel::init_adapter(dims(), lora, 200);
+        let mut fa = Vec::new();
+        let mut fb = Vec::new();
+        for step in 1..=4u64 {
+            let slices = [
+                FusedSlice { row_start: 0, rows: 1, step, lr: 5e-3, lr_b: 5e-3 },
+                FusedSlice { row_start: 1, rows: 2, step, lr: 5e-3, lr_b: 8e-3 },
+            ];
+            let mut ads = [&mut t1, &mut t2];
+            let (outs, _) = fused_train_step(&ws, &mut ads, &concat, &slices, &ex).unwrap();
+            assert_eq!(outs.len(), 2);
+            fa.push(outs[0]);
+            fb.push(outs[1]);
+        }
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for (fused, serial) in [(&fa, &sa), (&fb, &sb)] {
+            for (fo, so) in fused.iter().zip(serial.iter()) {
+                assert_eq!(fo.loss.to_bits(), so.loss.to_bits(), "loss diverges");
+                assert_eq!(fo.grad_norm.to_bits(), so.grad_norm.to_bits(), "grad_norm diverges");
+                assert_eq!(fo.n_tokens, so.n_tokens);
+            }
+        }
+        for (fused, serial) in [(&t1, &ada), (&t2, &adb)] {
+            for i in 0..fused.params.len() {
+                assert_eq!(
+                    bits(fused.params[i].as_f32().unwrap()),
+                    bits(serial.params[i].as_f32().unwrap()),
+                    "adapter weights diverge at {}",
+                    fused.names[i]
+                );
+                assert_eq!(bits(&fused.slot_m[i]), bits(&serial.slot_m[i]), "slot_m diverges");
+                assert_eq!(bits(&fused.slot_v[i]), bits(&serial.slot_v[i]), "slot_v diverges");
+            }
+        }
+    }
+
+    /// The fused round keeps the fast backend's thread-count bitwise
+    /// invariance: a two-tenant round at 1, 2 and 5 threads produces
+    /// identical step metrics and identical final adapter bits.
+    #[test]
+    fn fused_step_bits_invariant_to_thread_count() {
+        let lora = LoraCfg { rank: 2, alpha: 4.0 };
+        let b = batch();
+        let seq = b.5;
+        let cat = |v: &Vec<i32>| {
+            let mut out = v[..seq].to_vec();
+            out.extend_from_slice(v);
+            out
+        };
+        let (ct, cg, cs, cp) = (cat(&b.0), cat(&b.1), cat(&b.2), cat(&b.3));
+        let run = |threads: usize| {
+            let concat = BatchView { tokens: &ct, targets: &cg, seg: &cs, pos: &cp, bsz: 3, seq };
+            let ex = Exec::new(threads);
+            let ws = init_state(dims(), Some(lora), 3);
+            let mut t1 = refmodel::init_adapter(dims(), lora, 21);
+            let mut t2 = refmodel::init_adapter(dims(), lora, 22);
+            let mut step_bits = Vec::new();
+            for step in 1..=3u64 {
+                let slices = [
+                    FusedSlice { row_start: 0, rows: 1, step, lr: 3e-3, lr_b: 6e-3 },
+                    FusedSlice { row_start: 1, rows: 2, step, lr: 3e-3, lr_b: 6e-3 },
+                ];
+                let mut ads = [&mut t1, &mut t2];
+                let (outs, _) = fused_train_step(&ws, &mut ads, &concat, &slices, &ex).unwrap();
+                for o in &outs {
+                    step_bits.push((o.loss.to_bits(), o.grad_norm.to_bits()));
+                }
+            }
+            let mut param_bits = Vec::new();
+            for ad in [&t1, &t2] {
+                for tn in &ad.params {
+                    param_bits
+                        .push(tn.as_f32().unwrap().iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+                }
+            }
+            (step_bits, param_bits)
+        };
+        let one = run(1);
+        assert_eq!(one, run(2), "threads=2 changed fused-round bits");
+        assert_eq!(one, run(5), "threads=5 changed fused-round bits");
     }
 
     #[test]

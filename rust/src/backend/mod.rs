@@ -111,6 +111,36 @@ pub struct StepOutputs {
     pub phases: StepPhases,
 }
 
+/// One tenant's row-slice of an intra-step fused round (DESIGN.md §11):
+/// which rows of the concatenated batch belong to the tenant, plus the
+/// tenant's own optimizer coordinates for this step. Slices are contiguous,
+/// ordered, and cover the concat batch exactly.
+#[derive(Debug, Clone, Copy)]
+pub struct FusedSlice {
+    /// First batch row (not token) of the tenant's slice.
+    pub row_start: usize,
+    /// Number of batch rows in the slice (tenants may be ragged).
+    pub rows: usize,
+    /// The tenant's 1-based optimizer step for this update.
+    pub step: u64,
+    /// The tenant's learning rate at `step`.
+    pub lr: f32,
+    /// The tenant's LoRA+ B-matrix learning rate (== `lr` without LoRA+).
+    pub lr_b: f32,
+}
+
+/// Result of one intra-step fused round: per-tenant step metrics in slice
+/// order, plus the round's shared per-phase wall-clock breakdown (one base
+/// forward/backward serves every tenant, so phase time is per-round, not
+/// per-tenant — the per-tenant `phases` fields are zeroed).
+#[derive(Debug, Clone)]
+pub struct FusedOutputs {
+    /// Per-tenant metrics, in the same order as the input slices.
+    pub tenants: Vec<StepOutputs>,
+    /// Wall-clock phase breakdown of the whole fused round.
+    pub phases: StepPhases,
+}
+
 /// One shard-row gradient result from [`Backend::grad_row`].
 #[derive(Debug, Clone, Copy)]
 pub struct RowGrad {
@@ -248,6 +278,36 @@ pub trait Backend {
     fn adapter_params(&self, adapter: &AdapterState) -> Result<Vec<HostTensor>> {
         let _ = adapter;
         bail!("the {} backend does not support per-tenant adapters", self.name())
+    }
+
+    /// Whether this backend implements [`Backend::fused_step`]. The serve
+    /// scheduler degrades `--fuse intra` to round fusion when this is
+    /// false, so adding the seam never breaks a backend that lacks it.
+    fn supports_fused_step(&self) -> bool {
+        false
+    }
+
+    /// Run one *intra-step fused* round (DESIGN.md §11): a single shared
+    /// base forward/backward over the concatenated `[B_total, S]` host
+    /// batch, with each tenant's LoRA A/B applied only to its row-slice
+    /// and each tenant's adapter gradients accumulated over a fixed-order
+    /// row-slice reduction, then one optimizer step per tenant at that
+    /// tenant's own `(step, lr, lr_b)`. Because the base weights are
+    /// frozen under LoRA, per-tenant gradients are exactly separable —
+    /// this must be *bitwise* identical to swapping each adapter in and
+    /// training its rows serially at the same seeds. `adapters[k]` pairs
+    /// with `slices[k]`; `state` is the shared workspace and is never
+    /// mutated (only the adapters advance).
+    fn fused_step(
+        &self,
+        train_name: &str,
+        state: &DeviceState,
+        adapters: &mut [AdapterState],
+        batch: &Batch,
+        slices: &[FusedSlice],
+    ) -> Result<FusedOutputs> {
+        let _ = (train_name, state, adapters, batch, slices);
+        bail!("the {} backend does not support intra-step fused rounds", self.name())
     }
 
     // ---- data-parallel seams (DESIGN.md §10) -------------------------

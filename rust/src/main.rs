@@ -26,10 +26,10 @@ use chronicals::coordinator::TrainSummary;
 use chronicals::harness;
 use chronicals::metrics::{MemoryModel, Precision};
 use chronicals::report;
-use chronicals::serve::{ServeConfig, ServeEngine};
+use chronicals::serve::{FuseMode, JobSpec, ServeConfig, ServeEngine};
 use chronicals::session::{
-    BackendSpec, DataSource, PackingStrategy, RunReport, Schedule, SessionBuilder, SessionSpec,
-    Task,
+    BackendSpec, DataSource, LossMode, PackingStrategy, RunReport, Schedule, SessionBuilder,
+    SessionSpec, Task,
 };
 use chronicals::util::commas;
 use chronicals::util::json::Json;
@@ -158,18 +158,22 @@ COMMANDS
   verify   [--steps N] [--backend ...] [--artifacts DIR]
            (the Unsloth-bug demo)
   serve    --spool DIR | --jobs LIST.toml [--out DIR] [--once]
-           [--max-rounds N] [--steps-per-round N] [--fuse on|off]
-           [--base-seed N] [--poll-ms N] [--backend cpu|cpu-fast]
-           [--threads N]
+           [--max-rounds N] [--steps-per-round N] [--fuse on|off|intra]
+           [--base-seed N] [--poll-ms N] [--round-stats FILE]
+           [--backend cpu|cpu-fast] [--threads N]
            multi-tenant fine-tuning service (DESIGN.md §11): admits TOML
            job files (from a watched spool dir and/or a 'jobs = [...]'
            manifest), shares one read-only base across tenants, fuses
            compatible LoRA/LoRA+ jobs into round-robin scheduling rounds
            (bitwise identical to running each job serially; --fuse off is
-           the serial reference path), and streams one deterministic
-           <out>/<id>.report.json per job as it completes; malformed jobs
-           become <out>/<stem>.reject.txt diagnostics instead of crashing
-           the server; --once drains the queue and exits (CI mode)
+           the serial reference path, --fuse intra additionally fuses each
+           round's tenants into one concatenated base forward/backward per
+           quantum step — still bitwise identical), and streams one
+           deterministic <out>/<id>.report.json per job as it completes;
+           malformed jobs become <out>/<stem>.reject.txt diagnostics
+           instead of crashing the server; --once drains the queue and
+           exits (CI mode); --round-stats FILE writes an opt-in timing
+           sidecar (rounds, tenants, rows, per-phase ms) outside --out
 
 BACKENDS
   cpu       (default) pure-Rust deterministic reference — the correctness
@@ -501,6 +505,55 @@ fn check_row(backend: &Arc<dyn Backend>, task: Task, steps: u64) -> Option<Train
     }
 }
 
+/// One fresh serve-ladder rung for `bench --check`: `tenants` LoRA jobs
+/// drained in `--once` mode under `mode` on the fast backend at the check
+/// geometry. Tokens/sec uses the same slot definition the committed
+/// `serve` section records: `tenants × steps × B × S` over wall-clock.
+fn serve_check_row(mode: FuseMode, tenants: usize, steps: u64) -> Option<f64> {
+    let out = std::env::temp_dir().join(format!(
+        "chronicals_bench_check_serve_{}_{mode:?}_{tenants}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&out);
+    let backend: Arc<dyn Backend> =
+        Arc::new(FastCpuBackend::with_geometry(CHECK_BATCH, CHECK_SEQ));
+    let cfg = ServeConfig {
+        out_dir: out.clone(),
+        fuse: mode,
+        steps_per_round: 4,
+        ..Default::default()
+    };
+    let res = (|| {
+        let mut engine = ServeEngine::new(backend, cfg).ok()?;
+        for i in 0..tenants {
+            engine
+                .admit_spec(JobSpec {
+                    id: format!("tenant-{i}"),
+                    task: Task::lora(),
+                    steps,
+                    lr: 5e-3,
+                    seed: 7 + i as i64,
+                    schedule: Schedule::Constant,
+                    loss_mode: LossMode::default(),
+                    data: DataSource::synthetic(40, 3 + i as u64, 48),
+                })
+                .ok()?;
+        }
+        let t0 = std::time::Instant::now();
+        let summary = engine.run().ok()?;
+        let secs = t0.elapsed().as_secs_f64();
+        if summary.completed != tenants || secs <= 0.0 {
+            return None;
+        }
+        Some((tenants as u64 * steps) as f64 * (CHECK_BATCH * CHECK_SEQ) as f64 / secs)
+    })();
+    let _ = std::fs::remove_dir_all(&out);
+    if res.is_none() {
+        eprintln!("  row failed (serve {mode:?} tenants={tenants})");
+    }
+    res
+}
+
 /// `bench --check`: re-measure the headline throughput rows and the
 /// data-parallel worker ladder, then gate them against the committed
 /// repo-root `BENCH_cpu.json` — a fresh number more than
@@ -566,6 +619,24 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
                 r.summary.tokens_per_sec,
             )),
             Err(e) => eprintln!("  row failed (data-parallel workers={workers}): {e:#}"),
+        }
+    }
+    // the serve fusion ladder — same slot-throughput definition the
+    // committed `serve` section records; skipped while that section ships
+    // verified = false, but the rows are produced so flipping the flag
+    // arms the gate with no code change
+    for tenants in [2usize, 4] {
+        for (label, mode) in [
+            ("serial", FuseMode::Off),
+            ("round_fused", FuseMode::Round),
+            ("intra_fused", FuseMode::Intra),
+        ] {
+            if let Some(tps) = serve_check_row(mode, tenants, steps) {
+                fresh.push((
+                    format!("serve.intra_step_fusion.{label}_{tenants}.tokens_per_sec"),
+                    tps,
+                ));
+            }
         }
     }
 
@@ -672,10 +743,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .transpose()?;
     let fuse = match args.get("fuse") {
-        None => true,
-        Some("on") | Some("true") => true,
-        Some("off") | Some("false") => false,
-        Some(other) => bail!("invalid --fuse '{other}' (expected on | off)"),
+        None => FuseMode::Round,
+        Some("on") | Some("true") => FuseMode::Round,
+        Some("off") | Some("false") => FuseMode::Off,
+        Some("intra") => FuseMode::Intra,
+        Some(other) => bail!("invalid --fuse '{other}' (expected on | off | intra)"),
     };
     let base_seed: i32 = match args.get("base-seed") {
         Some(v) => v
@@ -693,12 +765,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fuse,
         base_seed,
         poll_ms: args.u64_or("poll-ms", 500),
+        round_stats: args.get("round-stats").map(std::path::PathBuf::from),
     };
     let backend = load_backend(args)?;
     println!(
         "serve: {} backend, fusion {}, {} steps/round, base seed {}{}",
         backend.name(),
-        if cfg.fuse { "on" } else { "off" },
+        match cfg.fuse {
+            FuseMode::Off => "off",
+            FuseMode::Round => "on",
+            FuseMode::Intra => "intra",
+        },
         cfg.steps_per_round,
         cfg.base_seed,
         if cfg.once { ", --once (drain and exit)" } else { ", watching for jobs" },
@@ -707,12 +784,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut engine = ServeEngine::new(backend, cfg)?;
     let s = engine.run()?;
     println!(
-        "serve: {} admitted, {} rejected, {} completed over {} rounds ({} fused) in {:.1}s",
+        "serve: {} admitted, {} rejected, {} completed over {} rounds ({} fused, {} intra-fused) in {:.1}s",
         s.admitted,
         s.rejected,
         s.completed,
         s.rounds,
         s.fused_rounds,
+        s.intra_fused_rounds,
         t0.elapsed().as_secs_f64()
     );
     Ok(())

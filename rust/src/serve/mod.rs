@@ -28,13 +28,27 @@
 //! off` takes that dedicated-state path; the two produce byte-identical
 //! report files, enforced by `rust/tests/serve.rs` and the CI `serve
 //! --once` acceptance run. Report files contain no wall-clock fields for
-//! exactly this reason — timing goes to stdout only.
+//! exactly this reason — timing goes to stdout only (or to the opt-in
+//! `--round-stats` sidecar, written outside the report tree).
+//!
+//! `--fuse intra` goes one step further: instead of time-slicing the
+//! workspace, each quantum step concatenates the round's per-tenant
+//! batches into one `[B_total, S]` batch and runs a *single* shared base
+//! forward/backward through [`Backend::fused_step`], with per-slice LoRA
+//! epilogues and per-tenant adapter gradients (DESIGN.md §11). Base
+//! weights are frozen under LoRA, so tenant gradients are exactly
+//! separable and the intra-fused round lands bitwise where the serial run
+//! lands. When a round cannot take the intra path — a non-fusable key, a
+//! tenant without a detached adapter, or a backend without the fused seam
+//! — it silently degrades to ordinary round fusion (the PR 8 swap path).
 
 pub mod job;
 
 pub use job::{group_rounds, FuseKey, JobSpec};
 
-use crate::backend::{AdapterState, Backend, DeviceBatch, DeviceState};
+use crate::backend::{
+    AdapterState, Backend, DeviceBatch, DeviceState, FusedSlice, StepPhases,
+};
 use crate::batching::{Batch, BatchStream};
 use crate::coordinator::Verifier;
 use crate::optim::LrSchedule;
@@ -42,11 +56,28 @@ use crate::report::ServeJobReport;
 use crate::runtime::HostTensor;
 use crate::session::resolve::{resolve, Resolved};
 use crate::session::{PackingStrategy, TailPolicy, Task};
+use crate::util::json::{Json, Obj};
 use crate::util::toml::{TomlDoc, TomlValue};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::SystemTime;
+
+/// How the scheduler executes a fused round (`--fuse off | on | intra`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FuseMode {
+    /// Every job trains on a dedicated state (the parity reference path).
+    Off,
+    /// Round fusion (PR 8): compatible tenants share one workspace by
+    /// swapping adapters in and out, each paying its own base pass.
+    #[default]
+    Round,
+    /// Intra-step fusion (DESIGN.md §11): one concatenated batch, one
+    /// shared base forward/backward per quantum step, per-slice adapter
+    /// epilogues. Degrades to `Round` where the fused seam is unavailable.
+    Intra,
+}
 
 /// Serve-mode configuration (the typed mirror of the `serve` CLI flags).
 #[derive(Debug, Clone)]
@@ -65,13 +96,17 @@ pub struct ServeConfig {
     pub max_rounds: Option<u64>,
     /// Steps each job runs per scheduling round (the fairness quantum).
     pub steps_per_round: u64,
-    /// Group compatible LoRA/LoRA+ jobs into fused rounds; `false` runs
-    /// every job on a dedicated state (the parity reference path).
-    pub fuse: bool,
+    /// How compatible LoRA/LoRA+ jobs share work: dedicated states,
+    /// swap-based round fusion, or intra-step fused base passes.
+    pub fuse: FuseMode,
     /// Seed of the shared base weights every tenant starts from.
     pub base_seed: i32,
     /// Spool poll interval in watch mode.
     pub poll_ms: u64,
+    /// Opt-in per-round timing sidecar (rounds, tenants/round, rows/round,
+    /// per-phase ms). Reports stay timing-free for diff-ability, so point
+    /// this outside the `--out` tree.
+    pub round_stats: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -83,9 +118,10 @@ impl Default for ServeConfig {
             once: true,
             max_rounds: None,
             steps_per_round: 4,
-            fuse: true,
+            fuse: FuseMode::Round,
             base_seed: 0,
             poll_ms: 200,
+            round_stats: None,
         }
     }
 }
@@ -103,6 +139,9 @@ pub struct ServeSummary {
     pub rounds: u64,
     /// Rounds that fused two or more tenants onto one workspace.
     pub fused_rounds: u64,
+    /// Multi-tenant rounds that ran the intra-step fused path (one shared
+    /// base forward/backward per quantum step).
+    pub intra_fused_rounds: u64,
     /// Job ids per round, in execution order (the audit trail the
     /// grouping tests assert on).
     pub rounds_log: Vec<Vec<String>>,
@@ -126,6 +165,9 @@ struct ServeJob {
     dedicated: Option<DeviceState>,
     /// Staged batches, cycled by step index (the session cycle contract).
     staged: Vec<DeviceBatch>,
+    /// Host copies of the staged batches, aligned with `staged`; the intra
+    /// path concatenates these into one `[B_total, S]` batch per round.
+    host: Vec<Batch>,
     schedule: LrSchedule,
     step: u64,
     losses: Vec<f32>,
@@ -147,6 +189,21 @@ pub struct ServeEngine {
     workspaces: Vec<(FuseKey, DeviceState)>,
     summary: ServeSummary,
     manifest_loaded: bool,
+    /// Spool directory mtime recorded after the last listing; an unchanged,
+    /// settled mtime lets idle polls skip the directory read entirely.
+    spool_mtime: Option<SystemTime>,
+    /// Per-round timing entries for the `--round-stats` sidecar.
+    round_stats_log: Vec<RoundStat>,
+}
+
+/// One `--round-stats` sidecar entry (timing lives here, never in reports).
+struct RoundStat {
+    round: u64,
+    mode: &'static str,
+    jobs: Vec<String>,
+    tenants: usize,
+    rows: usize,
+    phases: StepPhases,
 }
 
 impl ServeEngine {
@@ -162,6 +219,8 @@ impl ServeEngine {
             workspaces: Vec::new(),
             summary: ServeSummary::default(),
             manifest_loaded: false,
+            spool_mtime: None,
+            round_stats_log: Vec::new(),
         })
     }
 
@@ -200,8 +259,10 @@ impl ServeEngine {
         // stage ≤ steps distinct batches and cycle them, exactly like the
         // session's cycle mode
         let mut staged = Vec::new();
+        let mut host = Vec::new();
         for b in batches.into_iter().take(spec.steps as usize) {
             staged.push(self.backend.upload_batch(&resolved.train, &b)?);
+            host.push(b);
         }
         // LoRA-family tenants get a detached adapter when the backend
         // supports the swap seam; everything else (and every job on a
@@ -215,7 +276,8 @@ impl ServeEngine {
         } else {
             None
         };
-        let key = FuseKey::for_job(&spec.task, exe, self.cfg.fuse && adapter.is_some());
+        let key =
+            FuseKey::for_job(&spec.task, exe, self.cfg.fuse != FuseMode::Off && adapter.is_some());
         let schedule = spec.schedule.lr_schedule(spec.lr, spec.steps, spec.task.lora_plus_ratio());
         println!(
             "serve: admitted '{}' ({}, {} steps, {}, {})",
@@ -232,6 +294,7 @@ impl ServeEngine {
             adapter,
             dedicated: None,
             staged,
+            host,
             schedule,
             step: 0,
             losses: Vec::new(),
@@ -281,14 +344,46 @@ impl ServeEngine {
                     break;
                 }
                 let members: Vec<usize> = round.iter().map(|&p| pending[p]).collect();
-                self.summary
-                    .rounds_log
-                    .push(members.iter().map(|&ji| self.jobs[ji].spec.id.clone()).collect());
+                let ids: Vec<String> =
+                    members.iter().map(|&ji| self.jobs[ji].spec.id.clone()).collect();
+                self.summary.rounds_log.push(ids.clone());
                 if members.len() > 1 {
                     self.summary.fused_rounds += 1;
                 }
-                for &ji in &members {
-                    self.run_slice(ji)?;
+                // intra-step fusion needs the fused backend seam and a
+                // detached adapter for every member; otherwise the round
+                // silently degrades to swap-based round fusion
+                let intra = self.cfg.fuse == FuseMode::Intra
+                    && self.jobs[members[0]].key.fusable
+                    && self.backend.supports_fused_step()
+                    && members.iter().all(|&ji| self.jobs[ji].adapter.is_some());
+                let (mode, rows, phases) = if intra {
+                    if members.len() > 1 {
+                        self.summary.intra_fused_rounds += 1;
+                    }
+                    let (rows, phases) = self.run_fused_round(&members)?;
+                    ("intra", rows, phases)
+                } else {
+                    let mut rows = 0usize;
+                    let mut phases = StepPhases::default();
+                    for &ji in &members {
+                        let (r, p) = self.run_slice(ji)?;
+                        rows += r;
+                        phases.fwd_s += p.fwd_s;
+                        phases.bwd_s += p.bwd_s;
+                        phases.optim_s += p.optim_s;
+                    }
+                    (if members.len() > 1 { "round" } else { "serial" }, rows, phases)
+                };
+                if self.cfg.round_stats.is_some() {
+                    self.round_stats_log.push(RoundStat {
+                        round: self.summary.rounds + 1,
+                        mode,
+                        jobs: ids,
+                        tenants: members.len(),
+                        rows,
+                        phases,
+                    });
                 }
                 self.summary.rounds += 1;
                 for &ji in &members {
@@ -308,13 +403,154 @@ impl ServeEngine {
                 self.write_report(ji)?;
             }
         }
+        self.write_round_stats()?;
         Ok(std::mem::take(&mut self.summary))
+    }
+
+    /// One quantum of intra-step fused rounds (DESIGN.md §11): each step
+    /// concatenates the active tenants' current batches into one
+    /// `[B_total, S]` batch, builds the row-slice→tenant map with each
+    /// tenant's own `(step, lr, lr_b)`, and runs a single shared base
+    /// forward/backward through [`Backend::fused_step`]. Tenants that
+    /// exhaust their budget mid-quantum drop out of subsequent steps, so a
+    /// mixed round (tenants at different schedule positions) still lands
+    /// bitwise on the serial trajectory. Returns the rows processed and
+    /// the summed per-phase seconds for the `--round-stats` sidecar.
+    fn run_fused_round(&mut self, members: &[usize]) -> Result<(usize, StepPhases)> {
+        let backend = Arc::clone(&self.backend);
+        self.ensure_workspace(members[0])?;
+        let key = self.jobs[members[0]].key.clone();
+        let train = self.jobs[members[0]].resolved.train.clone();
+        let mut rows_total = 0usize;
+        let mut phases = StepPhases::default();
+        for _ in 0..self.cfg.steps_per_round {
+            let active: Vec<usize> = members
+                .iter()
+                .copied()
+                .filter(|&ji| self.jobs[ji].step < self.jobs[ji].spec.steps)
+                .collect();
+            if active.is_empty() {
+                break;
+            }
+            // concat batch + slice map, in fixed member (admission) order
+            let seq = self.jobs[active[0]].host[0].seq;
+            let mut tokens = Vec::new();
+            let mut targets = Vec::new();
+            let mut seg_ids = Vec::new();
+            let mut pos_ids = Vec::new();
+            let (mut real_tokens, mut real_targets) = (0usize, 0usize);
+            let mut slices = Vec::with_capacity(active.len());
+            let mut row0 = 0usize;
+            for &ji in &active {
+                let job = &self.jobs[ji];
+                let hb = &job.host[(job.step as usize) % job.host.len()];
+                ensure!(
+                    hb.seq == seq,
+                    "fused round mixes sequence lengths ({seq} vs {})",
+                    hb.seq
+                );
+                tokens.extend_from_slice(hb.tokens.as_i32()?);
+                targets.extend_from_slice(hb.targets.as_i32()?);
+                seg_ids.extend_from_slice(hb.seg_ids.as_i32()?);
+                pos_ids.extend_from_slice(hb.pos_ids.as_i32()?);
+                real_tokens += hb.real_tokens;
+                real_targets += hb.real_targets;
+                let step_1 = job.step + 1;
+                let (lr, lr_b) = job.schedule.lr_pair(step_1);
+                slices.push(FusedSlice { row_start: row0, rows: hb.batch, step: step_1, lr, lr_b });
+                row0 += hb.batch;
+            }
+            let batch = Batch {
+                tokens: HostTensor::i32(tokens, vec![row0, seq]),
+                targets: HostTensor::i32(targets, vec![row0, seq]),
+                seg_ids: HostTensor::i32(seg_ids, vec![row0, seq]),
+                pos_ids: HostTensor::i32(pos_ids, vec![row0, seq]),
+                real_tokens,
+                real_targets,
+                batch: row0,
+                seq,
+            };
+            // take the adapters out so the backend can mutate them while
+            // the engine still borrows its own workspace table
+            let mut ads: Vec<AdapterState> = active
+                .iter()
+                .map(|&ji| self.jobs[ji].adapter.take().expect("intra round requires adapters"))
+                .collect();
+            let ws = &self
+                .workspaces
+                .iter()
+                .find(|(k, _)| *k == key)
+                .expect("ensure_workspace created the shared workspace")
+                .1;
+            let result = backend.fused_step(&train, ws, &mut ads, &batch, &slices);
+            // adapters go back before any error propagates: a failed round
+            // must not orphan tenant state
+            for (&ji, ad) in active.iter().zip(ads.into_iter()) {
+                self.jobs[ji].adapter = Some(ad);
+            }
+            let out = result?;
+            ensure!(
+                out.tenants.len() == active.len(),
+                "fused step returned {} tenant outputs for {} slices",
+                out.tenants.len(),
+                active.len()
+            );
+            for (&ji, o) in active.iter().zip(out.tenants.iter()) {
+                let job = &mut self.jobs[ji];
+                job.losses.push(o.loss);
+                job.grad_norms.push(o.grad_norm);
+                job.verifier.observe(o.loss, o.grad_norm);
+                job.step += 1;
+                job.reported = false;
+            }
+            rows_total += row0;
+            phases.fwd_s += out.phases.fwd_s;
+            phases.bwd_s += out.phases.bwd_s;
+            phases.optim_s += out.phases.optim_s;
+        }
+        for &ji in members {
+            if self.jobs[ji].step >= self.jobs[ji].spec.steps {
+                self.jobs[ji].done = true;
+            }
+        }
+        Ok((rows_total, phases))
+    }
+
+    /// Write the opt-in `--round-stats` timing sidecar, if configured.
+    /// This is the only place serve timing touches disk — report files
+    /// stay byte-diffable across fuse modes.
+    fn write_round_stats(&mut self) -> Result<()> {
+        let Some(path) = self.cfg.round_stats.clone() else {
+            return Ok(());
+        };
+        let mut root = Obj::default();
+        root.insert("rounds", Json::Num(self.summary.rounds as f64));
+        let mut arr = Vec::new();
+        for rs in &self.round_stats_log {
+            let mut o = Obj::default();
+            o.insert("round", Json::Num(rs.round as f64));
+            o.insert("mode", Json::Str(rs.mode.to_string()));
+            o.insert("jobs", Json::Arr(rs.jobs.iter().map(|j| Json::Str(j.clone())).collect()));
+            o.insert("tenants", Json::Num(rs.tenants as f64));
+            o.insert("rows", Json::Num(rs.rows as f64));
+            o.insert("fwd_ms", Json::Num(rs.phases.fwd_s * 1e3));
+            o.insert("bwd_ms", Json::Num(rs.phases.bwd_s * 1e3));
+            o.insert("optim_ms", Json::Num(rs.phases.optim_s * 1e3));
+            arr.push(Json::Obj(o));
+        }
+        root.insert("per_round", Json::Arr(arr));
+        let mut text = Json::Obj(root).to_string_pretty();
+        text.push('\n');
+        std::fs::write(&path, text)
+            .with_context(|| format!("writing round-stats sidecar {}", path.display()))?;
+        self.round_stats_log.clear();
+        Ok(())
     }
 
     /// Run one job's slice of a round: swap its adapter into the
     /// workspace, run up to `steps_per_round` ordinary train steps, swap
-    /// back out.
-    fn run_slice(&mut self, ji: usize) -> Result<()> {
+    /// back out. Returns the rows processed and summed per-phase seconds.
+    fn run_slice(&mut self, ji: usize) -> Result<(usize, StepPhases)> {
         let backend = Arc::clone(&self.backend);
         self.ensure_workspace(ji)?;
         let quantum = self.cfg.steps_per_round;
@@ -325,12 +561,14 @@ impl ServeEngine {
             adapter,
             dedicated,
             staged,
+            host,
             schedule,
             step,
             losses,
             grad_norms,
             verifier,
             done,
+            reported,
             ..
         } = &mut self.jobs[ji];
         let ws: &mut DeviceState = if key.fusable {
@@ -347,15 +585,25 @@ impl ServeEngine {
             backend.swap_adapter(ws, ad)?;
         }
         let slice = quantum.min(spec.steps - *step);
+        let mut rows = 0usize;
+        let mut phases = StepPhases::default();
         for _ in 0..slice {
             let step_1 = *step + 1;
             let (lr, lr_b) = schedule.lr_pair(step_1);
-            let batch = &staged[(*step as usize) % staged.len()];
+            let idx = (*step as usize) % staged.len();
+            let batch = &staged[idx];
             let out = backend.train_step(&resolved.train, ws, batch, step_1, lr, lr_b)?;
             losses.push(out.loss);
             grad_norms.push(out.grad_norm);
             verifier.observe(out.loss, out.grad_norm);
+            rows += host[idx].batch;
+            phases.fwd_s += out.phases.fwd_s;
+            phases.bwd_s += out.phases.bwd_s;
+            phases.optim_s += out.phases.optim_s;
             *step += 1;
+            // a stepped job needs a fresh report, even if an earlier
+            // (capped) run already wrote one
+            *reported = false;
         }
         if let Some(ad) = adapter.as_mut() {
             backend.swap_adapter(ws, ad)?;
@@ -363,7 +611,7 @@ impl ServeEngine {
         if *step >= spec.steps {
             *done = true;
         }
-        Ok(())
+        Ok((rows, phases))
     }
 
     /// Make sure the state a job trains against exists: the fuse group's
@@ -438,7 +686,8 @@ impl ServeEngine {
     }
 
     /// Pick up new job files: the manifest once, then the spool directory
-    /// on every pass (sorted, each file tried exactly once).
+    /// — listed only when its mtime says something changed, so idle watch
+    /// polls do no per-file I/O (each file is still tried exactly once).
     fn scan_sources(&mut self) -> Result<()> {
         if let Some(man) = self.cfg.jobs_manifest.clone() {
             if !self.manifest_loaded {
@@ -447,17 +696,26 @@ impl ServeEngine {
             }
         }
         if let Some(spool) = self.cfg.spool.clone() {
-            let mut paths: Vec<PathBuf> = std::fs::read_dir(&spool)
-                .with_context(|| format!("reading spool directory {}", spool.display()))?
-                .filter_map(|e| e.ok())
-                .map(|e| e.path())
-                .filter(|p| p.extension().and_then(|s| s.to_str()) == Some("toml"))
-                .collect();
-            paths.sort();
-            for p in paths {
-                if self.seen.insert(p.clone()) {
-                    self.admit_file(&p);
+            let mtime = std::fs::metadata(&spool).and_then(|m| m.modified()).ok();
+            let rescan = match mtime {
+                Some(cur) => spool_needs_rescan(self.spool_mtime, cur, SystemTime::now()),
+                // no mtime available (exotic filesystem): always list
+                None => true,
+            };
+            if rescan {
+                let mut paths: Vec<PathBuf> = std::fs::read_dir(&spool)
+                    .with_context(|| format!("reading spool directory {}", spool.display()))?
+                    .filter_map(|e| e.ok())
+                    .map(|e| e.path())
+                    .filter(|p| p.extension().and_then(|s| s.to_str()) == Some("toml"))
+                    .collect();
+                paths.sort();
+                for p in paths {
+                    if self.seen.insert(p.clone()) {
+                        self.admit_file(&p);
+                    }
                 }
+                self.spool_mtime = mtime;
             }
         }
         Ok(())
@@ -519,5 +777,78 @@ impl ServeEngine {
             eprintln!("serve: could not write reject diagnostic {}: {w}", out.display());
         }
         self.summary.reject_files.push(out);
+    }
+}
+
+/// Decide whether the spool directory needs a fresh listing. `prev` is
+/// the mtime recorded after the last listing, `current` its mtime now.
+/// List on the first pass, whenever the mtime moved, and while `current`
+/// is less than 2 s old — directory mtimes can have whole-second
+/// granularity, so a file dropped in the same tick as the previous scan
+/// may not move the mtime at all. A future mtime (clock skew) also lists.
+fn spool_needs_rescan(prev: Option<SystemTime>, current: SystemTime, now: SystemTime) -> bool {
+    let Some(prev) = prev else {
+        return true;
+    };
+    if prev != current {
+        return true;
+    }
+    match now.duration_since(current) {
+        Ok(age) => age < std::time::Duration::from_secs(2),
+        Err(_) => true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn spool_rescan_skips_only_settled_unchanged_mtimes() {
+        let t0 = SystemTime::UNIX_EPOCH;
+        let old = t0 + Duration::from_secs(1000);
+        let now = t0 + Duration::from_secs(2000);
+        assert!(spool_needs_rescan(None, old, now), "first pass must list");
+        assert!(
+            !spool_needs_rescan(Some(old), old, now),
+            "unchanged settled mtime must skip the listing"
+        );
+        let touched = t0 + Duration::from_secs(1500);
+        assert!(spool_needs_rescan(Some(old), touched, now), "a touched directory must re-list");
+        let fresh = t0 + Duration::from_secs(1999);
+        assert!(
+            spool_needs_rescan(Some(fresh), fresh, now),
+            "a just-modified directory stays hot for the mtime-granularity window"
+        );
+        let future = now + Duration::from_secs(5);
+        assert!(spool_needs_rescan(Some(future), future, now), "clock skew must re-list");
+    }
+
+    #[test]
+    fn untouched_spool_skips_io_and_touched_spool_rescans() {
+        let dir =
+            std::env::temp_dir().join(format!("chronicals-spool-mtime-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mtime = |d: &Path| std::fs::metadata(d).unwrap().modified().unwrap();
+
+        // a scan recorded the current mtime; once the granularity window
+        // passes with no writes, idle polls skip the directory read
+        let recorded = mtime(&dir);
+        let settled_now = recorded + Duration::from_secs(10);
+        assert!(
+            !spool_needs_rescan(Some(recorded), mtime(&dir), settled_now),
+            "untouched spool must not be re-listed"
+        );
+
+        // dropping a job file re-arms the scan: either the directory mtime
+        // moved, or the write is so recent it is inside the hot window
+        std::fs::write(dir.join("tenant.toml"), "id = \"t\"\n").unwrap();
+        assert!(
+            spool_needs_rescan(Some(recorded), mtime(&dir), SystemTime::now()),
+            "touched spool must be re-listed"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

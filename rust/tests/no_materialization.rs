@@ -17,8 +17,10 @@
 
 use chronicals::backend::cpu::ModelDims;
 use chronicals::backend::cpu_fast::FastCpuBackend;
-use chronicals::backend::{Backend, DataParallel};
+use chronicals::backend::{Backend, DataParallel, FusedSlice};
+use chronicals::batching::Batch;
 use chronicals::harness;
+use chronicals::runtime::HostTensor;
 use std::sync::Arc;
 
 fn dims() -> ModelDims {
@@ -250,4 +252,95 @@ fn data_parallel_peak_accounting_aggregates_per_replica_arenas() {
     // and the shared gradient lanes are accounted separately, in full
     let lane_len = dp.flat_grad_len(&state).unwrap();
     assert_eq!(dp.grad_arena_elems(), batch * lane_len);
+}
+
+/// Row-concatenate two same-geometry batches into one `[B_a + B_b, S]`
+/// fused-round batch (what the serve scheduler builds under `--fuse intra`).
+fn concat(a: &Batch, b: &Batch) -> Batch {
+    assert_eq!(a.seq, b.seq);
+    let cat = |x: &HostTensor, y: &HostTensor| {
+        let mut v = x.as_i32().unwrap().to_vec();
+        v.extend_from_slice(y.as_i32().unwrap());
+        HostTensor::i32(v, vec![a.batch + b.batch, a.seq])
+    };
+    Batch {
+        tokens: cat(&a.tokens, &b.tokens),
+        targets: cat(&a.targets, &b.targets),
+        seg_ids: cat(&a.seg_ids, &b.seg_ids),
+        pos_ids: cat(&a.pos_ids, &b.pos_ids),
+        real_tokens: a.real_tokens + b.real_tokens,
+        real_targets: a.real_targets + b.real_targets,
+        batch: a.batch + b.batch,
+        seq: a.seq,
+    }
+}
+
+/// The intra-step fused round performs exactly one shared base
+/// forward/backward over the concatenated `[B_total, S]` batch: its peak
+/// single lease is the concat-scale activation buffer (`T_total·d_ff`),
+/// never above the *sum* of the tenants' standalone peaks — i.e. fusing
+/// does not secretly materialize per-tenant copies of the base pass — and
+/// a warm arena serves the whole fused step with zero heap allocations.
+#[test]
+fn intra_fused_step_peaks_at_concat_scale_and_reuses_the_warm_arena() {
+    let d = dims();
+    let (batch, seq) = (4usize, 128usize);
+    let fused_rows = 2 * batch;
+    let fused_t = fused_rows * seq;
+    let fused_ceiling = fused_t * d.d_ff.max(d.d_model); // 65536: concat activations
+    let bhss = fused_rows * d.n_heads * seq * seq; // the fused attention tensor
+    let tv = fused_t * d.vocab; // the fused logits tensor
+
+    let fast = FastCpuBackend::custom(d, batch, seq, 2);
+    let exe = "train_step_lora";
+    let spec = fast.manifest().get(exe).unwrap().clone();
+    let (_tok, exs) = harness::build_corpus(384, 5, spec.model_config.vocab, 96);
+    let batches = harness::make_batches(fast.manifest(), exe, &exs, true).unwrap();
+    assert!(batches.len() >= 2, "need two tenant batches, got {}", batches.len());
+
+    // per-tenant reference: one ordinary LoRA step at the [B, S] geometry
+    let mut state = fast.init_state("init_lora", 5).unwrap();
+    let ub = fast.upload_batch(exe, &batches[0]).unwrap();
+    fast.exec().arena().reset_peak();
+    fast.train_step(exe, &mut state, &ub, 1, 1e-3, 1e-3).unwrap();
+    let tenant_peak = fast.exec().arena().peak_elems();
+    assert!(tenant_peak > 0, "arena accounting saw no tenant leases");
+
+    // the fused round: two tenants, one concatenated [2B, S] batch
+    let mut adapters =
+        vec![fast.init_adapter(exe, 21).unwrap(), fast.init_adapter(exe, 22).unwrap()];
+    let fused_batch = concat(&batches[0], &batches[1]);
+    let slices = [
+        FusedSlice { row_start: 0, rows: batch, step: 1, lr: 1e-3, lr_b: 1e-3 },
+        FusedSlice { row_start: batch, rows: batch, step: 1, lr: 1e-3, lr_b: 2e-3 },
+    ];
+    fast.exec().arena().reset_peak();
+    let out = fast.fused_step(exe, &state, &mut adapters, &fused_batch, &slices).unwrap();
+    assert_eq!(out.tenants.len(), 2);
+    assert!(out.tenants.iter().all(|t| t.grad_norm > 0.0), "fused step must train: {out:?}");
+    let fused_peak = fast.exec().arena().peak_elems();
+    let cold = fast.exec().arena().heap_allocs();
+    assert_eq!(
+        fused_peak, fused_ceiling,
+        "fused peak must be exactly the concat-scale activation buffer"
+    );
+    assert!(
+        fused_peak <= 2 * tenant_peak,
+        "fused peak {fused_peak} exceeds the sum of per-tenant peaks ({tenant_peak} each)"
+    );
+    assert!(fused_peak < bhss / 4, "fused peak {fused_peak} within 4x of [B,Hq,S,S] ({bhss})");
+    assert!(fused_peak < tv / 2, "fused peak {fused_peak} within 2x of [T,V] ({tv})");
+
+    // warm fused step: zero new heap allocations — structurally one shared
+    // base pass with no hidden per-tenant buffer duplication
+    let slices2 = [
+        FusedSlice { row_start: 0, rows: batch, step: 2, lr: 1e-3, lr_b: 1e-3 },
+        FusedSlice { row_start: batch, rows: batch, step: 2, lr: 1e-3, lr_b: 2e-3 },
+    ];
+    fast.fused_step(exe, &state, &mut adapters, &fused_batch, &slices2).unwrap();
+    assert_eq!(
+        fast.exec().arena().heap_allocs(),
+        cold,
+        "a warm arena must serve the fused step without new heap allocations"
+    );
 }

@@ -10,7 +10,9 @@
 
 use chronicals::backend::{create_backend, Backend};
 use chronicals::runtime::HostTensor;
-use chronicals::serve::{group_rounds, FuseKey, JobSpec, ServeConfig, ServeEngine, ServeSummary};
+use chronicals::serve::{
+    group_rounds, FuseKey, FuseMode, JobSpec, ServeConfig, ServeEngine, ServeSummary,
+};
 use chronicals::session::{DataSource, LossMode, Schedule, Task};
 use chronicals::util::json::Json;
 use std::path::{Path, PathBuf};
@@ -49,7 +51,7 @@ fn bits(params: &[HostTensor]) -> Vec<Vec<u32>> {
 #[allow(clippy::type_complexity)]
 fn run_two_tenants(
     backend_name: &str,
-    fuse: bool,
+    fuse: FuseMode,
     dir: &Path,
 ) -> (ServeSummary, Vec<Vec<u32>>, Vec<Vec<u32>>, String, String) {
     let backend: Arc<dyn Backend> = create_backend(backend_name, "", 2).unwrap();
@@ -73,8 +75,8 @@ fn run_two_tenants(
 fn assert_fused_matches_serial(backend_name: &str) {
     let fused_dir = out_dir(&format!("fused_{backend_name}"));
     let serial_dir = out_dir(&format!("serial_{backend_name}"));
-    let (fs_sum, fa, fb, fra, frb) = run_two_tenants(backend_name, true, &fused_dir);
-    let (ss_sum, sa, sb, sra, srb) = run_two_tenants(backend_name, false, &serial_dir);
+    let (fs_sum, fa, fb, fra, frb) = run_two_tenants(backend_name, FuseMode::Round, &fused_dir);
+    let (ss_sum, sa, sb, sra, srb) = run_two_tenants(backend_name, FuseMode::Off, &serial_dir);
 
     // the fused run actually fused: both tenants share every round
     assert!(fs_sum.fused_rounds > 0, "no fused rounds: {fs_sum:?}");
@@ -121,6 +123,174 @@ fn fused_round_is_bitwise_identical_to_serial_on_the_reference_backend() {
 #[test]
 fn fused_round_is_bitwise_identical_to_serial_on_cpu_fast() {
     assert_fused_matches_serial("cpu-fast");
+}
+
+/// The intra-step tentpole: `--fuse intra` concatenates each round's
+/// tenants into one shared base forward/backward per quantum step
+/// (DESIGN.md §11). Same contract as round fusion, stated harder — final
+/// adapter bits AND report bytes identical to the serial reference.
+fn assert_intra_matches_serial(backend_name: &str) {
+    let intra_dir = out_dir(&format!("intra_{backend_name}"));
+    let serial_dir = out_dir(&format!("intra_serial_{backend_name}"));
+    let (is_sum, ia, ib, ira, irb) = run_two_tenants(backend_name, FuseMode::Intra, &intra_dir);
+    let (ss_sum, sa, sb, sra, srb) = run_two_tenants(backend_name, FuseMode::Off, &serial_dir);
+
+    assert!(is_sum.intra_fused_rounds > 0, "no intra-fused rounds: {is_sum:?}");
+    assert_eq!(is_sum.completed, 2);
+    assert_eq!(ss_sum.completed, 2);
+
+    assert_eq!(ia, sa, "tenant-a adapters diverged on {backend_name}");
+    assert_eq!(ib, sb, "tenant-b adapters diverged on {backend_name}");
+    assert_eq!(ira, sra, "tenant-a reports diverged on {backend_name}");
+    assert_eq!(irb, srb, "tenant-b reports diverged on {backend_name}");
+    let _ = std::fs::remove_dir_all(&intra_dir);
+    let _ = std::fs::remove_dir_all(&serial_dir);
+}
+
+#[test]
+fn intra_fused_round_is_bitwise_identical_to_serial_on_the_reference_backend() {
+    assert_intra_matches_serial("cpu");
+}
+
+#[test]
+fn intra_fused_round_is_bitwise_identical_to_serial_on_cpu_fast() {
+    assert_intra_matches_serial("cpu-fast");
+}
+
+/// A ragged intra round: tenants with different step budgets share a
+/// quantum — when one exhausts its budget mid-quantum the remaining
+/// steps run with fewer concatenated slices, still bitwise serial.
+#[test]
+fn intra_fusion_is_bitwise_serial_when_a_tenant_exhausts_mid_quantum() {
+    let run = |fuse: FuseMode, dir: &Path| {
+        let backend: Arc<dyn Backend> = create_backend("cpu-fast", "", 2).unwrap();
+        let cfg = ServeConfig {
+            out_dir: dir.to_path_buf(),
+            fuse,
+            steps_per_round: 4,
+            ..Default::default()
+        };
+        let mut engine = ServeEngine::new(backend, cfg).unwrap();
+        engine.admit_spec(tenant("long", Task::lora(), 7, 3, 7)).unwrap();
+        engine.admit_spec(tenant("short", Task::lora(), 11, 5, 5)).unwrap();
+        let summary = engine.run().unwrap();
+        let l = bits(&engine.final_adapter("long").unwrap());
+        let s = bits(&engine.final_adapter("short").unwrap());
+        (summary, l, s)
+    };
+    let intra_dir = out_dir("intra_ragged");
+    let serial_dir = out_dir("intra_ragged_serial");
+    let (is_sum, il, ish) = run(FuseMode::Intra, &intra_dir);
+    let (ss_sum, sl, ssh) = run(FuseMode::Off, &serial_dir);
+    // round 2 opens with long at 4/7 and short at 4/5: short drops out
+    // after its fifth step and the quantum finishes on long alone
+    assert!(is_sum.intra_fused_rounds > 0, "{is_sum:?}");
+    assert_eq!(is_sum.completed, 2);
+    assert_eq!(ss_sum.completed, 2);
+    assert_eq!(il, sl, "long-tenant adapters diverged");
+    assert_eq!(ish, ssh, "short-tenant adapters diverged");
+    let _ = std::fs::remove_dir_all(&intra_dir);
+    let _ = std::fs::remove_dir_all(&serial_dir);
+}
+
+/// A mixed intra round via staggered admission: tenant b joins after
+/// tenant a already took a round, so one concatenated batch carries
+/// slices at different schedule steps — under warmup, different learning
+/// rates. Separability says the result is still bitwise each tenant's
+/// solo serial trajectory.
+#[test]
+fn intra_fusion_handles_tenants_at_different_schedule_steps() {
+    let spec = |id: &str, seed: i64, data_seed: u64, steps: u64| JobSpec {
+        id: id.to_string(),
+        task: Task::lora(),
+        steps,
+        lr: 5e-3,
+        seed,
+        schedule: Schedule::WarmupCosine { warmup: 2 },
+        loss_mode: LossMode::default(),
+        data: DataSource::synthetic(40, data_seed, 48),
+    };
+    // staggered intra run: three capped calls, b admitted after round 1
+    let intra_dir = out_dir("intra_mixed");
+    let backend: Arc<dyn Backend> = create_backend("cpu-fast", "", 2).unwrap();
+    let cfg = ServeConfig {
+        out_dir: intra_dir.clone(),
+        fuse: FuseMode::Intra,
+        steps_per_round: 2,
+        max_rounds: Some(1),
+        ..Default::default()
+    };
+    let mut engine = ServeEngine::new(backend, cfg).unwrap();
+    engine.admit_spec(spec("a", 7, 3, 6)).unwrap();
+    engine.run().unwrap(); // round 1: a alone, steps 1-2
+    engine.admit_spec(spec("b", 11, 5, 4)).unwrap();
+    let mid = engine.run().unwrap(); // round 2: a at steps 3-4, b at 1-2
+    engine.run().unwrap(); // round 3: a at 5-6, b at 3-4 — both done
+    assert!(mid.intra_fused_rounds > 0, "round 2 did not intra-fuse: {mid:?}");
+    let ia = bits(&engine.final_adapter("a").unwrap());
+    let ib = bits(&engine.final_adapter("b").unwrap());
+    let ira = std::fs::read_to_string(intra_dir.join("a.report.json")).unwrap();
+    let irb = std::fs::read_to_string(intra_dir.join("b.report.json")).unwrap();
+
+    // serial reference: both admitted upfront, uncapped — each tenant's
+    // trajectory depends only on its own steps, never on round placement
+    let serial_dir = out_dir("intra_mixed_serial");
+    let backend: Arc<dyn Backend> = create_backend("cpu-fast", "", 2).unwrap();
+    let cfg = ServeConfig {
+        out_dir: serial_dir.clone(),
+        fuse: FuseMode::Off,
+        steps_per_round: 2,
+        ..Default::default()
+    };
+    let mut serial = ServeEngine::new(backend, cfg).unwrap();
+    serial.admit_spec(spec("a", 7, 3, 6)).unwrap();
+    serial.admit_spec(spec("b", 11, 5, 4)).unwrap();
+    serial.run().unwrap();
+    assert_eq!(ia, bits(&serial.final_adapter("a").unwrap()), "tenant a diverged");
+    assert_eq!(ib, bits(&serial.final_adapter("b").unwrap()), "tenant b diverged");
+    assert_eq!(ira, std::fs::read_to_string(serial_dir.join("a.report.json")).unwrap());
+    assert_eq!(irb, std::fs::read_to_string(serial_dir.join("b.report.json")).unwrap());
+    let _ = std::fs::remove_dir_all(&intra_dir);
+    let _ = std::fs::remove_dir_all(&serial_dir);
+}
+
+/// The opt-in `--round-stats` sidecar carries the timing the reports must
+/// not: per-round mode, tenant count, rows and per-phase milliseconds —
+/// written outside the `--out` tree so report bytes stay deterministic.
+#[test]
+fn round_stats_sidecar_records_timing_without_touching_reports() {
+    let dir = out_dir("round_stats");
+    let stats = std::env::temp_dir()
+        .join(format!("chronicals_serve_round_stats_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&stats);
+    let backend = create_backend("cpu", "", 0).unwrap();
+    let cfg = ServeConfig {
+        out_dir: dir.clone(),
+        fuse: FuseMode::Intra,
+        steps_per_round: 2,
+        round_stats: Some(stats.clone()),
+        ..Default::default()
+    };
+    let mut engine = ServeEngine::new(backend, cfg).unwrap();
+    engine.admit_spec(tenant("tenant-a", Task::lora(), 7, 3, 4)).unwrap();
+    engine.admit_spec(tenant("tenant-b", Task::lora(), 11, 5, 4)).unwrap();
+    let summary = engine.run().unwrap();
+    let json = Json::parse(&std::fs::read_to_string(&stats).unwrap()).unwrap();
+    assert_eq!(json.field("rounds").unwrap().as_i64(), Some(summary.rounds as i64));
+    let rounds = json.field("per_round").unwrap().as_arr().unwrap();
+    assert_eq!(rounds.len(), summary.rounds as usize);
+    assert_eq!(rounds[0].field("mode").unwrap().as_str(), Some("intra"));
+    assert_eq!(rounds[0].field("tenants").unwrap().as_i64(), Some(2));
+    assert!(rounds[0].field("fwd_ms").is_ok());
+    assert!(rounds[0].field("bwd_ms").is_ok());
+    assert!(rounds[0].field("optim_ms").is_ok());
+    // the per-job reports stay timing-free even with the sidecar on
+    let report = std::fs::read_to_string(dir.join("tenant-a.report.json")).unwrap();
+    for banned in ["tokens_per_sec", "_ms", "seconds", "elapsed", "wall"] {
+        assert!(!report.contains(banned), "report leaked '{banned}': {report}");
+    }
+    let _ = std::fs::remove_file(&stats);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
