@@ -1,17 +1,82 @@
 //! Quantization + summation benchmarks — regenerates the paper's §S11/§S16
 //! error tables (int8 Eq. 18, FP8 Prop. 12/Thm. 11) and the §S2.4 Kahan
-//! accuracy/cost trade-off. Pure host code: no backend or artifacts needed.
+//! accuracy/cost trade-off, plus the DESIGN.md §12 memory-tier ladder
+//! (resident state bytes + tok/s per tier on the fast CPU backend).
+//! Hermetic: no artifacts or network needed.
 //!
 //! Writes the headline numbers into the repo-root `BENCH_cpu.json`
-//! (section `"quant"`).
+//! (sections `"quant"` and `"memory_tiers"`).
 //!
 //! Run: `cargo bench --bench bench_quant`
+//! Env: STEPS (default 12) — measured steps per memory-tier rung.
 
+use chronicals::backend::cpu::model as cpu_model;
+use chronicals::backend::cpu_fast::FastCpuBackend;
+use chronicals::backend::{Backend, DeviceState, MemoryCfg};
 use chronicals::quant::*;
 use chronicals::report;
+use chronicals::session::{BackendSpec, DataSource, PackingStrategy, SessionBuilder, Task};
 use chronicals::util::json::{Json, Obj};
 use chronicals::util::rng::Rng;
 use std::time::Instant;
+
+/// The memory-tier ladder (DESIGN.md §12): each rung names the optimizer
+/// state codec, frozen-base codec and checkpoint segment count it lowers.
+const TIERS: [(&str, OptimStates, Option<BaseQuant>, usize); 5] = [
+    ("legacy", OptimStates::Fp32, None, 0),
+    ("int8_optim", OptimStates::Int8, None, 0),
+    ("int8_base", OptimStates::Fp32, Some(BaseQuant::Int8), 0),
+    ("fp8_base", OptimStates::Fp32, Some(BaseQuant::Fp8), 0),
+    ("all_tiers", OptimStates::Int8, Some(BaseQuant::Int8), 2),
+];
+
+/// State-byte accounting for one tier on the fast backend's LoRA state
+/// (after `configure_memory`, exactly the bytes a training run holds).
+fn tier_bytes(optim: OptimStates, base: Option<BaseQuant>) -> Option<(usize, usize)> {
+    let be = FastCpuBackend::new();
+    let mut state = be.init_state("init_lora", 42).ok()?;
+    let mem = MemoryCfg { optim_states: optim, base_quant: base, ckpt_segments: 0 };
+    if !mem.is_default() {
+        be.configure_memory(&mut state, &mem).ok()?;
+    }
+    match &state {
+        DeviceState::Cpu(s) => {
+            Some((cpu_model::optim_state_bytes(s), cpu_model::base_weight_bytes(s)))
+        }
+        #[cfg(feature = "pjrt")]
+        _ => None,
+    }
+}
+
+/// End-to-end tok/s + final loss for one tier: a short LoRA run on the
+/// fast backend with the tier lowered through the session seam.
+fn tier_run(
+    steps: u64,
+    optim: OptimStates,
+    base: Option<BaseQuant>,
+    segs: usize,
+) -> Option<(f64, f32)> {
+    let mut builder = SessionBuilder::new()
+        .task(Task::lora())
+        .steps(steps)
+        .meter_warmup(2)
+        .lr(2e-3)
+        .packing(PackingStrategy::Bfd)
+        .data(DataSource::synthetic(384, 42, 96))
+        .backend(BackendSpec::CpuFast { threads: 0 })
+        .optim_states(optim)
+        .ckpt_segments(segs);
+    if let Some(q) = base {
+        builder = builder.base_quant(q);
+    }
+    match builder.build().and_then(|mut session| session.run()) {
+        Ok(r) => Some((r.summary.tokens_per_sec, r.summary.last_loss)),
+        Err(e) => {
+            eprintln!("memory-tier run failed ({optim:?}/{base:?}/{segs}): {e:#}");
+            None
+        }
+    }
+}
 
 fn main() {
     let mut rng = Rng::new(88);
@@ -148,6 +213,49 @@ fn main() {
     let path = report::bench_json_path();
     match report::update_bench_json(&path, "quant", Json::Obj(section)) {
         Ok(()) => println!("\nwrote quant numbers to {}", path.display()),
+        Err(e) => eprintln!("could not update {}: {e:#}", path.display()),
+    }
+
+    // memory-tier ladder (DESIGN.md §12): resident state bytes + end-to-end
+    // tok/s per tier on the fast CPU backend. Throughput at this toy
+    // geometry is dominated by per-tile dequant overhead rather than the
+    // memory traffic the tiers save at LLM scale, so the section ships
+    // `verified: false` — the byte columns are exact, the tok/s columns
+    // are indicative only until measured at a representative geometry.
+    let tier_steps: u64 = std::env::var("STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12);
+    let mut tiers = Obj::default();
+    println!("\n| tier       | optim bytes | base bytes  | tok/s       | last loss |");
+    println!("|------------|-------------|-------------|-------------|-----------|");
+    for (label, optim, base, segs) in TIERS {
+        let Some((optim_bytes, base_bytes)) = tier_bytes(optim, base) else {
+            eprintln!("  tier {label}: byte accounting failed");
+            continue;
+        };
+        let Some((tps, last_loss)) = tier_run(tier_steps, optim, base, segs) else {
+            continue;
+        };
+        println!(
+            "| {:<10} | {:<11} | {:<11} | {:<11.0} | {:<9.4} |",
+            label, optim_bytes, base_bytes, tps, last_loss
+        );
+        let mut row = Obj::default();
+        row.insert("optim_state_bytes", Json::Num(optim_bytes as f64));
+        row.insert("base_weight_bytes", Json::Num(base_bytes as f64));
+        row.insert("ckpt_segments", Json::Num(segs as f64));
+        row.insert("tokens_per_sec", Json::Num(tps));
+        row.insert("last_loss", Json::Num(last_loss as f64));
+        tiers.insert(label, Json::Obj(row));
+    }
+    let mut mem_section = Obj::default();
+    mem_section.insert("backend", Json::Str("cpu-fast".into()));
+    mem_section.insert("steps", Json::Num(tier_steps as f64));
+    mem_section.insert("rows", Json::Obj(tiers));
+    mem_section.insert("verified", Json::Bool(false));
+    match report::update_bench_json(&path, "memory_tiers", Json::Obj(mem_section)) {
+        Ok(()) => println!("wrote memory-tier rows to {}", path.display()),
         Err(e) => eprintln!("could not update {}: {e:#}", path.display()),
     }
 }

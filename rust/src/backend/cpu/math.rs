@@ -233,6 +233,72 @@ pub fn adamw_update(
     }
 }
 
+/// Trust-ratio ceiling for the quantized optimizer path: `|m̂|/√v̂` is ≈1
+/// for exact AdamW (measured ≤ ~1.03 across healthy regimes), but block
+/// quantization can zero a small `v` inside a large-amax block — with a
+/// negative block compensation the decoded `v` clamps to 0 while `m`
+/// keeps its real magnitude, and the unguarded normalized step explodes
+/// to `m̂/ε`-scale. The ceiling binds only in that degenerate case; every
+/// healthy element takes the bitwise-identical unclamped path.
+const INT8_UPDATE_CLIP: f32 = 10.0;
+
+/// One AdamW step over int8-quantized m/v slots (ROADMAP "memory tiers"):
+/// Kahan-compensated decode → exactly the [`adamw_update`] recurrence →
+/// re-encode. Strictly sequential like everything else in this module, and
+/// shared verbatim by both CPU backends, so the quantized optimizer path is
+/// bitwise invariant to `CHRONICALS_THREADS` and `--workers` by
+/// construction.
+///
+/// `m_buf`/`v_buf` are caller-owned scratch (≥ `p.len()`): the reference
+/// backend hands in plain vectors, the fast backend hands in arena leases so
+/// steady-state steps stay allocation-free. Decoded `v` can dip fractionally
+/// below zero through the block-mean compensation; it is clamped before the
+/// square root, and the normalized update is capped at
+/// [`INT8_UPDATE_CLIP`] so a quantization-collapsed `v` cannot blow the
+/// step (the unclamped branch keeps the fp32 op order, so step 1 from
+/// zeroed slots stays bit-identical to [`adamw_update`]).
+#[allow(clippy::too_many_arguments)]
+pub fn adamw_update_int8(
+    p: &mut [f32],
+    g: &[f32],
+    m_slot: &mut crate::quant::Int8Slot,
+    v_slot: &mut crate::quant::Int8Slot,
+    lr: f32,
+    step: f32,
+    weight_decay: f32,
+    m_buf: &mut [f32],
+    v_buf: &mut [f32],
+) {
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    let n = p.len();
+    debug_assert_eq!(g.len(), n);
+    debug_assert_eq!(m_slot.len(), n);
+    debug_assert_eq!(v_slot.len(), n);
+    debug_assert!(m_buf.len() >= n && v_buf.len() >= n);
+    let (m, v) = (&mut m_buf[..n], &mut v_buf[..n]);
+    m_slot.decode_into(m);
+    v_slot.decode_into(v);
+    let bc1 = 1.0 - B1.powf(step);
+    let bc2 = 1.0 - B2.powf(step);
+    for i in 0..n {
+        m[i] = B1 * m[i] + (1.0 - B1) * g[i];
+        v[i] = (B2 * v[i].max(0.0) + (1.0 - B2) * g[i] * g[i]).max(0.0);
+        let m_hat = m[i] / bc1;
+        let v_hat = v[i] / bc2;
+        let denom = v_hat.sqrt() + EPS;
+        let step_term = if (m_hat / denom).abs() > INT8_UPDATE_CLIP {
+            lr * INT8_UPDATE_CLIP.copysign(m_hat)
+        } else {
+            lr * m_hat / denom
+        };
+        p[i] = p[i] * (1.0 - lr * weight_decay) - step_term;
+    }
+    m_slot.encode_from(m);
+    v_slot.encode_from(v);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -394,6 +460,88 @@ mod tests {
         adamw_update(&mut p, &g, &mut m, &mut v, 0.01, 1.0, 0.0);
         assert_close(p[0], 1.0 - 0.01, 1e-4);
         assert_close(p[1], 1.0 + 0.01, 1e-4);
+    }
+
+    #[test]
+    fn adamw_int8_first_step_matches_fp32_exactly() {
+        // zero slots quantize losslessly, so step 1 is bit-identical to
+        // the fp32 path (both start from exact zeros)
+        let g = [0.5f32, -0.25, 0.125, 1.5];
+        let mut p_f = [1.0f32, -2.0, 0.5, 3.0];
+        let mut p_q = p_f;
+        let mut m = [0.0f32; 4];
+        let mut v = [0.0f32; 4];
+        adamw_update(&mut p_f, &g, &mut m, &mut v, 0.01, 1.0, 0.01);
+        let mut ms = crate::quant::Int8Slot::zeros(4);
+        let mut vs = crate::quant::Int8Slot::zeros(4);
+        let (mut mb, mut vb) = (vec![0.0f32; 4], vec![0.0f32; 4]);
+        adamw_update_int8(&mut p_q, &g, &mut ms, &mut vs, 0.01, 1.0, 0.01, &mut mb, &mut vb);
+        for (a, b) in p_f.iter().zip(&p_q) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn adamw_int8_tracks_fp32_over_many_steps() {
+        use crate::util::rng::Rng;
+        let n = 256;
+        let mut rng = Rng::new(17);
+        let mut p_f: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut p_q = p_f.clone();
+        let mut m = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        let mut ms = crate::quant::Int8Slot::zeros(n);
+        let mut vs = crate::quant::Int8Slot::zeros(n);
+        let (mut mb, mut vb) = (vec![0.0f32; n], vec![0.0f32; n]);
+        for step in 1..=50 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+            adamw_update(&mut p_f, &g, &mut m, &mut v, 5e-3, step as f32, 0.0);
+            adamw_update_int8(
+                &mut p_q, &g, &mut ms, &mut vs, 5e-3, step as f32, 0.0, &mut mb, &mut vb,
+            );
+        }
+        // quantized moments distort per-element adaptive scaling but the
+        // trajectories must stay close in norm (drift tier, DESIGN §12)
+        let norm: f32 = p_f.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let diff: f32 = p_f
+            .iter()
+            .zip(&p_q)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt();
+        assert!(diff / norm < 0.05, "rel drift {} too large", diff / norm);
+        assert!(p_q.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn adamw_int8_clamps_quantization_collapsed_v() {
+        // craft the degenerate block: one huge v dominates the scale, a
+        // mid value rounds UP (negative residual drags the compensation
+        // below zero), so the tiny element's v decodes NEGATIVE while its
+        // m keeps real magnitude. Unclamped, the normalized step would be
+        // m_hat/ε-scale (hundreds of lr); the trust-ratio ceiling caps it.
+        let scale = 1.0f32 / 127.0;
+        let v_in = [1.0f32, 0.6 * scale, 1e-9];
+        let m_in = [0.5f32, 0.1, -6e-3];
+        let mut ms = crate::quant::Int8Slot::zeros(3);
+        let mut vs = crate::quant::Int8Slot::zeros(3);
+        ms.encode_from(&m_in);
+        vs.encode_from(&v_in);
+        let mut dec = [0.0f32; 3];
+        vs.decode_into(&mut dec);
+        assert!(dec[2] < 0.0, "premise: collapsed v decodes negative, got {}", dec[2]);
+        let mut p = [0.1f32; 3];
+        let g = [0.0f32, 0.0, 1e-6];
+        let lr = 2e-3f32;
+        let (mut mb, mut vb) = (vec![0.0f32; 3], vec![0.0f32; 3]);
+        adamw_update_int8(&mut p, &g, &mut ms, &mut vs, lr, 5.0, 0.0, &mut mb, &mut vb);
+        let step = (0.1 - p[2]).abs();
+        assert!(
+            step <= lr * INT8_UPDATE_CLIP * 1.001,
+            "clamp must bound the degenerate step, got {step}"
+        );
+        assert!(step > lr * 2.0, "the degenerate element should hit the clamp, got {step}");
+        assert!(p.iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -15,13 +15,14 @@ pub mod model;
 pub use model::{CpuState, LoraCfg, ModelDims};
 
 use super::{
-    AdapterState, Backend, DeviceBatch, DeviceState, FusedOutputs, FusedSlice, RowGrad,
-    StepOutputs,
+    AdapterState, Backend, DeviceBatch, DeviceState, FusedOutputs, FusedSlice, MemoryCfg,
+    RowGrad, StepOutputs,
 };
 use crate::batching::Batch;
 use crate::manifest::{
     DType, ExecutableSpec, Manifest, ModelConfigEcho, Role, StepConfigEcho, TensorSpec,
 };
+use crate::quant::{OptimSnapshot, OptimStates};
 use crate::runtime::HostTensor;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::path::PathBuf;
@@ -269,6 +270,11 @@ pub(crate) fn check_geometry(spec: &ExecutableSpec, b: &Batch) -> Result<()> {
 /// Restore checkpoint tensors into a CPU-family state. Shared by both CPU
 /// backends — they use the same `CpuState` layout, so validation must stay
 /// identical (a fix applied here reaches both).
+///
+/// On a quantized-base state, incoming frozen quantizable matrices are
+/// re-encoded through the state's codec instead of stored dense. Values
+/// from a quantized state's own checkpoint sit on the codec grid, so the
+/// resume roundtrip is bitwise lossless.
 pub(crate) fn load_cpu_params(s: &mut CpuState, params: &[HostTensor]) -> Result<()> {
     if params.len() != s.params.len() {
         bail!(
@@ -289,10 +295,51 @@ pub(crate) fn load_cpu_params(s: &mut CpuState, params: &[HostTensor]) -> Result
         }
         new.as_f32()?; // checkpoints are f32-only
     }
-    for (cur, new) in s.params.iter_mut().zip(params) {
-        *cur = new.clone();
+    for i in 0..params.len() {
+        if s.qbase.get(i).map(|q| q.is_some()) == Some(true) {
+            model::requantize_base_tensor(s, i, params[i].as_f32()?.to_vec())?;
+        } else {
+            s.params[i] = params[i].clone();
+        }
     }
     Ok(())
+}
+
+/// Export a CPU-family state's parameters as dense f32 host tensors (the
+/// checkpoint interchange format): quantized frozen matrices are
+/// dequantized whole into fresh tensors; everything else is cloned.
+pub(crate) fn cpu_state_params(s: &CpuState) -> Result<Vec<HostTensor>> {
+    let mut out = Vec::with_capacity(s.params.len());
+    for (i, t) in s.params.iter().enumerate() {
+        match s.qbase.get(i).and_then(|q| q.as_ref()) {
+            Some(qm) => out.push(HostTensor::f32(qm.dequant(), t.shape().to_vec())),
+            None => out.push(t.clone()),
+        }
+    }
+    Ok(out)
+}
+
+/// Shared [`Backend::configure_memory`] implementation for the CPU-family
+/// backends: optimizer-state codec, then base-weight quantization, then the
+/// checkpoint segment count. Order matters only for error quality — every
+/// tier validates independently.
+pub(crate) fn cpu_configure_memory(s: &mut CpuState, cfg: &MemoryCfg) -> Result<()> {
+    model::set_optim_states(s, cfg.optim_states)?;
+    if let Some(codec) = cfg.base_quant {
+        if s.base_quant != Some(codec) {
+            model::quantize_base(s, codec)?;
+        }
+    }
+    s.ckpt_segments = cfg.ckpt_segments;
+    Ok(())
+}
+
+pub(crate) fn cpu_convert_adapter_optim(
+    adapter: &mut AdapterState,
+    codec: OptimStates,
+) -> Result<()> {
+    let AdapterState::Cpu(a) = adapter;
+    model::set_adapter_optim(a, codec)
 }
 
 pub(crate) fn batch_view(b: &Batch) -> Result<model::BatchView<'_>> {
@@ -592,11 +639,27 @@ impl Backend for CpuBackend {
     }
 
     fn state_params(&self, state: &DeviceState) -> Result<Vec<HostTensor>> {
-        Ok(as_cpu_state(state)?.params.clone())
+        cpu_state_params(as_cpu_state(state)?)
     }
 
     fn load_params(&self, state: &mut DeviceState, params: &[HostTensor]) -> Result<()> {
         load_cpu_params(as_cpu_state_mut(state)?, params)
+    }
+
+    fn configure_memory(&self, state: &mut DeviceState, cfg: &MemoryCfg) -> Result<()> {
+        cpu_configure_memory(as_cpu_state_mut(state)?, cfg)
+    }
+
+    fn optim_snapshot(&self, state: &DeviceState) -> Result<OptimSnapshot> {
+        Ok(model::optim_snapshot(as_cpu_state(state)?))
+    }
+
+    fn load_optim_snapshot(&self, state: &mut DeviceState, snap: &OptimSnapshot) -> Result<()> {
+        model::load_optim_snapshot(as_cpu_state_mut(state)?, snap)
+    }
+
+    fn convert_adapter_optim(&self, adapter: &mut AdapterState, codec: OptimStates) -> Result<()> {
+        cpu_convert_adapter_optim(adapter, codec)
     }
 }
 

@@ -20,11 +20,12 @@
 //! produce bitwise-identical losses, gradients and parameter updates.
 
 use super::math::{
-    adamw_update, linear_bwd_w, linear_bwd_x, linear_fwd, rmsnorm_bwd, rmsnorm_fwd, rope_apply,
-    softmax_xent, swiglu_bwd, swiglu_fwd,
+    adamw_update, adamw_update_int8, linear_bwd_w, linear_bwd_x, linear_fwd, rmsnorm_bwd,
+    rmsnorm_fwd, rope_apply, softmax_xent, swiglu_bwd, swiglu_fwd,
 };
 use crate::backend::{FusedSlice, StepPhases};
 use crate::optim::{classify_param, ParamGroup};
+use crate::quant::{BaseQuant, Int8Slot, OptimSnapshot, OptimStates, QuantMat};
 use crate::runtime::HostTensor;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, ensure, Result};
@@ -81,9 +82,27 @@ pub struct CpuState {
     pub names: Vec<String>,
     pub params: Vec<HostTensor>,
     pub n_trainable: usize,
-    /// AdamW first/second-moment slots, parallel to the trainable prefix.
+    /// AdamW first/second-moment slots, parallel to the trainable prefix
+    /// (entries are empty placeholders when `optim` is `Int8`).
     pub slot_m: Vec<Vec<f32>>,
     pub slot_v: Vec<Vec<f32>>,
+    /// Optimizer-state codec (ROADMAP "memory tiers"). `Int8` stores the
+    /// moments in `qslot_m`/`qslot_v` instead of `slot_m`/`slot_v`.
+    pub optim: OptimStates,
+    /// Quantized AdamW slots, parallel to the trainable prefix (empty when
+    /// `optim` is `Fp32`).
+    pub qslot_m: Vec<Int8Slot>,
+    pub qslot_v: Vec<Int8Slot>,
+    /// Frozen-base weight codec for LoRA tasks; `None` = dense f32 base.
+    pub base_quant: Option<BaseQuant>,
+    /// Quantized frozen weight matrices, parallel to `params` (`Some` only
+    /// for quantized frozen 2-D mats, whose `params` entry then holds an
+    /// empty payload — the FP32 copy is genuinely gone).
+    pub qbase: Vec<Option<QuantMat>>,
+    /// Activation-checkpoint segments (0 = off): backward recomputes each
+    /// segment's interior activations from its boundary instead of caching
+    /// the whole depth.
+    pub ckpt_segments: usize,
 }
 
 /// One batch, viewed as flat `[B·S]` slices.
@@ -178,14 +197,245 @@ pub fn init_state(dims: ModelDims, lora: Option<LoraCfg>, seed: i32) -> CpuState
         .map(|t| vec![0.0; t.elements()])
         .collect();
     let slot_v = slot_m.clone();
-    CpuState { dims, lora, names, params, n_trainable, slot_m, slot_v }
+    CpuState {
+        dims,
+        lora,
+        names,
+        params,
+        n_trainable,
+        slot_m,
+        slot_v,
+        optim: OptimStates::Fp32,
+        qslot_m: Vec::new(),
+        qslot_v: Vec::new(),
+        base_quant: None,
+        qbase: Vec::new(),
+        ckpt_segments: 0,
+    }
+}
+
+/// Switch the state's optimizer-state codec (memory tier 1). Legal only
+/// while every moment slot is still zero — i.e. before the first optimizer
+/// step — because converting a live moment estimate across codecs would be
+/// silently lossy. Zero slots convert exactly, so a fresh int8 run's first
+/// step is bit-identical to the fp32 run's first step.
+pub fn set_optim_states(state: &mut CpuState, codec: OptimStates) -> Result<()> {
+    if state.optim == codec {
+        return Ok(());
+    }
+    let zeroed = match state.optim {
+        OptimStates::Fp32 => state
+            .slot_m
+            .iter()
+            .chain(&state.slot_v)
+            .all(|s| s.iter().all(|&x| x == 0.0)),
+        OptimStates::Int8 => state
+            .qslot_m
+            .iter()
+            .chain(&state.qslot_v)
+            .all(|s| s.q.data.iter().all(|&b| b == 0) && s.comp.iter().all(|&c| c == 0.0)),
+    };
+    ensure!(
+        zeroed,
+        "cannot change the optimizer-state codec from {} to {} after training started: \
+         the moment slots are non-zero and cross-codec migration is not supported — \
+         restart from init or resume a checkpoint saved with the requested codec",
+        state.optim.name(),
+        codec.name()
+    );
+    match codec {
+        OptimStates::Int8 => {
+            state.qslot_m = state.params[..state.n_trainable]
+                .iter()
+                .map(|t| Int8Slot::zeros(t.elements()))
+                .collect();
+            state.qslot_v = state.qslot_m.clone();
+            // keep placeholder entries so index-parallel code (swap_adapter)
+            // stays uniform, but drop the fp32 payloads
+            for s in state.slot_m.iter_mut().chain(state.slot_v.iter_mut()) {
+                *s = Vec::new();
+            }
+        }
+        OptimStates::Fp32 => {
+            state.qslot_m = Vec::new();
+            state.qslot_v = Vec::new();
+            for (s, t) in state
+                .slot_m
+                .iter_mut()
+                .chain(state.slot_v.iter_mut())
+                .zip(state.params[..state.n_trainable].iter().cycle())
+            {
+                *s = vec![0.0; t.elements()];
+            }
+        }
+    }
+    state.optim = codec;
+    Ok(())
+}
+
+/// True for frozen tensors that the base-quant tier stores quantized: the
+/// 2-D projection/MLP/embedding matrices. Norm vectors are 1-D and tiny;
+/// `w_head` feeds the streaming CCE loss — both stay dense f32 (the
+/// production QLoRA pattern).
+pub fn is_quantizable_base(name: &str, shape: &[usize]) -> bool {
+    let short = name.rsplit('.').next().unwrap_or(name);
+    shape.len() == 2 && !short.starts_with("norm") && short != "w_head"
+}
+
+/// Quantize the frozen base weights (memory tier 2). The FP32 payloads of
+/// the quantized tensors are dropped — only the codec bytes remain in the
+/// state; shape metadata is kept for checkpoint interchange. Requires a
+/// LoRA-family state (full fine-tuning has no frozen weights).
+pub fn quantize_base(state: &mut CpuState, codec: BaseQuant) -> Result<()> {
+    ensure!(
+        state.lora.is_some(),
+        "base-weight quantization requires a LoRA-family task: full fine-tuning trains \
+         every matrix, so there is no frozen base to quantize"
+    );
+    ensure!(
+        state.base_quant.is_none(),
+        "base weights are already quantized ({})",
+        state.base_quant.unwrap().name()
+    );
+    let mut qbase: Vec<Option<QuantMat>> = vec![None; state.params.len()];
+    for i in state.n_trainable..state.params.len() {
+        let shape = state.params[i].shape().to_vec();
+        if !is_quantizable_base(&state.names[i], &shape) {
+            continue;
+        }
+        let qm = QuantMat::encode(state.params[i].as_f32()?, codec);
+        qbase[i] = Some(qm);
+        // drop the dense payload; the shape survives for interchange
+        state.params[i] = HostTensor::F32 { data: Vec::new(), shape };
+    }
+    state.qbase = qbase;
+    state.base_quant = Some(codec);
+    Ok(())
+}
+
+/// Re-quantize a frozen tensor after a dense f32 load (checkpoint restore
+/// into a quantized state). Values coming from a quantized state's own
+/// checkpoint sit on the codec grid, so this roundtrip is bitwise lossless.
+pub fn requantize_base_tensor(state: &mut CpuState, i: usize, data: Vec<f32>) -> Result<()> {
+    let codec = state
+        .base_quant
+        .ok_or_else(|| anyhow!("state has no base-weight codec configured"))?;
+    ensure!(
+        state.qbase.get(i).map(|q| q.is_some()) == Some(true),
+        "parameter {i} is not a quantized base tensor"
+    );
+    state.qbase[i] = Some(QuantMat::encode(&data, codec));
+    Ok(())
+}
+
+/// Total bytes the optimizer slots occupy under the current codec — the
+/// numerator of the ≥3.5x memory pin.
+pub fn optim_state_bytes(state: &CpuState) -> usize {
+    match state.optim {
+        OptimStates::Fp32 => state
+            .slot_m
+            .iter()
+            .chain(&state.slot_v)
+            .map(|s| s.len() * 4)
+            .sum(),
+        OptimStates::Int8 => state
+            .qslot_m
+            .iter()
+            .chain(&state.qslot_v)
+            .map(|s| s.storage_bytes())
+            .sum(),
+    }
+}
+
+/// Bytes held by the frozen base weights under the current codec (dense
+/// f32 tensors count at 4 bytes/element).
+pub fn base_weight_bytes(state: &CpuState) -> usize {
+    let mut total = 0usize;
+    for i in state.n_trainable..state.params.len() {
+        total += match state.qbase.get(i).and_then(|q| q.as_ref()) {
+            Some(qm) => qm.storage_bytes(),
+            None => state.params[i].elements() * 4,
+        };
+    }
+    total
+}
+
+/// Export the optimizer slots for checkpointing (bitwise: int8 slots are
+/// serialized as their raw bytes + scales + compensations).
+pub fn optim_snapshot(state: &CpuState) -> OptimSnapshot {
+    match state.optim {
+        OptimStates::Fp32 => OptimSnapshot::Fp32 {
+            m: state.slot_m.clone(),
+            v: state.slot_v.clone(),
+        },
+        OptimStates::Int8 => OptimSnapshot::Int8 {
+            m: state.qslot_m.clone(),
+            v: state.qslot_v.clone(),
+        },
+    }
+}
+
+/// Restore optimizer slots from a checkpoint snapshot. The snapshot codec
+/// must match the state's configured codec: fp32↔int8 migration of live
+/// moments is rejected rather than silently rounded.
+pub fn load_optim_snapshot(state: &mut CpuState, snap: &OptimSnapshot) -> Result<()> {
+    ensure!(
+        snap.len() == state.n_trainable,
+        "optimizer snapshot has {} slot pairs but the state has {} trainable tensors",
+        snap.len(),
+        state.n_trainable
+    );
+    match (state.optim, snap) {
+        (OptimStates::Fp32, OptimSnapshot::Fp32 { m, v }) => {
+            for (i, (sm, sv)) in m.iter().zip(v).enumerate() {
+                let n = state.params[i].elements();
+                ensure!(
+                    sm.len() == n && sv.len() == n,
+                    "optimizer slot {i} length {} != parameter elements {n}",
+                    sm.len()
+                );
+            }
+            state.slot_m = m.clone();
+            state.slot_v = v.clone();
+        }
+        (OptimStates::Int8, OptimSnapshot::Int8 { m, v }) => {
+            for (i, (sm, sv)) in m.iter().zip(v).enumerate() {
+                let n = state.params[i].elements();
+                ensure!(
+                    sm.len() == n && sv.len() == n,
+                    "optimizer slot {i} length {} != parameter elements {n}",
+                    sm.len()
+                );
+            }
+            state.qslot_m = m.clone();
+            state.qslot_v = v.clone();
+        }
+        (want, got) => bail!(
+            "optimizer-state codec mismatch: the checkpoint stores {} moment slots but the \
+             session is configured for --optim-states {}; fp32<->int8 optimizer-state \
+             migration is not supported — resume with --optim-states {} or restart training \
+             from scratch",
+            got.codec().name(),
+            want.name(),
+            got.codec().name()
+        ),
+    }
+    Ok(())
 }
 
 /// Name → index lookup over the state's parameter list. Shared with the
 /// fast backend, which walks the same state layout.
+///
+/// When built via [`ParamIdx::for_state`] on a quantized-base state, each
+/// quantized frozen matrix is dequantized **whole, once, up front** — the
+/// reference backend's naive implementation of the per-tile dequant
+/// contract (same elementwise decode, so the values are bit-identical to
+/// the fast backend's tile-at-a-time leases).
 pub(crate) struct ParamIdx<'a> {
     params: &'a [HostTensor],
     idx: HashMap<&'a str, usize>,
+    /// Dense views of quantized frozen tensors, parallel to `params`.
+    dense: Vec<Option<Vec<f32>>>,
 }
 
 impl<'a> ParamIdx<'a> {
@@ -195,7 +445,21 @@ impl<'a> ParamIdx<'a> {
             .enumerate()
             .map(|(i, n)| (n.as_str(), i))
             .collect();
-        ParamIdx { params, idx }
+        ParamIdx { params, idx, dense: Vec::new() }
+    }
+
+    /// Build the accessor for a state, dequantizing any quantized base
+    /// tensors into dense scratch (the naive oracle path).
+    pub(crate) fn for_state(state: &'a CpuState) -> ParamIdx<'a> {
+        let mut p = ParamIdx::new(&state.names, &state.params);
+        if state.base_quant.is_some() {
+            p.dense = state
+                .qbase
+                .iter()
+                .map(|q| q.as_ref().map(|qm| qm.dequant()))
+                .collect();
+        }
+        p
     }
 
     pub(crate) fn id(&self, name: &str) -> Result<usize> {
@@ -205,8 +469,12 @@ impl<'a> ParamIdx<'a> {
             .ok_or_else(|| anyhow!("state has no parameter '{name}' — variant/state mismatch"))
     }
 
-    pub(crate) fn get(&self, name: &str) -> Result<&'a [f32]> {
-        self.params[self.id(name)?].as_f32()
+    pub(crate) fn get(&self, name: &str) -> Result<&[f32]> {
+        let i = self.id(name)?;
+        if let Some(d) = self.dense.get(i).and_then(|o| o.as_ref()) {
+            return Ok(d);
+        }
+        self.params[i].as_f32()
     }
 }
 
@@ -238,21 +506,9 @@ pub(crate) struct FinalCache {
     n_valid: usize,
 }
 
-/// Forward pass; fills `caches` when provided (training) and returns the
-/// summed loss + valid-target count. Crate-visible so the fast backend's
-/// unit tests can compare per-parameter gradients against this oracle.
-pub(crate) fn forward(
-    state: &CpuState,
-    bv: &BatchView,
-    caches: Option<(&mut Vec<LayerCache>, &mut Option<FinalCache>)>,
-) -> Result<(f32, usize)> {
-    let dims = &state.dims;
-    let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
-    let (hq, hkv, hd) = (dims.n_heads, dims.n_kv_heads, dims.head_dim());
-    let dkv = dims.d_kv();
-    let t = bv.t();
-    let p = ParamIdx::new(&state.names, &state.params);
-
+/// Reject out-of-range tokens/targets before any compute.
+fn validate_batch(state: &CpuState, bv: &BatchView) -> Result<()> {
+    let v = state.dims.vocab;
     for (i, &tok) in bv.tokens.iter().enumerate() {
         if tok < 0 || tok as usize >= v {
             bail!("token id {tok} at position {i} out of vocab range 0..{v}");
@@ -263,109 +519,137 @@ pub(crate) fn forward(
             bail!("target id {tgt} at position {i} out of vocab range");
         }
     }
+    Ok(())
+}
 
+/// Token-embedding gather: the depth-0 activation.
+fn embed_fwd(state: &CpuState, p: &ParamIdx, bv: &BatchView) -> Result<Vec<f32>> {
+    let d = state.dims.d_model;
+    let t = bv.t();
     let embed = p.get("embed")?;
     let mut x = vec![0.0f32; t * d];
     for ti in 0..t {
         let tok = bv.tokens[ti] as usize;
         x[ti * d..(ti + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
     }
+    Ok(x)
+}
 
-    let mut caches = caches;
+/// One transformer layer forward. Consumes `x_in`, returns `x_out` and —
+/// when `want_cache` — the layer's backward cache. The op sequence is
+/// identical either way, so cache-free (checkpointed) and cached forwards
+/// produce bitwise-equal activations.
+pub(crate) fn layer_fwd(
+    state: &CpuState,
+    p: &ParamIdx,
+    bv: &BatchView,
+    l: usize,
+    x_in: Vec<f32>,
+    want_cache: bool,
+) -> Result<(Vec<f32>, Option<LayerCache>)> {
+    let dims = &state.dims;
+    let (d, f) = (dims.d_model, dims.d_ff);
+    let (hq, hkv, hd) = (dims.n_heads, dims.n_kv_heads, dims.head_dim());
+    let dkv = dims.d_kv();
+    let t = bv.t();
+    let pre = format!("layer_{l:02}.");
 
-    for l in 0..dims.n_layers {
-        let pre = format!("layer_{l:02}.");
-        let x_in = x;
+    let mut h1 = vec![0.0f32; t * d];
+    let mut rstd1 = vec![0.0f32; t];
+    rmsnorm_fwd(&x_in, p.get(&format!("{pre}norm1"))?, t, d, &mut h1, &mut rstd1);
 
-        let mut h1 = vec![0.0f32; t * d];
-        let mut rstd1 = vec![0.0f32; t];
-        rmsnorm_fwd(&x_in, p.get(&format!("{pre}norm1"))?, t, d, &mut h1, &mut rstd1);
+    let mut q = vec![0.0f32; t * d];
+    linear_fwd(&h1, p.get(&format!("{pre}wq"))?, t, d, d, &mut q);
+    let mut k = vec![0.0f32; t * dkv];
+    linear_fwd(&h1, p.get(&format!("{pre}wk"))?, t, d, dkv, &mut k);
+    let mut vv = vec![0.0f32; t * dkv];
+    linear_fwd(&h1, p.get(&format!("{pre}wv"))?, t, d, dkv, &mut vv);
 
-        let mut q = vec![0.0f32; t * d];
-        linear_fwd(&h1, p.get(&format!("{pre}wq"))?, t, d, d, &mut q);
-        let mut k = vec![0.0f32; t * dkv];
-        linear_fwd(&h1, p.get(&format!("{pre}wk"))?, t, d, dkv, &mut k);
-        let mut vv = vec![0.0f32; t * dkv];
-        linear_fwd(&h1, p.get(&format!("{pre}wv"))?, t, d, dkv, &mut vv);
-
-        let (mut hq_a, mut hv_a) = (None, None);
-        if let Some(lc) = &state.lora {
-            let r = lc.rank;
-            let s = lc.scale();
-            let mut ha = vec![0.0f32; t * r];
-            linear_fwd(&h1, p.get(&format!("{pre}wq_a"))?, t, d, r, &mut ha);
-            let mut dq = vec![0.0f32; t * d];
-            linear_fwd(&ha, p.get(&format!("{pre}wq_b"))?, t, r, d, &mut dq);
-            for i in 0..t * d {
-                q[i] += s * dq[i];
-            }
-            hq_a = Some(ha);
-
-            let mut ha = vec![0.0f32; t * r];
-            linear_fwd(&h1, p.get(&format!("{pre}wv_a"))?, t, d, r, &mut ha);
-            let mut dv = vec![0.0f32; t * dkv];
-            linear_fwd(&ha, p.get(&format!("{pre}wv_b"))?, t, r, dkv, &mut dv);
-            for i in 0..t * dkv {
-                vv[i] += s * dv[i];
-            }
-            hv_a = Some(ha);
-        }
-
-        rope_apply(&mut q, bv.pos, t, hq, hd, 1.0);
-        rope_apply(&mut k, bv.pos, t, hkv, hd, 1.0);
-
-        let mut att = vec![0.0f32; t * d];
-        let mut probs = vec![0.0f32; bv.bsz * hq * bv.seq * bv.seq];
-        attention_fwd(&q, &k, &vv, bv, hq, hkv, hd, &mut att, &mut probs);
-
-        let mut ao = vec![0.0f32; t * d];
-        linear_fwd(&att, p.get(&format!("{pre}wo"))?, t, d, d, &mut ao);
-        let mut x_mid = x_in.clone();
+    let (mut hq_a, mut hv_a) = (None, None);
+    if let Some(lc) = &state.lora {
+        let r = lc.rank;
+        let s = lc.scale();
+        let mut ha = vec![0.0f32; t * r];
+        linear_fwd(&h1, p.get(&format!("{pre}wq_a"))?, t, d, r, &mut ha);
+        let mut dq = vec![0.0f32; t * d];
+        linear_fwd(&ha, p.get(&format!("{pre}wq_b"))?, t, r, d, &mut dq);
         for i in 0..t * d {
-            x_mid[i] += ao[i];
+            q[i] += s * dq[i];
         }
+        hq_a = Some(ha);
 
-        let mut h2 = vec![0.0f32; t * d];
-        let mut rstd2 = vec![0.0f32; t];
-        rmsnorm_fwd(&x_mid, p.get(&format!("{pre}norm2"))?, t, d, &mut h2, &mut rstd2);
-        let mut gate = vec![0.0f32; t * f];
-        linear_fwd(&h2, p.get(&format!("{pre}w_gate"))?, t, d, f, &mut gate);
-        let mut up = vec![0.0f32; t * f];
-        linear_fwd(&h2, p.get(&format!("{pre}w_up"))?, t, d, f, &mut up);
-        let mut y = vec![0.0f32; t * f];
-        swiglu_fwd(&gate, &up, &mut y);
-        let mut mlp = vec![0.0f32; t * d];
-        linear_fwd(&y, p.get(&format!("{pre}w_down"))?, t, f, d, &mut mlp);
-
-        let mut x_out = x_mid.clone();
-        for i in 0..t * d {
-            x_out[i] += mlp[i];
+        let mut ha = vec![0.0f32; t * r];
+        linear_fwd(&h1, p.get(&format!("{pre}wv_a"))?, t, d, r, &mut ha);
+        let mut dv = vec![0.0f32; t * dkv];
+        linear_fwd(&ha, p.get(&format!("{pre}wv_b"))?, t, r, dkv, &mut dv);
+        for i in 0..t * dkv {
+            vv[i] += s * dv[i];
         }
-
-        if let Some((lcs, _)) = caches.as_mut() {
-            lcs.push(LayerCache {
-                x_in,
-                h1,
-                rstd1,
-                q,
-                k,
-                v: vv,
-                hq_a,
-                hv_a,
-                probs,
-                att,
-                x_mid,
-                h2,
-                rstd2,
-                gate,
-                up,
-                y,
-            });
-        }
-        x = x_out;
+        hv_a = Some(ha);
     }
 
-    let x_f = x;
+    rope_apply(&mut q, bv.pos, t, hq, hd, 1.0);
+    rope_apply(&mut k, bv.pos, t, hkv, hd, 1.0);
+
+    let mut att = vec![0.0f32; t * d];
+    let mut probs = vec![0.0f32; bv.bsz * hq * bv.seq * bv.seq];
+    attention_fwd(&q, &k, &vv, bv, hq, hkv, hd, &mut att, &mut probs);
+
+    let mut ao = vec![0.0f32; t * d];
+    linear_fwd(&att, p.get(&format!("{pre}wo"))?, t, d, d, &mut ao);
+    let mut x_mid = x_in.clone();
+    for i in 0..t * d {
+        x_mid[i] += ao[i];
+    }
+
+    let mut h2 = vec![0.0f32; t * d];
+    let mut rstd2 = vec![0.0f32; t];
+    rmsnorm_fwd(&x_mid, p.get(&format!("{pre}norm2"))?, t, d, &mut h2, &mut rstd2);
+    let mut gate = vec![0.0f32; t * f];
+    linear_fwd(&h2, p.get(&format!("{pre}w_gate"))?, t, d, f, &mut gate);
+    let mut up = vec![0.0f32; t * f];
+    linear_fwd(&h2, p.get(&format!("{pre}w_up"))?, t, d, f, &mut up);
+    let mut y = vec![0.0f32; t * f];
+    swiglu_fwd(&gate, &up, &mut y);
+    let mut mlp = vec![0.0f32; t * d];
+    linear_fwd(&y, p.get(&format!("{pre}w_down"))?, t, f, d, &mut mlp);
+
+    let mut x_out = x_mid.clone();
+    for i in 0..t * d {
+        x_out[i] += mlp[i];
+    }
+
+    let cache = want_cache.then_some(LayerCache {
+        x_in,
+        h1,
+        rstd1,
+        q,
+        k,
+        v: vv,
+        hq_a,
+        hv_a,
+        probs,
+        att,
+        x_mid,
+        h2,
+        rstd2,
+        gate,
+        up,
+        y,
+    });
+    Ok((x_out, cache))
+}
+
+/// Final norm + head + masked cross-entropy. Consumes `x_f`.
+pub(crate) fn head_fwd(
+    state: &CpuState,
+    p: &ParamIdx,
+    bv: &BatchView,
+    x_f: Vec<f32>,
+    want_cache: bool,
+) -> Result<(f32, usize, Option<FinalCache>)> {
+    let (d, v) = (state.dims.d_model, state.dims.vocab);
+    let t = bv.t();
     let mut hf = vec![0.0f32; t * d];
     let mut rstd_f = vec![0.0f32; t];
     rmsnorm_fwd(&x_f, p.get("norm_f")?, t, d, &mut hf, &mut rstd_f);
@@ -373,9 +657,33 @@ pub(crate) fn forward(
     linear_fwd(&hf, p.get("w_head")?, t, d, v, &mut logits);
     let mut probs = vec![0.0f32; t * v];
     let (loss_sum, n_valid) = softmax_xent(&logits, bv.targets, t, v, &mut probs);
+    let fc = want_cache.then_some(FinalCache { x_f, hf, rstd_f, probs, n_valid });
+    Ok((loss_sum, n_valid, fc))
+}
 
-    if let Some((_, fc)) = caches.as_mut() {
-        **fc = Some(FinalCache { x_f, hf, rstd_f, probs, n_valid });
+/// Forward pass; fills `caches` when provided (training) and returns the
+/// summed loss + valid-target count. Crate-visible so the fast backend's
+/// unit tests can compare per-parameter gradients against this oracle.
+pub(crate) fn forward(
+    state: &CpuState,
+    bv: &BatchView,
+    caches: Option<(&mut Vec<LayerCache>, &mut Option<FinalCache>)>,
+) -> Result<(f32, usize)> {
+    let p = ParamIdx::for_state(state);
+    validate_batch(state, bv)?;
+    let mut x = embed_fwd(state, &p, bv)?;
+    let mut caches = caches;
+    for l in 0..state.dims.n_layers {
+        let (x_out, cache) = layer_fwd(state, &p, bv, l, x, caches.is_some())?;
+        if let Some((lcs, _)) = caches.as_mut() {
+            lcs.push(cache.expect("cache requested"));
+        }
+        x = x_out;
+    }
+    let want = caches.is_some();
+    let (loss_sum, n_valid, fc) = head_fwd(state, &p, bv, x, want)?;
+    if let Some((_, slot)) = caches.as_mut() {
+        **slot = fc;
     }
     Ok((loss_sum, n_valid))
 }
@@ -530,22 +838,17 @@ pub(crate) fn attention_bwd(
 /// Full backward pass. Returns per-parameter gradients aligned with
 /// `state.params` (frozen entries included; callers use the trainable
 /// prefix). Crate-visible as the gradient oracle for fast-backend tests.
-pub(crate) fn backward(
+/// Loss → final-norm gradient: produces `dx` at the last layer's output
+/// and accumulates the head/norm_f weight gradients.
+pub(crate) fn head_bwd(
     state: &CpuState,
+    p: &ParamIdx,
     bv: &BatchView,
-    layer_caches: &[LayerCache],
     fc: &FinalCache,
-) -> Result<Vec<Vec<f32>>> {
-    let dims = &state.dims;
-    let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
-    let (hq, hkv, hd) = (dims.n_heads, dims.n_kv_heads, dims.head_dim());
-    let dkv = dims.d_kv();
+    grads: &mut [Vec<f32>],
+) -> Result<Vec<f32>> {
+    let (d, v) = (state.dims.d_model, state.dims.vocab);
     let t = bv.t();
-    let p = ParamIdx::new(&state.names, &state.params);
-    let mut grads: Vec<Vec<f32>> = state.params.iter().map(|t| vec![0.0; t.elements()]).collect();
-    // frozen parameters (indices >= n_trainable, i.e. the LoRA base) never
-    // feed grad_norm or AdamW, so their weight-gradient accumulation is
-    // skipped outright — the dx chain through them is still computed
     let nt = state.n_trainable;
     let n_valid = fc.n_valid.max(1) as f32;
 
@@ -574,11 +877,32 @@ pub(crate) fn backward(
     let mut dx = vec![0.0f32; t * d];
     let i_nf = p.id("norm_f")?;
     rmsnorm_bwd(&fc.x_f, p.get("norm_f")?, &fc.rstd_f, &dhf, t, d, &mut dx, &mut grads[i_nf]);
+    Ok(dx)
+}
 
-    for l in (0..dims.n_layers).rev() {
-        let pre = format!("layer_{l:02}.");
-        let c = &layer_caches[l];
+/// One transformer layer backward: consumes `dx` at the layer's output,
+/// returns `dx` at its input, accumulating trainable weight gradients.
+/// Frozen parameters (indices >= n_trainable, i.e. the LoRA base) never
+/// feed grad_norm or AdamW, so their weight-gradient accumulation is
+/// skipped outright — the dx chain through them is still computed.
+pub(crate) fn layer_bwd(
+    state: &CpuState,
+    p: &ParamIdx,
+    bv: &BatchView,
+    l: usize,
+    c: &LayerCache,
+    dx: Vec<f32>,
+    grads: &mut [Vec<f32>],
+) -> Result<Vec<f32>> {
+    let dims = &state.dims;
+    let (d, f) = (dims.d_model, dims.d_ff);
+    let (hq, hkv, hd) = (dims.n_heads, dims.n_kv_heads, dims.head_dim());
+    let dkv = dims.d_kv();
+    let t = bv.t();
+    let nt = state.n_trainable;
+    let pre = format!("layer_{l:02}.");
 
+    {
         // x_out = x_mid + y @ w_down.T
         let i_down = p.id(&format!("{pre}w_down"))?;
         if i_down < nt {
@@ -690,11 +1014,23 @@ pub(crate) fn backward(
             &mut dx_in,
             &mut grads[i_n1],
         );
-        dx = dx_in;
+        Ok(dx_in)
     }
+}
 
+/// Scatter-add the depth-0 gradient into the embedding rows (trainable
+/// full-FT path only — the embed is frozen under LoRA).
+pub(crate) fn embed_bwd(
+    state: &CpuState,
+    p: &ParamIdx,
+    bv: &BatchView,
+    dx: &[f32],
+    grads: &mut [Vec<f32>],
+) -> Result<()> {
+    let d = state.dims.d_model;
+    let t = bv.t();
     let i_embed = p.id("embed")?;
-    if i_embed < nt {
+    if i_embed < state.n_trainable {
         for ti in 0..t {
             let tok = bv.tokens[ti] as usize;
             let ge = &mut grads[i_embed][tok * d..(tok + 1) * d];
@@ -703,7 +1039,92 @@ pub(crate) fn backward(
             }
         }
     }
+    Ok(())
+}
+
+pub(crate) fn backward(
+    state: &CpuState,
+    bv: &BatchView,
+    layer_caches: &[LayerCache],
+    fc: &FinalCache,
+) -> Result<Vec<Vec<f32>>> {
+    let p = ParamIdx::for_state(state);
+    let mut grads: Vec<Vec<f32>> = state.params.iter().map(|t| vec![0.0; t.elements()]).collect();
+    let mut dx = head_bwd(state, &p, bv, fc, &mut grads)?;
+    for l in (0..state.dims.n_layers).rev() {
+        dx = layer_bwd(state, &p, bv, l, &layer_caches[l], dx, &mut grads)?;
+    }
+    embed_bwd(state, &p, bv, &dx, &mut grads)?;
     Ok(grads)
+}
+
+/// Segment boundaries for `--ckpt-segments N` over `n_layers`: the first
+/// `n_layers % segs` segments get one extra layer.
+pub(crate) fn ckpt_segment_starts(n_layers: usize, segs: usize) -> Vec<usize> {
+    let segs = segs.clamp(1, n_layers.max(1));
+    let base = n_layers / segs;
+    let rem = n_layers % segs;
+    let mut starts = Vec::with_capacity(segs);
+    let mut at = 0usize;
+    for s in 0..segs {
+        starts.push(at);
+        at += base + usize::from(s < rem);
+    }
+    starts
+}
+
+/// Segment-checkpointed forward + backward (memory tier 3): the forward
+/// runs cache-free, cloning only the boundary activation at each segment
+/// start; the backward recomputes one segment's caches at a time, so at
+/// most one segment's worth of `LayerCache`s is ever live. The recompute
+/// replays the exact op sequence of `layer_fwd`, so loss and gradients are
+/// bitwise equal to the cache-everything path — only peak activation
+/// memory changes.
+fn grads_checkpointed(
+    state: &CpuState,
+    bv: &BatchView,
+    segs: usize,
+) -> Result<(f32, usize, Vec<Vec<f32>>, f64, f64)> {
+    let nl = state.dims.n_layers;
+    let starts = ckpt_segment_starts(nl, segs);
+    let p = ParamIdx::for_state(state);
+    validate_batch(state, bv)?;
+
+    let t_fwd = Instant::now();
+    let mut x = embed_fwd(state, &p, bv)?;
+    let mut boundaries: Vec<Vec<f32>> = Vec::with_capacity(starts.len());
+    for l in 0..nl {
+        if starts.contains(&l) {
+            boundaries.push(x.clone());
+        }
+        let (x_out, _) = layer_fwd(state, &p, bv, l, x, false)?;
+        x = x_out;
+    }
+    let (loss_sum, n_valid, fc) = head_fwd(state, &p, bv, x, true)?;
+    let fwd_s = t_fwd.elapsed().as_secs_f64();
+    let fc = fc.expect("head cache requested");
+
+    let t_bwd = Instant::now();
+    let mut grads: Vec<Vec<f32>> = state.params.iter().map(|t| vec![0.0; t.elements()]).collect();
+    let mut dx = head_bwd(state, &p, bv, &fc, &mut grads)?;
+    for s in (0..starts.len()).rev() {
+        let lo = starts[s];
+        let hi = if s + 1 < starts.len() { starts[s + 1] } else { nl };
+        // recompute this segment's caches from its boundary activation
+        let mut xx = boundaries.pop().expect("segment boundary");
+        let mut caches: Vec<LayerCache> = Vec::with_capacity(hi - lo);
+        for l in lo..hi {
+            let (x_out, cache) = layer_fwd(state, &p, bv, l, xx, true)?;
+            caches.push(cache.expect("cache requested"));
+            xx = x_out;
+        }
+        for l in (lo..hi).rev() {
+            dx = layer_bwd(state, &p, bv, l, &caches[l - lo], dx, &mut grads)?;
+        }
+    }
+    embed_bwd(state, &p, bv, &dx, &mut grads)?;
+    let bwd_s = t_bwd.elapsed().as_secs_f64();
+    Ok((loss_sum, n_valid, grads, fwd_s, bwd_s))
 }
 
 /// Metrics returned by one reference train step.
@@ -739,22 +1160,30 @@ pub fn train_step(
     lr: f32,
     lr_b: f32,
 ) -> Result<StepOut> {
-    let mut layer_caches: Vec<LayerCache> = Vec::with_capacity(state.dims.n_layers);
-    let mut final_cache: Option<FinalCache> = None;
-    let t_fwd = Instant::now();
-    let (loss_sum, n_valid) = forward(state, bv, Some((&mut layer_caches, &mut final_cache)))?;
-    let fwd_s = t_fwd.elapsed().as_secs_f64();
-    let loss = loss_sum / n_valid.max(1) as f32;
-
-    if broken {
+    let (loss_sum, n_valid, grads, fwd_s, bwd_s) = if broken {
+        // broken mode never needs gradients: plain forward, loss only
+        let t_fwd = Instant::now();
+        let (loss_sum, n_valid) = forward(state, bv, None)?;
+        let fwd_s = t_fwd.elapsed().as_secs_f64();
+        let loss = loss_sum / n_valid.max(1) as f32;
         let phases = StepPhases { fwd_s, ..StepPhases::default() };
         return Ok(StepOut { loss, grad_norm: 0.0, n_tokens: n_valid as f32, phases });
-    }
-
-    let fc = final_cache.ok_or_else(|| anyhow!("forward did not fill caches"))?;
-    let t_bwd = Instant::now();
-    let grads = backward(state, bv, &layer_caches, &fc)?;
-    let bwd_s = t_bwd.elapsed().as_secs_f64();
+    } else if state.ckpt_segments > 0 {
+        grads_checkpointed(state, bv, state.ckpt_segments)?
+    } else {
+        let mut layer_caches: Vec<LayerCache> = Vec::with_capacity(state.dims.n_layers);
+        let mut final_cache: Option<FinalCache> = None;
+        let t_fwd = Instant::now();
+        let (loss_sum, n_valid) =
+            forward(state, bv, Some((&mut layer_caches, &mut final_cache)))?;
+        let fwd_s = t_fwd.elapsed().as_secs_f64();
+        let fc = final_cache.ok_or_else(|| anyhow!("forward did not fill caches"))?;
+        let t_bwd = Instant::now();
+        let grads = backward(state, bv, &layer_caches, &fc)?;
+        let bwd_s = t_bwd.elapsed().as_secs_f64();
+        (loss_sum, n_valid, grads, fwd_s, bwd_s)
+    };
+    let loss = loss_sum / n_valid.max(1) as f32;
 
     let t_optim = Instant::now();
     let mut sq = 0.0f32;
@@ -765,25 +1194,71 @@ pub fn train_step(
     }
     let grad_norm = sq.sqrt();
 
-    for i in 0..state.n_trainable {
-        let lr_p = match classify_param(&state.names[i]) {
-            ParamGroup::LoraB => lr_b,
-            _ => lr,
-        };
-        let param = state.params[i].as_f32_mut()?;
-        adamw_update(
-            param,
-            &grads[i],
-            &mut state.slot_m[i],
-            &mut state.slot_v[i],
-            lr_p,
-            step as f32,
-            WEIGHT_DECAY,
-        );
-    }
+    apply_adamw(state, |i| &grads[i], step, lr, lr_b)?;
     let optim_s = t_optim.elapsed().as_secs_f64();
     let phases = StepPhases { fwd_s, bwd_s, optim_s };
     Ok(StepOut { loss, grad_norm, n_tokens: n_valid as f32, phases })
+}
+
+/// One AdamW pass over the trainable prefix, dispatching on the
+/// optimizer-state codec. `grad_of(i)` yields the gradient slice for
+/// trainable parameter `i`. The int8 path decodes the moment slots into
+/// two scratch buffers (allocated once per call, sized to the largest
+/// trainable tensor), runs the identical fp32 recurrence, and re-encodes —
+/// strictly sequential, so it is bitwise invariant across thread/worker
+/// counts by construction.
+fn apply_adamw<'g>(
+    state: &mut CpuState,
+    grad_of: impl Fn(usize) -> &'g [f32],
+    step: u64,
+    lr: f32,
+    lr_b: f32,
+) -> Result<()> {
+    let nt = state.n_trainable;
+    match state.optim {
+        OptimStates::Fp32 => {
+            for i in 0..nt {
+                let lr_p = match classify_param(&state.names[i]) {
+                    ParamGroup::LoraB => lr_b,
+                    _ => lr,
+                };
+                let param = state.params[i].as_f32_mut()?;
+                adamw_update(
+                    param,
+                    grad_of(i),
+                    &mut state.slot_m[i],
+                    &mut state.slot_v[i],
+                    lr_p,
+                    step as f32,
+                    WEIGHT_DECAY,
+                );
+            }
+        }
+        OptimStates::Int8 => {
+            let maxn = state.params[..nt].iter().map(|t| t.elements()).max().unwrap_or(0);
+            let mut m_buf = vec![0.0f32; maxn];
+            let mut v_buf = vec![0.0f32; maxn];
+            for i in 0..nt {
+                let lr_p = match classify_param(&state.names[i]) {
+                    ParamGroup::LoraB => lr_b,
+                    _ => lr,
+                };
+                let param = state.params[i].as_f32_mut()?;
+                adamw_update_int8(
+                    param,
+                    grad_of(i),
+                    &mut state.qslot_m[i],
+                    &mut state.qslot_v[i],
+                    lr_p,
+                    step as f32,
+                    WEIGHT_DECAY,
+                    &mut m_buf,
+                    &mut v_buf,
+                );
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Total element count of the trainable-gradient vector — the lane length
@@ -838,28 +1313,15 @@ pub fn apply_flat_grads(
     lr: f32,
     lr_b: f32,
 ) -> Result<()> {
+    let mut offs = Vec::with_capacity(state.n_trainable + 1);
     let mut off = 0usize;
-    for i in 0..state.n_trainable {
-        let lr_p = match classify_param(&state.names[i]) {
-            ParamGroup::LoraB => lr_b,
-            _ => lr,
-        };
-        let param = state.params[i].as_f32_mut()?;
-        let n = param.len();
-        ensure!(off + n <= flat.len(), "flat gradient underflow at parameter {i}");
-        adamw_update(
-            param,
-            &flat[off..off + n],
-            &mut state.slot_m[i],
-            &mut state.slot_v[i],
-            lr_p,
-            step as f32,
-            WEIGHT_DECAY,
-        );
-        off += n;
+    for t in &state.params[..state.n_trainable] {
+        offs.push(off);
+        off += t.elements();
     }
+    offs.push(off);
     ensure!(off == flat.len(), "flat gradient length {} != trainable elements {off}", flat.len());
-    Ok(())
+    apply_adamw(state, |i| &flat[offs[i]..offs[i + 1]], step, lr, lr_b)
 }
 
 /// Per-tenant adapter state for the serve subsystem (DESIGN.md §11): the
@@ -875,6 +1337,11 @@ pub struct CpuAdapter {
     pub params: Vec<HostTensor>,
     pub slot_m: Vec<Vec<f32>>,
     pub slot_v: Vec<Vec<f32>>,
+    /// Optimizer-state codec for this tenant (must match the workspace's
+    /// at swap time — enforced by [`swap_adapter`]).
+    pub optim: OptimStates,
+    pub qslot_m: Vec<Int8Slot>,
+    pub qslot_v: Vec<Int8Slot>,
 }
 
 /// Initialize a fresh per-tenant adapter. Draw-order contract: the LoRA
@@ -901,7 +1368,60 @@ pub fn init_adapter(dims: ModelDims, lora: LoraCfg, seed: i32) -> CpuAdapter {
     }
     let slot_m: Vec<Vec<f32>> = params.iter().map(|t| vec![0.0; t.elements()]).collect();
     let slot_v = slot_m.clone();
-    CpuAdapter { dims, lora, names, params, slot_m, slot_v }
+    CpuAdapter {
+        dims,
+        lora,
+        names,
+        params,
+        slot_m,
+        slot_v,
+        optim: OptimStates::Fp32,
+        qslot_m: Vec::new(),
+        qslot_v: Vec::new(),
+    }
+}
+
+/// Switch a tenant adapter's optimizer-state codec. Like
+/// [`set_optim_states`], only legal before any step has touched the
+/// moments — converting populated slots would silently change the
+/// training trajectory.
+pub fn set_adapter_optim(ad: &mut CpuAdapter, codec: OptimStates) -> Result<()> {
+    if ad.optim == codec {
+        return Ok(());
+    }
+    let fp32_zero = ad.slot_m.iter().chain(&ad.slot_v).all(|s| s.iter().all(|&x| x == 0.0));
+    let int8_zero = ad
+        .qslot_m
+        .iter()
+        .chain(&ad.qslot_v)
+        .all(|s| s.q.data.iter().all(|&b| b == 0) && s.comp.iter().all(|&c| c == 0.0));
+    ensure!(
+        fp32_zero && int8_zero,
+        "cannot change the adapter optimizer-state codec from {} to {} after training \
+         started: the AdamW moments are non-zero and converting them is not supported",
+        ad.optim.name(),
+        codec.name()
+    );
+    match codec {
+        OptimStates::Int8 => {
+            ad.qslot_m = ad.params.iter().map(|t| Int8Slot::zeros(t.elements())).collect();
+            ad.qslot_v = ad.qslot_m.clone();
+            for s in ad.slot_m.iter_mut().chain(ad.slot_v.iter_mut()) {
+                *s = Vec::new();
+            }
+        }
+        OptimStates::Fp32 => {
+            ad.qslot_m = Vec::new();
+            ad.qslot_v = Vec::new();
+            for (s, t) in
+                ad.slot_m.iter_mut().chain(ad.slot_v.iter_mut()).zip(ad.params.iter().cycle())
+            {
+                *s = vec![0.0; t.elements()];
+            }
+        }
+    }
+    ad.optim = codec;
+    Ok(())
 }
 
 /// O(1) swap of a tenant's adapter into (or out of) a shared workspace
@@ -932,6 +1452,13 @@ pub fn swap_adapter(state: &mut CpuState, adapter: &mut CpuAdapter) -> Result<()
         adapter.params.len(),
         state.n_trainable
     );
+    ensure!(
+        state.optim == adapter.optim,
+        "optimizer-state codec mismatch: workspace uses {} but the adapter holds {} moment \
+         slots — convert the adapter before swapping (serve does this at registration)",
+        state.optim.name(),
+        adapter.optim.name()
+    );
     for i in 0..state.n_trainable {
         ensure!(
             state.names[i] == adapter.names[i],
@@ -942,6 +1469,10 @@ pub fn swap_adapter(state: &mut CpuState, adapter: &mut CpuAdapter) -> Result<()
         std::mem::swap(&mut state.params[i], &mut adapter.params[i]);
         std::mem::swap(&mut state.slot_m[i], &mut adapter.slot_m[i]);
         std::mem::swap(&mut state.slot_v[i], &mut adapter.slot_v[i]);
+        if state.optim == OptimStates::Int8 {
+            std::mem::swap(&mut state.qslot_m[i], &mut adapter.qslot_m[i]);
+            std::mem::swap(&mut state.qslot_v[i], &mut adapter.qslot_v[i]);
+        }
     }
     Ok(())
 }
@@ -1045,7 +1576,7 @@ pub fn fused_train_step(
     let (hq, hkv, hd) = (dims.n_heads, dims.n_kv_heads, dims.head_dim());
     let dkv = dims.d_kv();
     let (t, seq) = (bv.t(), bv.seq);
-    let p = ParamIdx::new(&state.names, &state.params);
+    let p = ParamIdx::for_state(state);
     let lc_cfg = state.lora.expect("checked above");
     let (r, scale) = (lc_cfg.rank, lc_cfg.scale());
     let nt = state.n_trainable;
@@ -1336,21 +1867,43 @@ pub fn fused_train_step(
         let grad_norm = sq.sqrt();
 
         let ad = &mut *adapters[ki];
+        // each tenant steps under its *own* optimizer-state codec
+        let int8_scratch = match ad.optim {
+            OptimStates::Fp32 => None,
+            OptimStates::Int8 => {
+                let maxn = ad.params.iter().map(|tn| tn.elements()).max().unwrap_or(0);
+                Some((vec![0.0f32; maxn], vec![0.0f32; maxn]))
+            }
+        };
+        let mut int8_scratch = int8_scratch;
         for i in 0..nt {
             let lr_p = match classify_param(&state.names[i]) {
                 ParamGroup::LoraB => sl.lr_b,
                 _ => sl.lr,
             };
             let param = ad.params[i].as_f32_mut()?;
-            adamw_update(
-                param,
-                &g[i],
-                &mut ad.slot_m[i],
-                &mut ad.slot_v[i],
-                lr_p,
-                sl.step as f32,
-                WEIGHT_DECAY,
-            );
+            match &mut int8_scratch {
+                None => adamw_update(
+                    param,
+                    &g[i],
+                    &mut ad.slot_m[i],
+                    &mut ad.slot_v[i],
+                    lr_p,
+                    sl.step as f32,
+                    WEIGHT_DECAY,
+                ),
+                Some((m_buf, v_buf)) => adamw_update_int8(
+                    param,
+                    &g[i],
+                    &mut ad.qslot_m[i],
+                    &mut ad.qslot_v[i],
+                    lr_p,
+                    sl.step as f32,
+                    WEIGHT_DECAY,
+                    m_buf,
+                    v_buf,
+                ),
+            }
         }
         let (loss_sum, n_valid) = tenant_fwd[ki];
         outs.push(StepOut {
@@ -1849,5 +2402,131 @@ mod tests {
         let pos = vec![0i32];
         let view = BatchView { tokens: &tokens, targets: &targets, seg: &seg, pos: &pos, bsz: 1, seq: 1 };
         assert!(eval_loss(&state, &view).is_err());
+    }
+
+    #[test]
+    fn ckpt_segment_starts_partition_layers() {
+        assert_eq!(ckpt_segment_starts(2, 2), vec![0, 1]);
+        assert_eq!(ckpt_segment_starts(5, 2), vec![0, 3]);
+        assert_eq!(ckpt_segment_starts(4, 8), vec![0, 1, 2, 3]); // clamped
+        assert_eq!(ckpt_segment_starts(6, 1), vec![0]);
+    }
+
+    #[test]
+    fn checkpointed_training_is_bitwise_identical() {
+        // recompute-from-boundary replays the exact op sequence, so every
+        // loss, grad_norm, and parameter bit must match the cached run
+        let b = batch();
+        let mut plain = init_state(dims(), None, 7);
+        let mut ckpt = init_state(dims(), None, 7);
+        ckpt.ckpt_segments = 2;
+        for step in 1..=6u64 {
+            let a = train_step(&mut plain, &bv(&b), false, step, 5e-3, 5e-3).unwrap();
+            let c = train_step(&mut ckpt, &bv(&b), false, step, 5e-3, 5e-3).unwrap();
+            assert_eq!(a.loss.to_bits(), c.loss.to_bits(), "step {step} loss");
+            assert_eq!(a.grad_norm.to_bits(), c.grad_norm.to_bits(), "step {step} grad_norm");
+        }
+        for (x, y) in plain.params.iter().zip(&ckpt.params) {
+            let (x, y) = (x.as_f32().unwrap(), y.as_f32().unwrap());
+            assert!(x.iter().zip(y).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn int8_optim_first_step_is_bitwise_and_later_steps_track() {
+        let b = batch();
+        let mut fp = init_state(dims(), None, 7);
+        let mut q = init_state(dims(), None, 7);
+        set_optim_states(&mut q, OptimStates::Int8).unwrap();
+        // step 1 decodes all-zero slots → identical AdamW inputs → bitwise
+        let a = train_step(&mut fp, &bv(&b), false, 1, 5e-3, 5e-3).unwrap();
+        let c = train_step(&mut q, &bv(&b), false, 1, 5e-3, 5e-3).unwrap();
+        assert_eq!(a.loss.to_bits(), c.loss.to_bits());
+        assert_eq!(a.grad_norm.to_bits(), c.grad_norm.to_bits());
+        // later steps quantize the moments; losses stay close and finite
+        for step in 2..=15u64 {
+            let a = train_step(&mut fp, &bv(&b), false, step, 5e-3, 5e-3).unwrap();
+            let c = train_step(&mut q, &bv(&b), false, step, 5e-3, 5e-3).unwrap();
+            assert!(c.loss.is_finite() && c.grad_norm > 0.0);
+            assert!((a.loss - c.loss).abs() < 0.05, "step {step}: {} vs {}", a.loss, c.loss);
+        }
+        assert!(optim_state_bytes(&q) * 7 < optim_state_bytes(&fp) * 2, "int8 slots ≥3.5x smaller");
+    }
+
+    #[test]
+    fn optim_codec_change_after_training_is_rejected() {
+        let b = batch();
+        let mut st = init_state(dims(), None, 7);
+        train_step(&mut st, &bv(&b), false, 1, 5e-3, 5e-3).unwrap();
+        let err = set_optim_states(&mut st, OptimStates::Int8).unwrap_err().to_string();
+        assert!(err.contains("after training started"), "{err}");
+    }
+
+    #[test]
+    fn quantized_base_lora_trains_close_to_dense_base() {
+        let lora = LoraCfg { rank: 2, alpha: 4.0 };
+        let b = batch();
+        let mut dense = init_state(dims(), Some(lora), 7);
+        let mut quant = init_state(dims(), Some(lora), 7);
+        quantize_base(&mut quant, BaseQuant::Int8).unwrap();
+        // quantized frozen payloads are really gone
+        let n_gone = quant.qbase.iter().filter(|q| q.is_some()).count();
+        assert!(n_gone > 0);
+        for (i, q) in quant.qbase.iter().enumerate() {
+            if q.is_some() {
+                assert_eq!(quant.params[i].elements(), 0, "dense payload survived at {i}");
+            }
+        }
+        let mut dl = Vec::new();
+        let mut ql = Vec::new();
+        for step in 1..=12u64 {
+            dl.push(train_step(&mut dense, &bv(&b), false, step, 5e-3, 5e-3).unwrap().loss);
+            ql.push(train_step(&mut quant, &bv(&b), false, step, 5e-3, 5e-3).unwrap().loss);
+        }
+        assert!(ql[11] < ql[0], "quantized-base LoRA did not learn: {ql:?}");
+        for (a, c) in dl.iter().zip(&ql) {
+            assert!((a - c).abs() / a.abs().max(1e-6) < 0.02, "{dl:?} vs {ql:?}");
+        }
+    }
+
+    #[test]
+    fn quantize_base_requires_lora() {
+        let mut st = init_state(dims(), None, 7);
+        let err = quantize_base(&mut st, BaseQuant::Int8).unwrap_err().to_string();
+        assert!(err.contains("LoRA"), "{err}");
+    }
+
+    #[test]
+    fn optim_snapshot_roundtrips_bitwise_and_rejects_codec_migration() {
+        let lora = LoraCfg { rank: 2, alpha: 4.0 };
+        let b = batch();
+        let mut st = init_state(dims(), Some(lora), 7);
+        set_optim_states(&mut st, OptimStates::Int8).unwrap();
+        for step in 1..=3u64 {
+            train_step(&mut st, &bv(&b), false, step, 5e-3, 5e-3).unwrap();
+        }
+        let snap = optim_snapshot(&st);
+        let mut fresh = init_state(dims(), Some(lora), 7);
+        set_optim_states(&mut fresh, OptimStates::Int8).unwrap();
+        load_optim_snapshot(&mut fresh, &snap).unwrap();
+        assert_eq!(fresh.qslot_m, st.qslot_m);
+        assert_eq!(fresh.qslot_v, st.qslot_v);
+        // fp32-configured state must reject the int8 snapshot with the
+        // migration message, not silently convert
+        let mut fp = init_state(dims(), Some(lora), 7);
+        let err = load_optim_snapshot(&mut fp, &snap).unwrap_err().to_string();
+        assert!(err.contains("migration is not supported"), "{err}");
+    }
+
+    #[test]
+    fn swap_adapter_rejects_optim_codec_mismatch() {
+        let lora = LoraCfg { rank: 2, alpha: 4.0 };
+        let mut st = init_state(dims(), Some(lora), 1);
+        set_optim_states(&mut st, OptimStates::Int8).unwrap();
+        let mut ad = init_adapter(dims(), lora, 2);
+        let err = swap_adapter(&mut st, &mut ad).unwrap_err().to_string();
+        assert!(err.contains("optimizer-state codec mismatch"), "{err}");
+        set_adapter_optim(&mut ad, OptimStates::Int8).unwrap();
+        swap_adapter(&mut st, &mut ad).unwrap();
     }
 }

@@ -31,6 +31,7 @@
 //!   tolerance policy).
 
 use super::pool::Exec;
+use crate::quant::QuantMat;
 
 /// Rows per tile so that at most `threads` tiles cover `rows`.
 pub(crate) fn rows_per_tile(rows: usize, threads: usize) -> usize {
@@ -151,6 +152,198 @@ pub fn matmul_residual(
         let body = &body;
         for (idx, out_c) in out.chunks_mut(rp * n_out).enumerate() {
             scope.spawn(move || body(idx * rp, out_c));
+        }
+    });
+}
+
+/// Weight rows dequantized per tile by the `*_q` kernels (DESIGN.md §12):
+/// bounds the dequant scratch lease to `DEQ_ROWS · k` elements — far below
+/// any full weight matrix, which is what the no-materialization pin
+/// asserts via [`super::scratch::Arena::peak_elems`].
+pub const DEQ_ROWS: usize = 64;
+
+/// `out[t, n] = Σ_k x[t, k] · wq[n, k]` with the weight held in a
+/// quantized codec. Weight rows are dequantized `DEQ_ROWS` at a time into
+/// an arena-leased tile on the dispatching thread (never the whole matrix
+/// — the §12 per-tile contract), then each tile runs the dense kernel's
+/// row-parallel `dot8` loop over its output columns. Every output element
+/// belongs to exactly one tile and `dequant_range_into` is positional
+/// (elementwise-equal to a whole-matrix decode), so the bits are tile-,
+/// chunk- and thread-count invariant — and identical to [`matmul`] run on
+/// the dequantized matrix.
+pub fn matmul_q(
+    x: &[f32],
+    wq: &QuantMat,
+    t: usize,
+    k_in: usize,
+    n_out: usize,
+    out: &mut [f32],
+    ex: &Exec,
+) {
+    debug_assert_eq!(x.len(), t * k_in);
+    debug_assert_eq!(wq.n(), n_out * k_in);
+    debug_assert_eq!(out.len(), t * n_out);
+    let rp = rows_per_tile(t, ex.threads());
+    let mut n0 = 0usize;
+    while n0 < n_out {
+        let n1 = (n0 + DEQ_ROWS).min(n_out);
+        let mut wtile = ex.arena().lease_uninit((n1 - n0) * k_in);
+        wq.dequant_range_into(n0 * k_in, &mut wtile);
+        let w: &[f32] = &wtile;
+        let body = |r0: usize, out_c: &mut [f32]| {
+            let rows = out_c.len() / n_out;
+            for r in 0..rows {
+                let xr = &x[(r0 + r) * k_in..(r0 + r + 1) * k_in];
+                let or = &mut out_c[r * n_out + n0..r * n_out + n1];
+                for (j, o) in or.iter_mut().enumerate() {
+                    *o = dot8(xr, &w[j * k_in..(j + 1) * k_in]);
+                }
+            }
+        };
+        if ex.threads() <= 1 || t <= 1 {
+            body(0, out);
+        } else {
+            ex.scope(|scope| {
+                let body = &body;
+                for (idx, out_c) in out.chunks_mut(rp * n_out).enumerate() {
+                    scope.spawn(move || body(idx * rp, out_c));
+                }
+            });
+        }
+        n0 = n1;
+    }
+}
+
+/// [`matmul_q`] with the residual add fused into the epilogue:
+/// `out[t, n] = res[t, n] + Σ_k x[t, k] · wq[n, k]`. Each output column is
+/// produced by exactly one weight tile, so the residual is added exactly
+/// once.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_residual_q(
+    x: &[f32],
+    wq: &QuantMat,
+    res: &[f32],
+    t: usize,
+    k_in: usize,
+    n_out: usize,
+    out: &mut [f32],
+    ex: &Exec,
+) {
+    debug_assert_eq!(x.len(), t * k_in);
+    debug_assert_eq!(wq.n(), n_out * k_in);
+    debug_assert_eq!(res.len(), t * n_out);
+    debug_assert_eq!(out.len(), t * n_out);
+    let rp = rows_per_tile(t, ex.threads());
+    let mut n0 = 0usize;
+    while n0 < n_out {
+        let n1 = (n0 + DEQ_ROWS).min(n_out);
+        let mut wtile = ex.arena().lease_uninit((n1 - n0) * k_in);
+        wq.dequant_range_into(n0 * k_in, &mut wtile);
+        let w: &[f32] = &wtile;
+        let body = |r0: usize, out_c: &mut [f32]| {
+            let rows = out_c.len() / n_out;
+            for r in 0..rows {
+                let ti = r0 + r;
+                let xr = &x[ti * k_in..(ti + 1) * k_in];
+                let rr = &res[ti * n_out + n0..ti * n_out + n1];
+                let or = &mut out_c[r * n_out + n0..r * n_out + n1];
+                for (j, o) in or.iter_mut().enumerate() {
+                    *o = rr[j] + dot8(xr, &w[j * k_in..(j + 1) * k_in]);
+                }
+            }
+        };
+        if ex.threads() <= 1 || t <= 1 {
+            body(0, out);
+        } else {
+            ex.scope(|scope| {
+                let body = &body;
+                for (idx, out_c) in out.chunks_mut(rp * n_out).enumerate() {
+                    scope.spawn(move || body(idx * rp, out_c));
+                }
+            });
+        }
+        n0 = n1;
+    }
+}
+
+/// `dx[t, k] += Σ_n dy[t, n] · wq[n, k]` — input gradient against a
+/// quantized weight, tiled like [`matmul_q`]. Tiles are visited in fixed
+/// ascending order and each `dx` row accumulates its AXPYs in ascending
+/// `n` within a tile, so the global accumulation order per element is the
+/// dense kernel's `n`-ascending order — bitwise identical to
+/// [`matmul_bwd_x`] on the dequantized matrix, at any thread count.
+pub fn matmul_bwd_x_q(
+    dy: &[f32],
+    wq: &QuantMat,
+    t: usize,
+    k_in: usize,
+    n_out: usize,
+    dx: &mut [f32],
+    ex: &Exec,
+) {
+    debug_assert_eq!(dy.len(), t * n_out);
+    debug_assert_eq!(wq.n(), n_out * k_in);
+    debug_assert_eq!(dx.len(), t * k_in);
+    let rp = rows_per_tile(t, ex.threads());
+    let mut n0 = 0usize;
+    while n0 < n_out {
+        let n1 = (n0 + DEQ_ROWS).min(n_out);
+        let mut wtile = ex.arena().lease_uninit((n1 - n0) * k_in);
+        wq.dequant_range_into(n0 * k_in, &mut wtile);
+        let w: &[f32] = &wtile;
+        let body = |r0: usize, dx_c: &mut [f32]| {
+            let rows = dx_c.len() / k_in;
+            for r in 0..rows {
+                let ti = r0 + r;
+                let dyr = &dy[ti * n_out + n0..ti * n_out + n1];
+                let dxr = &mut dx_c[r * k_in..(r + 1) * k_in];
+                for (j, &dyv) in dyr.iter().enumerate() {
+                    if dyv == 0.0 {
+                        continue;
+                    }
+                    axpy(dyv, &w[j * k_in..(j + 1) * k_in], dxr);
+                }
+            }
+        };
+        if ex.threads() <= 1 || t <= 1 {
+            body(0, dx);
+        } else {
+            ex.scope(|scope| {
+                let body = &body;
+                for (idx, dx_c) in dx.chunks_mut(rp * k_in).enumerate() {
+                    scope.spawn(move || body(idx * rp, dx_c));
+                }
+            });
+        }
+        n0 = n1;
+    }
+}
+
+/// SwiGLU forward `y = SiLU(gate) · up`, pooled over element tiles — the
+/// decomposed-path counterpart of the epilogue inside
+/// [`fused_rmsnorm_swiglu`] (identical per-element math), used when the
+/// gate/up projections run through the quantized kernels and the fusion
+/// is not available.
+pub fn swiglu(gate: &[f32], up: &[f32], y: &mut [f32], ex: &Exec) {
+    debug_assert_eq!(gate.len(), y.len());
+    debug_assert_eq!(up.len(), y.len());
+    let n = y.len();
+    let body = |e0: usize, y_c: &mut [f32]| {
+        for (j, o) in y_c.iter_mut().enumerate() {
+            let g = gate[e0 + j];
+            let sig = 1.0 / (1.0 + (-g).exp());
+            *o = g * sig * up[e0 + j];
+        }
+    };
+    let ep = rows_per_tile(n, ex.threads());
+    if ex.threads() <= 1 || n <= 1 {
+        body(0, y);
+        return;
+    }
+    ex.scope(|scope| {
+        let body = &body;
+        for (idx, y_c) in y.chunks_mut(ep).enumerate() {
+            scope.spawn(move || body(idx * ep, y_c));
         }
     });
 }
@@ -829,6 +1022,80 @@ mod tests {
             p1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             p2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn quantized_matmuls_match_dense_kernels_on_dequant_bitwise() {
+        use crate::quant::{BaseQuant, QuantMat};
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let mut rng = Rng::new(21);
+        // n_out > DEQ_ROWS so the tile loop takes more than one pass
+        let (t, k, n) = (5usize, 9, DEQ_ROWS + 7);
+        let x = randv(&mut rng, t * k);
+        let w = randv(&mut rng, n * k);
+        let res = randv(&mut rng, t * n);
+        let dy = randv(&mut rng, t * n);
+        for codec in [BaseQuant::Int8, BaseQuant::Fp8] {
+            let qm = QuantMat::encode(&w, codec);
+            let wd = qm.dequant();
+            for threads in [1usize, 3] {
+                let ex = Exec::new(threads);
+                let (mut want, mut got) = (vec![0.0f32; t * n], vec![0.0f32; t * n]);
+                matmul(&x, &wd, t, k, n, &mut want, &ex);
+                matmul_q(&x, &qm, t, k, n, &mut got, &ex);
+                assert_eq!(bits(&got), bits(&want), "{codec:?} t{threads}: matmul_q bits");
+
+                let (mut want_r, mut got_r) = (vec![0.0f32; t * n], vec![0.0f32; t * n]);
+                matmul_residual(&x, &wd, &res, t, k, n, &mut want_r, &ex);
+                matmul_residual_q(&x, &qm, &res, t, k, n, &mut got_r, &ex);
+                assert_eq!(bits(&got_r), bits(&want_r), "{codec:?} t{threads}: residual bits");
+
+                let (mut want_dx, mut got_dx) = (vec![0.0f32; t * k], vec![0.0f32; t * k]);
+                matmul_bwd_x(&dy, &wd, t, k, n, &mut want_dx, &ex);
+                matmul_bwd_x_q(&dy, &qm, t, k, n, &mut got_dx, &ex);
+                assert_eq!(bits(&got_dx), bits(&want_dx), "{codec:?} t{threads}: bwd_x bits");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_matmul_leases_only_weight_tiles() {
+        use crate::quant::{BaseQuant, QuantMat};
+        let mut rng = Rng::new(22);
+        let (t, k, n) = (3usize, 16, 4 * DEQ_ROWS);
+        let x = randv(&mut rng, t * k);
+        let w = randv(&mut rng, n * k);
+        let qm = QuantMat::encode(&w, BaseQuant::Int8);
+        let ex = Exec::new(2);
+        let mut out = vec![0.0f32; t * n];
+        matmul_q(&x, &qm, t, k, n, &mut out, &ex);
+        assert!(
+            ex.arena().peak_elems() <= DEQ_ROWS * k,
+            "dequant scratch {} exceeds one weight tile ({})",
+            ex.arena().peak_elems(),
+            DEQ_ROWS * k
+        );
+        assert!(ex.arena().peak_elems() < n * k, "a full weight matrix was materialized");
+    }
+
+    #[test]
+    fn swiglu_forward_matches_reference_bits() {
+        let mut rng = Rng::new(23);
+        let n = 37;
+        let gate = randv(&mut rng, n);
+        let up = randv(&mut rng, n);
+        let mut want = vec![0.0f32; n];
+        math::swiglu_fwd(&gate, &up, &mut want);
+        for threads in [1usize, 4] {
+            let ex = Exec::new(threads);
+            let mut got = vec![0.0f32; n];
+            swiglu(&gate, &up, &mut got, &ex);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "threads={threads}"
+            );
+        }
     }
 
     #[test]

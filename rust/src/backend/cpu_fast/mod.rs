@@ -38,11 +38,13 @@ use super::cpu::{
     REF_BATCH, REF_SEQ,
 };
 use super::{
-    AdapterState, Backend, DeviceBatch, DeviceState, FusedOutputs, FusedSlice, RowGrad, StepOutputs,
+    AdapterState, Backend, DeviceBatch, DeviceState, FusedOutputs, FusedSlice, MemoryCfg, RowGrad,
+    StepOutputs,
 };
 use crate::backend::cpu::model::ModelDims;
 use crate::batching::Batch;
 use crate::manifest::{ExecutableSpec, Manifest};
+use crate::quant::{OptimSnapshot, OptimStates};
 use crate::runtime::HostTensor;
 use anyhow::{bail, Result};
 
@@ -275,11 +277,27 @@ impl Backend for FastCpuBackend {
     }
 
     fn state_params(&self, state: &DeviceState) -> Result<Vec<HostTensor>> {
-        Ok(as_cpu_state(state)?.params.clone())
+        cpu::cpu_state_params(as_cpu_state(state)?)
     }
 
     fn load_params(&self, state: &mut DeviceState, params: &[HostTensor]) -> Result<()> {
         cpu::load_cpu_params(as_cpu_state_mut(state)?, params)
+    }
+
+    fn configure_memory(&self, state: &mut DeviceState, cfg: &MemoryCfg) -> Result<()> {
+        cpu::cpu_configure_memory(as_cpu_state_mut(state)?, cfg)
+    }
+
+    fn optim_snapshot(&self, state: &DeviceState) -> Result<OptimSnapshot> {
+        Ok(cpu::model::optim_snapshot(as_cpu_state(state)?))
+    }
+
+    fn load_optim_snapshot(&self, state: &mut DeviceState, snap: &OptimSnapshot) -> Result<()> {
+        cpu::model::load_optim_snapshot(as_cpu_state_mut(state)?, snap)
+    }
+
+    fn convert_adapter_optim(&self, adapter: &mut AdapterState, codec: OptimStates) -> Result<()> {
+        cpu::cpu_convert_adapter_optim(adapter, codec)
     }
 
     /// Table-5-style kernel microbench: `*_fused`/`*_flash` names time this

@@ -44,6 +44,11 @@ use std::sync::Mutex;
 pub struct Arena {
     free: Mutex<Vec<Vec<f32>>>,
     peak_elems: AtomicUsize,
+    /// Sum of logical lengths of all currently outstanding leases.
+    cur_leased: AtomicUsize,
+    /// High-water mark of `cur_leased` — the concurrent-total peak that the
+    /// activation-checkpointing pin compares across segment counts.
+    peak_total: AtomicUsize,
     heap_allocs: AtomicUsize,
 }
 
@@ -59,6 +64,8 @@ impl Arena {
         Arena {
             free: Mutex::new(Vec::new()),
             peak_elems: AtomicUsize::new(0),
+            cur_leased: AtomicUsize::new(0),
+            peak_total: AtomicUsize::new(0),
             heap_allocs: AtomicUsize::new(0),
         }
     }
@@ -84,6 +91,8 @@ impl Arena {
     /// Always records `len` in the logical-size peak.
     pub fn lease_uninit(&self, len: usize) -> Lease<'_> {
         self.peak_elems.fetch_max(len, Ordering::Relaxed);
+        let live = self.cur_leased.fetch_add(len, Ordering::Relaxed) + len;
+        self.peak_total.fetch_max(live, Ordering::Relaxed);
         let mut buf = {
             let mut free = self.free.lock().unwrap();
             let mut best: Option<usize> = None;
@@ -121,6 +130,10 @@ impl Arena {
 
     /// Return a buffer to the free list (called by `Lease::drop`).
     fn give_back(&self, buf: Vec<f32>) {
+        // `lease_uninit` sets the Vec length to exactly the logical lease
+        // length and the `[f32]` deref cannot change it, so `buf.len()` is
+        // the amount to retire from the concurrent-total accounting
+        self.cur_leased.fetch_sub(buf.len(), Ordering::Relaxed);
         if buf.capacity() == 0 {
             return;
         }
@@ -134,9 +147,27 @@ impl Arena {
         self.peak_elems.load(Ordering::SeqCst)
     }
 
-    /// Reset the logical-size peak (call before the step to measure).
+    /// Reset both peaks (call before the step to measure). The
+    /// concurrent-total peak restarts from the currently outstanding
+    /// leases, not from zero, so a reset taken while buffers are live
+    /// stays honest.
     pub fn reset_peak(&self) {
         self.peak_elems.store(0, Ordering::SeqCst);
+        self.peak_total.store(self.cur_leased.load(Ordering::SeqCst), Ordering::SeqCst);
+    }
+
+    /// Peak *sum* of simultaneously outstanding lease lengths (f32
+    /// elements) since the last [`Arena::reset_peak`] — the measure the
+    /// `--ckpt-segments` pin compares: dropping interior activations must
+    /// lower this, while [`Arena::peak_elems`] (largest single buffer)
+    /// bounds any one materialization.
+    pub fn peak_total_elems(&self) -> usize {
+        self.peak_total.load(Ordering::SeqCst)
+    }
+
+    /// Sum of logical lengths of the leases currently outstanding.
+    pub fn cur_leased_elems(&self) -> usize {
+        self.cur_leased.load(Ordering::SeqCst)
     }
 
     /// Total heap allocations this arena has performed since construction
@@ -259,6 +290,38 @@ mod tests {
         let big = arena.lease(1000); // big buffer still available: no alloc
         assert_eq!(big.len(), 1000);
         assert_eq!(arena.heap_allocs(), 2);
+    }
+
+    #[test]
+    fn concurrent_total_peak_tracks_sum_of_live_leases() {
+        let arena = Arena::new();
+        let a = arena.lease(100);
+        let b = arena.lease(50);
+        assert_eq!(arena.cur_leased_elems(), 150);
+        assert_eq!(arena.peak_total_elems(), 150);
+        drop(a);
+        // a third lease while b is live: peak stays at the true high water
+        let c = arena.lease_uninit(20);
+        assert_eq!(arena.cur_leased_elems(), 70);
+        assert_eq!(arena.peak_total_elems(), 150);
+        drop(b);
+        drop(c);
+        assert_eq!(arena.cur_leased_elems(), 0);
+        arena.reset_peak();
+        assert_eq!(arena.peak_total_elems(), 0);
+        let _d = arena.lease(10);
+        assert_eq!(arena.peak_total_elems(), 10, "post-reset peak restarts from live leases");
+    }
+
+    #[test]
+    fn reset_peak_with_live_leases_restarts_from_outstanding_total() {
+        let arena = Arena::new();
+        let a = arena.lease(64);
+        drop(arena.lease(512)); // spike, then gone
+        assert_eq!(arena.peak_total_elems(), 576);
+        arena.reset_peak();
+        assert_eq!(arena.peak_total_elems(), 64, "live lease still counts after reset");
+        drop(a);
     }
 
     #[test]

@@ -251,6 +251,24 @@ impl Backend for DataParallel {
         self.primary().load_params(state, params)
     }
 
+    fn configure_memory(&self, state: &mut DeviceState, cfg: &super::MemoryCfg) -> Result<()> {
+        // the state lives on replica 0; shard replicas only read params
+        // through it, so one configuration covers the whole group
+        self.primary().configure_memory(state, cfg)
+    }
+
+    fn optim_snapshot(&self, state: &DeviceState) -> Result<crate::quant::OptimSnapshot> {
+        self.primary().optim_snapshot(state)
+    }
+
+    fn load_optim_snapshot(
+        &self,
+        state: &mut DeviceState,
+        snap: &crate::quant::OptimSnapshot,
+    ) -> Result<()> {
+        self.primary().load_optim_snapshot(state, snap)
+    }
+
     fn bench_kernel(&self, name: &str, reps: usize, warmup: usize) -> Result<f64> {
         self.primary().bench_kernel(name, reps, warmup)
     }

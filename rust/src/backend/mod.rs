@@ -46,9 +46,34 @@ pub use data_parallel::DataParallel;
 
 use crate::batching::Batch;
 use crate::manifest::Manifest;
+use crate::quant::{BaseQuant, OptimSnapshot, OptimStates};
 use crate::runtime::HostTensor;
 use anyhow::{bail, Result};
 use std::sync::Arc;
+
+/// The three memory tiers a session can request (DESIGN.md §12), resolved
+/// by the session layer and pushed onto a fresh state via
+/// [`Backend::configure_memory`] before the first step.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MemoryCfg {
+    /// Tier 1: AdamW m/v slot codec (`--optim-states fp32|int8`).
+    pub optim_states: OptimStates,
+    /// Tier 2: frozen-base weight codec for LoRA-family tasks
+    /// (`--base-quant none|int8|fp8`).
+    pub base_quant: Option<BaseQuant>,
+    /// Tier 3: activation-checkpoint segment count (`--ckpt-segments N`,
+    /// 0 = off).
+    pub ckpt_segments: usize,
+}
+
+impl MemoryCfg {
+    /// True when every tier is at its legacy default (dense fp32, no
+    /// checkpointing) — the only configuration backends without the seam
+    /// accept.
+    pub fn is_default(&self) -> bool {
+        *self == MemoryCfg::default()
+    }
+}
 
 /// Backend registry: construct a backend by CLI/config name.
 ///
@@ -232,6 +257,48 @@ pub trait Backend {
     /// Restore parameters from host tensors (state order, shapes must
     /// match). Optimizer slots are left untouched.
     fn load_params(&self, state: &mut DeviceState, params: &[HostTensor]) -> Result<()>;
+
+    // ---- memory-tier seams (DESIGN.md §12) ---------------------------
+
+    /// Apply a [`MemoryCfg`] to a freshly initialized state: switch the
+    /// optimizer-state codec, quantize the frozen base weights, and set
+    /// the activation-checkpoint segment count. Must be called before the
+    /// first train step; the default implementation accepts only the
+    /// all-default config.
+    fn configure_memory(&self, state: &mut DeviceState, cfg: &MemoryCfg) -> Result<()> {
+        let _ = state;
+        if cfg.is_default() {
+            return Ok(());
+        }
+        bail!(
+            "the {} backend does not support memory-tier configuration \
+             (--optim-states / --base-quant / --ckpt-segments)",
+            self.name()
+        )
+    }
+
+    /// Export the optimizer slots in their native codec for checkpointing
+    /// (int8 slots serialize bitwise — bytes, scales, compensations).
+    fn optim_snapshot(&self, state: &DeviceState) -> Result<OptimSnapshot> {
+        let _ = state;
+        bail!("the {} backend does not expose optimizer-state snapshots", self.name())
+    }
+
+    /// Restore optimizer slots from a checkpoint snapshot. The snapshot's
+    /// codec must match the state's configured codec; fp32↔int8 migration
+    /// of live moments is rejected, not silently rounded.
+    fn load_optim_snapshot(&self, state: &mut DeviceState, snap: &OptimSnapshot) -> Result<()> {
+        let _ = (state, snap);
+        bail!("the {} backend does not expose optimizer-state snapshots", self.name())
+    }
+
+    /// Convert a freshly initialized tenant adapter's optimizer slots to
+    /// `codec` (serve honors the server-wide `--optim-states` here, right
+    /// after `init_adapter`). Only legal while the moments are still zero.
+    fn convert_adapter_optim(&self, adapter: &mut AdapterState, codec: OptimStates) -> Result<()> {
+        let _ = (adapter, codec);
+        bail!("the {} backend does not support per-tenant adapters", self.name())
+    }
 
     /// Time one kernel microbench executable (Table 5). Only meaningful on
     /// backends with compiled kernel artifacts.

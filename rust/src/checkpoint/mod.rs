@@ -10,14 +10,30 @@
 //!     codec 2 (fp8-e4m3 sim): stored as f32 grid values after round-trip
 //!       (half the information, full width on disk — a fidelity study, not
 //!       a size win; int8 is the size win)
+//!
+//! Train-state format (`save_train_state`/`load_train_state`) — the
+//! resume-equals-continuous contract (DESIGN.md §12): parameters are
+//! always raw f32 (bit-exact) and the optimizer snapshot is stored *in
+//! its own codec* — int8 slots serialize their quantized bytes, scales
+//! and compensations verbatim, so a resumed run decodes the identical
+//! moments the continuous run holds:
+//!   magic "CHKS1\0\0\0" | step u64 | n_params u32
+//!   per param: ndim u32 | dims u32* | n*4 bytes raw f32
+//!   optim codec u32 (0 = fp32, 1 = int8) | n_slot_pairs u32
+//!     fp32: per pair: len u32 | m f32* | v f32*
+//!     int8: per pair: per slot (m then v):
+//!       n u32 | block u32 | n_blocks u32 | data i8* | scales f32* | comp f32*
 
-use crate::quant::{fp8_decode, int8_dequantize, int8_quantize, Fp8Format, Int8Blocks};
+use crate::quant::{
+    fp8_decode, int8_dequantize, int8_quantize, Fp8Format, Int8Blocks, Int8Slot, OptimSnapshot,
+};
 use crate::runtime::HostTensor;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"CHKP1\0\0\0";
+const STATE_MAGIC: &[u8; 8] = b"CHKS1\0\0\0";
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Codec {
@@ -115,6 +131,141 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<HostTensor>> {
         out.push(HostTensor::f32(data, shape));
     }
     Ok(out)
+}
+
+/// Everything a training run needs to resume exactly where it stopped.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainState {
+    /// Last completed optimizer step.
+    pub step: u64,
+    /// Full parameter set, dense f32 (quantized base weights are
+    /// dequantized by `Backend::state_params` before they get here; the
+    /// values sit on the codec grid, so requantizing on load is lossless).
+    pub params: Vec<HostTensor>,
+    /// Optimizer slots in their native codec.
+    pub optim: OptimSnapshot,
+}
+
+/// Serialize a full train state (see the module-level format notes).
+pub fn save_train_state(path: impl AsRef<Path>, ts: &TrainState) -> Result<()> {
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(STATE_MAGIC)?;
+    w.write_all(&ts.step.to_le_bytes())?;
+    w.write_all(&(ts.params.len() as u32).to_le_bytes())?;
+    for t in &ts.params {
+        let data = t.as_f32().map_err(|_| anyhow!("only f32 tensors checkpoint"))?;
+        let shape = t.shape();
+        w.write_all(&(shape.len() as u32).to_le_bytes())?;
+        for &d in shape {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for &x in data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    match &ts.optim {
+        OptimSnapshot::Fp32 { m, v } => {
+            w.write_all(&0u32.to_le_bytes())?;
+            ensure!(m.len() == v.len(), "m/v slot count mismatch");
+            w.write_all(&(m.len() as u32).to_le_bytes())?;
+            for (sm, sv) in m.iter().zip(v) {
+                ensure!(sm.len() == sv.len(), "m/v slot length mismatch");
+                w.write_all(&(sm.len() as u32).to_le_bytes())?;
+                for &x in sm {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+                for &x in sv {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+        OptimSnapshot::Int8 { m, v } => {
+            w.write_all(&1u32.to_le_bytes())?;
+            ensure!(m.len() == v.len(), "m/v slot count mismatch");
+            w.write_all(&(m.len() as u32).to_le_bytes())?;
+            for (sm, sv) in m.iter().zip(v) {
+                for s in [sm, sv] {
+                    w.write_all(&(s.q.n as u32).to_le_bytes())?;
+                    w.write_all(&(s.q.block as u32).to_le_bytes())?;
+                    w.write_all(&(s.q.scales.len() as u32).to_le_bytes())?;
+                    ensure!(s.comp.len() == s.q.scales.len(), "comp/scales length mismatch");
+                    let bytes: Vec<u8> = s.q.data.iter().map(|&b| b as u8).collect();
+                    w.write_all(&bytes)?;
+                    for &x in &s.q.scales {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                    for &x in &s.comp {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Load a train state saved by [`save_train_state`]. Bitwise faithful:
+/// f32 payloads and int8 slot bytes come back exactly as written.
+pub fn load_train_state(path: impl AsRef<Path>) -> Result<TrainState> {
+    let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != STATE_MAGIC {
+        bail!("bad train-state magic (expected a CHKS1 file saved by save_train_state)");
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let step = u64::from_le_bytes(b8);
+    let n_params = read_u32(&mut r)? as usize;
+    let mut params = Vec::with_capacity(n_params);
+    for _ in 0..n_params {
+        let ndim = read_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut r)? as usize);
+        }
+        let n: usize = shape.iter().product::<usize>().max(1);
+        params.push(HostTensor::f32(read_f32s(&mut r, n)?, shape));
+    }
+    let codec = read_u32(&mut r)?;
+    let n_slots = read_u32(&mut r)? as usize;
+    let optim = match codec {
+        0 => {
+            let (mut m, mut v) = (Vec::with_capacity(n_slots), Vec::with_capacity(n_slots));
+            for _ in 0..n_slots {
+                let len = read_u32(&mut r)? as usize;
+                m.push(read_f32s(&mut r, len)?);
+                v.push(read_f32s(&mut r, len)?);
+            }
+            OptimSnapshot::Fp32 { m, v }
+        }
+        1 => {
+            let (mut m, mut v) = (Vec::with_capacity(n_slots), Vec::with_capacity(n_slots));
+            for _ in 0..n_slots {
+                for dst in [&mut m, &mut v] {
+                    let n = read_u32(&mut r)? as usize;
+                    let block = read_u32(&mut r)? as usize;
+                    let n_blocks = read_u32(&mut r)? as usize;
+                    let mut bytes = vec![0u8; n];
+                    r.read_exact(&mut bytes)?;
+                    let scales = read_f32s(&mut r, n_blocks)?;
+                    let comp = read_f32s(&mut r, n_blocks)?;
+                    dst.push(Int8Slot {
+                        q: Int8Blocks {
+                            data: bytes.into_iter().map(|b| b as i8).collect(),
+                            scales,
+                            block,
+                            n,
+                        },
+                        comp,
+                    });
+                }
+            }
+            OptimSnapshot::Int8 { m, v }
+        }
+        other => bail!("unknown optimizer-state codec {other} in train-state checkpoint"),
+    };
+    Ok(TrainState { step, params, optim })
 }
 
 fn read_u32(r: &mut impl Read) -> Result<u32> {
@@ -217,5 +368,55 @@ mod tests {
         let p = tmp("bad.ckpt");
         std::fs::write(&p, b"NOTACKPT________").unwrap();
         assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn train_state_fp32_roundtrips_bitwise() {
+        let mut rng = Rng::new(21);
+        let ts = TrainState {
+            step: 1234,
+            params: tensors(),
+            optim: OptimSnapshot::Fp32 {
+                m: vec![(0..64).map(|_| rng.normal() as f32).collect(), vec![0.5; 10]],
+                v: vec![(0..64).map(|_| rng.normal() as f32 * 1e-4).collect(), vec![0.0; 10]],
+            },
+        };
+        let p = tmp("train_fp32.ckpt");
+        save_train_state(&p, &ts).unwrap();
+        let back = load_train_state(&p).unwrap();
+        assert_eq!(ts, back); // PartialEq on f32 vecs == bitwise here
+    }
+
+    #[test]
+    fn train_state_int8_roundtrips_bitwise() {
+        let mut rng = Rng::new(22);
+        let mk = |n: usize, seed_scale: f32| {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * seed_scale).collect();
+            let mut s = Int8Slot::zeros(n);
+            s.encode_from(&x);
+            s
+        };
+        let ts = TrainState {
+            step: 7,
+            params: tensors(),
+            // ragged lengths exercise the unpadded slot payloads
+            optim: OptimSnapshot::Int8 {
+                m: vec![mk(300, 0.01), mk(10, 1.0)],
+                v: vec![mk(300, 1e-4), mk(10, 1e-6)],
+            },
+        };
+        let p = tmp("train_int8.ckpt");
+        save_train_state(&p, &ts).unwrap();
+        let back = load_train_state(&p).unwrap();
+        assert_eq!(ts, back, "int8 slot bytes/scales/comps must roundtrip verbatim");
+    }
+
+    #[test]
+    fn train_state_rejects_param_checkpoint_magic() {
+        let ts = tensors();
+        let p = tmp("wrong_kind.ckpt");
+        save(&p, &ts, Codec::F32).unwrap();
+        let err = load_train_state(&p).unwrap_err().to_string();
+        assert!(err.contains("CHKS1"), "unhelpful error: {err}");
     }
 }

@@ -51,6 +51,16 @@ pub struct RunConfig {
     /// gradients through the fixed-order tree. 0 = the legacy
     /// single-backend path (the default).
     pub workers: usize,
+    /// AdamW m/v slot codec (`--optim-states` / `optim.states`):
+    /// "fp32" (default) or "int8". Empty = the default.
+    pub optim_states: String,
+    /// Frozen-base weight codec for LoRA-family tasks (`--base-quant` /
+    /// `optim.base_quant`): "none" (default), "int8" or "fp8". Empty =
+    /// none.
+    pub base_quant: String,
+    /// Activation-checkpoint segment count (`--ckpt-segments` /
+    /// `optim.ckpt_segments`); 0 = off.
+    pub ckpt_segments: usize,
 }
 
 impl Default for RunConfig {
@@ -82,6 +92,9 @@ impl Default for RunConfig {
             backend: "cpu".into(),
             threads: 0,
             workers: 0,
+            optim_states: String::new(),
+            base_quant: String::new(),
+            ckpt_segments: 0,
         }
     }
 }
@@ -151,6 +164,9 @@ impl RunConfig {
             backend: doc.str_or("backend.name", &d.backend).to_string(),
             threads: doc.i64_or("backend.threads", d.threads as i64).max(0) as usize,
             workers: doc.i64_or("backend.workers", d.workers as i64).max(0) as usize,
+            optim_states: doc.str_or("optim.states", "").to_string(),
+            base_quant: doc.str_or("optim.base_quant", "").to_string(),
+            ckpt_segments: doc.i64_or("optim.ckpt_segments", 0).max(0) as usize,
         })
     }
 
@@ -306,6 +322,25 @@ threads = 3
         assert_eq!(d.backend, "cpu");
         assert_eq!(d.threads, 0);
         assert_eq!(d.workers, 0, "workers default to the legacy path");
+    }
+
+    #[test]
+    fn optim_memory_tier_keys_parse() {
+        let c = RunConfig::from_toml(
+            "[optim]\nstates = \"int8\"\nbase_quant = \"fp8\"\nckpt_segments = 2\n",
+        )
+        .unwrap();
+        assert_eq!(c.optim_states, "int8");
+        assert_eq!(c.base_quant, "fp8");
+        assert_eq!(c.ckpt_segments, 2);
+        // defaults: legacy fp32/dense/no-checkpoint path
+        let d = RunConfig::from_toml("").unwrap();
+        assert!(d.optim_states.is_empty());
+        assert!(d.base_quant.is_empty());
+        assert_eq!(d.ckpt_segments, 0);
+        // negative segment counts clamp to 0 (= off) rather than wrapping
+        let n = RunConfig::from_toml("[optim]\nckpt_segments = -3\n").unwrap();
+        assert_eq!(n.ckpt_segments, 0);
     }
 
     #[test]

@@ -215,6 +215,37 @@ impl Trainer {
         let tensors = checkpoint::load(path)?;
         self.load_params(&tensors)
     }
+
+    /// Save the full train state — params + step counter + optimizer slots
+    /// in their native codec — for resume-equals-continuous restarts
+    /// (DESIGN.md §12). Params are always raw f32 (bit-exact), so this is
+    /// exact regardless of the memory-tier configuration.
+    pub fn save_train_state(&self, path: impl AsRef<Path>) -> Result<()> {
+        let ts = checkpoint::TrainState {
+            step: self.step,
+            params: self.params_to_host()?,
+            optim: self.backend.optim_snapshot(&self.state)?,
+        };
+        checkpoint::save_train_state(path, &ts)
+    }
+
+    /// Restore a full train state saved by [`Trainer::save_train_state`].
+    /// The snapshot's optimizer codec must match the state's configured
+    /// codec — fp32↔int8 migration of live moments is rejected with a real
+    /// error, never silently rounded. Continuing from step k replays the
+    /// continuous run bit-for-bit on the deterministic backends.
+    pub fn load_train_state(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let ts = checkpoint::load_train_state(path)?;
+        self.load_params(&ts.params)?;
+        self.backend.load_optim_snapshot(&mut self.state, &ts.optim)?;
+        self.step = ts.step;
+        Ok(())
+    }
+
+    /// Last completed optimizer step (0 before training / after init).
+    pub fn current_step(&self) -> u64 {
+        self.step
+    }
 }
 
 #[cfg(test)]

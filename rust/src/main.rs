@@ -25,6 +25,7 @@ use chronicals::config::{self, RunConfig};
 use chronicals::coordinator::TrainSummary;
 use chronicals::harness;
 use chronicals::metrics::{MemoryModel, Precision};
+use chronicals::quant::{BaseQuant, OptimStates};
 use chronicals::report;
 use chronicals::serve::{FuseMode, JobSpec, ServeConfig, ServeEngine};
 use chronicals::session::{
@@ -127,7 +128,8 @@ COMMANDS
            [--shuffle-seed N] [--epochs N] [--eval-fraction F]
            [--loss-mode response-only|full]
            [--backend cpu|cpu-fast|pjrt] [--threads N] [--workers N]
-           [--artifacts DIR]
+           [--optim-states fp32|int8] [--base-quant none|int8|fp8]
+           [--ckpt-segments N] [--artifacts DIR]
            data: --data-file streams a JSONL instruction corpus
            ({{\"prompt\",\"completion\"}}, {{\"text\"}} or chat
            {{\"messages\":[{{\"role\",\"content\"}},..]}} per line; .jsonl.gz is
@@ -146,6 +148,12 @@ COMMANDS
            backend replicas with a fixed-order gradient reduction tree;
            the loss/grad-norm/eval series are bitwise identical for every
            N (cpu | cpu-fast backends only)
+           memory tiers (DESIGN.md §12, cpu | cpu-fast): --optim-states
+           int8 holds AdamW m/v in Kahan-compensated int8 blocks (≥3.5x
+           smaller); --base-quant int8|fp8 quantizes the frozen base of a
+           LoRA-family task, dequantized per tile inside the kernels;
+           --ckpt-segments N recomputes interior activations in backward
+           (bitwise identical to N=0)
   bench    --summary | --ablation | --kernels | --lora | --full
            [--steps N] [--reps N] [--backend cpu|cpu-fast|pjrt]
            [--threads N] [--artifacts DIR]
@@ -160,7 +168,8 @@ COMMANDS
   serve    --spool DIR | --jobs LIST.toml [--out DIR] [--once]
            [--max-rounds N] [--steps-per-round N] [--fuse on|off|intra]
            [--base-seed N] [--poll-ms N] [--round-stats FILE]
-           [--backend cpu|cpu-fast] [--threads N]
+           [--optim-states fp32|int8] [--backend cpu|cpu-fast]
+           [--threads N]
            multi-tenant fine-tuning service (DESIGN.md §11): admits TOML
            job files (from a watched spool dir and/or a 'jobs = [...]'
            manifest), shares one read-only base across tenants, fuses
@@ -310,6 +319,22 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(name) = args.get("packing") {
         spec.packing = PackingStrategy::parse(name)?;
     }
+    // memory-tier flags land on the spec (after --task, so the
+    // base-quant × task validation sees the task the run will use)
+    if let Some(s) = args.get("optim-states") {
+        spec.optim_states = OptimStates::parse(s)?;
+    }
+    if let Some(q) = args.get("base-quant") {
+        spec.base_quant = match q {
+            "none" => None,
+            name => Some(BaseQuant::parse(name)?),
+        };
+    }
+    if let Some(n) = args.get("ckpt-segments") {
+        spec.ckpt_segments = n.parse().map_err(|_| {
+            anyhow!("invalid --ckpt-segments '{n}' (expected a non-negative integer)")
+        })?;
+    }
 
     let mut session = spec.build()?;
     let run_length = match session.spec().epoch_policy.epochs {
@@ -336,6 +361,14 @@ fn cmd_train(args: &Args) -> Result<()> {
              reduction tree (bits invariant to the worker count)",
             session.spec().workers,
             if session.spec().workers == 1 { "" } else { "s" },
+        );
+    }
+    if !session.spec().memory_cfg().is_default() {
+        println!(
+            "memory tiers: optimizer states {}, base weights {}, checkpoint segments {}",
+            session.spec().optim_states.name(),
+            session.spec().base_quant.map(|q| q.name()).unwrap_or("dense-fp32"),
+            session.spec().ckpt_segments,
         );
     }
     let t0 = std::time::Instant::now();
@@ -639,6 +672,37 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
             }
         }
     }
+    // the memory-tier ladder (DESIGN.md §12) — the same tiers bench_quant's
+    // `memory_tiers` section records; skipped while that section ships
+    // verified = false, but the rows are produced so flipping the flag
+    // arms the gate with no code change
+    for (label, optim, base, segs) in [
+        ("legacy", OptimStates::Fp32, None, 0usize),
+        ("int8_optim", OptimStates::Int8, None, 0),
+        ("int8_base", OptimStates::Fp32, Some(BaseQuant::Int8), 0),
+        ("all_tiers", OptimStates::Int8, Some(BaseQuant::Int8), 2),
+    ] {
+        let mut builder = SessionBuilder::new()
+            .task(Task::lora())
+            .steps(steps)
+            .meter_warmup(2)
+            .lr(2e-3)
+            .packing(PackingStrategy::Bfd)
+            .data(DataSource::synthetic(384, 42, 96))
+            .backend(BackendSpec::CpuFast { threads })
+            .optim_states(optim)
+            .ckpt_segments(segs);
+        if let Some(q) = base {
+            builder = builder.base_quant(q);
+        }
+        match builder.build().and_then(|mut session| session.run()) {
+            Ok(r) => fresh.push((
+                format!("memory_tiers.rows.{label}.tokens_per_sec"),
+                r.summary.tokens_per_sec,
+            )),
+            Err(e) => eprintln!("  row failed (memory tier {label}): {e:#}"),
+        }
+    }
 
     let out = report::check_bench_metrics(&committed, &fresh, threshold);
     for l in &out.checked {
@@ -755,6 +819,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map_err(|_| anyhow!("invalid --base-seed '{v}' (expected an integer)"))?,
         None => 0,
     };
+    let optim_states = match args.get("optim-states") {
+        None => chronicals::quant::OptimStates::Fp32,
+        Some(name) => chronicals::quant::OptimStates::parse(name)?,
+    };
     let cfg = ServeConfig {
         spool,
         jobs_manifest,
@@ -766,6 +834,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         base_seed,
         poll_ms: args.u64_or("poll-ms", 500),
         round_stats: args.get("round-stats").map(std::path::PathBuf::from),
+        optim_states,
     };
     let backend = load_backend(args)?;
     println!(

@@ -58,6 +58,66 @@ pub fn fp8_decode(xs: &[f32], fmt: Fp8Format) -> Vec<f32> {
     xs.iter().map(|&x| fp8_encode(x, fmt)).collect()
 }
 
+/// Pack one f32 into the real FP8 byte layout: sign | exponent | mantissa
+/// (OCP FP8 bit pattern). The value is first snapped to the grid with
+/// [`fp8_encode`], so packing is exact — no second rounding.
+pub fn fp8_pack(x: f32, fmt: Fp8Format) -> u8 {
+    let mant = fmt.mant_bits() as u32; // 3 (E4M3) | 2 (E5M2)
+    let exp_bits = 7 - mant;
+    let bias = (1i32 << (exp_bits - 1)) - 1;
+    let mant_mask = (1u8 << mant) - 1;
+    if x.is_nan() {
+        // canonical NaN: all-ones exponent + all-ones mantissa (valid in
+        // both formats; E4M3 reserves only this one pattern per sign)
+        return ((((1u32 << exp_bits) - 1) << mant) as u8) | mant_mask;
+    }
+    let sign: u8 = if x.is_sign_negative() { 0x80 } else { 0 };
+    let v = fp8_encode(x.abs(), fmt); // on-grid magnitude, saturating
+    if v == 0.0 {
+        return sign;
+    }
+    let bits = v.to_bits();
+    let e = ((bits >> 23) & 0xff) as i32 - 127;
+    if e < fmt.min_exp() {
+        // subnormal: v = m · 2^(min_exp − mant), m ∈ 1..2^mant
+        let m = (v * ((mant as i32 - fmt.min_exp()) as f32).exp2()).round() as u8;
+        return sign | (m & mant_mask);
+    }
+    let exp_field = (e + bias) as u8;
+    let mant_field = ((bits >> (23 - mant)) & mant_mask as u32) as u8;
+    sign | (exp_field << mant) | mant_field
+}
+
+/// Unpack one FP8 byte back to f32. Inverse of [`fp8_pack`] for every
+/// non-NaN bit pattern.
+pub fn fp8_unpack(b: u8, fmt: Fp8Format) -> f32 {
+    let mant = fmt.mant_bits() as u32;
+    let exp_bits = 7 - mant;
+    let bias = (1i32 << (exp_bits - 1)) - 1;
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let exp_field = ((b >> mant) & (((1u32 << exp_bits) - 1) as u8)) as i32;
+    let m = (b & ((1u8 << mant) - 1)) as u32;
+    if exp_field == (1i32 << exp_bits) - 1 {
+        match fmt {
+            // E5M2 follows IEEE: top exponent is inf/NaN
+            Fp8Format::E5M2 => {
+                return if m == 0 { sign * f32::INFINITY } else { f32::NAN };
+            }
+            // E4M3 reclaims the top exponent for normals; only the
+            // all-ones mantissa is NaN
+            Fp8Format::E4M3 => {
+                if m == (1 << mant) - 1 {
+                    return f32::NAN;
+                }
+            }
+        }
+    }
+    if exp_field == 0 {
+        return sign * m as f32 * ((fmt.min_exp() - mant as i32) as f32).exp2();
+    }
+    sign * (1.0 + m as f32 / (1u32 << mant) as f32) * ((exp_field - bias) as f32).exp2()
+}
+
 /// Delayed scaling with an amax history window (paper Alg. 27, Prop. 25):
 /// scale = max(history)/fmt.max — never underestimates within the window,
 /// and damps single-outlier oscillation by 1/len.
@@ -185,6 +245,53 @@ mod tests {
         for v in q {
             assert!(v.abs() <= 448.0);
         }
+    }
+
+    #[test]
+    fn pack_roundtrips_every_finite_byte_pattern() {
+        // exhaustive: unpack → pack must reproduce the byte for every
+        // finite pattern in both formats (the quantized-base storage
+        // contract: bytes on disk are canonical)
+        for byte in 0u16..=255 {
+            let b = byte as u8;
+            for fmt in [Fp8Format::E4M3, Fp8Format::E5M2] {
+                let v = fp8_unpack(b, fmt);
+                if v.is_nan() || v.is_infinite() {
+                    continue;
+                }
+                assert_eq!(fp8_pack(v, fmt), b, "byte {b:#04x} ({fmt:?}) -> {v}");
+                // grid closure: unpacked values are fp8_encode fixed points
+                assert_eq!(fp8_encode(v, fmt), v, "byte {b:#04x} off-grid ({fmt:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_agrees_with_grid_encode() {
+        let mut rng = Rng::new(11);
+        for fmt in [Fp8Format::E4M3, Fp8Format::E5M2] {
+            for _ in 0..2000 {
+                let x = rng.normal() as f32 * 3.0;
+                let grid = fp8_encode(x, fmt);
+                let via_bytes = fp8_unpack(fp8_pack(x, fmt), fmt);
+                assert_eq!(grid.to_bits(), via_bytes.to_bits(), "{x} ({fmt:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_handles_edges() {
+        for fmt in [Fp8Format::E4M3, Fp8Format::E5M2] {
+            assert_eq!(fp8_pack(0.0, fmt), 0x00);
+            assert_eq!(fp8_pack(-0.0, fmt), 0x80);
+            assert!(fp8_unpack(fp8_pack(f32::NAN, fmt), fmt).is_nan());
+            // saturation packs to the max-magnitude finite byte
+            let max = fmt.max_val();
+            assert_eq!(fp8_unpack(fp8_pack(1e30, fmt), fmt), max);
+            assert_eq!(fp8_unpack(fp8_pack(-1e30, fmt), fmt), -max);
+        }
+        // E4M3 smallest subnormal: 2^-9
+        assert_eq!(fp8_unpack(0x01, Fp8Format::E4M3), 0.001953125);
     }
 
     #[test]

@@ -5,10 +5,14 @@
 pub mod fp8;
 pub mod int8;
 pub mod kahan;
+pub mod optim;
+pub mod qmat;
 
-pub use fp8::{fp8_decode, fp8_encode, DelayedScaler, Fp8Format};
+pub use fp8::{fp8_decode, fp8_encode, fp8_pack, fp8_unpack, DelayedScaler, Fp8Format};
 pub use int8::{int8_dequantize, int8_quantize, Int8Blocks};
 pub use kahan::{kahan_sum, naive_sum};
+pub use optim::{int8_slot_error_bound, Int8Slot, OptimSnapshot, OptimStates, OPTIM_BLOCK};
+pub use qmat::{BaseQuant, QuantMat, BASE_BLOCK};
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,259 @@
+//! 8-bit optimizer-state storage (paper §S11, ROADMAP "memory tiers").
+//!
+//! AdamW's m/v moments tolerate 8-bit block quantization (the
+//! `adamw_8bit` production pattern): each slot lives as [`Int8Blocks`]
+//! plus one Kahan-computed per-block compensation term, and every
+//! optimizer step runs decode → update → encode. The compensation holds
+//! the block's mean quantization residual, so the decoded block has zero
+//! mean drift; the per-element round-trip error stays within the paper's
+//! Eq. 18 full-step bound `amax/127` (the uncompensated codec achieves
+//! half of it — compensation trades per-element worst case for unbiased
+//! block means, which is what matters for a moment estimate that feeds
+//! hundreds of subsequent steps).
+//!
+//! Everything here is allocation-free after construction and strictly
+//! sequential, so quantized optimizer state is bitwise invariant to the
+//! fast backend's thread count and the data-parallel worker count by
+//! construction.
+
+use super::int8::Int8Blocks;
+use anyhow::{bail, Result};
+
+/// Block length for optimizer-state quantization (matches the checkpoint
+/// codec's block so the two memory tiers share one error model).
+pub const OPTIM_BLOCK: usize = 128;
+
+/// Which codec holds the AdamW m/v slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OptimStates {
+    /// Full-precision f32 slots (the legacy default; bitwise-stable).
+    #[default]
+    Fp32,
+    /// Block-wise int8 slots with Kahan-compensated decode-update-encode.
+    Int8,
+}
+
+impl OptimStates {
+    /// Parse a CLI/TOML name (`--optim-states fp32|int8`).
+    pub fn parse(name: &str) -> Result<OptimStates> {
+        Ok(match name {
+            "fp32" | "f32" => OptimStates::Fp32,
+            "int8" | "i8" => OptimStates::Int8,
+            other => bail!("unknown optimizer-state codec '{other}' (expected fp32 | int8)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimStates::Fp32 => "fp32",
+            OptimStates::Int8 => "int8",
+        }
+    }
+}
+
+/// One quantized optimizer slot: int8 blocks plus a per-block Kahan
+/// compensation (the mean encode residual, added back on decode).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Int8Slot {
+    pub q: Int8Blocks,
+    /// One f32 per block: mean quantization residual of the last encode.
+    pub comp: Vec<f32>,
+}
+
+impl Int8Slot {
+    /// A zeroed slot for `n` elements (decodes to exactly 0.0 everywhere —
+    /// bit-identical to a fresh f32 slot). Unlike the checkpoint codec's
+    /// [`Int8Blocks`], the payload is NOT zero-padded to a block multiple:
+    /// a slot stores exactly `n` bytes, so ragged small tensors (LoRA B
+    /// mats, norms) keep the full ~4x byte savings.
+    pub fn zeros(n: usize) -> Int8Slot {
+        let n_blocks = n.div_ceil(OPTIM_BLOCK).max(1);
+        Int8Slot {
+            q: Int8Blocks {
+                data: vec![0i8; n],
+                scales: vec![1.0f32; n_blocks],
+                block: OPTIM_BLOCK,
+                n,
+            },
+            comp: vec![0.0f32; n_blocks],
+        }
+    }
+
+    /// Logical element count.
+    pub fn len(&self) -> usize {
+        self.q.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.n == 0
+    }
+
+    /// Storage bytes this slot actually holds (int8 payload + f32 scales
+    /// + f32 compensations) — the honest numerator of the ≥3.5x pin.
+    pub fn storage_bytes(&self) -> usize {
+        self.q.data.len() + self.q.scales.len() * 4 + self.comp.len() * 4
+    }
+
+    /// Decode into `out[..self.len()]` (allocation-free). The caller owns
+    /// the scratch; both CPU backends pass reusable buffers so steady-state
+    /// steps never touch the heap.
+    pub fn decode_into(&self, out: &mut [f32]) {
+        let n = self.q.n;
+        debug_assert!(out.len() >= n);
+        for i in 0..n {
+            let b = i / self.q.block;
+            out[i] = self.q.data[i] as f32 * self.q.scales[b] + self.comp[b];
+        }
+    }
+
+    /// Encode `x[..self.len()]` in place over the existing buffers
+    /// (allocation-free): scale = amax/127 per block, round-to-nearest,
+    /// then the block's mean residual — accumulated with Kahan summation
+    /// so the compensation itself carries O(ε) error independent of the
+    /// block length (paper Def. 14) — lands in `comp`.
+    pub fn encode_from(&mut self, x: &[f32]) {
+        let n = self.q.n;
+        debug_assert_eq!(x.len(), n);
+        let block = self.q.block;
+        let n_blocks = self.q.scales.len();
+        for b in 0..n_blocks {
+            let lo = b * block;
+            let hi = ((b + 1) * block).min(n);
+            if lo >= hi {
+                self.q.scales[b] = 1.0;
+                self.comp[b] = 0.0;
+                continue;
+            }
+            let amax = x[lo..hi].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+            self.q.scales[b] = scale;
+            // quantize, then Kahan-sum the residuals for the compensation
+            let (mut s, mut c) = (0.0f32, 0.0f32);
+            for i in lo..hi {
+                let qv = (x[i] / scale).round().clamp(-127.0, 127.0) as i8;
+                self.q.data[i] = qv;
+                let r = x[i] - qv as f32 * scale;
+                let y = r - c;
+                let t = s + y;
+                c = (t - s) - y;
+                s = t;
+            }
+            self.comp[b] = s / (hi - lo) as f32;
+        }
+    }
+}
+
+/// The paper's Eq. 18 per-element round-trip bound for the compensated
+/// codec: one full quantization step `amax/127` per block (see module
+/// docs; the uncompensated bound is half this).
+pub fn int8_slot_error_bound(x: &[f32]) -> f32 {
+    super::int8::int8_error_bound(x, OPTIM_BLOCK) * 2.0
+}
+
+/// A host-side snapshot of a state's optimizer slots, in trainable state
+/// order — the checkpoint interchange format for optimizer state. Pure
+/// data: `checkpoint/` serializes it, backends produce/consume it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OptimSnapshot {
+    Fp32 { m: Vec<Vec<f32>>, v: Vec<Vec<f32>> },
+    Int8 { m: Vec<Int8Slot>, v: Vec<Int8Slot> },
+}
+
+impl OptimSnapshot {
+    /// The codec this snapshot stores.
+    pub fn codec(&self) -> OptimStates {
+        match self {
+            OptimSnapshot::Fp32 { .. } => OptimStates::Fp32,
+            OptimSnapshot::Int8 { .. } => OptimStates::Int8,
+        }
+    }
+
+    /// Slot-pair count (== trainable tensor count).
+    pub fn len(&self) -> usize {
+        match self {
+            OptimSnapshot::Fp32 { m, .. } => m.len(),
+            OptimSnapshot::Int8 { m, .. } => m.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn zeros_decode_to_zero() {
+        let s = Int8Slot::zeros(300);
+        let mut out = vec![9.0f32; 300];
+        s.decode_into(&mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+        assert_eq!(s.len(), 300);
+    }
+
+    #[test]
+    fn roundtrip_within_full_step_bound_and_zero_block_mean() {
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..1000).map(|_| rng.normal() as f32 * 0.01).collect();
+        let mut slot = Int8Slot::zeros(x.len());
+        slot.encode_from(&x);
+        let mut back = vec![0.0f32; x.len()];
+        slot.decode_into(&mut back);
+        let bound = int8_slot_error_bound(&x) + 1e-7;
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+        }
+        // compensation kills the block-mean drift: per-block decoded mean
+        // matches the exact mean to f32 roundoff, not to the codec step
+        for blk in 0..x.len().div_ceil(OPTIM_BLOCK) {
+            let lo = blk * OPTIM_BLOCK;
+            let hi = ((blk + 1) * OPTIM_BLOCK).min(x.len());
+            let exact: f64 = x[lo..hi].iter().map(|&v| v as f64).sum();
+            let got: f64 = back[lo..hi].iter().map(|&v| v as f64).sum();
+            assert!(
+                ((exact - got) / (hi - lo) as f64).abs() < 1e-6,
+                "block {blk} mean drift"
+            );
+        }
+    }
+
+    #[test]
+    fn storage_is_at_least_3_5x_smaller_than_f32() {
+        let slot = Int8Slot::zeros(100_000);
+        let f32_bytes = 100_000 * 4;
+        assert!(f32_bytes as f64 / slot.storage_bytes() as f64 >= 3.5);
+    }
+
+    #[test]
+    fn encode_is_idempotent_on_grid_values() {
+        // decode(encode(decode(encode(x)))) == decode(encode(x)): the
+        // second pass sees on-grid+comp values whose re-encode reproduces
+        // the same bytes is NOT guaranteed (comp shifts them off-grid), but
+        // the decoded values must stay within one further bound step.
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+        let mut s = Int8Slot::zeros(x.len());
+        s.encode_from(&x);
+        let mut d1 = vec![0.0f32; x.len()];
+        s.decode_into(&mut d1);
+        s.encode_from(&d1);
+        let mut d2 = vec![0.0f32; x.len()];
+        s.decode_into(&mut d2);
+        let bound = int8_slot_error_bound(&x) + 1e-7;
+        for (a, b) in d1.iter().zip(&d2) {
+            assert!((a - b).abs() <= bound);
+        }
+    }
+
+    #[test]
+    fn codec_parse_names() {
+        assert_eq!(OptimStates::parse("fp32").unwrap(), OptimStates::Fp32);
+        assert_eq!(OptimStates::parse("int8").unwrap(), OptimStates::Int8);
+        assert!(OptimStates::parse("bf16").is_err());
+        assert_eq!(OptimStates::default(), OptimStates::Fp32);
+    }
+}

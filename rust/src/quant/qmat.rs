@@ -1,0 +1,208 @@
+//! Quantized frozen-weight storage for LoRA-family tasks (ROADMAP "memory
+//! tiers", paper §S11): base weight matrices held as int8 blocks (or FP8
+//! bytes with a per-tensor delayed-style scale) and dequantized on the fly.
+//!
+//! The contract both CPU backends implement against this type:
+//!
+//! * dequantization is **elementwise and positional** — `dequant_range_into`
+//!   over any flat range yields exactly the same values as a full
+//!   `dequant()`, so a tiled consumer (cpu_fast: per-tile arena lease) and
+//!   a naive consumer (cpu reference: whole-matrix dequant once at
+//!   configure time) see bit-identical weights;
+//! * encode(decode(encode(x))) is byte-stable — decoded values are on the
+//!   codec grid, so checkpoint roundtrips through f32 interchange are
+//!   lossless once quantized.
+
+use super::fp8::{fp8_pack, fp8_unpack, Fp8Format};
+use super::int8::{int8_quantize, Int8Blocks};
+use anyhow::{bail, Result};
+
+/// Block length for int8 base-weight quantization (same block as the
+/// checkpoint codec and the optimizer-state tier).
+pub const BASE_BLOCK: usize = 128;
+
+/// Which codec holds frozen base weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaseQuant {
+    /// Block-wise int8 (amax/127 per 128-block) — the default tier.
+    Int8,
+    /// FP8 E4M3 bytes with one per-tensor scale — the second codec.
+    Fp8,
+}
+
+impl BaseQuant {
+    /// Parse a CLI/TOML name (`--base-quant int8|fp8`; `none` is handled
+    /// by the caller as `Option::None`).
+    pub fn parse(name: &str) -> Result<BaseQuant> {
+        Ok(match name {
+            "int8" | "i8" => BaseQuant::Int8,
+            "fp8" | "e4m3" => BaseQuant::Fp8,
+            other => bail!("unknown base-weight codec '{other}' (expected none | int8 | fp8)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BaseQuant::Int8 => "int8",
+            BaseQuant::Fp8 => "fp8",
+        }
+    }
+}
+
+/// One quantized weight matrix, stored flat in row-major order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QuantMat {
+    Int8(Int8Blocks),
+    Fp8 {
+        bytes: Vec<u8>,
+        fmt: Fp8Format,
+        /// Per-tensor scale (amax / fmt.max_val()), DelayedScaler-style.
+        scale: f32,
+        n: usize,
+    },
+}
+
+impl QuantMat {
+    pub fn encode(x: &[f32], codec: BaseQuant) -> QuantMat {
+        match codec {
+            BaseQuant::Int8 => QuantMat::Int8(int8_quantize(x, BASE_BLOCK)),
+            BaseQuant::Fp8 => {
+                let fmt = Fp8Format::E4M3;
+                let amax = x.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+                let scale = if amax > 0.0 { amax / fmt.max_val() } else { 1.0 };
+                let bytes = x.iter().map(|&v| fp8_pack(v / scale, fmt)).collect();
+                QuantMat::Fp8 { bytes, fmt, scale, n: x.len() }
+            }
+        }
+    }
+
+    pub fn codec(&self) -> BaseQuant {
+        match self {
+            QuantMat::Int8(_) => BaseQuant::Int8,
+            QuantMat::Fp8 { .. } => BaseQuant::Fp8,
+        }
+    }
+
+    /// Logical element count.
+    pub fn n(&self) -> usize {
+        match self {
+            QuantMat::Int8(q) => q.n,
+            QuantMat::Fp8 { n, .. } => *n,
+        }
+    }
+
+    /// Actual storage bytes (payload + scales) — the memory-tier
+    /// accounting numerator.
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            QuantMat::Int8(q) => q.data.len() + q.scales.len() * 4,
+            QuantMat::Fp8 { bytes, .. } => bytes.len() + 4,
+        }
+    }
+
+    /// Dequantize the flat range `[lo, lo + out.len())` into `out`.
+    /// Positional: element `lo + i` decodes identically regardless of the
+    /// range it is fetched through — the per-tile dequant contract.
+    pub fn dequant_range_into(&self, lo: usize, out: &mut [f32]) {
+        match self {
+            QuantMat::Int8(q) => {
+                debug_assert!(lo + out.len() <= q.n);
+                for (i, o) in out.iter_mut().enumerate() {
+                    let j = lo + i;
+                    *o = q.data[j] as f32 * q.scales[j / q.block];
+                }
+            }
+            QuantMat::Fp8 { bytes, fmt, scale, n } => {
+                debug_assert!(lo + out.len() <= *n);
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = fp8_unpack(bytes[lo + i], *fmt) * scale;
+                }
+            }
+        }
+    }
+
+    /// Full dequantization (the reference backend's naive contract; also
+    /// used for f32 checkpoint interchange).
+    pub fn dequant(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n()];
+        self.dequant_range_into(0, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32 * 0.08).collect()
+    }
+
+    #[test]
+    fn tile_dequant_matches_full_dequant_bitwise() {
+        let x = sample(1000, 21);
+        for codec in [BaseQuant::Int8, BaseQuant::Fp8] {
+            let q = QuantMat::encode(&x, codec);
+            let full = q.dequant();
+            // fetch through ragged tiles; every element must match bitwise
+            let mut tile = vec![0.0f32; 96];
+            let mut lo = 0;
+            while lo < x.len() {
+                let len = 96.min(x.len() - lo);
+                q.dequant_range_into(lo, &mut tile[..len]);
+                for i in 0..len {
+                    assert_eq!(tile[i].to_bits(), full[lo + i].to_bits(), "{codec:?} @ {}", lo + i);
+                }
+                lo += len;
+            }
+        }
+    }
+
+    #[test]
+    fn requantize_of_decoded_grid_is_lossless() {
+        // checkpoint roundtrip: dequant → f32 interchange → re-encode must
+        // reproduce the decoded values exactly (grid fixed points)
+        let x = sample(512, 22);
+        for codec in [BaseQuant::Int8, BaseQuant::Fp8] {
+            let q1 = QuantMat::encode(&x, codec);
+            let d1 = q1.dequant();
+            let q2 = QuantMat::encode(&d1, codec);
+            let d2 = q2.dequant();
+            for (a, b) in d1.iter().zip(&d2) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{codec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_base_error_within_block_bound() {
+        let x = sample(4096, 23);
+        let q = QuantMat::encode(&x, BaseQuant::Int8);
+        let d = q.dequant();
+        let bound = crate::quant::int8::int8_error_bound(&x, BASE_BLOCK) + 1e-7;
+        for (a, b) in x.iter().zip(&d) {
+            assert!((a - b).abs() <= bound);
+        }
+    }
+
+    #[test]
+    fn storage_shrinks_vs_f32() {
+        let x = sample(100_000, 24);
+        for codec in [BaseQuant::Int8, BaseQuant::Fp8] {
+            let q = QuantMat::encode(&x, codec);
+            assert!(
+                (x.len() * 4) as f64 / q.storage_bytes() as f64 >= 3.5,
+                "{codec:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn codec_parse_names() {
+        assert_eq!(BaseQuant::parse("int8").unwrap(), BaseQuant::Int8);
+        assert_eq!(BaseQuant::parse("fp8").unwrap(), BaseQuant::Fp8);
+        assert!(BaseQuant::parse("int4").is_err());
+    }
+}

@@ -47,11 +47,12 @@ pub mod job;
 pub use job::{group_rounds, FuseKey, JobSpec};
 
 use crate::backend::{
-    AdapterState, Backend, DeviceBatch, DeviceState, FusedSlice, StepPhases,
+    AdapterState, Backend, DeviceBatch, DeviceState, FusedSlice, MemoryCfg, StepPhases,
 };
 use crate::batching::{Batch, BatchStream};
 use crate::coordinator::Verifier;
 use crate::optim::LrSchedule;
+use crate::quant::OptimStates;
 use crate::report::ServeJobReport;
 use crate::runtime::HostTensor;
 use crate::session::resolve::{resolve, Resolved};
@@ -107,6 +108,12 @@ pub struct ServeConfig {
     /// per-phase ms). Reports stay timing-free for diff-ability, so point
     /// this outside the `--out` tree.
     pub round_stats: Option<PathBuf>,
+    /// AdamW m/v slot codec every tenant trains with (`--optim-states
+    /// fp32|int8`). Detached adapters are converted right after init and
+    /// workspaces / dedicated states are configured to match, so the
+    /// adapter-swap seam carries quantized moments across rounds without
+    /// a codec mismatch (swapping rejects mismatched codecs).
+    pub optim_states: OptimStates,
 }
 
 impl Default for ServeConfig {
@@ -122,6 +129,7 @@ impl Default for ServeConfig {
             base_seed: 0,
             poll_ms: 200,
             round_stats: None,
+            optim_states: OptimStates::Fp32,
         }
     }
 }
@@ -271,11 +279,21 @@ impl ServeEngine {
             spec.task,
             Task::Lora { .. } | Task::LoraPlus { .. } | Task::LoraNaive | Task::LoraBroken
         );
-        let adapter = if wants_adapter {
+        let mut adapter = if wants_adapter {
             self.backend.init_adapter(&resolved.train, spec.seed as i32).ok()
         } else {
             None
         };
+        // honor the engine's optimizer-state codec before the first step:
+        // fresh adapters hold zero moments, so the conversion is legal, and
+        // swap_adapter rejects codec mismatches after this point
+        if self.cfg.optim_states != OptimStates::Fp32 {
+            if let Some(a) = adapter.as_mut() {
+                self.backend
+                    .convert_adapter_optim(a, self.cfg.optim_states)
+                    .with_context(|| format!("converting adapter for job '{}'", spec.id))?;
+            }
+        }
         let key =
             FuseKey::for_job(&spec.task, exe, self.cfg.fuse != FuseMode::Off && adapter.is_some());
         let schedule = spec.schedule.lr_schedule(spec.lr, spec.steps, spec.task.lora_plus_ratio());
@@ -620,8 +638,9 @@ impl ServeEngine {
         let key = self.jobs[ji].key.clone();
         if key.fusable {
             if !self.workspaces.iter().any(|(k, _)| *k == key) {
-                let st =
+                let mut st =
                     self.backend.init_state(&self.jobs[ji].resolved.init, self.cfg.base_seed)?;
+                self.configure_state(&mut st)?;
                 self.workspaces.push((key, st));
             }
             return Ok(());
@@ -638,10 +657,23 @@ impl ServeEngine {
             } else {
                 self.jobs[ji].spec.seed as i32
             };
-            let st = self.backend.init_state(&self.jobs[ji].resolved.init, seed)?;
+            let mut st = self.backend.init_state(&self.jobs[ji].resolved.init, seed)?;
+            self.configure_state(&mut st)?;
             self.jobs[ji].dedicated = Some(st);
         }
         Ok(())
+    }
+
+    /// Push the engine's optimizer-state codec onto a freshly initialized
+    /// workspace or dedicated state (a no-op on the default fp32 codec).
+    /// Must run before the first step so the moments are still zero, and
+    /// before any adapter swap so the codecs line up.
+    fn configure_state(&self, st: &mut DeviceState) -> Result<()> {
+        if self.cfg.optim_states == OptimStates::Fp32 {
+            return Ok(());
+        }
+        let mem = MemoryCfg { optim_states: self.cfg.optim_states, ..MemoryCfg::default() };
+        self.backend.configure_memory(st, &mem)
     }
 
     /// Stream one job's report file. Deterministic by construction: no

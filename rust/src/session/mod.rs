@@ -43,13 +43,14 @@ pub use crate::batching::{PackingStrategy, TailPolicy};
 pub use crate::data_source::LossMode;
 pub use resolve::{resolve_eval, resolve_init, Resolved};
 
-use crate::backend::{create_backend, Backend, DataParallel, DeviceBatch};
+use crate::backend::{create_backend, Backend, DataParallel, DeviceBatch, MemoryCfg};
 use crate::batching::{Batch, BatchStream, EpochSpec};
 use crate::checkpoint::Codec;
 use crate::config::RunConfig;
 use crate::coordinator::{StepRecord, Trainer, TrainSummary};
 use crate::data::{self, TokenizedExample};
 use crate::data_source::{ChatSource, JsonlSource, SourceStats};
+use crate::quant::{BaseQuant, OptimStates};
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 use std::fmt;
@@ -480,6 +481,17 @@ pub struct SessionSpec {
     pub meter_warmup: usize,
     pub seed: u64,
     pub lr: f64,
+    /// Memory tier 1: AdamW m/v slot codec (`--optim-states fp32|int8`,
+    /// TOML `optim.states`; default fp32 — the legacy bitwise path).
+    pub optim_states: OptimStates,
+    /// Memory tier 2: frozen-base weight codec for LoRA-family tasks
+    /// (`--base-quant none|int8|fp8`, TOML `optim.base_quant`; default
+    /// `None` = dense f32). Rejected for tasks that train the base.
+    pub base_quant: Option<BaseQuant>,
+    /// Memory tier 3: activation-checkpoint segment count
+    /// (`--ckpt-segments N`, TOML `optim.ckpt_segments`; 0 = off — keep
+    /// every layer activation cached for backward).
+    pub ckpt_segments: usize,
 }
 
 impl SessionSpec {
@@ -572,7 +584,34 @@ impl SessionSpec {
                 );
             }
         }
+        if self.base_quant.is_some() {
+            match &self.task {
+                // LoRA-family: the base is frozen, so it may be quantized.
+                Task::Lora { .. }
+                | Task::LoraPlus { .. }
+                | Task::LoraNaive
+                | Task::LoraBroken => {}
+                // Custom executables resolve at build time; the backend's
+                // own frozen-base check rejects non-LoRA states there.
+                Task::Custom { .. } => {}
+                other => bail!(
+                    "--base-quant requires a LoRA-family task whose base weights \
+                     are frozen ({other} trains the base, so quantizing it would \
+                     corrupt the optimizer trajectory)"
+                ),
+            }
+        }
         Ok(())
+    }
+
+    /// The memory-tier configuration this spec requests, pushed onto the
+    /// freshly initialized state via [`crate::backend::Backend::configure_memory`].
+    pub fn memory_cfg(&self) -> MemoryCfg {
+        MemoryCfg {
+            optim_states: self.optim_states,
+            base_quant: self.base_quant,
+            ckpt_segments: self.ckpt_segments,
+        }
     }
 
     /// Lower a legacy [`RunConfig`] (TOML file, preset or legacy CLI flags)
@@ -612,6 +651,15 @@ impl SessionSpec {
         } else {
             crate::data_source::LossMode::parse(&cfg.loss_mode)?
         };
+        let optim_states = if cfg.optim_states.is_empty() {
+            OptimStates::default()
+        } else {
+            OptimStates::parse(&cfg.optim_states)?
+        };
+        let base_quant = match cfg.base_quant.as_str() {
+            "" | "none" => None,
+            name => Some(BaseQuant::parse(name)?),
+        };
         let spec = SessionSpec {
             task,
             schedule,
@@ -626,6 +674,9 @@ impl SessionSpec {
             meter_warmup: cfg.warmup_steps,
             seed: cfg.seed,
             lr: cfg.lr,
+            optim_states,
+            base_quant,
+            ckpt_segments: cfg.ckpt_segments,
         };
         spec.validate()?;
         Ok(spec)
@@ -672,6 +723,9 @@ pub struct SessionBuilder {
     seed: u64,
     lr: f64,
     lora_plus_ratio: Option<f64>,
+    optim_states: OptimStates,
+    base_quant: Option<BaseQuant>,
+    ckpt_segments: usize,
 }
 
 impl Default for SessionBuilder {
@@ -698,6 +752,9 @@ impl SessionBuilder {
             seed: 42,
             lr: 2e-4,
             lora_plus_ratio: None,
+            optim_states: OptimStates::default(),
+            base_quant: None,
+            ckpt_segments: 0,
         }
     }
 
@@ -892,6 +949,46 @@ impl SessionBuilder {
         self
     }
 
+    /// Memory tier 1: hold the AdamW m/v slots in the given codec
+    /// ([`OptimStates::Int8`] shrinks optimizer memory ≥3.5× via
+    /// Kahan-compensated block quantization; default fp32).
+    ///
+    /// ```
+    /// use chronicals::quant::OptimStates;
+    /// use chronicals::session::{DataSource, SessionBuilder};
+    ///
+    /// let mut session = SessionBuilder::new()
+    ///     .steps(2)
+    ///     .lr(5e-3)
+    ///     .data(DataSource::synthetic(64, 42, 48))
+    ///     .optim_states(OptimStates::Int8)
+    ///     .build()?;
+    /// assert!(session.run()?.summary.last_loss.is_finite());
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn optim_states(mut self, codec: OptimStates) -> Self {
+        self.optim_states = codec;
+        self
+    }
+
+    /// Memory tier 2: quantize the frozen base weights of a LoRA-family
+    /// task to the given codec; kernels dequantize per tile inside the
+    /// loop, never materializing a dense f32 copy. A build error on tasks
+    /// that train the base.
+    pub fn base_quant(mut self, codec: BaseQuant) -> Self {
+        self.base_quant = Some(codec);
+        self
+    }
+
+    /// Memory tier 3: segment-level activation checkpointing — keep only
+    /// `n` segment-boundary activations in forward and recompute the
+    /// interior during backward (0 = off). Bitwise identical to the
+    /// uncheckpointed run; costs one extra forward pass over the interior.
+    pub fn ckpt_segments(mut self, n: usize) -> Self {
+        self.ckpt_segments = n;
+        self
+    }
+
     /// Validate and produce the plain-data spec.
     pub fn build_spec(self) -> Result<SessionSpec> {
         let task = match (self.task, self.lora_plus_ratio) {
@@ -923,6 +1020,9 @@ impl SessionBuilder {
             meter_warmup: self.meter_warmup,
             seed,
             lr: self.lr,
+            optim_states: self.optim_states,
+            base_quant: self.base_quant,
+            ckpt_segments: self.ckpt_segments,
         };
         spec.validate()?;
         Ok(spec)
@@ -1053,7 +1153,14 @@ impl Session {
         spec.validate()?;
         let resolved = resolve::resolve(backend.manifest(), &spec.task)?;
         let schedule = spec.schedule.lr_schedule(spec.lr, spec.steps, resolved.lora_plus_ratio);
-        let state = backend.init_state(&resolved.init, spec.seed as i32)?;
+        let mut state = backend.init_state(&resolved.init, spec.seed as i32)?;
+        // push the memory tiers onto the fresh state before any step runs:
+        // the optimizer-state codec can only change while slots are zero,
+        // and base quantization must precede the first forward
+        let mem = spec.memory_cfg();
+        if !mem.is_default() {
+            backend.configure_memory(&mut state, &mem)?;
+        }
         let trainer =
             Trainer::new(backend.clone(), &resolved.train, state, schedule, spec.meter_warmup)?;
         Ok(Session { spec, backend, resolved, trainer })
@@ -1364,6 +1471,73 @@ mod tests {
     fn nonpositive_ratio_rejected() {
         let err = SessionBuilder::new().task(Task::lora_plus(0.0)).build_spec().unwrap_err();
         assert!(err.to_string().contains("positive"), "{err}");
+    }
+
+    #[test]
+    fn base_quant_on_base_training_task_rejected() {
+        let err = SessionBuilder::new()
+            .task(Task::FullFinetune)
+            .base_quant(BaseQuant::Int8)
+            .build_spec()
+            .unwrap_err();
+        assert!(err.to_string().contains("LoRA"), "{err}");
+        // LoRA freezes the base, so quantizing it is fine
+        let spec = SessionBuilder::new()
+            .task(Task::lora())
+            .base_quant(BaseQuant::Fp8)
+            .build_spec()
+            .unwrap();
+        assert_eq!(spec.base_quant, Some(BaseQuant::Fp8));
+        assert!(!spec.memory_cfg().is_default());
+    }
+
+    #[test]
+    fn memory_tier_defaults_are_legacy() {
+        let spec = SessionBuilder::new().build_spec().unwrap();
+        assert_eq!(spec.optim_states, OptimStates::Fp32);
+        assert_eq!(spec.base_quant, None);
+        assert_eq!(spec.ckpt_segments, 0);
+        assert!(spec.memory_cfg().is_default());
+    }
+
+    #[test]
+    fn memory_tiers_lower_from_run_config() {
+        let mut cfg = RunConfig::default();
+        cfg.executable = "train_step_lora".into();
+        cfg.optim_states = "int8".into();
+        cfg.base_quant = "int8".into();
+        cfg.ckpt_segments = 2;
+        let spec = SessionSpec::from_run_config(&cfg).unwrap();
+        assert_eq!(spec.optim_states, OptimStates::Int8);
+        assert_eq!(spec.base_quant, Some(BaseQuant::Int8));
+        assert_eq!(spec.ckpt_segments, 2);
+        // "none" and empty both mean dense
+        cfg.base_quant = "none".into();
+        assert_eq!(SessionSpec::from_run_config(&cfg).unwrap().base_quant, None);
+        // unknown codec names are real errors
+        cfg.base_quant = "int3".into();
+        assert!(SessionSpec::from_run_config(&cfg).is_err());
+        cfg.base_quant = String::new();
+        cfg.optim_states = "bf16".into();
+        assert!(SessionSpec::from_run_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn session_runs_all_three_tiers_end_to_end() {
+        let mut session = SessionBuilder::new()
+            .task(Task::lora())
+            .steps(3)
+            .lr(5e-3)
+            .data(DataSource::synthetic(32, 42, 48))
+            .optim_states(OptimStates::Int8)
+            .base_quant(BaseQuant::Int8)
+            .ckpt_segments(2)
+            .build()
+            .unwrap();
+        let report = session.run().unwrap();
+        assert_eq!(report.summary.steps, 3);
+        assert!(report.summary.last_loss.is_finite());
+        assert!(report.summary.verification.is_training);
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //! artifacts; they skip *loudly* when artifacts are absent.
 
 use chronicals::backend::cpu::CpuBackend;
-use chronicals::backend::Backend;
+use chronicals::backend::{Backend, MemoryCfg};
 use chronicals::checkpoint;
+use chronicals::quant::OptimStates;
 use chronicals::config::RunConfig;
 use chronicals::coordinator::Trainer;
 use chronicals::harness;
@@ -259,6 +260,96 @@ fn checkpoint_roundtrip_restores_exact_params_and_loss() {
         restored.eval("eval_chronicals", &batches[0]).unwrap().to_bits(),
         eval_trained.to_bits()
     );
+}
+
+/// Build a LoRA trainer over the shared corpus with the given optimizer-state
+/// codec (the memory tier is configured on the device state before the first
+/// step, exactly as `Session::with_backend` does).
+fn lora_trainer(be: &Arc<dyn Backend>, init_seed: i32, codec: OptimStates) -> Trainer {
+    let mut state = be.init_state("init_lora", init_seed).unwrap();
+    if codec != OptimStates::Fp32 {
+        let mem = MemoryCfg { optim_states: codec, ..MemoryCfg::default() };
+        be.configure_memory(&mut state, &mem).unwrap();
+    }
+    Trainer::new(be.clone(), "train_step_lora", state, LrSchedule::constant(2e-3, 1.0), 0)
+        .unwrap()
+}
+
+#[test]
+fn train_state_resume_equals_continuous_for_both_optim_codecs() {
+    // The resume-equals-continuous golden (DESIGN.md §12): train k steps,
+    // save the full train state (params + step counter + optimizer slots in
+    // their native codec), reload into a fresh differently-seeded trainer
+    // configured with the same codec, and run m more steps. The resumed tail
+    // must match the continuous run bit for bit — for fp32 moments AND for
+    // int8 slots, whose raw bytes round-trip through the CHKS1 format.
+    let be = cpu();
+    let spec = be.manifest().get("train_step_lora").unwrap().clone();
+    let (_tok, exs) = harness::build_corpus(96, 7, spec.model_config.vocab, 48);
+    let batches = harness::make_batches(be.manifest(), "train_step_lora", &exs, true).unwrap();
+    for codec in [OptimStates::Fp32, OptimStates::Int8] {
+        let path = std::env::temp_dir()
+            .join(format!("chronicals_train_state_{}.ckpt", codec.name()));
+        let mut cont = lora_trainer(&be, 7, codec);
+        for i in 0..5 {
+            cont.step(&batches[i % batches.len()]).unwrap();
+        }
+        assert_eq!(cont.current_step(), 5);
+        cont.save_train_state(&path).unwrap();
+        let tail = |t: &mut Trainer| -> Vec<(u64, u32, u32)> {
+            (5..9)
+                .map(|i| {
+                    let r = t.step(&batches[i % batches.len()]).unwrap();
+                    (r.step, r.loss.to_bits(), r.grad_norm.to_bits())
+                })
+                .collect()
+        };
+        let cont_tail = tail(&mut cont);
+
+        // the other seed guarantees the reload does the work, not the init
+        let mut resumed = lora_trainer(&be, 999, codec);
+        resumed.load_train_state(&path).unwrap();
+        assert_eq!(resumed.current_step(), 5, "{codec:?}: step counter not restored");
+        let resumed_tail = tail(&mut resumed);
+        assert_eq!(
+            cont_tail, resumed_tail,
+            "{codec:?}: resumed run diverged from the continuous run"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn train_state_codec_migration_rejected_with_real_error() {
+    // fp32↔int8 migration of live moments is rejected, never silently
+    // rounded: a snapshot saved under one codec must not load into a state
+    // configured with the other — in either direction.
+    let be = cpu();
+    let spec = be.manifest().get("train_step_lora").unwrap().clone();
+    let (_tok, exs) = harness::build_corpus(96, 7, spec.model_config.vocab, 48);
+    let batches = harness::make_batches(be.manifest(), "train_step_lora", &exs, true).unwrap();
+    for (save_codec, load_codec) in
+        [(OptimStates::Int8, OptimStates::Fp32), (OptimStates::Fp32, OptimStates::Int8)]
+    {
+        let path = std::env::temp_dir().join(format!(
+            "chronicals_train_state_migrate_{}_{}.ckpt",
+            save_codec.name(),
+            load_codec.name()
+        ));
+        let mut t = lora_trainer(&be, 7, save_codec);
+        for i in 0..2 {
+            t.step(&batches[i]).unwrap();
+        }
+        t.save_train_state(&path).unwrap();
+
+        let mut other = lora_trainer(&be, 7, load_codec);
+        let err = format!("{:#}", other.load_train_state(&path).unwrap_err());
+        assert!(
+            err.contains("optimizer-state codec mismatch"),
+            "{save_codec:?}->{load_codec:?}: got '{err}'"
+        );
+        std::fs::remove_file(&path).ok();
+    }
 }
 
 #[test]
